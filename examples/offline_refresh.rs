@@ -1,0 +1,29 @@
+//! Periodic offline analysis (Fig. 7 in miniature): how prediction
+//! accuracy decays as the knowledge base goes stale, and how the
+//! *additive* refresh path restores it without re-reading old logs.
+//!
+//!     cargo run --release --example offline_refresh
+
+use dtopt::experiments::common::{default_backend, ExpConfig, World};
+use dtopt::experiments::fig7;
+
+fn main() {
+    let mut backend = default_backend();
+    let world = World::prepare(ExpConfig::quick(), &mut backend);
+    println!(
+        "initial knowledge base: {} clusters over {} rows (built through day {})\n",
+        world.kb.clusters.len(),
+        world.rows.len(),
+        world.kb.built_through_day
+    );
+    let periods = [1u64, 2, 5];
+    let result = fig7::run(&world, 8, &periods);
+    print!("{}", fig7::render(&result));
+    for (desc, ok) in fig7::headline_checks(&result) {
+        println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
+    }
+    println!(
+        "\npaper: daily refresh ≈92% accuracy, 10-day-stale ≈87% — the additive\n\
+         sufficient-statistics design makes each refresh O(new rows) only."
+    );
+}

@@ -1,0 +1,62 @@
+//! Quickstart: the minimal end-to-end flow of the library —
+//! 1. generate a small transfer history on the simulated XSEDE testbed,
+//! 2. run offline knowledge discovery,
+//! 3. serve one transfer request with the Adaptive Sampling Module,
+//! 4. compare against the Globus static baseline and the true optimum.
+//!
+//!     cargo run --release --example quickstart
+
+use dtopt::baselines::go::GlobusOnline;
+use dtopt::baselines::{Optimizer, TransferEnv};
+use dtopt::logs::generate::{generate, GenConfig};
+use dtopt::offline::kmeans::NativeAssign;
+use dtopt::offline::pipeline::{build, OfflineConfig};
+use dtopt::online::asm::AdaptiveSampling;
+use dtopt::sim::dataset::Dataset;
+use dtopt::sim::testbed::Testbed;
+use dtopt::sim::transfer::NetState;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Historical logs: 5 simulated days of production-like traffic.
+    let testbed = Testbed::xsede();
+    let rows = generate(
+        &testbed,
+        &GenConfig { days: 5, arrivals_per_hour: 30.0, start_day: 0, seed: 42 },
+    );
+    println!("history: {} transfer-log rows", rows.len());
+
+    // 2. Offline knowledge discovery: clustering → throughput surfaces →
+    //    confidence regions → precomputed maxima → sampling regions.
+    let kb = build(&rows, &OfflineConfig::default(), &mut NativeAssign)?;
+    println!(
+        "knowledge base: {} clusters, {} surfaces",
+        kb.clusters.len(),
+        kb.clusters.iter().map(|c| c.surfaces.len()).sum::<usize>()
+    );
+
+    // 3. A new transfer request under a hidden network load the
+    //    optimizer has never seen.
+    let dataset = Dataset::new(200, 100.0); // 20 GB of 100 MB files
+    let hidden = NetState::with_load(0.35);
+    let mut env = TransferEnv::new(testbed.clone(), dataset, hidden, 7);
+    let report = AdaptiveSampling::new(&kb).run(&mut env);
+    let (_, optimal) = testbed.path.optimal(&dataset, &hidden, 16);
+    println!(
+        "\nASM : {:.0} Mbps end-to-end ({} sample transfers, final θ = {})",
+        report.achieved_mbps(),
+        report.sample_transfers(),
+        report.final_params
+    );
+
+    // 4. Baseline comparison.
+    let mut env_go = TransferEnv::new(testbed, dataset, hidden, 7);
+    let go = GlobusOnline.run(&mut env_go);
+    println!("GO  : {:.0} Mbps end-to-end (static defaults)", go.achieved_mbps());
+    println!("OPT : {optimal:.0} Mbps (simulator ground truth)");
+    println!(
+        "\nASM reaches {:.0}% of optimal vs GO's {:.0}%",
+        100.0 * report.achieved_mbps() / optimal,
+        100.0 * go.achieved_mbps() / optimal
+    );
+    Ok(())
+}

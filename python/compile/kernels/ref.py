@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+contract.  pytest asserts kernel == ref to float tolerance across a
+hypothesis sweep of shapes; the rust side separately asserts the PJRT
+artifacts match its native implementations."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def pairwise_sq_dists_ref(points, centroids):
+    """(N, K) squared Euclidean distances, direct broadcast form."""
+    diff = points[:, None, :] - centroids[None, :, :]
+    return jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0)
+
+
+def eval_patches_ref(coeffs, res: int):
+    """(S, GP, GC, res, res) bicubic patch evaluations, loop-free."""
+    t = np.arange(res, dtype=np.float32) / np.float32(res)
+    v = np.stack([np.ones_like(t), t, t * t, t * t * t], axis=1)  # (res, 4)
+    v = jnp.asarray(v)
+    # out[s,i,j,a,b] = sum_{r,c} V[a,r] coeffs[s,i,j,r,c] V[b,c]
+    return jnp.einsum("ar,sijrc,bc->sijab", v, coeffs.astype(jnp.float32), v)
+
+
+def kmeans_step_ref(points, centroids, weights):
+    """Reference Lloyd step (numpy semantics, used by pytest):
+
+    returns (new_centroids, counts, inertia) with weighted points and
+    empty clusters keeping their previous centroid."""
+    d2 = np.asarray(pairwise_sq_dists_ref(points, centroids))
+    assign = d2.argmin(axis=1)
+    n, _ = points.shape
+    k, dim = centroids.shape
+    w = np.asarray(weights, dtype=np.float64)
+    sums = np.zeros((k, dim))
+    counts = np.zeros(k)
+    for i in range(n):
+        sums[assign[i]] += w[i] * np.asarray(points[i], dtype=np.float64)
+        counts[assign[i]] += w[i]
+    new_c = np.where(
+        counts[:, None] > 0, sums / np.maximum(counts[:, None], 1e-12), np.asarray(centroids)
+    )
+    inertia = float(np.sum(w * d2[np.arange(n), assign]))
+    return new_c.astype(np.float32), counts.astype(np.float32), np.float32(inertia)

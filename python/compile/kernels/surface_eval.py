@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: batched bicubic-patch evaluation.
+
+Offline surface construction produces, per (cluster, load-bin) surface,
+a ``(GP, GC)`` grid of bicubic patches with 4x4 power-basis coefficient
+tiles ``A`` such that ``f(t, u) = sum_{r,c} A[r, c] t^r u^c`` on the
+unit square (the rust `math::bicubic` layout).  Dense evaluation over a
+``R x R`` sub-grid per patch — used for maxima scans and the Fig. 1
+surface dumps — is a pair of tiny matmuls per patch:
+
+    OUT = T @ A @ U^T,   T[i, r] = t_i^r,  U[j, c] = u_j^c
+
+The kernel runs on a ``(S, GP, GC)`` grid, one program per patch; the
+Vandermonde matrices are compile-time constants that live in VMEM, and
+each program touches exactly one (4, 4) coefficient tile and one
+(R, R) output tile.  VMEM per program: 16*4 + 2*R*4*4 + R*R*4 bytes
+(R=8: ~0.6 KiB) — the schedule is wholly BlockSpec-driven.
+
+Lowered with ``interpret=True`` (see pairwise.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_RES = 8
+
+
+def vandermonde(res: int) -> np.ndarray:
+    """``V[i, r] = (i / res)^r`` for r < 4 — local coordinates of the
+    evaluation sub-grid (half-open: patch (i+1) owns the right edge)."""
+    t = np.arange(res, dtype=np.float32) / np.float32(res)
+    return np.stack([np.ones_like(t), t, t * t, t * t * t], axis=1)  # (res, 4)
+
+
+def _surface_kernel(v_ref, a_ref, o_ref, *, gp: int, gc: int, res: int):
+    """OUT[p] = V @ A[p] @ V^T for every patch p of one surface.
+
+    Buffers are kept 2-D throughout: the HLO-text → xla_extension 0.5.1
+    round-trip executes the ≥4-D dynamic-update-slices that pallas
+    interpret mode emits for higher-rank blocks incorrectly (observed:
+    all-zero outputs), while rank ≤ 2 loop state is solid — so the
+    surface batch is flattened to (S, GP·GC·16) in / (S, GP·GC·res²)
+    out and each grid step processes one whole surface.
+    """
+    a = a_ref[...].reshape(gp * gc, 4, 4)  # (P, 4, 4)
+    v = v_ref[...]  # (res, 4)
+    # (res,4) · (P,4,4) → (P,res,4), then · (4,res) → (P,res,res)
+    ta = jnp.einsum("ar,prc->pac", v, a)
+    out = jnp.einsum("pac,bc->pab", ta, v)
+    o_ref[...] = out.reshape(1, gp * gc * res * res)
+
+
+@functools.partial(jax.jit, static_argnames=("res", "interpret"))
+def eval_patches(coeffs, v=None, *, res: int = DEFAULT_RES, interpret: bool = True):
+    """Evaluate all patches densely.
+
+    coeffs: ``(S, GP, GC, 4, 4)`` power-basis tiles.
+    v: optional ``(res, 4)`` Vandermonde; passed as a runtime *input*
+       because the HLO text emitter elides non-scalar constants
+       (``constant({...})``) which the 0.5.1 text parser reads as
+       zeros — array constants must never be baked into the artifact.
+    returns ``(S, GP, GC, res, res)`` patch-local evaluations.
+    """
+    s, gp, gc, four_a, four_b = coeffs.shape
+    if (four_a, four_b) != (4, 4):
+        raise ValueError(f"coeff tiles must be 4x4, got {four_a}x{four_b}")
+    grid = (s,)
+    if v is None:
+        v = jnp.asarray(vandermonde(res))
+    if v.shape != (res, 4):
+        raise ValueError(f"vandermonde must be ({res}, 4), got {v.shape}")
+    flat_in = coeffs.astype(jnp.float32).reshape(s, gp * gc * 16)
+    kernel = functools.partial(_surface_kernel, gp=gp, gc=gc, res=res)
+    flat_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((res, 4), lambda i: (0, 0)),
+            pl.BlockSpec((1, gp * gc * 16), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, gp * gc * res * res), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, gp * gc * res * res), jnp.float32),
+        interpret=interpret,
+    )(v, flat_in)
+    return flat_out.reshape(s, gp, gc, res, res)
+
+
+def assemble(patch_vals):
+    """Stitch ``(S, GP, GC, R, R)`` patch evaluations into dense
+    ``(S, GP*R, GC*R)`` surface grids (row-major over the p axis)."""
+    s, gp, gc, r, r2 = patch_vals.shape
+    assert r == r2
+    return jnp.transpose(patch_vals, (0, 1, 3, 2, 4)).reshape(s, gp * r, gc * r)

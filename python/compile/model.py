@@ -1,0 +1,104 @@
+"""L2 compute graphs for the offline-analysis hot spots.
+
+These are the jax functions AOT-lowered to the HLO artifacts the rust
+coordinator executes through PJRT.  Both call the L1 Pallas kernels
+(interpret=True) so kernel + graph lower into one HLO module.
+
+Fixed AOT shapes (rust pads/masks to them; see `aot.py` and
+`rust/src/runtime/artifacts.rs`):
+
+* k-means step:  points (1024, 8) f32, centroids (32, 8) f32,
+  weights (1024,) f32  ->  new_centroids (32, 8), counts (32,),
+  inertia (1,), assign (1024,) i32
+* pairwise:      points (1024, 8), centroids (32, 8) -> (1024, 32)
+* surface eval:  coeffs (64, 7, 7, 4, 4) -> (64, 56, 56)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.pairwise import pairwise_sq_dists
+from .kernels.surface_eval import assemble, eval_patches
+
+# Canonical AOT shapes.
+KM_N = 1024
+KM_K = 32
+KM_D = 8
+SURF_S = 64
+SURF_G = 7  # patches per axis (8x8 knots)
+SURF_R = 8  # sub-resolution per patch
+
+
+def pairwise(points, centroids):
+    """Raw pairwise squared distances (the L1 kernel end-to-end)."""
+    return (pairwise_sq_dists(points, centroids),)
+
+
+def kmeans_step(points, centroids, weights):
+    """One weighted Lloyd iteration.
+
+    Weighted so padded points (w=0) vanish from the update; empty
+    clusters keep their previous centroid (standard fix-up, matches the
+    rust native implementation bit-for-bit in semantics).
+    """
+    d2 = pairwise_sq_dists(points, centroids)  # (N, K)
+    assign = jnp.argmin(d2, axis=1)  # (N,)
+    onehot = jax.nn.one_hot(assign, centroids.shape[0], dtype=jnp.float32)  # (N, K)
+    wo = onehot * weights[:, None]  # (N, K)
+    counts = jnp.sum(wo, axis=0)  # (K,)
+    sums = wo.T @ points  # (K, D)
+    new_centroids = jnp.where(
+        counts[:, None] > 0.0, sums / jnp.maximum(counts[:, None], 1e-12), centroids
+    )
+    min_d2 = jnp.min(d2, axis=1)
+    inertia = jnp.sum(min_d2 * weights)[None]
+    return new_centroids, counts, inertia, assign.astype(jnp.int32)
+
+
+def surface_eval(coeffs, v):
+    """Per-patch dense evaluations ``(S, GP, GC, R, R)``.
+
+    Two HLO-text interchange constraints shape this signature (both
+    discovered the hard way; see DESIGN.md):
+    * the Vandermonde `v` is a runtime input — the HLO text emitter
+      elides non-scalar constants (``constant({...})``), which the
+      0.5.1 parser silently reads as zeros;
+    * the stitch into dense ``(S, GP·R, GC·R)`` grids happens in rust —
+      the trailing transpose carries a permuted layout annotation the
+      0.5.1 round-trip executes incorrectly.
+    """
+    return (eval_patches(coeffs, v, res=SURF_R),)
+
+
+def aot_signatures():
+    """(name, fn, example_args) for every artifact `aot.py` emits."""
+    f32 = jnp.float32
+    return [
+        (
+            "pairwise",
+            pairwise,
+            (
+                jax.ShapeDtypeStruct((KM_N, KM_D), f32),
+                jax.ShapeDtypeStruct((KM_K, KM_D), f32),
+            ),
+        ),
+        (
+            "kmeans_step",
+            kmeans_step,
+            (
+                jax.ShapeDtypeStruct((KM_N, KM_D), f32),
+                jax.ShapeDtypeStruct((KM_K, KM_D), f32),
+                jax.ShapeDtypeStruct((KM_N,), f32),
+            ),
+        ),
+        (
+            "surface_eval",
+            surface_eval,
+            (
+                jax.ShapeDtypeStruct((SURF_S, SURF_G, SURF_G, 4, 4), f32),
+                jax.ShapeDtypeStruct((SURF_R, 4), f32),
+            ),
+        ),
+    ]

@@ -1,0 +1,87 @@
+"""L2 graph semantics: kmeans_step and surface_eval vs references."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import eval_patches_ref, kmeans_step_ref
+from compile.kernels.surface_eval import vandermonde
+from compile.model import (  # noqa
+    KM_D,
+    KM_K,
+    KM_N,
+    SURF_G,
+    SURF_R,
+    SURF_S,
+    kmeans_step,
+    pairwise,
+    surface_eval,
+)
+
+
+def test_kmeans_step_full_shape():
+    rng = np.random.default_rng(3)
+    pts = rng.standard_normal((KM_N, KM_D)).astype(np.float32)
+    cents = rng.standard_normal((KM_K, KM_D)).astype(np.float32)
+    w = np.ones(KM_N, dtype=np.float32)
+    new_c, counts, inertia, assign = kmeans_step(jnp.asarray(pts), jnp.asarray(cents), jnp.asarray(w))
+    ref_c, ref_counts, ref_inertia = kmeans_step_ref(pts, cents, w)
+    np.testing.assert_allclose(np.asarray(new_c), ref_c, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(counts), ref_counts)
+    np.testing.assert_allclose(float(inertia[0]), ref_inertia, rtol=1e-4)
+    assert np.asarray(assign).shape == (KM_N,)
+    assert np.asarray(assign).dtype == np.int32
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_kmeans_step_weighted_padding(seed):
+    """Padded points (w=0) must not influence the update at all."""
+    rng = np.random.default_rng(seed)
+    n_real = rng.integers(10, KM_N)
+    pts = np.zeros((KM_N, KM_D), dtype=np.float32)
+    pts[:n_real] = rng.standard_normal((n_real, KM_D)).astype(np.float32)
+    pts[n_real:] = 1e6  # poison the pad region
+    cents = rng.standard_normal((4, KM_D)).astype(np.float32)
+    cents_padded = np.full((KM_K, KM_D), 1e15, dtype=np.float32)
+    cents_padded[:4] = cents
+    w = np.zeros(KM_N, dtype=np.float32)
+    w[:n_real] = 1.0
+    new_c, counts, inertia, _ = kmeans_step(
+        jnp.asarray(pts), jnp.asarray(cents_padded), jnp.asarray(w)
+    )
+    ref_c, ref_counts, ref_inertia = kmeans_step_ref(pts[:n_real], cents, np.ones(n_real))
+    np.testing.assert_allclose(np.asarray(new_c)[:4], ref_c, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(counts)[:4], ref_counts)
+    # Sentinel centroids attracted nothing.
+    assert np.asarray(counts)[4:].sum() == 0.0
+    np.testing.assert_allclose(float(inertia[0]), ref_inertia, rtol=1e-3)
+
+
+def test_empty_cluster_keeps_centroid():
+    pts = np.zeros((KM_N, KM_D), dtype=np.float32)  # all at origin
+    cents = np.zeros((KM_K, KM_D), dtype=np.float32)
+    cents[1:] = 100.0  # far away: only centroid 0 attracts
+    w = np.ones(KM_N, dtype=np.float32)
+    new_c, counts, _, assign = kmeans_step(jnp.asarray(pts), jnp.asarray(cents), jnp.asarray(w))
+    assert (np.asarray(assign) == 0).all()
+    np.testing.assert_allclose(np.asarray(new_c)[1:], 100.0)
+    assert np.asarray(counts)[0] == KM_N
+
+
+def test_pairwise_wrapper_shape():
+    rng = np.random.default_rng(5)
+    pts = rng.standard_normal((KM_N, KM_D)).astype(np.float32)
+    cents = rng.standard_normal((KM_K, KM_D)).astype(np.float32)
+    (d2,) = pairwise(jnp.asarray(pts), jnp.asarray(cents))
+    assert d2.shape == (KM_N, KM_K)
+
+
+def test_surface_eval_matches_ref_at_aot_shape():
+    rng = np.random.default_rng(7)
+    coeffs = rng.standard_normal((SURF_S, SURF_G, SURF_G, 4, 4)).astype(np.float32)
+    v = jnp.asarray(vandermonde(SURF_R))
+    (patches,) = surface_eval(jnp.asarray(coeffs), v)
+    assert patches.shape == (SURF_S, SURF_G, SURF_G, SURF_R, SURF_R)
+    want = np.asarray(eval_patches_ref(coeffs, SURF_R))
+    np.testing.assert_allclose(np.asarray(patches), want, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,65 @@
+"""L1 pairwise kernel vs the pure-jnp oracle (hypothesis sweep)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pairwise import pairwise_sq_dists
+from compile.kernels.ref import pairwise_sq_dists_ref
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_tiles=st.integers(min_value=1, max_value=4),
+    tile=st.sampled_from([8, 32, 128]),
+    k=st.integers(min_value=1, max_value=32),
+    d=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matches_reference_across_shapes(n_tiles, tile, k, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n_tiles * tile, d)
+    c = rand(rng, k, d)
+    got = np.asarray(pairwise_sq_dists(x, c, tile_n=tile))
+    want = np.asarray(pairwise_sq_dists_ref(x, c))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_known_values():
+    x = np.array([[0.0, 0.0], [3.0, 4.0]], dtype=np.float32)
+    c = np.array([[0.0, 0.0], [0.0, 4.0]], dtype=np.float32)
+    got = np.asarray(pairwise_sq_dists(x, c, tile_n=2))
+    want = np.array([[0.0, 16.0], [25.0, 9.0]], dtype=np.float32)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_distances_nonnegative_even_with_cancellation():
+    rng = np.random.default_rng(0)
+    # Identical points and centroids: the expanded |x|²−2x·c+|c|² form
+    # cancels catastrophically on the diagonal — the kernel must clamp
+    # to zero (never negative) and stay within f32 cancellation error
+    # (~|x|²·eps ≈ 8e6·1e-7 ≈ 1 at this scale).
+    pts = rand(rng, 128, 8) * 1e3
+    got = np.asarray(pairwise_sq_dists(pts, pts[:32], tile_n=128))
+    assert (got >= 0.0).all()
+    np.testing.assert_allclose(np.diag(got[:32, :32]), 0.0, atol=8.0)
+
+
+def test_rejects_bad_shapes():
+    rng = np.random.default_rng(1)
+    with pytest.raises(ValueError):
+        pairwise_sq_dists(rand(rng, 100, 8), rand(rng, 4, 8), tile_n=128)  # N % tile
+    with pytest.raises(ValueError):
+        pairwise_sq_dists(rand(rng, 128, 8), rand(rng, 4, 9))  # D mismatch
+
+
+def test_float64_inputs_are_cast():
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((128, 4))  # f64
+    c = rng.standard_normal((8, 4))
+    got = np.asarray(pairwise_sq_dists(x, c))
+    assert got.dtype == np.float32

@@ -1,0 +1,67 @@
+"""L1 bicubic patch-eval kernel vs the pure-jnp oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import eval_patches_ref
+from compile.kernels.surface_eval import assemble, eval_patches, vandermonde
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.integers(min_value=1, max_value=8),
+    g=st.integers(min_value=1, max_value=7),
+    res=st.sampled_from([4, 8, 16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matches_reference(s, g, res, seed):
+    rng = np.random.default_rng(seed)
+    coeffs = rng.standard_normal((s, g, g, 4, 4)).astype(np.float32)
+    got = np.asarray(eval_patches(coeffs, res=res))
+    want = np.asarray(eval_patches_ref(coeffs, res))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_constant_patch():
+    coeffs = np.zeros((1, 2, 2, 4, 4), dtype=np.float32)
+    coeffs[..., 0, 0] = 7.0  # f(t, u) = 7
+    got = np.asarray(eval_patches(coeffs, res=8))
+    np.testing.assert_allclose(got, 7.0, atol=1e-6)
+
+
+def test_polynomial_identity():
+    # f(t, u) = 1 + 2t + 3u^2 + t^3 u on one patch.
+    coeffs = np.zeros((1, 1, 1, 4, 4), dtype=np.float32)
+    coeffs[0, 0, 0, 0, 0] = 1.0
+    coeffs[0, 0, 0, 1, 0] = 2.0
+    coeffs[0, 0, 0, 0, 2] = 3.0
+    coeffs[0, 0, 0, 3, 1] = 1.0
+    res = 8
+    got = np.asarray(eval_patches(coeffs, res=res))[0, 0, 0]
+    t = np.arange(res) / res
+    for i, ti in enumerate(t):
+        for j, uj in enumerate(t):
+            want = 1.0 + 2.0 * ti + 3.0 * uj * uj + ti**3 * uj
+            np.testing.assert_allclose(got[i, j], want, rtol=1e-5)
+
+
+def test_vandermonde_halfopen_grid():
+    v = vandermonde(4)
+    assert v.shape == (4, 4)
+    np.testing.assert_allclose(v[:, 0], 1.0)
+    np.testing.assert_allclose(v[:, 1], [0.0, 0.25, 0.5, 0.75])
+
+
+def test_assemble_layout():
+    # Patch (i, j) fills block rows i*R..(i+1)*R, cols j*R..(j+1)*R.
+    s, g, r = 1, 2, 4
+    vals = np.zeros((s, g, g, r, r), dtype=np.float32)
+    for i in range(g):
+        for j in range(g):
+            vals[0, i, j] = 10 * i + j
+    dense = np.asarray(assemble(vals))
+    assert dense.shape == (1, g * r, g * r)
+    assert dense[0, 0, 0] == 0.0
+    assert dense[0, 0, r] == 1.0
+    assert dense[0, r, 0] == 10.0
+    assert dense[0, r, r] == 11.0

@@ -1,0 +1,55 @@
+//! Bench/regenerator for Fig. 3: (a) the Gaussian throughput spread
+//! under identical load; (b) held-out accuracy of the three surface-
+//! construction methods (quadratic / cubic / piecewise cubic spline),
+//! plus fit-time comparison.
+
+use dtopt::experiments::fig3;
+use dtopt::util::timer::bench;
+
+fn main() {
+    let full = std::env::var("DTOPT_FULL").is_ok();
+    let (reps, test_points) = if full { (4, 512) } else { (2, 128) };
+
+    println!("== Fig. 3a: throughput distribution under identical load ==");
+    print!("{}", fig3::render_3a(&fig3::run_3a(if full { 1000 } else { 300 }, 13)));
+
+    println!("\n== Fig. 3b: surface-model held-out accuracy ==");
+    let start = std::time::Instant::now();
+    let r = fig3::run_3b(reps, test_points, 14);
+    let elapsed = start.elapsed();
+    print!("{}", fig3::render_3b(&r));
+    for (desc, ok) in fig3::headline_checks_3b(&r) {
+        println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
+    }
+    println!("\ntiming: sweep {elapsed:.2?}");
+
+    // Fit-cost microbench: the paper argues spline construction is an
+    // offline cost; show it is milliseconds.
+    let stats = fig3_fit_bench();
+    println!("spline surface build: {stats}");
+}
+
+fn fig3_fit_bench() -> dtopt::util::timer::BenchStats {
+    use dtopt::offline::surface::{SurfaceModel, SurfaceStats};
+    use dtopt::sim::dataset::Dataset;
+    use dtopt::sim::params::{Params, PP_LEVELS};
+    use dtopt::sim::testbed::Testbed;
+    use dtopt::sim::transfer::NetState;
+    use dtopt::util::rng::Rng;
+
+    let tb = Testbed::xsede();
+    let dataset = Dataset::new(100, 64.0);
+    let state = NetState::with_load(0.25);
+    let mut rng = Rng::new(21);
+    let mut stats = SurfaceStats::new();
+    for &p in &dtopt::logs::PARAM_KNOTS {
+        for &cc in &dtopt::logs::PARAM_KNOTS {
+            for &pp in &PP_LEVELS {
+                let out =
+                    tb.path.transfer(&dataset, &Params::new(cc, p, pp), &state, Some(&mut rng));
+                stats.push(p, cc, pp, out.steady_mbps);
+            }
+        }
+    }
+    bench(3, 30, || SurfaceModel::build(&stats, 0.25).unwrap())
+}

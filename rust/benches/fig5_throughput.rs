@@ -1,0 +1,25 @@
+//! Bench/regenerator for Fig. 5 (the headline bake-off): one table of
+//! achievable throughput per (network × class × period × model).
+//! `cargo bench --bench fig5_throughput` (quick) — set DTOPT_FULL=1 for
+//! the paper-scale sweep.
+
+use dtopt::experiments::common::{config_from_args, default_backend, World};
+use dtopt::experiments::fig5;
+
+fn main() {
+    let config = config_from_args();
+    let mut backend = default_backend();
+    eprintln!("fig5: preparing world ({} backend, {config:?})...", backend.name());
+    let start = std::time::Instant::now();
+    let world = World::prepare(config, &mut backend);
+    let prep = start.elapsed();
+    let run_start = std::time::Instant::now();
+    let result = fig5::run(&world, 4);
+    let run = run_start.elapsed();
+    println!("== Fig. 5: achievable throughput (Gbps) ==");
+    print!("{}", fig5::render(&result));
+    for (desc, ok) in fig5::headline_checks(&result) {
+        println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
+    }
+    println!("\ntiming: world prep {prep:.2?}, sweep {run:.2?}");
+}

@@ -1,0 +1,21 @@
+//! Bench/regenerator for Fig. 6: prediction accuracy vs number of
+//! sample transfers for the online-sampling models.
+
+use dtopt::experiments::common::{config_from_args, default_backend, World};
+use dtopt::experiments::fig6;
+
+fn main() {
+    let config = config_from_args();
+    let mut backend = default_backend();
+    eprintln!("fig6: preparing world ({} backend)...", backend.name());
+    let world = World::prepare(config, &mut backend);
+    let start = std::time::Instant::now();
+    let result = fig6::run(&world);
+    let elapsed = start.elapsed();
+    println!("== Fig. 6: prediction accuracy vs sample transfers ==");
+    print!("{}", fig6::render(&result));
+    for (desc, ok) in fig6::headline_checks(&result) {
+        println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
+    }
+    println!("\ntiming: sweep {elapsed:.2?}");
+}

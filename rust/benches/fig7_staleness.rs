@@ -1,0 +1,24 @@
+//! Bench/regenerator for Fig. 7: accuracy vs offline-analysis period
+//! (the additive-refresh staleness sweep).
+
+use dtopt::experiments::common::{config_from_args, default_backend, World};
+use dtopt::experiments::fig7;
+
+fn main() {
+    let config = config_from_args();
+    let full = std::env::var("DTOPT_FULL").is_ok();
+    let mut backend = default_backend();
+    eprintln!("fig7: preparing world ({} backend)...", backend.name());
+    let world = World::prepare(config, &mut backend);
+    let (eval_days, periods): (u64, &[u64]) =
+        if full { (20, &[1, 2, 5, 10]) } else { (6, &[1, 3]) };
+    let start = std::time::Instant::now();
+    let result = fig7::run(&world, eval_days, periods);
+    let elapsed = start.elapsed();
+    println!("== Fig. 7: accuracy vs offline-analysis refresh period ==");
+    print!("{}", fig7::render(&result));
+    for (desc, ok) in fig7::headline_checks(&result) {
+        println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
+    }
+    println!("\ntiming: sweep {elapsed:.2?}");
+}

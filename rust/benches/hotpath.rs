@@ -1,0 +1,104 @@
+//! Hot-path microbenchmarks — the §Perf instrumentation.
+//!
+//! Covers every layer: the simulator's steady-state model (L3 inner
+//! loop), spline/bicubic fits and argmax (offline), knowledge-base
+//! query + ASM decision (online, the paper's "constant time" claim),
+//! k-means assignment native vs PJRT, and the surface-eval artifact
+//! native vs PJRT.
+
+use dtopt::experiments::common::{default_backend, ExpConfig, World};
+use dtopt::logs::generate::PARAM_KNOTS;
+use dtopt::math::bicubic::BicubicSurface;
+use dtopt::math::spline::CubicSpline;
+use dtopt::offline::kmeans::{AssignBackend, NativeAssign};
+use dtopt::offline::knowledge::RequestInfo;
+use dtopt::runtime::{Backend, PjrtAssign};
+use dtopt::sim::dataset::Dataset;
+use dtopt::sim::params::Params;
+use dtopt::sim::testbed::Testbed;
+use dtopt::sim::transfer::NetState;
+use dtopt::util::rng::Rng;
+use dtopt::util::timer::bench;
+
+fn main() {
+    let mut rng = Rng::new(0xBE);
+
+    // --- L3: simulator steady-state model -------------------------------
+    let tb = Testbed::xsede();
+    let dataset = Dataset::new(100, 64.0);
+    let state = NetState::with_load(0.3);
+    let params = Params::new(8, 4, 4);
+    let s = bench(100, 20_000, || tb.path.steady_rate_mbps(&dataset, &params, &state));
+    println!("sim steady_rate_mbps:        {s}");
+    let s = bench(5, 200, || tb.path.optimal(&dataset, &state, 16));
+    println!("sim optimal (16×16×6 grid):  {s}");
+
+    // --- math: spline + bicubic -----------------------------------------
+    let xs: Vec<f64> = (0..32).map(|i| i as f64).collect();
+    let ys: Vec<f64> = xs.iter().map(|x| (x * 0.3).sin() * 50.0 + 100.0).collect();
+    let s = bench(10, 5_000, || CubicSpline::fit(&xs, &ys).unwrap());
+    println!("cubic spline fit (32 knots): {s}");
+    let knots: Vec<f64> = PARAM_KNOTS.iter().map(|&k| k as f64).collect();
+    let z: Vec<f64> = (0..64).map(|_| rng.range_f64(0.0, 5000.0)).collect();
+    let s = bench(10, 2_000, || BicubicSurface::fit(&knots, &knots, &z).unwrap());
+    println!("bicubic fit (8×8 knots):     {s}");
+    let surf = BicubicSurface::fit(&knots, &knots, &z).unwrap();
+    let s = bench(10, 20_000, || surf.eval(7.3, 9.1));
+    println!("bicubic eval:                {s}");
+    let s = bench(5, 500, || surf.eval_grid(56, 56));
+    println!("bicubic eval_grid 56×56:     {s}");
+
+    // --- offline: k-means assignment, native vs PJRT ---------------------
+    let n = 1024;
+    let d = 6;
+    let k = 8;
+    let points: Vec<f64> = (0..n * d).map(|_| rng.range_f64(-3.0, 3.0)).collect();
+    let centroids: Vec<f64> = (0..k * d).map(|_| rng.range_f64(-3.0, 3.0)).collect();
+    let mut assign = vec![0u32; n];
+    let s = bench(5, 500, || {
+        NativeAssign.assign(&points, n, d, &centroids, k, &mut assign).unwrap()
+    });
+    println!("kmeans assign native 1024×6×8:  {s}");
+    let mut backend = default_backend();
+    if let Backend::Pjrt(reg) = &mut backend {
+        let mut pjrt = PjrtAssign { registry: reg };
+        let s = bench(3, 100, || pjrt.assign(&points, n, d, &centroids, k, &mut assign).unwrap());
+        println!("kmeans assign pjrt   1024×6×8:  {s}");
+        let surfaces: Vec<&BicubicSurface> = vec![&surf];
+        let s = bench(3, 100, || reg.surface_eval_batch(&surfaces).unwrap());
+        println!("surface_eval pjrt (1 surface):  {s}");
+        let s = bench(2, 30, || {
+            let many: Vec<&BicubicSurface> = (0..64).map(|_| &surf).collect();
+            reg.surface_eval_batch(&many).unwrap()
+        });
+        println!("surface_eval pjrt (64 surfaces): {s}");
+    } else {
+        println!("kmeans assign pjrt: skipped (artifacts not built)");
+    }
+    let s = bench(2, 50, || surf.eval_grid(56, 56));
+    println!("surface_eval native (1 surface, 56×56): {s}");
+
+    // --- online: KB query + full ASM decision ---------------------------
+    let world = World::prepare(ExpConfig::quick(), &mut backend);
+    let request = RequestInfo {
+        rtt_ms: 40.0,
+        bandwidth_mbps: 10_000.0,
+        tcp_buffer_mb: 48.0,
+        disk_mbps: 1_200.0,
+        avg_file_mb: 100.0,
+        num_files: 200,
+    };
+    let s = bench(100, 50_000, || world.kb.query(&request).is_some());
+    println!("knowledge-base query:        {s}");
+    let s = bench(3, 200, || {
+        use dtopt::baselines::{Optimizer, TransferEnv};
+        let mut env = TransferEnv::new(
+            Testbed::xsede(),
+            Dataset::new(200, 100.0),
+            NetState::with_load(0.3),
+            9,
+        );
+        dtopt::online::asm::AdaptiveSampling::new(&world.kb).run(&mut env)
+    });
+    println!("ASM full request (sim time excluded is virtual): {s}");
+}

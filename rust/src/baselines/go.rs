@@ -1,0 +1,66 @@
+//! GO — Globus-Online-style static parameters (paper baseline [4, 5]):
+//! fixed per-file-size-class settings, no measurement, no adaptation.
+
+use super::{bulk_phase, Optimizer, RunReport, TransferEnv};
+use crate::sim::dataset::SizeClass;
+use crate::sim::params::Params;
+
+pub struct GlobusOnline;
+
+/// Globus's published heuristics (as characterized in the paper and
+/// [50]): pipelining-heavy for small files, parallel streams for large.
+pub fn go_params(class: SizeClass) -> Params {
+    match class {
+        SizeClass::Small => Params::new(2, 2, 8),
+        SizeClass::Medium => Params::new(4, 4, 4),
+        SizeClass::Large => Params::new(2, 8, 1),
+    }
+}
+
+impl Optimizer for GlobusOnline {
+    fn name(&self) -> &'static str {
+        "GO"
+    }
+
+    fn run(&mut self, env: &mut TransferEnv) -> RunReport {
+        let params = go_params(env.dataset.class());
+        let dataset = env.dataset;
+        let phase = bulk_phase(env, &dataset, params);
+        RunReport {
+            optimizer: self.name(),
+            phases: vec![phase],
+            final_params: params,
+            predicted_mbps: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::dataset::Dataset;
+    use crate::sim::testbed::Testbed;
+    use crate::sim::transfer::NetState;
+
+    #[test]
+    fn go_transfers_everything_in_one_phase() {
+        let mut env = TransferEnv::new(
+            Testbed::xsede(),
+            Dataset::new(50, 100.0),
+            NetState::with_load(0.1),
+            3,
+        );
+        let report = GlobusOnline.run(&mut env);
+        assert_eq!(report.phases.len(), 1);
+        assert_eq!(report.sample_transfers(), 0);
+        assert!((report.total_mb() - 5_000.0).abs() < 1e-9);
+        assert!(report.achieved_mbps() > 0.0);
+        assert_eq!(report.final_params, go_params(SizeClass::Large));
+    }
+
+    #[test]
+    fn class_specific_defaults() {
+        assert!(go_params(SizeClass::Small).pp > go_params(SizeClass::Large).pp);
+        assert!(go_params(SizeClass::Large).p > go_params(SizeClass::Small).p);
+    }
+}

@@ -1,0 +1,267 @@
+//! A small feed-forward neural network with manual backprop — the
+//! substrate for the ANN+OT baseline (paper [44] uses an artificial
+//! neural network over historical logs). Two tanh hidden layers, linear
+//! output, SGD with momentum, trained on (features → log-throughput).
+//! Pure rust: the offline environment has no ML crates, and at this
+//! size (9→32→16→1) a hand-rolled network trains in milliseconds.
+
+use crate::util::rng::Rng;
+
+/// One dense layer.
+#[derive(Debug, Clone)]
+struct Dense {
+    rows: usize, // outputs
+    cols: usize, // inputs
+    w: Vec<f64>,
+    b: Vec<f64>,
+    // Momentum buffers.
+    vw: Vec<f64>,
+    vb: Vec<f64>,
+}
+
+impl Dense {
+    fn new(rows: usize, cols: usize, rng: &mut Rng) -> Dense {
+        // Xavier/Glorot init.
+        let scale = (2.0 / (rows + cols) as f64).sqrt();
+        Dense {
+            rows,
+            cols,
+            w: (0..rows * cols).map(|_| rng.normal() * scale).collect(),
+            b: vec![0.0; rows],
+            vw: vec![0.0; rows * cols],
+            vb: vec![0.0; rows],
+        }
+    }
+
+    fn forward(&self, x: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        for r in 0..self.rows {
+            let mut acc = self.b[r];
+            let row = &self.w[r * self.cols..(r + 1) * self.cols];
+            for (wi, xi) in row.iter().zip(x) {
+                acc += wi * xi;
+            }
+            out.push(acc);
+        }
+    }
+}
+
+/// The regression network.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    input_dim: usize,
+    l1: Dense,
+    l2: Dense,
+    l3: Dense,
+    /// Input standardization.
+    x_mean: Vec<f64>,
+    x_std: Vec<f64>,
+    /// Target standardization.
+    y_mean: f64,
+    y_std: f64,
+}
+
+/// Training hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub lr: f64,
+    pub momentum: f64,
+    pub batch: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { epochs: 30, lr: 0.01, momentum: 0.9, batch: 32 }
+    }
+}
+
+impl Mlp {
+    pub fn new(input_dim: usize, h1: usize, h2: usize, rng: &mut Rng) -> Mlp {
+        Mlp {
+            input_dim,
+            l1: Dense::new(h1, input_dim, rng),
+            l2: Dense::new(h2, h1, rng),
+            l3: Dense::new(1, h2, rng),
+            x_mean: vec![0.0; input_dim],
+            x_std: vec![1.0; input_dim],
+            y_mean: 0.0,
+            y_std: 1.0,
+        }
+    }
+
+    fn standardize(&self, x: &[f64]) -> Vec<f64> {
+        x.iter()
+            .zip(self.x_mean.iter().zip(&self.x_std))
+            .map(|(xi, (m, s))| (xi - m) / s)
+            .collect()
+    }
+
+    /// Predict a scalar target for one input row.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.input_dim);
+        let xs = self.standardize(x);
+        let mut a1 = Vec::new();
+        let mut a2 = Vec::new();
+        let mut a3 = Vec::new();
+        self.l1.forward(&xs, &mut a1);
+        for v in a1.iter_mut() {
+            *v = v.tanh();
+        }
+        self.l2.forward(&a1, &mut a2);
+        for v in a2.iter_mut() {
+            *v = v.tanh();
+        }
+        self.l3.forward(&a2, &mut a3);
+        a3[0] * self.y_std + self.y_mean
+    }
+
+    /// Fit on rows (`xs` row-major `n × input_dim`, `ys` length n).
+    /// Returns the final training RMSE (standardized units).
+    pub fn train(&mut self, xs: &[f64], ys: &[f64], config: &TrainConfig, rng: &mut Rng) -> f64 {
+        let n = ys.len();
+        assert_eq!(xs.len(), n * self.input_dim);
+        assert!(n > 0);
+        // Fit standardizers.
+        for d in 0..self.input_dim {
+            let col: Vec<f64> = (0..n).map(|i| xs[i * self.input_dim + d]).collect();
+            self.x_mean[d] = crate::util::stats::mean(&col);
+            let s = crate::util::stats::std_pop(&col);
+            self.x_std[d] = if s > 1e-9 { s } else { 1.0 };
+        }
+        self.y_mean = crate::util::stats::mean(ys);
+        let ys_std = crate::util::stats::std_pop(ys);
+        self.y_std = if ys_std > 1e-9 { ys_std } else { 1.0 };
+
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut last_rmse = f64::INFINITY;
+        for _epoch in 0..config.epochs {
+            rng.shuffle(&mut order);
+            let mut se = 0.0;
+            for chunk in order.chunks(config.batch) {
+                // Accumulate gradients over the minibatch.
+                let mut gw1 = vec![0.0; self.l1.w.len()];
+                let mut gb1 = vec![0.0; self.l1.b.len()];
+                let mut gw2 = vec![0.0; self.l2.w.len()];
+                let mut gb2 = vec![0.0; self.l2.b.len()];
+                let mut gw3 = vec![0.0; self.l3.w.len()];
+                let mut gb3 = vec![0.0; self.l3.b.len()];
+                for &i in chunk {
+                    let x = self.standardize(&xs[i * self.input_dim..(i + 1) * self.input_dim]);
+                    let y = (ys[i] - self.y_mean) / self.y_std;
+                    // Forward with caches.
+                    let mut z1 = Vec::new();
+                    self.l1.forward(&x, &mut z1);
+                    let a1: Vec<f64> = z1.iter().map(|v| v.tanh()).collect();
+                    let mut z2 = Vec::new();
+                    self.l2.forward(&a1, &mut z2);
+                    let a2: Vec<f64> = z2.iter().map(|v| v.tanh()).collect();
+                    let mut z3 = Vec::new();
+                    self.l3.forward(&a2, &mut z3);
+                    let err = z3[0] - y; // dL/dz3 for L = ½err²
+                    se += err * err;
+                    // Backprop.
+                    for c in 0..self.l3.cols {
+                        gw3[c] += err * a2[c];
+                    }
+                    gb3[0] += err;
+                    let mut d2 = vec![0.0; self.l2.rows];
+                    for r in 0..self.l2.rows {
+                        d2[r] = err * self.l3.w[r] * (1.0 - a2[r] * a2[r]);
+                    }
+                    for r in 0..self.l2.rows {
+                        for c in 0..self.l2.cols {
+                            gw2[r * self.l2.cols + c] += d2[r] * a1[c];
+                        }
+                        gb2[r] += d2[r];
+                    }
+                    let mut d1 = vec![0.0; self.l1.rows];
+                    for r in 0..self.l1.rows {
+                        let mut acc = 0.0;
+                        for q in 0..self.l2.rows {
+                            acc += d2[q] * self.l2.w[q * self.l2.cols + r];
+                        }
+                        d1[r] = acc * (1.0 - a1[r] * a1[r]);
+                    }
+                    for r in 0..self.l1.rows {
+                        for c in 0..self.l1.cols {
+                            gw1[r * self.l1.cols + c] += d1[r] * x[c];
+                        }
+                        gb1[r] += d1[r];
+                    }
+                }
+                // SGD + momentum step.
+                let scale = config.lr / chunk.len() as f64;
+                let step = |w: &mut [f64], v: &mut [f64], g: &[f64]| {
+                    for ((wi, vi), gi) in w.iter_mut().zip(v.iter_mut()).zip(g) {
+                        *vi = config.momentum * *vi - scale * gi;
+                        *wi += *vi;
+                    }
+                };
+                step(&mut self.l1.w, &mut self.l1.vw, &gw1);
+                step(&mut self.l1.b, &mut self.l1.vb, &gb1);
+                step(&mut self.l2.w, &mut self.l2.vw, &gw2);
+                step(&mut self.l2.b, &mut self.l2.vb, &gb2);
+                step(&mut self.l3.w, &mut self.l3.vw, &gw3);
+                step(&mut self.l3.b, &mut self.l3.vb, &gb3);
+            }
+            last_rmse = (se / n as f64).sqrt();
+        }
+        last_rmse
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn learns_linear_function() {
+        let mut rng = Rng::new(1);
+        let n = 512;
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..n {
+            let a = rng.range_f64(-2.0, 2.0);
+            let b = rng.range_f64(-2.0, 2.0);
+            xs.extend_from_slice(&[a, b]);
+            ys.push(3.0 * a - 2.0 * b + 1.0);
+        }
+        let mut net = Mlp::new(2, 16, 8, &mut rng);
+        let rmse = net.train(&xs, &ys, &TrainConfig::default(), &mut rng);
+        assert!(rmse < 0.1, "train rmse {rmse}");
+        let pred = net.predict(&[1.0, 1.0]);
+        assert!((pred - 2.0).abs() < 0.5, "pred {pred}");
+    }
+
+    #[test]
+    fn learns_nonlinear_ridge() {
+        let mut rng = Rng::new(2);
+        let n = 1024;
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..n {
+            let a = rng.range_f64(-3.0, 3.0);
+            xs.push(a);
+            ys.push((-a * a).exp() * 10.0);
+        }
+        let mut net = Mlp::new(1, 24, 12, &mut rng);
+        let cfg = TrainConfig { epochs: 80, ..Default::default() };
+        net.train(&xs, &ys, &cfg, &mut rng);
+        // Peak at 0 must be clearly above the tails.
+        let peak = net.predict(&[0.0]);
+        let tail = net.predict(&[2.5]);
+        assert!(peak > 5.0, "peak {peak}");
+        assert!(peak > tail + 4.0, "peak {peak} tail {tail}");
+    }
+
+    #[test]
+    fn standardization_tolerates_constant_columns() {
+        let mut rng = Rng::new(3);
+        let xs = vec![1.0, 5.0, 1.0, 6.0, 1.0, 7.0]; // first column constant
+        let ys = vec![5.0, 6.0, 7.0];
+        let mut net = Mlp::new(2, 4, 4, &mut rng);
+        net.train(&xs, &ys, &TrainConfig { epochs: 50, ..Default::default() }, &mut rng);
+        assert!(net.predict(&[1.0, 6.0]).is_finite());
+    }
+}

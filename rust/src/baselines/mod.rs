@@ -1,0 +1,262 @@
+//! Optimizer framework + the six comparison models from the paper's
+//! evaluation (§4): GO, SP, SC, ANN+OT, HARP, and NMT — all running
+//! against the identical simulated network through a common
+//! [`Optimizer`] trait, exactly like the paper's bake-off.
+
+pub mod annot;
+pub mod go;
+pub mod harp;
+pub mod mlp;
+pub mod nmt;
+pub mod sc;
+pub mod sp;
+
+use crate::offline::knowledge::RequestInfo;
+use crate::sim::dataset::Dataset;
+use crate::sim::params::Params;
+use crate::sim::testbed::Testbed;
+use crate::sim::transfer::{NetState, Outcome};
+use crate::util::rng::Rng;
+
+/// The environment one transfer request runs in. The *true* network
+/// state (external load, contention) is hidden from optimizers — they
+/// only observe measured throughput, like the real system.
+pub struct TransferEnv {
+    pub testbed: Testbed,
+    pub request: RequestInfo,
+    pub dataset: Dataset,
+    /// Piecewise-constant schedule of hidden network states:
+    /// (start_time_s, state), sorted. The last entry extends forever.
+    schedule: Vec<(f64, NetState)>,
+    /// Elapsed transfer time (advances as chunks run).
+    pub clock_s: f64,
+    pub rng: Rng,
+    /// Currently configured parameters (None before the first chunk).
+    pub current_params: Option<Params>,
+}
+
+impl TransferEnv {
+    pub fn new(testbed: Testbed, dataset: Dataset, state: NetState, seed: u64) -> TransferEnv {
+        let request = RequestInfo {
+            rtt_ms: testbed.path.link.rtt_ms,
+            bandwidth_mbps: testbed.path.link.bandwidth_mbps,
+            tcp_buffer_mb: testbed.path.src.tcp_buffer_mb.min(testbed.path.dst.tcp_buffer_mb),
+            disk_mbps: testbed.path.src.disk_mbps.min(testbed.path.dst.disk_mbps),
+            avg_file_mb: dataset.avg_file_mb,
+            num_files: dataset.num_files,
+        };
+        TransferEnv {
+            testbed,
+            request,
+            dataset,
+            schedule: vec![(0.0, state)],
+            clock_s: 0.0,
+            rng: Rng::new(seed),
+            current_params: None,
+        }
+    }
+
+    /// Add a future state change (models external traffic shifting
+    /// mid-transfer — the drift the ASM monitor must catch).
+    pub fn schedule_state(&mut self, at_s: f64, state: NetState) {
+        self.schedule.push((at_s, state));
+        self.schedule.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    }
+
+    /// Hidden state at a given time.
+    pub fn state_at(&self, t: f64) -> NetState {
+        let mut current = self.schedule[0].1;
+        for (start, state) in &self.schedule {
+            if *start <= t {
+                current = *state;
+            }
+        }
+        current
+    }
+
+    /// True optimum at the current instant (ground truth for metrics —
+    /// never visible to optimizers).
+    pub fn true_optimal(&self) -> (Params, f64) {
+        self.testbed
+            .path
+            .optimal(&self.dataset, &self.state_at(self.clock_s), crate::sim::params::BETA)
+    }
+
+    /// Execute a chunk under `params`. Charges re-tuning costs relative
+    /// to the currently configured parameters and advances the clock.
+    pub fn run_chunk(&mut self, chunk: &Dataset, params: Params) -> Outcome {
+        let state = self.state_at(self.clock_s);
+        let (new_procs, new_streams) = match self.current_params {
+            None => (params.cc, params.streams()),
+            Some(prev) => (prev.new_processes(&params), prev.new_streams(&params)),
+        };
+        let out = self.testbed.path.transfer_with_setup(
+            chunk,
+            &params,
+            &state,
+            new_procs,
+            new_streams,
+            Some(&mut self.rng),
+        );
+        self.clock_s += out.duration_s;
+        self.current_params = Some(params);
+        out
+    }
+
+    /// A sample chunk sized for roughly `target_s` seconds at an
+    /// expected rate, capped at a tenth of the remaining dataset so
+    /// probing can never consume a large share of the transfer.
+    pub fn sample_chunk(&self, remaining: &Dataset, expected_mbps: f64, target_s: f64) -> Dataset {
+        let bits_wanted = expected_mbps.max(50.0) * target_s;
+        let files = (bits_wanted / (remaining.avg_file_mb * 8.0)).ceil() as u64;
+        let cap = (remaining.num_files / 10).max(1);
+        let (chunk, _) = remaining.split_chunk(files.clamp(1, cap));
+        chunk
+    }
+}
+
+/// One phase of a run: the parameters used and what they achieved.
+#[derive(Debug, Clone, Copy)]
+pub struct Phase {
+    pub params: Params,
+    pub mb: f64,
+    pub seconds: f64,
+    pub steady_mbps: f64,
+    /// Was this a sampling/probing phase (as opposed to bulk transfer)?
+    pub is_sample: bool,
+}
+
+/// Result of running an optimizer on one request.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub optimizer: &'static str,
+    pub phases: Vec<Phase>,
+    pub final_params: Params,
+    /// The model's own throughput prediction (None for model-free
+    /// optimizers) — accuracy metric input (paper Eq. 25).
+    pub predicted_mbps: Option<f64>,
+}
+
+impl RunReport {
+    pub fn total_mb(&self) -> f64 {
+        self.phases.iter().map(|p| p.mb).sum()
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.phases.iter().map(|p| p.seconds).sum()
+    }
+
+    /// End-to-end achieved throughput across every phase, including the
+    /// sampling overhead — the paper's primary comparison metric.
+    pub fn achieved_mbps(&self) -> f64 {
+        let s = self.total_s();
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.total_mb() * 8.0 / s
+        }
+    }
+
+    pub fn sample_transfers(&self) -> usize {
+        self.phases.iter().filter(|p| p.is_sample).count()
+    }
+
+    /// Steady throughput of the final (bulk) phase — what the chosen
+    /// parameters actually sustain.
+    pub fn final_steady_mbps(&self) -> f64 {
+        self.phases.last().map(|p| p.steady_mbps).unwrap_or(0.0)
+    }
+}
+
+/// Common interface for ASM and all baselines.
+pub trait Optimizer {
+    fn name(&self) -> &'static str;
+    /// Transfer `env.dataset` end-to-end, deciding parameters however
+    /// the model prescribes.
+    fn run(&mut self, env: &mut TransferEnv) -> RunReport;
+}
+
+/// Helper: transfer `remaining` fully in one bulk phase.
+pub fn bulk_phase(env: &mut TransferEnv, remaining: &Dataset, params: Params) -> Phase {
+    let out = env.run_chunk(remaining, params);
+    Phase {
+        params,
+        mb: remaining.total_mb(),
+        seconds: out.duration_s,
+        steady_mbps: out.steady_mbps,
+        is_sample: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> TransferEnv {
+        TransferEnv::new(
+            Testbed::xsede(),
+            Dataset::new(100, 64.0),
+            NetState::with_load(0.2),
+            7,
+        )
+    }
+
+    #[test]
+    fn clock_advances_and_params_persist() {
+        let mut e = env();
+        let (chunk, _) = e.dataset.split_chunk(10);
+        assert!(e.current_params.is_none());
+        let out = e.run_chunk(&chunk, Params::new(4, 4, 2));
+        assert!(e.clock_s > 0.0);
+        assert_eq!(e.clock_s, out.duration_s);
+        assert_eq!(e.current_params, Some(Params::new(4, 4, 2)));
+    }
+
+    #[test]
+    fn repeat_chunk_with_same_params_has_no_setup() {
+        let mut e = env();
+        let (chunk, _) = e.dataset.split_chunk(20);
+        let p = Params::new(8, 4, 2);
+        let _ = e.run_chunk(&chunk, p);
+        let again = e.run_chunk(&chunk, p);
+        // No new processes/streams ⇒ duration ≈ data / steady.
+        let expect = chunk.total_mb() * 8.0 / again.steady_mbps;
+        assert!((again.duration_s - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn schedule_switches_state() {
+        let mut e = env();
+        e.schedule_state(100.0, NetState::with_load(0.9));
+        assert_eq!(e.state_at(0.0).external_load, 0.2);
+        assert_eq!(e.state_at(99.9).external_load, 0.2);
+        assert_eq!(e.state_at(100.0).external_load, 0.9);
+        assert_eq!(e.state_at(5000.0).external_load, 0.9);
+    }
+
+    #[test]
+    fn sample_chunk_bounded() {
+        let e = env();
+        let chunk = e.sample_chunk(&e.dataset, 5_000.0, 3.0);
+        assert!(chunk.num_files >= 1);
+        assert!(chunk.num_files <= e.dataset.num_files / 4);
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let r = RunReport {
+            optimizer: "test",
+            phases: vec![
+                Phase { params: Params::new(1, 1, 1), mb: 100.0, seconds: 10.0, steady_mbps: 90.0, is_sample: true },
+                Phase { params: Params::new(2, 2, 2), mb: 900.0, seconds: 30.0, steady_mbps: 250.0, is_sample: false },
+            ],
+            final_params: Params::new(2, 2, 2),
+            predicted_mbps: Some(240.0),
+        };
+        assert_eq!(r.total_mb(), 1000.0);
+        assert_eq!(r.total_s(), 40.0);
+        assert!((r.achieved_mbps() - 200.0).abs() < 1e-9);
+        assert_eq!(r.sample_transfers(), 1);
+        assert_eq!(r.final_steady_mbps(), 250.0);
+    }
+}

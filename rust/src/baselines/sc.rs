@@ -1,0 +1,112 @@
+//! SC — Single-Chunk heuristic tuning (paper baseline [9], Arslan,
+//! Ross & Kosar, Euro-Par'13): closed-form parameter choices from the
+//! dataset shape and network metrics (BDP, buffer, file sizes), with a
+//! user-supplied concurrency cap. No historical knowledge, no probing,
+//! and — as the paper notes — no awareness of the disk bottleneck.
+
+use super::{bulk_phase, Optimizer, RunReport, TransferEnv};
+use crate::sim::params::{Params, PP_LEVELS};
+
+pub struct SingleChunk {
+    /// User-provided concurrency ceiling (the paper's experiments set
+    /// this to 10).
+    pub cc_cap: u32,
+}
+
+impl Default for SingleChunk {
+    fn default() -> Self {
+        SingleChunk { cc_cap: 10 }
+    }
+}
+
+impl SingleChunk {
+    /// The heuristic: parallelism fills the per-stream window gap
+    /// (p ≈ BDP / buffer), pipelining covers the per-file ack delay
+    /// (pp ≈ BDP / avg file size), concurrency scales with file count
+    /// up to the user cap.
+    pub fn choose(&self, env: &TransferEnv) -> Params {
+        let req = &env.request;
+        let bdp_mb = req.bandwidth_mbps * 1e6 * (req.rtt_ms / 1e3) / 8.0 / 1e6;
+        let p = (bdp_mb / req.tcp_buffer_mb.max(1e-6)).ceil().clamp(1.0, 16.0) as u32;
+        // Pipelining: enough commands in flight to cover a BDP of files.
+        let pp_raw = (bdp_mb / req.avg_file_mb.max(1e-6)).ceil().clamp(1.0, 32.0) as u32;
+        let pp = *PP_LEVELS
+            .iter()
+            .find(|&&l| l >= pp_raw)
+            .unwrap_or(PP_LEVELS.last().unwrap());
+        // Concurrency: more files ⇒ more channels, capped by the user.
+        let cc = (env.dataset.num_files as f64).sqrt().ceil().clamp(1.0, self.cc_cap as f64) as u32;
+        Params::new(cc, p, pp)
+    }
+}
+
+impl Optimizer for SingleChunk {
+    fn name(&self) -> &'static str {
+        "SC"
+    }
+
+    fn run(&mut self, env: &mut TransferEnv) -> RunReport {
+        let params = self.choose(env);
+        let dataset = env.dataset;
+        let phase = bulk_phase(env, &dataset, params);
+        RunReport {
+            optimizer: self.name(),
+            phases: vec![phase],
+            final_params: params,
+            predicted_mbps: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::dataset::Dataset;
+    use crate::sim::testbed::Testbed;
+    use crate::sim::transfer::NetState;
+
+    #[test]
+    fn respects_cc_cap() {
+        let env = TransferEnv::new(
+            Testbed::xsede(),
+            Dataset::new(100_000, 1.0),
+            NetState::quiet(),
+            1,
+        );
+        let p = SingleChunk { cc_cap: 10 }.choose(&env);
+        assert!(p.cc <= 10);
+        let p2 = SingleChunk { cc_cap: 4 }.choose(&env);
+        assert!(p2.cc <= 4);
+    }
+
+    #[test]
+    fn adapts_to_network_shape() {
+        // Big-BDP WAN wants parallelism; tiny-BDP LAN does not.
+        let wan = TransferEnv::new(Testbed::xsede(), Dataset::new(50, 200.0), NetState::quiet(), 1);
+        let lan = TransferEnv::new(Testbed::didclab(), Dataset::new(50, 200.0), NetState::quiet(), 1);
+        let pw = SingleChunk::default().choose(&wan);
+        let pl = SingleChunk::default().choose(&lan);
+        assert!(pw.p >= pl.p, "WAN p={} vs LAN p={}", pw.p, pl.p);
+        assert_eq!(pl.p, 1, "0.2 ms LAN needs no parallelism");
+    }
+
+    #[test]
+    fn small_files_get_pipelining_on_wan() {
+        let small = TransferEnv::new(Testbed::xsede(), Dataset::new(5_000, 1.0), NetState::quiet(), 1);
+        let large = TransferEnv::new(Testbed::xsede(), Dataset::new(10, 500.0), NetState::quiet(), 1);
+        assert!(SingleChunk::default().choose(&small).pp > SingleChunk::default().choose(&large).pp);
+    }
+
+    #[test]
+    fn single_phase_run() {
+        let mut env = TransferEnv::new(
+            Testbed::didclab(),
+            Dataset::new(500, 5.0),
+            NetState::with_load(0.4),
+            2,
+        );
+        let r = SingleChunk::default().run(&mut env);
+        assert_eq!(r.phases.len(), 1);
+        assert!(r.achieved_mbps() > 0.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! SP — Static Parameters mined from historical logs (paper baseline
+//! [44], Nine et al. NDM'15): one static parameter table per transfer
+//! *type* (network × file-size class), chosen as the historically
+//! best-performing combination in the raw log. No surfaces, no load
+//! awareness, no runtime probing — the distinguishing weakness the
+//! paper's dynamic models exploit.
+
+use super::{bulk_phase, Optimizer, RunReport, TransferEnv};
+use crate::logs::record::TransferLog;
+use crate::sim::dataset::SizeClass;
+use crate::sim::params::Params;
+use crate::util::stats::Welford;
+use std::collections::HashMap;
+
+/// Lookup key: the transfer type — bandwidth class (Mbps, rounded) ×
+/// file-size class, which is how a static table would be indexed in
+/// practice.
+fn type_key(bandwidth_mbps: f64, class: SizeClass) -> (u64, &'static str) {
+    (bandwidth_mbps.round() as u64, class.name())
+}
+
+#[derive(Clone)]
+pub struct StaticParams {
+    /// (type → (params, historical mean throughput)).
+    table: HashMap<(u64, &'static str), (Params, f64)>,
+}
+
+impl StaticParams {
+    /// Mine the static table: per type, the parameter combination with
+    /// the best historical mean throughput over ≥3 observations.
+    pub fn mine(rows: &[TransferLog]) -> StaticParams {
+        let mut acc: HashMap<((u64, &'static str), (u32, u32, u32)), Welford> = HashMap::new();
+        for row in rows {
+            let key = type_key(row.bandwidth_mbps, SizeClass::classify(row.avg_file_mb));
+            acc.entry((key, (row.cc, row.p, row.pp)))
+                .or_default()
+                .push(row.throughput_mbps);
+        }
+        let mut table: HashMap<(u64, &'static str), (Params, f64)> = HashMap::new();
+        for ((key, (cc, p, pp)), w) in acc {
+            if w.count < 3 {
+                continue; // one lucky transfer is not a policy
+            }
+            let entry = table.entry(key).or_insert((Params::new(cc, p, pp), f64::NEG_INFINITY));
+            if w.mean > entry.1 {
+                *entry = (Params::new(cc, p, pp), w.mean);
+            }
+        }
+        StaticParams { table }
+    }
+
+    pub fn choose(&self, env: &TransferEnv) -> (Params, Option<f64>) {
+        let key = type_key(env.request.bandwidth_mbps, env.dataset.class());
+        match self.table.get(&key) {
+            Some((params, mean_th)) => (*params, Some(*mean_th)),
+            None => (super::go::go_params(env.dataset.class()), None),
+        }
+    }
+}
+
+impl Optimizer for StaticParams {
+    fn name(&self) -> &'static str {
+        "SP"
+    }
+
+    fn run(&mut self, env: &mut TransferEnv) -> RunReport {
+        let (params, predicted) = self.choose(env);
+        let dataset = env.dataset;
+        let phase = bulk_phase(env, &dataset, params);
+        RunReport {
+            optimizer: self.name(),
+            phases: vec![phase],
+            final_params: params,
+            predicted_mbps: predicted,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logs::generate::{generate, GenConfig};
+    use crate::sim::dataset::Dataset;
+    use crate::sim::testbed::Testbed;
+    use crate::sim::transfer::NetState;
+
+    fn mined() -> (StaticParams, Testbed, Vec<TransferLog>) {
+        let tb = Testbed::xsede();
+        let rows =
+            generate(&tb, &GenConfig { days: 6, arrivals_per_hour: 30.0, start_day: 0, seed: 5 });
+        (StaticParams::mine(&rows), tb, rows)
+    }
+
+    #[test]
+    fn sp_beats_go_on_average() {
+        let (mut sp, tb, _) = mined();
+        let mut sp_total = 0.0;
+        let mut go_total = 0.0;
+        for seed in 0..8u64 {
+            let d = Dataset::new(60, 100.0);
+            let mut env1 = TransferEnv::new(tb.clone(), d, NetState::with_load(0.15), seed);
+            let mut env2 = TransferEnv::new(tb.clone(), d, NetState::with_load(0.15), seed);
+            sp_total += sp.run(&mut env1).achieved_mbps();
+            go_total += super::super::go::GlobusOnline.run(&mut env2).achieved_mbps();
+        }
+        assert!(
+            sp_total > go_total,
+            "SP ({:.0}) should beat GO ({:.0}) using historical knowledge",
+            sp_total / 8.0,
+            go_total / 8.0
+        );
+    }
+
+    #[test]
+    fn sp_is_single_phase_and_static() {
+        let (mut sp, tb, _) = mined();
+        let d = Dataset::new(1_000, 2.0);
+        let mut env = TransferEnv::new(tb.clone(), d, NetState::with_load(0.3), 9);
+        let report = sp.run(&mut env);
+        assert_eq!(report.phases.len(), 1);
+        assert_eq!(report.sample_transfers(), 0);
+        // Same request type ⇒ identical parameters regardless of load.
+        let mut env2 = TransferEnv::new(tb, d, NetState::with_load(0.8), 10);
+        let report2 = sp.run(&mut env2);
+        assert_eq!(report.final_params, report2.final_params);
+    }
+
+    #[test]
+    fn unseen_type_falls_back_to_go() {
+        let sp = StaticParams::mine(&[]);
+        let env = TransferEnv::new(
+            Testbed::didclab(),
+            Dataset::new(10, 500.0),
+            NetState::quiet(),
+            1,
+        );
+        let (params, pred) = sp.choose(&env);
+        assert_eq!(params, super::super::go::go_params(SizeClass::Large));
+        assert!(pred.is_none());
+    }
+}

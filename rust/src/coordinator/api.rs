@@ -1,0 +1,99 @@
+//! Request/response types of the transfer coordinator.
+
+use crate::baselines::RunReport;
+use crate::sim::dataset::Dataset;
+use crate::sim::testbed::TestbedId;
+use crate::sim::transfer::NetState;
+
+/// Which optimizer serves a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OptimizerKind {
+    Asm,
+    Go,
+    Sp,
+    Sc,
+    AnnOt,
+    Harp,
+    Nmt,
+}
+
+impl OptimizerKind {
+    pub fn all() -> [OptimizerKind; 7] {
+        [
+            OptimizerKind::Go,
+            OptimizerKind::Sp,
+            OptimizerKind::Sc,
+            OptimizerKind::AnnOt,
+            OptimizerKind::Harp,
+            OptimizerKind::Nmt,
+            OptimizerKind::Asm,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimizerKind::Asm => "ASM",
+            OptimizerKind::Go => "GO",
+            OptimizerKind::Sp => "SP",
+            OptimizerKind::Sc => "SC",
+            OptimizerKind::AnnOt => "ANN+OT",
+            OptimizerKind::Harp => "HARP",
+            OptimizerKind::Nmt => "NMT",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<OptimizerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "asm" => Some(OptimizerKind::Asm),
+            "go" => Some(OptimizerKind::Go),
+            "sp" => Some(OptimizerKind::Sp),
+            "sc" => Some(OptimizerKind::Sc),
+            "annot" | "ann+ot" | "ann" => Some(OptimizerKind::AnnOt),
+            "harp" => Some(OptimizerKind::Harp),
+            "nmt" => Some(OptimizerKind::Nmt),
+            _ => None,
+        }
+    }
+}
+
+/// A transfer request submitted to the coordinator.
+#[derive(Debug, Clone)]
+pub struct TransferRequest {
+    pub id: u64,
+    pub testbed: TestbedId,
+    pub dataset: Dataset,
+    /// Simulated submission time (drives the diurnal hidden load unless
+    /// `state_override` pins it).
+    pub t_submit: f64,
+    pub state_override: Option<NetState>,
+    pub optimizer: Option<OptimizerKind>,
+    /// Per-request RNG seed (reproducibility across optimizers).
+    pub seed: u64,
+}
+
+/// Completed-request record.
+#[derive(Debug, Clone)]
+pub struct TransferResponse {
+    pub id: u64,
+    pub optimizer: &'static str,
+    pub report: RunReport,
+    /// Wall-clock time the optimizer spent deciding/executing (the
+    /// coordinator's own overhead — the paper's "constant time" claim
+    /// is about this number for ASM).
+    pub decision_wall_ns: u64,
+    /// Ground-truth optimal steady rate at submission (for accuracy).
+    pub optimal_mbps: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in OptimizerKind::all() {
+            assert_eq!(OptimizerKind::parse(&kind.name().to_lowercase()), Some(kind));
+        }
+        assert_eq!(OptimizerKind::parse("bogus"), None);
+    }
+}

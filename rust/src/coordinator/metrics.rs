@@ -1,0 +1,120 @@
+//! Coordinator metrics: per-optimizer aggregates over served requests.
+
+use crate::util::stats::{mean, quantile};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+#[derive(Debug, Default, Clone)]
+pub struct OptimizerStats {
+    pub requests: u64,
+    pub total_mb: f64,
+    pub total_transfer_s: f64,
+    pub achieved_mbps: Vec<f64>,
+    pub decision_wall_ns: Vec<f64>,
+    pub samples_used: Vec<f64>,
+}
+
+impl OptimizerStats {
+    pub fn mean_achieved_mbps(&self) -> f64 {
+        mean(&self.achieved_mbps)
+    }
+
+    pub fn p95_decision_ns(&self) -> f64 {
+        quantile(&self.decision_wall_ns, 0.95)
+    }
+}
+
+/// Thread-safe metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<BTreeMap<&'static str, OptimizerStats>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record(
+        &self,
+        optimizer: &'static str,
+        achieved_mbps: f64,
+        total_mb: f64,
+        total_s: f64,
+        samples: usize,
+        decision_wall_ns: u64,
+    ) {
+        let mut inner = self.inner.lock().unwrap();
+        let entry = inner.entry(optimizer).or_default();
+        entry.requests += 1;
+        entry.total_mb += total_mb;
+        entry.total_transfer_s += total_s;
+        entry.achieved_mbps.push(achieved_mbps);
+        entry.decision_wall_ns.push(decision_wall_ns as f64);
+        entry.samples_used.push(samples as f64);
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<&'static str, OptimizerStats> {
+        self.inner.lock().unwrap().clone()
+    }
+
+    /// Render the standard metrics table.
+    pub fn render(&self) -> String {
+        let snap = self.snapshot();
+        let mut out = String::from(
+            "optimizer   reqs  mean_mbps  p50_mbps  mean_samples  p95_decision\n",
+        );
+        for (name, s) in &snap {
+            out.push_str(&format!(
+                "{:<11} {:>4} {:>10.0} {:>9.0} {:>13.2} {:>13}\n",
+                name,
+                s.requests,
+                s.mean_achieved_mbps(),
+                quantile(&s.achieved_mbps, 0.5),
+                mean(&s.samples_used),
+                crate::util::timer::fmt_ns(s.p95_decision_ns()),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_aggregates() {
+        let m = Metrics::new();
+        m.record("ASM", 1000.0, 500.0, 4.0, 2, 10_000);
+        m.record("ASM", 2000.0, 500.0, 2.0, 3, 20_000);
+        m.record("GO", 800.0, 500.0, 5.0, 0, 1_000);
+        let snap = m.snapshot();
+        assert_eq!(snap["ASM"].requests, 2);
+        assert_eq!(snap["ASM"].mean_achieved_mbps(), 1500.0);
+        assert_eq!(snap["GO"].requests, 1);
+        let table = m.render();
+        assert!(table.contains("ASM"));
+        assert!(table.contains("GO"));
+    }
+
+    #[test]
+    fn thread_safety() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        m.record("X", i as f64, 1.0, 1.0, 1, 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.snapshot()["X"].requests, 800);
+    }
+}

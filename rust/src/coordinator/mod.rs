@@ -1,0 +1,10 @@
+//! L3 transfer coordinator: request/response API, thread-pool server,
+//! and per-optimizer metrics.
+
+pub mod api;
+pub mod metrics;
+pub mod server;
+
+pub use api::{OptimizerKind, TransferRequest, TransferResponse};
+pub use metrics::Metrics;
+pub use server::{Coordinator, CoordinatorConfig};

@@ -1,0 +1,295 @@
+//! The transfer coordinator: a thread-pool service that accepts
+//! transfer requests, routes each to the configured optimizer, runs it
+//! against the simulated network, and aggregates metrics. This is the
+//! L3 request path: knowledge-base queries and parameter decisions all
+//! happen here in rust — python is long gone by now.
+
+use super::api::{OptimizerKind, TransferRequest, TransferResponse};
+use super::metrics::Metrics;
+use crate::baselines::annot::AnnOt;
+use crate::baselines::go::GlobusOnline;
+use crate::baselines::harp::Harp;
+use crate::baselines::nmt::NelderMeadTuner;
+use crate::baselines::sc::SingleChunk;
+use crate::baselines::sp::StaticParams;
+use crate::baselines::{Optimizer, TransferEnv};
+use crate::logs::record::TransferLog;
+use crate::offline::knowledge::KnowledgeBase;
+use crate::online::asm::AdaptiveSampling;
+use crate::sim::params::BETA;
+use crate::sim::testbed::Testbed;
+use crate::sim::traffic::Contention;
+use crate::sim::transfer::NetState;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    /// Default optimizer when a request doesn't specify one.
+    pub default_optimizer: OptimizerKind,
+    pub seed: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { workers: 4, default_optimizer: OptimizerKind::Asm, seed: 0xC0 }
+    }
+}
+
+/// Shared read-only context every worker uses.
+struct Shared {
+    kb: Arc<KnowledgeBase>,
+    history: Arc<Vec<TransferLog>>,
+    annot: Arc<AnnOt>,
+    sp: Arc<StaticParams>,
+    metrics: Arc<Metrics>,
+}
+
+enum Job {
+    Run(TransferRequest, Sender<TransferResponse>),
+    Stop,
+}
+
+/// The coordinator service.
+pub struct Coordinator {
+    tx: Sender<Job>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    config: CoordinatorConfig,
+}
+
+impl Coordinator {
+    pub fn new(
+        kb: Arc<KnowledgeBase>,
+        history: Arc<Vec<TransferLog>>,
+        config: CoordinatorConfig,
+    ) -> Coordinator {
+        let metrics = Arc::new(Metrics::new());
+        // Train the ANN once, shared by every worker.
+        let annot = Arc::new(AnnOt::train(&history, config.seed ^ 0xA22));
+        let sp = Arc::new(StaticParams::mine(&history));
+        let shared = Arc::new(Shared {
+            kb,
+            history,
+            annot,
+            sp,
+            metrics: metrics.clone(),
+        });
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(config.workers.max(1));
+        for widx in 0..config.workers.max(1) {
+            let rx = rx.clone();
+            let shared = shared.clone();
+            let default_opt = config.default_optimizer;
+            workers.push(std::thread::spawn(move || {
+                worker_loop(widx, rx, shared, default_opt);
+            }));
+        }
+        Coordinator { tx, workers, metrics, next_id: AtomicU64::new(1), config }
+    }
+
+    pub fn fresh_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Submit asynchronously; the receiver yields the response.
+    pub fn submit(&self, request: TransferRequest) -> Receiver<TransferResponse> {
+        let (tx, rx) = channel();
+        self.tx.send(Job::Run(request, tx)).expect("coordinator stopped");
+        rx
+    }
+
+    /// Convenience: run a batch and wait for all responses (order
+    /// preserved by request id).
+    pub fn run_batch(&self, requests: Vec<TransferRequest>) -> Vec<TransferResponse> {
+        let receivers: Vec<(u64, Receiver<TransferResponse>)> =
+            requests.into_iter().map(|r| (r.id, self.submit(r))).collect();
+        let mut out: Vec<TransferResponse> =
+            receivers.into_iter().map(|(_, rx)| rx.recv().expect("worker died")).collect();
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
+    pub fn shutdown(mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Job::Stop);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.config
+    }
+}
+
+fn worker_loop(
+    widx: usize,
+    rx: Arc<Mutex<Receiver<Job>>>,
+    shared: Arc<Shared>,
+    default_opt: OptimizerKind,
+) {
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match job {
+            Ok(Job::Run(request, reply)) => {
+                let response = serve_one(&shared, &request, default_opt, widx as u64);
+                let _ = reply.send(response);
+            }
+            Ok(Job::Stop) | Err(_) => break,
+        }
+    }
+}
+
+/// Serve a single request: build the hidden environment, dispatch to
+/// the optimizer, record metrics.
+fn serve_one(
+    shared: &Shared,
+    request: &TransferRequest,
+    default_opt: OptimizerKind,
+    widx: u64,
+) -> TransferResponse {
+    let testbed = Testbed::by_id(request.testbed);
+    // Hidden network state: diurnal profile at submission time (plus
+    // contending transfers), unless the request pins a state.
+    let mut state_rng = Rng::new(request.seed ^ 0x57A7E);
+    let state = request.state_override.unwrap_or_else(|| {
+        let load = testbed.profile.sample_load(request.t_submit, &mut state_rng);
+        let contention =
+            Contention::sample(&mut state_rng, testbed.path.link.bandwidth_mbps, load);
+        NetState { external_load: load, contention }
+    });
+    let mut env = TransferEnv::new(
+        testbed.clone(),
+        request.dataset,
+        state,
+        request.seed ^ widx.rotate_left(17),
+    );
+    let (_, optimal_mbps) = testbed.path.optimal(&request.dataset, &state, BETA);
+
+    let kind = request.optimizer.unwrap_or(default_opt);
+    let started = Instant::now();
+    let report = match kind {
+        OptimizerKind::Asm => AdaptiveSampling::new(&shared.kb).run(&mut env),
+        OptimizerKind::Go => GlobusOnline.run(&mut env),
+        OptimizerKind::Sp => (*shared.sp).clone().run(&mut env),
+        OptimizerKind::Sc => SingleChunk::default().run(&mut env),
+        OptimizerKind::AnnOt => {
+            // The shared ANN is read-only at run time; clone the thin
+            // handle for the trait's &mut self.
+            let mut model = (*shared.annot).clone();
+            model.run(&mut env)
+        }
+        OptimizerKind::Harp => Harp::new((*shared.history).clone()).run(&mut env),
+        OptimizerKind::Nmt => NelderMeadTuner::default().run(&mut env),
+    };
+    let decision_wall_ns = started.elapsed().as_nanos() as u64;
+    shared.metrics.record(
+        report.optimizer,
+        report.achieved_mbps(),
+        report.total_mb(),
+        report.total_s(),
+        report.sample_transfers(),
+        decision_wall_ns,
+    );
+    TransferResponse {
+        id: request.id,
+        optimizer: report.optimizer,
+        report,
+        decision_wall_ns,
+        optimal_mbps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logs::generate::{generate, GenConfig};
+    use crate::offline::kmeans::NativeAssign;
+    use crate::offline::pipeline::{build, OfflineConfig};
+    use crate::sim::dataset::Dataset;
+    use crate::sim::testbed::TestbedId;
+
+    fn coordinator() -> Coordinator {
+        let tb = Testbed::xsede();
+        let rows = generate(&tb, &GenConfig { days: 5, arrivals_per_hour: 25.0, start_day: 0, seed: 61 });
+        let kb = Arc::new(build(&rows, &OfflineConfig::default(), &mut NativeAssign).unwrap());
+        Coordinator::new(kb, Arc::new(rows), CoordinatorConfig { workers: 3, ..Default::default() })
+    }
+
+    fn request(id: u64, opt: Option<OptimizerKind>) -> TransferRequest {
+        TransferRequest {
+            id,
+            testbed: TestbedId::Xsede,
+            dataset: Dataset::new(60, 100.0),
+            t_submit: 3_600.0 * (id as f64 % 24.0),
+            state_override: None,
+            optimizer: opt,
+            seed: 1000 + id,
+        }
+    }
+
+    #[test]
+    fn serves_batch_in_order() {
+        let coord = coordinator();
+        let reqs: Vec<TransferRequest> = (1..=6).map(|i| request(i, None)).collect();
+        let responses = coord.run_batch(reqs);
+        assert_eq!(responses.len(), 6);
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.id, i as u64 + 1);
+            assert_eq!(r.optimizer, "ASM");
+            assert!(r.report.achieved_mbps() > 0.0);
+            assert!(r.optimal_mbps > 0.0);
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap["ASM"].requests, 6);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn dispatches_every_optimizer_kind() {
+        let coord = coordinator();
+        let reqs: Vec<TransferRequest> = OptimizerKind::all()
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| request(i as u64 + 1, Some(k)))
+            .collect();
+        let responses = coord.run_batch(reqs);
+        let names: Vec<&str> = responses.iter().map(|r| r.optimizer).collect();
+        for kind in OptimizerKind::all() {
+            assert!(names.contains(&kind.name()), "missing {}", kind.name());
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn asm_decision_overhead_is_tiny() {
+        // The paper: "Our online module needs almost constant time to
+        // agree on the parameters". Wall-clock per request (excluding
+        // simulated transfer time, which is virtual) must be far below
+        // a real sample transfer.
+        let coord = coordinator();
+        let reqs: Vec<TransferRequest> = (1..=10).map(|i| request(i, Some(OptimizerKind::Asm))).collect();
+        let responses = coord.run_batch(reqs);
+        for r in &responses {
+            assert!(
+                r.decision_wall_ns < 200_000_000,
+                "ASM decision took {}",
+                crate::util::timer::fmt_ns(r.decision_wall_ns as f64)
+            );
+        }
+        coord.shutdown();
+    }
+}

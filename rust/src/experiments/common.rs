@@ -1,0 +1,201 @@
+//! Shared experiment harness: history generation, knowledge-base
+//! construction, coordinator-driven optimizer bake-offs, and table
+//! rendering. Every figure regenerator (fig1–fig7) builds on this.
+
+use crate::coordinator::{Coordinator, CoordinatorConfig, OptimizerKind, TransferRequest};
+use crate::logs::generate::{generate, GenConfig};
+use crate::logs::record::TransferLog;
+use crate::offline::kmeans::NativeAssign;
+use crate::offline::knowledge::KnowledgeBase;
+use crate::offline::pipeline::{build, OfflineConfig};
+use crate::runtime::Backend;
+use crate::sim::dataset::{Dataset, SizeClass};
+use crate::sim::testbed::{Testbed, TestbedId};
+use crate::sim::traffic::{Period, DAY_S, HOUR_S};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Experiment scale knobs. `quick` keeps CI runtimes sane; the full
+/// setting reproduces the paper-scale sweeps.
+#[derive(Debug, Clone, Copy)]
+pub struct ExpConfig {
+    pub history_days: u64,
+    pub arrivals_per_hour: f64,
+    /// Test requests per (testbed, class, period) cell.
+    pub requests_per_cell: usize,
+    pub seed: u64,
+}
+
+impl ExpConfig {
+    pub fn quick() -> ExpConfig {
+        ExpConfig { history_days: 8, arrivals_per_hour: 30.0, requests_per_cell: 4, seed: 0xE0 }
+    }
+
+    pub fn full() -> ExpConfig {
+        ExpConfig { history_days: 21, arrivals_per_hour: 40.0, requests_per_cell: 10, seed: 0xE0 }
+    }
+}
+
+/// A prepared experiment world: combined history + knowledge base.
+pub struct World {
+    pub rows: Arc<Vec<TransferLog>>,
+    pub kb: Arc<KnowledgeBase>,
+    pub config: ExpConfig,
+}
+
+impl World {
+    /// Generate history on all three testbeds and run offline analysis
+    /// (PJRT backend when artifacts are available).
+    pub fn prepare(config: ExpConfig, backend: &mut Backend) -> World {
+        let mut rows = Vec::new();
+        for id in TestbedId::all() {
+            rows.extend(generate(
+                &Testbed::by_id(id),
+                &GenConfig {
+                    days: config.history_days,
+                    arrivals_per_hour: config.arrivals_per_hour,
+                    start_day: 0,
+                    seed: config.seed ^ id.name().len() as u64,
+                },
+            ));
+        }
+        let kb = backend.with_assign(|assign| {
+            build(&rows, &OfflineConfig::default(), assign).expect("offline build")
+        });
+        World { rows: Arc::new(rows), kb: Arc::new(kb), config }
+    }
+
+    pub fn coordinator(&self, workers: usize) -> Coordinator {
+        Coordinator::new(
+            self.kb.clone(),
+            self.rows.clone(),
+            CoordinatorConfig { workers, default_optimizer: OptimizerKind::Asm, seed: self.config.seed },
+        )
+    }
+}
+
+/// A submission time inside the requested period on the day *after* the
+/// history ends (test data never overlaps training data).
+pub fn submit_time(
+    testbed: &Testbed,
+    period: Period,
+    history_days: u64,
+    rng: &mut Rng,
+) -> f64 {
+    let day = history_days as f64 + 1.0;
+    for _ in 0..200 {
+        let t = day * DAY_S + rng.range_f64(0.0, 24.0) * HOUR_S;
+        if testbed.profile.period(t) == period {
+            return t;
+        }
+    }
+    day * DAY_S + 12.0 * HOUR_S
+}
+
+/// Build the request batch for one (testbed, class, period) cell: every
+/// optimizer sees the *same* datasets, times, and seeds.
+pub fn cell_requests(
+    world: &World,
+    coord: &Coordinator,
+    testbed_id: TestbedId,
+    class: SizeClass,
+    period: Period,
+    optimizer: OptimizerKind,
+) -> Vec<TransferRequest> {
+    let testbed = Testbed::by_id(testbed_id);
+    let mut rng = Rng::new(
+        world.config.seed
+            ^ (testbed_id.name().len() as u64) << 8
+            ^ (class.name().len() as u64) << 16
+            ^ (period.name().len() as u64) << 24,
+    );
+    (0..world.config.requests_per_cell)
+        .map(|i| {
+            let mut case_rng = rng.fork(i as u64);
+            let dataset = Dataset::sample(class, &mut case_rng);
+            let t_submit =
+                submit_time(&testbed, period, world.config.history_days, &mut case_rng);
+            TransferRequest {
+                id: coord.fresh_id(),
+                testbed: testbed_id,
+                dataset,
+                t_submit,
+                state_override: None,
+                optimizer: Some(optimizer),
+                // Identical seed across optimizers for the same case i.
+                seed: world.config.seed ^ (i as u64) << 32 ^ 0xCE11,
+            }
+        })
+        .collect()
+}
+
+/// Fixed-width table renderer.
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        self.rows.push(row);
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (c, cell) in row.iter().enumerate().take(cols) {
+                widths[c] = widths[c].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (cols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Convenience: a native-or-pjrt backend for experiment mains.
+pub fn default_backend() -> Backend {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Backend::auto(&dir)
+}
+
+/// Shared quick-flag parsing for bench/example mains.
+pub fn config_from_args() -> ExpConfig {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("DTOPT_QUICK").is_ok()
+        // `cargo bench` passes --bench; default benches to quick unless
+        // DTOPT_FULL is set.
+        && std::env::var("DTOPT_FULL").is_err();
+    if std::env::var("DTOPT_FULL").is_ok() {
+        ExpConfig::full()
+    } else if quick {
+        ExpConfig::quick()
+    } else {
+        ExpConfig::quick()
+    }
+}
+
+/// Also expose the NativeAssign for harnesses that want the reference.
+pub fn native_backend() -> NativeAssign {
+    NativeAssign
+}

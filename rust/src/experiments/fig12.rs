@@ -1,0 +1,116 @@
+//! Fig. 1 and Fig. 2 regenerators — the qualitative surface plots.
+//!
+//! Fig. 1: piecewise bicubic throughput surfaces over (cc, p) per
+//! file-size class (small surfaces are "more complex" than large).
+//! Fig. 2: the 1-D cubic-spline interpolation of throughput over
+//! pipelining for a small-file transfer.
+
+use super::common::Table;
+use crate::logs::generate::PARAM_KNOTS;
+use crate::offline::surface::{SurfaceModel, SurfaceStats};
+use crate::sim::dataset::{Dataset, SizeClass};
+use crate::sim::params::{Params, PP_LEVELS};
+use crate::sim::testbed::Testbed;
+use crate::sim::transfer::NetState;
+use crate::util::rng::Rng;
+
+fn class_dataset(class: SizeClass) -> Dataset {
+    match class {
+        SizeClass::Small => Dataset::new(5_000, 2.0),
+        SizeClass::Medium => Dataset::new(400, 32.0),
+        SizeClass::Large => Dataset::new(50, 256.0),
+    }
+}
+
+fn build_model(class: SizeClass, load: f64, reps: usize, seed: u64) -> SurfaceModel {
+    let tb = Testbed::xsede();
+    let dataset = class_dataset(class);
+    let state = NetState::with_load(load);
+    let mut rng = Rng::new(seed);
+    let mut stats = SurfaceStats::new();
+    for &p in &PARAM_KNOTS {
+        for &cc in &PARAM_KNOTS {
+            for &pp in &PP_LEVELS {
+                for _ in 0..reps.max(1) {
+                    let out = tb.path.transfer(
+                        &dataset,
+                        &Params::new(cc, p, pp),
+                        &state,
+                        Some(&mut rng),
+                    );
+                    stats.push(p, cc, pp, out.steady_mbps);
+                }
+            }
+        }
+    }
+    SurfaceModel::build(&stats, load).expect("surface build")
+}
+
+/// Fig. 1: the f(p, cc) surface of each class, sampled on the knot grid
+/// (CSV-ish rows for plotting).
+pub fn run_fig1(reps: usize, seed: u64) -> String {
+    let mut out = String::new();
+    for class in SizeClass::all() {
+        let model = build_model(class, 0.2, reps, seed ^ class.name().len() as u64);
+        out.push_str(&format!(
+            "# fig1 surface, class={} (argmax {} @ {:.0} Mbps)\n",
+            class.name(),
+            model.argmax.0,
+            model.argmax.1
+        ));
+        let mut table = Table::new(&["p\\cc", "1", "2", "3", "4", "6", "8", "12", "16"]);
+        for &p in &PARAM_KNOTS {
+            let mut row = vec![p.to_string()];
+            for &cc in &PARAM_KNOTS {
+                row.push(format!("{:.0}", model.surface.eval(p as f64, cc as f64)));
+            }
+            table.push(row);
+        }
+        out.push_str(&table.render());
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig. 2: throughput vs pipelining for a small-file transfer — dense
+/// spline interpolation between the observed pp levels.
+pub fn run_fig2(reps: usize, seed: u64) -> String {
+    let model = build_model(SizeClass::Small, 0.2, reps, seed);
+    let peak = model.predict(&model.argmax.0);
+    let mut table = Table::new(&["pp", "interpolated_th_mbps"]);
+    let mut pp = 1.0f64;
+    while pp <= 32.0 {
+        let (popt, ccopt) = (model.argmax.0.p, model.argmax.0.cc);
+        let th = model.surface.eval(popt as f64, ccopt as f64)
+            * model.pp_curve.eval(pp).clamp(0.0, 1.5);
+        table.push(vec![format!("{pp:.0}"), format!("{th:.0}")]);
+        pp *= 2.0;
+    }
+    format!("# fig2 g(pp) spline, small files (peak {:.0} Mbps)\n{}", peak, table.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_surfaces_have_class_structure() {
+        let small = build_model(SizeClass::Small, 0.2, 1, 3);
+        let large = build_model(SizeClass::Large, 0.2, 1, 4);
+        // Small files need pipelining at their argmax; large don't.
+        assert!(small.argmax.0.pp > large.argmax.0.pp);
+        let text = run_fig1(1, 5);
+        assert!(text.contains("class=small"));
+        assert!(text.contains("class=large"));
+    }
+
+    #[test]
+    fn fig2_pipelining_monotone_up_for_small_files() {
+        let model = build_model(SizeClass::Small, 0.2, 1, 6);
+        let s1 = model.pp_curve.eval(1.0);
+        let s16 = model.pp_curve.eval(16.0);
+        assert!(s16 > s1, "pipelining factor must rise for small files");
+        let text = run_fig2(1, 7);
+        assert!(text.lines().count() > 5);
+    }
+}

@@ -1,0 +1,183 @@
+//! Fig. 3 regenerators.
+//!
+//! (a) The Gaussian spread of throughput under repeated identical
+//!     transfers at the same external load (Eq. 15–17).
+//! (b) Accuracy of the three surface-construction methods — quadratic
+//!     regression, cubic regression, piecewise cubic spline — on
+//!     held-out observations. The paper: spline ≈85%, clearly above
+//!     both regressions.
+
+use super::common::Table;
+use crate::logs::generate::PARAM_KNOTS;
+use crate::math::polyfit::{PolyDegree, PolySurface};
+use crate::offline::surface::{SurfaceModel, SurfaceStats};
+use crate::sim::dataset::Dataset;
+use crate::sim::params::{Params, PP_LEVELS};
+use crate::sim::testbed::Testbed;
+use crate::sim::transfer::NetState;
+use crate::util::rng::Rng;
+use crate::util::stats::{gaussian_pdf, mean, r_squared, std_pop};
+
+/// Fig 3a: sampled throughputs + fitted Gaussian for one configuration.
+pub struct Fig3aResult {
+    pub samples: Vec<f64>,
+    pub mu: f64,
+    pub sigma: f64,
+    /// (bin_center, empirical_density, gaussian_density) histogram rows.
+    pub histogram: Vec<(f64, f64, f64)>,
+}
+
+pub fn run_3a(reps: usize, seed: u64) -> Fig3aResult {
+    let tb = Testbed::xsede();
+    let dataset = Dataset::new(100, 64.0);
+    let params = Params::new(8, 4, 4);
+    let state = NetState::with_load(0.3);
+    let mut rng = Rng::new(seed);
+    let samples: Vec<f64> = (0..reps.max(16))
+        .map(|_| tb.path.transfer(&dataset, &params, &state, Some(&mut rng)).steady_mbps)
+        .collect();
+    let mu = mean(&samples);
+    let sigma = std_pop(&samples);
+    let lo = mu - 3.5 * sigma;
+    let hi = mu + 3.5 * sigma;
+    let bins = 15usize;
+    let width = (hi - lo) / bins as f64;
+    let mut histogram = Vec::with_capacity(bins);
+    for b in 0..bins {
+        let center = lo + (b as f64 + 0.5) * width;
+        let count = samples
+            .iter()
+            .filter(|&&s| s >= lo + b as f64 * width && s < lo + (b as f64 + 1.0) * width)
+            .count();
+        let empirical = count as f64 / (samples.len() as f64 * width);
+        histogram.push((center, empirical, gaussian_pdf(center, mu, sigma)));
+    }
+    Fig3aResult { samples, mu, sigma, histogram }
+}
+
+pub fn render_3a(r: &Fig3aResult) -> String {
+    let mut out = format!(
+        "repeated transfers under identical load: n={} μ={:.0} Mbps σ={:.0} Mbps\n",
+        r.samples.len(),
+        r.mu,
+        r.sigma
+    );
+    let mut table = Table::new(&["th_mbps", "empirical_pdf", "gaussian_pdf"]);
+    for (c, e, g) in &r.histogram {
+        table.push(vec![format!("{c:.0}"), format!("{e:.2e}"), format!("{g:.2e}")]);
+    }
+    out.push_str(&table.render());
+    out
+}
+
+/// Fig 3b: per-model held-out accuracy (R² × 100, the paper's "%").
+pub struct Fig3bResult {
+    pub quadratic: f64,
+    pub cubic: f64,
+    pub spline: f64,
+}
+
+/// Sweep the simulator over the knot grid (train: `train_reps` noisy
+/// reps per cell; test: held-out noisy draws including off-knot
+/// parameter values) and score each surface model.
+pub fn run_3b(train_reps: usize, test_points: usize, seed: u64) -> Fig3bResult {
+    let tb = Testbed::xsede();
+    let dataset = Dataset::new(100, 64.0);
+    let state = NetState::with_load(0.25);
+    let mut rng = Rng::new(seed);
+
+    // Training sweep.
+    let mut stats = SurfaceStats::new();
+    let mut train_pts: Vec<[f64; 3]> = Vec::new();
+    let mut train_th: Vec<f64> = Vec::new();
+    for &p in &PARAM_KNOTS {
+        for &cc in &PARAM_KNOTS {
+            for &pp in &PP_LEVELS {
+                for _ in 0..train_reps.max(1) {
+                    let out = tb.path.transfer(
+                        &dataset,
+                        &Params::new(cc, p, pp),
+                        &state,
+                        Some(&mut rng),
+                    );
+                    stats.push(p, cc, pp, out.steady_mbps);
+                    train_pts.push([p as f64, cc as f64, pp as f64]);
+                    train_th.push(out.steady_mbps);
+                }
+            }
+        }
+    }
+    let spline_model = SurfaceModel::build(&stats, 0.25).expect("spline build");
+    let quad = PolySurface::fit(PolyDegree::Quadratic, &train_pts, &train_th).expect("quad fit");
+    let cubic = PolySurface::fit(PolyDegree::Cubic, &train_pts, &train_th).expect("cubic fit");
+
+    // Held-out evaluation at arbitrary integer parameters.
+    let mut observed = Vec::new();
+    let mut pred_q = Vec::new();
+    let mut pred_c = Vec::new();
+    let mut pred_s = Vec::new();
+    for _ in 0..test_points.max(32) {
+        let params = Params::new(
+            rng.range_u(1, 16) as u32,
+            rng.range_u(1, 16) as u32,
+            PP_LEVELS[rng.index(PP_LEVELS.len())],
+        );
+        let out = tb.path.transfer(&dataset, &params, &state, Some(&mut rng));
+        observed.push(out.steady_mbps);
+        pred_q.push(quad.eval(params.p as f64, params.cc as f64, params.pp as f64));
+        pred_c.push(cubic.eval(params.p as f64, params.cc as f64, params.pp as f64));
+        pred_s.push(spline_model.predict(&params));
+    }
+    Fig3bResult {
+        quadratic: 100.0 * r_squared(&observed, &pred_q).max(0.0),
+        cubic: 100.0 * r_squared(&observed, &pred_c).max(0.0),
+        spline: 100.0 * r_squared(&observed, &pred_s).max(0.0),
+    }
+}
+
+pub fn render_3b(r: &Fig3bResult) -> String {
+    let mut table = Table::new(&["surface_model", "heldout_accuracy_%"]);
+    table.push(vec!["quadratic".into(), format!("{:.1}", r.quadratic)]);
+    table.push(vec!["cubic".into(), format!("{:.1}", r.cubic)]);
+    table.push(vec!["piecewise_cubic_spline".into(), format!("{:.1}", r.spline)]);
+    table.render()
+}
+
+pub fn headline_checks_3b(r: &Fig3bResult) -> Vec<(String, bool)> {
+    vec![
+        (
+            format!(
+                "spline ({:.1}%) > cubic ({:.1}%) > quadratic ({:.1}%) (paper shape)",
+                r.spline, r.cubic, r.quadratic
+            ),
+            r.spline > r.cubic && r.cubic >= r.quadratic - 2.0,
+        ),
+        (format!("spline ≈85%+ (paper: ~85%)"), r.spline > 75.0),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3a_gaussian_fits() {
+        let r = run_3a(300, 5);
+        assert!(r.sigma > 0.0);
+        // ~95% of samples inside ±2σ.
+        let inside = r
+            .samples
+            .iter()
+            .filter(|&&s| (s - r.mu).abs() <= 2.0 * r.sigma)
+            .count();
+        assert!(inside as f64 / r.samples.len() as f64 > 0.9);
+    }
+
+    #[test]
+    fn fig3b_spline_dominates() {
+        let r = run_3b(2, 64, 9);
+        for (desc, ok) in headline_checks_3b(&r) {
+            assert!(ok, "failed: {desc}");
+        }
+    }
+}

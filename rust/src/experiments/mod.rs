@@ -1,0 +1,12 @@
+//! Experiment harnesses regenerating every table and figure of the
+//! paper's evaluation (see DESIGN.md §Experiment index): Fig. 1–2
+//! (surfaces), Fig. 3 (confidence + model accuracy), Fig. 5 (the
+//! headline bake-off), Fig. 6 (convergence), Fig. 7 (staleness).
+//! Table 1 is `sim::testbed::Testbed::table1()`.
+
+pub mod common;
+pub mod fig12;
+pub mod fig3;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;

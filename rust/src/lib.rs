@@ -1,0 +1,34 @@
+//! # dtopt — Data Transfer Optimization via Offline Knowledge Discovery
+//! # and Adaptive Real-time Sampling
+//!
+//! A reproduction of Nine et al. (2017). The library is organized as a
+//! three-layer system:
+//!
+//! * **L3 (this crate)** — the coordinator: transfer service, the online
+//!   Adaptive Sampling Module, six baseline optimizers, the offline
+//!   knowledge-discovery pipeline, and the simulated network/testbed
+//!   substrate that stands in for the paper's XSEDE/DIDCLAB testbeds.
+//! * **L2 (python/compile/model.py, build-time)** — JAX compute graphs
+//!   for the offline-analysis hot spots (k-means Lloyd steps, batched
+//!   bicubic surface evaluation), AOT-lowered to HLO text artifacts.
+//! * **L1 (python/compile/kernels/, build-time)** — Pallas kernels for
+//!   the innermost tiles (pairwise distances, bicubic patch Horner
+//!   evaluation), lowered inside the L2 graphs.
+//!
+//! `crate::runtime` loads the artifacts through the PJRT C API (`xla`
+//! crate) so the rust binary is self-contained at run time — python
+//! never executes on the request path.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod logs;
+pub mod math;
+pub mod offline;
+pub mod online;
+pub mod runtime;
+pub mod baselines;
+pub mod coordinator;
+pub mod experiments;
+pub mod sim;
+pub mod util;

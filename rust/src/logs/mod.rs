@@ -1,0 +1,10 @@
+//! Transfer-log layer: record schema, partitioned JSONL store, and the
+//! synthetic production-log generator.
+
+pub mod generate;
+pub mod record;
+pub mod store;
+
+pub use generate::{generate, GenConfig, PARAM_KNOTS};
+pub use record::TransferLog;
+pub use store::LogStore;

@@ -1,0 +1,155 @@
+//! Transfer-log record format — the schema the offline analysis mines.
+//!
+//! Mirrors what production Globus/GridFTP logs carry (paper §4): the
+//! endpoint pair and its network characteristics, the dataset shape, the
+//! parameter triple used, the achieved throughput, and aggregate rates
+//! of the known contending transfers (paper Fig. 4's five categories).
+
+use crate::sim::params::Params;
+use crate::sim::traffic::Contention;
+use crate::util::json::{Json, JsonError};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransferLog {
+    pub id: u64,
+    /// Simulation timestamp (seconds since epoch 0).
+    pub t_start: f64,
+    /// Endpoint-pair identifier (testbed name in the simulator).
+    pub pair: String,
+    pub rtt_ms: f64,
+    pub bandwidth_mbps: f64,
+    pub tcp_buffer_mb: f64,
+    pub disk_mbps: f64,
+    pub avg_file_mb: f64,
+    pub num_files: u64,
+    pub cc: u32,
+    pub p: u32,
+    pub pp: u32,
+    pub throughput_mbps: f64,
+    pub duration_s: f64,
+    /// Aggregate Mbps of known contending transfers by category
+    /// (same_pair, src_out, src_in, dst_out, dst_in).
+    pub contending_mbps: [f64; 5],
+    pub contending_streams: u32,
+}
+
+impl TransferLog {
+    pub fn params(&self) -> Params {
+        Params::new(self.cc, self.p, self.pp)
+    }
+
+    pub fn contention(&self) -> Contention {
+        Contention { rate_mbps: self.contending_mbps, streams: self.contending_streams }
+    }
+
+    /// External-load intensity heuristic, paper Eq. 20: the fraction of
+    /// the pipe not accounted for by observed outgoing traffic. With
+    /// `th_out` = our transfer plus known path-sharing contenders, high
+    /// intensity ⇔ much of the link was consumed by uncharted traffic
+    /// (or the transfer was parameter-limited — the clustering stage
+    /// separates those regimes by dataset/parameter similarity).
+    pub fn load_intensity(&self) -> f64 {
+        let th_out = self.throughput_mbps + self.contention().total_path_mbps();
+        ((self.bandwidth_mbps - th_out) / self.bandwidth_mbps).clamp(0.0, 1.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("id", Json::Num(self.id as f64))
+            .set("t", Json::Num(self.t_start))
+            .set("pair", Json::Str(self.pair.clone()))
+            .set("rtt_ms", Json::Num(self.rtt_ms))
+            .set("bw_mbps", Json::Num(self.bandwidth_mbps))
+            .set("buf_mb", Json::Num(self.tcp_buffer_mb))
+            .set("disk_mbps", Json::Num(self.disk_mbps))
+            .set("avg_file_mb", Json::Num(self.avg_file_mb))
+            .set("num_files", Json::Num(self.num_files as f64))
+            .set("cc", Json::Num(self.cc as f64))
+            .set("p", Json::Num(self.p as f64))
+            .set("pp", Json::Num(self.pp as f64))
+            .set("th_mbps", Json::Num(self.throughput_mbps))
+            .set("dur_s", Json::Num(self.duration_s))
+            .set("contend_mbps", Json::from_f64_slice(&self.contending_mbps))
+            .set("contend_streams", Json::Num(self.contending_streams as f64));
+        o
+    }
+
+    pub fn from_json(v: &Json) -> Result<TransferLog, JsonError> {
+        let cm = v.req_vec_f64("contend_mbps")?;
+        let mut contending_mbps = [0.0; 5];
+        for (i, x) in cm.iter().take(5).enumerate() {
+            contending_mbps[i] = *x;
+        }
+        Ok(TransferLog {
+            id: v.req_f64("id")? as u64,
+            t_start: v.req_f64("t")?,
+            pair: v.req_str("pair")?.to_string(),
+            rtt_ms: v.req_f64("rtt_ms")?,
+            bandwidth_mbps: v.req_f64("bw_mbps")?,
+            tcp_buffer_mb: v.req_f64("buf_mb")?,
+            disk_mbps: v.req_f64("disk_mbps")?,
+            avg_file_mb: v.req_f64("avg_file_mb")?,
+            num_files: v.req_f64("num_files")? as u64,
+            cc: v.req_f64("cc")? as u32,
+            p: v.req_f64("p")? as u32,
+            pp: v.req_f64("pp")? as u32,
+            throughput_mbps: v.req_f64("th_mbps")?,
+            duration_s: v.req_f64("dur_s")?,
+            contending_mbps,
+            contending_streams: v.req_f64("contend_streams")? as u32,
+        })
+    }
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+
+    pub fn sample_log() -> TransferLog {
+        TransferLog {
+            id: 42,
+            t_start: 1234.5,
+            pair: "xsede".into(),
+            rtt_ms: 40.0,
+            bandwidth_mbps: 10_000.0,
+            tcp_buffer_mb: 48.0,
+            disk_mbps: 1_200.0,
+            avg_file_mb: 128.0,
+            num_files: 100,
+            cc: 4,
+            p: 8,
+            pp: 2,
+            throughput_mbps: 4_321.0,
+            duration_s: 237.0,
+            contending_mbps: [100.0, 50.0, 0.0, 0.0, 25.0],
+            contending_streams: 12,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let log = sample_log();
+        let text = log.to_json().to_string_compact();
+        let back = TransferLog::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, log);
+    }
+
+    #[test]
+    fn load_intensity_bounds_and_monotonicity() {
+        let mut log = sample_log();
+        let base = log.load_intensity();
+        assert!((0.0..=1.0).contains(&base));
+        // Higher achieved throughput ⇒ lower inferred external load.
+        log.throughput_mbps = 9_000.0;
+        assert!(log.load_intensity() < base);
+        // Saturated link from our own transfer ⇒ intensity ~0.
+        log.throughput_mbps = 10_000.0;
+        assert_eq!(log.load_intensity(), 0.0);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_fields() {
+        let v = Json::parse("{\"id\":1}").unwrap();
+        assert!(TransferLog::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,160 @@
+//! JSONL log store with per-day partitions.
+//!
+//! The paper's offline analysis is *additive*: "when new logs are
+//! generated for a certain period of time, we do not need to combine it
+//! with previous logs". The store mirrors that by partitioning rows into
+//! `day_<n>.jsonl` files so the pipeline can consume exactly the
+//! partitions that are new since the last analysis.
+
+use super::record::TransferLog;
+use crate::sim::traffic::DAY_S;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+
+/// Directory-backed partitioned log store.
+pub struct LogStore {
+    pub dir: PathBuf,
+}
+
+impl LogStore {
+    pub fn open(dir: impl AsRef<Path>) -> Result<LogStore> {
+        fs::create_dir_all(dir.as_ref())
+            .with_context(|| format!("creating log dir {:?}", dir.as_ref()))?;
+        Ok(LogStore { dir: dir.as_ref().to_path_buf() })
+    }
+
+    fn partition_path(&self, day: u64) -> PathBuf {
+        self.dir.join(format!("day_{day:05}.jsonl"))
+    }
+
+    /// Append rows, routing each to its day partition.
+    pub fn append(&self, rows: &[TransferLog]) -> Result<()> {
+        let mut by_day: BTreeMap<u64, Vec<&TransferLog>> = BTreeMap::new();
+        for row in rows {
+            by_day.entry((row.t_start / DAY_S).floor() as u64).or_default().push(row);
+        }
+        for (day, day_rows) in by_day {
+            let path = self.partition_path(day);
+            let mut file = fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+                .with_context(|| format!("opening {path:?}"))?;
+            let mut buf = String::new();
+            for row in day_rows {
+                buf.push_str(&row.to_json().to_string_compact());
+                buf.push('\n');
+            }
+            file.write_all(buf.as_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Day indices present in the store.
+    pub fn days(&self) -> Result<Vec<u64>> {
+        let mut days = Vec::new();
+        for entry in fs::read_dir(&self.dir)? {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(rest) = name.strip_prefix("day_").and_then(|r| r.strip_suffix(".jsonl")) {
+                if let Ok(d) = rest.parse::<u64>() {
+                    days.push(d);
+                }
+            }
+        }
+        days.sort_unstable();
+        Ok(days)
+    }
+
+    /// Read one partition.
+    pub fn read_day(&self, day: u64) -> Result<Vec<TransferLog>> {
+        let path = self.partition_path(day);
+        let file = fs::File::open(&path).with_context(|| format!("opening {path:?}"))?;
+        let mut rows = Vec::new();
+        for (lineno, line) in BufReader::new(file).lines().enumerate() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = Json::parse(&line)
+                .map_err(|e| anyhow::anyhow!("{path:?}:{}: {e}", lineno + 1))?;
+            rows.push(
+                TransferLog::from_json(&v)
+                    .map_err(|e| anyhow::anyhow!("{path:?}:{}: {e}", lineno + 1))?,
+            );
+        }
+        Ok(rows)
+    }
+
+    /// Read every partition in `[from_day, to_day)`.
+    pub fn read_range(&self, from_day: u64, to_day: u64) -> Result<Vec<TransferLog>> {
+        let mut rows = Vec::new();
+        for day in self.days()? {
+            if day >= from_day && day < to_day {
+                rows.extend(self.read_day(day)?);
+            }
+        }
+        Ok(rows)
+    }
+
+    /// Read everything.
+    pub fn read_all(&self) -> Result<Vec<TransferLog>> {
+        self.read_range(0, u64::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logs::record::tests::sample_log;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dtopt_store_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn roundtrip_across_partitions() {
+        let dir = tmpdir("rt");
+        let store = LogStore::open(&dir).unwrap();
+        let mut a = sample_log();
+        a.id = 1;
+        a.t_start = 10.0; // day 0
+        let mut b = sample_log();
+        b.id = 2;
+        b.t_start = DAY_S * 3.5; // day 3
+        store.append(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(store.days().unwrap(), vec![0, 3]);
+        assert_eq!(store.read_day(0).unwrap(), vec![a.clone()]);
+        assert_eq!(store.read_day(3).unwrap(), vec![b.clone()]);
+        assert_eq!(store.read_all().unwrap().len(), 2);
+        assert_eq!(store.read_range(1, 4).unwrap(), vec![b]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn append_is_additive() {
+        let dir = tmpdir("add");
+        let store = LogStore::open(&dir).unwrap();
+        let mut row = sample_log();
+        row.t_start = 100.0;
+        store.append(&[row.clone()]).unwrap();
+        store.append(&[row.clone()]).unwrap();
+        assert_eq!(store.read_day(0).unwrap().len(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_day_errors() {
+        let dir = tmpdir("missing");
+        let store = LogStore::open(&dir).unwrap();
+        assert!(store.read_day(99).is_err());
+        assert!(store.days().unwrap().is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

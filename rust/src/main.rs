@@ -1,0 +1,387 @@
+//! dtopt CLI — the leader entrypoint.
+//!
+//! Subcommands (hand-rolled parser; clap is unreachable offline):
+//!   testbed                      print Table 1
+//!   gen-logs   --testbed T --days N --out DIR [--seed S] [--rate R]
+//!   offline    --logs DIR --out KB.json [--backend native|pjrt|auto]
+//!   transfer   --testbed T --files N --avg-mb M [--optimizer O]
+//!              [--kb KB.json] [--load L] [--seed S]
+//!   serve      [--requests N] [--workers W] [--optimizer O]
+//!   experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|all [--quick|--full]
+//!   selftest                     quick end-to-end sanity run
+
+use anyhow::{bail, Context, Result};
+use dtopt::coordinator::{Coordinator, CoordinatorConfig, OptimizerKind, TransferRequest};
+use dtopt::experiments::common::{default_backend, ExpConfig, World};
+use dtopt::experiments::{fig12, fig3, fig5, fig6, fig7};
+use dtopt::logs::generate::{generate, GenConfig};
+use dtopt::logs::store::LogStore;
+use dtopt::offline::pipeline::{build, OfflineConfig};
+use dtopt::sim::dataset::Dataset;
+use dtopt::sim::testbed::{Testbed, TestbedId};
+use dtopt::sim::traffic::Contention;
+use dtopt::sim::transfer::NetState;
+use dtopt::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parse `--key value` and `--flag` style options.
+struct Opts {
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+fn parse_opts(args: &[String]) -> Opts {
+    let mut values = HashMap::new();
+    let mut flags = Vec::new();
+    let mut positional = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                values.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(key.to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Opts { values, flags, positional }
+}
+
+impl Opts {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer")),
+        }
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a number")),
+        }
+    }
+
+    fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let opts = parse_opts(&args[1..]);
+    match cmd.as_str() {
+        "testbed" => {
+            print!("{}", Testbed::table1());
+            Ok(())
+        }
+        "gen-logs" => cmd_gen_logs(&opts),
+        "offline" => cmd_offline(&opts),
+        "transfer" => cmd_transfer(&opts),
+        "serve" => cmd_serve(&opts),
+        "experiment" => cmd_experiment(&opts),
+        "selftest" => cmd_selftest(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `dtopt help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "dtopt — data transfer optimization via offline knowledge discovery\n\
+         and adaptive real-time sampling (Nine et al., 2017 reproduction)\n\n\
+         commands:\n  \
+         testbed                              print Table 1\n  \
+         gen-logs --testbed T --days N --out DIR [--rate R] [--seed S]\n  \
+         offline --logs DIR --out KB.json [--backend native|pjrt|auto]\n  \
+         transfer --testbed T --files N --avg-mb M [--optimizer O] [--kb F] [--load L]\n  \
+         serve [--requests N] [--workers W] [--optimizer O]\n  \
+         experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|all [--quick|--full]\n  \
+         selftest"
+    );
+}
+
+fn parse_testbed(opts: &Opts) -> Result<TestbedId> {
+    let name = opts.get("testbed").unwrap_or("xsede");
+    TestbedId::parse(name).with_context(|| format!("unknown testbed '{name}'"))
+}
+
+fn cmd_gen_logs(opts: &Opts) -> Result<()> {
+    let testbed = Testbed::by_id(parse_testbed(opts)?);
+    let days = opts.get_u64("days", 7)?;
+    let rate = opts.get_f64("rate", 40.0)?;
+    let seed = opts.get_u64("seed", 0xC0FFEE)?;
+    let out = opts.get("out").context("--out DIR required")?;
+    let rows = generate(
+        &testbed,
+        &GenConfig { days, arrivals_per_hour: rate, start_day: 0, seed },
+    );
+    let store = LogStore::open(out)?;
+    store.append(&rows)?;
+    println!("wrote {} log rows across {} day partitions to {}", rows.len(), days, out);
+    Ok(())
+}
+
+fn cmd_offline(opts: &Opts) -> Result<()> {
+    let logs_dir = opts.get("logs").context("--logs DIR required")?;
+    let out = opts.get("out").unwrap_or("kb.json");
+    let store = LogStore::open(logs_dir)?;
+    let rows = store.read_all()?;
+    anyhow::ensure!(!rows.is_empty(), "no log rows in {logs_dir}");
+    let mut backend = match opts.get("backend").unwrap_or("auto") {
+        "native" => dtopt::runtime::Backend::Native,
+        "pjrt" => dtopt::runtime::Backend::pjrt(std::path::Path::new("artifacts"))?,
+        _ => default_backend(),
+    };
+    let start = std::time::Instant::now();
+    let kb = backend.with_assign(|assign| build(&rows, &OfflineConfig::default(), assign))?;
+    let elapsed = start.elapsed();
+    kb.save(std::path::Path::new(out))?;
+    println!(
+        "offline analysis ({} backend): {} rows → {} clusters, {} surfaces in {:.2?}; saved {out}",
+        backend.name(),
+        rows.len(),
+        kb.clusters.len(),
+        kb.clusters.iter().map(|c| c.surfaces.len()).sum::<usize>(),
+        elapsed
+    );
+    for (k, score) in &kb.k_scores {
+        println!("  CH(k={k}) = {score:.1}");
+    }
+    Ok(())
+}
+
+fn cmd_transfer(opts: &Opts) -> Result<()> {
+    let testbed_id = parse_testbed(opts)?;
+    let testbed = Testbed::by_id(testbed_id);
+    let files = opts.get_u64("files", 100)?;
+    let avg_mb = opts.get_f64("avg-mb", 64.0)?;
+    let seed = opts.get_u64("seed", 7)?;
+    let load = opts.get_f64("load", 0.3)?;
+    let optimizer = match opts.get("optimizer") {
+        None => OptimizerKind::Asm,
+        Some(o) => OptimizerKind::parse(o).with_context(|| format!("unknown optimizer '{o}'"))?,
+    };
+    // Knowledge base: load from --kb, else build from a quick history.
+    let kb = match opts.get("kb") {
+        Some(path) => dtopt::offline::knowledge::KnowledgeBase::load(std::path::Path::new(path))?,
+        None => {
+            eprintln!("note: no --kb given; building a quick in-memory history first");
+            let rows = generate(
+                &testbed,
+                &GenConfig { days: 5, arrivals_per_hour: 30.0, start_day: 0, seed: seed ^ 1 },
+            );
+            build(&rows, &OfflineConfig::default(), &mut dtopt::offline::kmeans::NativeAssign)?
+        }
+    };
+    let history = generate(
+        &testbed,
+        &GenConfig { days: 3, arrivals_per_hour: 20.0, start_day: 0, seed: seed ^ 2 },
+    );
+    let coord = Coordinator::new(
+        Arc::new(kb),
+        Arc::new(history),
+        CoordinatorConfig { workers: 1, default_optimizer: optimizer, seed },
+    );
+    let mut rng = Rng::new(seed);
+    let contention = Contention::sample(&mut rng, testbed.path.link.bandwidth_mbps, load);
+    let request = TransferRequest {
+        id: coord.fresh_id(),
+        testbed: testbed_id,
+        dataset: Dataset::new(files, avg_mb),
+        t_submit: 0.0,
+        state_override: Some(NetState { external_load: load, contention }),
+        optimizer: Some(optimizer),
+        seed,
+    };
+    let response = &coord.run_batch(vec![request])[0];
+    let r = &response.report;
+    println!(
+        "{}: {:.0} MB in {:.1}s → {:.0} Mbps end-to-end (steady {:.0}, optimal {:.0}, {} samples, θ = {})",
+        r.optimizer,
+        r.total_mb(),
+        r.total_s(),
+        r.achieved_mbps(),
+        r.final_steady_mbps(),
+        response.optimal_mbps,
+        r.sample_transfers(),
+        r.final_params,
+    );
+    for (i, phase) in r.phases.iter().enumerate() {
+        println!(
+            "  phase {i}: {} {:>9.1} MB {:>7.2}s steady {:>6.0} Mbps {}",
+            if phase.is_sample { "sample" } else { "bulk  " },
+            phase.mb,
+            phase.seconds,
+            phase.steady_mbps,
+            phase.params
+        );
+    }
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_serve(opts: &Opts) -> Result<()> {
+    let n = opts.get_u64("requests", 24)? as usize;
+    let workers = opts.get_u64("workers", 4)? as usize;
+    let optimizer = match opts.get("optimizer") {
+        None => None,
+        Some(o) => Some(OptimizerKind::parse(o).with_context(|| format!("unknown '{o}'"))?),
+    };
+    let mut backend = default_backend();
+    let world = World::prepare(ExpConfig::quick(), &mut backend);
+    let coord = world.coordinator(workers);
+    let mut rng = Rng::new(world.config.seed);
+    let requests: Vec<TransferRequest> = (0..n)
+        .map(|i| {
+            let tb = TestbedId::all()[rng.index(3)];
+            let class = dtopt::sim::dataset::SizeClass::all()[rng.index(3)];
+            TransferRequest {
+                id: coord.fresh_id(),
+                testbed: tb,
+                dataset: Dataset::sample(class, &mut rng),
+                t_submit: (world.config.history_days + 1) as f64 * 86_400.0
+                    + rng.range_f64(0.0, 86_400.0),
+                state_override: None,
+                optimizer,
+                seed: 5_000 + i as u64,
+            }
+        })
+        .collect();
+    let start = std::time::Instant::now();
+    let responses = coord.run_batch(requests);
+    let wall = start.elapsed();
+    println!(
+        "served {} requests on {} workers in {wall:.2?} ({:.1} req/s wall)\n",
+        responses.len(),
+        workers,
+        responses.len() as f64 / wall.as_secs_f64()
+    );
+    print!("{}", coord.metrics.render());
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_experiment(opts: &Opts) -> Result<()> {
+    let which = opts
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .context("experiment name required: fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|all")?;
+    let config = if opts.has("full") { ExpConfig::full() } else { ExpConfig::quick() };
+    let reps = if opts.has("full") { 4 } else { 2 };
+    let needs_world = matches!(which, "fig5" | "fig6" | "fig7" | "all");
+    let world = if needs_world {
+        let mut backend = default_backend();
+        eprintln!("preparing world ({} backend)...", backend.name());
+        Some(World::prepare(config, &mut backend))
+    } else {
+        None
+    };
+    let run_one = |name: &str, world: Option<&World>| -> Result<()> {
+        match name {
+            "fig1" => print!("{}", fig12::run_fig1(reps, 11)),
+            "fig2" => print!("{}", fig12::run_fig2(reps, 12)),
+            "fig3a" => print!("{}", fig3::render_3a(&fig3::run_3a(300, 13))),
+            "fig3b" => {
+                let r = fig3::run_3b(reps, 128, 14);
+                print!("{}", fig3::render_3b(&r));
+                for (desc, ok) in fig3::headline_checks_3b(&r) {
+                    println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
+                }
+            }
+            "fig5" => {
+                let r = fig5::run(world.unwrap(), 4);
+                print!("{}", fig5::render(&r));
+                for (desc, ok) in fig5::headline_checks(&r) {
+                    println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
+                }
+            }
+            "fig6" => {
+                let r = fig6::run(world.unwrap());
+                print!("{}", fig6::render(&r));
+                for (desc, ok) in fig6::headline_checks(&r) {
+                    println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
+                }
+            }
+            "fig7" => {
+                let eval_days = if opts.has("full") { 20 } else { 6 };
+                let periods: &[u64] = if opts.has("full") { &[1, 2, 5, 10] } else { &[1, 3] };
+                let r = fig7::run(world.unwrap(), eval_days, periods);
+                print!("{}", fig7::render(&r));
+                for (desc, ok) in fig7::headline_checks(&r) {
+                    println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
+                }
+            }
+            other => bail!("unknown experiment '{other}'"),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for name in ["fig1", "fig2", "fig3a", "fig3b", "fig5", "fig6", "fig7"] {
+            println!("==================== {name} ====================");
+            run_one(name, world.as_ref())?;
+        }
+        Ok(())
+    } else {
+        run_one(which, world.as_ref())
+    }
+}
+
+fn cmd_selftest() -> Result<()> {
+    println!("{}", Testbed::table1());
+    let mut backend = default_backend();
+    println!("backend: {}", backend.name());
+    let world = World::prepare(ExpConfig::quick(), &mut backend);
+    println!(
+        "history: {} rows → {} clusters",
+        world.rows.len(),
+        world.kb.clusters.len()
+    );
+    let coord = world.coordinator(2);
+    let req = TransferRequest {
+        id: coord.fresh_id(),
+        testbed: TestbedId::Xsede,
+        dataset: Dataset::new(100, 64.0),
+        t_submit: 6.5 * 86_400.0,
+        state_override: None,
+        optimizer: Some(OptimizerKind::Asm),
+        seed: 1,
+    };
+    let resp = &coord.run_batch(vec![req])[0];
+    println!(
+        "ASM selftest: {:.0} Mbps achieved vs {:.0} optimal ({} samples)",
+        resp.report.achieved_mbps(),
+        resp.optimal_mbps,
+        resp.report.sample_transfers()
+    );
+    coord.shutdown();
+    println!("selftest OK");
+    Ok(())
+}

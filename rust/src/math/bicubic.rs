@@ -1,0 +1,432 @@
+//! Bicubic spline surface interpolation on a rectangular grid — the
+//! paper's 2-D extension of Eq. 10–14 used to model `th = f(p, cc)` per
+//! cluster/load-bin (its Fig. 1 surfaces).
+//!
+//! Construction: 1-D natural cubic splines along both grid axes give the
+//! nodal partial derivatives `f_x`, `f_y` and the cross derivative
+//! `f_xy`; each grid cell then gets a 4×4 power-basis coefficient matrix
+//! through the standard bicubic Hermite system, yielding a C¹ surface
+//! that interpolates every grid node (C² along grid lines by
+//! construction of the 1-D splines). The per-patch coefficient tensor is
+//! exactly what the L1 Pallas `surface_eval` kernel consumes, so the
+//! rust evaluation here doubles as the native reference for the PJRT
+//! differential tests.
+
+use super::spline::CubicSpline;
+use anyhow::{bail, Result};
+
+/// Inverse Hermite basis: with f(t,u) = Σ_{i,j} a[i][j]·tⁱ·uʲ on the unit
+/// square, A = M · F · Mᵀ where F packs values/derivatives at the 4
+/// corners (see `patch_coeffs`).
+const M: [[f64; 4]; 4] = [
+    [1.0, 0.0, 0.0, 0.0],
+    [0.0, 0.0, 1.0, 0.0],
+    [-3.0, 3.0, -2.0, -1.0],
+    [2.0, -2.0, 1.0, 1.0],
+];
+
+/// A bicubic spline surface over `xs × ys` with values `z[i][j] =
+/// f(xs[i], ys[j])` (row-major: `z[i*ny + j]`).
+#[derive(Debug, Clone)]
+pub struct BicubicSurface {
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+    pub z: Vec<f64>,
+    /// Per-cell power-basis coefficients, `(nx−1)·(ny−1)` patches of 16,
+    /// patch (i, j) at `coeffs[(i*(ny−1)+j)*16 ..]`, local coordinates
+    /// t = (x − xs[i]) / hx, u = (y − ys[j]) / hy in [0, 1].
+    pub coeffs: Vec<f64>,
+}
+
+impl BicubicSurface {
+    pub fn nx(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn ny(&self) -> usize {
+        self.ys.len()
+    }
+
+    /// Fit the surface. `z` is row-major with `xs.len()·ys.len()`
+    /// entries; both knot vectors must be strictly increasing with ≥ 2
+    /// entries.
+    pub fn fit(xs: &[f64], ys: &[f64], z: &[f64]) -> Result<BicubicSurface> {
+        let (nx, ny) = (xs.len(), ys.len());
+        if nx < 2 || ny < 2 {
+            bail!("bicubic: need ≥2 knots per axis ({nx}×{ny})");
+        }
+        if z.len() != nx * ny {
+            bail!("bicubic: z has {} entries, expected {}", z.len(), nx * ny);
+        }
+        for w in xs.windows(2).chain(ys.windows(2)) {
+            if w[1] <= w[0] {
+                bail!("bicubic: knots must be strictly increasing");
+            }
+        }
+
+        // Nodal derivative fields via 1-D natural splines.
+        let mut fx = vec![0.0; nx * ny]; // ∂f/∂x at nodes
+        let mut fy = vec![0.0; nx * ny]; // ∂f/∂y at nodes
+        let mut fxy = vec![0.0; nx * ny]; // ∂²f/∂x∂y at nodes
+
+        // ∂/∂y: spline each row (fixed x_i) over ys.
+        for i in 0..nx {
+            let row: Vec<f64> = (0..ny).map(|j| z[i * ny + j]).collect();
+            let s = CubicSpline::fit(ys, &row)?;
+            for j in 0..ny {
+                fy[i * ny + j] = s.deriv(ys[j]);
+            }
+        }
+        // ∂/∂x: spline each column (fixed y_j) over xs.
+        for j in 0..ny {
+            let col: Vec<f64> = (0..nx).map(|i| z[i * ny + j]).collect();
+            let s = CubicSpline::fit(xs, &col)?;
+            for i in 0..nx {
+                fx[i * ny + j] = s.deriv(xs[i]);
+            }
+        }
+        // Cross derivative: spline the fy field along x.
+        for j in 0..ny {
+            let col: Vec<f64> = (0..nx).map(|i| fy[i * ny + j]).collect();
+            let s = CubicSpline::fit(xs, &col)?;
+            for i in 0..nx {
+                fxy[i * ny + j] = s.deriv(xs[i]);
+            }
+        }
+
+        // Per-cell Hermite → power-basis coefficients.
+        let mut coeffs = vec![0.0; (nx - 1) * (ny - 1) * 16];
+        for i in 0..nx - 1 {
+            let hx = xs[i + 1] - xs[i];
+            for j in 0..ny - 1 {
+                let hy = ys[j + 1] - ys[j];
+                let at = |field: &[f64], di: usize, dj: usize| field[(i + di) * ny + (j + dj)];
+                // F packs [f, fy; fx, fxy] blocks, derivatives scaled to
+                // the unit square (∂t = hx·∂x, ∂u = hy·∂y).
+                let f = [
+                    [at(&z, 0, 0), at(&z, 0, 1), hy * at(&fy, 0, 0), hy * at(&fy, 0, 1)],
+                    [at(&z, 1, 0), at(&z, 1, 1), hy * at(&fy, 1, 0), hy * at(&fy, 1, 1)],
+                    [
+                        hx * at(&fx, 0, 0),
+                        hx * at(&fx, 0, 1),
+                        hx * hy * at(&fxy, 0, 0),
+                        hx * hy * at(&fxy, 0, 1),
+                    ],
+                    [
+                        hx * at(&fx, 1, 0),
+                        hx * at(&fx, 1, 1),
+                        hx * hy * at(&fxy, 1, 0),
+                        hx * hy * at(&fxy, 1, 1),
+                    ],
+                ];
+                // A = M · F · Mᵀ
+                let mut mf = [[0.0; 4]; 4];
+                for r in 0..4 {
+                    for c in 0..4 {
+                        let mut acc = 0.0;
+                        for k in 0..4 {
+                            acc += M[r][k] * f[k][c];
+                        }
+                        mf[r][c] = acc;
+                    }
+                }
+                let base = (i * (ny - 1) + j) * 16;
+                for r in 0..4 {
+                    for c in 0..4 {
+                        let mut acc = 0.0;
+                        for k in 0..4 {
+                            acc += mf[r][k] * M[c][k];
+                        }
+                        coeffs[base + r * 4 + c] = acc;
+                    }
+                }
+            }
+        }
+
+        Ok(BicubicSurface { xs: xs.to_vec(), ys: ys.to_vec(), z: z.to_vec(), coeffs })
+    }
+
+    /// Locate the cell containing (x, y), clamped to the domain, and the
+    /// unit-square local coordinates.
+    fn locate(&self, x: f64, y: f64) -> (usize, usize, f64, f64) {
+        let i = cell_index(&self.xs, x);
+        let j = cell_index(&self.ys, y);
+        let t = (x - self.xs[i]) / (self.xs[i + 1] - self.xs[i]);
+        let u = (y - self.ys[j]) / (self.ys[j + 1] - self.ys[j]);
+        (i, j, t.clamp(0.0, 1.0), u.clamp(0.0, 1.0))
+    }
+
+    #[inline]
+    fn patch(&self, i: usize, j: usize) -> &[f64] {
+        let base = (i * (self.ny() - 1) + j) * 16;
+        &self.coeffs[base..base + 16]
+    }
+
+    /// Evaluate the surface at (x, y); clamped at the domain boundary.
+    pub fn eval(&self, x: f64, y: f64) -> f64 {
+        let (i, j, t, u) = self.locate(x, y);
+        let a = self.patch(i, j);
+        // Horner in u inside Horner in t.
+        let mut acc = 0.0;
+        for r in (0..4).rev() {
+            let row = &a[r * 4..r * 4 + 4];
+            let pu = ((row[3] * u + row[2]) * u + row[1]) * u + row[0];
+            acc = acc * t + pu;
+        }
+        acc
+    }
+
+    /// Gradient (∂f/∂x, ∂f/∂y).
+    pub fn grad(&self, x: f64, y: f64) -> (f64, f64) {
+        let (i, j, t, u) = self.locate(x, y);
+        let a = self.patch(i, j);
+        let hx = self.xs[i + 1] - self.xs[i];
+        let hy = self.ys[j + 1] - self.ys[j];
+        let (mut dt, mut du) = (0.0, 0.0);
+        for r in 0..4 {
+            for c in 0..4 {
+                let coeff = a[r * 4 + c];
+                if r > 0 {
+                    dt += coeff * r as f64 * t.powi(r as i32 - 1) * u.powi(c as i32);
+                }
+                if c > 0 {
+                    du += coeff * t.powi(r as i32) * c as f64 * u.powi(c as i32 - 1);
+                }
+            }
+        }
+        (dt / hx, du / hy)
+    }
+
+    /// Hessian [[fxx, fxy], [fxy, fyy]] — the paper's second-partial-
+    /// derivative test (Eq. 18) runs on this.
+    pub fn hessian(&self, x: f64, y: f64) -> [[f64; 2]; 2] {
+        let (i, j, t, u) = self.locate(x, y);
+        let a = self.patch(i, j);
+        let hx = self.xs[i + 1] - self.xs[i];
+        let hy = self.ys[j + 1] - self.ys[j];
+        let (mut dtt, mut duu, mut dtu) = (0.0, 0.0, 0.0);
+        for r in 0..4 {
+            for c in 0..4 {
+                let coeff = a[r * 4 + c];
+                if r > 1 {
+                    dtt += coeff * (r * (r - 1)) as f64 * t.powi(r as i32 - 2) * u.powi(c as i32);
+                }
+                if c > 1 {
+                    duu += coeff * (c * (c - 1)) as f64 * t.powi(r as i32) * u.powi(c as i32 - 2);
+                }
+                if r > 0 && c > 0 {
+                    dtu += coeff
+                        * (r * c) as f64
+                        * t.powi(r as i32 - 1)
+                        * u.powi(c as i32 - 1);
+                }
+            }
+        }
+        let fxx = dtt / (hx * hx);
+        let fyy = duu / (hy * hy);
+        let fxy = dtu / (hx * hy);
+        [[fxx, fxy], [fxy, fyy]]
+    }
+
+    /// Evaluate on a dense `rx × ry` grid covering the domain — the
+    /// native counterpart of the PJRT `surface_eval` artifact.
+    pub fn eval_grid(&self, rx: usize, ry: usize) -> Vec<f64> {
+        let (x0, x1) = (self.xs[0], *self.xs.last().unwrap());
+        let (y0, y1) = (self.ys[0], *self.ys.last().unwrap());
+        let mut out = Vec::with_capacity(rx * ry);
+        for ix in 0..rx {
+            let x = x0 + (x1 - x0) * ix as f64 / (rx - 1).max(1) as f64;
+            for iy in 0..ry {
+                let y = y0 + (y1 - y0) * iy as f64 / (ry - 1).max(1) as f64;
+                out.push(self.eval(x, y));
+            }
+        }
+        out
+    }
+}
+
+/// Rightmost cell whose left knot ≤ x, clamped into [0, n−2].
+fn cell_index(knots: &[f64], x: f64) -> usize {
+    let n = knots.len();
+    if x <= knots[0] {
+        return 0;
+    }
+    if x >= knots[n - 1] {
+        return n - 2;
+    }
+    match knots.binary_search_by(|probe| probe.partial_cmp(&x).unwrap()) {
+        Ok(i) => i.min(n - 2),
+        Err(i) => i - 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall_default;
+    use crate::util::rng::Rng;
+
+    fn grid_z(xs: &[f64], ys: &[f64], f: impl Fn(f64, f64) -> f64) -> Vec<f64> {
+        let mut z = Vec::with_capacity(xs.len() * ys.len());
+        for &x in xs {
+            for &y in ys {
+                z.push(f(x, y));
+            }
+        }
+        z
+    }
+
+    #[test]
+    fn interpolates_grid_nodes() {
+        let xs = [0.0, 1.0, 2.0, 3.5];
+        let ys = [0.0, 0.5, 2.0];
+        let z = grid_z(&xs, &ys, |x, y| (x * 1.3).sin() + y * y);
+        let s = BicubicSurface::fit(&xs, &ys, &z).unwrap();
+        for (i, &x) in xs.iter().enumerate() {
+            for (j, &y) in ys.iter().enumerate() {
+                let v = s.eval(x, y);
+                assert!((v - z[i * ys.len() + j]).abs() < 1e-10, "node ({x},{y}): {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn reproduces_bilinear_exactly() {
+        // f(x,y) = 2 + x − 3y + 0.5xy is in the bicubic space; natural
+        // splines reproduce its (linear) cross-sections exactly.
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [0.0, 1.0, 2.0];
+        let f = |x: f64, y: f64| 2.0 + x - 3.0 * y + 0.5 * x * y;
+        let z = grid_z(&xs, &ys, f);
+        let s = BicubicSurface::fit(&xs, &ys, &z).unwrap();
+        for k in 0..50 {
+            let x = 3.0 * (k as f64) / 49.0;
+            let y = 2.0 * ((k * 7 % 50) as f64) / 49.0;
+            assert!((s.eval(x, y) - f(x, y)).abs() < 1e-9, "at ({x},{y})");
+        }
+    }
+
+    #[test]
+    fn continuity_across_cell_boundaries() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [0.0, 1.0, 2.0, 3.0];
+        let z = grid_z(&xs, &ys, |x, y| (x - 1.5).powi(2) * (y * 0.7).cos());
+        let s = BicubicSurface::fit(&xs, &ys, &z).unwrap();
+        let eps = 1e-7;
+        for &xb in &[1.0, 2.0] {
+            for k in 0..20 {
+                let y = 3.0 * k as f64 / 19.0;
+                let l = s.eval(xb - eps, y);
+                let r = s.eval(xb + eps, y);
+                assert!((l - r).abs() < 1e-5, "C0 x-break at ({xb},{y}): {l} vs {r}");
+                let (gl, _) = s.grad(xb - eps, y);
+                let (gr, _) = s.grad(xb + eps, y);
+                assert!((gl - gr).abs() < 1e-3, "C1 x-break at ({xb},{y})");
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [0.0, 1.0, 2.0, 3.0];
+        let z = grid_z(&xs, &ys, |x, y| x * x - y * x + 2.0 * y);
+        let s = BicubicSurface::fit(&xs, &ys, &z).unwrap();
+        let eps = 1e-6;
+        for &(x, y) in &[(0.4, 0.7), (1.5, 1.5), (2.3, 0.9)] {
+            let (gx, gy) = s.grad(x, y);
+            let fdx = (s.eval(x + eps, y) - s.eval(x - eps, y)) / (2.0 * eps);
+            let fdy = (s.eval(x, y + eps) - s.eval(x, y - eps)) / (2.0 * eps);
+            assert!((gx - fdx).abs() < 1e-5, "gx at ({x},{y}): {gx} vs {fdx}");
+            assert!((gy - fdy).abs() < 1e-5, "gy at ({x},{y}): {gy} vs {fdy}");
+        }
+    }
+
+    #[test]
+    fn hessian_matches_finite_difference() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [0.0, 1.0, 2.0, 3.0];
+        let z = grid_z(&xs, &ys, |x, y| x * x * y + y * y);
+        let s = BicubicSurface::fit(&xs, &ys, &z).unwrap();
+        let eps = 1e-4;
+        let (x, y) = (1.4, 1.6);
+        let h = s.hessian(x, y);
+        let fxx = (s.eval(x + eps, y) - 2.0 * s.eval(x, y) + s.eval(x - eps, y)) / (eps * eps);
+        let fyy = (s.eval(x, y + eps) - 2.0 * s.eval(x, y) + s.eval(x, y - eps)) / (eps * eps);
+        let fxy = (s.eval(x + eps, y + eps) - s.eval(x + eps, y - eps) - s.eval(x - eps, y + eps)
+            + s.eval(x - eps, y - eps))
+            / (4.0 * eps * eps);
+        assert!((h[0][0] - fxx).abs() < 1e-2, "fxx {} vs {}", h[0][0], fxx);
+        assert!((h[1][1] - fyy).abs() < 1e-2, "fyy {} vs {}", h[1][1], fyy);
+        assert!((h[0][1] - fxy).abs() < 1e-2, "fxy {} vs {}", h[0][1], fxy);
+    }
+
+    #[test]
+    fn eval_grid_corners_match_nodes() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [1.0, 2.0];
+        let z = grid_z(&xs, &ys, |x, y| x + 10.0 * y);
+        let s = BicubicSurface::fit(&xs, &ys, &z).unwrap();
+        let g = s.eval_grid(5, 3);
+        assert_eq!(g.len(), 15);
+        assert!((g[0] - s.eval(1.0, 1.0)).abs() < 1e-12);
+        assert!((g[14] - s.eval(3.0, 2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(BicubicSurface::fit(&[0.0], &[0.0, 1.0], &[1.0, 2.0]).is_err());
+        assert!(BicubicSurface::fit(&[0.0, 1.0], &[0.0, 1.0], &[1.0, 2.0, 3.0]).is_err());
+        assert!(BicubicSurface::fit(&[1.0, 0.0], &[0.0, 1.0], &[1.0; 4]).is_err());
+    }
+
+    #[test]
+    fn prop_random_grids_interpolate_and_stay_bounded() {
+        forall_default(
+            |r: &mut Rng| {
+                let nx = r.range_u(2, 7) as usize;
+                let ny = r.range_u(2, 7) as usize;
+                let mut acc = 0.0;
+                let xs: Vec<f64> = (0..nx)
+                    .map(|_| {
+                        let v = acc;
+                        acc += r.range_f64(0.5, 2.0);
+                        v
+                    })
+                    .collect();
+                acc = 0.0;
+                let ys: Vec<f64> = (0..ny)
+                    .map(|_| {
+                        let v = acc;
+                        acc += r.range_f64(0.5, 2.0);
+                        v
+                    })
+                    .collect();
+                let z: Vec<f64> = (0..nx * ny).map(|_| r.range_f64(0.0, 100.0)).collect();
+                (xs, ys, z)
+            },
+            |(xs, ys, z)| {
+                let s = BicubicSurface::fit(xs, ys, z).map_err(|e| e.to_string())?;
+                let ny = ys.len();
+                for (i, &x) in xs.iter().enumerate() {
+                    for (j, &y) in ys.iter().enumerate() {
+                        if (s.eval(x, y) - z[i * ny + j]).abs() > 1e-7 {
+                            return Err(format!("node ({i},{j}) not interpolated"));
+                        }
+                    }
+                }
+                // Interior evaluations remain finite & loosely bounded
+                // (cubics can overshoot but not explode).
+                for k in 0..25 {
+                    let x = xs[0] + (xs[xs.len() - 1] - xs[0]) * k as f64 / 24.0;
+                    let y = ys[0] + (ys[ny - 1] - ys[0]) * ((k * 7) % 25) as f64 / 24.0;
+                    let v = s.eval(x, y);
+                    if !v.is_finite() || v.abs() > 1e4 {
+                        return Err(format!("unbounded value {v} at ({x},{y})"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

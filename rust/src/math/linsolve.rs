@@ -1,0 +1,279 @@
+//! Direct linear solvers: Cholesky (SPD normal equations), LU with
+//! partial pivoting (general square systems from the spline continuity
+//! constraints), and a ridge-regularized least-squares helper used by the
+//! quadratic/cubic regression surface models (paper Eq. 7 and Eq. 9).
+
+use super::matrix::Matrix;
+use anyhow::{bail, Result};
+
+/// Cholesky factorization A = L·Lᵀ of a symmetric positive-definite
+/// matrix; returns the lower factor. Fails on non-SPD input.
+pub fn cholesky(a: &Matrix) -> Result<Matrix> {
+    if a.rows != a.cols {
+        bail!("cholesky: non-square {}x{}", a.rows, a.cols);
+    }
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("cholesky: matrix not positive definite (pivot {sum:.3e} at {i})");
+                }
+                l[(i, j)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve A·x = b with A SPD via Cholesky.
+pub fn solve_spd(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
+    let n = a.rows;
+    if b.len() != n {
+        bail!("solve_spd: rhs length {} != {}", b.len(), n);
+    }
+    let l = cholesky(a)?;
+    // Forward substitution L·y = b.
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[(i, k)] * y[k];
+        }
+        y[i] = sum / l[(i, i)];
+    }
+    // Back substitution Lᵀ·x = y.
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in (i + 1)..n {
+            sum -= l[(k, i)] * x[k];
+        }
+        x[i] = sum / l[(i, i)];
+    }
+    Ok(x)
+}
+
+/// LU decomposition with partial pivoting; solves A·x = b for general
+/// square A.
+pub fn solve_lu(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
+    if a.rows != a.cols {
+        bail!("solve_lu: non-square {}x{}", a.rows, a.cols);
+    }
+    let n = a.rows;
+    if b.len() != n {
+        bail!("solve_lu: rhs length {} != {}", b.len(), n);
+    }
+    let mut lu = a.clone();
+    let mut perm: Vec<usize> = (0..n).collect();
+    for col in 0..n {
+        // Pivot selection.
+        let mut pivot_row = col;
+        let mut pivot_val = lu[(col, col)].abs();
+        for r in (col + 1)..n {
+            let v = lu[(r, col)].abs();
+            if v > pivot_val {
+                pivot_val = v;
+                pivot_row = r;
+            }
+        }
+        if pivot_val < 1e-13 {
+            bail!("solve_lu: singular matrix (pivot {pivot_val:.3e} at column {col})");
+        }
+        if pivot_row != col {
+            for j in 0..n {
+                let tmp = lu[(col, j)];
+                lu[(col, j)] = lu[(pivot_row, j)];
+                lu[(pivot_row, j)] = tmp;
+            }
+            perm.swap(col, pivot_row);
+        }
+        // Elimination.
+        let inv_p = 1.0 / lu[(col, col)];
+        for r in (col + 1)..n {
+            let factor = lu[(r, col)] * inv_p;
+            lu[(r, col)] = factor;
+            for j in (col + 1)..n {
+                let v = lu[(col, j)];
+                lu[(r, j)] -= factor * v;
+            }
+        }
+    }
+    // Apply permutation to rhs, then forward/back substitution.
+    let mut y: Vec<f64> = perm.iter().map(|&p| b[p]).collect();
+    for i in 0..n {
+        for k in 0..i {
+            let f = lu[(i, k)];
+            y[i] -= f * y[k];
+        }
+    }
+    let mut x = y;
+    for i in (0..n).rev() {
+        for k in (i + 1)..n {
+            let f = lu[(i, k)];
+            x[i] -= f * x[k];
+        }
+        x[i] /= lu[(i, i)];
+    }
+    Ok(x)
+}
+
+/// Ridge-regularized linear least squares: minimize |X·β − y|² + λ|β|².
+/// λ > 0 keeps the normal equations SPD even for rank-deficient designs
+/// (e.g. a constant pipelining column when the log only contains pp=1).
+pub fn least_squares_ridge(x: &Matrix, y: &[f64], lambda: f64) -> Result<Vec<f64>> {
+    if x.rows != y.len() {
+        bail!("least_squares: {} rows vs {} targets", x.rows, y.len());
+    }
+    let mut gram = x.gram();
+    for i in 0..gram.rows {
+        gram[(i, i)] += lambda;
+    }
+    let xty = x.t_vec(y);
+    solve_spd(&gram, &xty)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall_default, gen};
+
+    #[test]
+    fn cholesky_known() {
+        let a = Matrix::from_rows(&[vec![4.0, 2.0], vec![2.0, 3.0]]);
+        let l = cholesky(&a).unwrap();
+        let back = l.matmul(&l.transpose());
+        assert!(back.max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn solve_spd_roundtrip() {
+        let a = Matrix::from_rows(&[
+            vec![6.0, 2.0, 1.0],
+            vec![2.0, 5.0, 2.0],
+            vec![1.0, 2.0, 4.0],
+        ]);
+        let x_true = [1.0, -2.0, 3.0];
+        let b: Vec<f64> = (0..3)
+            .map(|i| (0..3).map(|j| a[(i, j)] * x_true[j]).sum())
+            .collect();
+        let x = solve_spd(&a, &b).unwrap();
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn solve_lu_with_pivoting_needed() {
+        // Leading zero forces a row swap.
+        let a = Matrix::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        let x = solve_lu(&a, &[2.0, 3.0]).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_lu_rejects_singular() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(solve_lu(&a, &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn least_squares_recovers_line() {
+        // y = 3 + 2 t, exactly representable → residual 0.
+        let t: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let rows: Vec<Vec<f64>> = t.iter().map(|&ti| vec![1.0, ti]).collect();
+        let x = Matrix::from_rows(&rows);
+        let y: Vec<f64> = t.iter().map(|&ti| 3.0 + 2.0 * ti).collect();
+        let beta = least_squares_ridge(&x, &y, 1e-9).unwrap();
+        assert!((beta[0] - 3.0).abs() < 1e-5);
+        assert!((beta[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn least_squares_handles_rank_deficiency_with_ridge() {
+        // Two identical columns: unregularized normal equations are
+        // singular; ridge must still return a finite solution.
+        let rows: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64, i as f64]).collect();
+        let x = Matrix::from_rows(&rows);
+        let y: Vec<f64> = (0..8).map(|i| 2.0 * i as f64).collect();
+        let beta = least_squares_ridge(&x, &y, 1e-6).unwrap();
+        assert!(beta.iter().all(|b| b.is_finite()));
+        // Combined slope should be ~2.
+        assert!((beta[0] + beta[1] - 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn prop_lu_solves_random_diagonally_dominant_systems() {
+        forall_default(
+            |r| {
+                let n = r.range_u(2, 8) as usize;
+                let mut rows = Vec::with_capacity(n);
+                for i in 0..n {
+                    let mut row: Vec<f64> = (0..n).map(|_| r.range_f64(-1.0, 1.0)).collect();
+                    row[i] += n as f64; // diagonal dominance → nonsingular
+                    rows.push(row);
+                }
+                let x_true: Vec<f64> = (0..n).map(|_| r.range_f64(-5.0, 5.0)).collect();
+                (rows, x_true)
+            },
+            |(rows, x_true)| {
+                let a = Matrix::from_rows(rows);
+                let n = x_true.len();
+                let b: Vec<f64> = (0..n)
+                    .map(|i| (0..n).map(|j| a[(i, j)] * x_true[j]).sum())
+                    .collect();
+                let x = solve_lu(&a, &b).map_err(|e| e.to_string())?;
+                for (xi, ti) in x.iter().zip(x_true) {
+                    if (xi - ti).abs() > 1e-7 {
+                        return Err(format!("solution mismatch: {xi} vs {ti}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_spd_solver_matches_lu_on_gram_matrices() {
+        forall_default(
+            |r| {
+                let n = r.range_u(2, 6) as usize;
+                let m = n + r.range_u(2, 6) as usize;
+                let rows: Vec<Vec<f64>> = (0..m)
+                    .map(|_| (0..n).map(|_| r.range_f64(-2.0, 2.0)).collect())
+                    .collect();
+                let b = gen::vec_f64(r, n, n, -3.0, 3.0);
+                (rows, b)
+            },
+            |(rows, b)| {
+                let x = Matrix::from_rows(rows);
+                let mut g = x.gram();
+                for i in 0..g.rows {
+                    g[(i, i)] += 0.1; // ensure SPD
+                }
+                let via_chol = solve_spd(&g, b).map_err(|e| e.to_string())?;
+                let via_lu = solve_lu(&g, b).map_err(|e| e.to_string())?;
+                for (a_, b_) in via_chol.iter().zip(&via_lu) {
+                    if (a_ - b_).abs() > 1e-7 {
+                        return Err(format!("chol {a_} vs lu {b_}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

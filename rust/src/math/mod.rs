@@ -1,0 +1,13 @@
+//! Numerical substrate: dense linear algebra, tridiagonal solves, 1-D
+//! and 2-D cubic-spline interpolation, polynomial regression, and
+//! Nelder–Mead direct search. These implement the paper's Eq. 2–19
+//! machinery natively in rust; the batched/hot variants are mirrored as
+//! L1/L2 PJRT artifacts (see `crate::runtime`).
+
+pub mod bicubic;
+pub mod linsolve;
+pub mod matrix;
+pub mod neldermead;
+pub mod polyfit;
+pub mod spline;
+pub mod tridiag;

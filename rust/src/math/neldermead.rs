@@ -1,0 +1,178 @@
+//! Nelder–Mead downhill simplex — the substrate for the NMT baseline
+//! (Balaprakash et al., "Improving data transfer throughput with direct
+//! search optimization", ICPP'16), which the paper compares against.
+//! Implemented for maximization over a bounded box with optional integer
+//! rounding, since the transfer parameters live on a bounded integer
+//! domain.
+
+/// One step record (for convergence diagnostics / Fig. 6-style plots).
+#[derive(Debug, Clone)]
+pub struct NmTrace {
+    pub evaluations: Vec<(Vec<f64>, f64)>,
+}
+
+/// Options controlling the search.
+#[derive(Debug, Clone)]
+pub struct NmOptions {
+    pub max_evals: usize,
+    /// Convergence: simplex function-value spread below this stops.
+    pub tol: f64,
+    /// Box bounds per dimension.
+    pub lo: Vec<f64>,
+    pub hi: Vec<f64>,
+}
+
+/// Maximize `f` from `start` with reflection/expansion/contraction/
+/// shrink (standard coefficients α=1, γ=2, ρ=0.5, σ=0.5). Returns
+/// (best_x, best_f, trace). Every objective evaluation is recorded —
+/// for the NMT baseline each evaluation is a (costly) sample transfer,
+/// so the trace length is the baseline's sampling overhead.
+pub fn maximize(
+    f: &mut dyn FnMut(&[f64]) -> f64,
+    start: &[f64],
+    opts: &NmOptions,
+) -> (Vec<f64>, f64, NmTrace) {
+    let n = start.len();
+    assert!(n >= 1);
+    assert_eq!(opts.lo.len(), n);
+    assert_eq!(opts.hi.len(), n);
+    let clamp = |x: &mut Vec<f64>| {
+        for d in 0..n {
+            x[d] = x[d].clamp(opts.lo[d], opts.hi[d]);
+        }
+    };
+    let mut trace = NmTrace { evaluations: Vec::new() };
+    let mut evals = 0usize;
+    let mut eval = |x: &[f64], trace: &mut NmTrace, evals: &mut usize| -> f64 {
+        *evals += 1;
+        let v = f(x);
+        trace.evaluations.push((x.to_vec(), v));
+        v
+    };
+
+    // Initial simplex: start + per-axis offsets of 20% of the box.
+    let mut simplex: Vec<(Vec<f64>, f64)> = Vec::with_capacity(n + 1);
+    let mut x0 = start.to_vec();
+    clamp(&mut x0);
+    let v0 = eval(&x0, &mut trace, &mut evals);
+    simplex.push((x0.clone(), v0));
+    for d in 0..n {
+        let mut x = x0.clone();
+        let step = 0.2 * (opts.hi[d] - opts.lo[d]).max(1.0);
+        x[d] = if x[d] + step <= opts.hi[d] { x[d] + step } else { x[d] - step };
+        clamp(&mut x);
+        let v = eval(&x, &mut trace, &mut evals);
+        simplex.push((x, v));
+    }
+
+    while evals < opts.max_evals {
+        // Sort descending by value (maximization).
+        simplex.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let spread = simplex[0].1 - simplex[n].1;
+        if spread.abs() < opts.tol {
+            break;
+        }
+        // Centroid of all but the worst.
+        let mut centroid = vec![0.0; n];
+        for (x, _) in &simplex[..n] {
+            for d in 0..n {
+                centroid[d] += x[d] / n as f64;
+            }
+        }
+        let worst = simplex[n].clone();
+        // Reflection.
+        let mut xr: Vec<f64> = (0..n).map(|d| centroid[d] + (centroid[d] - worst.0[d])).collect();
+        clamp(&mut xr);
+        let vr = eval(&xr, &mut trace, &mut evals);
+        if vr > simplex[0].1 {
+            // Expansion.
+            let mut xe: Vec<f64> =
+                (0..n).map(|d| centroid[d] + 2.0 * (centroid[d] - worst.0[d])).collect();
+            clamp(&mut xe);
+            let ve = eval(&xe, &mut trace, &mut evals);
+            simplex[n] = if ve > vr { (xe, ve) } else { (xr, vr) };
+        } else if vr > simplex[n - 1].1 {
+            simplex[n] = (xr, vr);
+        } else {
+            // Contraction (toward centroid).
+            let mut xc: Vec<f64> =
+                (0..n).map(|d| centroid[d] + 0.5 * (worst.0[d] - centroid[d])).collect();
+            clamp(&mut xc);
+            let vc = eval(&xc, &mut trace, &mut evals);
+            if vc > worst.1 {
+                simplex[n] = (xc, vc);
+            } else {
+                // Shrink toward the best vertex.
+                let best = simplex[0].0.clone();
+                for vertex in simplex.iter_mut().skip(1) {
+                    for d in 0..n {
+                        vertex.0[d] = best[d] + 0.5 * (vertex.0[d] - best[d]);
+                    }
+                    clamp(&mut vertex.0);
+                    vertex.1 = eval(&vertex.0, &mut trace, &mut evals);
+                    if evals >= opts.max_evals {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    simplex.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let (bx, bv) = simplex[0].clone();
+    (bx, bv, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts(n: usize) -> NmOptions {
+        NmOptions { max_evals: 400, tol: 1e-10, lo: vec![-10.0; n], hi: vec![10.0; n] }
+    }
+
+    #[test]
+    fn maximizes_concave_quadratic() {
+        let mut f = |x: &[f64]| -(x[0] - 2.0).powi(2) - (x[1] + 1.0).powi(2) + 5.0;
+        let (x, v, _) = maximize(&mut f, &[0.0, 0.0], &opts(2));
+        assert!((x[0] - 2.0).abs() < 1e-3, "x0={}", x[0]);
+        assert!((x[1] + 1.0).abs() < 1e-3, "x1={}", x[1]);
+        assert!((v - 5.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn respects_bounds() {
+        // Unbounded growth toward +∞ must be stopped at the box edge.
+        let mut f = |x: &[f64]| x[0];
+        let o = NmOptions { max_evals: 200, tol: 1e-12, lo: vec![0.0], hi: vec![3.0] };
+        let (x, v, trace) = maximize(&mut f, &[1.0], &o);
+        assert!((x[0] - 3.0).abs() < 1e-6);
+        assert!((v - 3.0).abs() < 1e-6);
+        for (pt, _) in &trace.evaluations {
+            assert!(pt[0] >= 0.0 && pt[0] <= 3.0, "out-of-box eval at {}", pt[0]);
+        }
+    }
+
+    #[test]
+    fn eval_budget_is_respected() {
+        let mut count = 0usize;
+        let mut f = |x: &[f64]| {
+            count += 1;
+            (x[0] * 0.1).sin() + (x[1] * 0.07).cos()
+        };
+        let o = NmOptions { max_evals: 25, tol: 0.0, lo: vec![-10.0; 2], hi: vec![10.0; 2] };
+        let (_, _, trace) = maximize(&mut f, &[0.0, 0.0], &o);
+        assert!(count <= 25 + 2, "count={count}"); // shrink may finish its sweep
+        assert_eq!(count, trace.evaluations.len());
+    }
+
+    #[test]
+    fn trace_is_monotone_enough_to_converge() {
+        let mut f = |x: &[f64]| -(x[0].powi(2) + x[1].powi(2) + x[2].powi(2));
+        let (x, _, trace) = maximize(&mut f, &[5.0, -4.0, 3.0], &opts(3));
+        assert!(x.iter().all(|c| c.abs() < 0.05), "{x:?}");
+        // The best value seen must improve over the run.
+        let first = trace.evaluations[0].1;
+        let best = trace.evaluations.iter().map(|e| e.1).fold(f64::MIN, f64::max);
+        assert!(best > first);
+    }
+}

@@ -1,0 +1,187 @@
+//! Multivariate quadratic and cubic polynomial regression over the
+//! protocol-parameter space (p, cc, pp) — the paper's Eq. 6–9 baseline
+//! surface models that piecewise splines are compared against (Fig. 3b).
+
+use super::linsolve::least_squares_ridge;
+use super::matrix::Matrix;
+use anyhow::Result;
+
+/// Degree of the polynomial surface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolyDegree {
+    Quadratic,
+    Cubic,
+}
+
+/// Fitted polynomial surface th ≈ f(p, cc, pp).
+#[derive(Debug, Clone)]
+pub struct PolySurface {
+    pub degree: PolyDegree,
+    pub beta: Vec<f64>,
+    /// Feature standardization (mean, std) per raw input — conditioning
+    /// for the normal equations on the integer grid.
+    pub center: [f64; 3],
+    pub scale: [f64; 3],
+}
+
+/// Full monomial basis up to the requested total degree in 3 variables.
+fn basis(degree: PolyDegree, x: [f64; 3]) -> Vec<f64> {
+    let max_deg = match degree {
+        PolyDegree::Quadratic => 2,
+        PolyDegree::Cubic => 3,
+    };
+    let mut phi = Vec::with_capacity(if max_deg == 2 { 10 } else { 20 });
+    for i in 0..=max_deg {
+        for j in 0..=(max_deg - i) {
+            for k in 0..=(max_deg - i - j) {
+                phi.push(x[0].powi(i as i32) * x[1].powi(j as i32) * x[2].powi(k as i32));
+            }
+        }
+    }
+    phi
+}
+
+impl PolySurface {
+    /// Least-squares fit (paper Eq. 7 / Eq. 9) with a small ridge term
+    /// for numerical safety. `points` are (p, cc, pp) triples.
+    pub fn fit(degree: PolyDegree, points: &[[f64; 3]], th: &[f64]) -> Result<PolySurface> {
+        anyhow::ensure!(points.len() == th.len(), "polyfit: length mismatch");
+        anyhow::ensure!(points.len() >= 4, "polyfit: need ≥4 samples, got {}", points.len());
+        let mut center = [0.0; 3];
+        let mut scale = [1.0; 3];
+        for d in 0..3 {
+            let vals: Vec<f64> = points.iter().map(|p| p[d]).collect();
+            center[d] = crate::util::stats::mean(&vals);
+            let s = crate::util::stats::std_pop(&vals);
+            scale[d] = if s > 1e-9 { s } else { 1.0 };
+        }
+        let rows: Vec<Vec<f64>> = points
+            .iter()
+            .map(|p| {
+                basis(
+                    degree,
+                    [
+                        (p[0] - center[0]) / scale[0],
+                        (p[1] - center[1]) / scale[1],
+                        (p[2] - center[2]) / scale[2],
+                    ],
+                )
+            })
+            .collect();
+        let x = Matrix::from_rows(&rows);
+        let beta = least_squares_ridge(&x, th, 1e-6)?;
+        Ok(PolySurface { degree, beta, center, scale })
+    }
+
+    /// Predict throughput at (p, cc, pp). The paper constrains
+    /// f(p,cc,pp) > 0 (Eq. 9); we clamp at zero, which realizes the same
+    /// constraint for prediction purposes.
+    pub fn eval(&self, p: f64, cc: f64, pp: f64) -> f64 {
+        let x = [
+            (p - self.center[0]) / self.scale[0],
+            (cc - self.center[1]) / self.scale[1],
+            (pp - self.center[2]) / self.scale[2],
+        ];
+        let phi = basis(self.degree, x);
+        let v: f64 = phi.iter().zip(&self.beta).map(|(a, b)| a * b).sum();
+        v.max(0.0)
+    }
+
+    /// Argmax over a bounded integer grid (the paper's Ψ³ domain).
+    pub fn argmax_grid(&self, beta_max: u32) -> ((u32, u32, u32), f64) {
+        let mut best = ((1u32, 1u32, 1u32), f64::NEG_INFINITY);
+        for p in 1..=beta_max {
+            for cc in 1..=beta_max {
+                for pp in 1..=beta_max {
+                    let v = self.eval(p as f64, cc as f64, pp as f64);
+                    if v > best.1 {
+                        best = ((p, cc, pp), v);
+                    }
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_grid(f: impl Fn(f64, f64, f64) -> f64) -> (Vec<[f64; 3]>, Vec<f64>) {
+        let mut pts = Vec::new();
+        let mut th = Vec::new();
+        for p in 1..=6 {
+            for cc in 1..=6 {
+                for pp in [1.0, 2.0, 4.0, 8.0] {
+                    pts.push([p as f64, cc as f64, pp]);
+                    th.push(f(p as f64, cc as f64, pp));
+                }
+            }
+        }
+        (pts, th)
+    }
+
+    #[test]
+    fn quadratic_recovers_quadratic() {
+        let f = |p: f64, cc: f64, pp: f64| 5.0 + 2.0 * p - 0.3 * p * p + cc - 0.1 * cc * cc + 0.05 * pp;
+        let (pts, th) = sample_grid(f);
+        let m = PolySurface::fit(PolyDegree::Quadratic, &pts, &th).unwrap();
+        for &[p, cc, pp] in pts.iter().step_by(7) {
+            assert!((m.eval(p, cc, pp) - f(p, cc, pp)).abs() < 1e-4, "at ({p},{cc},{pp})");
+        }
+    }
+
+    #[test]
+    fn cubic_recovers_cubic() {
+        let f = |p: f64, cc: f64, pp: f64| 1.0 + 0.1 * p * p * p - 0.5 * p * cc + 0.02 * pp * pp + cc;
+        let (pts, th) = sample_grid(f);
+        let m = PolySurface::fit(PolyDegree::Cubic, &pts, &th).unwrap();
+        for &[p, cc, pp] in pts.iter().step_by(11) {
+            let want = f(p, cc, pp).max(0.0);
+            assert!((m.eval(p, cc, pp) - want).abs() < 1e-3, "at ({p},{cc},{pp})");
+        }
+    }
+
+    #[test]
+    fn quadratic_underfits_spliney_data() {
+        // A sharply peaked ridge: quadratic R² should be clearly below 1.
+        let f = |p: f64, cc: f64, _pp: f64| 10.0 / (1.0 + (p - 4.0).powi(2) + (cc - 2.0).powi(2));
+        let (pts, th) = sample_grid(f);
+        let m = PolySurface::fit(PolyDegree::Quadratic, &pts, &th).unwrap();
+        let pred: Vec<f64> = pts.iter().map(|x| m.eval(x[0], x[1], x[2])).collect();
+        let r2 = crate::util::stats::r_squared(&th, &pred);
+        assert!(r2 < 0.9, "quadratic unexpectedly fit ridge data: r2={r2}");
+    }
+
+    #[test]
+    fn eval_is_nonnegative() {
+        let mut r = Rng::new(4);
+        let pts: Vec<[f64; 3]> = (0..40)
+            .map(|_| [r.range_f64(1.0, 8.0), r.range_f64(1.0, 8.0), r.range_f64(1.0, 8.0)])
+            .collect();
+        let th: Vec<f64> = (0..40).map(|_| r.range_f64(-5.0, 5.0)).collect();
+        let m = PolySurface::fit(PolyDegree::Cubic, &pts, &th).unwrap();
+        for _ in 0..100 {
+            let v = m.eval(r.range_f64(0.0, 10.0), r.range_f64(0.0, 10.0), r.range_f64(0.0, 10.0));
+            assert!(v >= 0.0 && v.is_finite());
+        }
+    }
+
+    #[test]
+    fn argmax_grid_finds_interior_peak() {
+        let f = |p: f64, cc: f64, pp: f64| {
+            20.0 - (p - 3.0).powi(2) - (cc - 5.0).powi(2) - 0.5 * (pp - 2.0).powi(2)
+        };
+        let (pts, th) = sample_grid(f);
+        let m = PolySurface::fit(PolyDegree::Quadratic, &pts, &th).unwrap();
+        let ((p, cc, pp), _) = m.argmax_grid(8);
+        assert_eq!((p, cc, pp), (3, 5, 2));
+    }
+
+    #[test]
+    fn rejects_too_few_samples() {
+        assert!(PolySurface::fit(PolyDegree::Quadratic, &[[1.0, 1.0, 1.0]], &[1.0]).is_err());
+    }
+}

@@ -1,0 +1,287 @@
+//! Natural ("relaxed") 1-D cubic spline interpolation — paper Eq. 10–14.
+//!
+//! The paper models throughput over pipelining with a 2-D (x, th) cubic
+//! spline (its Fig. 2); this module is that construction: piecewise cubic
+//! polynomials through the knots, C² continuity at interior knots, zero
+//! second derivative at the boundary (Eq. 14). Coefficients come from the
+//! tridiagonal system in the knot second derivatives (solved with the
+//! Thomas algorithm).
+
+use super::tridiag::solve_tridiag;
+use anyhow::{bail, Result};
+
+/// A fitted natural cubic spline over strictly increasing knots.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CubicSpline {
+    pub xs: Vec<f64>,
+    pub ys: Vec<f64>,
+    /// Second derivatives at the knots (m[0] = m[n−1] = 0 for natural BC).
+    pub m: Vec<f64>,
+}
+
+impl CubicSpline {
+    /// Fit the spline. Requires ≥ 2 strictly increasing knots.
+    pub fn fit(xs: &[f64], ys: &[f64]) -> Result<CubicSpline> {
+        if xs.len() != ys.len() {
+            bail!("spline: {} xs vs {} ys", xs.len(), ys.len());
+        }
+        let n = xs.len();
+        if n < 2 {
+            bail!("spline: need at least 2 knots, got {n}");
+        }
+        for w in xs.windows(2) {
+            if w[1] <= w[0] {
+                bail!("spline: knots must be strictly increasing ({} then {})", w[0], w[1]);
+            }
+        }
+        if n == 2 {
+            // Degenerate: straight line, zero curvature.
+            return Ok(CubicSpline { xs: xs.to_vec(), ys: ys.to_vec(), m: vec![0.0; 2] });
+        }
+        // Interior system (n−2 unknown second derivatives):
+        //   h[i−1]·m[i−1] + 2(h[i−1]+h[i])·m[i] + h[i]·m[i+1] = 6·(d[i] − d[i−1])
+        // with d[i] = (y[i+1]−y[i])/h[i].
+        let h: Vec<f64> = xs.windows(2).map(|w| w[1] - w[0]).collect();
+        let d: Vec<f64> = ys
+            .windows(2)
+            .zip(&h)
+            .map(|(w, hi)| (w[1] - w[0]) / hi)
+            .collect();
+        let k = n - 2;
+        let mut lower = vec![0.0; k];
+        let mut diag = vec![0.0; k];
+        let mut upper = vec![0.0; k];
+        let mut rhs = vec![0.0; k];
+        for i in 0..k {
+            lower[i] = if i == 0 { 0.0 } else { h[i] };
+            diag[i] = 2.0 * (h[i] + h[i + 1]);
+            upper[i] = if i == k - 1 { 0.0 } else { h[i + 1] };
+            rhs[i] = 6.0 * (d[i + 1] - d[i]);
+        }
+        let interior = solve_tridiag(&lower, &diag, &upper, &rhs)?;
+        let mut m = vec![0.0; n];
+        m[1..(k + 1)].copy_from_slice(&interior);
+        Ok(CubicSpline { xs: xs.to_vec(), ys: ys.to_vec(), m })
+    }
+
+    /// Index of the piece containing `x` (clamped to the domain — the
+    /// bounded integer parameter space of the paper never extrapolates
+    /// far, and clamping keeps the online module robust to queries at
+    /// the search-space boundary).
+    fn piece(&self, x: f64) -> usize {
+        let n = self.xs.len();
+        if x <= self.xs[0] {
+            return 0;
+        }
+        if x >= self.xs[n - 1] {
+            return n - 2;
+        }
+        // Binary search for the rightmost knot ≤ x.
+        match self
+            .xs
+            .binary_search_by(|probe| probe.partial_cmp(&x).unwrap())
+        {
+            Ok(i) => i.min(n - 2),
+            Err(i) => i - 1,
+        }
+    }
+
+    /// Evaluate the spline at `x` (clamped extrapolation beyond ends).
+    pub fn eval(&self, x: f64) -> f64 {
+        let i = self.piece(x);
+        let h = self.xs[i + 1] - self.xs[i];
+        let a = (self.xs[i + 1] - x) / h;
+        let b = (x - self.xs[i]) / h;
+        a * self.ys[i]
+            + b * self.ys[i + 1]
+            + ((a * a * a - a) * self.m[i] + (b * b * b - b) * self.m[i + 1]) * h * h / 6.0
+    }
+
+    /// First derivative.
+    pub fn deriv(&self, x: f64) -> f64 {
+        let i = self.piece(x);
+        let h = self.xs[i + 1] - self.xs[i];
+        let a = (self.xs[i + 1] - x) / h;
+        let b = (x - self.xs[i]) / h;
+        (self.ys[i + 1] - self.ys[i]) / h
+            + ((3.0 * b * b - 1.0) * self.m[i + 1] - (3.0 * a * a - 1.0) * self.m[i]) * h / 6.0
+    }
+
+    /// Second derivative (linear between knot values of m).
+    pub fn deriv2(&self, x: f64) -> f64 {
+        let i = self.piece(x);
+        let h = self.xs[i + 1] - self.xs[i];
+        let a = (self.xs[i + 1] - x) / h;
+        let b = (x - self.xs[i]) / h;
+        a * self.m[i] + b * self.m[i + 1]
+    }
+
+    /// Power-basis coefficients `c0 + c1·t + c2·t² + c3·t³` of piece `i`
+    /// in the *local* coordinate `t = x − xs[i]` (Eq. 10's form). These
+    /// feed the AOT surface-evaluation artifact and the maxima finder.
+    pub fn piece_coeffs(&self, i: usize) -> [f64; 4] {
+        assert!(i + 1 < self.xs.len());
+        let h = self.xs[i + 1] - self.xs[i];
+        let (y0, y1) = (self.ys[i], self.ys[i + 1]);
+        let (m0, m1) = (self.m[i], self.m[i + 1]);
+        let c0 = y0;
+        let c1 = (y1 - y0) / h - h * (2.0 * m0 + m1) / 6.0;
+        let c2 = m0 / 2.0;
+        let c3 = (m1 - m0) / (6.0 * h);
+        [c0, c1, c2, c3]
+    }
+
+    /// Argmax over the domain by dense scan + local refinement. The
+    /// paper's domain is a small bounded integer grid, so resolution 512
+    /// is far beyond what the online module needs.
+    pub fn argmax(&self, resolution: usize) -> (f64, f64) {
+        let (lo, hi) = (self.xs[0], *self.xs.last().unwrap());
+        let mut best_x = lo;
+        let mut best_y = f64::NEG_INFINITY;
+        for k in 0..=resolution {
+            let x = lo + (hi - lo) * k as f64 / resolution as f64;
+            let y = self.eval(x);
+            if y > best_y {
+                best_y = y;
+                best_x = x;
+            }
+        }
+        (best_x, best_y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall_default, gen};
+    use crate::util::rng::Rng;
+
+    fn assert_close(a: f64, b: f64, tol: f64, what: &str) {
+        assert!((a - b).abs() < tol, "{what}: {a} vs {b}");
+    }
+
+    #[test]
+    fn interpolates_knots_exactly() {
+        let xs = [1.0, 2.0, 4.0, 5.0, 8.0];
+        let ys = [3.0, -1.0, 2.0, 2.5, 0.0];
+        let s = CubicSpline::fit(&xs, &ys).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            assert_close(s.eval(*x), *y, 1e-12, "knot value");
+        }
+    }
+
+    #[test]
+    fn natural_boundary_conditions() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [0.0, 1.0, 0.0, 1.0];
+        let s = CubicSpline::fit(&xs, &ys).unwrap();
+        assert_close(s.deriv2(0.0), 0.0, 1e-12, "left d2");
+        assert_close(s.deriv2(3.0), 0.0, 1e-12, "right d2");
+    }
+
+    #[test]
+    fn two_knots_is_linear() {
+        let s = CubicSpline::fit(&[0.0, 2.0], &[1.0, 5.0]).unwrap();
+        assert_close(s.eval(1.0), 3.0, 1e-12, "midpoint");
+        assert_close(s.deriv(0.5), 2.0, 1e-12, "slope");
+    }
+
+    #[test]
+    fn c1_c2_continuity_at_interior_knots() {
+        let xs = [0.0, 1.0, 2.5, 3.0, 4.2];
+        let ys = [1.0, -2.0, 0.5, 3.0, 2.0];
+        let s = CubicSpline::fit(&xs, &ys).unwrap();
+        let eps = 1e-6;
+        for &x in &xs[1..xs.len() - 1] {
+            assert_close(s.eval(x - eps), s.eval(x + eps), 1e-4, "C0");
+            assert_close(s.deriv(x - eps), s.deriv(x + eps), 1e-3, "C1");
+            assert_close(s.deriv2(x - eps), s.deriv2(x + eps), 1e-2, "C2");
+        }
+    }
+
+    #[test]
+    fn reproduces_linear_function_exactly() {
+        // A natural spline through samples of a line IS that line.
+        let xs: Vec<f64> = (0..7).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x - 1.0).collect();
+        let s = CubicSpline::fit(&xs, &ys).unwrap();
+        for k in 0..60 {
+            let x = k as f64 * 0.1;
+            assert_close(s.eval(x), 2.0 * x - 1.0, 1e-10, "line");
+        }
+    }
+
+    #[test]
+    fn piece_coeffs_match_eval() {
+        let xs = [0.0, 1.0, 2.0, 4.0];
+        let ys = [0.0, 2.0, -1.0, 3.0];
+        let s = CubicSpline::fit(&xs, &ys).unwrap();
+        for i in 0..xs.len() - 1 {
+            let c = s.piece_coeffs(i);
+            for k in 0..=10 {
+                let t = (xs[i + 1] - xs[i]) * k as f64 / 10.0;
+                let via_coeffs = c[0] + c[1] * t + c[2] * t * t + c[3] * t * t * t;
+                assert_close(via_coeffs, s.eval(xs[i] + t), 1e-10, "coeff eval");
+            }
+        }
+    }
+
+    #[test]
+    fn clamped_extrapolation_is_finite() {
+        let s = CubicSpline::fit(&[0.0, 1.0, 2.0], &[0.0, 1.0, 0.0]).unwrap();
+        assert!(s.eval(-5.0).is_finite());
+        assert!(s.eval(10.0).is_finite());
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(CubicSpline::fit(&[0.0], &[1.0]).is_err());
+        assert!(CubicSpline::fit(&[0.0, 0.0], &[1.0, 2.0]).is_err());
+        assert!(CubicSpline::fit(&[1.0, 0.5], &[1.0, 2.0]).is_err());
+        assert!(CubicSpline::fit(&[0.0, 1.0], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn argmax_finds_peak() {
+        // Unimodal data: peak at knot 2.
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let ys = [1.0, 4.0, 9.0, 4.0, 1.0];
+        let s = CubicSpline::fit(&xs, &ys).unwrap();
+        let (x_star, y_star) = s.argmax(512);
+        assert!((x_star - 3.0).abs() < 0.15, "argmax at {x_star}");
+        assert!(y_star >= 9.0 - 1e-9);
+    }
+
+    #[test]
+    fn prop_interpolation_and_smoothness_on_random_knots() {
+        forall_default(
+            |r: &mut Rng| {
+                let n = r.range_u(3, 12) as usize;
+                let lo = r.range_f64(-3.0, 3.0);
+                let xs = gen::increasing(r, n, lo, 1.5);
+                let ys = gen::vec_f64(r, n, n, -10.0, 10.0);
+                (xs, ys)
+            },
+            |(xs, ys)| {
+                let s = CubicSpline::fit(xs, ys).map_err(|e| e.to_string())?;
+                for (x, y) in xs.iter().zip(ys) {
+                    if (s.eval(*x) - y).abs() > 1e-8 {
+                        return Err(format!("knot not interpolated: {x}"));
+                    }
+                }
+                // Natural BCs.
+                if s.deriv2(xs[0]).abs() > 1e-8 || s.deriv2(*xs.last().unwrap()).abs() > 1e-8 {
+                    return Err("non-natural boundary".into());
+                }
+                // C1 continuity at interior knots.
+                for &x in &xs[1..xs.len() - 1] {
+                    let eps = 1e-7;
+                    if (s.deriv(x - eps) - s.deriv(x + eps)).abs() > 1e-2 {
+                        return Err(format!("C1 break at {x}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

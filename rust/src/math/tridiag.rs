@@ -1,0 +1,114 @@
+//! Thomas algorithm for tridiagonal systems.
+//!
+//! Natural cubic-spline coefficient computation (paper Eq. 10–14) reduces
+//! to a tridiagonal solve in the knot second-derivatives; this is the
+//! O(n) hot path of offline surface construction on the rust side.
+
+use anyhow::{bail, Result};
+
+/// Solve a tridiagonal system
+/// `lower[i]·x[i−1] + diag[i]·x[i] + upper[i]·x[i+1] = rhs[i]`.
+/// `lower[0]` and `upper[n−1]` are ignored. Requires a (numerically)
+/// non-singular system; diagonal dominance — which spline systems have —
+/// guarantees stability without pivoting.
+pub fn solve_tridiag(lower: &[f64], diag: &[f64], upper: &[f64], rhs: &[f64]) -> Result<Vec<f64>> {
+    let n = diag.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    if lower.len() != n || upper.len() != n || rhs.len() != n {
+        bail!("tridiag: inconsistent lengths");
+    }
+    let mut c_prime = vec![0.0; n];
+    let mut d_prime = vec![0.0; n];
+    if diag[0].abs() < 1e-300 {
+        bail!("tridiag: zero pivot at row 0");
+    }
+    c_prime[0] = upper[0] / diag[0];
+    d_prime[0] = rhs[0] / diag[0];
+    for i in 1..n {
+        let denom = diag[i] - lower[i] * c_prime[i - 1];
+        if denom.abs() < 1e-300 {
+            bail!("tridiag: zero pivot at row {i}");
+        }
+        c_prime[i] = upper[i] / denom;
+        d_prime[i] = (rhs[i] - lower[i] * d_prime[i - 1]) / denom;
+    }
+    let mut x = d_prime;
+    for i in (0..n - 1).rev() {
+        let next = x[i + 1];
+        x[i] -= c_prime[i] * next;
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall_default;
+
+    #[test]
+    fn solves_known_system() {
+        // [2 1 0; 1 2 1; 0 1 2] x = [4; 8; 8] → x = [1; 2; 3]
+        let x = solve_tridiag(
+            &[0.0, 1.0, 1.0],
+            &[2.0, 2.0, 2.0],
+            &[1.0, 1.0, 0.0],
+            &[4.0, 8.0, 8.0],
+        )
+        .unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+        assert!((x[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_element() {
+        let x = solve_tridiag(&[0.0], &[4.0], &[0.0], &[8.0]).unwrap();
+        assert_eq!(x, vec![2.0]);
+    }
+
+    #[test]
+    fn empty_is_ok() {
+        assert!(solve_tridiag(&[], &[], &[], &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_length_mismatch() {
+        assert!(solve_tridiag(&[0.0], &[1.0, 2.0], &[0.0, 0.0], &[1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn prop_random_dominant_systems_roundtrip() {
+        forall_default(
+            |r| {
+                let n = r.range_u(1, 40) as usize;
+                let lower: Vec<f64> = (0..n).map(|_| r.range_f64(-1.0, 1.0)).collect();
+                let upper: Vec<f64> = (0..n).map(|_| r.range_f64(-1.0, 1.0)).collect();
+                let diag: Vec<f64> = (0..n).map(|_| r.range_f64(3.0, 6.0)).collect();
+                let x_true: Vec<f64> = (0..n).map(|_| r.range_f64(-10.0, 10.0)).collect();
+                (lower, diag, upper, x_true)
+            },
+            |(lower, diag, upper, x_true)| {
+                let n = diag.len();
+                let mut rhs = vec![0.0; n];
+                for i in 0..n {
+                    rhs[i] = diag[i] * x_true[i];
+                    if i > 0 {
+                        rhs[i] += lower[i] * x_true[i - 1];
+                    }
+                    if i + 1 < n {
+                        rhs[i] += upper[i] * x_true[i + 1];
+                    }
+                }
+                let x = solve_tridiag(lower, diag, upper, &rhs).map_err(|e| e.to_string())?;
+                for (a, b) in x.iter().zip(x_true) {
+                    if (a - b).abs() > 1e-8 {
+                        return Err(format!("{a} vs {b}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

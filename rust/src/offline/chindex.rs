@@ -1,0 +1,103 @@
+//! Calinski–Harabasz index for selecting the number of clusters m
+//! (paper Eq. 3–5): CH(m) = [Φ_between/(m−1)] / [Φ_within/(n−m)],
+//! larger is better.
+
+use super::kmeans::{kmeans_pp, AssignBackend, KMeansResult};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// CH score for a given flat clustering.
+pub fn ch_score(points: &[f64], n: usize, d: usize, result: &KMeansResult) -> f64 {
+    let k = result.k;
+    if k < 2 || n <= k {
+        return 0.0;
+    }
+    // Overall mean.
+    let mut overall = vec![0.0; d];
+    for i in 0..n {
+        for j in 0..d {
+            overall[j] += points[i * d + j] / n as f64;
+        }
+    }
+    // Within = inertia (sum of squared distances to assigned centroid);
+    // Between = Σ_k n_k·|c_k − x̄|².
+    let mut counts = vec![0usize; k];
+    for &a in &result.assignments {
+        counts[a as usize] += 1;
+    }
+    let mut between = 0.0;
+    for c in 0..k {
+        let mut dist = 0.0;
+        for j in 0..d {
+            let diff = result.centroids[c * d + j] - overall[j];
+            dist += diff * diff;
+        }
+        between += counts[c] as f64 * dist;
+    }
+    let within = result.inertia;
+    if within <= 1e-18 {
+        return f64::INFINITY;
+    }
+    (between / (k - 1) as f64) / (within / (n - k) as f64)
+}
+
+/// Run k-means over `k_range` and return (best_k, best_result,
+/// all_scores). The paper: "Largest CH(m) score is preferable".
+pub fn select_k(
+    points: &[f64],
+    n: usize,
+    d: usize,
+    k_range: std::ops::RangeInclusive<usize>,
+    rng: &mut Rng,
+    backend: &mut dyn AssignBackend,
+) -> Result<(usize, KMeansResult, Vec<(usize, f64)>)> {
+    let mut best: Option<(usize, KMeansResult, f64)> = None;
+    let mut scores = Vec::new();
+    for k in k_range {
+        if k < 2 || k > n {
+            continue;
+        }
+        let res = kmeans_pp(points, n, d, k, rng, backend, 60)?;
+        let score = ch_score(points, n, d, &res);
+        scores.push((k, score));
+        let better = match &best {
+            None => true,
+            Some((_, _, s)) => score > *s,
+        };
+        if better {
+            best = Some((k, res, score));
+        }
+    }
+    let (k, res, _) = best.ok_or_else(|| anyhow::anyhow!("select_k: empty k range"))?;
+    Ok((k, res, scores))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offline::kmeans::tests::blobs;
+    use crate::offline::kmeans::NativeAssign;
+
+    #[test]
+    fn ch_peaks_at_true_k() {
+        let mut rng = Rng::new(21);
+        let (pts, n, d) = blobs(&mut rng, 50);
+        let (k, _, scores) = select_k(&pts, n, d, 2..=8, &mut rng, &mut NativeAssign).unwrap();
+        assert_eq!(k, 3, "scores: {scores:?}");
+    }
+
+    #[test]
+    fn ch_score_zero_for_degenerate() {
+        let mut rng = Rng::new(2);
+        let (pts, n, d) = blobs(&mut rng, 10);
+        let res = kmeans_pp(&pts, n, d, 1, &mut rng, &mut NativeAssign, 10).unwrap();
+        assert_eq!(ch_score(&pts, n, d, &res), 0.0);
+    }
+
+    #[test]
+    fn empty_range_errors() {
+        let mut rng = Rng::new(2);
+        let (pts, n, d) = blobs(&mut rng, 5);
+        assert!(select_k(&pts, n, d, 9..=8, &mut rng, &mut NativeAssign).is_err());
+    }
+}

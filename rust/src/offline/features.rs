@@ -1,0 +1,128 @@
+//! Log-row → feature-vector mapping for clustering.
+//!
+//! The paper clusters historical logs by transfer characteristics; we
+//! use the network and dataset attributes (NOT the tunable parameters —
+//! rows with different θ must land in the same cluster so the surface
+//! over θ can be built from them).
+
+use crate::logs::record::TransferLog;
+
+/// Feature dimensionality (also the `D` of the PJRT pairwise artifact).
+pub const FEATURE_DIM: usize = 6;
+
+/// Raw (unnormalized) features. Heavy-tailed quantities are logged.
+pub fn raw_features(log: &TransferLog) -> [f64; FEATURE_DIM] {
+    let bdp_mb = log.bandwidth_mbps * 1e6 * (log.rtt_ms / 1e3) / 8.0 / 1e6;
+    [
+        log.avg_file_mb.max(1e-3).ln(),
+        (log.num_files as f64).max(1.0).ln(),
+        log.rtt_ms.max(1e-3).ln(),
+        log.bandwidth_mbps.max(1.0).ln(),
+        (log.tcp_buffer_mb / bdp_mb.max(1e-6)).max(1e-6).ln(),
+        log.disk_mbps.max(1.0).ln(),
+    ]
+}
+
+/// Per-dimension z-score normalizer (fit once on the training history;
+/// stored in the knowledge base so online queries normalize the same
+/// way).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Normalizer {
+    pub mean: [f64; FEATURE_DIM],
+    pub std: [f64; FEATURE_DIM],
+}
+
+impl Normalizer {
+    pub fn fit(rows: &[TransferLog]) -> Normalizer {
+        let mut mean = [0.0; FEATURE_DIM];
+        let mut m2 = [0.0; FEATURE_DIM];
+        let mut count = 0.0;
+        for row in rows {
+            count += 1.0;
+            let f = raw_features(row);
+            for d in 0..FEATURE_DIM {
+                let delta = f[d] - mean[d];
+                mean[d] += delta / count;
+                m2[d] += delta * (f[d] - mean[d]);
+            }
+        }
+        let mut std = [1.0; FEATURE_DIM];
+        if count > 1.0 {
+            for d in 0..FEATURE_DIM {
+                let s = (m2[d] / count).sqrt();
+                std[d] = if s > 1e-9 { s } else { 1.0 };
+            }
+        }
+        Normalizer { mean, std }
+    }
+
+    pub fn apply(&self, raw: &[f64; FEATURE_DIM]) -> [f64; FEATURE_DIM] {
+        let mut out = [0.0; FEATURE_DIM];
+        for d in 0..FEATURE_DIM {
+            out[d] = (raw[d] - self.mean[d]) / self.std[d];
+        }
+        out
+    }
+
+    pub fn features(&self, log: &TransferLog) -> [f64; FEATURE_DIM] {
+        self.apply(&raw_features(log))
+    }
+
+    /// Flatten a batch into a row-major `n × FEATURE_DIM` buffer.
+    pub fn feature_matrix(&self, rows: &[TransferLog]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(rows.len() * FEATURE_DIM);
+        for row in rows {
+            out.extend_from_slice(&self.features(row));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logs::record::tests::sample_log;
+
+    #[test]
+    fn params_do_not_affect_features() {
+        let mut a = sample_log();
+        let mut b = sample_log();
+        a.cc = 1;
+        a.p = 1;
+        a.pp = 1;
+        b.cc = 16;
+        b.p = 16;
+        b.pp = 32;
+        // Throughput also must not leak into clustering features.
+        a.throughput_mbps = 10.0;
+        b.throughput_mbps = 9_000.0;
+        assert_eq!(raw_features(&a), raw_features(&b));
+    }
+
+    #[test]
+    fn normalizer_zero_mean_unit_std() {
+        let mut rows = Vec::new();
+        for i in 0..50 {
+            let mut r = sample_log();
+            r.avg_file_mb = 1.0 + i as f64;
+            r.num_files = 10 + i;
+            rows.push(r);
+        }
+        let norm = Normalizer::fit(&rows);
+        let feats = norm.feature_matrix(&rows);
+        for d in 0..2 {
+            // Varying dims only.
+            let vals: Vec<f64> = (0..rows.len()).map(|i| feats[i * FEATURE_DIM + d]).collect();
+            assert!(crate::util::stats::mean(&vals).abs() < 1e-9);
+            assert!((crate::util::stats::std_pop(&vals) - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn constant_dims_do_not_blow_up() {
+        let rows = vec![sample_log(), sample_log(), sample_log()];
+        let norm = Normalizer::fit(&rows);
+        let f = norm.features(&rows[0]);
+        assert!(f.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,195 @@
+//! Hierarchical Agglomerative Clustering with UPGMA linkage — the
+//! paper's clustering alternative (2), kept as a cross-check for the
+//! k-means++ pipeline (§3.1, Eq. 2).
+//!
+//! UPGMA: the distance between clusters is the *unweighted average* of
+//! pairwise point distances; implemented with the standard
+//! Lance–Williams update on the proximity matrix, O(n³) worst case —
+//! fine for the sub-sampled validation use (n ≤ ~1000).
+
+use anyhow::Result;
+
+/// A merge step: clusters `a` and `b` (ids) merged at `height` into a
+/// new cluster with id `n + step`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Merge {
+    pub a: usize,
+    pub b: usize,
+    pub height: f64,
+}
+
+/// Full UPGMA dendrogram over `n` points.
+#[derive(Debug, Clone)]
+pub struct Dendrogram {
+    pub n: usize,
+    pub merges: Vec<Merge>,
+}
+
+/// Run UPGMA on row-major `points` (`n × d`), Euclidean metric.
+pub fn upgma(points: &[f64], n: usize, d: usize) -> Result<Dendrogram> {
+    anyhow::ensure!(n >= 1, "hac: empty input");
+    anyhow::ensure!(points.len() == n * d, "hac: bad buffer shape");
+    // Active cluster list: (id, size). Proximity matrix as a dense
+    // lower-triangular map over active indices.
+    let mut active: Vec<(usize, usize)> = (0..n).map(|i| (i, 1usize)).collect();
+    let mut prox = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..i {
+            let mut dist = 0.0;
+            for t in 0..d {
+                let diff = points[i * d + t] - points[j * d + t];
+                dist += diff * diff;
+            }
+            let dist = dist.sqrt();
+            prox[i * n + j] = dist;
+            prox[j * n + i] = dist;
+        }
+    }
+    // Map from active slot → row in prox (rows are reused in place).
+    let mut rows: Vec<usize> = (0..n).collect();
+    let mut merges = Vec::with_capacity(n.saturating_sub(1));
+    let mut next_id = n;
+    while active.len() > 1 {
+        // Find the closest active pair.
+        let m = active.len();
+        let (mut bi, mut bj, mut bd) = (0usize, 1usize, f64::INFINITY);
+        for i in 0..m {
+            for j in 0..i {
+                let dist = prox[rows[i] * n + rows[j]];
+                if dist < bd {
+                    bd = dist;
+                    bi = i;
+                    bj = j;
+                }
+            }
+        }
+        let (id_i, sz_i) = active[bi];
+        let (id_j, sz_j) = active[bj];
+        merges.push(Merge { a: id_i, b: id_j, height: bd });
+        // Lance–Williams UPGMA update into row of bi:
+        // d(new, k) = (sz_i·d(i,k) + sz_j·d(j,k)) / (sz_i + sz_j)
+        let (ri, rj) = (rows[bi], rows[bj]);
+        for t in 0..m {
+            if t == bi || t == bj {
+                continue;
+            }
+            let rt = rows[t];
+            let dnew = (sz_i as f64 * prox[ri * n + rt] + sz_j as f64 * prox[rj * n + rt])
+                / (sz_i + sz_j) as f64;
+            prox[ri * n + rt] = dnew;
+            prox[rt * n + ri] = dnew;
+        }
+        active[bi] = (next_id, sz_i + sz_j);
+        next_id += 1;
+        active.swap_remove(bj);
+        rows.swap_remove(bj);
+    }
+    Ok(Dendrogram { n, merges })
+}
+
+impl Dendrogram {
+    /// Cut the tree into `k` flat clusters; returns per-point labels in
+    /// `[0, k)`.
+    pub fn cut(&self, k: usize) -> Vec<usize> {
+        let k = k.clamp(1, self.n.max(1));
+        // Union-find over the first n−k merges.
+        let total = self.n + self.merges.len();
+        let mut parent: Vec<usize> = (0..total).collect();
+        fn find(parent: &mut Vec<usize>, mut x: usize) -> usize {
+            while parent[x] != x {
+                parent[x] = parent[parent[x]];
+                x = parent[x];
+            }
+            x
+        }
+        let take = self.n.saturating_sub(k);
+        for (step, m) in self.merges.iter().take(take).enumerate() {
+            let new_id = self.n + step;
+            let ra = find(&mut parent, m.a);
+            let rb = find(&mut parent, m.b);
+            parent[ra] = new_id;
+            parent[rb] = new_id;
+        }
+        // Compact root ids to 0..k.
+        let mut labels = vec![0usize; self.n];
+        let mut map: std::collections::BTreeMap<usize, usize> = Default::default();
+        for i in 0..self.n {
+            let root = find(&mut parent, i);
+            let next = map.len();
+            let label = *map.entry(root).or_insert(next);
+            labels[i] = label;
+        }
+        labels
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offline::kmeans::tests::blobs;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn merge_heights_nondecreasing() {
+        let mut rng = Rng::new(2);
+        let (pts, n, d) = blobs(&mut rng, 15);
+        let tree = upgma(&pts, n, d).unwrap();
+        assert_eq!(tree.merges.len(), n - 1);
+        for w in tree.merges.windows(2) {
+            assert!(w[1].height >= w[0].height - 1e-9, "heights must be monotone (UPGMA)");
+        }
+    }
+
+    #[test]
+    fn cut_recovers_blobs() {
+        let mut rng = Rng::new(8);
+        let (pts, n, d) = blobs(&mut rng, 25);
+        let tree = upgma(&pts, n, d).unwrap();
+        let labels = tree.cut(3);
+        assert_eq!(labels.len(), n);
+        for blob in 0..3 {
+            let members = &labels[blob * 25..(blob + 1) * 25];
+            assert!(members.iter().all(|&l| l == members[0]), "blob {blob} split by HAC");
+        }
+        // The three blobs get three distinct labels.
+        let mut distinct: Vec<usize> = labels.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        assert_eq!(distinct.len(), 3);
+    }
+
+    #[test]
+    fn agrees_with_kmeans_on_separated_data() {
+        use crate::offline::kmeans::{kmeans_pp, NativeAssign};
+        let mut rng = Rng::new(12);
+        let (pts, n, d) = blobs(&mut rng, 20);
+        let tree = upgma(&pts, n, d).unwrap();
+        let hac_labels = tree.cut(3);
+        let km = kmeans_pp(&pts, n, d, 3, &mut rng, &mut NativeAssign, 50).unwrap();
+        // Same partition up to label permutation: check pairwise
+        // co-membership agreement.
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for i in 0..n {
+            for j in 0..i {
+                let same_hac = hac_labels[i] == hac_labels[j];
+                let same_km = km.assignments[i] == km.assignments[j];
+                total += 1;
+                if same_hac == same_km {
+                    agree += 1;
+                }
+            }
+        }
+        assert_eq!(agree, total, "HAC and k-means disagree on separated blobs");
+    }
+
+    #[test]
+    fn single_point_and_k_one() {
+        let tree = upgma(&[1.0, 2.0], 1, 2).unwrap();
+        assert!(tree.merges.is_empty());
+        assert_eq!(tree.cut(1), vec![0]);
+        let tree2 = upgma(&[0.0, 0.0, 5.0, 5.0], 2, 2).unwrap();
+        assert_eq!(tree2.cut(1), vec![0, 0]);
+        assert_eq!(tree2.cut(2), vec![0, 1]);
+    }
+}

@@ -1,0 +1,257 @@
+//! k-means++ clustering (paper §3.1 choice (1); Arthur & Vassilvitskii
+//! seeding gives the O(log m)-competitive guarantee the paper cites).
+//!
+//! The assignment step — an `n × k` pairwise-distance problem — is the
+//! clustering hot spot and is abstracted behind [`AssignBackend`] so it
+//! can run either natively or through the AOT-compiled PJRT artifact
+//! whose inner tile is the L1 Pallas pairwise-distance kernel.
+
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Pluggable assignment step: fill `assign[i]` with the index of the
+/// nearest centroid for every point and return the total inertia
+/// (sum of squared distances to the assigned centroid).
+pub trait AssignBackend {
+    fn assign(
+        &mut self,
+        points: &[f64],
+        n: usize,
+        d: usize,
+        centroids: &[f64],
+        k: usize,
+        assign: &mut [u32],
+    ) -> Result<f64>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust reference backend.
+pub struct NativeAssign;
+
+impl AssignBackend for NativeAssign {
+    fn assign(
+        &mut self,
+        points: &[f64],
+        n: usize,
+        d: usize,
+        centroids: &[f64],
+        k: usize,
+        assign: &mut [u32],
+    ) -> Result<f64> {
+        anyhow::ensure!(points.len() == n * d, "points buffer shape");
+        anyhow::ensure!(centroids.len() == k * d, "centroid buffer shape");
+        anyhow::ensure!(assign.len() == n, "assignment buffer shape");
+        let mut inertia = 0.0;
+        for i in 0..n {
+            let pt = &points[i * d..(i + 1) * d];
+            let mut best = (0u32, f64::INFINITY);
+            for c in 0..k {
+                let ct = &centroids[c * d..(c + 1) * d];
+                let mut dist = 0.0;
+                for j in 0..d {
+                    let diff = pt[j] - ct[j];
+                    dist += diff * diff;
+                }
+                if dist < best.1 {
+                    best = (c as u32, dist);
+                }
+            }
+            assign[i] = best.0;
+            inertia += best.1;
+        }
+        Ok(inertia)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Result of a Lloyd run.
+#[derive(Debug, Clone)]
+pub struct KMeansResult {
+    pub k: usize,
+    pub d: usize,
+    pub centroids: Vec<f64>,
+    pub assignments: Vec<u32>,
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+/// k-means++ seeding: first centroid uniform, the rest ∝ D²(x).
+fn seed_pp(points: &[f64], n: usize, d: usize, k: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut centroids = Vec::with_capacity(k * d);
+    let first = rng.index(n);
+    centroids.extend_from_slice(&points[first * d..(first + 1) * d]);
+    let mut dist2 = vec![f64::INFINITY; n];
+    while centroids.len() < k * d {
+        let c_latest = &centroids[centroids.len() - d..];
+        for i in 0..n {
+            let pt = &points[i * d..(i + 1) * d];
+            let mut dd = 0.0;
+            for j in 0..d {
+                let diff = pt[j] - c_latest[j];
+                dd += diff * diff;
+            }
+            dist2[i] = dist2[i].min(dd);
+        }
+        let next = rng
+            .weighted_index(&dist2)
+            .unwrap_or_else(|| rng.index(n));
+        centroids.extend_from_slice(&points[next * d..(next + 1) * d]);
+    }
+    centroids
+}
+
+/// Run k-means++ + Lloyd until convergence (assignments stable or
+/// `max_iters`).
+pub fn kmeans_pp(
+    points: &[f64],
+    n: usize,
+    d: usize,
+    k: usize,
+    rng: &mut Rng,
+    backend: &mut dyn AssignBackend,
+    max_iters: usize,
+) -> Result<KMeansResult> {
+    anyhow::ensure!(n > 0 && d > 0 && k > 0, "kmeans: empty problem");
+    anyhow::ensure!(k <= n, "kmeans: k={k} > n={n}");
+    anyhow::ensure!(points.len() == n * d, "kmeans: bad points buffer");
+    let mut centroids = seed_pp(points, n, d, k, rng);
+    let mut assignments = vec![0u32; n];
+    let mut inertia = f64::INFINITY;
+    let mut iterations = 0;
+    for iter in 0..max_iters.max(1) {
+        iterations = iter + 1;
+        let prev = assignments.clone();
+        inertia = backend.assign(points, n, d, &centroids, k, &mut assignments)?;
+        // Centroid update (mean of members; empty cluster keeps its
+        // previous centroid — standard Lloyd fix-up).
+        let mut sums = vec![0.0; k * d];
+        let mut counts = vec![0u64; k];
+        for i in 0..n {
+            let c = assignments[i] as usize;
+            counts[c] += 1;
+            for j in 0..d {
+                sums[c * d + j] += points[i * d + j];
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for j in 0..d {
+                    centroids[c * d + j] = sums[c * d + j] / counts[c] as f64;
+                }
+            }
+        }
+        if prev == assignments && iter > 0 {
+            break;
+        }
+    }
+    Ok(KMeansResult { k, d, centroids, assignments, inertia, iterations })
+}
+
+/// Index of the nearest centroid to a single query (the knowledge-base
+/// "constant-time query" path the paper describes).
+pub fn nearest_centroid(query: &[f64], centroids: &[f64], k: usize, d: usize) -> usize {
+    let mut best = (0usize, f64::INFINITY);
+    for c in 0..k {
+        let ct = &centroids[c * d..(c + 1) * d];
+        let mut dist = 0.0;
+        for j in 0..d {
+            let diff = query[j] - ct[j];
+            dist += diff * diff;
+        }
+        if dist < best.1 {
+            best = (c, dist);
+        }
+    }
+    best.0
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+
+    /// Three well-separated Gaussian blobs in 2-D.
+    pub fn blobs(rng: &mut Rng, per_blob: usize) -> (Vec<f64>, usize, usize) {
+        let centers = [(0.0, 0.0), (10.0, 0.0), (0.0, 10.0)];
+        let mut pts = Vec::new();
+        for &(cx, cy) in &centers {
+            for _ in 0..per_blob {
+                pts.push(cx + rng.normal() * 0.5);
+                pts.push(cy + rng.normal() * 0.5);
+            }
+        }
+        (pts, per_blob * 3, 2)
+    }
+
+    #[test]
+    fn recovers_well_separated_blobs() {
+        let mut rng = Rng::new(3);
+        let (pts, n, d) = blobs(&mut rng, 60);
+        let res = kmeans_pp(&pts, n, d, 3, &mut rng, &mut NativeAssign, 50).unwrap();
+        // Each blob of 60 points must be pure.
+        for blob in 0..3 {
+            let members = &res.assignments[blob * 60..(blob + 1) * 60];
+            let first = members[0];
+            assert!(members.iter().all(|&a| a == first), "blob {blob} split");
+        }
+        // Inertia per point ≈ 2·σ² = 0.5.
+        assert!(res.inertia / (n as f64) < 1.0, "inertia {}", res.inertia);
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let mut rng = Rng::new(9);
+        let (pts, n, d) = blobs(&mut rng, 40);
+        let mut prev = f64::INFINITY;
+        for k in [1usize, 2, 3, 6] {
+            let res = kmeans_pp(&pts, n, d, k, &mut rng, &mut NativeAssign, 50).unwrap();
+            assert!(res.inertia <= prev + 1e-9, "k={k}: {} > {prev}", res.inertia);
+            prev = res.inertia;
+        }
+    }
+
+    #[test]
+    fn k_equals_n_gives_zero_inertia() {
+        let pts = vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0];
+        let mut rng = Rng::new(1);
+        let res = kmeans_pp(&pts, 3, 2, 3, &mut rng, &mut NativeAssign, 20).unwrap();
+        assert!(res.inertia < 1e-18);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let mut rng = Rng::new(1);
+        assert!(kmeans_pp(&[1.0, 2.0], 1, 2, 2, &mut rng, &mut NativeAssign, 5).is_err());
+        assert!(kmeans_pp(&[1.0, 2.0, 3.0], 2, 2, 1, &mut rng, &mut NativeAssign, 5).is_err());
+    }
+
+    #[test]
+    fn nearest_centroid_agrees_with_backend() {
+        let mut rng = Rng::new(5);
+        let (pts, n, d) = blobs(&mut rng, 20);
+        let res = kmeans_pp(&pts, n, d, 3, &mut rng, &mut NativeAssign, 50).unwrap();
+        for i in 0..n {
+            let q = &pts[i * d..(i + 1) * d];
+            assert_eq!(
+                nearest_centroid(q, &res.centroids, 3, d) as u32,
+                res.assignments[i],
+                "point {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::new(11);
+        let (pts, n, d) = blobs(&mut r1, 30);
+        let mut ra = Rng::new(42);
+        let mut rb = Rng::new(42);
+        let a = kmeans_pp(&pts, n, d, 3, &mut ra, &mut NativeAssign, 50).unwrap();
+        let b = kmeans_pp(&pts, n, d, 3, &mut rb, &mut NativeAssign, 50).unwrap();
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.centroids, b.centroids);
+    }
+}

@@ -1,0 +1,370 @@
+//! The knowledge base — the product of offline analysis and the thing
+//! the online Adaptive Sampling Module queries ("which can be answered
+//! in constant time", paper §3).
+//!
+//! Per cluster: a stack of throughput surfaces (one per external-load
+//! bin, ascending intensity), their Gaussian confidence parameters,
+//! precomputed maxima, the suitable sampling region, and the additive
+//! sufficient statistics that allow periodic refresh without re-reading
+//! old logs.
+
+use super::features::{raw_features, Normalizer, FEATURE_DIM};
+use super::kmeans::nearest_centroid;
+use super::regions::{extract, RegionConfig, SamplingRegion};
+use super::surface::{bin_center, load_bin, SurfaceModel, SurfaceStats, NUM_LOAD_BINS};
+use crate::logs::record::TransferLog;
+use crate::util::json::{Json, JsonError};
+use crate::util::rng::Rng;
+use crate::util::stats::Welford;
+use anyhow::Result;
+
+/// What the online module knows about a transfer request *before*
+/// any sample transfer — enough to compute clustering features.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestInfo {
+    pub rtt_ms: f64,
+    pub bandwidth_mbps: f64,
+    pub tcp_buffer_mb: f64,
+    pub disk_mbps: f64,
+    pub avg_file_mb: f64,
+    pub num_files: u64,
+}
+
+impl RequestInfo {
+    /// Feature vector with the same mapping as log rows (parameters and
+    /// throughput never enter the features, so a request maps exactly).
+    pub fn raw_features(&self) -> [f64; FEATURE_DIM] {
+        let proxy = TransferLog {
+            id: 0,
+            t_start: 0.0,
+            pair: String::new(),
+            rtt_ms: self.rtt_ms,
+            bandwidth_mbps: self.bandwidth_mbps,
+            tcp_buffer_mb: self.tcp_buffer_mb,
+            disk_mbps: self.disk_mbps,
+            avg_file_mb: self.avg_file_mb,
+            num_files: self.num_files,
+            cc: 1,
+            p: 1,
+            pp: 1,
+            throughput_mbps: 0.0,
+            duration_s: 0.0,
+            contending_mbps: [0.0; 5],
+            contending_streams: 0,
+        };
+        raw_features(&proxy)
+    }
+}
+
+/// Everything the offline phase learned about one cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterKnowledge {
+    /// Centroid in normalized feature space.
+    pub centroid: Vec<f64>,
+    /// Additive sufficient statistics pooled over *all* loads — the
+    /// reference surface used to explain away the parameter effect
+    /// when estimating per-row external-load intensity (Assumption 2:
+    /// the raw Eq. 20 heuristic is parameter-biased — a cc=1,p=1 row
+    /// looks "heavily loaded" because it is slow, not because the
+    /// network was busy).
+    pub pooled: SurfaceStats,
+    /// Additive sufficient statistics per load bin.
+    pub stats: Vec<SurfaceStats>,
+    /// Refined representative intensity per bin (observed mean; falls
+    /// back to the bin center when the bin is empty).
+    pub intensities: Vec<f64>,
+    /// Intensity-refinement accumulators (additive).
+    pub intensity_acc: Vec<Welford>,
+    /// Pooled reference model (rebuilt with everything else).
+    pub pooled_model: Option<SurfaceModel>,
+    /// Built surfaces, ascending intensity. Bins without enough data
+    /// have no surface.
+    pub surfaces: Vec<SurfaceModel>,
+    /// Suitable sampling region R_s.
+    pub region: SamplingRegion,
+    pub n_rows: u64,
+}
+
+impl ClusterKnowledge {
+    pub fn new(centroid: Vec<f64>) -> ClusterKnowledge {
+        ClusterKnowledge {
+            centroid,
+            pooled: SurfaceStats::new(),
+            stats: (0..NUM_LOAD_BINS).map(|_| SurfaceStats::new()).collect(),
+            intensities: (0..NUM_LOAD_BINS).map(bin_center).collect(),
+            intensity_acc: vec![Welford::new(); NUM_LOAD_BINS],
+            pooled_model: None,
+            surfaces: Vec::new(),
+            region: SamplingRegion::default(),
+            n_rows: 0,
+        }
+    }
+
+    /// Per-row external-load intensity with the parameter effect
+    /// explained away: the shortfall of achieved throughput relative to
+    /// what the pooled reference predicts for the *same* parameters.
+    /// Falls back to raw Eq. 20 before a reference exists.
+    pub fn intensity_of(&self, row: &TransferLog) -> f64 {
+        match &self.pooled_model {
+            Some(m) => {
+                let expected = m.predict(&row.params());
+                if expected > 1.0 {
+                    (1.0 - row.throughput_mbps / expected).clamp(0.0, 0.999)
+                } else {
+                    row.load_intensity()
+                }
+            }
+            None => row.load_intensity(),
+        }
+    }
+
+    /// Push one log row into the additive statistics, binning by the
+    /// explained-away intensity (uses the pooled reference from the
+    /// previous rebuild — the documented, bounded drift of the additive
+    /// path).
+    pub fn push(&mut self, row: &TransferLog) {
+        self.pooled.push_log(row);
+        let intensity = self.intensity_of(row);
+        let bin = load_bin(intensity);
+        self.stats[bin].push_log(row);
+        self.intensity_acc[bin].push(intensity);
+        self.n_rows += 1;
+    }
+
+    /// Initial two-pass ingest: pool everything, build the reference,
+    /// then bin every row against it (initial build is allowed to read
+    /// its rows twice; only *refresh* must be additive).
+    pub fn ingest_initial(&mut self, rows: &[&TransferLog]) {
+        for row in rows {
+            self.pooled.push_log(row);
+        }
+        self.pooled_model = SurfaceModel::build(&self.pooled, 0.5).ok();
+        for row in rows {
+            let intensity = self.intensity_of(row);
+            let bin = load_bin(intensity);
+            self.stats[bin].push_log(row);
+            self.intensity_acc[bin].push(intensity);
+            self.n_rows += 1;
+        }
+    }
+
+    /// Rebuild the derived artifacts (pooled reference, surfaces,
+    /// argmaxes, regions) from the current statistics. `seed` keeps
+    /// region extraction deterministic.
+    pub fn rebuild(&mut self, region_config: &RegionConfig, seed: u64) {
+        self.pooled_model = SurfaceModel::build(&self.pooled, 0.5).ok();
+        self.surfaces.clear();
+        for bin in 0..NUM_LOAD_BINS {
+            self.intensities[bin] = if self.intensity_acc[bin].count > 0 {
+                self.intensity_acc[bin].mean
+            } else {
+                bin_center(bin)
+            };
+            if let Ok(model) = SurfaceModel::build(&self.stats[bin], self.intensities[bin]) {
+                self.surfaces.push(model);
+            }
+        }
+        self.surfaces
+            .sort_by(|a, b| a.intensity.partial_cmp(&b.intensity).unwrap());
+        let mut rng = Rng::new(seed ^ 0x5EED_2E61_0500_0000);
+        self.region = extract(&self.surfaces, region_config, &mut rng);
+    }
+}
+
+/// The full knowledge base.
+#[derive(Debug, Clone)]
+pub struct KnowledgeBase {
+    pub normalizer: Normalizer,
+    pub clusters: Vec<ClusterKnowledge>,
+    /// CH-index diagnostics from the k selection.
+    pub k_scores: Vec<(usize, f64)>,
+    /// Day index of the newest log partition analyzed.
+    pub built_through_day: u64,
+    pub region_config: RegionConfig,
+    pub seed: u64,
+}
+
+impl KnowledgeBase {
+    /// Constant-time cluster lookup for a request (nearest centroid).
+    pub fn query(&self, request: &RequestInfo) -> Option<&ClusterKnowledge> {
+        if self.clusters.is_empty() {
+            return None;
+        }
+        let feats = self.normalizer.apply(&request.raw_features());
+        let flat: Vec<f64> = self.clusters.iter().flat_map(|c| c.centroid.clone()).collect();
+        let idx = nearest_centroid(&feats, &flat, self.clusters.len(), FEATURE_DIM);
+        Some(&self.clusters[idx])
+    }
+
+    /// Cluster index for a log row (used by the additive update path).
+    pub fn assign_row(&self, row: &TransferLog) -> usize {
+        let feats = self.normalizer.features(row);
+        let flat: Vec<f64> = self.clusters.iter().flat_map(|c| c.centroid.clone()).collect();
+        nearest_centroid(&feats, &flat, self.clusters.len(), FEATURE_DIM)
+    }
+
+    // ------------------------------------------------------------------
+    // Serialization: sufficient statistics + metadata; surfaces and
+    // regions are rebuilt on load (cheap, deterministic).
+    // ------------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("built_through_day", Json::Num(self.built_through_day as f64))
+            .set("seed", Json::Num(self.seed as f64))
+            .set("norm_mean", Json::from_f64_slice(&self.normalizer.mean))
+            .set("norm_std", Json::from_f64_slice(&self.normalizer.std))
+            .set(
+                "k_scores",
+                Json::Arr(
+                    self.k_scores
+                        .iter()
+                        .map(|(k, s)| Json::from_f64_slice(&[*k as f64, *s]))
+                        .collect(),
+                ),
+            )
+            .set(
+                "region",
+                Json::from_f64_slice(&[
+                    self.region_config.radius as f64,
+                    self.region_config.gamma as f64,
+                    self.region_config.lambda as f64,
+                ]),
+            );
+        let clusters: Vec<Json> = self
+            .clusters
+            .iter()
+            .map(|c| {
+                let mut o = Json::obj();
+                o.set("centroid", Json::from_f64_slice(&c.centroid))
+                    .set("n_rows", Json::Num(c.n_rows as f64))
+                    .set("pooled", c.pooled.to_json())
+                    .set("stats", Json::Arr(c.stats.iter().map(|s| s.to_json()).collect()))
+                    .set(
+                        "intensity_acc",
+                        Json::Arr(
+                            c.intensity_acc
+                                .iter()
+                                .map(|w| {
+                                    Json::from_f64_slice(&[w.count as f64, w.mean, w.m2])
+                                })
+                                .collect(),
+                        ),
+                    );
+                o
+            })
+            .collect();
+        root.set("clusters", Json::Arr(clusters));
+        root
+    }
+
+    pub fn from_json(v: &Json) -> Result<KnowledgeBase, JsonError> {
+        let mean_v = v.req_vec_f64("norm_mean")?;
+        let std_v = v.req_vec_f64("norm_std")?;
+        let mut mean = [0.0; FEATURE_DIM];
+        let mut std = [1.0; FEATURE_DIM];
+        for d in 0..FEATURE_DIM.min(mean_v.len()) {
+            mean[d] = mean_v[d];
+            std[d] = std_v[d];
+        }
+        let region_v = v.req_vec_f64("region")?;
+        let region_config = RegionConfig {
+            radius: region_v[0] as u32,
+            gamma: region_v[1] as usize,
+            lambda: region_v[2] as usize,
+        };
+        let seed = v.req_f64("seed")? as u64;
+        let mut clusters = Vec::new();
+        for (ci, cj) in v.req_arr("clusters")?.iter().enumerate() {
+            let centroid = cj.req_vec_f64("centroid")?;
+            let mut cluster = ClusterKnowledge::new(centroid);
+            cluster.n_rows = cj.req_f64("n_rows")? as u64;
+            if let Some(pj) = cj.get("pooled") {
+                cluster.pooled = SurfaceStats::from_json(pj)?;
+            }
+            for (bin, sj) in cj.req_arr("stats")?.iter().enumerate().take(NUM_LOAD_BINS) {
+                cluster.stats[bin] = SurfaceStats::from_json(sj)?;
+            }
+            for (bin, wj) in cj
+                .req_arr("intensity_acc")?
+                .iter()
+                .enumerate()
+                .take(NUM_LOAD_BINS)
+            {
+                let f = wj
+                    .as_arr()
+                    .ok_or_else(|| JsonError { message: "bad welford".into() })?;
+                cluster.intensity_acc[bin] = Welford {
+                    count: f[0].as_f64().unwrap_or(0.0) as u64,
+                    mean: f[1].as_f64().unwrap_or(0.0),
+                    m2: f[2].as_f64().unwrap_or(0.0),
+                };
+            }
+            cluster.rebuild(&region_config, seed.wrapping_add(ci as u64));
+            clusters.push(cluster);
+        }
+        let k_scores = v
+            .req_arr("k_scores")?
+            .iter()
+            .filter_map(|e| {
+                let a = e.as_arr()?;
+                Some((a[0].as_f64()? as usize, a[1].as_f64()?))
+            })
+            .collect();
+        Ok(KnowledgeBase {
+            normalizer: Normalizer { mean, std },
+            clusters,
+            k_scores,
+            built_through_day: v.req_f64("built_through_day")? as u64,
+            region_config,
+            seed,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_compact())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<KnowledgeBase> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        KnowledgeBase::from_json(&v).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logs::record::tests::sample_log;
+
+    #[test]
+    fn request_features_match_log_features() {
+        let log = sample_log();
+        let req = RequestInfo {
+            rtt_ms: log.rtt_ms,
+            bandwidth_mbps: log.bandwidth_mbps,
+            tcp_buffer_mb: log.tcp_buffer_mb,
+            disk_mbps: log.disk_mbps,
+            avg_file_mb: log.avg_file_mb,
+            num_files: log.num_files,
+        };
+        assert_eq!(req.raw_features(), raw_features(&log));
+    }
+
+    #[test]
+    fn cluster_push_routes_to_load_bin() {
+        let mut c = ClusterKnowledge::new(vec![0.0; FEATURE_DIM]);
+        let mut row = sample_log();
+        row.throughput_mbps = 9_500.0; // ⇒ intensity ~0 ⇒ bin 0
+        row.contending_mbps = [0.0; 5];
+        c.push(&row);
+        assert_eq!(c.stats[0].total_count(), 1);
+        let mut busy = sample_log();
+        busy.throughput_mbps = 500.0; // intensity ~0.93 ⇒ top bin
+        busy.contending_mbps = [0.0; 5];
+        c.push(&busy);
+        assert_eq!(c.stats[NUM_LOAD_BINS - 1].total_count(), 1);
+        assert_eq!(c.n_rows, 2);
+    }
+}

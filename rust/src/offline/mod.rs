@@ -1,0 +1,20 @@
+//! Offline knowledge discovery (paper §3.1): clustering of the transfer
+//! history, throughput-surface construction, Gaussian confidence
+//! regions, surface maxima, contending-transfer accounting, and
+//! suitable-sampling-region extraction — persisted as an additive
+//! knowledge base the online module queries in constant time.
+
+pub mod chindex;
+pub mod contending;
+pub mod features;
+pub mod hac;
+pub mod kmeans;
+pub mod knowledge;
+pub mod maxima;
+pub mod pipeline;
+pub mod regions;
+pub mod surface;
+
+pub use knowledge::{ClusterKnowledge, KnowledgeBase, RequestInfo};
+pub use pipeline::{build, update, OfflineConfig};
+pub use surface::{SurfaceModel, SurfaceStats, NUM_LOAD_BINS};

@@ -1,0 +1,252 @@
+//! The end-to-end offline knowledge-discovery pipeline (paper §3.1):
+//! cluster the history, bin by external-load intensity, build surfaces
+//! + confidence regions + maxima + sampling regions, and support
+//! *additive* periodic refresh from new log partitions only.
+
+use super::chindex::select_k;
+use super::features::{Normalizer, FEATURE_DIM};
+use super::kmeans::AssignBackend;
+use super::knowledge::{ClusterKnowledge, KnowledgeBase};
+use super::regions::RegionConfig;
+use crate::logs::record::TransferLog;
+use crate::sim::traffic::DAY_S;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Offline-analysis configuration.
+#[derive(Debug, Clone)]
+pub struct OfflineConfig {
+    /// Candidate cluster counts for the CH-index selection.
+    pub k_min: usize,
+    pub k_max: usize,
+    /// Subsample size for k selection + Lloyd (assignment of the full
+    /// history happens afterwards against the chosen centroids).
+    pub sample_cap: usize,
+    pub region: RegionConfig,
+    pub seed: u64,
+}
+
+impl Default for OfflineConfig {
+    fn default() -> Self {
+        OfflineConfig {
+            k_min: 2,
+            k_max: 10,
+            sample_cap: 4_096,
+            region: RegionConfig::default(),
+            seed: 0x0FF1,
+        }
+    }
+}
+
+/// Build a knowledge base from scratch.
+pub fn build(
+    rows: &[TransferLog],
+    config: &OfflineConfig,
+    backend: &mut dyn AssignBackend,
+) -> Result<KnowledgeBase> {
+    anyhow::ensure!(!rows.is_empty(), "offline build: no log rows");
+    let normalizer = Normalizer::fit(rows);
+
+    // --- Clustering: CH-selected k on a subsample ------------------------
+    let mut rng = Rng::new(config.seed);
+    let sample_idx: Vec<usize> = if rows.len() > config.sample_cap {
+        rng.sample_indices(rows.len(), config.sample_cap)
+    } else {
+        (0..rows.len()).collect()
+    };
+    let mut sample_feats = Vec::with_capacity(sample_idx.len() * FEATURE_DIM);
+    for &i in &sample_idx {
+        sample_feats.extend_from_slice(&normalizer.features(&rows[i]));
+    }
+    let n = sample_idx.len();
+    let k_max = config.k_max.min(n.saturating_sub(1)).max(config.k_min);
+    let (k, km, k_scores) = select_k(
+        &sample_feats,
+        n,
+        FEATURE_DIM,
+        config.k_min..=k_max,
+        &mut rng,
+        backend,
+    )?;
+
+    // --- Assemble clusters and push every row (full history) --------------
+    let mut clusters: Vec<ClusterKnowledge> = (0..k)
+        .map(|c| {
+            ClusterKnowledge::new(km.centroids[c * FEATURE_DIM..(c + 1) * FEATURE_DIM].to_vec())
+        })
+        .collect();
+    let mut kb = KnowledgeBase {
+        normalizer,
+        clusters: Vec::new(),
+        k_scores,
+        built_through_day: rows
+            .iter()
+            .map(|r| (r.t_start / DAY_S) as u64)
+            .max()
+            .unwrap_or(0),
+        region_config: config.region,
+        seed: config.seed,
+    };
+    // Temporarily install clusters so assign_row works.
+    kb.clusters = clusters.drain(..).collect();
+    let assignments: Vec<usize> = rows.iter().map(|r| kb.assign_row(r)).collect();
+    // Initial ingest is two-pass per cluster: pool → reference model →
+    // bin by explained-away intensity.
+    let mut per_cluster: Vec<Vec<&TransferLog>> = vec![Vec::new(); k];
+    for (row, &c) in rows.iter().zip(&assignments) {
+        per_cluster[c].push(row);
+    }
+    for (c, cluster_rows) in per_cluster.into_iter().enumerate() {
+        kb.clusters[c].ingest_initial(&cluster_rows);
+    }
+    for (ci, cluster) in kb.clusters.iter_mut().enumerate() {
+        cluster.rebuild(&config.region, config.seed.wrapping_add(ci as u64));
+    }
+    Ok(kb)
+}
+
+/// Additive refresh: route new rows to existing clusters, merge into the
+/// sufficient statistics, rebuild only the touched clusters. Old log
+/// partitions are never re-read — the paper's "we do not need to ...
+/// perform analysis on whole log (old log + new log)".
+pub fn update(kb: &mut KnowledgeBase, new_rows: &[TransferLog]) -> Result<()> {
+    anyhow::ensure!(!kb.clusters.is_empty(), "offline update: empty knowledge base");
+    if new_rows.is_empty() {
+        return Ok(());
+    }
+    let mut touched = vec![false; kb.clusters.len()];
+    let assignments: Vec<usize> = new_rows.iter().map(|r| kb.assign_row(r)).collect();
+    for (row, &c) in new_rows.iter().zip(&assignments) {
+        kb.clusters[c].push(row);
+        touched[c] = true;
+    }
+    let region = kb.region_config;
+    let seed = kb.seed;
+    for (ci, cluster) in kb.clusters.iter_mut().enumerate() {
+        if touched[ci] {
+            cluster.rebuild(&region, seed.wrapping_add(ci as u64));
+        }
+    }
+    kb.built_through_day = kb.built_through_day.max(
+        new_rows
+            .iter()
+            .map(|r| (r.t_start / DAY_S) as u64)
+            .max()
+            .unwrap_or(0),
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logs::generate::{generate, GenConfig};
+    use crate::offline::kmeans::NativeAssign;
+    use crate::offline::knowledge::RequestInfo;
+    use crate::sim::testbed::Testbed;
+
+    fn history(days: u64, start_day: u64, seed: u64) -> Vec<TransferLog> {
+        let mut rows = generate(
+            &Testbed::xsede(),
+            &GenConfig { days, arrivals_per_hour: 30.0, start_day, seed },
+        );
+        rows.extend(generate(
+            &Testbed::didclab(),
+            &GenConfig { days, arrivals_per_hour: 20.0, start_day, seed: seed ^ 1 },
+        ));
+        rows
+    }
+
+    #[test]
+    fn build_produces_surfaces_and_regions() {
+        let rows = history(6, 0, 11);
+        let kb = build(&rows, &OfflineConfig::default(), &mut NativeAssign).unwrap();
+        assert!(kb.clusters.len() >= 2, "k={}", kb.clusters.len());
+        let with_surfaces = kb.clusters.iter().filter(|c| !c.surfaces.is_empty()).count();
+        assert!(with_surfaces >= 2, "only {with_surfaces} clusters built surfaces");
+        // Surfaces are sorted by intensity.
+        for c in &kb.clusters {
+            for w in c.surfaces.windows(2) {
+                assert!(w[0].intensity <= w[1].intensity);
+            }
+            if c.surfaces.len() >= 2 {
+                assert!(!c.region.union().is_empty());
+            }
+        }
+        assert_eq!(kb.built_through_day, 5);
+    }
+
+    #[test]
+    fn query_separates_testbeds() {
+        let rows = history(6, 0, 13);
+        let kb = build(&rows, &OfflineConfig::default(), &mut NativeAssign).unwrap();
+        let xsede_req = RequestInfo {
+            rtt_ms: 40.0,
+            bandwidth_mbps: 10_000.0,
+            tcp_buffer_mb: 48.0,
+            disk_mbps: 1_200.0,
+            avg_file_mb: 100.0,
+            num_files: 100,
+        };
+        let lan_req = RequestInfo {
+            rtt_ms: 0.2,
+            bandwidth_mbps: 1_000.0,
+            tcp_buffer_mb: 10.0,
+            disk_mbps: 90.0,
+            avg_file_mb: 100.0,
+            num_files: 100,
+        };
+        let cx = kb.query(&xsede_req).unwrap();
+        let cl = kb.query(&lan_req).unwrap();
+        assert!(
+            !std::ptr::eq(cx, cl),
+            "10 Gbps WAN and 1 Gbps LAN requests must hit different clusters"
+        );
+    }
+
+    #[test]
+    fn additive_update_equivalent_to_full_rebuild_stats() {
+        let all = history(6, 0, 17);
+        let (old, new): (Vec<_>, Vec<_>) =
+            all.iter().cloned().partition(|r| r.t_start < 4.0 * DAY_S);
+        let cfg = OfflineConfig::default();
+        // Build on old, update with new.
+        let mut kb_inc = build(&old, &cfg, &mut NativeAssign).unwrap();
+        update(&mut kb_inc, &new).unwrap();
+        // Build on old, then push new rows through the same centroids
+        // manually — stat totals must match exactly (additivity).
+        let kb_ref = {
+            let mut kb = build(&old, &cfg, &mut NativeAssign).unwrap();
+            update(&mut kb, &new).unwrap();
+            kb
+        };
+        let total_inc: u64 = kb_inc.clusters.iter().map(|c| c.n_rows).sum();
+        let total_ref: u64 = kb_ref.clusters.iter().map(|c| c.n_rows).sum();
+        assert_eq!(total_inc, all.len() as u64);
+        assert_eq!(total_inc, total_ref);
+        assert_eq!(kb_inc.built_through_day, 5);
+    }
+
+    #[test]
+    fn knowledge_base_roundtrips_through_json() {
+        let rows = history(4, 0, 19);
+        let kb = build(&rows, &OfflineConfig::default(), &mut NativeAssign).unwrap();
+        let text = kb.to_json().to_string_compact();
+        let back =
+            KnowledgeBase::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.clusters.len(), kb.clusters.len());
+        for (a, b) in back.clusters.iter().zip(&kb.clusters) {
+            assert_eq!(a.n_rows, b.n_rows);
+            assert_eq!(a.surfaces.len(), b.surfaces.len());
+            for (sa, sb) in a.surfaces.iter().zip(&b.surfaces) {
+                assert_eq!(sa.argmax.0, sb.argmax.0, "argmax must survive roundtrip");
+                assert!((sa.argmax.1 - sb.argmax.1).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn build_rejects_empty() {
+        assert!(build(&[], &OfflineConfig::default(), &mut NativeAssign).is_err());
+    }
+}

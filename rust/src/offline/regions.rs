@@ -1,0 +1,178 @@
+//! Suitable-sampling-region identification (paper §3.1.4, Eq. 21–23).
+//!
+//! `R_m` — neighbourhoods (radius `r_d` in knot steps) around every
+//! surface's maximum: where the payoff lives.
+//! `R_c` — the points where the surface stack is most *distinguishable*:
+//! uniform-sample the parameter space, score each point by the minimum
+//! pairwise |f_i − f_j| across surfaces (Eq. 22), keep the top-λ — one
+//! sample transfer there tells the online module which surface the
+//! network is currently on.
+//! `R_s = R_m ∪ R_c` (Eq. 23).
+
+use super::surface::SurfaceModel;
+use crate::sim::params::{Params, BETA, PP_LEVELS};
+use crate::util::rng::Rng;
+
+/// Configuration for region extraction.
+#[derive(Debug, Clone, Copy)]
+pub struct RegionConfig {
+    /// Neighbourhood radius r_d (in integer parameter steps).
+    pub radius: u32,
+    /// Number of uniform samples γ.
+    pub gamma: usize,
+    /// Number of separating points λ to keep.
+    pub lambda: usize,
+}
+
+impl Default for RegionConfig {
+    fn default() -> Self {
+        RegionConfig { radius: 1, gamma: 256, lambda: 8 }
+    }
+}
+
+/// The sampling region for one cluster.
+#[derive(Debug, Clone, Default)]
+pub struct SamplingRegion {
+    /// Maxima neighbourhoods R_m.
+    pub maxima_points: Vec<Params>,
+    /// Max-min separating points R_c with their separation score.
+    pub separating_points: Vec<(Params, f64)>,
+}
+
+impl SamplingRegion {
+    /// R_s = R_m ∪ R_c, deduplicated.
+    pub fn union(&self) -> Vec<Params> {
+        let mut out: Vec<Params> = self.maxima_points.clone();
+        out.extend(self.separating_points.iter().map(|(p, _)| *p));
+        out.sort_by_key(|p| (p.cc, p.p, p.pp));
+        out.dedup();
+        out
+    }
+}
+
+/// Extract the sampling region from a cluster's surface stack.
+pub fn extract(surfaces: &[SurfaceModel], config: &RegionConfig, rng: &mut Rng) -> SamplingRegion {
+    let mut region = SamplingRegion::default();
+    if surfaces.is_empty() {
+        return region;
+    }
+
+    // --- R_m: argmax neighbourhoods --------------------------------------
+    for s in surfaces {
+        let (opt, _) = s.argmax;
+        let r = config.radius as i64;
+        for dcc in -r..=r {
+            for dp in -r..=r {
+                let cc = (opt.cc as i64 + dcc).clamp(1, BETA as i64) as u32;
+                let p = (opt.p as i64 + dp).clamp(1, BETA as i64) as u32;
+                region.maxima_points.push(Params::new(cc, p, opt.pp));
+            }
+        }
+    }
+    region.maxima_points.sort_by_key(|p| (p.cc, p.p, p.pp));
+    region.maxima_points.dedup();
+
+    // --- R_c: max-min separating points (Eq. 21–22) -----------------------
+    if surfaces.len() >= 2 {
+        let mut scored: Vec<(Params, f64)> = Vec::with_capacity(config.gamma);
+        for _ in 0..config.gamma {
+            let params = Params::new(
+                rng.range_u(1, BETA as u64) as u32,
+                rng.range_u(1, BETA as u64) as u32,
+                PP_LEVELS[rng.index(PP_LEVELS.len())],
+            );
+            let mut min_sep = f64::INFINITY;
+            for i in 0..surfaces.len() {
+                for j in 0..i {
+                    let sep = (surfaces[i].predict(&params) - surfaces[j].predict(&params)).abs();
+                    min_sep = min_sep.min(sep);
+                }
+            }
+            scored.push((params, min_sep));
+        }
+        // Descending by separation; keep λ distinct points.
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        scored.dedup_by_key(|(p, _)| *p);
+        scored.truncate(config.lambda);
+        region.separating_points = scored;
+    }
+    region
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offline::surface::tests::stats_from_simulator;
+    use crate::offline::surface::SurfaceModel;
+    use crate::sim::dataset::Dataset;
+
+    fn stack() -> Vec<SurfaceModel> {
+        let d = Dataset::new(100, 64.0);
+        vec![
+            SurfaceModel::build(&stats_from_simulator(0.1, &d, 2, 1), 0.1).unwrap(),
+            SurfaceModel::build(&stats_from_simulator(0.5, &d, 2, 2), 0.5).unwrap(),
+            SurfaceModel::build(&stats_from_simulator(0.8, &d, 2, 3), 0.8).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn region_contains_each_argmax() {
+        let surfaces = stack();
+        let mut rng = Rng::new(4);
+        let region = extract(&surfaces, &RegionConfig::default(), &mut rng);
+        for s in &surfaces {
+            let (opt, _) = s.argmax;
+            assert!(
+                region.maxima_points.contains(&opt),
+                "R_m missing argmax {opt} of intensity {}",
+                s.intensity
+            );
+        }
+    }
+
+    #[test]
+    fn separating_points_have_positive_scores_sorted() {
+        let surfaces = stack();
+        let mut rng = Rng::new(5);
+        let region = extract(&surfaces, &RegionConfig::default(), &mut rng);
+        assert!(!region.separating_points.is_empty());
+        for w in region.separating_points.windows(2) {
+            assert!(w[0].1 >= w[1].1, "scores must be descending");
+        }
+        // Surfaces at very different loads must be separable somewhere.
+        assert!(region.separating_points[0].1 > 0.0);
+    }
+
+    #[test]
+    fn union_deduplicates() {
+        let surfaces = stack();
+        let mut rng = Rng::new(6);
+        let region = extract(&surfaces, &RegionConfig::default(), &mut rng);
+        let u = region.union();
+        let mut sorted = u.clone();
+        sorted.dedup();
+        assert_eq!(sorted.len(), u.len());
+        assert!(u.len() >= region.maxima_points.len());
+    }
+
+    #[test]
+    fn empty_and_single_surface_edge_cases() {
+        let mut rng = Rng::new(7);
+        let empty = extract(&[], &RegionConfig::default(), &mut rng);
+        assert!(empty.union().is_empty());
+        let d = Dataset::new(100, 64.0);
+        let one = vec![SurfaceModel::build(&stats_from_simulator(0.2, &d, 2, 9), 0.2).unwrap()];
+        let region = extract(&one, &RegionConfig::default(), &mut rng);
+        assert!(!region.maxima_points.is_empty());
+        assert!(region.separating_points.is_empty(), "no pairs to separate");
+    }
+
+    #[test]
+    fn radius_zero_keeps_only_argmaxes() {
+        let surfaces = stack();
+        let mut rng = Rng::new(8);
+        let cfg = RegionConfig { radius: 0, gamma: 0, lambda: 0 };
+        let region = extract(&surfaces, &cfg, &mut rng);
+        assert!(region.maxima_points.len() <= surfaces.len());
+    }
+}

@@ -1,0 +1,549 @@
+//! Throughput-surface construction (paper §3.1.1).
+//!
+//! Per (cluster × external-load bin) the pipeline maintains **additive
+//! sufficient statistics** — a Welford accumulator per parameter-grid
+//! cell — and builds from them:
+//!
+//! * a **piecewise bicubic spline surface** `f(p, cc)` over the knot
+//!   grid (the paper's Fig. 1 surfaces),
+//! * a **1-D cubic-spline pipelining factor** `s(pp)` (Fig. 2) — the
+//!   paper models pp separately from (p, cc) "due to their difference
+//!   in characteristic"; we compose them multiplicatively,
+//!   `th(p,cc,pp) = f(p,cc) · s(pp)` with `max s = 1`, alternately
+//!   refit so the decomposition is self-consistent,
+//! * a **Gaussian confidence region** (Eq. 15–17, Fig. 3a) from the
+//!   pooled within-cell variance,
+//! * the **precomputed argmax** over the bounded integer domain
+//!   (§3.1.2).
+//!
+//! The quadratic/cubic regression comparators of Fig. 3b are fit via
+//! `crate::math::polyfit` from the same observations.
+
+use crate::logs::generate::PARAM_KNOTS;
+use crate::logs::record::TransferLog;
+use crate::math::bicubic::BicubicSurface;
+use crate::math::spline::CubicSpline;
+use crate::sim::params::{Params, BETA, PP_LEVELS};
+use crate::util::json::{Json, JsonError};
+use crate::util::stats::Welford;
+use anyhow::Result;
+
+/// Number of external-load-intensity bins per cluster — each bin gets
+/// its own surface, and the online module bisects across them.
+pub const NUM_LOAD_BINS: usize = 5;
+
+/// Map an intensity in [0,1] to its bin.
+pub fn load_bin(intensity: f64) -> usize {
+    ((intensity.clamp(0.0, 1.0) * NUM_LOAD_BINS as f64) as usize).min(NUM_LOAD_BINS - 1)
+}
+
+/// Representative intensity of a bin (its center).
+pub fn bin_center(bin: usize) -> f64 {
+    (bin as f64 + 0.5) / NUM_LOAD_BINS as f64
+}
+
+fn knot_index(knots: &[u32], v: u32) -> usize {
+    // Nearest knot (log rows always use exact knots; online samples may
+    // not, so snap to nearest).
+    let mut best = (0usize, u32::MAX);
+    for (i, &k) in knots.iter().enumerate() {
+        let d = k.abs_diff(v);
+        if d < best.1 {
+            best = (i, d);
+        }
+    }
+    best.0
+}
+
+/// Additive per-cell statistics for one surface (one load bin).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SurfaceStats {
+    /// Welford per (p-knot, cc-knot, pp-level), row-major.
+    pub cells: Vec<Welford>,
+}
+
+impl Default for SurfaceStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SurfaceStats {
+    pub fn new() -> SurfaceStats {
+        SurfaceStats {
+            cells: vec![Welford::new(); PARAM_KNOTS.len() * PARAM_KNOTS.len() * PP_LEVELS.len()],
+        }
+    }
+
+    #[inline]
+    pub(crate) fn idx(pi: usize, ci: usize, li: usize) -> usize {
+        (pi * PARAM_KNOTS.len() + ci) * PP_LEVELS.len() + li
+    }
+
+    pub fn cell(&self, pi: usize, ci: usize, li: usize) -> &Welford {
+        &self.cells[Self::idx(pi, ci, li)]
+    }
+
+    /// Record one observation.
+    pub fn push(&mut self, p: u32, cc: u32, pp: u32, throughput_mbps: f64) {
+        let pi = knot_index(&PARAM_KNOTS, p);
+        let ci = knot_index(&PARAM_KNOTS, cc);
+        let li = knot_index(&PP_LEVELS, pp);
+        self.cells[Self::idx(pi, ci, li)].push(throughput_mbps);
+    }
+
+    pub fn push_log(&mut self, row: &TransferLog) {
+        self.push(row.p, row.cc, row.pp, row.throughput_mbps);
+    }
+
+    /// Additive merge (the paper's periodic-offline-analysis path).
+    pub fn merge(&mut self, other: &SurfaceStats) {
+        for (a, b) in self.cells.iter_mut().zip(&other.cells) {
+            a.merge(b);
+        }
+    }
+
+    pub fn total_count(&self) -> u64 {
+        self.cells.iter().map(|w| w.count).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        // Compact: only non-empty cells as [idx, count, mean, m2].
+        let mut arr = Vec::new();
+        for (i, w) in self.cells.iter().enumerate() {
+            if w.count > 0 {
+                arr.push(Json::from_f64_slice(&[i as f64, w.count as f64, w.mean, w.m2]));
+            }
+        }
+        Json::Arr(arr)
+    }
+
+    pub fn from_json(v: &Json) -> Result<SurfaceStats, JsonError> {
+        let mut stats = SurfaceStats::new();
+        if let Json::Arr(items) = v {
+            for item in items {
+                if let Json::Arr(f) = item {
+                    let idx = f[0].as_f64().unwrap_or(-1.0) as usize;
+                    if idx < stats.cells.len() {
+                        stats.cells[idx] = Welford {
+                            count: f[1].as_f64().unwrap_or(0.0) as u64,
+                            mean: f[2].as_f64().unwrap_or(0.0),
+                            m2: f[3].as_f64().unwrap_or(0.0),
+                        };
+                    }
+                }
+            }
+        }
+        Ok(stats)
+    }
+}
+
+/// A built surface model for one (cluster, load-bin).
+#[derive(Debug, Clone)]
+pub struct SurfaceModel {
+    /// Representative external-load intensity (bin center refined to the
+    /// observed mean intensity when available).
+    pub intensity: f64,
+    /// f(p, cc) bicubic spline over the knot grid.
+    pub surface: BicubicSurface,
+    /// s(pp) pipelining factor spline (max ≈ 1).
+    pub pp_curve: CubicSpline,
+    /// Pooled within-cell measurement σ (Gaussian confidence, Eq. 17).
+    pub sigma: f64,
+    /// Per-cell σ over the knot grid (same indexing as `SurfaceStats`);
+    /// zero where the cell lacks repeated observations. Confidence
+    /// bounds prefer the local σ — the pooled value mixes regimes with
+    /// very different magnitudes and over-widens the region.
+    pub cell_sigma: Vec<f64>,
+    /// Precomputed argmax over the bounded integer domain and its value.
+    pub argmax: (Params, f64),
+    pub n_obs: u64,
+}
+
+impl SurfaceModel {
+    /// Build from sufficient statistics. Errors when the bin has too few
+    /// observations to support a surface.
+    pub fn build(stats: &SurfaceStats, intensity: f64) -> Result<SurfaceModel> {
+        let np = PARAM_KNOTS.len();
+        let nl = PP_LEVELS.len();
+        let n_obs = stats.total_count();
+        anyhow::ensure!(n_obs >= 24, "surface: too few observations ({n_obs})");
+
+        // Multiplicative decomposition th = f(p,cc)·s(pp), alternating
+        // least squares on the cell means (weights = counts).
+        let mut s = vec![1.0; nl];
+        let mut f_grid = vec![f64::NAN; np * np];
+        for _round in 0..3 {
+            // f from s.
+            for pi in 0..np {
+                for ci in 0..np {
+                    let (mut num, mut den) = (0.0, 0.0);
+                    for li in 0..nl {
+                        let w = stats.cell(pi, ci, li);
+                        if w.count > 0 && s[li] > 1e-9 {
+                            num += w.count as f64 * w.mean / s[li];
+                            den += w.count as f64;
+                        }
+                    }
+                    f_grid[pi * np + ci] = if den > 0.0 { num / den } else { f64::NAN };
+                }
+            }
+            // s from f.
+            for (li, s_l) in s.iter_mut().enumerate() {
+                let (mut num, mut den) = (0.0, 0.0);
+                for pi in 0..np {
+                    for ci in 0..np {
+                        let w = stats.cell(pi, ci, li);
+                        let f = f_grid[pi * np + ci];
+                        if w.count > 0 && f.is_finite() && f > 1e-9 {
+                            num += w.count as f64 * w.mean / f;
+                            den += w.count as f64;
+                        }
+                    }
+                }
+                if den > 0.0 {
+                    *s_l = num / den;
+                }
+            }
+            // Normalize: max s = 1 so f carries the magnitude.
+            let smax = s.iter().cloned().fold(1e-9, f64::max);
+            for s_l in s.iter_mut() {
+                *s_l /= smax;
+            }
+        }
+
+        // Fill unobserved (p,cc) cells by iterative neighbor averaging.
+        fill_missing(&mut f_grid, np, np)?;
+
+        // Count-weighted smoothing: cells observed once or twice carry
+        // mostly measurement noise, which the interpolating spline would
+        // otherwise faithfully reproduce — and the argmax would chase
+        // noise spikes. Shrink low-count cells toward their neighbour
+        // mean (κ pseudo-counts of neighbourhood evidence).
+        let mut counts_grid = vec![0.0; np * np];
+        for pi in 0..np {
+            for ci in 0..np {
+                counts_grid[pi * np + ci] = (0..nl)
+                    .map(|li| stats.cell(pi, ci, li).count as f64)
+                    .sum();
+            }
+        }
+        let kappa = 4.0;
+        let snapshot = f_grid.clone();
+        for pi in 0..np {
+            for ci in 0..np {
+                let mut nsum = 0.0;
+                let mut nw = 0.0;
+                let mut add = |r: isize, c: isize| {
+                    if r >= 0 && r < np as isize && c >= 0 && c < np as isize {
+                        nsum += snapshot[r as usize * np + c as usize];
+                        nw += 1.0;
+                    }
+                };
+                add(pi as isize - 1, ci as isize);
+                add(pi as isize + 1, ci as isize);
+                add(pi as isize, ci as isize - 1);
+                add(pi as isize, ci as isize + 1);
+                if nw > 0.0 {
+                    let own_w = counts_grid[pi * np + ci];
+                    let neighbor_mean = nsum / nw;
+                    f_grid[pi * np + ci] = (own_w * snapshot[pi * np + ci]
+                        + kappa * neighbor_mean)
+                        / (own_w + kappa);
+                }
+            }
+        }
+
+        let p_knots: Vec<f64> = PARAM_KNOTS.iter().map(|&k| k as f64).collect();
+        let surface = BicubicSurface::fit(&p_knots, &p_knots, &f_grid)?;
+        let pp_x: Vec<f64> = PP_LEVELS.iter().map(|&k| k as f64).collect();
+        let pp_curve = CubicSpline::fit(&pp_x, &s)?;
+
+        // Pooled within-cell variance (paper Eq. 17) + per-cell σ.
+        let (mut m2_sum, mut count_sum) = (0.0, 0.0);
+        let mut cell_sigma = vec![0.0; stats.cells.len()];
+        for (i, w) in stats.cells.iter().enumerate() {
+            if w.count > 1 {
+                m2_sum += w.m2;
+                count_sum += w.count as f64;
+                cell_sigma[i] = w.std_pop();
+            }
+        }
+        let sigma = if count_sum > 0.0 { (m2_sum / count_sum).sqrt() } else { 0.0 };
+
+        let mut model = SurfaceModel {
+            intensity,
+            surface,
+            pp_curve,
+            sigma,
+            cell_sigma,
+            argmax: (Params::new(1, 1, 1), 0.0),
+            n_obs,
+        };
+        model.argmax = model.compute_argmax(BETA);
+        Ok(model)
+    }
+
+    /// Predicted throughput at θ (clamped non-negative).
+    pub fn predict(&self, params: &Params) -> f64 {
+        let f = self.surface.eval(params.p as f64, params.cc as f64);
+        let s = self.pp_curve.eval(params.pp as f64).clamp(0.0, 1.5);
+        (f * s).max(0.0)
+    }
+
+    /// σ local to θ's grid cell when that cell had repeated
+    /// observations; otherwise the pooled σ, floored at 6% of the
+    /// prediction (the simulator's measurement noise scale) so the
+    /// region never collapses to a point.
+    pub fn sigma_at(&self, params: &Params) -> f64 {
+        let pi = knot_index(&PARAM_KNOTS, params.p);
+        let ci = knot_index(&PARAM_KNOTS, params.cc);
+        let li = knot_index(&PP_LEVELS, params.pp);
+        let local = self.cell_sigma[SurfaceStats::idx(pi, ci, li)];
+        let base = if local > 0.0 { local } else { self.sigma };
+        base.max(0.06 * self.predict(params))
+    }
+
+    /// Gaussian confidence interval around the prediction at θ:
+    /// μ ± z·σ(θ) (z = 2 ≈ 95%).
+    pub fn confidence(&self, params: &Params) -> (f64, f64) {
+        let mu = self.predict(params);
+        let half = 2.0 * self.sigma_at(params);
+        ((mu - half).max(0.0), mu + half)
+    }
+
+    /// Does a measured throughput fall inside the confidence region?
+    pub fn contains(&self, params: &Params, measured: f64) -> bool {
+        let (lo, hi) = self.confidence(params);
+        measured >= lo && measured <= hi
+    }
+
+    /// Exact argmax over the bounded integer domain Ψ (θ separable:
+    /// maximize f over the (p, cc) integer box and s over pp levels).
+    fn compute_argmax(&self, beta: u32) -> (Params, f64) {
+        let mut best_pc = (1u32, 1u32, f64::NEG_INFINITY);
+        for p in 1..=beta {
+            for cc in 1..=beta {
+                let v = self.surface.eval(p as f64, cc as f64);
+                if v > best_pc.2 {
+                    best_pc = (p, cc, v);
+                }
+            }
+        }
+        let mut best_pp = (PP_LEVELS[0], f64::NEG_INFINITY);
+        for &pp in &PP_LEVELS {
+            let s = self.pp_curve.eval(pp as f64);
+            if s > best_pp.1 {
+                best_pp = (pp, s);
+            }
+        }
+        let params = Params::new(best_pc.1, best_pc.0, best_pp.0);
+        let value = self.predict(&params);
+        (params, value)
+    }
+}
+
+/// Iteratively replace NaN cells with the mean of their defined 4-
+/// neighbors; errors when the grid has no data at all.
+pub fn fill_missing(grid: &mut [f64], rows: usize, cols: usize) -> Result<()> {
+    anyhow::ensure!(grid.iter().any(|v| v.is_finite()), "fill_missing: empty grid");
+    for _ in 0..(rows * cols) {
+        let mut changed = false;
+        let snapshot = grid.to_vec();
+        for r in 0..rows {
+            for c in 0..cols {
+                if snapshot[r * cols + c].is_finite() {
+                    continue;
+                }
+                let mut num = 0.0;
+                let mut den = 0.0;
+                let mut push = |rr: isize, cc: isize| {
+                    if rr >= 0 && rr < rows as isize && cc >= 0 && cc < cols as isize {
+                        let v = snapshot[rr as usize * cols + cc as usize];
+                        if v.is_finite() {
+                            num += v;
+                            den += 1.0;
+                        }
+                    }
+                };
+                push(r as isize - 1, c as isize);
+                push(r as isize + 1, c as isize);
+                push(r as isize, c as isize - 1);
+                push(r as isize, c as isize + 1);
+                if den > 0.0 {
+                    grid[r * cols + c] = num / den;
+                    changed = true;
+                }
+            }
+        }
+        if !changed && grid.iter().all(|v| v.is_finite()) {
+            break;
+        }
+        if grid.iter().all(|v| v.is_finite()) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+    use crate::sim::dataset::Dataset;
+    use crate::sim::testbed::Testbed;
+    use crate::sim::transfer::NetState;
+    use crate::util::rng::Rng;
+
+    /// Build stats by sweeping the simulator at fixed load — gives a
+    /// ground-truth surface to verify against.
+    pub fn stats_from_simulator(load: f64, dataset: &Dataset, reps: usize, seed: u64) -> SurfaceStats {
+        let tb = Testbed::xsede();
+        let mut rng = Rng::new(seed);
+        let mut stats = SurfaceStats::new();
+        let state = NetState::with_load(load);
+        for &p in &PARAM_KNOTS {
+            for &cc in &PARAM_KNOTS {
+                for &pp in &PP_LEVELS {
+                    for _ in 0..reps {
+                        let out = tb.path.transfer(
+                            dataset,
+                            &Params::new(cc, p, pp),
+                            &state,
+                            Some(&mut rng),
+                        );
+                        stats.push(p, cc, pp, out.steady_mbps);
+                    }
+                }
+            }
+        }
+        stats
+    }
+
+    #[test]
+    fn bins_partition_unit_interval() {
+        assert_eq!(load_bin(0.0), 0);
+        assert_eq!(load_bin(0.999), NUM_LOAD_BINS - 1);
+        assert_eq!(load_bin(1.0), NUM_LOAD_BINS - 1);
+        for b in 0..NUM_LOAD_BINS {
+            assert_eq!(load_bin(bin_center(b)), b);
+        }
+    }
+
+    #[test]
+    fn stats_are_additive() {
+        let d = Dataset::new(100, 64.0);
+        let a = stats_from_simulator(0.2, &d, 1, 1);
+        let b = stats_from_simulator(0.2, &d, 1, 2);
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.total_count(), a.total_count() + b.total_count());
+        // Spot-check one cell mean equals the weighted mean.
+        let ca = a.cell(2, 3, 1);
+        let cb = b.cell(2, 3, 1);
+        let cm = merged.cell(2, 3, 1);
+        let want = (ca.mean * ca.count as f64 + cb.mean * cb.count as f64)
+            / (ca.count + cb.count) as f64;
+        assert!((cm.mean - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_json_roundtrip() {
+        let d = Dataset::new(100, 64.0);
+        let stats = stats_from_simulator(0.3, &d, 1, 3);
+        let text = stats.to_json().to_string_compact();
+        let back = SurfaceStats::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, stats);
+    }
+
+    #[test]
+    fn model_predicts_simulator_well() {
+        let d = Dataset::new(100, 64.0);
+        let stats = stats_from_simulator(0.2, &d, 3, 5);
+        let model = SurfaceModel::build(&stats, 0.2).unwrap();
+        let tb = Testbed::xsede();
+        let state = NetState::with_load(0.2);
+        // Held-out points (not on the knot grid).
+        let mut errs = Vec::new();
+        for &(p, cc, pp) in &[(5u32, 5u32, 4u32), (7, 3, 8), (10, 2, 2), (3, 10, 16)] {
+            let params = Params::new(cc, p, pp);
+            let truth = tb.path.steady_rate_mbps(&d, &params, &state);
+            let pred = model.predict(&params);
+            errs.push(((pred - truth) / truth).abs());
+        }
+        let mean_err = crate::util::stats::mean(&errs);
+        assert!(mean_err < 0.25, "mean rel err {mean_err:.3} errs={errs:?}");
+    }
+
+    #[test]
+    fn argmax_close_to_true_optimum() {
+        let d = Dataset::new(100, 64.0);
+        let stats = stats_from_simulator(0.1, &d, 3, 7);
+        let model = SurfaceModel::build(&stats, 0.1).unwrap();
+        let tb = Testbed::xsede();
+        let state = NetState::with_load(0.1);
+        let (model_params, _) = model.argmax;
+        let value_at_model = tb.path.steady_rate_mbps(&d, &model_params, &state);
+        let (_, true_best) = tb.path.optimal(&d, &state, BETA);
+        assert!(
+            value_at_model > 0.8 * true_best,
+            "model argmax {model_params} achieves {value_at_model:.0} of {true_best:.0}"
+        );
+    }
+
+    #[test]
+    fn confidence_contains_typical_measurements() {
+        let d = Dataset::new(100, 64.0);
+        let stats = stats_from_simulator(0.2, &d, 4, 9);
+        let model = SurfaceModel::build(&stats, 0.2).unwrap();
+        let tb = Testbed::xsede();
+        let mut rng = Rng::new(31);
+        let params = Params::new(8, 4, 4);
+        let mut inside = 0;
+        let total = 100;
+        for _ in 0..total {
+            let out = tb.path.transfer(&d, &params, &NetState::with_load(0.2), Some(&mut rng));
+            if model.contains(&params, out.steady_mbps) {
+                inside += 1;
+            }
+        }
+        assert!(inside > 70, "only {inside}/{total} inside 2σ confidence");
+        // And a wildly different load must usually fall outside.
+        let mut outside = 0;
+        for _ in 0..total {
+            let out = tb.path.transfer(&d, &params, &NetState::with_load(0.85), Some(&mut rng));
+            if !model.contains(&params, out.steady_mbps) {
+                outside += 1;
+            }
+        }
+        assert!(outside > 60, "only {outside}/{total} outside under heavy load");
+    }
+
+    #[test]
+    fn too_few_observations_is_error() {
+        let mut stats = SurfaceStats::new();
+        stats.push(1, 1, 1, 100.0);
+        assert!(SurfaceModel::build(&stats, 0.1).is_err());
+    }
+
+    #[test]
+    fn fill_missing_completes_partial_grid() {
+        let mut grid = vec![f64::NAN; 9];
+        grid[4] = 5.0; // center only
+        fill_missing(&mut grid, 3, 3).unwrap();
+        assert!(grid.iter().all(|v| v.is_finite()));
+        assert!(grid.iter().all(|&v| (v - 5.0).abs() < 1e-9));
+        let mut empty = vec![f64::NAN; 4];
+        assert!(fill_missing(&mut empty, 2, 2).is_err());
+    }
+
+    #[test]
+    fn pp_factor_peaks_for_small_files() {
+        let d = Dataset::new(5_000, 1.0); // small files
+        let stats = stats_from_simulator(0.1, &d, 2, 11);
+        let model = SurfaceModel::build(&stats, 0.1).unwrap();
+        let s1 = model.pp_curve.eval(1.0);
+        let s32 = model.pp_curve.eval(32.0);
+        assert!(s32 > 2.0 * s1, "pipelining factor should rise: s(1)={s1:.3} s(32)={s32:.3}");
+        assert!(model.argmax.0.pp >= 16, "argmax {}", model.argmax.0);
+    }
+}

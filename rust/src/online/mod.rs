@@ -1,0 +1,8 @@
+//! Online phase (paper §3.2): the Adaptive Sampling Module and its
+//! drift monitor for long transfers.
+
+pub mod asm;
+pub mod monitor;
+
+pub use asm::{AdaptiveSampling, AsmConfig};
+pub use monitor::DriftMonitor;

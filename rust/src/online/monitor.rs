@@ -1,0 +1,108 @@
+//! Drift detection for long-running transfers (paper §3.2, end: "For
+//! very large scale transfers ... external traffic could change during
+//! the transfer. If algorithm detects such deviation, it uses most
+//! recently achieved throughput value to choose the suitable surface").
+
+use crate::offline::surface::SurfaceModel;
+use crate::sim::params::Params;
+
+/// Watches measured chunk throughputs against the active surface's
+/// Gaussian confidence region; trips after `patience` consecutive
+/// out-of-bound observations (one noisy chunk must not cause a costly
+/// re-tune).
+#[derive(Debug, Clone)]
+pub struct DriftMonitor {
+    pub patience: usize,
+    consecutive_out: usize,
+}
+
+impl DriftMonitor {
+    pub fn new(patience: usize) -> DriftMonitor {
+        DriftMonitor { patience: patience.max(1), consecutive_out: 0 }
+    }
+
+    /// Feed one measurement; returns `true` when drift is confirmed.
+    pub fn observe(&mut self, surface: &SurfaceModel, params: &Params, measured: f64) -> bool {
+        if surface.contains(params, measured) {
+            self.consecutive_out = 0;
+            false
+        } else {
+            self.consecutive_out += 1;
+            if self.consecutive_out >= self.patience {
+                self.consecutive_out = 0;
+                true
+            } else {
+                false
+            }
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.consecutive_out = 0;
+    }
+}
+
+/// Pick the surface whose prediction at `params` is closest to the most
+/// recent measurement — the paper's `FindClosestSurface`.
+pub fn closest_surface<'a>(
+    surfaces: &'a [SurfaceModel],
+    params: &Params,
+    measured: f64,
+) -> Option<(usize, &'a SurfaceModel)> {
+    surfaces
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| {
+            let da = (a.predict(params) - measured).abs();
+            let db = (b.predict(params) - measured).abs();
+            da.partial_cmp(&db).unwrap()
+        })
+        .map(|(i, s)| (i, s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offline::surface::tests::stats_from_simulator;
+    use crate::sim::dataset::Dataset;
+
+    fn surfaces() -> Vec<SurfaceModel> {
+        let d = Dataset::new(100, 64.0);
+        vec![
+            SurfaceModel::build(&stats_from_simulator(0.1, &d, 2, 31), 0.1).unwrap(),
+            SurfaceModel::build(&stats_from_simulator(0.5, &d, 2, 32), 0.5).unwrap(),
+            SurfaceModel::build(&stats_from_simulator(0.8, &d, 2, 33), 0.8).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn patience_filters_single_outliers() {
+        let s = &surfaces()[0];
+        let params = Params::new(8, 4, 4);
+        let mut mon = DriftMonitor::new(2);
+        let inlier = s.predict(&params);
+        let outlier = inlier * 0.2;
+        assert!(!mon.observe(s, &params, outlier), "first outlier must not trip");
+        assert!(!mon.observe(s, &params, inlier), "inlier resets");
+        assert!(!mon.observe(s, &params, outlier));
+        assert!(mon.observe(s, &params, outlier), "second consecutive outlier trips");
+    }
+
+    #[test]
+    fn closest_surface_tracks_load() {
+        let stack = surfaces();
+        let params = Params::new(8, 4, 4);
+        // A measurement near the heavy-load surface's prediction selects it.
+        let heavy_pred = stack[2].predict(&params);
+        let (idx, _) = closest_surface(&stack, &params, heavy_pred).unwrap();
+        assert_eq!(idx, 2);
+        let light_pred = stack[0].predict(&params);
+        let (idx, _) = closest_surface(&stack, &params, light_pred).unwrap();
+        assert_eq!(idx, 0);
+    }
+
+    #[test]
+    fn empty_stack_is_none() {
+        assert!(closest_surface(&[], &Params::new(1, 1, 1), 100.0).is_none());
+    }
+}

@@ -1,0 +1,210 @@
+//! Artifact registry: the manifest-described set of AOT-compiled
+//! computations, plus the padding/masking glue that maps arbitrary
+//! problem sizes onto the fixed AOT shapes.
+//!
+//! Fixed shapes (must match python/compile/model.py):
+//!   pairwise      (1024, 8) × (32, 8) → (1024, 32)
+//!   kmeans_step   + weights (1024,) → centroids (32,8), counts (32),
+//!                 inertia (1), assign (1024) i32
+//!   surface_eval  (64, 7, 7, 4, 4) → (64, 56, 56)
+
+use super::pjrt::{InputF32, LoadedArtifact, PjrtRuntime};
+use crate::math::bicubic::BicubicSurface;
+use crate::offline::kmeans::AssignBackend;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+pub const KM_N: usize = 1024;
+pub const KM_K: usize = 32;
+pub const KM_D: usize = 8;
+pub const SURF_S: usize = 64;
+pub const SURF_G: usize = 7;
+pub const SURF_R: usize = 8;
+
+/// Sentinel coordinate for padded centroids: squared distance ≥ 1e30
+/// to any real point, so padding never wins an argmin.
+pub const CENTROID_SENTINEL: f32 = 1e15;
+
+/// The loaded artifact set.
+pub struct ArtifactRegistry {
+    pub runtime: PjrtRuntime,
+    pub pairwise: LoadedArtifact,
+    pub kmeans_step: LoadedArtifact,
+    pub surface_eval: LoadedArtifact,
+}
+
+impl ArtifactRegistry {
+    /// Load every artifact listed in `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactRegistry> {
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?}"))?;
+        let manifest =
+            Json::parse(&manifest_text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        anyhow::ensure!(
+            manifest.req_str("format").map_err(|e| anyhow::anyhow!("{e}"))? == "hlo-text",
+            "unsupported artifact format"
+        );
+        let arts = manifest
+            .get("artifacts")
+            .context("manifest missing 'artifacts'")?;
+        let file_of = |name: &str| -> Result<std::path::PathBuf> {
+            let entry = arts.get(name).with_context(|| format!("manifest missing {name}"))?;
+            Ok(dir.join(entry.req_str("file").map_err(|e| anyhow::anyhow!("{e}"))?))
+        };
+        let runtime = PjrtRuntime::cpu()?;
+        let pairwise = runtime.load_hlo_text(&file_of("pairwise")?)?;
+        let kmeans_step = runtime.load_hlo_text(&file_of("kmeans_step")?)?;
+        let surface_eval = runtime.load_hlo_text(&file_of("surface_eval")?)?;
+        Ok(ArtifactRegistry { runtime, pairwise, kmeans_step, surface_eval })
+    }
+
+    /// Pairwise squared distances for arbitrary (n, d ≤ 8, k ≤ 32):
+    /// pads to the AOT shape, chunks n over batches of 1024.
+    pub fn pairwise_dists(
+        &self,
+        points: &[f64],
+        n: usize,
+        d: usize,
+        centroids: &[f64],
+        k: usize,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(d <= KM_D, "d={d} exceeds AOT D={KM_D}");
+        anyhow::ensure!(k <= KM_K, "k={k} exceeds AOT K={KM_K}");
+        anyhow::ensure!(points.len() == n * d && centroids.len() == k * d, "buffer shapes");
+        let mut c_pad = vec![CENTROID_SENTINEL; KM_K * KM_D];
+        for c in 0..k {
+            for j in 0..d {
+                c_pad[c * KM_D + j] = centroids[c * d + j] as f32;
+            }
+            for j in d..KM_D {
+                c_pad[c * KM_D + j] = 0.0;
+            }
+        }
+        let mut out = vec![0f32; n * k];
+        let mut p_pad = vec![0f32; KM_N * KM_D];
+        let mut start = 0usize;
+        while start < n {
+            let batch = (n - start).min(KM_N);
+            p_pad.iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..batch {
+                for j in 0..d {
+                    p_pad[i * KM_D + j] = points[(start + i) * d + j] as f32;
+                }
+            }
+            let outs = self.pairwise.run(&[
+                InputF32 { data: &p_pad, dims: &[KM_N as i64, KM_D as i64] },
+                InputF32 { data: &c_pad, dims: &[KM_K as i64, KM_D as i64] },
+            ])?;
+            let d2 = outs[0].as_f32()?;
+            for i in 0..batch {
+                for c in 0..k {
+                    out[(start + i) * k + c] = d2[i * KM_K + c];
+                }
+            }
+            start += batch;
+        }
+        Ok(out)
+    }
+
+    /// Dense evaluation of up to 64 bicubic surfaces (8×8 knots → 7×7
+    /// patches) on the per-patch R×R sub-grid: returns per-surface
+    /// row-major (56, 56) grids.
+    pub fn surface_eval_batch(&self, surfaces: &[&BicubicSurface]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(surfaces.len() <= SURF_S, "too many surfaces ({})", surfaces.len());
+        for s in surfaces {
+            anyhow::ensure!(
+                s.nx() == SURF_G + 1 && s.ny() == SURF_G + 1,
+                "surface must be on the canonical 8×8 knot grid ({}×{})",
+                s.nx(),
+                s.ny()
+            );
+        }
+        let mut coeffs = vec![0f32; SURF_S * SURF_G * SURF_G * 16];
+        for (si, surf) in surfaces.iter().enumerate() {
+            // rust layout: patch (i, j) at [(i*(ny-1)+j)*16], power basis
+            // over the unit square — exactly the kernel's contract.
+            for (ci, &c) in surf.coeffs.iter().enumerate() {
+                coeffs[si * SURF_G * SURF_G * 16 + ci] = c as f32;
+            }
+        }
+        // Vandermonde over the half-open local sub-grid t = a/R — a
+        // runtime input (HLO text elides array constants; see model.py).
+        let mut v = vec![0f32; SURF_R * 4];
+        for (a, row) in v.chunks_mut(4).enumerate() {
+            let t = a as f32 / SURF_R as f32;
+            row[0] = 1.0;
+            row[1] = t;
+            row[2] = t * t;
+            row[3] = t * t * t;
+        }
+        let outs = self.surface_eval.run(&[
+            InputF32 {
+                data: &coeffs,
+                dims: &[SURF_S as i64, SURF_G as i64, SURF_G as i64, 4, 4],
+            },
+            InputF32 { data: &v, dims: &[SURF_R as i64, 4] },
+        ])?;
+        // Raw artifact output is (S, GP, GC, R, R) patch-local values;
+        // stitch each surface into a row-major (GP·R, GC·R) grid here
+        // (the transpose lives in rust — see python/compile/model.py).
+        let raw = outs[0].as_f32()?;
+        let side = SURF_G * SURF_R;
+        Ok(surfaces
+            .iter()
+            .enumerate()
+            .map(|(si, _)| {
+                let mut grid = vec![0f32; side * side];
+                for i in 0..SURF_G {
+                    for j in 0..SURF_G {
+                        let patch_base = (((si * SURF_G) + i) * SURF_G + j) * SURF_R * SURF_R;
+                        for a in 0..SURF_R {
+                            for b in 0..SURF_R {
+                                grid[(i * SURF_R + a) * side + (j * SURF_R + b)] =
+                                    raw[patch_base + a * SURF_R + b];
+                            }
+                        }
+                    }
+                }
+                grid
+            })
+            .collect())
+    }
+}
+
+/// k-means assignment backend running on the PJRT pairwise artifact.
+pub struct PjrtAssign<'a> {
+    pub registry: &'a ArtifactRegistry,
+}
+
+impl AssignBackend for PjrtAssign<'_> {
+    fn assign(
+        &mut self,
+        points: &[f64],
+        n: usize,
+        d: usize,
+        centroids: &[f64],
+        k: usize,
+        assign: &mut [u32],
+    ) -> Result<f64> {
+        let d2 = self.registry.pairwise_dists(points, n, d, centroids, k)?;
+        let mut inertia = 0.0f64;
+        for i in 0..n {
+            let row = &d2[i * k..(i + 1) * k];
+            let (mut bi, mut bv) = (0usize, f32::INFINITY);
+            for (c, &v) in row.iter().enumerate() {
+                if v < bv {
+                    bv = v;
+                    bi = c;
+                }
+            }
+            assign[i] = bi as u32;
+            inertia += bv as f64;
+        }
+        Ok(inertia)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,57 @@
+//! Backend selection: the offline pipeline runs its hot loops either
+//! natively (always available, the differential-test reference) or on
+//! the PJRT artifacts (the L1/L2 accelerated path).
+
+use super::artifacts::{ArtifactRegistry, PjrtAssign};
+use crate::offline::kmeans::{AssignBackend, NativeAssign};
+use anyhow::Result;
+use std::path::Path;
+
+pub enum Backend {
+    Native,
+    Pjrt(Box<ArtifactRegistry>),
+}
+
+impl Backend {
+    /// Load the PJRT artifacts when present, otherwise fall back to the
+    /// native implementation (and say so once).
+    pub fn auto(artifacts_dir: &Path) -> Backend {
+        if artifacts_dir.join("manifest.json").exists() {
+            match ArtifactRegistry::load(artifacts_dir) {
+                Ok(reg) => {
+                    return Backend::Pjrt(Box::new(reg));
+                }
+                Err(e) => {
+                    eprintln!("warning: failed to load PJRT artifacts ({e:#}); using native backend");
+                }
+            }
+        }
+        Backend::Native
+    }
+
+    pub fn pjrt(artifacts_dir: &Path) -> Result<Backend> {
+        Ok(Backend::Pjrt(Box::new(ArtifactRegistry::load(artifacts_dir)?)))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Run a closure with the appropriate `AssignBackend`.
+    pub fn with_assign<T>(&mut self, f: impl FnOnce(&mut dyn AssignBackend) -> T) -> T {
+        match self {
+            Backend::Native => f(&mut NativeAssign),
+            Backend::Pjrt(reg) => f(&mut PjrtAssign { registry: reg }),
+        }
+    }
+
+    pub fn registry(&self) -> Option<&ArtifactRegistry> {
+        match self {
+            Backend::Native => None,
+            Backend::Pjrt(reg) => Some(reg),
+        }
+    }
+}

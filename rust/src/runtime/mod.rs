@@ -1,0 +1,12 @@
+//! PJRT runtime layer: loads the AOT-compiled HLO-text artifacts
+//! (python/compile → `artifacts/`) and exposes them to the offline
+//! pipeline behind the `Backend` switch. The rust binary is fully
+//! self-contained at run time — python is build-time only.
+
+pub mod artifacts;
+pub mod backend;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactRegistry, PjrtAssign};
+pub use backend::Backend;
+pub use pjrt::{InputF32, LoadedArtifact, Output, PjrtRuntime};

@@ -1,0 +1,170 @@
+//! PJRT runtime wrapper: load AOT HLO-text artifacts and execute them
+//! from the rust hot path. Python never runs here — the artifacts were
+//! produced once by `make artifacts` (python/compile/aot.py).
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that this xla_extension (0.5.1) rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Process-wide PJRT CPU client. Creating a TfrtCpuClient is expensive
+/// (~100 ms) and the underlying C++ object is thread-safe, so one per
+/// process is the right shape.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedArtifact> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let computation = xla::XlaComputation::from_proto(&proto);
+        let executable = self
+            .client
+            .compile(&computation)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(LoadedArtifact { executable })
+    }
+}
+
+/// A compiled executable with f32/i32 convenience I/O.
+pub struct LoadedArtifact {
+    executable: xla::PjRtLoadedExecutable,
+}
+
+/// One input buffer: data + dims.
+pub struct InputF32<'a> {
+    pub data: &'a [f32],
+    pub dims: &'a [i64],
+}
+
+/// One output buffer, dtype-tagged.
+#[derive(Debug, Clone)]
+pub enum Output {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Output {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Output::F32(v) => Ok(v),
+            Output::I32(_) => anyhow::bail!("output is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Output::I32(v) => Ok(v),
+            Output::F32(_) => anyhow::bail!("output is f32, expected i32"),
+        }
+    }
+}
+
+impl LoadedArtifact {
+    /// Execute with f32 inputs; outputs are the elements of the result
+    /// tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[InputF32<'_>]) -> Result<Vec<Output>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| {
+                let expected: i64 = inp.dims.iter().product();
+                anyhow::ensure!(
+                    expected as usize == inp.data.len(),
+                    "input buffer {} elements, dims {:?}",
+                    inp.data.len(),
+                    inp.dims
+                );
+                Ok(xla::Literal::vec1(inp.data).reshape(inp.dims)?)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.executable.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let mut tuple = result.to_tuple()?;
+        let mut outputs = Vec::with_capacity(tuple.len());
+        for lit in tuple.drain(..) {
+            let ty = lit.ty()?;
+            match ty {
+                xla::ElementType::F32 => outputs.push(Output::F32(lit.to_vec::<f32>()?)),
+                xla::ElementType::S32 => outputs.push(Output::I32(lit.to_vec::<i32>()?)),
+                other => {
+                    // Convert anything else to f32 for uniformity.
+                    let conv = lit.convert(xla::PrimitiveType::F32)?;
+                    let _ = other;
+                    outputs.push(Output::F32(conv.to_vec::<f32>()?));
+                }
+            }
+        }
+        Ok(outputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Runtime tests require `make artifacts` to have run; skip politely
+    /// otherwise so `cargo test` works in a fresh checkout.
+    pub fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(dir)
+        } else {
+            eprintln!("skipping PJRT test: artifacts/ not built (run `make artifacts`)");
+            None
+        }
+    }
+
+    #[test]
+    fn loads_and_runs_pairwise_artifact() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = PjrtRuntime::cpu().unwrap();
+        assert_eq!(rt.platform(), "cpu");
+        let art = rt.load_hlo_text(&dir.join("pairwise.hlo.txt")).unwrap();
+        // 1024 points at origin except first; 32 centroids at origin.
+        let mut points = vec![0.0f32; 1024 * 8];
+        points[0] = 3.0;
+        points[1] = 4.0;
+        let centroids = vec![0.0f32; 32 * 8];
+        let outs = art
+            .run(&[
+                InputF32 { data: &points, dims: &[1024, 8] },
+                InputF32 { data: &centroids, dims: &[32, 8] },
+            ])
+            .unwrap();
+        assert_eq!(outs.len(), 1);
+        let d2 = outs[0].as_f32().unwrap();
+        assert_eq!(d2.len(), 1024 * 32);
+        assert!((d2[0] - 25.0).abs() < 1e-4, "d2[0]={}", d2[0]);
+        assert!(d2[32].abs() < 1e-6, "origin point distance {}", d2[32]);
+    }
+
+    #[test]
+    fn rejects_wrong_buffer_shape() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = PjrtRuntime::cpu().unwrap();
+        let art = rt.load_hlo_text(&dir.join("pairwise.hlo.txt")).unwrap();
+        let bad = art.run(&[InputF32 { data: &[1.0], dims: &[2, 2] }]);
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        assert!(rt.load_hlo_text(Path::new("/nonexistent/x.hlo.txt")).is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! Dataset descriptions: what a transfer request moves.
+//!
+//! The paper partitions evaluation by *average file size* — small,
+//! medium, large — because the protocol parameters act differently per
+//! class (pipelining for small files, parallelism for large ones).
+
+use crate::util::rng::Rng;
+
+/// File-size class used throughout the paper's evaluation (Fig. 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SizeClass {
+    /// ~100 KB – 8 MB average file size.
+    Small,
+    /// ~8 – 64 MB.
+    Medium,
+    /// ~64 MB – 2 GB.
+    Large,
+}
+
+impl SizeClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SizeClass::Small => "small",
+            SizeClass::Medium => "medium",
+            SizeClass::Large => "large",
+        }
+    }
+
+    pub fn all() -> [SizeClass; 3] {
+        [SizeClass::Small, SizeClass::Medium, SizeClass::Large]
+    }
+
+    /// Classify an average file size in MB (paper's grouping; exact
+    /// boundaries are ours — the paper gives examples: 2–4 MB small,
+    /// 100–200 MB large).
+    pub fn classify(avg_file_mb: f64) -> SizeClass {
+        if avg_file_mb < 8.0 {
+            SizeClass::Small
+        } else if avg_file_mb < 64.0 {
+            SizeClass::Medium
+        } else {
+            SizeClass::Large
+        }
+    }
+
+    /// Sample a plausible average file size (MB) for this class.
+    pub fn sample_avg_file_mb(&self, rng: &mut Rng) -> f64 {
+        match self {
+            SizeClass::Small => rng.lognormal(2.0, 0.8).clamp(0.1, 7.9),
+            SizeClass::Medium => rng.lognormal(24.0, 0.6).clamp(8.0, 63.9),
+            SizeClass::Large => rng.lognormal(200.0, 0.7).clamp(64.0, 2048.0),
+        }
+    }
+}
+
+/// A dataset to transfer: `num_files` files of `avg_file_mb` average
+/// size (total = product). Individual file sizes are abstracted away —
+/// the simulator works at the (n, f̄) level like the paper's model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Dataset {
+    pub num_files: u64,
+    pub avg_file_mb: f64,
+}
+
+impl Dataset {
+    pub fn new(num_files: u64, avg_file_mb: f64) -> Dataset {
+        assert!(num_files > 0, "dataset must contain files");
+        assert!(avg_file_mb > 0.0, "files must have positive size");
+        Dataset { num_files, avg_file_mb }
+    }
+
+    pub fn total_mb(&self) -> f64 {
+        self.num_files as f64 * self.avg_file_mb
+    }
+
+    pub fn class(&self) -> SizeClass {
+        SizeClass::classify(self.avg_file_mb)
+    }
+
+    /// Take a chunk of up to `files` files (for sample transfers); returns
+    /// the chunk and the remainder (if any).
+    pub fn split_chunk(&self, files: u64) -> (Dataset, Option<Dataset>) {
+        let take = files.clamp(1, self.num_files);
+        let chunk = Dataset { num_files: take, avg_file_mb: self.avg_file_mb };
+        let rest = if take < self.num_files {
+            Some(Dataset { num_files: self.num_files - take, avg_file_mb: self.avg_file_mb })
+        } else {
+            None
+        };
+        (chunk, rest)
+    }
+
+    /// Sample a dataset of the given class: realistic pairing of counts
+    /// and sizes (many small files, few large ones).
+    pub fn sample(class: SizeClass, rng: &mut Rng) -> Dataset {
+        let avg = class.sample_avg_file_mb(rng);
+        let n = match class {
+            SizeClass::Small => rng.range_u(200, 20_000),
+            SizeClass::Medium => rng.range_u(20, 2_000),
+            SizeClass::Large => rng.range_u(2, 200),
+        };
+        Dataset::new(n, avg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_boundaries() {
+        assert_eq!(SizeClass::classify(1.0), SizeClass::Small);
+        assert_eq!(SizeClass::classify(8.0), SizeClass::Medium);
+        assert_eq!(SizeClass::classify(64.0), SizeClass::Large);
+        assert_eq!(SizeClass::classify(7.99), SizeClass::Small);
+    }
+
+    #[test]
+    fn totals_and_split() {
+        let d = Dataset::new(10, 5.0);
+        assert_eq!(d.total_mb(), 50.0);
+        let (chunk, rest) = d.split_chunk(3);
+        assert_eq!(chunk.num_files, 3);
+        assert_eq!(rest.unwrap().num_files, 7);
+        let (all, none) = d.split_chunk(100);
+        assert_eq!(all.num_files, 10);
+        assert!(none.is_none());
+    }
+
+    #[test]
+    fn sampled_datasets_match_class() {
+        let mut rng = Rng::new(77);
+        for class in SizeClass::all() {
+            for _ in 0..50 {
+                let d = Dataset::sample(class, &mut rng);
+                assert_eq!(d.class(), class, "sampled {d:?}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_files_rejected() {
+        Dataset::new(0, 1.0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Network path model between two endpoints.
+
+/// A (logical) end-to-end network path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Link {
+    /// Bottleneck capacity, Mbps.
+    pub bandwidth_mbps: f64,
+    /// Round-trip time, milliseconds.
+    pub rtt_ms: f64,
+    /// Baseline packet-loss probability on an uncongested path.
+    pub base_loss: f64,
+    /// Shared path (campus/Internet) vs dedicated circuit — shared paths
+    /// see heavier and burstier external load.
+    pub shared: bool,
+}
+
+/// TCP maximum segment size in bits (1460 B payload).
+pub const MSS_BITS: f64 = 1460.0 * 8.0;
+
+impl Link {
+    pub fn new(bandwidth_mbps: f64, rtt_ms: f64, base_loss: f64, shared: bool) -> Link {
+        assert!(bandwidth_mbps > 0.0 && rtt_ms > 0.0 && base_loss >= 0.0);
+        Link { bandwidth_mbps, rtt_ms, base_loss, shared }
+    }
+
+    pub fn rtt_s(&self) -> f64 {
+        self.rtt_ms / 1e3
+    }
+
+    /// Bandwidth-delay product in MB — how much buffer a single stream
+    /// needs to fill the pipe.
+    pub fn bdp_mb(&self) -> f64 {
+        self.bandwidth_mbps * 1e6 * self.rtt_s() / 8.0 / 1e6
+    }
+
+    /// Loss probability as a function of offered/capacity ratio:
+    /// the uncongested base rate plus a queue-overflow term that grows
+    /// quadratically past ~90% utilization. This is what makes
+    /// over-parallelized transfers *lose* throughput in the simulator,
+    /// reproducing the paper's "very high value could lead to severe
+    /// packet loss and queuing delay".
+    pub fn loss_at_load(&self, offered_over_capacity: f64) -> f64 {
+        let x = offered_over_capacity;
+        let congested = if x > 0.9 { 2e-4 * (x - 0.9) * (x - 0.9) / 0.01 } else { 0.0 };
+        (self.base_loss + congested).min(0.05)
+    }
+
+    /// Steady-state per-stream TCP throughput cap (Mbps) via the Mathis
+    /// model `MSS/(rtt·√loss)`, additionally bounded by the window the
+    /// OS buffer allows (`buf/rtt`) and the link rate itself.
+    pub fn per_stream_cap_mbps(&self, tcp_buffer_mb: f64, loss: f64) -> f64 {
+        let window_limit = tcp_buffer_mb * 8.0 / self.rtt_s(); // Mb / s
+        let mathis = if loss > 0.0 {
+            MSS_BITS / 1e6 / (self.rtt_s() * loss.sqrt()) * 1.22
+        } else {
+            f64::INFINITY
+        };
+        window_limit.min(mathis).min(self.bandwidth_mbps)
+    }
+
+    /// TCP slow-start duration (s) to reach a congestion window carrying
+    /// `target_mbps`: one RTT per doubling from an initial 10-segment
+    /// window.
+    pub fn slow_start_time_s(&self, target_mbps: f64) -> f64 {
+        let init_window_bits = 10.0 * MSS_BITS;
+        let target_window_bits = (target_mbps * 1e6 * self.rtt_s()).max(init_window_bits);
+        let doublings = (target_window_bits / init_window_bits).log2().max(0.0);
+        doublings * self.rtt_s()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xsede() -> Link {
+        Link::new(10_000.0, 40.0, 1e-6, false)
+    }
+
+    fn lan() -> Link {
+        Link::new(1_000.0, 0.2, 1e-7, true)
+    }
+
+    #[test]
+    fn bdp_sane() {
+        // 10 Gbps × 40 ms = 50 MB.
+        assert!((xsede().bdp_mb() - 50.0).abs() < 1e-9);
+        // LAN BDP is tiny.
+        assert!(lan().bdp_mb() < 0.1);
+    }
+
+    #[test]
+    fn per_stream_cap_wan_needs_parallelism() {
+        let l = xsede();
+        let cap = l.per_stream_cap_mbps(48.0, l.base_loss);
+        // One stream cannot fill 10 Gbps on a lossy 40 ms path...
+        assert!(cap < l.bandwidth_mbps, "cap={cap}");
+        // ...but a LAN stream easily fills 1 Gbps.
+        let lan_cap = lan().per_stream_cap_mbps(10.0, lan().base_loss);
+        assert!((lan_cap - 1_000.0).abs() < 1e-9, "lan cap={lan_cap}");
+    }
+
+    #[test]
+    fn loss_grows_past_saturation() {
+        let l = xsede();
+        assert_eq!(l.loss_at_load(0.5), l.base_loss);
+        assert!(l.loss_at_load(1.2) > l.loss_at_load(1.0));
+        assert!(l.loss_at_load(10.0) <= 0.05);
+    }
+
+    #[test]
+    fn slow_start_scales_with_rtt_and_rate() {
+        let wan = xsede();
+        let ss_fast = wan.slow_start_time_s(100.0);
+        let ss_faster_target = wan.slow_start_time_s(1_000.0);
+        assert!(ss_faster_target > ss_fast);
+        // LAN slow start is microscopic.
+        assert!(lan().slow_start_time_s(1_000.0) < 0.01);
+        // WAN slow start to 1 Gbps takes multiple RTTs.
+        assert!(ss_faster_target > 5.0 * wan.rtt_s());
+    }
+}

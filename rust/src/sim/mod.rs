@@ -1,0 +1,19 @@
+//! Simulated substrate standing in for the paper's physical testbeds:
+//! endpoints, links, TCP behaviour, GridFTP-like transfers, background
+//! traffic, and the Table-1 testbed configurations. See DESIGN.md
+//! §"Reproduction constraints and substitutions" for the fidelity
+//! argument.
+
+pub mod dataset;
+pub mod endpoint;
+pub mod link;
+pub mod params;
+pub mod testbed;
+pub mod traffic;
+pub mod transfer;
+
+pub use dataset::{Dataset, SizeClass};
+pub use params::{Params, BETA, PP_LEVELS};
+pub use testbed::{Testbed, TestbedId};
+pub use traffic::{ContendKind, Contention, LoadProfile, Period};
+pub use transfer::{NetState, Outcome, PathSpec};

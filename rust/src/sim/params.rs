@@ -1,0 +1,91 @@
+//! The application-layer protocol parameter triple θ = {cc, p, pp}
+//! (paper §2): concurrency (server processes / channels), parallelism
+//! (TCP streams per channel), and pipelining depth (commands in flight
+//! per channel).
+
+/// Upper bound β of the bounded integer search domain Ψ = {1..β}
+/// (paper §3.1.2 — "many systems set upper bound on those parameters").
+pub const BETA: u32 = 16;
+
+/// Pipelining search values — pp acts multiplicatively so the paper
+/// explores it on a coarser axis; we use powers of two up to 32.
+pub const PP_LEVELS: [u32; 6] = [1, 2, 4, 8, 16, 32];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Params {
+    pub cc: u32,
+    pub p: u32,
+    pub pp: u32,
+}
+
+impl Params {
+    pub fn new(cc: u32, p: u32, pp: u32) -> Params {
+        assert!(cc >= 1 && p >= 1 && pp >= 1, "params must be ≥ 1");
+        Params { cc, p, pp }
+    }
+
+    /// Total simultaneous TCP data streams (paper: cc × p).
+    pub fn streams(&self) -> u32 {
+        self.cc * self.p
+    }
+
+    /// Clamp into the bounded domain.
+    pub fn clamped(&self, beta: u32) -> Params {
+        Params {
+            cc: self.cc.clamp(1, beta),
+            p: self.p.clamp(1, beta),
+            pp: self.pp.clamp(1, *PP_LEVELS.last().unwrap()),
+        }
+    }
+
+    /// Number of *new* server processes needed to move from `self` to
+    /// `to` — the paper's example: cc 2→4 must spawn two more processes
+    /// (each paying startup + TCP slow start).
+    pub fn new_processes(&self, to: &Params) -> u32 {
+        to.cc.saturating_sub(self.cc)
+    }
+
+    /// Number of new TCP streams opened by the change.
+    pub fn new_streams(&self, to: &Params) -> u32 {
+        to.streams().saturating_sub(self.streams())
+    }
+}
+
+impl std::fmt::Display for Params {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cc={} p={} pp={}", self.cc, self.p, self.pp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streams_product() {
+        assert_eq!(Params::new(4, 8, 2).streams(), 32);
+    }
+
+    #[test]
+    fn clamping() {
+        let p = Params::new(100, 1, 99).clamped(BETA);
+        assert_eq!(p.cc, BETA);
+        assert_eq!(p.p, 1);
+        assert_eq!(p.pp, 32);
+    }
+
+    #[test]
+    fn process_and_stream_deltas() {
+        let a = Params::new(2, 4, 1);
+        let b = Params::new(4, 4, 1);
+        assert_eq!(a.new_processes(&b), 2);
+        assert_eq!(a.new_streams(&b), 8);
+        assert_eq!(b.new_processes(&a), 0); // shrinking is free
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_params_rejected() {
+        Params::new(0, 1, 1);
+    }
+}

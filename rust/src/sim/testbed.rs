@@ -1,0 +1,189 @@
+//! The paper's three experimental environments (Table 1), encoded as
+//! simulator configurations:
+//!
+//! | | XSEDE (Stampede↔Gordon) | DIDCLAB (WS-10↔Evenstar) | DIDCLAB↔XSEDE |
+//! |---|---|---|---|
+//! | Bandwidth | 10 Gbps | 1 Gbps | 1 Gbps (campus uplink) |
+//! | RTT | 40 ms | 0.2 ms | ~46 ms (Internet) |
+//! | TCP buffer | 48 MB | 10 MB | 10 MB (min) |
+//! | Disk | 1200 MB/s | 90 MB/s | 90 MB/s (min) |
+
+use super::endpoint::Endpoint;
+use super::link::Link;
+use super::traffic::LoadProfile;
+use super::transfer::PathSpec;
+
+/// Identifier for the three evaluation networks (Fig. 5 a–c, d–f, g–i).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TestbedId {
+    Xsede,
+    Didclab,
+    DidclabToXsede,
+}
+
+impl TestbedId {
+    pub fn all() -> [TestbedId; 3] {
+        [TestbedId::Xsede, TestbedId::Didclab, TestbedId::DidclabToXsede]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TestbedId::Xsede => "xsede",
+            TestbedId::Didclab => "didclab",
+            TestbedId::DidclabToXsede => "didclab-xsede",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TestbedId> {
+        match s {
+            "xsede" => Some(TestbedId::Xsede),
+            "didclab" => Some(TestbedId::Didclab),
+            "didclab-xsede" | "wan" => Some(TestbedId::DidclabToXsede),
+            _ => None,
+        }
+    }
+}
+
+/// A named testbed: a path plus its background-traffic profile.
+#[derive(Debug, Clone)]
+pub struct Testbed {
+    pub id: TestbedId,
+    pub path: PathSpec,
+    pub profile: LoadProfile,
+}
+
+impl Testbed {
+    pub fn by_id(id: TestbedId) -> Testbed {
+        match id {
+            TestbedId::Xsede => Testbed::xsede(),
+            TestbedId::Didclab => Testbed::didclab(),
+            TestbedId::DidclabToXsede => Testbed::didclab_to_xsede(),
+        }
+    }
+
+    /// Stampede (TACC) → Gordon (SDSC): 10 Gbps research WAN, 40 ms.
+    pub fn xsede() -> Testbed {
+        Testbed {
+            id: TestbedId::Xsede,
+            path: PathSpec {
+                src: Endpoint::new("stampede", 16, 32.0, 10_000.0, 1_200.0, 48.0),
+                dst: Endpoint::new("gordon", 16, 64.0, 10_000.0, 1_200.0, 48.0),
+                link: Link::new(10_000.0, 40.0, 1e-6, false),
+            },
+            profile: LoadProfile::research_wan(),
+        }
+    }
+
+    /// WS-10 → Evenstar inside the DIDCLAB: 1 Gbps LAN, 0.2 ms,
+    /// workstation disks (90 MB/s) — the disk-bound environment.
+    pub fn didclab() -> Testbed {
+        Testbed {
+            id: TestbedId::Didclab,
+            path: PathSpec {
+                src: Endpoint::new("ws-10", 8, 10.0, 1_000.0, 90.0, 10.0),
+                dst: Endpoint::new("evenstar", 4, 4.0, 1_000.0, 90.0, 10.0),
+                link: Link::new(1_000.0, 0.2, 1e-7, true),
+            },
+            profile: LoadProfile::campus_lan(),
+        }
+    }
+
+    /// WS-10 → Gordon over the commodity Internet: campus 1 Gbps uplink,
+    /// ~46 ms, heavier and less predictable cross traffic.
+    pub fn didclab_to_xsede() -> Testbed {
+        Testbed {
+            id: TestbedId::DidclabToXsede,
+            path: PathSpec {
+                src: Endpoint::new("ws-10", 8, 10.0, 1_000.0, 90.0, 10.0),
+                dst: Endpoint::new("gordon", 16, 64.0, 10_000.0, 1_200.0, 48.0),
+                link: Link::new(1_000.0, 46.0, 5e-6, true),
+            },
+            profile: LoadProfile::internet(),
+        }
+    }
+
+    /// Render Table 1 (plus our derived fields) for `dtopt testbed --show`.
+    pub fn table1() -> String {
+        let mut out = String::from(
+            "testbed         bw(Mbps)  rtt(ms)  tcpbuf(MB)  disk(MB/s)  src-cores  dst-cores  shared\n",
+        );
+        for id in TestbedId::all() {
+            let t = Testbed::by_id(id);
+            out.push_str(&format!(
+                "{:<15} {:>8} {:>8.1} {:>11.0} {:>11.0} {:>10} {:>10} {:>7}\n",
+                t.id.name(),
+                t.path.link.bandwidth_mbps,
+                t.path.link.rtt_ms,
+                t.path.src.tcp_buffer_mb.min(t.path.dst.tcp_buffer_mb),
+                t.path.src.disk_mbps.min(t.path.dst.disk_mbps),
+                t.path.src.cores,
+                t.path.dst.cores,
+                t.path.link.shared,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::dataset::Dataset;
+    use crate::sim::params::BETA;
+    use crate::sim::transfer::NetState;
+
+    #[test]
+    fn table1_matches_paper_values() {
+        let x = Testbed::xsede();
+        assert_eq!(x.path.link.bandwidth_mbps, 10_000.0);
+        assert_eq!(x.path.link.rtt_ms, 40.0);
+        assert_eq!(x.path.src.tcp_buffer_mb, 48.0);
+        assert_eq!(x.path.src.disk_mbps, 1_200.0);
+        let d = Testbed::didclab();
+        assert_eq!(d.path.link.bandwidth_mbps, 1_000.0);
+        assert_eq!(d.path.link.rtt_ms, 0.2);
+        assert_eq!(d.path.src.tcp_buffer_mb, 10.0);
+        assert_eq!(d.path.src.disk_mbps, 90.0);
+        assert_eq!(d.path.src.cores, 8);
+        assert_eq!(d.path.dst.cores, 4);
+        assert_eq!(d.path.dst.memory_gb, 4.0);
+    }
+
+    #[test]
+    fn xsede_can_reach_multi_gbps_didclab_cannot() {
+        let q = NetState::quiet();
+        let big = Dataset::new(50, 256.0);
+        let (_, x_best) = Testbed::xsede().path.optimal(&big, &q, BETA);
+        let (_, d_best) = Testbed::didclab().path.optimal(&big, &q, BETA);
+        assert!(x_best > 2_500.0, "xsede best {x_best:.0}");
+        assert!(d_best < 750.0, "didclab best {d_best:.0} (disk-bound)");
+        // Paper: GO reaches ~2700 Mbps on XSEDE large off-peak; our
+        // optimum must be in that order of magnitude.
+        assert!(x_best < 10_000.0);
+    }
+
+    #[test]
+    fn wan_path_takes_mins_of_endpoints() {
+        let w = Testbed::didclab_to_xsede();
+        assert_eq!(w.path.link.bandwidth_mbps, 1_000.0);
+        assert!(w.path.link.rtt_ms > 40.0);
+        assert!(w.path.link.shared);
+    }
+
+    #[test]
+    fn table1_renders_all_rows() {
+        let t = Testbed::table1();
+        assert!(t.contains("xsede"));
+        assert!(t.contains("didclab"));
+        assert!(t.contains("didclab-xsede"));
+        assert_eq!(t.lines().count(), 4);
+    }
+
+    #[test]
+    fn id_parse_roundtrip() {
+        for id in TestbedId::all() {
+            assert_eq!(TestbedId::parse(id.name()), Some(id));
+        }
+        assert_eq!(TestbedId::parse("nope"), None);
+    }
+}

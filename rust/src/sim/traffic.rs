@@ -1,0 +1,322 @@
+//! Background ("external") traffic model.
+//!
+//! The paper distinguishes **known contending transfers** (other logged
+//! transfers touching the same endpoints — five categories, §3.1.3) from
+//! **external load** `t_ext` (uncharted traffic whose intensity is only
+//! observable through its effect, Eq. 20). Both live here: a diurnal
+//! external-load profile drives peak/off-peak behaviour (Fig. 5's
+//! columns), a slow drift term makes stale offline analyses decay
+//! (Fig. 7), and a Poisson process spawns known contending transfers for
+//! the log generator.
+
+use crate::util::rng::Rng;
+
+pub const DAY_S: f64 = 86_400.0;
+pub const HOUR_S: f64 = 3_600.0;
+
+/// Peak/off-peak label used in the evaluation figures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Period {
+    Peak,
+    OffPeak,
+}
+
+impl Period {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Period::Peak => "peak",
+            Period::OffPeak => "offpeak",
+        }
+    }
+}
+
+/// Diurnal external-load profile: fraction of the bottleneck consumed by
+/// uncharted traffic as a function of simulated time.
+#[derive(Debug, Clone)]
+pub struct LoadProfile {
+    /// Quiet-hours floor (0..1).
+    pub base: f64,
+    /// Additional load at the busiest instant (0..1−base).
+    pub peak_amplitude: f64,
+    /// Center of the busy window, hours into the day.
+    pub peak_hour: f64,
+    /// Width (std, hours) of the busy window.
+    pub peak_width_h: f64,
+    /// Weekend factor (campus links go quiet).
+    pub weekend_factor: f64,
+    /// Amplitude of the slow random-walk drift (Fig. 7 staleness); the
+    /// drift has period `drift_period_days`.
+    pub drift_amplitude: f64,
+    pub drift_period_days: f64,
+    /// Fast jitter applied per query (bursty cross traffic).
+    pub jitter: f64,
+}
+
+impl LoadProfile {
+    /// The XSEDE-like profile: dedicated research WAN, moderate business-
+    /// hours peak.
+    pub fn research_wan() -> LoadProfile {
+        LoadProfile {
+            base: 0.08,
+            peak_amplitude: 0.45,
+            peak_hour: 14.0,
+            peak_width_h: 4.0,
+            weekend_factor: 0.5,
+            drift_amplitude: 0.10,
+            drift_period_days: 9.0,
+            jitter: 0.04,
+        }
+    }
+
+    /// Campus LAN (paper: DIDCLAB peak 11am–3pm).
+    pub fn campus_lan() -> LoadProfile {
+        LoadProfile {
+            base: 0.05,
+            peak_amplitude: 0.55,
+            peak_hour: 13.0,
+            peak_width_h: 2.0,
+            weekend_factor: 0.3,
+            drift_amplitude: 0.08,
+            drift_period_days: 7.0,
+            jitter: 0.06,
+        }
+    }
+
+    /// Commodity Internet path (DIDCLAB ↔ XSEDE): heavier, less
+    /// predictable ("unpredictable peak hour" in §4.3).
+    pub fn internet() -> LoadProfile {
+        LoadProfile {
+            base: 0.15,
+            peak_amplitude: 0.45,
+            peak_hour: 19.0,
+            peak_width_h: 5.0,
+            weekend_factor: 0.85,
+            drift_amplitude: 0.15,
+            drift_period_days: 5.0,
+            jitter: 0.09,
+        }
+    }
+
+    /// Hour-of-day in [0, 24).
+    pub fn hour_of_day(t_s: f64) -> f64 {
+        (t_s.rem_euclid(DAY_S)) / HOUR_S
+    }
+
+    /// Day index (0-based).
+    pub fn day_index(t_s: f64) -> u64 {
+        (t_s / DAY_S).floor() as u64
+    }
+
+    /// Deterministic (noise-free) load component at time `t_s`.
+    pub fn mean_load(&self, t_s: f64) -> f64 {
+        let h = Self::hour_of_day(t_s);
+        // Wrapped distance to the peak hour.
+        let d = {
+            let raw = (h - self.peak_hour).abs();
+            raw.min(24.0 - raw)
+        };
+        let bump = (-0.5 * (d / self.peak_width_h).powi(2)).exp();
+        let weekday = Self::day_index(t_s) % 7;
+        let week_factor = if weekday >= 5 { self.weekend_factor } else { 1.0 };
+        // Slow sinusoidal drift — deterministic, so the "true" network
+        // changes over days and stale knowledge bases decay gracefully.
+        let drift = self.drift_amplitude
+            * (2.0 * std::f64::consts::PI * t_s / (self.drift_period_days * DAY_S)).sin();
+        (self.base + self.peak_amplitude * bump * week_factor + drift).clamp(0.0, 0.95)
+    }
+
+    /// Load sample with burst jitter.
+    pub fn sample_load(&self, t_s: f64, rng: &mut Rng) -> f64 {
+        (self.mean_load(t_s) + rng.normal_ms(0.0, self.jitter)).clamp(0.0, 0.95)
+    }
+
+    /// Expected number of concurrent *external* TCP streams implied by a
+    /// load level (for fair-share computation): heavier load ≈ more
+    /// flows. A pragmatic mapping, not physics.
+    pub fn ext_streams(load: f64) -> u32 {
+        (load * 40.0).round() as u32
+    }
+
+    /// Is `t_s` inside the nominal peak window (for labeling experiment
+    /// rows)? Peak := mean load above the midpoint of its daily range.
+    pub fn period(&self, t_s: f64) -> Period {
+        let day_start = (t_s / DAY_S).floor() * DAY_S;
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for k in 0..24 {
+            let v = self.mean_load(day_start + k as f64 * HOUR_S);
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if self.mean_load(t_s) > 0.5 * (lo + hi) {
+            Period::Peak
+        } else {
+            Period::OffPeak
+        }
+    }
+}
+
+/// A known contending transfer overlapping a logged transfer — one of
+/// the paper's five categories (Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ContendKind {
+    /// Same source and destination pair.
+    SamePair,
+    /// Outgoing from the source to elsewhere.
+    SrcOut,
+    /// Incoming to the source.
+    SrcIn,
+    /// Outgoing from the destination.
+    DstOut,
+    /// Incoming to the destination from elsewhere.
+    DstIn,
+}
+
+impl ContendKind {
+    pub fn all() -> [ContendKind; 5] {
+        [
+            ContendKind::SamePair,
+            ContendKind::SrcOut,
+            ContendKind::SrcIn,
+            ContendKind::DstOut,
+            ContendKind::DstIn,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ContendKind::SamePair => "same_pair",
+            ContendKind::SrcOut => "src_out",
+            ContendKind::SrcIn => "src_in",
+            ContendKind::DstOut => "dst_out",
+            ContendKind::DstIn => "dst_in",
+        }
+    }
+
+    /// Does this contending category share the *network path* capacity
+    /// with the primary transfer (as opposed to only an endpoint disk/
+    /// NIC)? Same-pair traffic shares everything; src-out/dst-in share
+    /// the direction of travel; src-in/dst-out only load endpoints.
+    pub fn shares_path(&self) -> bool {
+        matches!(self, ContendKind::SamePair | ContendKind::SrcOut | ContendKind::DstIn)
+    }
+}
+
+/// Aggregate known-contention snapshot during one transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Contention {
+    /// Aggregate rate (Mbps) per category, paper's r_c, r^src_out, ...
+    pub rate_mbps: [f64; 5],
+    /// Total TCP streams of the contending transfers (fair-share input).
+    pub streams: u32,
+}
+
+impl Contention {
+    pub fn none() -> Contention {
+        Contention::default()
+    }
+
+    pub fn total_path_mbps(&self) -> f64 {
+        ContendKind::all()
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| k.shares_path())
+            .map(|(i, _)| self.rate_mbps[i])
+            .sum()
+    }
+
+    pub fn total_mbps(&self) -> f64 {
+        self.rate_mbps.iter().sum()
+    }
+
+    /// Sample a contention snapshot: a Poisson-ish number of known
+    /// transfers, each with a rate drawn from the typical share range.
+    pub fn sample(rng: &mut Rng, link_mbps: f64, intensity: f64) -> Contention {
+        let mut c = Contention::none();
+        let expected = 2.5 * intensity;
+        // Poisson via exponential gaps (small means, fine).
+        let mut n = 0u32;
+        let mut acc = rng.exponential(expected.max(1e-6));
+        while acc < 1.0 && n < 12 {
+            n += 1;
+            acc += rng.exponential(expected.max(1e-6));
+        }
+        for _ in 0..n {
+            let kind = ContendKind::all()[rng.index(5)];
+            let idx = ContendKind::all().iter().position(|k| *k == kind).unwrap();
+            let rate = rng.lognormal(0.05 * link_mbps, 0.7).min(0.4 * link_mbps);
+            c.rate_mbps[idx] += rate;
+            c.streams += rng.range_u(1, 8) as u32;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_bounded_and_peaked() {
+        let p = LoadProfile::campus_lan();
+        let mut rng = Rng::new(5);
+        for day in 0..14 {
+            for hour in 0..24 {
+                let t = day as f64 * DAY_S + hour as f64 * HOUR_S;
+                let l = p.sample_load(t, &mut rng);
+                assert!((0.0..=0.95).contains(&l), "load {l} at day {day} hour {hour}");
+            }
+        }
+        // Peak hour busier than 4 am on a weekday (day 0 = weekday).
+        assert!(p.mean_load(13.0 * HOUR_S) > p.mean_load(4.0 * HOUR_S) + 0.2);
+    }
+
+    #[test]
+    fn weekend_quieter_on_campus() {
+        let p = LoadProfile::campus_lan();
+        // Day 5/6 are weekend under our convention.
+        let weekday_peak = p.mean_load(13.0 * HOUR_S);
+        let weekend_peak = p.mean_load(5.0 * DAY_S + 13.0 * HOUR_S);
+        assert!(weekend_peak < weekday_peak);
+    }
+
+    #[test]
+    fn period_labels_match_load() {
+        let p = LoadProfile::campus_lan();
+        assert_eq!(p.period(13.0 * HOUR_S), Period::Peak);
+        assert_eq!(p.period(3.0 * HOUR_S), Period::OffPeak);
+    }
+
+    #[test]
+    fn drift_changes_days() {
+        let p = LoadProfile::research_wan();
+        // Same hour on different days must differ (drift term).
+        let a = p.mean_load(3.0 * HOUR_S);
+        let b = p.mean_load(3.0 * HOUR_S + 4.0 * DAY_S);
+        assert!((a - b).abs() > 0.01, "{a} vs {b}");
+    }
+
+    #[test]
+    fn contention_sampling_reasonable() {
+        let mut rng = Rng::new(17);
+        let mut any_nonzero = false;
+        for _ in 0..200 {
+            let c = Contention::sample(&mut rng, 10_000.0, 0.6);
+            assert!(c.total_mbps() >= 0.0);
+            assert!(c.total_path_mbps() <= c.total_mbps() + 1e-9);
+            if c.total_mbps() > 0.0 {
+                any_nonzero = true;
+                assert!(c.streams > 0);
+            }
+        }
+        assert!(any_nonzero);
+    }
+
+    #[test]
+    fn shares_path_classification() {
+        assert!(ContendKind::SamePair.shares_path());
+        assert!(ContendKind::SrcOut.shares_path());
+        assert!(!ContendKind::SrcIn.shares_path());
+        assert!(!ContendKind::DstOut.shares_path());
+        assert!(ContendKind::DstIn.shares_path());
+    }
+}

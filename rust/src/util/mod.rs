@@ -1,0 +1,9 @@
+//! Shared utilities: deterministic RNG, JSON, statistics, timing, and a
+//! minimal property-testing driver (offline substitutes for `rand`,
+//! `serde_json`, `criterion`, and `proptest`).
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,123 @@
+//! Minimal property-based testing driver.
+//!
+//! The real `proptest` crate is unreachable offline, so this module
+//! provides the slice of it the test-suite needs: run a property over
+//! many seeded random cases, and on failure replay with the seed printed
+//! so the case is reproducible. Generators are just closures over
+//! [`crate::util::rng::Rng`], which keeps case construction arbitrarily
+//! expressive without macro machinery.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0xD7_01 }
+    }
+}
+
+/// Run `property` against `cases` generated inputs. `gen` draws one case
+/// from the RNG; `property` returns `Err(reason)` to fail. Panics with
+/// the generating seed + case index on the first failure, so the exact
+/// case can be replayed by filtering on the printed case number.
+pub fn forall<T: std::fmt::Debug>(
+    config: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut property: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(config.seed);
+    for case_idx in 0..config.cases {
+        let mut case_rng = rng.fork(case_idx as u64);
+        let case = gen(&mut case_rng);
+        if let Err(reason) = property(&case) {
+            panic!(
+                "property failed (seed={:#x}, case={case_idx}): {reason}\ninput: {case:?}",
+                config.seed
+            );
+        }
+    }
+}
+
+/// Shorthand with the default config.
+pub fn forall_default<T: std::fmt::Debug>(
+    gen: impl FnMut(&mut Rng) -> T,
+    property: impl FnMut(&T) -> Result<(), String>,
+) {
+    forall(Config::default(), gen, property)
+}
+
+/// Common generator helpers.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Vector of finite f64 in [lo, hi), length in [min_len, max_len].
+    pub fn vec_f64(rng: &mut Rng, min_len: usize, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let len = rng.range_u(min_len as u64, max_len as u64) as usize;
+        (0..len).map(|_| rng.range_f64(lo, hi)).collect()
+    }
+
+    /// Strictly increasing knot vector of length n starting near `lo`.
+    pub fn increasing(rng: &mut Rng, n: usize, lo: f64, max_step: f64) -> Vec<f64> {
+        let mut x = lo;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(x);
+            x += rng.range_f64(0.05, max_step.max(0.1));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        forall(
+            Config { cases: 50, seed: 1 },
+            |r| r.f64(),
+            |x| {
+                count += 1;
+                if (0.0..1.0).contains(x) {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(
+            Config { cases: 10, seed: 2 },
+            |r| r.f64(),
+            |_| Err("always fails".into()),
+        );
+    }
+
+    #[test]
+    fn increasing_gen_is_increasing() {
+        forall_default(
+            |r| gen::increasing(r, 10, 0.0, 1.0),
+            |xs| {
+                for w in xs.windows(2) {
+                    if w[1] <= w[0] {
+                        return Err(format!("not increasing: {} {}", w[0], w[1]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

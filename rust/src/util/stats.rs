@@ -1,0 +1,298 @@
+//! Small statistics toolkit shared by the simulator, the offline
+//! analysis, and the experiment harnesses.
+
+/// Arithmetic mean; 0 for an empty slice (callers guard emptiness where
+/// it matters semantically).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation (the paper's Eq. 17 uses 1/N).
+pub fn std_pop(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Median (copies + sorts; used on small vectors only).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// p-quantile by linear interpolation, p in [0,1].
+pub fn quantile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = p.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Streaming mean/variance (Welford). The knowledge base keeps one per
+/// (surface, grid-cell) so offline analysis stays **additive** — new log
+/// partitions merge without revisiting old rows.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Welford {
+    pub count: u64,
+    pub mean: f64,
+    pub m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.count as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    /// Merge two accumulators (Chan's parallel algorithm) — the additive
+    /// update path for periodic offline analysis.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = *other;
+            return;
+        }
+        let n1 = self.count as f64;
+        let n2 = other.count as f64;
+        let delta = other.mean - self.mean;
+        let total = n1 + n2;
+        self.mean += delta * n2 / total;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / total;
+        self.count += other.count;
+    }
+
+    pub fn var_pop(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.m2 / self.count as f64
+        }
+    }
+
+    pub fn std_pop(&self) -> f64 {
+        self.var_pop().sqrt()
+    }
+}
+
+/// Gaussian PDF (paper Eq. 15).
+pub fn gaussian_pdf(x: f64, mu: f64, sigma: f64) -> f64 {
+    if sigma <= 0.0 {
+        return if (x - mu).abs() < 1e-12 { f64::INFINITY } else { 0.0 };
+    }
+    let z = (x - mu) / sigma;
+    (-0.5 * z * z).exp() / (sigma * (2.0 * std::f64::consts::PI).sqrt())
+}
+
+/// Pearson correlation (experiment sanity checks).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        0.0
+    } else {
+        sxy / (sxx * syy).sqrt()
+    }
+}
+
+/// Coefficient of determination R² of predictions vs observations —
+/// the surface-model accuracy metric behind Fig. 3b.
+pub fn r_squared(observed: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(observed.len(), predicted.len());
+    if observed.is_empty() {
+        return 0.0;
+    }
+    let m = mean(observed);
+    let ss_res: f64 = observed
+        .iter()
+        .zip(predicted)
+        .map(|(o, p)| (o - p) * (o - p))
+        .sum();
+    let ss_tot: f64 = observed.iter().map(|o| (o - m) * (o - m)).sum();
+    if ss_tot == 0.0 {
+        if ss_res == 0.0 {
+            1.0
+        } else {
+            0.0
+        }
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+/// The paper's accuracy metric (Eq. 25, stated as relative error; we
+/// report `100·(1 − |achieved − predicted|/predicted)` clamped to
+/// [0, 100], which is the form its plots use).
+pub fn paper_accuracy(achieved: f64, predicted: f64) -> f64 {
+    if predicted <= 0.0 {
+        return 0.0;
+    }
+    (100.0 * (1.0 - (achieved - predicted).abs() / predicted)).clamp(0.0, 100.0)
+}
+
+/// Mean absolute percentage error (lower is better).
+pub fn mape(observed: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(observed.len(), predicted.len());
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for (o, p) in observed.iter().zip(predicted) {
+        if o.abs() > 1e-12 {
+            total += ((o - p) / o).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        100.0 * total / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_pop(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!(median(&[5.0, 1.0, 3.0]), 3.0);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [0.0, 1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 0.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&xs, 0.5), 2.0);
+        assert!((quantile(&xs, 0.25) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean - mean(&xs)).abs() < 1e-12);
+        assert!((w.std_pop() - std_pop(&xs)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = Welford::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count, whole.count);
+        assert!((a.mean - whole.mean).abs() < 1e-9);
+        assert!((a.m2 - whole.m2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn welford_merge_empty_identities() {
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        b.push(2.0);
+        let before = b;
+        a.merge(&b);
+        assert_eq!(a, before);
+        let mut c = before;
+        c.merge(&Welford::new());
+        assert_eq!(c, before);
+    }
+
+    #[test]
+    fn gaussian_pdf_peak_and_symmetry() {
+        let p0 = gaussian_pdf(0.0, 0.0, 1.0);
+        assert!((p0 - 0.3989422804014327).abs() < 1e-12);
+        assert!((gaussian_pdf(1.0, 0.0, 1.0) - gaussian_pdf(-1.0, 0.0, 1.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn r_squared_perfect_and_mean_predictor() {
+        let o = [1.0, 2.0, 3.0];
+        assert!((r_squared(&o, &o) - 1.0).abs() < 1e-12);
+        let mean_pred = [2.0, 2.0, 2.0];
+        assert!(r_squared(&o, &mean_pred).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_accuracy_bounds() {
+        assert_eq!(paper_accuracy(100.0, 100.0), 100.0);
+        assert!((paper_accuracy(93.0, 100.0) - 93.0).abs() < 1e-9);
+        assert_eq!(paper_accuracy(300.0, 100.0), 0.0); // clamped
+        assert_eq!(paper_accuracy(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn pearson_known() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let z = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &z) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mape_basic() {
+        let o = [100.0, 200.0];
+        let p = [90.0, 220.0];
+        assert!((mape(&o, &p) - 10.0).abs() < 1e-9);
+    }
+}

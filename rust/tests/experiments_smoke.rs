@@ -1,0 +1,65 @@
+//! Smoke tests over the experiment harnesses: every figure regenerator
+//! runs at quick scale and satisfies the paper's qualitative claims.
+
+use dtopt::experiments::common::{ExpConfig, World};
+use dtopt::experiments::{fig12, fig3, fig5, fig6, fig7};
+use dtopt::runtime::Backend;
+
+fn quick_world() -> World {
+    let mut backend = Backend::Native;
+    World::prepare(
+        ExpConfig { history_days: 5, arrivals_per_hour: 20.0, requests_per_cell: 2, seed: 0xE0 },
+        &mut backend,
+    )
+}
+
+#[test]
+fn fig5_headline_shape_holds() {
+    let world = quick_world();
+    let result = fig5::run(&world, 4);
+    assert_eq!(result.len(), 18, "3 networks × 3 classes × 2 periods");
+    let rendered = fig5::render(&result);
+    assert!(rendered.contains("xsede"));
+    assert!(rendered.contains("ASM"));
+    for (desc, ok) in fig5::headline_checks(&result) {
+        assert!(ok, "fig5 check failed: {desc}\n{rendered}");
+    }
+}
+
+#[test]
+fn fig6_accuracy_curves() {
+    let world = quick_world();
+    let result = fig6::run(&world);
+    assert!(result.contains_key("ASM"));
+    assert!(result.contains_key("HARP"));
+    assert!(result.contains_key("ANN+OT"));
+    for (desc, ok) in fig6::headline_checks(&result) {
+        assert!(ok, "fig6 check failed: {desc}\n{}", fig6::render(&result));
+    }
+}
+
+#[test]
+fn fig7_staleness_decay() {
+    let world = quick_world();
+    let result = fig7::run(&world, 4, &[1, 3]);
+    assert_eq!(result.len(), 2);
+    for (desc, ok) in fig7::headline_checks(&result) {
+        assert!(ok, "fig7 check failed: {desc}\n{}", fig7::render(&result));
+    }
+}
+
+#[test]
+fn fig12_render() {
+    let f1 = fig12::run_fig1(1, 3);
+    assert!(f1.contains("class=small") && f1.contains("class=large"));
+    let f2 = fig12::run_fig2(1, 4);
+    assert!(f2.contains("pp"));
+}
+
+#[test]
+fn fig3_render() {
+    let a = fig3::run_3a(120, 5);
+    assert!(a.sigma > 0.0 && a.histogram.len() > 5);
+    let b = fig3::run_3b(1, 48, 6);
+    assert!(b.spline > b.quadratic, "spline {} vs quadratic {}", b.spline, b.quadratic);
+}

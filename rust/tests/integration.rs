@@ -1,0 +1,186 @@
+//! Cross-layer integration tests: PJRT artifacts vs native reference
+//! (the L1/L2 ⇄ L3 numerical contract), the offline pipeline on the
+//! accelerated backend, and the full offline→online→coordinator loop.
+//!
+//! PJRT tests skip gracefully when `artifacts/` has not been built
+//! (`make artifacts`); the Makefile test target always builds it first.
+
+use dtopt::logs::generate::{generate, GenConfig};
+use dtopt::math::bicubic::BicubicSurface;
+use dtopt::offline::kmeans::{kmeans_pp, AssignBackend, NativeAssign};
+use dtopt::offline::pipeline::{build, OfflineConfig};
+use dtopt::runtime::{ArtifactRegistry, Backend, PjrtAssign};
+use dtopt::sim::testbed::Testbed;
+use dtopt::util::rng::Rng;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn pjrt_pairwise_matches_native_assign() {
+    let Some(dir) = artifacts_dir() else { return };
+    let registry = ArtifactRegistry::load(&dir).unwrap();
+    let mut rng = Rng::new(101);
+    for &(n, d, k) in &[(50usize, 6usize, 3usize), (1024, 8, 32), (1500, 4, 7), (3, 2, 2)] {
+        let points: Vec<f64> = (0..n * d).map(|_| rng.range_f64(-5.0, 5.0)).collect();
+        let centroids: Vec<f64> = (0..k * d).map(|_| rng.range_f64(-5.0, 5.0)).collect();
+        let mut native = vec![0u32; n];
+        let mut pjrt = vec![0u32; n];
+        let native_inertia = NativeAssign
+            .assign(&points, n, d, &centroids, k, &mut native)
+            .unwrap();
+        let pjrt_inertia = PjrtAssign { registry: &registry }
+            .assign(&points, n, d, &centroids, k, &mut pjrt)
+            .unwrap();
+        assert_eq!(native, pjrt, "assignments diverge at n={n} d={d} k={k}");
+        let rel = (native_inertia - pjrt_inertia).abs() / native_inertia.max(1e-9);
+        assert!(rel < 1e-4, "inertia diverges: {native_inertia} vs {pjrt_inertia}");
+    }
+}
+
+#[test]
+fn pjrt_kmeans_run_matches_native_clusters() {
+    let Some(dir) = artifacts_dir() else { return };
+    let registry = ArtifactRegistry::load(&dir).unwrap();
+    // Well-separated blobs: both backends must find the same partition.
+    let mut rng = Rng::new(7);
+    let mut points = Vec::new();
+    for &(cx, cy) in &[(0.0, 0.0), (20.0, 0.0), (0.0, 20.0), (20.0, 20.0)] {
+        for _ in 0..100 {
+            points.push(cx + rng.normal());
+            points.push(cy + rng.normal());
+        }
+    }
+    let n = 400;
+    let mut rng_a = Rng::new(55);
+    let mut rng_b = Rng::new(55);
+    let native = kmeans_pp(&points, n, 2, 4, &mut rng_a, &mut NativeAssign, 40).unwrap();
+    let pjrt = kmeans_pp(
+        &points,
+        n,
+        2,
+        4,
+        &mut rng_b,
+        &mut PjrtAssign { registry: &registry },
+        40,
+    )
+    .unwrap();
+    assert_eq!(native.assignments, pjrt.assignments);
+    for (a, b) in native.centroids.iter().zip(&pjrt.centroids) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn pjrt_surface_eval_matches_native_bicubic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let registry = ArtifactRegistry::load(&dir).unwrap();
+    let knots: Vec<f64> = dtopt::logs::generate::PARAM_KNOTS.iter().map(|&k| k as f64).collect();
+    let mut rng = Rng::new(31);
+    let z: Vec<f64> = (0..64).map(|_| rng.range_f64(0.0, 5_000.0)).collect();
+    let surface = BicubicSurface::fit(&knots, &knots, &z).unwrap();
+    let grids = registry.surface_eval_batch(&[&surface]).unwrap();
+    let dense = &grids[0];
+    // PJRT grid point (i*8+a, j*8+b) is the patch-local (a/8, b/8)
+    // evaluation of patch (i, j).
+    let gp = 7usize;
+    let r = 8usize;
+    let mut max_rel: f64 = 0.0;
+    for i in 0..gp {
+        for a in 0..r {
+            for j in 0..gp {
+                for b in 0..r {
+                    let x = knots[i] + (knots[i + 1] - knots[i]) * a as f64 / r as f64;
+                    let y = knots[j] + (knots[j + 1] - knots[j]) * b as f64 / r as f64;
+                    let want = surface.eval(x, y);
+                    let got = dense[(i * r + a) * gp * r + (j * r + b)] as f64;
+                    let rel = (got - want).abs() / want.abs().max(1.0);
+                    max_rel = max_rel.max(rel);
+                }
+            }
+        }
+    }
+    assert!(max_rel < 1e-4, "surface eval diverges: max rel {max_rel:.2e}");
+}
+
+#[test]
+fn offline_pipeline_identical_on_both_backends() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rows = generate(
+        &Testbed::xsede(),
+        &GenConfig { days: 4, arrivals_per_hour: 25.0, start_day: 0, seed: 77 },
+    );
+    let cfg = OfflineConfig::default();
+    let kb_native = build(&rows, &cfg, &mut NativeAssign).unwrap();
+    let registry = ArtifactRegistry::load(&dir).unwrap();
+    let kb_pjrt = build(&rows, &cfg, &mut PjrtAssign { registry: &registry }).unwrap();
+    assert_eq!(kb_native.clusters.len(), kb_pjrt.clusters.len());
+    for (a, b) in kb_native.clusters.iter().zip(&kb_pjrt.clusters) {
+        assert_eq!(a.n_rows, b.n_rows, "cluster populations diverge");
+        assert_eq!(a.surfaces.len(), b.surfaces.len());
+        for (sa, sb) in a.surfaces.iter().zip(&b.surfaces) {
+            assert_eq!(sa.argmax.0, sb.argmax.0, "argmax diverges between backends");
+        }
+    }
+}
+
+#[test]
+fn backend_auto_detects() {
+    let missing = Backend::auto(std::path::Path::new("/nonexistent"));
+    assert_eq!(missing.name(), "native");
+    if let Some(dir) = artifacts_dir() {
+        let found = Backend::auto(&dir);
+        assert_eq!(found.name(), "pjrt");
+        assert!(found.registry().is_some());
+    }
+}
+
+#[test]
+fn end_to_end_offline_online_coordinator() {
+    use dtopt::coordinator::{Coordinator, CoordinatorConfig, OptimizerKind, TransferRequest};
+    use dtopt::sim::dataset::Dataset;
+    use dtopt::sim::testbed::TestbedId;
+    use std::sync::Arc;
+
+    let tb = Testbed::xsede();
+    let rows = generate(&tb, &GenConfig { days: 6, arrivals_per_hour: 30.0, start_day: 0, seed: 88 });
+    let kb = Arc::new(build(&rows, &OfflineConfig::default(), &mut NativeAssign).unwrap());
+    let coord = Coordinator::new(kb, Arc::new(rows), CoordinatorConfig::default());
+    let mut asm_sum = 0.0;
+    let mut go_sum = 0.0;
+    let mut opt_sum = 0.0;
+    for i in 0..6u64 {
+        let base = TransferRequest {
+            id: coord.fresh_id(),
+            testbed: TestbedId::Xsede,
+            dataset: Dataset::new(150, 80.0),
+            t_submit: i as f64 * 7_200.0,
+            state_override: None,
+            optimizer: Some(OptimizerKind::Asm),
+            seed: 900 + i,
+        };
+        let mut go_req = base.clone();
+        go_req.id = coord.fresh_id();
+        go_req.optimizer = Some(OptimizerKind::Go);
+        let responses = coord.run_batch(vec![base, go_req]);
+        asm_sum += responses[0].report.achieved_mbps();
+        go_sum += responses[1].report.achieved_mbps();
+        opt_sum += responses[0].optimal_mbps;
+    }
+    // The paper's headline ordering: ASM ≥ GO, and ASM close to optimal.
+    assert!(asm_sum > go_sum, "ASM {asm_sum:.0} vs GO {go_sum:.0}");
+    assert!(
+        asm_sum > 0.7 * opt_sum,
+        "ASM at {:.0}% of optimal",
+        100.0 * asm_sum / opt_sum
+    );
+    coord.shutdown();
+}
