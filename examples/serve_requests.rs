@@ -1,18 +1,25 @@
-//! Coordinator-as-a-service demo: a mixed stream of transfer requests
-//! across all three testbeds, served concurrently by the thread-pool
-//! coordinator with ASM as the default optimizer, reporting the
-//! service-side metrics (per-optimizer achieved throughput and the
-//! decision-latency distribution — the paper's "constant time" claim).
+//! Coordinator-as-a-service demo of the full closed loop: a mixed
+//! stream of transfer requests is served concurrently by the
+//! thread-pool coordinator while the knowledge lifecycle service runs
+//! behind it — every completed transfer is ingested into day-partition
+//! logs, the refresh policy triggers an *additive* offline update over
+//! only the new partitions, and the refreshed knowledge base hot-swaps
+//! in as the next snapshot generation without pausing in-flight
+//! transfers. Later requests report the generation they were served
+//! from.
 //!
 //!     cargo run --release --example serve_requests -- [--requests N]
 
-use dtopt::coordinator::{OptimizerKind, TransferRequest};
+use dtopt::coordinator::{Coordinator, CoordinatorConfig, OptimizerKind, TransferRequest};
 use dtopt::experiments::common::{default_backend, ExpConfig, World};
+use dtopt::feedback::{FeedbackConfig, FeedbackService, IngestConfig, RefreshPolicy};
+use dtopt::logs::store::LogStore;
 use dtopt::sim::dataset::{Dataset, SizeClass};
 use dtopt::sim::testbed::TestbedId;
 use dtopt::util::rng::Rng;
+use std::time::{Duration, Instant};
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let n: usize = args
         .iter()
@@ -22,45 +29,107 @@ fn main() {
         .unwrap_or(36);
     let mut backend = default_backend();
     let world = World::prepare(ExpConfig::quick(), &mut backend);
-    let coord = world.coordinator(4);
-    let mut rng = Rng::new(99);
+
+    // The knowledge lifecycle service: bounded ingestion into a scratch
+    // log store, with a background refresher that fires once half of
+    // wave 1 has been flushed.
+    let store_dir =
+        std::env::temp_dir().join(format!("dtopt_serve_requests_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let service = FeedbackService::start(
+        world.kb.clone(),
+        LogStore::open(&store_dir)?,
+        FeedbackConfig {
+            ingest: IngestConfig {
+                capacity: 1024,
+                flush_batch: 8,
+                flush_interval: Duration::from_millis(10),
+            },
+            policy: RefreshPolicy {
+                min_new_rows: (n / 2).max(4) as u64,
+                min_interval: Duration::ZERO,
+                ..Default::default()
+            },
+            poll_interval: Duration::from_millis(10),
+            background: true,
+        },
+    )?;
+    let coord = Coordinator::with_feedback(
+        &service,
+        world.rows.clone(),
+        CoordinatorConfig { workers: 4, default_optimizer: OptimizerKind::Asm, seed: world.config.seed },
+    );
 
     // A mixed stream: 2/3 default (ASM), 1/3 explicit baseline picks —
     // the coordinator routes per request.
-    let requests: Vec<TransferRequest> = (0..n)
-        .map(|i| {
-            let optimizer = match i % 6 {
-                0 => Some(OptimizerKind::Harp),
-                3 => Some(OptimizerKind::AnnOt),
-                _ => None, // coordinator default (ASM)
-            };
-            TransferRequest {
-                id: coord.fresh_id(),
-                testbed: TestbedId::all()[rng.index(3)],
-                dataset: Dataset::sample(SizeClass::all()[rng.index(3)], &mut rng),
-                t_submit: (world.config.history_days + 1) as f64 * 86_400.0
-                    + rng.range_f64(0.0, 86_400.0),
-                state_override: None,
-                optimizer,
-                seed: 7_000 + i as u64,
-            }
-        })
-        .collect();
+    let mut rng = Rng::new(99);
+    let mut make_wave = |wave: usize| -> Vec<TransferRequest> {
+        (0..n)
+            .map(|i| {
+                let optimizer = match i % 6 {
+                    0 => Some(OptimizerKind::Harp),
+                    3 => Some(OptimizerKind::AnnOt),
+                    _ => None, // coordinator default (ASM)
+                };
+                TransferRequest {
+                    id: coord.fresh_id(),
+                    testbed: TestbedId::all()[rng.index(3)],
+                    dataset: Dataset::sample(SizeClass::all()[rng.index(3)], &mut rng),
+                    t_submit: (world.config.history_days + 1 + wave as u64) as f64 * 86_400.0
+                        + rng.range_f64(0.0, 86_400.0),
+                    state_override: None,
+                    optimizer,
+                    seed: 7_000 + (wave * n + i) as u64,
+                }
+            })
+            .collect()
+    };
 
-    let start = std::time::Instant::now();
-    // Submit all asynchronously, then collect — the workers overlap.
-    let receivers: Vec<_> = requests.into_iter().map(|r| coord.submit(r)).collect();
-    let responses: Vec<_> = receivers.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    // --- Wave 1: served from the startup KB (generation 0) --------------
+    let start = Instant::now();
+    let receivers: Vec<_> = make_wave(0).into_iter().map(|r| coord.submit(r)).collect();
+    let wave1: Vec<_> = receivers.into_iter().map(|rx| rx.recv().unwrap()).collect();
     let wall = start.elapsed();
-
+    let gen1 = wave1.iter().map(|r| r.kb_generation).max().unwrap_or(0);
     println!(
-        "served {} requests in {wall:.2?} wall ({:.1} req/s); decision p95 per optimizer below\n",
-        responses.len(),
-        responses.len() as f64 / wall.as_secs_f64()
+        "wave 1: served {} requests in {wall:.2?} ({:.1} req/s), all from KB generation ≤ {gen1}",
+        wave1.len(),
+        wave1.len() as f64 / wall.as_secs_f64()
     );
+
+    // --- The loop turns: ingested logs trip the policy, the refresher
+    // publishes the next generation while the service keeps running ------
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while service.generation() == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    if service.generation() == 0 {
+        // Policy did not trip in time (tiny --requests): force the turn.
+        service.flush_barrier(Duration::from_secs(10));
+        let _ = service.refresh_now()?;
+    }
+    println!(
+        "refresh: policy fired after {} flushed rows → KB generation {} published (no pause)",
+        service.stats.rows_flushed.load(std::sync::atomic::Ordering::Relaxed),
+        service.generation()
+    );
+
+    // --- Wave 2: new transfers observe the refreshed snapshot -----------
+    let start = Instant::now();
+    let receivers: Vec<_> = make_wave(1).into_iter().map(|r| coord.submit(r)).collect();
+    let wave2: Vec<_> = receivers.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let wall = start.elapsed();
+    let gen2 = wave2.iter().map(|r| r.kb_generation).min().unwrap_or(0);
+    println!(
+        "wave 2: served {} requests in {wall:.2?}, all from KB generation ≥ {gen2}\n",
+        wave2.len()
+    );
+    assert!(gen2 >= 1, "wave 2 must observe the refreshed snapshot");
+
     print!("{}", coord.metrics.render());
-    let asm_decisions: Vec<f64> = responses
+    let asm_decisions: Vec<f64> = wave1
         .iter()
+        .chain(&wave2)
         .filter(|r| r.optimizer == "ASM")
         .map(|r| r.decision_wall_ns as f64)
         .collect();
@@ -72,4 +141,7 @@ fn main() {
         );
     }
     coord.shutdown();
+    service.shutdown();
+    let _ = std::fs::remove_dir_all(&store_dir);
+    Ok(())
 }

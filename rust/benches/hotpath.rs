@@ -12,7 +12,6 @@ use dtopt::math::bicubic::BicubicSurface;
 use dtopt::math::spline::CubicSpline;
 use dtopt::offline::kmeans::{AssignBackend, NativeAssign};
 use dtopt::offline::knowledge::RequestInfo;
-use dtopt::runtime::{Backend, PjrtAssign};
 use dtopt::sim::dataset::Dataset;
 use dtopt::sim::params::Params;
 use dtopt::sim::testbed::Testbed;
@@ -60,21 +59,28 @@ fn main() {
     });
     println!("kmeans assign native 1024×6×8:  {s}");
     let mut backend = default_backend();
-    if let Backend::Pjrt(reg) = &mut backend {
-        let mut pjrt = PjrtAssign { registry: reg };
-        let s = bench(3, 100, || pjrt.assign(&points, n, d, &centroids, k, &mut assign).unwrap());
-        println!("kmeans assign pjrt   1024×6×8:  {s}");
-        let surfaces: Vec<&BicubicSurface> = vec![&surf];
-        let s = bench(3, 100, || reg.surface_eval_batch(&surfaces).unwrap());
-        println!("surface_eval pjrt (1 surface):  {s}");
-        let s = bench(2, 30, || {
-            let many: Vec<&BicubicSurface> = (0..64).map(|_| &surf).collect();
-            reg.surface_eval_batch(&many).unwrap()
-        });
-        println!("surface_eval pjrt (64 surfaces): {s}");
-    } else {
-        println!("kmeans assign pjrt: skipped (artifacts not built)");
+    #[cfg(feature = "pjrt")]
+    {
+        use dtopt::runtime::{Backend, PjrtAssign};
+        if let Backend::Pjrt(reg) = &mut backend {
+            let mut pjrt = PjrtAssign { registry: reg };
+            let s =
+                bench(3, 100, || pjrt.assign(&points, n, d, &centroids, k, &mut assign).unwrap());
+            println!("kmeans assign pjrt   1024×6×8:  {s}");
+            let surfaces: Vec<&BicubicSurface> = vec![&surf];
+            let s = bench(3, 100, || reg.surface_eval_batch(&surfaces).unwrap());
+            println!("surface_eval pjrt (1 surface):  {s}");
+            let s = bench(2, 30, || {
+                let many: Vec<&BicubicSurface> = (0..64).map(|_| &surf).collect();
+                reg.surface_eval_batch(&many).unwrap()
+            });
+            println!("surface_eval pjrt (64 surfaces): {s}");
+        } else {
+            println!("kmeans assign pjrt: skipped (artifacts not built)");
+        }
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("kmeans assign pjrt: skipped (built without the `pjrt` feature)");
     let s = bench(2, 50, || surf.eval_grid(56, 56));
     println!("surface_eval native (1 surface, 56×56): {s}");
 

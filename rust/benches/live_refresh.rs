@@ -1,0 +1,30 @@
+//! Bench/regenerator for the live closed-loop sweep: prediction
+//! accuracy of a continuously refreshing KB (ingest → additive refresh
+//! → hot swap) versus a frozen snapshot under shifting contention.
+//! Companion to `fig7_staleness.rs`, which sweeps the same staleness
+//! axis as a batch simulation.
+
+use dtopt::experiments::common::{config_from_args, default_backend, World};
+use dtopt::experiments::live;
+
+fn main() {
+    let config = config_from_args();
+    let full = std::env::var("DTOPT_FULL").is_ok();
+    let mut backend = default_backend();
+    eprintln!("live_refresh: preparing world ({} backend)...", backend.name());
+    let world = World::prepare(config, &mut backend);
+    let eval_days = if full { 12 } else { 4 };
+    let dir = std::env::temp_dir()
+        .join(format!("dtopt_live_refresh_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let start = std::time::Instant::now();
+    let result = live::run(&world, eval_days, &dir).expect("live refresh sweep");
+    let elapsed = start.elapsed();
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("== Live refresh: closed-loop KB vs frozen snapshot ==");
+    print!("{}", live::render(&result));
+    for (desc, ok) in live::headline_checks(&result) {
+        println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
+    }
+    println!("\ntiming: sweep {elapsed:.2?}");
+}

@@ -12,17 +12,23 @@ use crate::logs::record::TransferLog;
 use crate::math::polyfit::{PolyDegree, PolySurface};
 use crate::offline::features::{raw_features, Normalizer};
 use crate::sim::params::{Params, BETA, PP_LEVELS};
+use std::sync::Arc;
 
+/// Cloning is thin (an `Arc` bump plus the fitted normalizer), so a
+/// service can fit HARP once and hand each request its own handle.
+#[derive(Clone)]
 pub struct Harp {
     /// Historical rows (HARP weights samples by cosine-similar history).
-    history: Vec<TransferLog>,
+    /// Shared, not owned: deep-cloning a multi-thousand-row history per
+    /// request would dominate the decision cost HARP is measured on.
+    history: Arc<Vec<TransferLog>>,
     normalizer: Normalizer,
     /// Number of real-time probing transfers (the paper's HARP uses 3).
     pub probes: usize,
 }
 
 impl Harp {
-    pub fn new(history: Vec<TransferLog>) -> Harp {
+    pub fn new(history: Arc<Vec<TransferLog>>) -> Harp {
         let normalizer = Normalizer::fit(&history);
         Harp { history, normalizer, probes: 3 }
     }
@@ -199,7 +205,7 @@ mod tests {
     fn harp() -> (Harp, Testbed) {
         let tb = Testbed::xsede();
         let rows = generate(&tb, &GenConfig { days: 5, arrivals_per_hour: 30.0, start_day: 0, seed: 3 });
-        (Harp::new(rows), tb)
+        (Harp::new(Arc::new(rows)), tb)
     }
 
     #[test]

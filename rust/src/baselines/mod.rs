@@ -166,6 +166,15 @@ impl RunReport {
     pub fn final_steady_mbps(&self) -> f64 {
         self.phases.last().map(|p| p.steady_mbps).unwrap_or(0.0)
     }
+
+    /// Mid-transfer re-tunes: parameter switches *between bulk phases*,
+    /// after sampling converged. For ASM each switch is a drift-monitor
+    /// trip (§3.2 end) — the knowledge lifecycle service uses the rate
+    /// of these as a staleness signal for early refresh.
+    pub fn bulk_retunes(&self) -> usize {
+        let bulk: Vec<&Phase> = self.phases.iter().filter(|p| !p.is_sample).collect();
+        bulk.windows(2).filter(|w| w[0].params != w[1].params).count()
+    }
 }
 
 /// Common interface for ASM and all baselines.
@@ -258,5 +267,32 @@ mod tests {
         assert!((r.achieved_mbps() - 200.0).abs() < 1e-9);
         assert_eq!(r.sample_transfers(), 1);
         assert_eq!(r.final_steady_mbps(), 250.0);
+    }
+
+    #[test]
+    fn bulk_retunes_counts_parameter_switches() {
+        let bulk = |params: Params| Phase {
+            params,
+            mb: 100.0,
+            seconds: 5.0,
+            steady_mbps: 100.0,
+            is_sample: false,
+        };
+        let mut r = RunReport {
+            optimizer: "test",
+            phases: vec![
+                Phase { params: Params::new(1, 1, 1), mb: 10.0, seconds: 1.0, steady_mbps: 80.0, is_sample: true },
+                bulk(Params::new(2, 2, 2)),
+                bulk(Params::new(2, 2, 2)),
+                bulk(Params::new(4, 4, 4)),
+                bulk(Params::new(2, 2, 2)),
+            ],
+            final_params: Params::new(2, 2, 2),
+            predicted_mbps: None,
+        };
+        // Sample→bulk switch does not count; two bulk switches do.
+        assert_eq!(r.bulk_retunes(), 2);
+        r.phases.truncate(2);
+        assert_eq!(r.bulk_retunes(), 0);
     }
 }

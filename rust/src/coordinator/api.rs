@@ -83,6 +83,10 @@ pub struct TransferResponse {
     pub decision_wall_ns: u64,
     /// Ground-truth optimal steady rate at submission (for accuracy).
     pub optimal_mbps: f64,
+    /// Generation of the knowledge-base snapshot this request was
+    /// served from (0 = the KB frozen at startup; increments on every
+    /// hot-swapped refresh published by the feedback service).
+    pub kb_generation: u64,
 }
 
 #[cfg(test)]

@@ -1,8 +1,12 @@
-//! Coordinator metrics: per-optimizer aggregates over served requests.
+//! Coordinator metrics: per-optimizer aggregates over served requests,
+//! plus (when the knowledge lifecycle service is attached) the service
+//! block: snapshot generation, refresh latency, ingest queue depth, and
+//! dropped-row counters.
 
+use crate::feedback::FeedbackStats;
 use crate::util::stats::{mean, quantile};
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 #[derive(Debug, Default, Clone)]
 pub struct OptimizerStats {
@@ -28,11 +32,22 @@ impl OptimizerStats {
 #[derive(Debug, Default)]
 pub struct Metrics {
     inner: Mutex<BTreeMap<&'static str, OptimizerStats>>,
+    feedback: Mutex<Option<Arc<FeedbackStats>>>,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics::default()
+    }
+
+    /// Attach the knowledge-service counters so `render` includes them.
+    pub fn attach_feedback(&self, stats: Arc<FeedbackStats>) {
+        *self.feedback.lock().unwrap() = Some(stats);
+    }
+
+    /// The attached knowledge-service counters, if any.
+    pub fn feedback(&self) -> Option<Arc<FeedbackStats>> {
+        self.feedback.lock().unwrap().clone()
     }
 
     pub fn record(
@@ -75,6 +90,10 @@ impl Metrics {
                 crate::util::timer::fmt_ns(s.p95_decision_ns()),
             ));
         }
+        if let Some(fb) = self.feedback() {
+            out.push('\n');
+            out.push_str(&fb.render());
+        }
         out
     }
 }
@@ -96,6 +115,20 @@ mod tests {
         let table = m.render();
         assert!(table.contains("ASM"));
         assert!(table.contains("GO"));
+    }
+
+    #[test]
+    fn render_includes_attached_feedback_block() {
+        let m = Metrics::new();
+        m.record("ASM", 1000.0, 500.0, 4.0, 2, 10_000);
+        assert!(!m.render().contains("knowledge service"));
+        let fb = Arc::new(FeedbackStats::default());
+        fb.kb_generation.store(3, std::sync::atomic::Ordering::Relaxed);
+        fb.rows_dropped.store(7, std::sync::atomic::Ordering::Relaxed);
+        m.attach_feedback(fb);
+        let table = m.render();
+        assert!(table.contains("knowledge service: generation 3"));
+        assert!(table.contains("7 dropped at offer"));
     }
 
     #[test]

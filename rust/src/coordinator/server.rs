@@ -3,6 +3,13 @@
 //! against the simulated network, and aggregates metrics. This is the
 //! L3 request path: knowledge-base queries and parameter decisions all
 //! happen here in rust — python is long gone by now.
+//!
+//! The knowledge base is consumed through a hot-swappable snapshot
+//! slot: each request pins the current generation for its whole run,
+//! and — when a [`FeedbackService`] is attached — every completed
+//! transfer is offered back to the ingestion queue so the refresher can
+//! fold it into the next generation. Requests served during a refresh
+//! are never paused; they simply finish on the generation they pinned.
 
 use super::api::{OptimizerKind, TransferRequest, TransferResponse};
 use super::metrics::Metrics;
@@ -12,7 +19,8 @@ use crate::baselines::harp::Harp;
 use crate::baselines::nmt::NelderMeadTuner;
 use crate::baselines::sc::SingleChunk;
 use crate::baselines::sp::StaticParams;
-use crate::baselines::{Optimizer, TransferEnv};
+use crate::baselines::{Optimizer, RunReport, TransferEnv};
+use crate::feedback::{FeedbackService, FeedbackStats, IngestQueue, SnapshotSlot};
 use crate::logs::record::TransferLog;
 use crate::offline::knowledge::KnowledgeBase;
 use crate::online::asm::AdaptiveSampling;
@@ -42,13 +50,24 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// Handles into the knowledge lifecycle service, held per worker.
+struct FeedbackHandles {
+    queue: IngestQueue,
+    stats: Arc<FeedbackStats>,
+}
+
 /// Shared read-only context every worker uses.
 struct Shared {
-    kb: Arc<KnowledgeBase>,
-    history: Arc<Vec<TransferLog>>,
+    /// The hot-swappable knowledge base (generation 0 forever when no
+    /// feedback service is attached).
+    slot: Arc<SnapshotSlot>,
     annot: Arc<AnnOt>,
     sp: Arc<StaticParams>,
+    /// Fitted once over the shared history; each HARP request clones
+    /// the thin handle instead of re-running Normalizer::fit.
+    harp: Arc<Harp>,
     metrics: Arc<Metrics>,
+    feedback: Option<FeedbackHandles>,
 }
 
 enum Job {
@@ -66,21 +85,51 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// A coordinator serving from a knowledge base frozen at startup
+    /// (generation 0; no log ingestion).
     pub fn new(
         kb: Arc<KnowledgeBase>,
         history: Arc<Vec<TransferLog>>,
         config: CoordinatorConfig,
     ) -> Coordinator {
+        Coordinator::build(Arc::new(SnapshotSlot::new(kb)), history, config, None)
+    }
+
+    /// A coordinator wired into the knowledge lifecycle service: it
+    /// serves from the service's hot-swappable snapshot slot, offers
+    /// every completed transfer to the ingestion queue, and feeds the
+    /// drift-rate signal. The service outlives the coordinator — shut
+    /// the coordinator down first.
+    pub fn with_feedback(
+        service: &FeedbackService,
+        history: Arc<Vec<TransferLog>>,
+        config: CoordinatorConfig,
+    ) -> Coordinator {
+        let handles = FeedbackHandles { queue: service.queue(), stats: service.stats.clone() };
+        Coordinator::build(service.slot.clone(), history, config, Some(handles))
+    }
+
+    fn build(
+        slot: Arc<SnapshotSlot>,
+        history: Arc<Vec<TransferLog>>,
+        config: CoordinatorConfig,
+        feedback: Option<FeedbackHandles>,
+    ) -> Coordinator {
         let metrics = Arc::new(Metrics::new());
-        // Train the ANN once, shared by every worker.
+        if let Some(fb) = &feedback {
+            metrics.attach_feedback(fb.stats.clone());
+        }
+        // Train the ANN (and fit HARP/SP) once, shared by every worker.
         let annot = Arc::new(AnnOt::train(&history, config.seed ^ 0xA22));
         let sp = Arc::new(StaticParams::mine(&history));
+        let harp = Arc::new(Harp::new(history));
         let shared = Arc::new(Shared {
-            kb,
-            history,
+            slot,
             annot,
             sp,
+            harp,
             metrics: metrics.clone(),
+            feedback,
         });
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -153,14 +202,18 @@ fn worker_loop(
     }
 }
 
-/// Serve a single request: build the hidden environment, dispatch to
-/// the optimizer, record metrics.
+/// Serve a single request: pin the current KB snapshot, build the
+/// hidden environment, dispatch to the optimizer, record metrics, and
+/// feed the completed transfer back to the knowledge loop.
 fn serve_one(
     shared: &Shared,
     request: &TransferRequest,
     default_opt: OptimizerKind,
     widx: u64,
 ) -> TransferResponse {
+    // Pin one KB generation for the whole transfer: a refresh published
+    // mid-request never mixes versions inside one decision.
+    let snapshot = shared.slot.resolve();
     let testbed = Testbed::by_id(request.testbed);
     // Hidden network state: diurnal profile at submission time (plus
     // contending transfers), unless the request pins a state.
@@ -182,7 +235,7 @@ fn serve_one(
     let kind = request.optimizer.unwrap_or(default_opt);
     let started = Instant::now();
     let report = match kind {
-        OptimizerKind::Asm => AdaptiveSampling::new(&shared.kb).run(&mut env),
+        OptimizerKind::Asm => AdaptiveSampling::new(&snapshot.kb).run(&mut env),
         OptimizerKind::Go => GlobusOnline.run(&mut env),
         OptimizerKind::Sp => (*shared.sp).clone().run(&mut env),
         OptimizerKind::Sc => SingleChunk::default().run(&mut env),
@@ -192,7 +245,7 @@ fn serve_one(
             let mut model = (*shared.annot).clone();
             model.run(&mut env)
         }
-        OptimizerKind::Harp => Harp::new((*shared.history).clone()).run(&mut env),
+        OptimizerKind::Harp => (*shared.harp).clone().run(&mut env),
         OptimizerKind::Nmt => NelderMeadTuner::default().run(&mut env),
     };
     let decision_wall_ns = started.elapsed().as_nanos() as u64;
@@ -204,12 +257,50 @@ fn serve_one(
         report.sample_transfers(),
         decision_wall_ns,
     );
+    if let Some(fb) = &shared.feedback {
+        // Drift-rate signal: bulk-phase re-tunes mean the surfaces no
+        // longer describe current traffic (one of the refresh triggers).
+        fb.stats.note_drift(report.bulk_retunes() as u64);
+        // The completed transfer becomes tomorrow's knowledge. Offer is
+        // non-blocking; a full queue drops the row and counts it.
+        fb.queue.offer(completed_log(request, &testbed, &state, &report));
+    }
     TransferResponse {
         id: request.id,
         optimizer: report.optimizer,
         report,
         decision_wall_ns,
         optimal_mbps,
+        kb_generation: snapshot.generation,
+    }
+}
+
+/// Render a completed request as a log row with the same schema the
+/// offline analysis mines from historical logs: request shape, the
+/// *final* parameter decision, and the steady throughput it sustained.
+fn completed_log(
+    request: &TransferRequest,
+    testbed: &Testbed,
+    state: &NetState,
+    report: &RunReport,
+) -> TransferLog {
+    TransferLog {
+        id: request.id,
+        t_start: request.t_submit,
+        pair: testbed.id.name().to_string(),
+        rtt_ms: testbed.path.link.rtt_ms,
+        bandwidth_mbps: testbed.path.link.bandwidth_mbps,
+        tcp_buffer_mb: testbed.path.src.tcp_buffer_mb.min(testbed.path.dst.tcp_buffer_mb),
+        disk_mbps: testbed.path.src.disk_mbps.min(testbed.path.dst.disk_mbps),
+        avg_file_mb: request.dataset.avg_file_mb,
+        num_files: request.dataset.num_files,
+        cc: report.final_params.cc,
+        p: report.final_params.p,
+        pp: report.final_params.pp,
+        throughput_mbps: report.final_steady_mbps(),
+        duration_s: report.total_s(),
+        contending_mbps: state.contention.rate_mbps,
+        contending_streams: state.contention.streams,
     }
 }
 
@@ -272,6 +363,71 @@ mod tests {
             assert!(names.contains(&kind.name()), "missing {}", kind.name());
         }
         coord.shutdown();
+    }
+
+    #[test]
+    fn frozen_coordinator_reports_generation_zero() {
+        let coord = coordinator();
+        let responses = coord.run_batch(vec![request(1, None)]);
+        assert_eq!(responses[0].kb_generation, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn feedback_loop_ingests_and_hot_swaps() {
+        use crate::feedback::{FeedbackConfig, FeedbackService, IngestConfig, RefreshPolicy};
+        use crate::logs::store::LogStore;
+        use std::time::Duration;
+
+        let tb = Testbed::xsede();
+        let rows = generate(
+            &tb,
+            &GenConfig { days: 5, arrivals_per_hour: 25.0, start_day: 0, seed: 61 },
+        );
+        let kb = Arc::new(build(&rows, &OfflineConfig::default(), &mut NativeAssign).unwrap());
+        let dir = std::env::temp_dir()
+            .join(format!("dtopt_server_feedback_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let service = FeedbackService::start(
+            kb,
+            LogStore::open(&dir).unwrap(),
+            FeedbackConfig {
+                ingest: IngestConfig {
+                    capacity: 256,
+                    flush_batch: 4,
+                    flush_interval: Duration::from_millis(5),
+                },
+                policy: RefreshPolicy {
+                    min_new_rows: 1,
+                    min_interval: Duration::ZERO,
+                    ..Default::default()
+                },
+                background: false, // driven by tick() for determinism
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let coord = Coordinator::with_feedback(
+            &service,
+            Arc::new(rows),
+            CoordinatorConfig { workers: 2, ..Default::default() },
+        );
+        // Wave 1 serves from, and is attributed to, generation 0.
+        let wave1 = coord.run_batch((1..=4).map(|i| request(i, None)).collect());
+        assert!(wave1.iter().all(|r| r.kb_generation == 0));
+        // Completed transfers reach the store; the policy then fires.
+        assert!(service.flush_barrier(Duration::from_secs(30)), "ingest queue drained");
+        assert_eq!(service.stats.rows_flushed.load(Ordering::Relaxed), 4);
+        let fired = service.tick().unwrap();
+        assert_eq!(fired.map(|(generation, _)| generation), Some(1));
+        // Wave 2 observes the hot-swapped snapshot.
+        let wave2 = coord.run_batch((5..=8).map(|i| request(i, None)).collect());
+        assert!(wave2.iter().all(|r| r.kb_generation == 1));
+        // Metrics render includes the service block.
+        assert!(coord.metrics.render().contains("knowledge service: generation 1"));
+        coord.shutdown();
+        service.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -78,7 +78,7 @@ pub fn run(world: &World) -> Fig6Result {
         for case in 0..cases {
             for tb in TestbedId::all() {
                 let mut env = test_env(world, case, tb);
-                let mut harp = Harp::new((*world.rows).clone());
+                let mut harp = Harp::new(world.rows.clone());
                 harp.probes = probes;
                 let report = harp.run(&mut env);
                 if let Some(a) = report_accuracy(&report) {

@@ -1,7 +1,9 @@
 //! Experiment harnesses regenerating every table and figure of the
 //! paper's evaluation (see DESIGN.md §Experiment index): Fig. 1–2
 //! (surfaces), Fig. 3 (confidence + model accuracy), Fig. 5 (the
-//! headline bake-off), Fig. 6 (convergence), Fig. 7 (staleness).
+//! headline bake-off), Fig. 6 (convergence), Fig. 7 (staleness), plus
+//! the live closed-loop sweep (`live`) that upgrades Fig. 7 from batch
+//! refresh to the hot-swapping feedback service.
 //! Table 1 is `sim::testbed::Testbed::table1()`.
 
 pub mod common;
@@ -10,3 +12,4 @@ pub mod fig3;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod live;

@@ -1,0 +1,273 @@
+//! Bounded log ingestion: completed transfers become tomorrow's
+//! knowledge.
+//!
+//! The coordinator's request path calls [`IngestQueue::offer`], which
+//! never blocks: the queue is a bounded sync channel and a full (or
+//! closed) queue drops the row and counts it — the knowledge loop is
+//! strictly best-effort and must not add latency to transfers. A
+//! background flusher drains the queue and batch-appends rows into the
+//! [`LogStore`]'s day partitions, which is exactly the shape the
+//! additive refresh consumes ("we do not need to combine it with
+//! previous logs", paper §3.1).
+
+use super::FeedbackStats;
+use crate::logs::record::TransferLog;
+use crate::logs::store::LogStore;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Ingestion tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct IngestConfig {
+    /// Bounded queue capacity; rows offered beyond it are dropped (and
+    /// counted) rather than blocking the request path.
+    pub capacity: usize,
+    /// Flush to the store once this many rows are buffered...
+    pub flush_batch: usize,
+    /// ...or this much time passes with rows pending.
+    pub flush_interval: Duration,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        IngestConfig {
+            capacity: 1024,
+            flush_batch: 64,
+            flush_interval: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Cloneable producer handle held by every coordinator worker.
+#[derive(Clone)]
+pub struct IngestQueue {
+    tx: SyncSender<TransferLog>,
+    stats: Arc<FeedbackStats>,
+    closing: Arc<AtomicBool>,
+}
+
+impl IngestQueue {
+    /// Offer one completed-transfer row. Non-blocking; returns whether
+    /// the row was accepted. Full or closed queues count a drop.
+    pub fn offer(&self, row: TransferLog) -> bool {
+        if self.closing.load(Ordering::Acquire) {
+            self.stats.rows_dropped.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        // Depth goes up *before* the row becomes visible to the flusher
+        // so its decrement can never transiently underflow the counter.
+        self.stats.queue_depth.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(row) {
+            Ok(()) => {
+                self.stats.rows_enqueued.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                self.stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                self.stats.rows_dropped.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+        }
+    }
+}
+
+/// Handle on the background flusher thread.
+pub struct IngestWorker {
+    handle: JoinHandle<()>,
+}
+
+impl IngestWorker {
+    pub fn join(self) {
+        let _ = self.handle.join();
+    }
+}
+
+/// Spawn the flusher and return the producer handle. `closing` makes
+/// shutdown prompt even while producer clones are still alive: once set,
+/// the flusher exits at its next idle timeout after draining.
+pub(crate) fn spawn(
+    store: Arc<LogStore>,
+    stats: Arc<FeedbackStats>,
+    closing: Arc<AtomicBool>,
+    config: IngestConfig,
+) -> (IngestQueue, IngestWorker) {
+    let (tx, rx) = sync_channel::<TransferLog>(config.capacity.max(1));
+    let queue = IngestQueue { tx, stats: stats.clone(), closing: closing.clone() };
+    let handle = std::thread::Builder::new()
+        .name("dtopt-ingest".into())
+        .spawn(move || flush_loop(rx, store, stats, closing, config))
+        .expect("spawning ingest flusher");
+    (queue, IngestWorker { handle })
+}
+
+fn flush_loop(
+    rx: Receiver<TransferLog>,
+    store: Arc<LogStore>,
+    stats: Arc<FeedbackStats>,
+    closing: Arc<AtomicBool>,
+    config: IngestConfig,
+) {
+    let flush_batch = config.flush_batch.max(1);
+    let mut batch: Vec<TransferLog> = Vec::with_capacity(flush_batch);
+    // Deadline for the *oldest* buffered row: a steady trickle of rows
+    // must not keep postponing the time-based flush.
+    let mut batch_deadline: Option<Instant> = None;
+    loop {
+        let wait = match batch_deadline {
+            Some(deadline) => deadline.saturating_duration_since(Instant::now()),
+            None => config.flush_interval,
+        };
+        match rx.recv_timeout(wait) {
+            Ok(row) => {
+                if batch.is_empty() {
+                    batch_deadline = Some(Instant::now() + config.flush_interval);
+                }
+                stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                batch.push(row);
+                // Drain whatever else is already queued, up to a batch.
+                while batch.len() < flush_batch {
+                    match rx.try_recv() {
+                        Ok(row) => {
+                            stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                            batch.push(row);
+                        }
+                        Err(_) => break,
+                    }
+                }
+                let deadline_hit =
+                    batch_deadline.is_some_and(|deadline| Instant::now() >= deadline);
+                if batch.len() >= flush_batch || deadline_hit {
+                    flush(&store, &stats, &mut batch);
+                    batch_deadline = None;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                flush(&store, &stats, &mut batch);
+                batch_deadline = None;
+                if closing.load(Ordering::Acquire) {
+                    break;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                flush(&store, &stats, &mut batch);
+                break;
+            }
+        }
+    }
+}
+
+fn flush(store: &LogStore, stats: &FeedbackStats, batch: &mut Vec<TransferLog>) {
+    if batch.is_empty() {
+        return;
+    }
+    match store.append(batch) {
+        Ok(()) => {
+            stats.rows_flushed.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            stats.flushes.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(e) => {
+            // Best-effort loop: a failed write becomes counted losses,
+            // never a stalled request path.
+            stats.rows_flush_failed.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            eprintln!("warning: ingest flush failed ({e:#}); lost {} rows", batch.len());
+        }
+    }
+    batch.clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logs::record::tests::sample_log;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("dtopt_ingest_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    /// A queue with the receiver held by the test (no flusher), so the
+    /// bounded-capacity behavior is fully deterministic.
+    fn manual_queue(capacity: usize) -> (IngestQueue, Receiver<TransferLog>, Arc<FeedbackStats>) {
+        let (tx, rx) = sync_channel(capacity);
+        let stats = Arc::new(FeedbackStats::default());
+        let queue = IngestQueue {
+            tx,
+            stats: stats.clone(),
+            closing: Arc::new(AtomicBool::new(false)),
+        };
+        (queue, rx, stats)
+    }
+
+    #[test]
+    fn full_queue_drops_and_counts_without_blocking() {
+        let (queue, rx, stats) = manual_queue(4);
+        let mut accepted = 0;
+        for _ in 0..10 {
+            if queue.offer(sample_log()) {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 4, "exactly the capacity is accepted");
+        assert_eq!(stats.rows_enqueued.load(Ordering::Relaxed), 4);
+        assert_eq!(stats.rows_dropped.load(Ordering::Relaxed), 6);
+        assert_eq!(stats.queue_depth.load(Ordering::Relaxed), 4);
+        // Draining frees capacity again.
+        let _ = rx.recv().unwrap();
+        assert!(queue.offer(sample_log()));
+        assert_eq!(stats.rows_enqueued.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn disconnected_queue_counts_drops() {
+        let (queue, rx, stats) = manual_queue(2);
+        drop(rx);
+        assert!(!queue.offer(sample_log()));
+        assert_eq!(stats.rows_dropped.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn flusher_batches_into_day_partitions() {
+        let dir = tmpdir("flush");
+        let store = Arc::new(LogStore::open(&dir).unwrap());
+        let stats = Arc::new(FeedbackStats::default());
+        let closing = Arc::new(AtomicBool::new(false));
+        let (queue, worker) = spawn(
+            store.clone(),
+            stats.clone(),
+            closing.clone(),
+            IngestConfig {
+                capacity: 64,
+                flush_batch: 8,
+                flush_interval: Duration::from_millis(5),
+            },
+        );
+        for i in 0..20u64 {
+            let mut row = sample_log();
+            row.id = i;
+            // Spread across two day partitions.
+            row.t_start = if i < 12 { 100.0 } else { crate::sim::traffic::DAY_S + 50.0 };
+            assert!(queue.offer(row), "bounded queue should accept under capacity");
+        }
+        // Wait for the flusher to drain everything.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while stats.rows_flushed.load(Ordering::Relaxed) < 20 {
+            assert!(std::time::Instant::now() < deadline, "flusher did not drain in time");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        closing.store(true, Ordering::Release);
+        drop(queue);
+        worker.join();
+        assert_eq!(store.days().unwrap(), vec![0, 1]);
+        assert_eq!(store.read_day(0).unwrap().len(), 12);
+        assert_eq!(store.read_day(1).unwrap().len(), 8);
+        assert!(stats.flushes.load(Ordering::Relaxed) >= 1);
+        assert_eq!(stats.queue_depth.load(Ordering::Relaxed), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,233 @@
+//! The knowledge lifecycle service — the paper's closed loop.
+//!
+//! Offline analysis mines historical logs into a knowledge base; the
+//! online ASM consumes it; completed transfers become new log rows that
+//! are folded back in *additively* ("when new logs are generated for a
+//! certain period of time, we do not need to combine it with previous
+//! logs", §3.1). This module closes that loop for a live service:
+//!
+//! ```text
+//!             ┌────────────────────────────────────────────┐
+//!             │                coordinator                 │
+//!  requests ─▶│ worker ── resolve ──▶ [snapshot] ── ASM    │─▶ responses
+//!             │   │                       ▲                │   (+ kb generation)
+//!             └───┼───────────────────────┼────────────────┘
+//!        completed│transfers              │ publish(gen+1)
+//!                 ▼                       │
+//!          [ingest queue] ─ flush ─▶ LogStore ─ new rows ─▶ [refresher]
+//!          (bounded, drops           (day partitions)        │  ▲
+//!           counted)                                         ▼  │ policy:
+//!                                            offline::pipeline  │ rows/period/drift
+//!                                            ::update (additive)┘
+//! ```
+//!
+//! * [`snapshot`] — versioned, hot-swappable KB handles; workers pin a
+//!   consistent snapshot per transfer while new generations publish.
+//! * [`ingest`] — bounded MPSC queue + batched flush into `LogStore`
+//!   day partitions; never blocks the request path, drops are counted.
+//! * [`refresher`] — background additive refresh over only the new
+//!   partitions, publishing the result as the next generation.
+//! * [`policy`] — refresh triggers: row count, wall-clock period, and
+//!   the drift-rate signal surfaced by `online::monitor` re-tunes.
+
+pub mod ingest;
+pub mod policy;
+pub mod refresher;
+pub mod snapshot;
+
+pub use ingest::{IngestConfig, IngestQueue};
+pub use policy::{RefreshPolicy, RefreshReason};
+pub use refresher::Refresher;
+pub use snapshot::{KbSnapshot, SnapshotSlot};
+
+use crate::logs::store::LogStore;
+use crate::offline::knowledge::KnowledgeBase;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Shared counters of the whole loop; rendered by coordinator metrics.
+#[derive(Debug, Default)]
+pub struct FeedbackStats {
+    // Ingest side.
+    pub rows_enqueued: AtomicU64,
+    /// Rows rejected at `offer` (queue full or closed).
+    pub rows_dropped: AtomicU64,
+    /// Dequeued rows lost to a failed store append.
+    pub rows_flush_failed: AtomicU64,
+    pub rows_flushed: AtomicU64,
+    pub flushes: AtomicU64,
+    pub queue_depth: AtomicU64,
+    // Signals.
+    pub drift_events: AtomicU64,
+    // Refresh side.
+    pub refreshes: AtomicU64,
+    pub rows_consumed: AtomicU64,
+    pub last_refresh_ns: AtomicU64,
+    pub total_refresh_ns: AtomicU64,
+    pub kb_generation: AtomicU64,
+}
+
+impl FeedbackStats {
+    /// Record drift re-tunes observed by the online monitor (one of
+    /// the refresh-trigger signals). The single entry point for the
+    /// signal — coordinator workers and the service both route here.
+    pub fn note_drift(&self, events: u64) {
+        if events > 0 {
+            self.drift_events.fetch_add(events, Ordering::Relaxed);
+        }
+    }
+
+    /// One-paragraph service block for the metrics table.
+    pub fn render(&self) -> String {
+        let refreshes = self.refreshes.load(Ordering::Relaxed);
+        let mean_ns = if refreshes > 0 {
+            self.total_refresh_ns.load(Ordering::Relaxed) as f64 / refreshes as f64
+        } else {
+            0.0
+        };
+        format!(
+            "knowledge service: generation {}, {} refreshes (last {}, mean {}), {} rows folded in\n\
+             ingest: {} enqueued, {} flushed in {} batches, {} dropped at offer, {} lost in flush, queue depth {}\n\
+             signals: {} drift re-tunes observed\n",
+            self.kb_generation.load(Ordering::Relaxed),
+            refreshes,
+            crate::util::timer::fmt_ns(self.last_refresh_ns.load(Ordering::Relaxed) as f64),
+            crate::util::timer::fmt_ns(mean_ns),
+            self.rows_consumed.load(Ordering::Relaxed),
+            self.rows_enqueued.load(Ordering::Relaxed),
+            self.rows_flushed.load(Ordering::Relaxed),
+            self.flushes.load(Ordering::Relaxed),
+            self.rows_dropped.load(Ordering::Relaxed),
+            self.rows_flush_failed.load(Ordering::Relaxed),
+            self.queue_depth.load(Ordering::Relaxed),
+            self.drift_events.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct FeedbackConfig {
+    pub ingest: IngestConfig,
+    pub policy: RefreshPolicy,
+    /// How often the background refresher evaluates the policy.
+    pub poll_interval: Duration,
+    /// Spawn the background refresher thread. With `false` the loop is
+    /// driven manually through [`FeedbackService::tick`] — what tests
+    /// and deterministic experiments use.
+    pub background: bool,
+}
+
+impl Default for FeedbackConfig {
+    fn default() -> Self {
+        FeedbackConfig {
+            ingest: IngestConfig::default(),
+            policy: RefreshPolicy::default(),
+            poll_interval: Duration::from_millis(100),
+            background: true,
+        }
+    }
+}
+
+/// The assembled lifecycle service: snapshot slot + ingest queue +
+/// refresher, sharing one stats block.
+pub struct FeedbackService {
+    pub slot: Arc<SnapshotSlot>,
+    pub stats: Arc<FeedbackStats>,
+    queue: IngestQueue,
+    engine: Arc<refresher::RefreshEngine>,
+    ingest_worker: ingest::IngestWorker,
+    refresher: Option<Refresher>,
+    closing: Arc<AtomicBool>,
+}
+
+impl FeedbackService {
+    /// Start the service around an initial knowledge base. Partitions
+    /// already present in `store` are treated as the history the KB was
+    /// built from: only rows appended afterwards feed refreshes.
+    pub fn start(
+        kb: Arc<KnowledgeBase>,
+        store: LogStore,
+        config: FeedbackConfig,
+    ) -> Result<FeedbackService> {
+        let slot = Arc::new(SnapshotSlot::new(kb));
+        let stats = Arc::new(FeedbackStats::default());
+        let closing = Arc::new(AtomicBool::new(false));
+        let store = Arc::new(store);
+        let (queue, ingest_worker) =
+            ingest::spawn(store.clone(), stats.clone(), closing.clone(), config.ingest);
+        let engine = Arc::new(refresher::RefreshEngine::new(
+            slot.clone(),
+            store,
+            stats.clone(),
+            config.policy,
+        )?);
+        let refresher = if config.background {
+            Some(Refresher::spawn(engine.clone(), config.poll_interval))
+        } else {
+            None
+        };
+        Ok(FeedbackService { slot, stats, queue, engine, ingest_worker, refresher, closing })
+    }
+
+    /// A producer handle for the coordinator's workers.
+    pub fn queue(&self) -> IngestQueue {
+        self.queue.clone()
+    }
+
+    /// Current knowledge-base generation.
+    pub fn generation(&self) -> u64 {
+        self.slot.generation()
+    }
+
+    /// Record drift re-tunes observed by the online monitor (one of the
+    /// refresh-trigger signals).
+    pub fn note_drift(&self, events: u64) {
+        self.stats.note_drift(events);
+    }
+
+    /// One synchronous policy evaluation (what the background thread
+    /// runs); refreshes and publishes when a signal fires.
+    pub fn tick(&self) -> Result<Option<(u64, RefreshReason)>> {
+        self.engine.tick()
+    }
+
+    /// Unconditional refresh; `None` when the store holds nothing new.
+    pub fn refresh_now(&self) -> Result<Option<u64>> {
+        self.engine.refresh_now()
+    }
+
+    /// Block until every row offered so far is flushed or dropped (or
+    /// the timeout passes). For tests and deterministic experiments.
+    pub fn flush_barrier(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let enqueued = self.stats.rows_enqueued.load(Ordering::Acquire);
+            // Every enqueued row ends up either flushed or lost to a
+            // failed append; offer-path drops never entered the queue.
+            let settled = self.stats.rows_flushed.load(Ordering::Acquire)
+                + self.stats.rows_flush_failed.load(Ordering::Acquire);
+            if settled >= enqueued {
+                return true;
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Stop the refresher, drain the ingest queue, and join both
+    /// threads. Shut the coordinator down first so no worker still
+    /// holds a producer handle mid-request.
+    pub fn shutdown(self) {
+        if let Some(refresher) = self.refresher {
+            refresher.stop();
+        }
+        self.closing.store(true, Ordering::Release);
+        drop(self.queue);
+        self.ingest_worker.join();
+    }
+}

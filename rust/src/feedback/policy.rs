@@ -1,0 +1,153 @@
+//! Refresh-trigger policy: when is the knowledge base stale enough to
+//! re-run the (additive) offline analysis?
+//!
+//! Three signals, mirroring the paper's discussion of refresh cadence
+//! (§3.1 "when new logs are generated for a certain period of time")
+//! and the drift handling of §3.2:
+//!
+//! * **row threshold** — enough new log rows have been flushed that the
+//!   refresh will actually move the sufficient statistics;
+//! * **wall clock** — a maximum staleness period, the paper's periodic
+//!   analysis (Fig. 7 shows accuracy decay vs this period);
+//! * **drift rate** — the online monitor keeps re-tuning mid-transfer,
+//!   which means the surfaces no longer describe current traffic, so
+//!   refresh *sooner* than the periodic schedule.
+
+use std::time::Duration;
+
+/// Why a refresh fired (exposed in metrics and logs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RefreshReason {
+    RowThreshold,
+    WallClock,
+    Drift,
+}
+
+impl RefreshReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RefreshReason::RowThreshold => "row-threshold",
+            RefreshReason::WallClock => "wall-clock",
+            RefreshReason::Drift => "drift",
+        }
+    }
+}
+
+/// Trigger thresholds. A threshold of 0 disables that signal.
+#[derive(Debug, Clone, Copy)]
+pub struct RefreshPolicy {
+    /// Fire once this many new rows have been flushed since the last
+    /// refresh.
+    pub min_new_rows: u64,
+    /// Fire (if there is anything new at all) once this much wall time
+    /// has passed since the last refresh.
+    pub max_interval: Duration,
+    /// Fire once this many drift re-tunes were observed since the last
+    /// refresh.
+    pub drift_threshold: u64,
+    /// Cooldown: never refresh more often than this, whatever the other
+    /// signals say (a refresh clones + rebuilds touched clusters).
+    pub min_interval: Duration,
+}
+
+impl Default for RefreshPolicy {
+    fn default() -> Self {
+        RefreshPolicy {
+            min_new_rows: 500,
+            max_interval: Duration::from_secs(3600),
+            drift_threshold: 50,
+            min_interval: Duration::from_millis(250),
+        }
+    }
+}
+
+impl RefreshPolicy {
+    /// Decide whether to refresh given the signals accumulated since
+    /// the last refresh. Returns the strongest reason that fired, or
+    /// `None`. With zero new rows a refresh is a no-op, so nothing
+    /// fires regardless of elapsed time or drift.
+    pub fn decide(
+        &self,
+        new_rows: u64,
+        since_last: Duration,
+        drift_events: u64,
+    ) -> Option<RefreshReason> {
+        if new_rows == 0 || since_last < self.min_interval {
+            return None;
+        }
+        if self.min_new_rows > 0 && new_rows >= self.min_new_rows {
+            return Some(RefreshReason::RowThreshold);
+        }
+        if self.drift_threshold > 0 && drift_events >= self.drift_threshold {
+            return Some(RefreshReason::Drift);
+        }
+        if self.max_interval > Duration::ZERO && since_last >= self.max_interval {
+            return Some(RefreshReason::WallClock);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> RefreshPolicy {
+        RefreshPolicy {
+            min_new_rows: 100,
+            max_interval: Duration::from_secs(60),
+            drift_threshold: 10,
+            min_interval: Duration::from_secs(1),
+        }
+    }
+
+    #[test]
+    fn nothing_new_never_fires() {
+        let p = policy();
+        assert_eq!(p.decide(0, Duration::from_secs(999), 999), None);
+    }
+
+    #[test]
+    fn cooldown_suppresses_all_signals() {
+        let p = policy();
+        assert_eq!(p.decide(10_000, Duration::from_millis(10), 10_000), None);
+    }
+
+    #[test]
+    fn row_threshold_fires_first() {
+        let p = policy();
+        assert_eq!(
+            p.decide(100, Duration::from_secs(2), 0),
+            Some(RefreshReason::RowThreshold)
+        );
+        assert_eq!(p.decide(99, Duration::from_secs(2), 0), None);
+    }
+
+    #[test]
+    fn drift_fires_before_wall_clock() {
+        let p = policy();
+        assert_eq!(p.decide(5, Duration::from_secs(2), 10), Some(RefreshReason::Drift));
+        assert_eq!(p.decide(5, Duration::from_secs(2), 9), None);
+    }
+
+    #[test]
+    fn wall_clock_fires_with_any_new_rows() {
+        let p = policy();
+        assert_eq!(
+            p.decide(1, Duration::from_secs(60), 0),
+            Some(RefreshReason::WallClock)
+        );
+        assert_eq!(p.decide(1, Duration::from_secs(59), 0), None);
+    }
+
+    #[test]
+    fn zero_thresholds_disable_signals() {
+        let p = RefreshPolicy {
+            min_new_rows: 0,
+            max_interval: Duration::ZERO,
+            drift_threshold: 0,
+            min_interval: Duration::ZERO,
+        };
+        assert_eq!(p.decide(1_000_000, Duration::from_secs(1_000_000), 1_000_000), None);
+    }
+}

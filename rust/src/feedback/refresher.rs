@@ -1,0 +1,282 @@
+//! The background refresher: watches ingested volume and drift signals,
+//! and when the [`RefreshPolicy`] fires, folds *only the new log rows*
+//! into a clone of the current knowledge base via the offline
+//! pipeline's additive `update`, then publishes the result as the next
+//! snapshot generation. In-flight transfers keep their pinned snapshot;
+//! new transfers pick up the fresh one — the refresh never pauses the
+//! request path.
+
+use super::policy::{RefreshPolicy, RefreshReason};
+use super::snapshot::SnapshotSlot;
+use super::FeedbackStats;
+use crate::logs::record::TransferLog;
+use crate::logs::store::LogStore;
+use crate::offline::pipeline::update;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Per-partition consumption cursor + signal baselines, guarded by one
+/// mutex so the background thread and manual `refresh_now` calls never
+/// double-consume a partition.
+struct EngineState {
+    /// Rows already consumed per day partition (partitions are
+    /// append-only, so a length is a complete cursor).
+    cursor: BTreeMap<u64, usize>,
+    last_refresh: Instant,
+    /// `rows_flushed` value at the last refresh.
+    rows_at_last: u64,
+    /// `drift_events` value at the last refresh.
+    drift_at_last: u64,
+}
+
+/// The refresh machinery shared by the background thread and the
+/// service's synchronous entry points.
+pub(crate) struct RefreshEngine {
+    slot: Arc<SnapshotSlot>,
+    store: Arc<LogStore>,
+    stats: Arc<FeedbackStats>,
+    policy: RefreshPolicy,
+    state: Mutex<EngineState>,
+}
+
+impl RefreshEngine {
+    /// `consume_existing`: partitions already present in the store are
+    /// assumed to be the history the initial KB was built from and are
+    /// marked consumed, so the first refresh reads new rows only.
+    pub(crate) fn new(
+        slot: Arc<SnapshotSlot>,
+        store: Arc<LogStore>,
+        stats: Arc<FeedbackStats>,
+        policy: RefreshPolicy,
+    ) -> Result<RefreshEngine> {
+        let mut cursor = BTreeMap::new();
+        for day in store.days()? {
+            // Count without parsing: startup must not re-deserialize
+            // the entire history the initial KB was built from.
+            cursor.insert(day, store.row_count(day)?);
+        }
+        Ok(RefreshEngine {
+            slot,
+            store,
+            stats,
+            policy,
+            state: Mutex::new(EngineState {
+                cursor,
+                last_refresh: Instant::now(),
+                rows_at_last: 0,
+                drift_at_last: 0,
+            }),
+        })
+    }
+
+    /// One policy evaluation; refreshes when a signal fires. Returns the
+    /// published generation and the reason, or `None`.
+    pub(crate) fn tick(&self) -> Result<Option<(u64, RefreshReason)>> {
+        let mut state = self.state.lock().expect("refresh engine poisoned");
+        let flushed = self.stats.rows_flushed.load(Ordering::Acquire);
+        let drift = self.stats.drift_events.load(Ordering::Acquire);
+        let new_rows = flushed.saturating_sub(state.rows_at_last);
+        let drift_events = drift.saturating_sub(state.drift_at_last);
+        let Some(reason) = self.policy.decide(new_rows, state.last_refresh.elapsed(), drift_events)
+        else {
+            return Ok(None);
+        };
+        Ok(self.refresh_locked(&mut state)?.map(|generation| (generation, reason)))
+    }
+
+    /// Unconditional refresh (manual trigger); `None` when the store
+    /// holds nothing new.
+    pub(crate) fn refresh_now(&self) -> Result<Option<u64>> {
+        let mut state = self.state.lock().expect("refresh engine poisoned");
+        self.refresh_locked(&mut state)
+    }
+
+    fn refresh_locked(&self, state: &mut EngineState) -> Result<Option<u64>> {
+        // Gather every row past the cursor, partition by partition —
+        // old partitions whose length is unchanged are never re-read
+        // into the analysis (additivity). Nothing is committed to the
+        // cursor or the signal baselines until the update succeeds, so
+        // a failed refresh leaves every row pending for the next tick
+        // instead of silently skipping it.
+        let mut fresh: Vec<TransferLog> = Vec::new();
+        let mut advanced: Vec<(u64, usize)> = Vec::new();
+        for day in self.store.days()? {
+            let seen = state.cursor.get(&day).copied().unwrap_or(0);
+            let rows = self.store.read_day(day)?;
+            if rows.len() > seen {
+                fresh.extend_from_slice(&rows[seen..]);
+                advanced.push((day, rows.len()));
+            }
+        }
+        if fresh.is_empty() {
+            // Nothing to fold in; restart the cooldown clock and move
+            // the baselines (flushed rows are always on disk, so this
+            // path only means there was genuinely nothing new).
+            state.last_refresh = Instant::now();
+            state.rows_at_last = self.stats.rows_flushed.load(Ordering::Acquire);
+            state.drift_at_last = self.stats.drift_events.load(Ordering::Acquire);
+            return Ok(None);
+        }
+        let started = Instant::now();
+        let pinned = self.slot.resolve();
+        let mut kb = (*pinned.kb).clone();
+        update(&mut kb, &fresh)?;
+        let generation = self.slot.publish(Arc::new(kb));
+        for (day, consumed) in advanced {
+            state.cursor.insert(day, consumed);
+        }
+        state.last_refresh = Instant::now();
+        state.rows_at_last = self.stats.rows_flushed.load(Ordering::Acquire);
+        state.drift_at_last = self.stats.drift_events.load(Ordering::Acquire);
+        let refresh_ns = started.elapsed().as_nanos() as u64;
+        self.stats.refreshes.fetch_add(1, Ordering::Relaxed);
+        self.stats.rows_consumed.fetch_add(fresh.len() as u64, Ordering::Relaxed);
+        self.stats.last_refresh_ns.store(refresh_ns, Ordering::Relaxed);
+        self.stats.total_refresh_ns.fetch_add(refresh_ns, Ordering::Relaxed);
+        self.stats.kb_generation.store(generation, Ordering::Release);
+        Ok(Some(generation))
+    }
+}
+
+/// Handle on the background refresher thread.
+pub struct Refresher {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Refresher {
+    pub(crate) fn spawn(engine: Arc<RefreshEngine>, poll_interval: Duration) -> Refresher {
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread_stop = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("dtopt-refresher".into())
+            .spawn(move || {
+                while !thread_stop.load(Ordering::Acquire) {
+                    if let Err(e) = engine.tick() {
+                        eprintln!("warning: knowledge refresh failed: {e:#}");
+                    }
+                    std::thread::sleep(poll_interval);
+                }
+            })
+            .expect("spawning refresher");
+        Refresher { stop, handle: Some(handle) }
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+
+    pub fn stop(mut self) {
+        self.halt();
+    }
+}
+
+/// RAII guard: a `Refresher` dropped without an explicit `stop` (early
+/// return, panic unwind) still stops and joins its thread instead of
+/// leaking a pollster for the rest of the process.
+impl Drop for Refresher {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logs::generate::{generate, GenConfig};
+    use crate::offline::kmeans::NativeAssign;
+    use crate::offline::pipeline::{build, OfflineConfig};
+    use crate::sim::testbed::Testbed;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("dtopt_refresh_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn history(days: u64, start_day: u64, seed: u64) -> Vec<TransferLog> {
+        generate(
+            &Testbed::xsede(),
+            &GenConfig { days, arrivals_per_hour: 15.0, start_day, seed },
+        )
+    }
+
+    fn engine(dir: &PathBuf, policy: RefreshPolicy) -> (Arc<RefreshEngine>, Arc<LogStore>, Arc<FeedbackStats>, Arc<SnapshotSlot>) {
+        let rows = history(3, 0, 71);
+        let kb = Arc::new(build(&rows, &OfflineConfig::default(), &mut NativeAssign).unwrap());
+        let slot = Arc::new(SnapshotSlot::new(kb));
+        let store = Arc::new(LogStore::open(dir).unwrap());
+        store.append(&rows).unwrap();
+        let stats = Arc::new(FeedbackStats::default());
+        let eng = Arc::new(
+            RefreshEngine::new(slot.clone(), store.clone(), stats.clone(), policy).unwrap(),
+        );
+        (eng, store, stats, slot)
+    }
+
+    #[test]
+    fn existing_partitions_are_not_reconsumed() {
+        let dir = tmpdir("baseline");
+        let (eng, _store, _stats, slot) = engine(&dir, RefreshPolicy::default());
+        // Nothing new: a manual refresh is a no-op and publishes nothing.
+        assert_eq!(eng.refresh_now().unwrap(), None);
+        assert_eq!(slot.generation(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn new_partition_rows_are_folded_in_additively() {
+        let dir = tmpdir("fold");
+        let (eng, store, stats, slot) = engine(&dir, RefreshPolicy::default());
+        let before: u64 = slot.resolve().kb.clusters.iter().map(|c| c.n_rows).sum();
+        let fresh = history(1, 3, 72);
+        let n_fresh = fresh.len() as u64;
+        store.append(&fresh).unwrap();
+        assert_eq!(eng.refresh_now().unwrap(), Some(1));
+        let snap = slot.resolve();
+        assert_eq!(snap.generation, 1);
+        let after: u64 = snap.kb.clusters.iter().map(|c| c.n_rows).sum();
+        assert_eq!(after, before + n_fresh, "exactly the new rows are folded in");
+        assert_eq!(snap.kb.built_through_day, 3);
+        assert_eq!(stats.rows_consumed.load(Ordering::Relaxed), n_fresh);
+        assert_eq!(stats.refreshes.load(Ordering::Relaxed), 1);
+        assert!(stats.last_refresh_ns.load(Ordering::Relaxed) > 0);
+        // A second refresh with nothing new is again a no-op.
+        assert_eq!(eng.refresh_now().unwrap(), None);
+        assert_eq!(slot.generation(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tick_respects_policy_signals() {
+        let dir = tmpdir("tick");
+        let policy = RefreshPolicy {
+            min_new_rows: 10,
+            max_interval: Duration::from_secs(3600),
+            drift_threshold: 0,
+            min_interval: Duration::ZERO,
+        };
+        let (eng, store, stats, slot) = engine(&dir, policy);
+        // Below the row threshold: no fire (flushed counter drives it).
+        stats.rows_flushed.store(5, Ordering::Release);
+        assert_eq!(eng.tick().unwrap(), None);
+        // Threshold reached → refresh consumes the new partition.
+        let fresh = history(1, 3, 73);
+        store.append(&fresh).unwrap();
+        stats.rows_flushed.store(fresh.len() as u64, Ordering::Release);
+        let fired = eng.tick().unwrap();
+        assert_eq!(fired, Some((1, RefreshReason::RowThreshold)));
+        assert_eq!(slot.generation(), 1);
+        assert_eq!(stats.kb_generation.load(Ordering::Relaxed), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -6,7 +6,8 @@
 //!
 //! * **L3 (this crate)** — the coordinator: transfer service, the online
 //!   Adaptive Sampling Module, six baseline optimizers, the offline
-//!   knowledge-discovery pipeline, and the simulated network/testbed
+//!   knowledge-discovery pipeline, the knowledge lifecycle service that
+//!   closes the loop between them, and the simulated network/testbed
 //!   substrate that stands in for the paper's XSEDE/DIDCLAB testbeds.
 //! * **L2 (python/compile/model.py, build-time)** — JAX compute graphs
 //!   for the offline-analysis hot spots (k-means Lloyd steps, batched
@@ -16,11 +17,31 @@
 //!   evaluation), lowered inside the L2 graphs.
 //!
 //! `crate::runtime` loads the artifacts through the PJRT C API (`xla`
-//! crate) so the rust binary is self-contained at run time — python
-//! never executes on the request path.
+//! crate, behind the `pjrt` feature) so the rust binary is
+//! self-contained at run time — python never executes on the request
+//! path.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! ## The feedback loop (`crate::feedback`)
+//!
+//! The paper's design is circular: offline analysis mines logs into a
+//! knowledge base, the online ASM serves from it, and completed
+//! transfers become new logs that are folded back in *additively*. The
+//! [`feedback`] subsystem runs that loop live, split four ways:
+//!
+//! * [`feedback::snapshot`] — versioned, atomically hot-swappable KB
+//!   snapshots; each transfer pins one consistent generation while the
+//!   next publishes concurrently.
+//! * [`feedback::ingest`] — a bounded, never-blocking ingestion queue
+//!   with batched flush into `LogStore` day partitions (drops counted).
+//! * [`feedback::refresher`] — a background thread running the offline
+//!   pipeline's additive `update` over only the new partitions, then
+//!   publishing the next snapshot generation.
+//! * [`feedback::policy`] — refresh triggers: new-row volume,
+//!   wall-clock period, and the drift-rate signal from the online
+//!   monitor's mid-transfer re-tunes.
+//!
+//! See `DESIGN.md` (repo root) for the layering diagram, the feedback
+//! dataflow, and the experiment index.
 
 pub mod logs;
 pub mod math;
@@ -30,5 +51,6 @@ pub mod runtime;
 pub mod baselines;
 pub mod coordinator;
 pub mod experiments;
+pub mod feedback;
 pub mod sim;
 pub mod util;

@@ -70,6 +70,21 @@ impl LogStore {
         Ok(days)
     }
 
+    /// Number of rows in one partition, without parsing them (one
+    /// non-empty JSONL line per row). Cursor bookkeeping uses this so
+    /// it never pays the deserialization cost of `read_day`.
+    pub fn row_count(&self, day: u64) -> Result<usize> {
+        let path = self.partition_path(day);
+        let file = fs::File::open(&path).with_context(|| format!("opening {path:?}"))?;
+        let mut count = 0usize;
+        for line in BufReader::new(file).lines() {
+            if !line?.trim().is_empty() {
+                count += 1;
+            }
+        }
+        Ok(count)
+    }
+
     /// Read one partition.
     pub fn read_day(&self, day: u64) -> Result<Vec<TransferLog>> {
         let path = self.partition_path(day);
@@ -130,6 +145,8 @@ mod tests {
         b.t_start = DAY_S * 3.5; // day 3
         store.append(&[a.clone(), b.clone()]).unwrap();
         assert_eq!(store.days().unwrap(), vec![0, 3]);
+        assert_eq!(store.row_count(0).unwrap(), 1);
+        assert_eq!(store.row_count(3).unwrap(), 1);
         assert_eq!(store.read_day(0).unwrap(), vec![a.clone()]);
         assert_eq!(store.read_day(3).unwrap(), vec![b.clone()]);
         assert_eq!(store.read_all().unwrap().len(), 2);

@@ -7,13 +7,13 @@
 //!   transfer   --testbed T --files N --avg-mb M [--optimizer O]
 //!              [--kb KB.json] [--load L] [--seed S]
 //!   serve      [--requests N] [--workers W] [--optimizer O]
-//!   experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|all [--quick|--full]
+//!   experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|all [--quick|--full]
 //!   selftest                     quick end-to-end sanity run
 
 use anyhow::{bail, Context, Result};
 use dtopt::coordinator::{Coordinator, CoordinatorConfig, OptimizerKind, TransferRequest};
 use dtopt::experiments::common::{default_backend, ExpConfig, World};
-use dtopt::experiments::{fig12, fig3, fig5, fig6, fig7};
+use dtopt::experiments::{fig12, fig3, fig5, fig6, fig7, live};
 use dtopt::logs::generate::{generate, GenConfig};
 use dtopt::logs::store::LogStore;
 use dtopt::offline::pipeline::{build, OfflineConfig};
@@ -122,7 +122,7 @@ fn print_help() {
          offline --logs DIR --out KB.json [--backend native|pjrt|auto]\n  \
          transfer --testbed T --files N --avg-mb M [--optimizer O] [--kb F] [--load L]\n  \
          serve [--requests N] [--workers W] [--optimizer O]\n  \
-         experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|all [--quick|--full]\n  \
+         experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|all [--quick|--full]\n  \
          selftest"
     );
 }
@@ -293,10 +293,10 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
         .positional
         .first()
         .map(|s| s.as_str())
-        .context("experiment name required: fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|all")?;
+        .context("experiment name required: fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|all")?;
     let config = if opts.has("full") { ExpConfig::full() } else { ExpConfig::quick() };
     let reps = if opts.has("full") { 4 } else { 2 };
-    let needs_world = matches!(which, "fig5" | "fig6" | "fig7" | "all");
+    let needs_world = matches!(which, "fig5" | "fig6" | "fig7" | "live" | "all");
     let world = if needs_world {
         let mut backend = default_backend();
         eprintln!("preparing world ({} backend)...", backend.name());
@@ -339,12 +339,24 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
                     println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
                 }
             }
+            "live" => {
+                let eval_days = if opts.has("full") { 12 } else { 4 };
+                let dir = std::env::temp_dir()
+                    .join(format!("dtopt_live_exp_{}", std::process::id()));
+                let _ = std::fs::remove_dir_all(&dir);
+                let r = live::run(world.unwrap(), eval_days, &dir)?;
+                let _ = std::fs::remove_dir_all(&dir);
+                print!("{}", live::render(&r));
+                for (desc, ok) in live::headline_checks(&r) {
+                    println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
+                }
+            }
             other => bail!("unknown experiment '{other}'"),
         }
         Ok(())
     };
     if which == "all" {
-        for name in ["fig1", "fig2", "fig3a", "fig3b", "fig5", "fig6", "fig7"] {
+        for name in ["fig1", "fig2", "fig3a", "fig3b", "fig5", "fig6", "fig7", "live"] {
             println!("==================== {name} ====================");
             run_one(name, world.as_ref())?;
         }

@@ -1,7 +1,8 @@
 //! Backend selection: the offline pipeline runs its hot loops either
 //! natively (always available, the differential-test reference) or on
-//! the PJRT artifacts (the L1/L2 accelerated path).
+//! the PJRT artifacts (the L1/L2 accelerated path, `pjrt` feature).
 
+#[cfg(feature = "pjrt")]
 use super::artifacts::{ArtifactRegistry, PjrtAssign};
 use crate::offline::kmeans::{AssignBackend, NativeAssign};
 use anyhow::Result;
@@ -9,13 +10,16 @@ use std::path::Path;
 
 pub enum Backend {
     Native,
+    #[cfg(feature = "pjrt")]
     Pjrt(Box<ArtifactRegistry>),
 }
 
 impl Backend {
-    /// Load the PJRT artifacts when present, otherwise fall back to the
-    /// native implementation (and say so once).
+    /// Load the PJRT artifacts when present (and compiled in),
+    /// otherwise fall back to the native implementation (and say so
+    /// once).
     pub fn auto(artifacts_dir: &Path) -> Backend {
+        #[cfg(feature = "pjrt")]
         if artifacts_dir.join("manifest.json").exists() {
             match ArtifactRegistry::load(artifacts_dir) {
                 Ok(reg) => {
@@ -26,16 +30,27 @@ impl Backend {
                 }
             }
         }
+        #[cfg(not(feature = "pjrt"))]
+        if artifacts_dir.join("manifest.json").exists() {
+            eprintln!("note: PJRT artifacts found but dtopt was built without the `pjrt` feature; using native backend");
+        }
         Backend::Native
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn pjrt(artifacts_dir: &Path) -> Result<Backend> {
         Ok(Backend::Pjrt(Box::new(ArtifactRegistry::load(artifacts_dir)?)))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn pjrt(_artifacts_dir: &Path) -> Result<Backend> {
+        anyhow::bail!("dtopt was built without the `pjrt` feature; rebuild with --features pjrt")
     }
 
     pub fn name(&self) -> &'static str {
         match self {
             Backend::Native => "native",
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(_) => "pjrt",
         }
     }
@@ -44,10 +59,12 @@ impl Backend {
     pub fn with_assign<T>(&mut self, f: impl FnOnce(&mut dyn AssignBackend) -> T) -> T {
         match self {
             Backend::Native => f(&mut NativeAssign),
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(reg) => f(&mut PjrtAssign { registry: reg }),
         }
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn registry(&self) -> Option<&ArtifactRegistry> {
         match self {
             Backend::Native => None,

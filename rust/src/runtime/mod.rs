@@ -2,11 +2,20 @@
 //! (python/compile → `artifacts/`) and exposes them to the offline
 //! pipeline behind the `Backend` switch. The rust binary is fully
 //! self-contained at run time — python is build-time only.
+//!
+//! The PJRT path needs the `xla` crate and is gated behind the `pjrt`
+//! cargo feature so default builds have no registry dependency; with
+//! the feature off, [`Backend::auto`] always selects the native
+//! reference implementations.
 
+#[cfg(feature = "pjrt")]
 pub mod artifacts;
 pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+#[cfg(feature = "pjrt")]
 pub use artifacts::{ArtifactRegistry, PjrtAssign};
 pub use backend::Backend;
+#[cfg(feature = "pjrt")]
 pub use pjrt::{InputF32, LoadedArtifact, Output, PjrtRuntime};

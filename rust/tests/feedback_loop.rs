@@ -1,0 +1,251 @@
+//! Integration tests for the knowledge lifecycle service: snapshot
+//! consistency under concurrent publish, ingest backpressure at the
+//! service level, the background refresher, and the full closed loop
+//! through the coordinator.
+
+use dtopt::coordinator::{Coordinator, CoordinatorConfig, OptimizerKind, TransferRequest};
+use dtopt::feedback::{
+    FeedbackConfig, FeedbackService, IngestConfig, RefreshPolicy, SnapshotSlot,
+};
+use dtopt::logs::generate::{generate, GenConfig};
+use dtopt::logs::store::LogStore;
+use dtopt::offline::kmeans::NativeAssign;
+use dtopt::offline::knowledge::KnowledgeBase;
+use dtopt::offline::pipeline::{build, OfflineConfig};
+use dtopt::sim::dataset::Dataset;
+use dtopt::sim::testbed::{Testbed, TestbedId};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dtopt_fbloop_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn history(days: u64, seed: u64) -> Vec<dtopt::logs::record::TransferLog> {
+    generate(
+        &Testbed::xsede(),
+        &GenConfig { days, arrivals_per_hour: 20.0, start_day: 0, seed },
+    )
+}
+
+fn small_kb(seed: u64) -> (Arc<KnowledgeBase>, Vec<dtopt::logs::record::TransferLog>) {
+    let rows = history(4, seed);
+    let kb = Arc::new(build(&rows, &OfflineConfig::default(), &mut NativeAssign).unwrap());
+    (kb, rows)
+}
+
+/// N worker threads continuously resolve snapshots while a publisher
+/// pushes M generations: every reader must observe a fully formed KB
+/// and a monotone generation sequence (no torn reads).
+#[test]
+fn concurrent_resolvers_observe_monotone_generations() {
+    const GENERATIONS: u64 = 60;
+    let (kb, _) = small_kb(501);
+    let expected_clusters = kb.clusters.len();
+    let slot = Arc::new(SnapshotSlot::new(kb.clone()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let readers: Vec<_> = (0..6)
+        .map(|_| {
+            let slot = slot.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut last_generation = 0u64;
+                let mut resolves = 0u64;
+                while !stop.load(Ordering::Acquire) {
+                    let snap = slot.resolve();
+                    assert!(
+                        snap.generation >= last_generation,
+                        "generation went backwards: {} after {}",
+                        snap.generation,
+                        last_generation
+                    );
+                    // A torn read would surface as a half-built KB.
+                    assert_eq!(snap.kb.clusters.len(), expected_clusters);
+                    assert!(snap.kb.clusters.iter().map(|c| c.n_rows).sum::<u64>() > 0);
+                    last_generation = snap.generation;
+                    resolves += 1;
+                }
+                (last_generation, resolves)
+            })
+        })
+        .collect();
+    for _ in 0..GENERATIONS {
+        slot.publish(kb.clone());
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    stop.store(true, Ordering::Release);
+    for reader in readers {
+        let (last, resolves) = reader.join().unwrap();
+        assert!(resolves > 0, "reader never resolved");
+        assert!(last <= GENERATIONS);
+    }
+    assert_eq!(slot.generation(), GENERATIONS);
+    assert_eq!(slot.resolve().generation, GENERATIONS);
+}
+
+/// Service-level backpressure: a burst far beyond queue capacity never
+/// blocks the offering threads, and every offered row is accounted for
+/// as either flushed or dropped.
+#[test]
+fn ingest_burst_never_blocks_and_accounts_for_every_row() {
+    let dir = tmpdir("burst");
+    let (kb, rows) = small_kb(502);
+    let service = FeedbackService::start(
+        kb,
+        LogStore::open(&dir).unwrap(),
+        FeedbackConfig {
+            ingest: IngestConfig {
+                capacity: 8,
+                flush_batch: 4,
+                flush_interval: Duration::from_millis(5),
+            },
+            background: false,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let per_thread = 2_000u64;
+    let offerers: Vec<_> = (0..4)
+        .map(|t| {
+            let queue = service.queue();
+            let row = rows[t as usize].clone();
+            std::thread::spawn(move || {
+                let started = Instant::now();
+                for i in 0..per_thread {
+                    let mut r = row.clone();
+                    r.id = t * per_thread + i;
+                    queue.offer(r);
+                }
+                started.elapsed()
+            })
+        })
+        .collect();
+    for offerer in offerers {
+        let elapsed = offerer.join().unwrap();
+        // 2k non-blocking try_sends must complete almost instantly; a
+        // generous bound still catches any accidental blocking path.
+        assert!(elapsed < Duration::from_secs(5), "offer path blocked: {elapsed:?}");
+    }
+    assert!(service.flush_barrier(Duration::from_secs(30)));
+    let enqueued = service.stats.rows_enqueued.load(Ordering::Relaxed);
+    let dropped = service.stats.rows_dropped.load(Ordering::Relaxed);
+    let flushed = service.stats.rows_flushed.load(Ordering::Relaxed);
+    assert_eq!(enqueued + dropped, 4 * per_thread, "every offer is accounted for");
+    assert_eq!(flushed, enqueued, "every accepted row reaches the store");
+    let on_disk: usize = {
+        let store = LogStore::open(&dir).unwrap();
+        store.read_all().unwrap().len()
+    };
+    assert_eq!(on_disk as u64, flushed);
+    service.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The background refresher turns the loop on its own: rows offered to
+/// the queue eventually produce a new published generation.
+#[test]
+fn background_refresher_publishes_without_manual_ticks() {
+    let dir = tmpdir("background");
+    let (kb, _) = small_kb(503);
+    let service = FeedbackService::start(
+        kb,
+        LogStore::open(&dir).unwrap(),
+        FeedbackConfig {
+            ingest: IngestConfig {
+                capacity: 1024,
+                flush_batch: 16,
+                flush_interval: Duration::from_millis(2),
+            },
+            policy: RefreshPolicy {
+                min_new_rows: 50,
+                min_interval: Duration::ZERO,
+                ..Default::default()
+            },
+            poll_interval: Duration::from_millis(5),
+            background: true,
+        },
+    )
+    .unwrap();
+    let queue = service.queue();
+    for row in history(1, 504).into_iter().take(200) {
+        queue.offer(row);
+    }
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while service.generation() == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(service.generation() >= 1, "background refresher never published");
+    assert!(service.stats.refreshes.load(Ordering::Relaxed) >= 1);
+    service.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Full closed loop through the coordinator: serve → ingest → refresh →
+/// generation increments and later transfers observe the new snapshot,
+/// while earlier responses stay attributed to the old one.
+#[test]
+fn coordinator_closed_loop_advances_generations() {
+    let dir = tmpdir("closed");
+    let (kb, rows) = small_kb(505);
+    let service = FeedbackService::start(
+        kb,
+        LogStore::open(&dir).unwrap(),
+        FeedbackConfig {
+            ingest: IngestConfig {
+                capacity: 256,
+                flush_batch: 2,
+                flush_interval: Duration::from_millis(2),
+            },
+            policy: RefreshPolicy {
+                min_new_rows: 1,
+                min_interval: Duration::ZERO,
+                ..Default::default()
+            },
+            background: false,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let coord = Coordinator::with_feedback(
+        &service,
+        Arc::new(rows),
+        CoordinatorConfig { workers: 2, ..Default::default() },
+    );
+    let request = |id: u64| TransferRequest {
+        id,
+        testbed: TestbedId::Xsede,
+        dataset: Dataset::new(80, 64.0),
+        t_submit: 4.5 * 86_400.0,
+        state_override: None,
+        optimizer: Some(OptimizerKind::Asm),
+        seed: 4_000 + id,
+    };
+    for round in 0u64..3 {
+        let responses = coord.run_batch((0..3).map(|i| request(round * 10 + i)).collect());
+        for r in &responses {
+            assert_eq!(
+                r.kb_generation, round,
+                "round {round} must be served from generation {round}"
+            );
+        }
+        assert!(service.flush_barrier(Duration::from_secs(30)));
+        let fired = service.tick().unwrap();
+        assert_eq!(
+            fired.map(|(generation, _)| generation),
+            Some(round + 1),
+            "each round's ingested rows trigger the next generation"
+        );
+    }
+    assert_eq!(service.generation(), 3);
+    let stats = &service.stats;
+    assert_eq!(stats.rows_flushed.load(Ordering::Relaxed), 9);
+    assert_eq!(stats.rows_consumed.load(Ordering::Relaxed), 9);
+    assert_eq!(stats.rows_dropped.load(Ordering::Relaxed), 0);
+    coord.shutdown();
+    service.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

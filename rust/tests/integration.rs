@@ -6,14 +6,22 @@
 //! (`make artifacts`); the Makefile test target always builds it first.
 
 use dtopt::logs::generate::{generate, GenConfig};
+#[cfg(feature = "pjrt")]
 use dtopt::math::bicubic::BicubicSurface;
-use dtopt::offline::kmeans::{kmeans_pp, AssignBackend, NativeAssign};
+#[cfg(feature = "pjrt")]
+use dtopt::offline::kmeans::{kmeans_pp, AssignBackend};
+use dtopt::offline::kmeans::NativeAssign;
 use dtopt::offline::pipeline::{build, OfflineConfig};
-use dtopt::runtime::{ArtifactRegistry, Backend, PjrtAssign};
+use dtopt::runtime::Backend;
+#[cfg(feature = "pjrt")]
+use dtopt::runtime::{ArtifactRegistry, PjrtAssign};
 use dtopt::sim::testbed::Testbed;
+#[cfg(feature = "pjrt")]
 use dtopt::util::rng::Rng;
+#[cfg(feature = "pjrt")]
 use std::path::PathBuf;
 
+#[cfg(feature = "pjrt")]
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
@@ -24,6 +32,7 @@ fn artifacts_dir() -> Option<PathBuf> {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_pairwise_matches_native_assign() {
     let Some(dir) = artifacts_dir() else { return };
@@ -46,6 +55,7 @@ fn pjrt_pairwise_matches_native_assign() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_kmeans_run_matches_native_clusters() {
     let Some(dir) = artifacts_dir() else { return };
@@ -79,6 +89,7 @@ fn pjrt_kmeans_run_matches_native_clusters() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_surface_eval_matches_native_bicubic() {
     let Some(dir) = artifacts_dir() else { return };
@@ -111,6 +122,7 @@ fn pjrt_surface_eval_matches_native_bicubic() {
     assert!(max_rel < 1e-4, "surface eval diverges: max rel {max_rel:.2e}");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn offline_pipeline_identical_on_both_backends() {
     let Some(dir) = artifacts_dir() else { return };
@@ -136,6 +148,7 @@ fn offline_pipeline_identical_on_both_backends() {
 fn backend_auto_detects() {
     let missing = Backend::auto(std::path::Path::new("/nonexistent"));
     assert_eq!(missing.name(), "native");
+    #[cfg(feature = "pjrt")]
     if let Some(dir) = artifacts_dir() {
         let found = Backend::auto(&dir);
         assert_eq!(found.name(), "pjrt");
