@@ -1,0 +1,30 @@
+//! Bench/regenerator for the fleet bake-off: the sharded knowledge
+//! fabric (per-network shards, cold-start borrowing, per-shard refresh)
+//! versus a single global knowledge base under interleaved traffic from
+//! all three networks. Companion to `live_refresh.rs`, which runs the
+//! same closed loop through one global snapshot slot.
+
+use dtopt::experiments::common::{config_from_args, default_backend, World};
+use dtopt::experiments::fleet;
+
+fn main() {
+    let config = config_from_args();
+    let full = std::env::var("DTOPT_FULL").is_ok();
+    let mut backend = default_backend();
+    eprintln!("fleet_bakeoff: preparing world ({} backend)...", backend.name());
+    let world = World::prepare(config, &mut backend);
+    let eval_days = if full { 8 } else { 3 };
+    let dir = std::env::temp_dir()
+        .join(format!("dtopt_fleet_bakeoff_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let start = std::time::Instant::now();
+    let result = fleet::run(&world, eval_days, &dir).expect("fleet bake-off sweep");
+    let elapsed = start.elapsed();
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("== Fleet bake-off: sharded fabric vs single global KB ==");
+    print!("{}", fleet::render(&result));
+    for (desc, ok) in fleet::headline_checks(&result) {
+        println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
+    }
+    println!("\ntiming: sweep {elapsed:.2?}");
+}

@@ -1,6 +1,7 @@
 //! Request/response types of the transfer coordinator.
 
 use crate::baselines::RunReport;
+use crate::fabric::ShardKey;
 use crate::sim::dataset::Dataset;
 use crate::sim::testbed::TestbedId;
 use crate::sim::transfer::NetState;
@@ -85,8 +86,16 @@ pub struct TransferResponse {
     pub optimal_mbps: f64,
     /// Generation of the knowledge-base snapshot this request was
     /// served from (0 = the KB frozen at startup; increments on every
-    /// hot-swapped refresh published by the feedback service).
+    /// hot-swapped refresh published by the feedback service — or, on a
+    /// fabric-backed coordinator, by the serving shard).
     pub kb_generation: u64,
+    /// Knowledge shard that served the request (`None` on coordinators
+    /// serving from a single global KB).
+    pub shard_key: Option<ShardKey>,
+    /// The serving KB was borrowed — a cold-started shard serving a
+    /// donor's (or the fallback) knowledge base until enough native
+    /// rows accrue for its own fit. Always `false` without a fabric.
+    pub borrowed: bool,
 }
 
 #[cfg(test)]

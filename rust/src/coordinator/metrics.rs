@@ -1,8 +1,9 @@
-//! Coordinator metrics: per-optimizer aggregates over served requests,
-//! plus (when the knowledge lifecycle service is attached) the service
-//! block: snapshot generation, refresh latency, ingest queue depth, and
-//! dropped-row counters.
+//! Coordinator metrics: per-optimizer aggregates over served requests
+//! with request-latency percentiles, plus the knowledge-service block
+//! (snapshot generation, refresh latency, ingest queue depth, dropped
+//! rows) or — on a fabric-backed coordinator — the per-shard table.
 
+use crate::fabric::ShardRouter;
 use crate::feedback::FeedbackStats;
 use crate::util::stats::{mean, quantile};
 use std::collections::BTreeMap;
@@ -23,8 +24,16 @@ impl OptimizerStats {
         mean(&self.achieved_mbps)
     }
 
+    pub fn p50_decision_ns(&self) -> f64 {
+        quantile(&self.decision_wall_ns, 0.50)
+    }
+
     pub fn p95_decision_ns(&self) -> f64 {
         quantile(&self.decision_wall_ns, 0.95)
+    }
+
+    pub fn p99_decision_ns(&self) -> f64 {
+        quantile(&self.decision_wall_ns, 0.99)
     }
 }
 
@@ -33,6 +42,7 @@ impl OptimizerStats {
 pub struct Metrics {
     inner: Mutex<BTreeMap<&'static str, OptimizerStats>>,
     feedback: Mutex<Option<Arc<FeedbackStats>>>,
+    fabric: Mutex<Option<Arc<ShardRouter>>>,
 }
 
 impl Metrics {
@@ -48,6 +58,17 @@ impl Metrics {
     /// The attached knowledge-service counters, if any.
     pub fn feedback(&self) -> Option<Arc<FeedbackStats>> {
         self.feedback.lock().unwrap().clone()
+    }
+
+    /// Attach the knowledge fabric so `render` includes its per-shard
+    /// table (generation, rows, queue depth, borrow status).
+    pub fn attach_fabric(&self, fabric: Arc<ShardRouter>) {
+        *self.fabric.lock().unwrap() = Some(fabric);
+    }
+
+    /// The attached fabric, if any.
+    pub fn fabric(&self) -> Option<Arc<ShardRouter>> {
+        self.fabric.lock().unwrap().clone()
     }
 
     pub fn record(
@@ -77,22 +98,42 @@ impl Metrics {
     pub fn render(&self) -> String {
         let snap = self.snapshot();
         let mut out = String::from(
-            "optimizer   reqs  mean_mbps  p50_mbps  mean_samples  p95_decision\n",
+            "optimizer   reqs  mean_mbps  p50_mbps  mean_samples  p50_decision  p95_decision  p99_decision\n",
         );
         for (name, s) in &snap {
             out.push_str(&format!(
-                "{:<11} {:>4} {:>10.0} {:>9.0} {:>13.2} {:>13}\n",
+                "{:<11} {:>4} {:>10.0} {:>9.0} {:>13.2} {:>13} {:>13} {:>13}\n",
                 name,
                 s.requests,
                 s.mean_achieved_mbps(),
                 quantile(&s.achieved_mbps, 0.5),
                 mean(&s.samples_used),
+                crate::util::timer::fmt_ns(s.p50_decision_ns()),
                 crate::util::timer::fmt_ns(s.p95_decision_ns()),
+                crate::util::timer::fmt_ns(s.p99_decision_ns()),
+            ));
+        }
+        // Request-latency percentiles pooled over every optimizer — the
+        // service-level numbers an operator alerts on.
+        let all_ns: Vec<f64> = snap
+            .values()
+            .flat_map(|s| s.decision_wall_ns.iter().copied())
+            .collect();
+        if !all_ns.is_empty() {
+            out.push_str(&format!(
+                "request latency: p50 {}, p99 {} over {} requests\n",
+                crate::util::timer::fmt_ns(quantile(&all_ns, 0.50)),
+                crate::util::timer::fmt_ns(quantile(&all_ns, 0.99)),
+                all_ns.len(),
             ));
         }
         if let Some(fb) = self.feedback() {
             out.push('\n');
             out.push_str(&fb.render());
+        }
+        if let Some(fabric) = self.fabric() {
+            out.push('\n');
+            out.push_str(&fabric.render());
         }
         out
     }
@@ -115,6 +156,25 @@ mod tests {
         let table = m.render();
         assert!(table.contains("ASM"));
         assert!(table.contains("GO"));
+    }
+
+    #[test]
+    fn render_includes_latency_percentiles() {
+        let m = Metrics::new();
+        assert!(!m.render().contains("request latency"), "no requests, no latency line");
+        for ns in [10_000u64, 20_000, 30_000, 40_000] {
+            m.record("ASM", 1000.0, 500.0, 4.0, 2, ns);
+        }
+        m.record("GO", 800.0, 500.0, 5.0, 0, 1_000_000);
+        let snap = m.snapshot();
+        assert_eq!(snap["ASM"].p50_decision_ns(), 25_000.0);
+        assert!(snap["ASM"].p99_decision_ns() > snap["ASM"].p50_decision_ns());
+        let table = m.render();
+        assert!(table.contains("p50_decision"), "{table}");
+        assert!(table.contains("p99_decision"), "{table}");
+        // Pooled across optimizers: the p99 catches GO's 1 ms outlier.
+        assert!(table.contains("request latency: p50"), "{table}");
+        assert!(table.contains("over 5 requests"), "{table}");
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::baselines::nmt::NelderMeadTuner;
 use crate::baselines::sc::SingleChunk;
 use crate::baselines::sp::StaticParams;
 use crate::baselines::{Optimizer, RunReport, TransferEnv};
+use crate::fabric::{Shard, ShardKey, ShardRouter};
 use crate::feedback::{FeedbackService, FeedbackStats, IngestQueue, SnapshotSlot};
 use crate::logs::record::TransferLog;
 use crate::offline::knowledge::KnowledgeBase;
@@ -56,18 +57,29 @@ struct FeedbackHandles {
     stats: Arc<FeedbackStats>,
 }
 
+/// Where a worker's knowledge comes from.
+enum Knowledge {
+    /// One global hot-swappable knowledge base (generation 0 forever
+    /// when no feedback service is attached).
+    Global {
+        slot: Arc<SnapshotSlot>,
+        feedback: Option<FeedbackHandles>,
+    },
+    /// The sharded fabric: every request routes to its own shard's
+    /// snapshot slot and feeds its completed transfer back to that
+    /// shard's ingest queue.
+    Fabric(Arc<ShardRouter>),
+}
+
 /// Shared read-only context every worker uses.
 struct Shared {
-    /// The hot-swappable knowledge base (generation 0 forever when no
-    /// feedback service is attached).
-    slot: Arc<SnapshotSlot>,
+    knowledge: Knowledge,
     annot: Arc<AnnOt>,
     sp: Arc<StaticParams>,
     /// Fitted once over the shared history; each HARP request clones
     /// the thin handle instead of re-running Normalizer::fit.
     harp: Arc<Harp>,
     metrics: Arc<Metrics>,
-    feedback: Option<FeedbackHandles>,
 }
 
 enum Job {
@@ -92,7 +104,9 @@ impl Coordinator {
         history: Arc<Vec<TransferLog>>,
         config: CoordinatorConfig,
     ) -> Coordinator {
-        Coordinator::build(Arc::new(SnapshotSlot::new(kb)), history, config, None)
+        let knowledge =
+            Knowledge::Global { slot: Arc::new(SnapshotSlot::new(kb)), feedback: None };
+        Coordinator::build(knowledge, history, config)
     }
 
     /// A coordinator wired into the knowledge lifecycle service: it
@@ -106,30 +120,50 @@ impl Coordinator {
         config: CoordinatorConfig,
     ) -> Coordinator {
         let handles = FeedbackHandles { queue: service.queue(), stats: service.stats.clone() };
-        Coordinator::build(service.slot.clone(), history, config, Some(handles))
+        let knowledge =
+            Knowledge::Global { slot: service.slot.clone(), feedback: Some(handles) };
+        Coordinator::build(knowledge, history, config)
+    }
+
+    /// A coordinator serving from the sharded knowledge fabric: each
+    /// request pins its own shard's snapshot, is tagged with the shard
+    /// key and borrow status, and feeds its completed transfer back to
+    /// that shard's ingest queue. The fabric's refresh lifecycle is
+    /// driven separately — run a `fabric::FabricPollster` (or call
+    /// `ShardRouter::tick_all`) alongside a long-lived coordinator, or
+    /// borrowed shards never fit natively. The fabric outlives the
+    /// coordinator — shut the coordinator down first.
+    pub fn with_fabric(
+        fabric: Arc<ShardRouter>,
+        history: Arc<Vec<TransferLog>>,
+        config: CoordinatorConfig,
+    ) -> Coordinator {
+        Coordinator::build(Knowledge::Fabric(fabric), history, config)
     }
 
     fn build(
-        slot: Arc<SnapshotSlot>,
+        knowledge: Knowledge,
         history: Arc<Vec<TransferLog>>,
         config: CoordinatorConfig,
-        feedback: Option<FeedbackHandles>,
     ) -> Coordinator {
         let metrics = Arc::new(Metrics::new());
-        if let Some(fb) = &feedback {
-            metrics.attach_feedback(fb.stats.clone());
+        match &knowledge {
+            Knowledge::Global { feedback: Some(fb), .. } => {
+                metrics.attach_feedback(fb.stats.clone());
+            }
+            Knowledge::Global { .. } => {}
+            Knowledge::Fabric(router) => metrics.attach_fabric(router.clone()),
         }
         // Train the ANN (and fit HARP/SP) once, shared by every worker.
         let annot = Arc::new(AnnOt::train(&history, config.seed ^ 0xA22));
         let sp = Arc::new(StaticParams::mine(&history));
         let harp = Arc::new(Harp::new(history));
         let shared = Arc::new(Shared {
-            slot,
+            knowledge,
             annot,
             sp,
             harp,
             metrics: metrics.clone(),
-            feedback,
         });
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -202,9 +236,10 @@ fn worker_loop(
     }
 }
 
-/// Serve a single request: pin the current KB snapshot, build the
-/// hidden environment, dispatch to the optimizer, record metrics, and
-/// feed the completed transfer back to the knowledge loop.
+/// Serve a single request: pin the current KB snapshot (routing to its
+/// shard when the fabric is attached), build the hidden environment,
+/// dispatch to the optimizer, record metrics, and feed the completed
+/// transfer back to the knowledge loop it came from.
 fn serve_one(
     shared: &Shared,
     request: &TransferRequest,
@@ -212,8 +247,17 @@ fn serve_one(
     widx: u64,
 ) -> TransferResponse {
     // Pin one KB generation for the whole transfer: a refresh published
-    // mid-request never mixes versions inside one decision.
-    let snapshot = shared.slot.resolve();
+    // mid-request never mixes versions inside one decision. On the
+    // fabric path the pin is per-shard, and routing never blocks on a
+    // refresh or fails the request (fabric trouble serves the fallback).
+    let (snapshot, shard, shard_key, borrowed): (_, Option<Arc<Shard>>, _, _) =
+        match &shared.knowledge {
+            Knowledge::Global { slot, .. } => (slot.resolve(), None, None, false),
+            Knowledge::Fabric(router) => {
+                let routed = router.route(ShardKey::of_request(request.testbed, &request.dataset));
+                (routed.snapshot, routed.shard, Some(routed.key), routed.borrowed)
+            }
+        };
     let testbed = Testbed::by_id(request.testbed);
     // Hidden network state: diurnal profile at submission time (plus
     // contending transfers), unless the request pins a state.
@@ -257,13 +301,25 @@ fn serve_one(
         report.sample_transfers(),
         decision_wall_ns,
     );
-    if let Some(fb) = &shared.feedback {
-        // Drift-rate signal: bulk-phase re-tunes mean the surfaces no
-        // longer describe current traffic (one of the refresh triggers).
-        fb.stats.note_drift(report.bulk_retunes() as u64);
-        // The completed transfer becomes tomorrow's knowledge. Offer is
-        // non-blocking; a full queue drops the row and counts it.
-        fb.queue.offer(completed_log(request, &testbed, &state, &report));
+    match &shared.knowledge {
+        Knowledge::Global { feedback: Some(fb), .. } => {
+            // Drift-rate signal: bulk-phase re-tunes mean the surfaces no
+            // longer describe current traffic (one of the refresh triggers).
+            fb.stats.note_drift(report.bulk_retunes() as u64);
+            // The completed transfer becomes tomorrow's knowledge. Offer is
+            // non-blocking; a full queue drops the row and counts it.
+            fb.queue.offer(completed_log(request, &testbed, &state, &report));
+        }
+        Knowledge::Global { .. } => {}
+        Knowledge::Fabric(_) => {
+            // Same loop, scoped to the serving shard: its drift signal,
+            // its queue, its partitions. `shard` is None only on the
+            // degraded fallback path, which has nothing to ingest into.
+            if let Some(shard) = &shard {
+                shard.stats.note_drift(report.bulk_retunes() as u64);
+                shard.offer(completed_log(request, &testbed, &state, &report));
+            }
+        }
     }
     TransferResponse {
         id: request.id,
@@ -272,6 +328,8 @@ fn serve_one(
         decision_wall_ns,
         optimal_mbps,
         kb_generation: snapshot.generation,
+        shard_key,
+        borrowed,
     }
 }
 
@@ -370,7 +428,60 @@ mod tests {
         let coord = coordinator();
         let responses = coord.run_batch(vec![request(1, None)]);
         assert_eq!(responses[0].kb_generation, 0);
+        assert_eq!(responses[0].shard_key, None);
+        assert!(!responses[0].borrowed);
         coord.shutdown();
+    }
+
+    #[test]
+    fn fabric_coordinator_tags_shard_and_borrow_status() {
+        use crate::fabric::{FabricConfig, ShardConfig, ShardKey, ShardRouter};
+        use crate::sim::dataset::SizeClass;
+
+        let tb = Testbed::xsede();
+        let rows =
+            generate(&tb, &GenConfig { days: 5, arrivals_per_hour: 25.0, start_day: 0, seed: 61 });
+        let kb = Arc::new(build(&rows, &OfflineConfig::default(), &mut NativeAssign).unwrap());
+        let dir =
+            std::env::temp_dir().join(format!("dtopt_server_fabric_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let fabric = Arc::new(
+            ShardRouter::open(
+                &dir,
+                kb,
+                FabricConfig {
+                    shard: ShardConfig { min_native_rows: 1_000_000, ..Default::default() },
+                    ..Default::default()
+                },
+            )
+            .unwrap(),
+        );
+        let coord = Coordinator::with_fabric(
+            fabric.clone(),
+            Arc::new(rows),
+            CoordinatorConfig { workers: 2, ..Default::default() },
+        );
+        let responses = coord.run_batch((1..=4).map(|i| request(i, None)).collect());
+        for r in &responses {
+            // Dataset::new(60, 100.0) ⇒ large; no native shard exists,
+            // so the cold-started shard serves the borrowed fallback.
+            assert_eq!(r.shard_key, Some(ShardKey::new(TestbedId::Xsede, SizeClass::Large)));
+            assert!(r.borrowed);
+            assert_eq!(r.kb_generation, 0);
+        }
+        // Completed transfers were offered to the shard's own queue.
+        let shard = fabric
+            .shard(&ShardKey::new(TestbedId::Xsede, SizeClass::Large))
+            .expect("shard materialized");
+        assert!(shard.flush_barrier(std::time::Duration::from_secs(30)));
+        assert_eq!(shard.stats.rows_flushed.load(Ordering::Relaxed), 4);
+        // The metrics block renders the per-shard fabric table.
+        let table = coord.metrics.render();
+        assert!(table.contains("xsede/large"), "{table}");
+        assert!(table.contains("fabric:"), "{table}");
+        coord.shutdown();
+        fabric.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

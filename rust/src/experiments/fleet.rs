@@ -1,0 +1,225 @@
+//! Fleet bake-off (beyond the paper's figures): the sharded knowledge
+//! fabric versus a single global knowledge base under interleaved
+//! traffic from all three `LoadProfile` networks.
+//!
+//! Both sides start from the same global KB mined over the combined
+//! history. The baseline keeps serving it frozen; the fabric routes
+//! every request to its (network × class) shard — cold-starting each
+//! shard as borrowed knowledge, ingesting the day's completed
+//! transfers into the shard's own partitions, and flipping shards to
+//! their natively fitted KBs as rows accrue. The claim under test:
+//! per-network prediction accuracy of the specialized shards matches
+//! or beats the one-size-fits-all snapshot, while the fabric also
+//! buys the scaling properties (per-shard refresh, LRU memory cap).
+
+use super::common::{Table, World};
+use crate::baselines::{Optimizer, TransferEnv};
+use crate::fabric::{FabricConfig, ShardConfig, ShardKey, ShardRouter};
+use crate::feedback::{IngestConfig, RefreshPolicy};
+use crate::logs::generate::{generate, GenConfig};
+use crate::online::asm::AdaptiveSampling;
+use crate::sim::dataset::{Dataset, SizeClass};
+use crate::sim::testbed::{Testbed, TestbedId};
+use crate::sim::traffic::{Contention, DAY_S};
+use crate::sim::transfer::NetState;
+use crate::util::rng::Rng;
+use crate::util::stats::{mean, paper_accuracy};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+/// Aggregate accuracy for one network across the evaluation days.
+#[derive(Debug, Clone)]
+pub struct NetPoint {
+    pub network: TestbedId,
+    /// Mean Eq.-25 accuracy served by the frozen single global KB.
+    pub global_acc: f64,
+    /// Mean Eq.-25 accuracy served by the sharded fabric.
+    pub fabric_acc: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct FleetResult {
+    pub nets: Vec<NetPoint>,
+    pub eval_days: u64,
+    pub materialized: u64,
+    pub borrows: u64,
+    pub native_fits: u64,
+    pub evictions: u64,
+    /// Final per-shard table (state, generation, rows) for the report.
+    pub shard_table: String,
+}
+
+/// Run the bake-off: `eval_days` of interleaved three-network traffic
+/// after the initial history. `dir` is the fabric's root directory
+/// (created; caller removes). Deterministic: shards are ticked once
+/// per simulated day.
+pub fn run(world: &World, eval_days: u64, dir: &Path) -> Result<FleetResult> {
+    let fabric = ShardRouter::open(
+        dir,
+        world.kb.clone(),
+        FabricConfig {
+            shard: ShardConfig {
+                ingest: IngestConfig {
+                    capacity: 8192,
+                    flush_batch: 512,
+                    flush_interval: Duration::from_millis(5),
+                },
+                // Nightly per-shard analysis: fire whenever the day
+                // brought the shard anything new.
+                policy: RefreshPolicy {
+                    min_new_rows: 1,
+                    min_interval: Duration::ZERO,
+                    ..Default::default()
+                },
+                // ~two days of a network's per-class traffic at quick
+                // scale: shards flip to native fits mid-sweep, with
+                // enough rows behind each fit for dense surfaces.
+                min_native_rows: 300,
+            },
+            ..Default::default()
+        },
+    )?;
+    let history = world.config.history_days;
+    let mut global_accs: Vec<Vec<f64>> = vec![Vec::new(); 3];
+    let mut fabric_accs: Vec<Vec<f64>> = vec![Vec::new(); 3];
+    for day in history..history + eval_days {
+        // --- Interleave the day's completed traffic from all three
+        // networks through the router (round-robin, so shard
+        // materialization and borrowing happen under mixed load). ----
+        let mut per_net: Vec<_> = TestbedId::all()
+            .iter()
+            .map(|&tb| {
+                generate(
+                    &Testbed::by_id(tb),
+                    &GenConfig {
+                        days: 1,
+                        arrivals_per_hour: world.config.arrivals_per_hour,
+                        start_day: day,
+                        seed: world.config.seed ^ 0xF1EE7 ^ day ^ tb.name().len() as u64,
+                    },
+                )
+                .into_iter()
+            })
+            .collect();
+        // Resolve each shard handle once per day and reuse it for the
+        // day's offers: `routed` stays a served-request counter instead
+        // of absorbing thousands of ingest-path lookups.
+        let mut day_shards: HashMap<ShardKey, _> = HashMap::new();
+        loop {
+            let mut any = false;
+            for net in per_net.iter_mut() {
+                if let Some(row) = net.next() {
+                    any = true;
+                    if let Some(key) = ShardKey::of_log(&row) {
+                        let shard =
+                            day_shards.entry(key).or_insert_with(|| fabric.route(key).shard);
+                        if let Some(shard) = shard {
+                            shard.offer(row);
+                        }
+                    }
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        anyhow::ensure!(
+            fabric.flush_all(Duration::from_secs(60)),
+            "fabric ingest queues did not drain"
+        );
+        // --- Nightly per-shard ticks: native fits + additive refreshes.
+        let _ = fabric.tick_all();
+        // --- Identical test transfers against both knowledge sources.
+        for case in 0..(3 * world.config.requests_per_cell.max(2)) as u64 {
+            let net_idx = (case % 3) as usize;
+            let tb = Testbed::by_id(TestbedId::all()[net_idx]);
+            let mut rng = Rng::new(world.config.seed ^ 0xF1EE7 ^ day.rotate_left(23) ^ case);
+            let class = SizeClass::all()[rng.index(3)];
+            let dataset = Dataset::sample(class, &mut rng);
+            let t = day as f64 * DAY_S + rng.range_f64(0.0, 24.0) * 3_600.0;
+            let load = tb.profile.sample_load(t, &mut rng);
+            let contention = Contention::sample(&mut rng, tb.path.link.bandwidth_mbps, load);
+            let state = NetState { external_load: load, contention };
+            let env_seed = world.config.seed ^ day ^ case.rotate_left(11);
+            let routed = fabric.route(ShardKey::of_request(tb.id, &dataset));
+            for (kb, accs) in [
+                (&world.kb, &mut global_accs[net_idx]),
+                (&routed.snapshot.kb, &mut fabric_accs[net_idx]),
+            ] {
+                let mut env = TransferEnv::new(tb.clone(), dataset, state, env_seed);
+                let report = AdaptiveSampling::new(kb).run(&mut env);
+                if let Some(pred) = report.predicted_mbps {
+                    accs.push(paper_accuracy(report.final_steady_mbps(), pred));
+                }
+            }
+        }
+    }
+    let stats = fabric.stats.clone();
+    let shard_table = fabric.render();
+    fabric.shutdown();
+    let nets = TestbedId::all()
+        .iter()
+        .enumerate()
+        .map(|(i, &network)| NetPoint {
+            network,
+            global_acc: mean(&global_accs[i]),
+            fabric_acc: mean(&fabric_accs[i]),
+        })
+        .collect();
+    Ok(FleetResult {
+        nets,
+        eval_days,
+        materialized: stats.materialized.load(Ordering::Relaxed),
+        borrows: stats.borrows.load(Ordering::Relaxed),
+        native_fits: stats.native_fits.load(Ordering::Relaxed),
+        evictions: stats.evictions.load(Ordering::Relaxed),
+        shard_table,
+    })
+}
+
+pub fn render(result: &FleetResult) -> String {
+    let mut table = Table::new(&["network", "global_acc_%", "fabric_acc_%"]);
+    for p in &result.nets {
+        table.push(vec![
+            p.network.name().to_string(),
+            format!("{:.1}", p.global_acc),
+            format!("{:.1}", p.fabric_acc),
+        ]);
+    }
+    let mut out = table.render();
+    out.push_str(&format!(
+        "{} eval days: {} shards materialized ({} borrowed at cold start), \
+         {} native fits, {} evictions\n\n",
+        result.eval_days, result.materialized, result.borrows, result.native_fits,
+        result.evictions,
+    ));
+    out.push_str(&result.shard_table);
+    out
+}
+
+/// Shape checks: the cold-start machinery actually ran, and sharding
+/// does not lose per-network accuracy versus the single global KB.
+pub fn headline_checks(result: &FleetResult) -> Vec<(String, bool)> {
+    let mut checks = vec![(
+        format!(
+            "cold-start path exercised: {} borrows, {} native fits",
+            result.borrows, result.native_fits
+        ),
+        result.borrows >= 1 && result.native_fits >= 1,
+    )];
+    for p in &result.nets {
+        checks.push((
+            format!(
+                "{}: fabric accuracy {:.1}% ≥ global {:.1}% − 5",
+                p.network.name(),
+                p.fabric_acc,
+                p.global_acc
+            ),
+            p.fabric_acc >= p.global_acc - 5.0,
+        ));
+    }
+    checks
+}

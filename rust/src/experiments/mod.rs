@@ -3,7 +3,9 @@
 //! (surfaces), Fig. 3 (confidence + model accuracy), Fig. 5 (the
 //! headline bake-off), Fig. 6 (convergence), Fig. 7 (staleness), plus
 //! the live closed-loop sweep (`live`) that upgrades Fig. 7 from batch
-//! refresh to the hot-swapping feedback service.
+//! refresh to the hot-swapping feedback service, and the multi-network
+//! fleet bake-off (`fleet`): sharded knowledge fabric vs a single
+//! global KB under interleaved three-network traffic.
 //! Table 1 is `sim::testbed::Testbed::table1()`.
 
 pub mod common;
@@ -12,4 +14,5 @@ pub mod fig3;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod fleet;
 pub mod live;

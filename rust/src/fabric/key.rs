@@ -1,0 +1,130 @@
+//! Shard identity: which slice of the knowledge fabric owns a request.
+//!
+//! The paper's model is network and data agnostic — knowledge is mined
+//! per network/dataset class and the online phase picks the matching
+//! cluster. The fabric makes that split physical: one shard per
+//! (network, file-size class) pair, so each endpoint pair's knowledge
+//! base refreshes on its own traffic and its own schedule.
+
+use crate::logs::record::TransferLog;
+use crate::sim::dataset::{Dataset, SizeClass};
+use crate::sim::testbed::TestbedId;
+
+/// Identity of one knowledge shard: a network (testbed/endpoint pair)
+/// crossed with a dataset size class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ShardKey {
+    pub network: TestbedId,
+    pub class: SizeClass,
+}
+
+impl ShardKey {
+    pub fn new(network: TestbedId, class: SizeClass) -> ShardKey {
+        ShardKey { network, class }
+    }
+
+    /// The shard a transfer request routes to.
+    pub fn of_request(network: TestbedId, dataset: &Dataset) -> ShardKey {
+        ShardKey { network, class: dataset.class() }
+    }
+
+    /// The shard a completed log row belongs to; `None` when the row's
+    /// endpoint pair is not a known network.
+    pub fn of_log(row: &TransferLog) -> Option<ShardKey> {
+        TestbedId::parse(&row.pair)
+            .map(|network| ShardKey { network, class: SizeClass::classify(row.avg_file_mb) })
+    }
+
+    /// Every possible key over the known networks and classes.
+    pub fn all() -> Vec<ShardKey> {
+        let mut keys = Vec::with_capacity(9);
+        for network in TestbedId::all() {
+            for class in SizeClass::all() {
+                keys.push(ShardKey { network, class });
+            }
+        }
+        keys
+    }
+
+    /// Human-readable name, e.g. `xsede/large`.
+    pub fn name(&self) -> String {
+        format!("{}/{}", self.network.name(), self.class.name())
+    }
+
+    pub fn parse(s: &str) -> Option<ShardKey> {
+        let (net, class) = s.split_once('/')?;
+        let network = TestbedId::parse(net)?;
+        let class = SizeClass::all().into_iter().find(|c| c.name() == class)?;
+        Some(ShardKey { network, class })
+    }
+
+    /// Filesystem-safe directory name for the shard's log partitions,
+    /// e.g. `xsede__large` (slashes would nest directories).
+    pub fn dir_name(&self) -> String {
+        format!("{}__{}", self.network.name(), self.class.name())
+    }
+
+    /// A representative average file size for the class (the lognormal
+    /// location `sim::dataset` samples around) — used to position a
+    /// brand-new shard in feature space for cold-start borrowing.
+    pub fn representative_avg_file_mb(&self) -> f64 {
+        match self.class {
+            SizeClass::Small => 2.0,
+            SizeClass::Medium => 24.0,
+            SizeClass::Large => 200.0,
+        }
+    }
+}
+
+impl std::fmt::Display for ShardKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logs::record::tests::sample_log;
+
+    #[test]
+    fn covers_every_network_class_pair() {
+        let keys = ShardKey::all();
+        assert_eq!(keys.len(), 9);
+        let mut dedup = keys.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 9);
+    }
+
+    #[test]
+    fn name_parse_roundtrip() {
+        for key in ShardKey::all() {
+            assert_eq!(ShardKey::parse(&key.name()), Some(key));
+        }
+        assert_eq!(ShardKey::parse("xsede"), None);
+        assert_eq!(ShardKey::parse("nope/large"), None);
+        assert_eq!(ShardKey::parse("xsede/huge"), None);
+    }
+
+    #[test]
+    fn request_and_log_agree() {
+        let mut row = sample_log(); // pair "xsede", avg_file_mb 128 ⇒ large
+        let from_log = ShardKey::of_log(&row).unwrap();
+        let from_req =
+            ShardKey::of_request(TestbedId::Xsede, &Dataset::new(row.num_files, row.avg_file_mb));
+        assert_eq!(from_log, from_req);
+        assert_eq!(from_log.class, SizeClass::Large);
+        row.pair = "not-a-testbed".into();
+        assert_eq!(ShardKey::of_log(&row), None);
+    }
+
+    #[test]
+    fn dir_names_are_distinct_and_slash_free() {
+        let mut dirs: Vec<String> = ShardKey::all().iter().map(|k| k.dir_name()).collect();
+        assert!(dirs.iter().all(|d| !d.contains('/')));
+        dirs.sort();
+        dirs.dedup();
+        assert_eq!(dirs.len(), 9);
+    }
+}

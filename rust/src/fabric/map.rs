@@ -1,0 +1,257 @@
+//! The shard map: lazy shard materialization bookkeeping plus an LRU
+//! cap that evicts cold shards.
+//!
+//! The map itself never builds knowledge — the [`ShardRouter`] decides
+//! how a missing shard gets seeded (native fit vs cold-start borrow)
+//! and passes the recipe to [`ShardMap::get_or_materialize`]. Eviction
+//! selects the coldest shard and shuts it down under the
+//! materialization lock: its ingest queue drains into its log
+//! partitions (the spill) before the same key could possibly
+//! rematerialize from that directory.
+//!
+//! [`ShardRouter`]: super::router::ShardRouter
+
+use super::key::ShardKey;
+use super::shard::Shard;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Map tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardMapConfig {
+    /// Maximum shards held in memory; inserting beyond it evicts the
+    /// least-recently-used shard. A full KB per shard is the expensive
+    /// part of the fabric, so this is the fabric's memory ceiling.
+    pub max_live: usize,
+}
+
+impl Default for ShardMapConfig {
+    fn default() -> Self {
+        ShardMapConfig { max_live: 64 }
+    }
+}
+
+/// Live shards keyed by [`ShardKey`], with LRU accounting.
+pub struct ShardMap {
+    root: PathBuf,
+    shards: RwLock<HashMap<ShardKey, Arc<Shard>>>,
+    /// Logical clock stamped into `Shard::last_used` on every hit.
+    clock: AtomicU64,
+    /// Serializes cold-start materializations so concurrent requests
+    /// for the same missing key build its KB once, not once per worker.
+    materialize_lock: Mutex<()>,
+    config: ShardMapConfig,
+}
+
+impl ShardMap {
+    pub fn new(root: &Path, config: ShardMapConfig) -> ShardMap {
+        ShardMap {
+            root: root.to_path_buf(),
+            shards: RwLock::new(HashMap::new()),
+            clock: AtomicU64::new(1),
+            materialize_lock: Mutex::new(()),
+            config,
+        }
+    }
+
+    /// The shard's private log-partition directory under the fabric
+    /// root (this is where evicted shards spill to and rematerialize
+    /// from).
+    pub fn shard_dir(&self, key: &ShardKey) -> PathBuf {
+        self.root.join(key.dir_name())
+    }
+
+    fn touch(&self, shard: &Shard) {
+        shard.last_used.store(self.clock.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Look up a live shard, refreshing its LRU stamp.
+    pub fn get(&self, key: &ShardKey) -> Option<Arc<Shard>> {
+        let shards = self.shards.read().expect("shard map poisoned");
+        let shard = shards.get(key)?.clone();
+        self.touch(&shard);
+        Some(shard)
+    }
+
+    /// Look up a live shard, materializing it with `make` on a miss.
+    /// `make` runs outside the map lock but under a dedicated
+    /// materialization mutex, so the request path of *other* shards
+    /// never stalls behind a cold-start KB build and the same key is
+    /// never built twice. When the LRU cap forces a shard out, it is
+    /// shut down here — its queue spilled to its partitions and its
+    /// flusher joined — *before* the materialization lock is released,
+    /// so a rematerialization of the same key can never race the spill
+    /// (two flushers appending to one partition directory, or a
+    /// half-written tail read back mid-build). The evicted shard is
+    /// returned for the caller's accounting.
+    pub fn get_or_materialize(
+        &self,
+        key: ShardKey,
+        make: impl FnOnce() -> anyhow::Result<Shard>,
+    ) -> anyhow::Result<(Arc<Shard>, Option<Arc<Shard>>)> {
+        if let Some(shard) = self.get(&key) {
+            return Ok((shard, None));
+        }
+        let _guard = self.materialize_lock.lock().expect("materialize lock poisoned");
+        // Double-check: another request may have materialized it while
+        // we waited for the lock.
+        if let Some(shard) = self.get(&key) {
+            return Ok((shard, None));
+        }
+        let shard = Arc::new(make()?);
+        let evicted = {
+            let mut shards = self.shards.write().expect("shard map poisoned");
+            let evicted = if shards.len() >= self.config.max_live.max(1) {
+                let coldest = shards
+                    .iter()
+                    .min_by_key(|(_, s)| s.last_used.load(Ordering::Relaxed))
+                    .map(|(k, _)| *k);
+                coldest.and_then(|k| shards.remove(&k))
+            } else {
+                None
+            };
+            self.touch(&shard);
+            shards.insert(key, shard.clone());
+            evicted
+        };
+        // Spill outside the map lock (other lookups proceed) but inside
+        // the materialization lock (the evicted key cannot come back
+        // until its partitions are quiescent).
+        if let Some(cold) = &evicted {
+            cold.shutdown();
+        }
+        Ok((shard, evicted))
+    }
+
+    /// Snapshot of every live shard (metrics, tick sweeps), sorted by
+    /// key for stable rendering.
+    pub fn live(&self) -> Vec<Arc<Shard>> {
+        let mut shards: Vec<Arc<Shard>> =
+            self.shards.read().expect("shard map poisoned").values().cloned().collect();
+        shards.sort_by_key(|s| s.key);
+        shards
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.read().expect("shard map poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Remove every shard (fabric shutdown); the caller shuts each down.
+    pub fn drain(&self) -> Vec<Arc<Shard>> {
+        self.shards.write().expect("shard map poisoned").drain().map(|(_, s)| s).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::shard::ShardConfig;
+    use crate::logs::generate::{generate, GenConfig};
+    use crate::logs::store::LogStore;
+    use crate::offline::kmeans::NativeAssign;
+    use crate::offline::pipeline::{build, OfflineConfig};
+    use crate::sim::dataset::SizeClass;
+    use crate::sim::testbed::{Testbed, TestbedId};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dtopt_shardmap_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn donor_kb(seed: u64) -> Arc<crate::offline::knowledge::KnowledgeBase> {
+        let rows = generate(
+            &Testbed::xsede(),
+            &GenConfig { days: 2, arrivals_per_hour: 15.0, start_day: 0, seed },
+        );
+        Arc::new(build(&rows, &OfflineConfig::default(), &mut NativeAssign).unwrap())
+    }
+
+    fn materialize(map: &ShardMap, key: ShardKey, kb: &Arc<crate::offline::knowledge::KnowledgeBase>) -> (Arc<Shard>, Option<Arc<Shard>>) {
+        let kb = kb.clone();
+        map.get_or_materialize(key, || {
+            Shard::materialize(key, &map.shard_dir(&key), || (kb, None), ShardConfig::default())
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn materializes_lazily_and_reuses() {
+        let dir = tmpdir("lazy");
+        let map = ShardMap::new(&dir, ShardMapConfig { max_live: 8 });
+        let kb = donor_kb(61);
+        assert!(map.is_empty());
+        let key = ShardKey::new(TestbedId::Xsede, SizeClass::Small);
+        let (a, evicted) = materialize(&map, key, &kb);
+        assert!(evicted.is_none());
+        assert_eq!(map.len(), 1);
+        let (b, _) = materialize(&map, key, &kb);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup reuses the live shard");
+        for shard in map.drain() {
+            shard.shutdown();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_cap_evicts_the_coldest_shard() {
+        let dir = tmpdir("lru");
+        let map = ShardMap::new(&dir, ShardMapConfig { max_live: 2 });
+        let kb = donor_kb(62);
+        let k1 = ShardKey::new(TestbedId::Xsede, SizeClass::Small);
+        let k2 = ShardKey::new(TestbedId::Didclab, SizeClass::Small);
+        let k3 = ShardKey::new(TestbedId::DidclabToXsede, SizeClass::Small);
+        materialize(&map, k1, &kb);
+        materialize(&map, k2, &kb);
+        // Touch k1 so k2 is the coldest.
+        assert!(map.get(&k1).is_some());
+        let (_, evicted) = materialize(&map, k3, &kb);
+        let evicted = evicted.expect("cap of 2 must evict on the third insert");
+        assert_eq!(evicted.key, k2);
+        // Already shut down by the map: post-eviction offers drop.
+        assert!(!evicted.offer(crate::logs::record::tests::sample_log()));
+        assert_eq!(map.len(), 2);
+        assert!(map.get(&k1).is_some());
+        assert!(map.get(&k2).is_none(), "evicted shard left the map");
+        for shard in map.drain() {
+            shard.shutdown();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn evicted_shard_rematerializes_natively_from_its_spill() {
+        let dir = tmpdir("respawn");
+        let map = ShardMap::new(&dir, ShardMapConfig { max_live: 8 });
+        let key = ShardKey::new(TestbedId::Didclab, SizeClass::Medium);
+        // Seed the shard's partition directory as a previous life's
+        // spill would have.
+        let native = generate(
+            &Testbed::didclab(),
+            &GenConfig { days: 2, arrivals_per_hour: 15.0, start_day: 0, seed: 63 },
+        );
+        LogStore::open(map.shard_dir(&key)).unwrap().append(&native).unwrap();
+        let (shard, _) = map
+            .get_or_materialize(key, || {
+                Shard::materialize(
+                    key,
+                    &map.shard_dir(&key),
+                    || panic!("spilled shard must rematerialize natively"),
+                    ShardConfig { min_native_rows: 10, ..Default::default() },
+                )
+            })
+            .unwrap();
+        assert!(!shard.is_borrowed());
+        assert_eq!(shard.native_rows(), native.len() as u64);
+        for shard in map.drain() {
+            shard.shutdown();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,45 @@
+//! The sharded knowledge fabric — per-network knowledge bases behind
+//! one router.
+//!
+//! The paper's model is network and data agnostic: knowledge is mined
+//! per network/dataset class and the online phase picks the matching
+//! cluster. One global `KnowledgeBase` snapshot cannot scale that to
+//! many endpoint pairs under mixed traffic, so the fabric splits the
+//! closed loop by [`ShardKey`] (network × file-size class):
+//!
+//! ```text
+//!            ┌─────────────────────────────────────────────────┐
+//! request ──▶│ ShardRouter ── ShardKey ──▶ ShardMap (LRU cap)  │
+//!            └──────┬──────────────────────────┬───────────────┘
+//!                   │ hit                      │ miss: materialize
+//!                   ▼                          ▼
+//!            ┌─ Shard ────────────┐   partitions on disk?
+//!            │ SnapshotSlot (pin) │   ├─ enough rows → native fit
+//!            │ IngestQueue        │   └─ else → borrow nearest
+//!            │ RefreshPolicy tick │        native shard's KB
+//!            └────────────────────┘        (flagged `borrowed`)
+//! ```
+//!
+//! Each shard owns the full feedback loop in miniature: a hot-swappable
+//! [`SnapshotSlot`] workers pin per request, a bounded ingest queue
+//! flushing into the shard's own `LogStore` partition directory, and a
+//! [`RefreshPolicy`] evaluated against the shard's own drift/volume/
+//! period signals. Cold shards are evicted by the map's LRU cap — their
+//! queues drain to disk (the spill) and a later request rematerializes
+//! them from those partitions, natively if enough rows were spilled.
+//!
+//! See DESIGN.md §Sharded knowledge fabric for the routing diagram and
+//! the shard lifecycle (materialize → native fit → evict).
+//!
+//! [`SnapshotSlot`]: crate::feedback::SnapshotSlot
+//! [`RefreshPolicy`]: crate::feedback::RefreshPolicy
+
+pub mod key;
+pub mod map;
+pub mod router;
+pub mod shard;
+
+pub use key::ShardKey;
+pub use map::{ShardMap, ShardMapConfig};
+pub use router::{FabricConfig, FabricPollster, FabricStats, Routed, ShardRouter};
+pub use shard::{Shard, ShardConfig};

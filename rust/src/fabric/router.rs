@@ -1,0 +1,503 @@
+//! The shard router — the fabric's front door.
+//!
+//! Resolves each request's [`ShardKey`] to its shard's hot-swappable
+//! snapshot slot, materializing missing shards lazily. A brand-new
+//! shard with no history of its own *borrows* the nearest existing
+//! shard's knowledge base — nearest by the same cluster-centroid
+//! distance over `offline::features` that `KnowledgeBase::query`
+//! minimizes — and serves it flagged `borrowed` until enough native
+//! rows accrue for its own fit (HARP and the two-phase model fall back
+//! to similar networks the same way when history is thin).
+//!
+//! The request path never blocks on refreshes or on other shards'
+//! lifecycles (a map hit is a read lock plus atomics), and never fails
+//! on fabric trouble: a materialization error degrades to the fallback
+//! knowledge base and is retried only after a backoff, exactly like
+//! the feedback loop's drop-and-count ingestion ethos. The one request
+//! that materializes a new shard does pay the cold-start cost — the KB
+//! build, and past the LRU cap the evicted shard's spill — which is a
+//! per-shard-lifetime event, not a hot-path one.
+
+use super::key::ShardKey;
+use super::map::{ShardMap, ShardMapConfig};
+use super::shard::{Shard, ShardConfig};
+use crate::feedback::{KbSnapshot, SnapshotSlot};
+use crate::offline::knowledge::{KnowledgeBase, RequestInfo};
+use crate::sim::testbed::Testbed;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How long a key whose materialization failed keeps serving the
+/// fallback before the expensive build is attempted again (a broken
+/// partition directory must not re-run the build per request, nor hog
+/// the cold-start lock every other shard's materialization shares).
+const MATERIALIZE_RETRY: Duration = Duration::from_secs(5);
+
+/// Fabric configuration: per-shard knobs plus the map's LRU cap.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FabricConfig {
+    pub shard: ShardConfig,
+    pub map: ShardMapConfig,
+}
+
+/// Fabric-wide counters (per-shard counters live on each shard's
+/// `FeedbackStats`).
+#[derive(Debug, Default)]
+pub struct FabricStats {
+    pub routed: AtomicU64,
+    /// Requests served from the fallback KB because materialization
+    /// failed or is in its retry backoff (never propagated to the
+    /// request path).
+    pub route_errors: AtomicU64,
+    pub materialized: AtomicU64,
+    /// Materializations that had to borrow a donor KB.
+    pub borrows: AtomicU64,
+    /// Borrowed shards that flipped to their own fitted KB.
+    pub native_fits: AtomicU64,
+    pub evictions: AtomicU64,
+    /// Per-shard tick failures skipped by `tick_all` (the sweep keeps
+    /// going; one broken shard never blocks the others' refreshes).
+    pub tick_errors: AtomicU64,
+}
+
+/// What the router hands the request path.
+pub struct Routed {
+    pub key: ShardKey,
+    /// Pinned for the whole transfer, like the global slot's snapshots.
+    pub snapshot: Arc<KbSnapshot>,
+    /// The snapshot is a borrowed (donor or fallback) KB, not the
+    /// shard's own fit.
+    pub borrowed: bool,
+    /// `None` only on the degraded fallback path.
+    pub shard: Option<Arc<Shard>>,
+}
+
+/// The sharded knowledge fabric.
+pub struct ShardRouter {
+    map: ShardMap,
+    /// Borrow source of last resort (and the route-error fallback):
+    /// typically the global KB the service booted with.
+    fallback: Arc<SnapshotSlot>,
+    /// Keys whose last materialization failed, and when — served from
+    /// the fallback until [`MATERIALIZE_RETRY`] passes.
+    failed: Mutex<HashMap<ShardKey, Instant>>,
+    config: FabricConfig,
+    pub stats: Arc<FabricStats>,
+}
+
+impl ShardRouter {
+    /// Open the fabric rooted at `root` (shard partition directories
+    /// are created under it on demand).
+    pub fn open(root: &Path, fallback: Arc<KnowledgeBase>, config: FabricConfig) -> Result<ShardRouter> {
+        std::fs::create_dir_all(root)?;
+        Ok(ShardRouter {
+            map: ShardMap::new(root, config.map),
+            fallback: Arc::new(SnapshotSlot::new(fallback)),
+            failed: Mutex::new(HashMap::new()),
+            config,
+            stats: Arc::new(FabricStats::default()),
+        })
+    }
+
+    /// Resolve a request's shard, materializing it on first contact.
+    /// Infallible by design: fabric trouble degrades to the fallback
+    /// KB (flagged borrowed, no shard to ingest into), is counted, and
+    /// backs the key off so a broken shard neither re-runs the build
+    /// per request nor hogs the shared cold-start lock.
+    pub fn route(&self, key: ShardKey) -> Routed {
+        self.stats.routed.fetch_add(1, Ordering::Relaxed);
+        if let Some(shard) = self.map.get(&key) {
+            let (snapshot, borrowed) = shard.resolve();
+            return Routed { key, snapshot, borrowed, shard: Some(shard) };
+        }
+        if self.in_retry_backoff(&key) {
+            self.stats.route_errors.fetch_add(1, Ordering::Relaxed);
+            return self.fallback_routed(key);
+        }
+        let made = self.map.get_or_materialize(key, || {
+            let shard = Shard::materialize(
+                key,
+                &self.map.shard_dir(&key),
+                || {
+                    self.stats.borrows.fetch_add(1, Ordering::Relaxed);
+                    self.donor_for(&key)
+                },
+                self.config.shard,
+            )?;
+            // Counted only on success, so retries of a broken key never
+            // inflate the materialization total.
+            self.stats.materialized.fetch_add(1, Ordering::Relaxed);
+            Ok(shard)
+        });
+        match made {
+            Ok((shard, evicted)) => {
+                if evicted.is_some() {
+                    // Already spilled and shut down by the map, under
+                    // its materialization lock.
+                    self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                self.failed.lock().expect("failed map poisoned").remove(&key);
+                let (snapshot, borrowed) = shard.resolve();
+                Routed { key, snapshot, borrowed, shard: Some(shard) }
+            }
+            Err(e) => {
+                self.failed.lock().expect("failed map poisoned").insert(key, Instant::now());
+                self.stats.route_errors.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "warning: shard {key} unavailable ({e:#}); serving fallback KB for {}s",
+                    MATERIALIZE_RETRY.as_secs()
+                );
+                self.fallback_routed(key)
+            }
+        }
+    }
+
+    fn in_retry_backoff(&self, key: &ShardKey) -> bool {
+        match self.failed.lock().expect("failed map poisoned").get(key) {
+            Some(at) => at.elapsed() < MATERIALIZE_RETRY,
+            None => false,
+        }
+    }
+
+    fn fallback_routed(&self, key: ShardKey) -> Routed {
+        Routed { key, snapshot: self.fallback.resolve(), borrowed: true, shard: None }
+    }
+
+    /// Pick the donor KB for a brand-new shard: among live shards
+    /// already serving their *own* fit (borrow chains would copy a
+    /// copy), the one whose nearest cluster centroid is closest to the
+    /// new shard's canonical request features; the fallback KB when no
+    /// native shard exists yet.
+    fn donor_for(&self, key: &ShardKey) -> (Arc<KnowledgeBase>, Option<ShardKey>) {
+        let raw = canonical_request(key).raw_features();
+        let mut best: Option<(f64, Arc<KnowledgeBase>, ShardKey)> = None;
+        for shard in self.map.live() {
+            if shard.key == *key || shard.is_borrowed() {
+                continue;
+            }
+            let (snapshot, _) = shard.resolve();
+            let d = snapshot.kb.centroid_distance(&raw);
+            if best.as_ref().map_or(true, |(bd, _, _)| d < *bd) {
+                best = Some((d, snapshot.kb.clone(), shard.key));
+            }
+        }
+        match best {
+            Some((_, kb, donor)) => (kb, Some(donor)),
+            None => (self.fallback.resolve().kb.clone(), None),
+        }
+    }
+
+    /// One refresh sweep over every live shard (what a deployment would
+    /// run from a background pollster; experiments and tests drive it
+    /// deterministically). A shard whose tick fails is warned about,
+    /// counted, and skipped — one broken shard's partitions never block
+    /// the rest of the fleet's refreshes. Returns the shards that
+    /// published.
+    pub fn tick_all(&self) -> Vec<(ShardKey, u64, &'static str)> {
+        let mut fired = Vec::new();
+        for shard in self.map.live() {
+            match shard.tick() {
+                Ok(Some((generation, cause))) => {
+                    if cause == "native-fit" {
+                        self.stats.native_fits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    fired.push((shard.key, generation, cause));
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    self.stats.tick_errors.fetch_add(1, Ordering::Relaxed);
+                    eprintln!("warning: shard {} refresh failed: {e:#}", shard.key);
+                }
+            }
+        }
+        fired
+    }
+
+    /// Block until every shard's ingest queue drains (tests and
+    /// deterministic experiments).
+    pub fn flush_all(&self, timeout: Duration) -> bool {
+        self.map.live().iter().all(|shard| shard.flush_barrier(timeout))
+    }
+
+    pub fn live_shards(&self) -> Vec<Arc<Shard>> {
+        self.map.live()
+    }
+
+    pub fn shard(&self, key: &ShardKey) -> Option<Arc<Shard>> {
+        self.map.get(key)
+    }
+
+    /// Shut every shard down (spilling their queues); the router stays
+    /// usable and would rematerialize on the next route.
+    pub fn shutdown(&self) {
+        for shard in self.map.drain() {
+            shard.shutdown();
+        }
+    }
+
+    /// Per-shard metrics table + fabric summary line (rendered inside
+    /// the coordinator metrics block).
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "shard                     state     gen  native_rows  queued  ingested  dropped  refreshes\n",
+        );
+        for shard in self.map.live() {
+            let state = if shard.is_borrowed() {
+                match shard.borrowed_from {
+                    Some(donor) => format!("borrowed({donor})"),
+                    None => "borrowed(fallback)".to_string(),
+                }
+            } else {
+                "native".to_string()
+            };
+            out.push_str(&format!(
+                "{:<25} {:<9} {:>3} {:>12} {:>7} {:>9} {:>8} {:>10}\n",
+                shard.key.name(),
+                state,
+                shard.generation(),
+                shard.native_rows(),
+                shard.stats.queue_depth.load(Ordering::Relaxed),
+                shard.stats.rows_flushed.load(Ordering::Relaxed),
+                shard.stats.rows_dropped.load(Ordering::Relaxed),
+                shard.stats.refreshes.load(Ordering::Relaxed),
+            ));
+        }
+        out.push_str(&format!(
+            "fabric: {} live shards (cap {}), {} materialized, {} borrows, {} native fits, \
+             {} evictions, {} routed ({} fallback-served, {} tick errors)\n",
+            self.map.len(),
+            self.config.map.max_live,
+            self.stats.materialized.load(Ordering::Relaxed),
+            self.stats.borrows.load(Ordering::Relaxed),
+            self.stats.native_fits.load(Ordering::Relaxed),
+            self.stats.evictions.load(Ordering::Relaxed),
+            self.stats.routed.load(Ordering::Relaxed),
+            self.stats.route_errors.load(Ordering::Relaxed),
+            self.stats.tick_errors.load(Ordering::Relaxed),
+        ));
+        out
+    }
+}
+
+/// Background driver for long-lived deployments: periodically sweeps
+/// [`ShardRouter::tick_all`] so borrowed shards fit and native shards
+/// refresh without anyone driving the loop by hand — the fabric
+/// counterpart of `feedback::Refresher`. Tests and deterministic
+/// experiments skip it and call `tick_all` themselves.
+pub struct FabricPollster {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl FabricPollster {
+    pub fn spawn(router: Arc<ShardRouter>, poll_interval: Duration) -> FabricPollster {
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread_stop = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("dtopt-fabric".into())
+            .spawn(move || {
+                while !thread_stop.load(Ordering::Acquire) {
+                    // Per-shard failures are already warned about and
+                    // counted inside the sweep.
+                    let _ = router.tick_all();
+                    std::thread::sleep(poll_interval);
+                }
+            })
+            .expect("spawning fabric pollster");
+        FabricPollster { stop, handle: Some(handle) }
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+
+    pub fn stop(mut self) {
+        self.halt();
+    }
+}
+
+/// RAII guard: a pollster dropped without an explicit `stop` still
+/// stops and joins its thread instead of leaking it.
+impl Drop for FabricPollster {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+impl std::fmt::Debug for ShardRouter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardRouter")
+            .field("live_shards", &self.map.len())
+            .field("config", &self.config)
+            .finish()
+    }
+}
+
+/// Canonical request shape for a key (its network's Table-1 path plus a
+/// class-representative dataset) — positions the shard in feature space
+/// before it has served anything.
+fn canonical_request(key: &ShardKey) -> RequestInfo {
+    let testbed = Testbed::by_id(key.network);
+    RequestInfo {
+        rtt_ms: testbed.path.link.rtt_ms,
+        bandwidth_mbps: testbed.path.link.bandwidth_mbps,
+        tcp_buffer_mb: testbed.path.src.tcp_buffer_mb.min(testbed.path.dst.tcp_buffer_mb),
+        disk_mbps: testbed.path.src.disk_mbps.min(testbed.path.dst.disk_mbps),
+        avg_file_mb: key.representative_avg_file_mb(),
+        num_files: 100,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logs::generate::{generate, GenConfig};
+    use crate::logs::store::LogStore;
+    use crate::offline::kmeans::NativeAssign;
+    use crate::offline::pipeline::{build, OfflineConfig};
+    use crate::sim::dataset::SizeClass;
+    use crate::sim::testbed::TestbedId;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dtopt_router_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn kb_for(id: TestbedId, seed: u64) -> Arc<KnowledgeBase> {
+        let rows = generate(
+            &Testbed::by_id(id),
+            &GenConfig { days: 3, arrivals_per_hour: 15.0, start_day: 0, seed },
+        );
+        Arc::new(build(&rows, &OfflineConfig::default(), &mut NativeAssign).unwrap())
+    }
+
+    fn router(dir: &Path, config: FabricConfig) -> ShardRouter {
+        ShardRouter::open(dir, kb_for(TestbedId::Xsede, 71), config).unwrap()
+    }
+
+    /// Seed a shard's partition directory so it materializes natively.
+    fn seed_native(r: &ShardRouter, key: ShardKey, seed: u64) {
+        let rows = generate(
+            &Testbed::by_id(key.network),
+            &GenConfig { days: 3, arrivals_per_hour: 15.0, start_day: 0, seed },
+        );
+        LogStore::open(r.map.shard_dir(&key)).unwrap().append(&rows).unwrap();
+    }
+
+    #[test]
+    fn first_contact_borrows_fallback_and_is_flagged() {
+        let dir = tmpdir("first");
+        let r = router(&dir, FabricConfig::default());
+        let key = ShardKey::new(TestbedId::Didclab, SizeClass::Small);
+        let routed = r.route(key);
+        assert_eq!(routed.key, key);
+        assert!(routed.borrowed, "no native shard exists; the fallback KB is borrowed");
+        let shard = routed.shard.expect("shard materialized");
+        assert!(shard.is_borrowed());
+        assert_eq!(shard.borrowed_from, None, "fallback borrow has no donor shard");
+        assert_eq!(r.stats.borrows.load(Ordering::Relaxed), 1);
+        assert_eq!(r.stats.materialized.load(Ordering::Relaxed), 1);
+        // Second route reuses the live shard without rematerializing.
+        let again = r.route(key);
+        assert!(Arc::ptr_eq(&shard, &again.shard.unwrap()));
+        assert_eq!(r.stats.materialized.load(Ordering::Relaxed), 1);
+        r.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cold_start_borrows_the_nearest_native_shard() {
+        let dir = tmpdir("nearest");
+        let config = FabricConfig {
+            shard: ShardConfig { min_native_rows: 10, ..Default::default() },
+            ..Default::default()
+        };
+        let r = router(&dir, config);
+        // Two native shards on very different networks.
+        let xsede = ShardKey::new(TestbedId::Xsede, SizeClass::Large);
+        let didclab = ShardKey::new(TestbedId::Didclab, SizeClass::Small);
+        seed_native(&r, xsede, 72);
+        seed_native(&r, didclab, 73);
+        assert!(!r.route(xsede).borrowed);
+        assert!(!r.route(didclab).borrowed);
+        // A new didclab/medium shard must borrow from the didclab
+        // shard, not the 10 Gbps / 40 ms xsede one.
+        let newcomer = ShardKey::new(TestbedId::Didclab, SizeClass::Medium);
+        let routed = r.route(newcomer);
+        assert!(routed.borrowed);
+        assert_eq!(routed.shard.unwrap().borrowed_from, Some(didclab));
+        r.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tick_all_flips_borrowed_shards_and_counts_fits() {
+        let dir = tmpdir("fits");
+        let config = FabricConfig {
+            shard: ShardConfig { min_native_rows: 20, ..Default::default() },
+            ..Default::default()
+        };
+        let r = router(&dir, config);
+        let key = ShardKey::new(TestbedId::Didclab, SizeClass::Medium);
+        let routed = r.route(key);
+        assert!(routed.borrowed);
+        let shard = routed.shard.unwrap();
+        for row in generate(
+            &Testbed::didclab(),
+            &GenConfig { days: 1, arrivals_per_hour: 15.0, start_day: 0, seed: 74 },
+        ) {
+            shard.offer(row);
+        }
+        assert!(r.flush_all(Duration::from_secs(30)));
+        let fired = r.tick_all();
+        assert_eq!(fired, vec![(key, 1, "native-fit")]);
+        assert_eq!(r.stats.native_fits.load(Ordering::Relaxed), 1);
+        assert!(!r.route(key).borrowed);
+        let table = r.render();
+        assert!(table.contains("didclab/medium"), "{table}");
+        assert!(table.contains("native"), "{table}");
+        assert!(table.contains("1 native fits"), "{table}");
+        r.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pollster_flips_borrowed_shards_in_background() {
+        let dir = tmpdir("pollster");
+        let config = FabricConfig {
+            shard: ShardConfig { min_native_rows: 20, ..Default::default() },
+            ..Default::default()
+        };
+        let r = Arc::new(router(&dir, config));
+        let key = ShardKey::new(TestbedId::Didclab, SizeClass::Medium);
+        let shard = r.route(key).shard.unwrap();
+        assert!(shard.is_borrowed());
+        let pollster = FabricPollster::spawn(r.clone(), Duration::from_millis(5));
+        for row in generate(
+            &Testbed::didclab(),
+            &GenConfig { days: 1, arrivals_per_hour: 15.0, start_day: 0, seed: 76 },
+        ) {
+            shard.offer(row);
+        }
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while shard.is_borrowed() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(!shard.is_borrowed(), "pollster never fit the shard natively");
+        assert!(shard.generation() >= 1);
+        assert_eq!(r.stats.native_fits.load(Ordering::Relaxed), 1);
+        pollster.stop();
+        r.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

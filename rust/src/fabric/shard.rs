@@ -1,0 +1,411 @@
+//! One shard of the knowledge fabric: a hot-swappable KB snapshot, a
+//! bounded ingest queue flushing into the shard's own log partitions,
+//! and a refresh loop that runs on the shard's own signals.
+//!
+//! Lifecycle (see DESIGN.md §Sharded knowledge fabric):
+//!
+//! * **materialize** — lazily, on the first request for the key. If the
+//!   shard's log partitions already hold enough rows (a previous life
+//!   before eviction), the shard fits its own KB immediately; otherwise
+//!   it *borrows* the nearest existing shard's KB, flagged `borrowed`.
+//! * **native fit** — once enough native rows accrue, the shard builds
+//!   its own knowledge base from its partitions and publishes it as the
+//!   next snapshot generation; `borrowed` flips off. From then on the
+//!   per-shard [`RefreshPolicy`] drives additive refreshes exactly like
+//!   the global feedback loop, but over this shard's traffic only.
+//! * **evict** — a cold shard is shut down by the [`ShardMap`] LRU: the
+//!   ingest queue drains into the partitions (the spill), the in-memory
+//!   KB is dropped, and a later request rematerializes from disk.
+//!
+//! [`ShardMap`]: super::map::ShardMap
+
+use super::key::ShardKey;
+use crate::feedback::ingest::{self, IngestWorker};
+use crate::feedback::refresher::RefreshEngine;
+use crate::feedback::{FeedbackStats, IngestConfig, IngestQueue, KbSnapshot, RefreshPolicy, SnapshotSlot};
+use crate::logs::record::TransferLog;
+use crate::logs::store::LogStore;
+use crate::offline::kmeans::NativeAssign;
+use crate::offline::knowledge::KnowledgeBase;
+use crate::offline::pipeline::{build, OfflineConfig};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Per-shard tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardConfig {
+    pub ingest: IngestConfig,
+    /// Refresh triggers evaluated per shard — each network's KB
+    /// refreshes on its own drift/volume/period signals.
+    pub policy: RefreshPolicy,
+    /// Native rows a borrowed shard must accrue before it fits its own
+    /// knowledge base and stops serving the donor's.
+    pub min_native_rows: u64,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            ingest: IngestConfig::default(),
+            policy: RefreshPolicy::default(),
+            min_native_rows: 200,
+        }
+    }
+}
+
+/// One live shard. Workers pin a snapshot per request via [`Shard::resolve`]
+/// and never block on refreshes; refreshes publish into the shard's
+/// private [`SnapshotSlot`].
+pub struct Shard {
+    pub key: ShardKey,
+    pub slot: Arc<SnapshotSlot>,
+    pub stats: Arc<FeedbackStats>,
+    /// The donor this shard borrowed from at materialization (`None`
+    /// when it fit natively from its own partitions right away).
+    pub borrowed_from: Option<ShardKey>,
+    store: Arc<LogStore>,
+    config: ShardConfig,
+    /// Serving a borrowed KB until the native fit (lock-free mirror of
+    /// `engine.is_none()` for the request path).
+    borrowed: AtomicBool,
+    /// Rows already in the partitions at materialization (count toward
+    /// the native-fit threshold alongside freshly flushed rows).
+    initial_rows: u64,
+    queue: Mutex<Option<IngestQueue>>,
+    worker: Mutex<Option<IngestWorker>>,
+    closing: Arc<AtomicBool>,
+    /// The shard's own additive-refresh engine (the same machinery the
+    /// global feedback service runs) — `None` while the shard still
+    /// serves a borrowed KB, created by the native fit.
+    engine: Mutex<Option<RefreshEngine>>,
+    /// Logical LRU timestamp maintained by the shard map.
+    pub(crate) last_used: AtomicU64,
+}
+
+/// Read every partition, remembering per-day lengths so the cursor can
+/// be set to exactly what was read (no refresh/ingest race).
+fn read_all_with_cursor(store: &LogStore) -> Result<(Vec<TransferLog>, BTreeMap<u64, usize>)> {
+    let mut rows = Vec::new();
+    let mut cursor = BTreeMap::new();
+    for day in store.days()? {
+        let day_rows = store.read_day(day)?;
+        cursor.insert(day, day_rows.len());
+        rows.extend(day_rows);
+    }
+    Ok((rows, cursor))
+}
+
+impl Shard {
+    /// Materialize the shard for `key` at `dir` (its private log-store
+    /// partition directory). If the partitions already hold at least
+    /// `min_native_rows` rows — a previous life before eviction — the
+    /// shard fits its own KB immediately; otherwise `donor` is consulted
+    /// once for a KB to borrow until enough native rows accrue.
+    pub(crate) fn materialize(
+        key: ShardKey,
+        dir: &Path,
+        donor: impl FnOnce() -> (Arc<KnowledgeBase>, Option<ShardKey>),
+        config: ShardConfig,
+    ) -> Result<Shard> {
+        let store = Arc::new(LogStore::open(dir)?);
+        let (existing, cursor) = read_all_with_cursor(&store)?;
+        let initial_rows = existing.len() as u64;
+        let (kb, borrowed, borrowed_from) = if initial_rows >= config.min_native_rows.max(1) {
+            let kb = build(&existing, &OfflineConfig::default(), &mut NativeAssign)?;
+            (Arc::new(kb), false, None)
+        } else {
+            let (donor_kb, donor_key) = donor();
+            (donor_kb, true, donor_key)
+        };
+        let slot = Arc::new(SnapshotSlot::new(kb));
+        let stats = Arc::new(FeedbackStats::default());
+        let closing = Arc::new(AtomicBool::new(false));
+        let (queue, worker) =
+            ingest::spawn(store.clone(), stats.clone(), closing.clone(), config.ingest);
+        // A native shard refreshes through the same engine the global
+        // feedback service runs, with the cursor set to exactly the
+        // rows its KB was just built from.
+        let engine = if borrowed {
+            None
+        } else {
+            Some(RefreshEngine::with_cursor(
+                slot.clone(),
+                store.clone(),
+                stats.clone(),
+                config.policy,
+                cursor,
+            ))
+        };
+        Ok(Shard {
+            key,
+            slot,
+            stats,
+            borrowed_from,
+            store,
+            config,
+            borrowed: AtomicBool::new(borrowed),
+            initial_rows,
+            queue: Mutex::new(Some(queue)),
+            worker: Mutex::new(Some(worker)),
+            closing,
+            engine: Mutex::new(engine),
+            last_used: AtomicU64::new(0),
+        })
+    }
+
+    /// Pin the shard's current snapshot plus its borrow status. The
+    /// flag is read *before* the snapshot: observing `borrowed ==
+    /// false` means the native fit's publish happened-before the flag's
+    /// Release store, so the snapshot read next is the native KB — a
+    /// request can never claim `borrowed = false` while actually
+    /// holding the donor's KB. (The opposite race — a freshly published
+    /// native KB still labeled borrowed for an instant — is the
+    /// conservative direction and allowed.)
+    pub fn resolve(&self) -> (Arc<KbSnapshot>, bool) {
+        let borrowed = self.borrowed.load(Ordering::Acquire);
+        (self.slot.resolve(), borrowed)
+    }
+
+    pub fn is_borrowed(&self) -> bool {
+        self.borrowed.load(Ordering::Acquire)
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.slot.generation()
+    }
+
+    /// Rows of this shard's own traffic: what the partitions held at
+    /// materialization plus everything flushed since.
+    pub fn native_rows(&self) -> u64 {
+        self.initial_rows + self.stats.rows_flushed.load(Ordering::Acquire)
+    }
+
+    /// Offer one completed-transfer row to the shard's ingest queue.
+    /// Non-blocking; after shutdown (eviction) the row is dropped and
+    /// counted, same as a full queue.
+    pub fn offer(&self, row: TransferLog) -> bool {
+        match &*self.queue.lock().expect("shard queue poisoned") {
+            Some(queue) => queue.offer(row),
+            None => {
+                self.stats.rows_dropped.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+        }
+    }
+
+    /// One refresh evaluation. A borrowed shard checks the native-fit
+    /// threshold (the borrowed KB itself stays frozen at the donor's
+    /// version); a native shard delegates to its [`RefreshEngine`] —
+    /// the same policy-driven additive refresh the global feedback
+    /// service runs, over this shard's partitions only. Returns the
+    /// published generation and the cause when something fired.
+    pub fn tick(&self) -> Result<Option<(u64, &'static str)>> {
+        let mut engine = self.engine.lock().expect("shard engine poisoned");
+        if let Some(native) = engine.as_ref() {
+            return Ok(native.tick()?.map(|(generation, reason)| (generation, reason.name())));
+        }
+        if self.native_rows() >= self.config.min_native_rows.max(1) {
+            let generation = self.fit_native(&mut *engine)?;
+            return Ok(Some((generation, "native-fit")));
+        }
+        Ok(None)
+    }
+
+    /// Build the shard's own KB from everything in its partitions,
+    /// publish it, and install the refresh engine; the shard stops
+    /// serving the donor's knowledge.
+    fn fit_native(&self, engine: &mut Option<RefreshEngine>) -> Result<u64> {
+        let started = Instant::now();
+        let (rows, cursor) = read_all_with_cursor(&self.store)?;
+        anyhow::ensure!(!rows.is_empty(), "shard {}: native fit with empty store", self.key);
+        let kb = build(&rows, &OfflineConfig::default(), &mut NativeAssign)?;
+        let generation = self.slot.publish(Arc::new(kb));
+        // The engine's cursor is exactly the rows just fitted, so later
+        // ticks fold in only what arrives afterwards.
+        *engine = Some(RefreshEngine::with_cursor(
+            self.slot.clone(),
+            self.store.clone(),
+            self.stats.clone(),
+            self.config.policy,
+            cursor,
+        ));
+        // Publish-then-flip, paired with resolve()'s flag-then-snapshot
+        // read order: whoever observes the cleared flag also observes
+        // the already-published native KB — never
+        // native-claimed-but-borrowed.
+        self.borrowed.store(false, Ordering::Release);
+        let refresh_ns = started.elapsed().as_nanos() as u64;
+        self.stats.refreshes.fetch_add(1, Ordering::Relaxed);
+        self.stats.rows_consumed.fetch_add(rows.len() as u64, Ordering::Relaxed);
+        self.stats.last_refresh_ns.store(refresh_ns, Ordering::Relaxed);
+        self.stats.total_refresh_ns.fetch_add(refresh_ns, Ordering::Relaxed);
+        self.stats.kb_generation.store(generation, Ordering::Release);
+        Ok(generation)
+    }
+
+    /// Block until every row offered so far is flushed or dropped (or
+    /// the timeout passes). For tests and deterministic experiments.
+    pub fn flush_barrier(&self, timeout: std::time::Duration) -> bool {
+        self.stats.flush_barrier(timeout)
+    }
+
+    /// Shut the shard down (eviction spill): close and drop the ingest
+    /// queue so the flusher drains every buffered row into the
+    /// partitions, then join it. Idempotent; later `offer`s drop and
+    /// count. In-flight requests keep serving their pinned snapshots.
+    pub(crate) fn shutdown(&self) {
+        self.closing.store(true, Ordering::Release);
+        drop(self.queue.lock().expect("shard queue poisoned").take());
+        if let Some(worker) = self.worker.lock().expect("shard worker poisoned").take() {
+            worker.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for Shard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Shard")
+            .field("key", &self.key)
+            .field("generation", &self.generation())
+            .field("borrowed", &self.is_borrowed())
+            .field("native_rows", &self.native_rows())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logs::generate::{generate, GenConfig};
+    use crate::sim::dataset::SizeClass;
+    use crate::sim::testbed::{Testbed, TestbedId};
+    use std::path::PathBuf;
+    use std::time::Duration;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dtopt_shard_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn rows(testbed: &Testbed, days: u64, seed: u64) -> Vec<TransferLog> {
+        generate(testbed, &GenConfig { days, arrivals_per_hour: 15.0, start_day: 0, seed })
+    }
+
+    fn quick_config(min_native_rows: u64) -> ShardConfig {
+        ShardConfig {
+            ingest: IngestConfig {
+                capacity: 1024,
+                flush_batch: 8,
+                flush_interval: Duration::from_millis(2),
+            },
+            policy: RefreshPolicy {
+                min_new_rows: 1,
+                min_interval: Duration::ZERO,
+                ..Default::default()
+            },
+            min_native_rows,
+        }
+    }
+
+    #[test]
+    fn preseeded_store_fits_natively_without_a_donor() {
+        let dir = tmpdir("native");
+        let history = rows(&Testbed::xsede(), 3, 41);
+        LogStore::open(&dir).unwrap().append(&history).unwrap();
+        let key = ShardKey::new(TestbedId::Xsede, SizeClass::Large);
+        let shard = Shard::materialize(
+            key,
+            &dir,
+            || panic!("donor must not be consulted when the store has enough rows"),
+            quick_config(10),
+        )
+        .unwrap();
+        assert!(!shard.is_borrowed());
+        assert_eq!(shard.generation(), 0);
+        assert_eq!(shard.native_rows(), history.len() as u64);
+        let (snapshot, borrowed) = shard.resolve();
+        assert!(!borrowed);
+        assert!(!snapshot.kb.clusters.is_empty());
+        // Nothing new ⇒ no refresh fires.
+        assert_eq!(shard.tick().unwrap(), None);
+        shard.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn borrowed_shard_accrues_rows_then_fits_natively() {
+        let dir = tmpdir("borrow");
+        let donor_kb = {
+            let h = rows(&Testbed::xsede(), 3, 43);
+            Arc::new(build(&h, &OfflineConfig::default(), &mut NativeAssign).unwrap())
+        };
+        let donor_key = ShardKey::new(TestbedId::Xsede, SizeClass::Large);
+        let key = ShardKey::new(TestbedId::Didclab, SizeClass::Medium);
+        let shard =
+            Shard::materialize(key, &dir, || (donor_kb.clone(), Some(donor_key)), quick_config(30))
+                .unwrap();
+        assert!(shard.is_borrowed());
+        assert_eq!(shard.borrowed_from, Some(donor_key));
+        assert_eq!(shard.generation(), 0);
+        // Below the threshold: the borrowed KB stays frozen.
+        let native = rows(&Testbed::didclab(), 2, 44);
+        assert!(native.len() > 40, "need enough traffic for the fit ({})", native.len());
+        for row in native.iter().take(10).cloned() {
+            assert!(shard.offer(row));
+        }
+        assert!(shard.flush_barrier(Duration::from_secs(30)));
+        assert_eq!(shard.tick().unwrap(), None);
+        assert!(shard.is_borrowed());
+        // Threshold reached: the shard fits its own KB and flips.
+        for row in native.iter().skip(10).cloned() {
+            shard.offer(row);
+        }
+        assert!(shard.flush_barrier(Duration::from_secs(30)));
+        assert_eq!(shard.tick().unwrap(), Some((1, "native-fit")));
+        assert!(!shard.is_borrowed());
+        let (snapshot, borrowed) = shard.resolve();
+        assert!(!borrowed);
+        assert_eq!(snapshot.generation, 1);
+        let fitted_rows: u64 = snapshot.kb.clusters.iter().map(|c| c.n_rows).sum();
+        assert_eq!(fitted_rows, shard.native_rows(), "fit consumed exactly the native rows");
+        // From here on, the per-shard policy drives additive refreshes.
+        for row in rows(&Testbed::didclab(), 1, 45) {
+            shard.offer(row);
+        }
+        assert!(shard.flush_barrier(Duration::from_secs(30)));
+        assert_eq!(shard.tick().unwrap(), Some((2, "row-threshold")));
+        shard.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shutdown_spills_queue_and_later_offers_drop() {
+        let dir = tmpdir("spill");
+        let donor_kb = {
+            let h = rows(&Testbed::xsede(), 2, 47);
+            Arc::new(build(&h, &OfflineConfig::default(), &mut NativeAssign).unwrap())
+        };
+        let key = ShardKey::new(TestbedId::Didclab, SizeClass::Small);
+        let shard =
+            Shard::materialize(key, &dir, || (donor_kb, None), quick_config(1_000_000)).unwrap();
+        let native = rows(&Testbed::didclab(), 1, 48);
+        let offered = native.len() as u64;
+        for row in native {
+            assert!(shard.offer(row));
+        }
+        shard.shutdown();
+        // Every offered row reached the partitions (the eviction spill).
+        assert_eq!(shard.stats.rows_flushed.load(Ordering::Relaxed), offered);
+        assert_eq!(LogStore::open(&dir).unwrap().read_all().unwrap().len() as u64, offered);
+        // Post-shutdown offers never block; they drop and count.
+        let dropped_before = shard.stats.rows_dropped.load(Ordering::Relaxed);
+        assert!(!shard.offer(crate::logs::record::tests::sample_log()));
+        assert_eq!(shard.stats.rows_dropped.load(Ordering::Relaxed), dropped_before + 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

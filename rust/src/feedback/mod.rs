@@ -79,6 +79,26 @@ impl FeedbackStats {
         }
     }
 
+    /// Block until every row offered so far has settled — flushed or
+    /// lost to a failed append; offer-path drops never entered the
+    /// queue — or the timeout passes. For tests and deterministic
+    /// experiments (the service and each fabric shard expose it).
+    pub fn flush_barrier(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let enqueued = self.rows_enqueued.load(Ordering::Acquire);
+            let settled = self.rows_flushed.load(Ordering::Acquire)
+                + self.rows_flush_failed.load(Ordering::Acquire);
+            if settled >= enqueued {
+                return true;
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
     /// One-paragraph service block for the metrics table.
     pub fn render(&self) -> String {
         let refreshes = self.refreshes.load(Ordering::Relaxed);
@@ -202,21 +222,7 @@ impl FeedbackService {
     /// Block until every row offered so far is flushed or dropped (or
     /// the timeout passes). For tests and deterministic experiments.
     pub fn flush_barrier(&self, timeout: Duration) -> bool {
-        let deadline = Instant::now() + timeout;
-        loop {
-            let enqueued = self.stats.rows_enqueued.load(Ordering::Acquire);
-            // Every enqueued row ends up either flushed or lost to a
-            // failed append; offer-path drops never entered the queue.
-            let settled = self.stats.rows_flushed.load(Ordering::Acquire)
-                + self.stats.rows_flush_failed.load(Ordering::Acquire);
-            if settled >= enqueued {
-                return true;
-            }
-            if Instant::now() >= deadline {
-                return false;
-            }
-            std::thread::sleep(Duration::from_millis(2));
-        }
+        self.stats.flush_barrier(timeout)
     }
 
     /// Stop the refresher, drain the ingest queue, and join both

@@ -141,6 +141,33 @@ mod tests {
     }
 
     #[test]
+    fn drift_with_zero_completed_transfers_never_fires() {
+        // The online monitor can report re-tunes for transfers whose
+        // rows were all dropped at the queue: with zero completed
+        // (flushed) rows a refresh would be a no-op, so even a huge
+        // drift signal must not fire.
+        let p = policy();
+        assert_eq!(p.decide(0, Duration::from_secs(2), 10), None);
+        assert_eq!(p.decide(0, Duration::from_secs(2), u64::MAX), None);
+        // One flushed row is enough for drift to matter again.
+        assert_eq!(p.decide(1, Duration::from_secs(2), 10), Some(RefreshReason::Drift));
+    }
+
+    #[test]
+    fn period_trigger_fires_exactly_at_the_boundary() {
+        let p = policy(); // max_interval = 60 s
+        let boundary = Duration::from_secs(60);
+        assert_eq!(p.decide(1, boundary, 0), Some(RefreshReason::WallClock));
+        assert_eq!(p.decide(1, boundary - Duration::from_nanos(1), 0), None);
+        // The cooldown boundary is inclusive the same way.
+        assert_eq!(
+            p.decide(1_000, p.min_interval, 0),
+            Some(RefreshReason::RowThreshold)
+        );
+        assert_eq!(p.decide(1_000, p.min_interval - Duration::from_nanos(1), 0), None);
+    }
+
+    #[test]
     fn zero_thresholds_disable_signals() {
         let p = RefreshPolicy {
             min_new_rows: 0,

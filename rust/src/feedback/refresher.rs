@@ -59,7 +59,26 @@ impl RefreshEngine {
             // the entire history the initial KB was built from.
             cursor.insert(day, store.row_count(day)?);
         }
-        Ok(RefreshEngine {
+        Ok(RefreshEngine::with_cursor(slot, store, stats, policy, cursor))
+    }
+
+    /// An engine whose consumption cursor is exactly `cursor` — the
+    /// rows the caller has already folded into the KB published in
+    /// `slot`. Signal baselines start at the stats' *current* values,
+    /// so only activity after this point arms the policy. The fabric
+    /// uses this when a shard's native fit has just consumed a known
+    /// set of rows (counting the store here instead would race the
+    /// shard's still-running flusher).
+    pub(crate) fn with_cursor(
+        slot: Arc<SnapshotSlot>,
+        store: Arc<LogStore>,
+        stats: Arc<FeedbackStats>,
+        policy: RefreshPolicy,
+        cursor: BTreeMap<u64, usize>,
+    ) -> RefreshEngine {
+        let rows_at_last = stats.rows_flushed.load(Ordering::Acquire);
+        let drift_at_last = stats.drift_events.load(Ordering::Acquire);
+        RefreshEngine {
             slot,
             store,
             stats,
@@ -67,10 +86,10 @@ impl RefreshEngine {
             state: Mutex::new(EngineState {
                 cursor,
                 last_refresh: Instant::now(),
-                rows_at_last: 0,
-                drift_at_last: 0,
+                rows_at_last,
+                drift_at_last,
             }),
-        })
+        }
     }
 
     /// One policy evaluation; refreshes when a signal fires. Returns the
@@ -253,6 +272,36 @@ mod tests {
         // A second refresh with nothing new is again a no-op.
         assert_eq!(eng.refresh_now().unwrap(), None);
         assert_eq!(slot.generation(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dropped_rows_do_not_count_toward_the_row_volume_trigger() {
+        let dir = tmpdir("dropped");
+        let policy = RefreshPolicy {
+            min_new_rows: 10,
+            max_interval: Duration::ZERO,
+            drift_threshold: 0,
+            min_interval: Duration::ZERO,
+        };
+        let (eng, store, stats, slot) = engine(&dir, policy);
+        // A burst overwhelms the queue: many rows dropped at offer,
+        // few flushed. Only *flushed* rows reach the store, so only
+        // they may arm the volume trigger — dropped rows never became
+        // knowledge.
+        let fresh = history(1, 3, 74);
+        store.append(&fresh[..5]).unwrap();
+        stats.rows_flushed.store(5, Ordering::Release);
+        stats.rows_dropped.store(10_000, Ordering::Release);
+        assert_eq!(eng.tick().unwrap(), None, "drops alone must not fire the refresh");
+        assert_eq!(slot.generation(), 0);
+        // Once enough rows actually flush, the trigger arms as usual.
+        store.append(&fresh[5..15]).unwrap();
+        stats.rows_flushed.store(15, Ordering::Release);
+        assert_eq!(
+            eng.tick().unwrap(),
+            Some((1, RefreshReason::RowThreshold))
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

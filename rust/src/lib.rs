@@ -40,8 +40,22 @@
 //!   wall-clock period, and the drift-rate signal from the online
 //!   monitor's mid-transfer re-tunes.
 //!
+//! ## The sharded knowledge fabric (`crate::fabric`)
+//!
+//! One global knowledge base cannot scale the loop to many endpoint
+//! pairs under mixed traffic. The [`fabric`] subsystem shards it by
+//! (network × file-size class): a [`fabric::ShardRouter`] resolves each
+//! request to its own shard — lazily materialized, LRU-capped with
+//! spill to per-shard log partitions — and each shard runs the feedback
+//! loop privately (own ingest queue, own refresh policy, own
+//! hot-swappable snapshot slot). A brand-new shard cold-starts by
+//! borrowing the nearest existing shard's KB (cluster-centroid distance
+//! over `offline::features`), flagged `borrowed` until enough native
+//! rows accrue to fit its own surfaces.
+//!
 //! See `DESIGN.md` (repo root) for the layering diagram, the feedback
-//! dataflow, and the experiment index.
+//! dataflow, the fabric's routing diagram and shard lifecycle, and the
+//! experiment index.
 
 pub mod logs;
 pub mod math;
@@ -51,6 +65,7 @@ pub mod runtime;
 pub mod baselines;
 pub mod coordinator;
 pub mod experiments;
+pub mod fabric;
 pub mod feedback;
 pub mod sim;
 pub mod util;

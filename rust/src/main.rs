@@ -6,14 +6,14 @@
 //!   offline    --logs DIR --out KB.json [--backend native|pjrt|auto]
 //!   transfer   --testbed T --files N --avg-mb M [--optimizer O]
 //!              [--kb KB.json] [--load L] [--seed S]
-//!   serve      [--requests N] [--workers W] [--optimizer O]
-//!   experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|all [--quick|--full]
+//!   serve      [--requests N] [--workers W] [--optimizer O] [--fabric]
+//!   experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|all [--quick|--full]
 //!   selftest                     quick end-to-end sanity run
 
 use anyhow::{bail, Context, Result};
 use dtopt::coordinator::{Coordinator, CoordinatorConfig, OptimizerKind, TransferRequest};
 use dtopt::experiments::common::{default_backend, ExpConfig, World};
-use dtopt::experiments::{fig12, fig3, fig5, fig6, fig7, live};
+use dtopt::experiments::{fig12, fig3, fig5, fig6, fig7, fleet, live};
 use dtopt::logs::generate::{generate, GenConfig};
 use dtopt::logs::store::LogStore;
 use dtopt::offline::pipeline::{build, OfflineConfig};
@@ -121,8 +121,8 @@ fn print_help() {
          gen-logs --testbed T --days N --out DIR [--rate R] [--seed S]\n  \
          offline --logs DIR --out KB.json [--backend native|pjrt|auto]\n  \
          transfer --testbed T --files N --avg-mb M [--optimizer O] [--kb F] [--load L]\n  \
-         serve [--requests N] [--workers W] [--optimizer O]\n  \
-         experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|all [--quick|--full]\n  \
+         serve [--requests N] [--workers W] [--optimizer O] [--fabric]\n  \
+         experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|all [--quick|--full]\n  \
          selftest"
     );
 }
@@ -256,7 +256,45 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
     };
     let mut backend = default_backend();
     let world = World::prepare(ExpConfig::quick(), &mut backend);
-    let coord = world.coordinator(workers);
+    // --fabric serves through the sharded knowledge fabric (per-network
+    // shards cold-started from the global KB) instead of one global
+    // snapshot slot; the metrics block then includes the shard table.
+    let fabric = if opts.has("fabric") {
+        let dir = std::env::temp_dir().join(format!("dtopt_serve_fabric_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        Some((
+            Arc::new(dtopt::fabric::ShardRouter::open(
+                &dir,
+                world.kb.clone(),
+                dtopt::fabric::FabricConfig::default(),
+            )?),
+            dir,
+        ))
+    } else {
+        None
+    };
+    // The fabric's lifecycle driver: sweeps every shard's refresh
+    // policy in the background while requests are served, so borrowed
+    // shards can fit natively mid-run (the fabric counterpart of the
+    // feedback service's background refresher).
+    let pollster = fabric.as_ref().map(|(router, _)| {
+        dtopt::fabric::FabricPollster::spawn(
+            router.clone(),
+            std::time::Duration::from_millis(50),
+        )
+    });
+    let coord = match &fabric {
+        Some((router, _)) => Coordinator::with_fabric(
+            router.clone(),
+            world.rows.clone(),
+            CoordinatorConfig {
+                workers,
+                default_optimizer: OptimizerKind::Asm,
+                seed: world.config.seed,
+            },
+        ),
+        None => world.coordinator(workers),
+    };
     let mut rng = Rng::new(world.config.seed);
     let requests: Vec<TransferRequest> = (0..n)
         .map(|i| {
@@ -283,20 +321,38 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         workers,
         responses.len() as f64 / wall.as_secs_f64()
     );
+    if let Some((router, _)) = &fabric {
+        // Fold the run's completed transfers in before rendering, so
+        // the shard table reflects what the traffic just taught.
+        let _ = router.flush_all(std::time::Duration::from_secs(10));
+        let _ = router.tick_all();
+    }
     print!("{}", coord.metrics.render());
     coord.shutdown();
+    if let Some(pollster) = pollster {
+        pollster.stop();
+    }
+    if let Some((router, dir)) = fabric {
+        router.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
     Ok(())
 }
 
+/// Every experiment the CLI can regenerate (`all` runs them in order).
+const EXPERIMENT_NAMES: [&str; 9] =
+    ["fig1", "fig2", "fig3a", "fig3b", "fig5", "fig6", "fig7", "live", "fleet"];
+
 fn cmd_experiment(opts: &Opts) -> Result<()> {
-    let which = opts
-        .positional
-        .first()
-        .map(|s| s.as_str())
-        .context("experiment name required: fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|all")?;
+    let Some(which) = opts.positional.first().map(|s| s.as_str()) else {
+        bail!(
+            "experiment name required; available: {}|all",
+            EXPERIMENT_NAMES.join("|")
+        );
+    };
     let config = if opts.has("full") { ExpConfig::full() } else { ExpConfig::quick() };
     let reps = if opts.has("full") { 4 } else { 2 };
-    let needs_world = matches!(which, "fig5" | "fig6" | "fig7" | "live" | "all");
+    let needs_world = matches!(which, "fig5" | "fig6" | "fig7" | "live" | "fleet" | "all");
     let world = if needs_world {
         let mut backend = default_backend();
         eprintln!("preparing world ({} backend)...", backend.name());
@@ -351,12 +407,27 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
                     println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
                 }
             }
-            other => bail!("unknown experiment '{other}'"),
+            "fleet" => {
+                let eval_days = if opts.has("full") { 8 } else { 3 };
+                let dir = std::env::temp_dir()
+                    .join(format!("dtopt_fleet_exp_{}", std::process::id()));
+                let _ = std::fs::remove_dir_all(&dir);
+                let r = fleet::run(world.unwrap(), eval_days, &dir)?;
+                let _ = std::fs::remove_dir_all(&dir);
+                print!("{}", fleet::render(&r));
+                for (desc, ok) in fleet::headline_checks(&r) {
+                    println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
+                }
+            }
+            other => bail!(
+                "unknown experiment '{other}'; available: {}|all",
+                EXPERIMENT_NAMES.join("|")
+            ),
         }
         Ok(())
     };
     if which == "all" {
-        for name in ["fig1", "fig2", "fig3a", "fig3b", "fig5", "fig6", "fig7", "live"] {
+        for name in EXPERIMENT_NAMES {
             println!("==================== {name} ====================");
             run_one(name, world.as_ref())?;
         }

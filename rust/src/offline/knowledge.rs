@@ -196,6 +196,26 @@ impl KnowledgeBase {
         Some(&self.clusters[idx])
     }
 
+    /// Squared distance from a raw feature vector to the nearest
+    /// cluster centroid, in this KB's normalized feature space — the
+    /// quantity `query` minimizes (infinite for an empty KB). The
+    /// knowledge fabric ranks donor candidates with this when a
+    /// cold-starting shard borrows: the KB whose clusters sit closest
+    /// to the new shard's canonical request explains it best.
+    pub fn centroid_distance(&self, raw: &[f64; FEATURE_DIM]) -> f64 {
+        let feats = self.normalizer.apply(raw);
+        let mut best = f64::INFINITY;
+        for cluster in &self.clusters {
+            let mut d = 0.0;
+            for dim in 0..FEATURE_DIM.min(cluster.centroid.len()) {
+                let delta = feats[dim] - cluster.centroid[dim];
+                d += delta * delta;
+            }
+            best = best.min(d);
+        }
+        best
+    }
+
     /// Cluster index for a log row (used by the additive update path).
     pub fn assign_row(&self, row: &TransferLog) -> usize {
         let feats = self.normalizer.features(row);

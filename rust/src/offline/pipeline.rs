@@ -205,6 +205,58 @@ mod tests {
     }
 
     #[test]
+    fn centroid_distance_ranks_the_matching_network_first() {
+        // Two single-network KBs: the donor-selection metric must place
+        // an xsede-shaped request nearer the xsede KB's clusters than
+        // the didclab KB's (and vice versa) — this is what cold-start
+        // borrowing ranks donors by.
+        let kb_x = build(
+            &generate(
+                &Testbed::xsede(),
+                &GenConfig { days: 4, arrivals_per_hour: 25.0, start_day: 0, seed: 23 },
+            ),
+            &OfflineConfig::default(),
+            &mut NativeAssign,
+        )
+        .unwrap();
+        let kb_d = build(
+            &generate(
+                &Testbed::didclab(),
+                &GenConfig { days: 4, arrivals_per_hour: 25.0, start_day: 0, seed: 29 },
+            ),
+            &OfflineConfig::default(),
+            &mut NativeAssign,
+        )
+        .unwrap();
+        let xsede_req = RequestInfo {
+            rtt_ms: 40.0,
+            bandwidth_mbps: 10_000.0,
+            tcp_buffer_mb: 48.0,
+            disk_mbps: 1_200.0,
+            avg_file_mb: 100.0,
+            num_files: 100,
+        };
+        let lan_req = RequestInfo {
+            rtt_ms: 0.2,
+            bandwidth_mbps: 1_000.0,
+            tcp_buffer_mb: 10.0,
+            disk_mbps: 90.0,
+            avg_file_mb: 100.0,
+            num_files: 100,
+        };
+        assert!(
+            kb_x.centroid_distance(&xsede_req.raw_features())
+                < kb_d.centroid_distance(&xsede_req.raw_features()),
+            "xsede request must sit nearer the xsede KB"
+        );
+        assert!(
+            kb_d.centroid_distance(&lan_req.raw_features())
+                < kb_x.centroid_distance(&lan_req.raw_features()),
+            "didclab request must sit nearer the didclab KB"
+        );
+    }
+
+    #[test]
     fn additive_update_equivalent_to_full_rebuild_stats() {
         let all = history(6, 0, 17);
         let (old, new): (Vec<_>, Vec<_>) =

@@ -2,7 +2,7 @@
 //! runs at quick scale and satisfies the paper's qualitative claims.
 
 use dtopt::experiments::common::{ExpConfig, World};
-use dtopt::experiments::{fig12, fig3, fig5, fig6, fig7};
+use dtopt::experiments::{fig12, fig3, fig5, fig6, fig7, fleet};
 use dtopt::runtime::Backend;
 
 fn quick_world() -> World {
@@ -45,6 +45,28 @@ fn fig7_staleness_decay() {
     assert_eq!(result.len(), 2);
     for (desc, ok) in fig7::headline_checks(&result) {
         assert!(ok, "fig7 check failed: {desc}\n{}", fig7::render(&result));
+    }
+}
+
+#[test]
+fn fleet_fabric_matches_single_global_kb() {
+    let mut backend = Backend::Native;
+    // More eval requests than the shared quick world: the per-network
+    // accuracy comparison needs a few samples per day to be stable.
+    let world = World::prepare(
+        ExpConfig { history_days: 5, arrivals_per_hour: 20.0, requests_per_cell: 6, seed: 0xE0 },
+        &mut backend,
+    );
+    let dir = std::env::temp_dir().join(format!("dtopt_fleet_smoke_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let result = fleet::run(&world, 3, &dir).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    let rendered = fleet::render(&result);
+    assert_eq!(result.nets.len(), 3);
+    assert!(rendered.contains("xsede"), "{rendered}");
+    assert!(rendered.contains("fabric:"), "{rendered}");
+    for (desc, ok) in fleet::headline_checks(&result) {
+        assert!(ok, "fleet check failed: {desc}\n{rendered}");
     }
 }
 

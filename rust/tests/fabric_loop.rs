@@ -1,0 +1,169 @@
+//! Integration tests for the sharded knowledge fabric: shard-aware
+//! request routing through the coordinator, and the full cold-start
+//! path — a brand-new shard serves borrowed knowledge, accrues native
+//! rows from its own completed transfers, and flips to its own fitted
+//! KB, all observable through `TransferResponse::{shard_key, borrowed,
+//! kb_generation}`.
+
+use dtopt::coordinator::{Coordinator, CoordinatorConfig, OptimizerKind, TransferRequest};
+use dtopt::fabric::{FabricConfig, ShardConfig, ShardKey, ShardRouter};
+use dtopt::feedback::{IngestConfig, RefreshPolicy};
+use dtopt::logs::generate::{generate, GenConfig};
+use dtopt::offline::kmeans::NativeAssign;
+use dtopt::offline::knowledge::KnowledgeBase;
+use dtopt::offline::pipeline::{build, OfflineConfig};
+use dtopt::sim::dataset::{Dataset, SizeClass};
+use dtopt::sim::testbed::{Testbed, TestbedId};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dtopt_fabric_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Fallback KB mined from xsede history only — so a didclab shard that
+/// borrows it is visibly serving foreign knowledge until its own fit.
+fn xsede_kb(seed: u64) -> (Arc<KnowledgeBase>, Vec<dtopt::logs::record::TransferLog>) {
+    let rows = generate(
+        &Testbed::xsede(),
+        &GenConfig { days: 4, arrivals_per_hour: 20.0, start_day: 0, seed },
+    );
+    let kb = Arc::new(build(&rows, &OfflineConfig::default(), &mut NativeAssign).unwrap());
+    (kb, rows)
+}
+
+fn quick_fabric(dir: &PathBuf, fallback: Arc<KnowledgeBase>, min_native_rows: u64) -> Arc<ShardRouter> {
+    Arc::new(
+        ShardRouter::open(
+            dir,
+            fallback,
+            FabricConfig {
+                shard: ShardConfig {
+                    ingest: IngestConfig {
+                        capacity: 256,
+                        flush_batch: 4,
+                        flush_interval: Duration::from_millis(2),
+                    },
+                    policy: RefreshPolicy {
+                        min_new_rows: 1,
+                        min_interval: Duration::ZERO,
+                        ..Default::default()
+                    },
+                    min_native_rows,
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    )
+}
+
+/// A didclab medium-class request; dataset shape varies with the id so
+/// the shard's native fit sees non-degenerate features.
+fn didclab_request(id: u64) -> TransferRequest {
+    TransferRequest {
+        id,
+        testbed: TestbedId::Didclab,
+        dataset: Dataset::new(20 + id, 20.0 + (id % 24) as f64),
+        t_submit: 5.0 * 86_400.0 + (id as f64 % 24.0) * 3_600.0,
+        state_override: None,
+        optimizer: Some(OptimizerKind::Asm),
+        seed: 9_000 + id,
+    }
+}
+
+/// The acceptance path: borrowed KB serves → native rows accrue →
+/// shard flips to its own fitted KB, observable per response.
+#[test]
+fn cold_start_shard_flips_from_borrowed_to_native() {
+    let dir = tmpdir("coldstart");
+    let (kb, history) = xsede_kb(901);
+    let fabric = quick_fabric(&dir, kb, 20);
+    let coord = Coordinator::with_fabric(
+        fabric.clone(),
+        Arc::new(history),
+        CoordinatorConfig { workers: 2, ..Default::default() },
+    );
+    let key = ShardKey::new(TestbedId::Didclab, SizeClass::Medium);
+
+    // Wave 1: the shard cold-starts by borrowing the fallback KB.
+    let wave1 = coord.run_batch((1..=24).map(didclab_request).collect());
+    for r in &wave1 {
+        assert_eq!(r.shard_key, Some(key));
+        assert!(r.borrowed, "no native knowledge exists yet");
+        assert_eq!(r.kb_generation, 0);
+    }
+    // Wave 1's completed transfers are this shard's first native rows.
+    assert!(fabric.flush_all(Duration::from_secs(30)), "shard ingest queue drained");
+    let fired = fabric.tick_all();
+    assert_eq!(fired, vec![(key, 1, "native-fit")]);
+
+    // Wave 2: served from the shard's own fitted KB.
+    let wave2 = coord.run_batch((25..=32).map(didclab_request).collect());
+    for r in &wave2 {
+        assert_eq!(r.shard_key, Some(key));
+        assert!(!r.borrowed, "shard fit its own KB");
+        assert_eq!(r.kb_generation, 1);
+    }
+
+    // And from here the per-shard policy keeps the loop turning: wave
+    // 2's rows additively refresh the native KB into generation 2.
+    assert!(fabric.flush_all(Duration::from_secs(30)));
+    assert_eq!(fabric.tick_all(), vec![(key, 2, "row-threshold")]);
+    let wave3 = coord.run_batch(vec![didclab_request(40)]);
+    assert_eq!(wave3[0].kb_generation, 2);
+    assert!(!wave3[0].borrowed);
+
+    assert!(fabric.flush_all(Duration::from_secs(30)));
+    let shard = fabric.shard(&key).unwrap();
+    assert_eq!(shard.native_rows(), 33, "every completed transfer became a native row");
+    coord.shutdown();
+    fabric.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Mixed traffic fans out to distinct shards, each tagged in its
+/// responses; the fabric materializes exactly the keys that saw
+/// traffic.
+#[test]
+fn mixed_traffic_routes_to_per_network_shards() {
+    let dir = tmpdir("routing");
+    let (kb, history) = xsede_kb(902);
+    let fabric = quick_fabric(&dir, kb, 1_000_000);
+    let coord = Coordinator::with_fabric(
+        fabric.clone(),
+        Arc::new(history),
+        CoordinatorConfig { workers: 3, ..Default::default() },
+    );
+    let cases = [
+        (TestbedId::Xsede, Dataset::new(50, 200.0), SizeClass::Large),
+        (TestbedId::Didclab, Dataset::new(200, 2.0), SizeClass::Small),
+        (TestbedId::DidclabToXsede, Dataset::new(80, 30.0), SizeClass::Medium),
+    ];
+    let requests: Vec<TransferRequest> = cases
+        .iter()
+        .enumerate()
+        .map(|(i, (tb, dataset, _))| TransferRequest {
+            id: i as u64 + 1,
+            testbed: *tb,
+            dataset: *dataset,
+            t_submit: 5.5 * 86_400.0,
+            state_override: None,
+            optimizer: Some(OptimizerKind::Asm),
+            seed: 7_700 + i as u64,
+        })
+        .collect();
+    let responses = coord.run_batch(requests);
+    for (r, (tb, _, class)) in responses.iter().zip(&cases) {
+        assert_eq!(r.shard_key, Some(ShardKey::new(*tb, *class)));
+        assert!(r.borrowed);
+    }
+    let live: Vec<ShardKey> = fabric.live_shards().iter().map(|s| s.key).collect();
+    assert_eq!(live.len(), 3, "exactly the routed keys materialized: {live:?}");
+    coord.shutdown();
+    fabric.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
