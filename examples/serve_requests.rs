@@ -54,10 +54,19 @@ fn main() -> anyhow::Result<()> {
             background: true,
         },
     )?;
+    // ASM requests share the probe plane: concurrent requests for the
+    // same network slice coalesce their sampling ladders and reuse the
+    // decaying network-state estimate.
+    let plane = std::sync::Arc::new(dtopt::probe::ProbePlane::default());
     let coord = Coordinator::with_feedback(
         &service,
         world.rows.clone(),
-        CoordinatorConfig { workers: 4, default_optimizer: OptimizerKind::Asm, seed: world.config.seed },
+        CoordinatorConfig {
+            workers: 4,
+            default_optimizer: OptimizerKind::Asm,
+            seed: world.config.seed,
+            probe: Some(plane),
+        },
     );
 
     // A mixed stream: 2/3 default (ASM), 1/3 explicit baseline picks —

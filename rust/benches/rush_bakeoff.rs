@@ -1,0 +1,27 @@
+//! Bench/regenerator for the rush-hour bake-off: the shared probe
+//! plane (single-flight coalesced sampling, decaying network-state
+//! estimates, per-shard probe budgets) versus independent per-request
+//! sampling under a synchronized burst of concurrent requests on one
+//! network. Companion to `fleet_bakeoff.rs` (which scales the *storage*
+//! side of the loop the same way this scales the *probing* side).
+
+use dtopt::experiments::common::{config_from_args, default_backend, World};
+use dtopt::experiments::rush;
+
+fn main() {
+    let config = config_from_args();
+    let full = std::env::var("DTOPT_FULL").is_ok();
+    let mut backend = default_backend();
+    eprintln!("rush_bakeoff: preparing world ({} backend)...", backend.name());
+    let world = World::prepare(config, &mut backend);
+    let (burst, workers) = if full { (64, 8) } else { (24, 6) };
+    let start = std::time::Instant::now();
+    let result = rush::run(&world, burst, workers);
+    let elapsed = start.elapsed();
+    println!("== Rush bake-off: shared probe plane vs independent sampling ==");
+    print!("{}", rush::render(&result));
+    for (desc, ok) in rush::headline_checks(&result) {
+        println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
+    }
+    println!("\ntiming: burst x2 {elapsed:.2?}");
+}

@@ -2,6 +2,7 @@
 
 use crate::baselines::RunReport;
 use crate::fabric::ShardKey;
+use crate::probe::ProbeMode;
 use crate::sim::dataset::Dataset;
 use crate::sim::testbed::TestbedId;
 use crate::sim::transfer::NetState;
@@ -96,6 +97,10 @@ pub struct TransferResponse {
     /// donor's (or the fallback) knowledge base until enough native
     /// rows accrue for its own fit. Always `false` without a fabric.
     pub borrowed: bool,
+    /// How the shared probe plane served this request (`led`,
+    /// `piggybacked`, or `estimate-served`). `None` when no probe plane
+    /// is attached or the optimizer was not ASM.
+    pub probe_mode: Option<ProbeMode>,
 }
 
 #[cfg(test)]

@@ -1,10 +1,14 @@
 //! Coordinator metrics: per-optimizer aggregates over served requests
 //! with request-latency percentiles, plus the knowledge-service block
 //! (snapshot generation, refresh latency, ingest queue depth, dropped
-//! rows) or — on a fabric-backed coordinator — the per-shard table.
+//! rows), the per-shard table on a fabric-backed coordinator — the
+//! pooled request-latency line renders in *both* modes — and the probe
+//! plane block (coalesced followers, estimate hit rate, probe-byte
+//! overhead) when a plane is attached.
 
 use crate::fabric::ShardRouter;
 use crate::feedback::FeedbackStats;
+use crate::probe::ProbePlane;
 use crate::util::stats::{mean, quantile};
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -43,6 +47,7 @@ pub struct Metrics {
     inner: Mutex<BTreeMap<&'static str, OptimizerStats>>,
     feedback: Mutex<Option<Arc<FeedbackStats>>>,
     fabric: Mutex<Option<Arc<ShardRouter>>>,
+    probe: Mutex<Option<Arc<ProbePlane>>>,
 }
 
 impl Metrics {
@@ -69,6 +74,17 @@ impl Metrics {
     /// The attached fabric, if any.
     pub fn fabric(&self) -> Option<Arc<ShardRouter>> {
         self.fabric.lock().unwrap().clone()
+    }
+
+    /// Attach the shared probe plane so `render` includes its block
+    /// (admission modes, estimate reuse, probe-byte overhead, budgets).
+    pub fn attach_probe(&self, plane: Arc<ProbePlane>) {
+        *self.probe.lock().unwrap() = Some(plane);
+    }
+
+    /// The attached probe plane, if any.
+    pub fn probe(&self) -> Option<Arc<ProbePlane>> {
+        self.probe.lock().unwrap().clone()
     }
 
     pub fn record(
@@ -135,6 +151,10 @@ impl Metrics {
             out.push('\n');
             out.push_str(&fabric.render());
         }
+        if let Some(plane) = self.probe() {
+            out.push('\n');
+            out.push_str(&plane.render());
+        }
         out
     }
 }
@@ -189,6 +209,47 @@ mod tests {
         let table = m.render();
         assert!(table.contains("knowledge service: generation 3"));
         assert!(table.contains("7 dropped at offer"));
+    }
+
+    #[test]
+    fn render_includes_attached_probe_block() {
+        let m = Metrics::new();
+        m.record("ASM", 1000.0, 500.0, 4.0, 2, 10_000);
+        assert!(!m.render().contains("probe plane"));
+        m.attach_probe(Arc::new(ProbePlane::default()));
+        let table = m.render();
+        assert!(table.contains("probe plane:"), "{table}");
+        assert!(table.contains("estimate reuse"), "{table}");
+    }
+
+    #[test]
+    fn fabric_mode_still_renders_pooled_latency_line() {
+        use crate::fabric::{FabricConfig, ShardRouter};
+        use crate::logs::generate::{generate, GenConfig};
+        use crate::offline::kmeans::NativeAssign;
+        use crate::offline::pipeline::{build, OfflineConfig};
+        use crate::sim::testbed::Testbed;
+
+        let rows = generate(
+            &Testbed::xsede(),
+            &GenConfig { days: 2, arrivals_per_hour: 10.0, start_day: 0, seed: 97 },
+        );
+        let kb = Arc::new(build(&rows, &OfflineConfig::default(), &mut NativeAssign).unwrap());
+        let dir = std::env::temp_dir()
+            .join(format!("dtopt_metrics_fabric_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let fabric =
+            Arc::new(ShardRouter::open(&dir, kb, FabricConfig::default()).unwrap());
+        let m = Metrics::new();
+        m.record("ASM", 1000.0, 500.0, 4.0, 2, 10_000);
+        m.attach_fabric(fabric.clone());
+        // The per-shard table must join — not replace — the pooled
+        // request-latency line.
+        let table = m.render();
+        assert!(table.contains("request latency: p50"), "{table}");
+        assert!(table.contains("fabric:"), "{table}");
+        fabric.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -22,9 +22,11 @@ use crate::baselines::sp::StaticParams;
 use crate::baselines::{Optimizer, RunReport, TransferEnv};
 use crate::fabric::{Shard, ShardKey, ShardRouter};
 use crate::feedback::{FeedbackService, FeedbackStats, IngestQueue, SnapshotSlot};
+use crate::feedback::KbSnapshot;
 use crate::logs::record::TransferLog;
 use crate::offline::knowledge::KnowledgeBase;
 use crate::online::asm::AdaptiveSampling;
+use crate::probe::{Admission, ProbeMode, ProbePlane};
 use crate::sim::params::BETA;
 use crate::sim::testbed::Testbed;
 use crate::sim::traffic::Contention;
@@ -43,11 +45,21 @@ pub struct CoordinatorConfig {
     /// Default optimizer when a request doesn't specify one.
     pub default_optimizer: OptimizerKind,
     pub seed: u64,
+    /// Shared probe plane: ASM requests coalesce their sampling ladders
+    /// per shard, reuse decaying network-state estimates, and respect
+    /// per-shard probe budgets. `None` = every request samples for
+    /// itself (the pre-plane behavior).
+    pub probe: Option<Arc<ProbePlane>>,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { workers: 4, default_optimizer: OptimizerKind::Asm, seed: 0xC0 }
+        CoordinatorConfig {
+            workers: 4,
+            default_optimizer: OptimizerKind::Asm,
+            seed: 0xC0,
+            probe: None,
+        }
     }
 }
 
@@ -80,6 +92,8 @@ struct Shared {
     /// the thin handle instead of re-running Normalizer::fit.
     harp: Arc<Harp>,
     metrics: Arc<Metrics>,
+    /// Shared probe plane for ASM requests (see `CoordinatorConfig`).
+    probe: Option<Arc<ProbePlane>>,
 }
 
 enum Job {
@@ -154,6 +168,9 @@ impl Coordinator {
             Knowledge::Global { .. } => {}
             Knowledge::Fabric(router) => metrics.attach_fabric(router.clone()),
         }
+        if let Some(plane) = &config.probe {
+            metrics.attach_probe(plane.clone());
+        }
         // Train the ANN (and fit HARP/SP) once, shared by every worker.
         let annot = Arc::new(AnnOt::train(&history, config.seed ^ 0xA22));
         let sp = Arc::new(StaticParams::mine(&history));
@@ -164,16 +181,17 @@ impl Coordinator {
             sp,
             harp,
             metrics: metrics.clone(),
+            probe: config.probe.clone(),
         });
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let mut workers = Vec::with_capacity(config.workers.max(1));
-        for widx in 0..config.workers.max(1) {
+        for _ in 0..config.workers.max(1) {
             let rx = rx.clone();
             let shared = shared.clone();
             let default_opt = config.default_optimizer;
             workers.push(std::thread::spawn(move || {
-                worker_loop(widx, rx, shared, default_opt);
+                worker_loop(rx, shared, default_opt);
             }));
         }
         Coordinator { tx, workers, metrics, next_id: AtomicU64::new(1), config }
@@ -215,12 +233,7 @@ impl Coordinator {
     }
 }
 
-fn worker_loop(
-    widx: usize,
-    rx: Arc<Mutex<Receiver<Job>>>,
-    shared: Arc<Shared>,
-    default_opt: OptimizerKind,
-) {
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, shared: Arc<Shared>, default_opt: OptimizerKind) {
     loop {
         let job = {
             let guard = rx.lock().unwrap();
@@ -228,7 +241,7 @@ fn worker_loop(
         };
         match job {
             Ok(Job::Run(request, reply)) => {
-                let response = serve_one(&shared, &request, default_opt, widx as u64);
+                let response = serve_one(&shared, &request, default_opt);
                 let _ = reply.send(response);
             }
             Ok(Job::Stop) | Err(_) => break,
@@ -244,7 +257,6 @@ fn serve_one(
     shared: &Shared,
     request: &TransferRequest,
     default_opt: OptimizerKind,
-    widx: u64,
 ) -> TransferResponse {
     // Pin one KB generation for the whole transfer: a refresh published
     // mid-request never mixes versions inside one decision. On the
@@ -268,18 +280,31 @@ fn serve_one(
             Contention::sample(&mut state_rng, testbed.path.link.bandwidth_mbps, load);
         NetState { external_load: load, contention }
     });
-    let mut env = TransferEnv::new(
-        testbed.clone(),
-        request.dataset,
-        state,
-        request.seed ^ widx.rotate_left(17),
-    );
+    // Seeded by the request alone — never by which worker picked the
+    // job — so identical request sets produce identical hidden-network
+    // draws across runs and coordinators (the experiment harnesses
+    // compare optimizers and knowledge sources on exactly that basis).
+    let mut env = TransferEnv::new(testbed.clone(), request.dataset, state, request.seed);
     let (_, optimal_mbps) = testbed.path.optimal(&request.dataset, &state, BETA);
 
     let kind = request.optimizer.unwrap_or(default_opt);
     let started = Instant::now();
+    let mut probe_mode: Option<ProbeMode> = None;
     let report = match kind {
-        OptimizerKind::Asm => AdaptiveSampling::new(&snapshot.kb).run(&mut env),
+        OptimizerKind::Asm => match &shared.probe {
+            Some(plane) => {
+                // Probe key: the serving shard when the fabric routed
+                // us, the request's natural shard otherwise — either
+                // way, concurrent requests for the same network slice
+                // share one sampling ladder and one estimate.
+                let key = shard_key
+                    .unwrap_or_else(|| ShardKey::of_request(request.testbed, &request.dataset));
+                let (report, mode) = run_asm_with_plane(plane, key, &snapshot, &mut env);
+                probe_mode = Some(mode);
+                report
+            }
+            None => AdaptiveSampling::new(&snapshot.kb).run(&mut env),
+        },
         OptimizerKind::Go => GlobusOnline.run(&mut env),
         OptimizerKind::Sp => (*shared.sp).clone().run(&mut env),
         OptimizerKind::Sc => SingleChunk::default().run(&mut env),
@@ -330,6 +355,56 @@ fn serve_one(
         kb_generation: snapshot.generation,
         shard_key,
         borrowed,
+        probe_mode,
+    }
+}
+
+/// Run one ASM request through the shared probe plane: admission
+/// decides whether this request leads the sampling ladder, piggybacks
+/// on a concurrent leader, or serves straight from the decayed
+/// estimate; afterwards the plane settles the probe budget and absorbs
+/// what the run learned.
+fn run_asm_with_plane(
+    plane: &ProbePlane,
+    key: ShardKey,
+    snapshot: &KbSnapshot,
+    env: &mut TransferEnv,
+) -> (RunReport, ProbeMode) {
+    let expected_mb = plane.expected_sample_mb(env.dataset.total_mb());
+    // Surface indices only mean something within one cluster's stack:
+    // estimate validity and piggybacking are both keyed on it.
+    let cluster_idx = snapshot.kb.query_idx(&env.request);
+    let generation = snapshot.generation;
+    let mut asm = AdaptiveSampling::new(&snapshot.kb);
+    asm.cluster_hint = cluster_idx; // don't repeat the centroid lookup
+    match plane.admit(key, cluster_idx, generation, expected_mb) {
+        Admission::Lead { guard, warm_start } => {
+            asm.start_surface = warm_start;
+            // Followers are released the moment the ladder converges —
+            // not when this whole transfer finishes. If the run never
+            // reaches the ladder (cold-start KB), the unfired hook drops
+            // with `asm` and its guard wakes followers via abort.
+            asm.on_converged = Some(Box::new(move |outcome| {
+                plane.lead_converged(key, cluster_idx, guard, outcome, generation);
+            }));
+            let report = asm.run(env);
+            plane.finish_led(key, cluster_idx, asm.outcome, &report, expected_mb, generation);
+            (report, ProbeMode::Led)
+        }
+        Admission::Piggyback(result) => {
+            asm.start_surface = Some(result.surface_idx);
+            asm.skip_sampling = true;
+            let report = asm.run(env);
+            plane.finish_passive(key, cluster_idx, asm.outcome, &report, generation);
+            (report, ProbeMode::Piggybacked)
+        }
+        Admission::Serve(surface_idx) => {
+            asm.start_surface = surface_idx;
+            asm.skip_sampling = true;
+            let report = asm.run(env);
+            plane.finish_passive(key, cluster_idx, asm.outcome, &report, generation);
+            (report, ProbeMode::EstimateServed)
+        }
     }
 }
 
@@ -475,13 +550,67 @@ mod tests {
             .expect("shard materialized");
         assert!(shard.flush_barrier(std::time::Duration::from_secs(30)));
         assert_eq!(shard.stats.rows_flushed.load(Ordering::Relaxed), 4);
-        // The metrics block renders the per-shard fabric table.
+        // The metrics block renders the per-shard fabric table AND the
+        // pooled request-latency line (fabric mode must not replace it).
         let table = coord.metrics.render();
         assert!(table.contains("xsede/large"), "{table}");
         assert!(table.contains("fabric:"), "{table}");
+        assert!(table.contains("request latency: p50"), "{table}");
         coord.shutdown();
         fabric.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn probe_plane_attributes_modes_and_coalesces_sampling() {
+        use crate::probe::{ProbeConfig, ProbePlane};
+
+        let tb = Testbed::xsede();
+        let rows =
+            generate(&tb, &GenConfig { days: 5, arrivals_per_hour: 25.0, start_day: 0, seed: 61 });
+        let kb = Arc::new(build(&rows, &OfflineConfig::default(), &mut NativeAssign).unwrap());
+        let plane = Arc::new(ProbePlane::new(ProbeConfig::default()));
+        let coord = Coordinator::new(
+            kb,
+            Arc::new(rows),
+            CoordinatorConfig { workers: 3, probe: Some(plane.clone()), ..Default::default() },
+        );
+        // A burst on one network slice: long enough transfers that the
+        // independent path would sample on every request.
+        let reqs: Vec<TransferRequest> = (1..=10)
+            .map(|i| TransferRequest {
+                id: i,
+                testbed: TestbedId::Xsede,
+                dataset: Dataset::new(400, 100.0),
+                t_submit: 3_600.0 * 9.0,
+                state_override: None,
+                optimizer: Some(OptimizerKind::Asm),
+                seed: 2_000 + i,
+            })
+            .collect();
+        let responses = coord.run_batch(reqs);
+        let led = responses
+            .iter()
+            .filter(|r| r.probe_mode == Some(crate::probe::ProbeMode::Led))
+            .count();
+        assert!(
+            responses.iter().all(|r| r.probe_mode.is_some()),
+            "every ASM response carries a probe_mode"
+        );
+        assert!(led >= 1, "someone must have led the sampling ladder");
+        // Requests admitted after the first leader finished reuse its
+        // knowledge instead of re-probing the same network.
+        assert!(led < responses.len(), "the burst must coalesce, not all lead");
+        let sampled: usize = responses.iter().map(|r| r.report.sample_transfers()).sum();
+        assert!(
+            sampled < responses.len(),
+            "{sampled} sampling transfers across {} coalesced requests",
+            responses.len()
+        );
+        let table = coord.metrics.render();
+        assert!(table.contains("probe plane:"), "{table}");
+        assert!(plane.stats.admissions() >= responses.len() as u64);
+        coord.shutdown();
     }
 
     #[test]

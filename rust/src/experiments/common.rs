@@ -69,7 +69,31 @@ impl World {
         Coordinator::new(
             self.kb.clone(),
             self.rows.clone(),
-            CoordinatorConfig { workers, default_optimizer: OptimizerKind::Asm, seed: self.config.seed },
+            CoordinatorConfig {
+                workers,
+                default_optimizer: OptimizerKind::Asm,
+                seed: self.config.seed,
+                probe: None,
+            },
+        )
+    }
+
+    /// A coordinator whose ASM requests share the given probe plane
+    /// (coalesced sampling, decaying estimates, probe budgets).
+    pub fn coordinator_with_probe(
+        &self,
+        workers: usize,
+        probe: Arc<crate::probe::ProbePlane>,
+    ) -> Coordinator {
+        Coordinator::new(
+            self.kb.clone(),
+            self.rows.clone(),
+            CoordinatorConfig {
+                workers,
+                default_optimizer: OptimizerKind::Asm,
+                seed: self.config.seed,
+                probe: Some(probe),
+            },
         )
     }
 }

@@ -59,10 +59,10 @@ pub fn run(world: &World) -> Fig6Result {
         for case in 0..cases {
             for tb in TestbedId::all() {
                 let mut env = test_env(world, case, tb);
-                let mut asm = AdaptiveSampling {
-                    kb: &world.kb,
-                    config: AsmConfig { max_samples: budget, ..Default::default() },
-                };
+                let mut asm = AdaptiveSampling::with_config(
+                    &world.kb,
+                    AsmConfig { max_samples: budget, ..Default::default() },
+                );
                 let report = asm.run(&mut env);
                 if let Some(a) = report_accuracy(&report) {
                     accs.push(a);

@@ -3,9 +3,12 @@
 //! (surfaces), Fig. 3 (confidence + model accuracy), Fig. 5 (the
 //! headline bake-off), Fig. 6 (convergence), Fig. 7 (staleness), plus
 //! the live closed-loop sweep (`live`) that upgrades Fig. 7 from batch
-//! refresh to the hot-swapping feedback service, and the multi-network
+//! refresh to the hot-swapping feedback service, the multi-network
 //! fleet bake-off (`fleet`): sharded knowledge fabric vs a single
-//! global KB under interleaved three-network traffic.
+//! global KB under interleaved three-network traffic, and the
+//! rush-hour bake-off (`rush`): the shared probe plane (coalesced
+//! sampling, decaying estimates, probe budgets) vs independent
+//! per-request sampling under a synchronized burst on one network.
 //! Table 1 is `sim::testbed::Testbed::table1()`.
 
 pub mod common;
@@ -16,3 +19,4 @@ pub mod fig6;
 pub mod fig7;
 pub mod fleet;
 pub mod live;
+pub mod rush;

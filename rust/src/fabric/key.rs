@@ -68,11 +68,7 @@ impl ShardKey {
     /// location `sim::dataset` samples around) — used to position a
     /// brand-new shard in feature space for cold-start borrowing.
     pub fn representative_avg_file_mb(&self) -> f64 {
-        match self.class {
-            SizeClass::Small => 2.0,
-            SizeClass::Medium => 24.0,
-            SizeClass::Large => 200.0,
-        }
+        self.class.location_mb()
     }
 }
 

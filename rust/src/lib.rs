@@ -53,9 +53,23 @@
 //! over `offline::features`), flagged `borrowed` until enough native
 //! rows accrue to fit its own surfaces.
 //!
+//! ## The shared probe plane (`crate::probe`)
+//!
+//! Real-time sampling is the expensive part the knowledge base exists
+//! to minimize — yet independent per-request sampling re-probes a
+//! network once per concurrent request. The [`probe`] subsystem makes
+//! the online probe a scarce shared resource per shard: a decaying
+//! network-state estimate (last converged surface + load intensity)
+//! short-circuits the ladder when fresh, single-flight coalescing lets
+//! one leader sample while concurrent followers piggyback, and a
+//! token-bucket probe budget caps the fraction of bytes spent sampling.
+//! The ASM gains a warm-start mode (begin bisection at the estimated
+//! surface; skip sampling entirely when confidence clears the
+//! threshold), and every response reports its `probe_mode`.
+//!
 //! See `DESIGN.md` (repo root) for the layering diagram, the feedback
-//! dataflow, the fabric's routing diagram and shard lifecycle, and the
-//! experiment index.
+//! dataflow, the fabric's routing diagram and shard lifecycle, the
+//! probe-plane dataflow, and the experiment index.
 
 pub mod logs;
 pub mod math;
@@ -67,5 +81,6 @@ pub mod coordinator;
 pub mod experiments;
 pub mod fabric;
 pub mod feedback;
+pub mod probe;
 pub mod sim;
 pub mod util;

@@ -7,13 +7,15 @@
 //!   transfer   --testbed T --files N --avg-mb M [--optimizer O]
 //!              [--kb KB.json] [--load L] [--seed S]
 //!   serve      [--requests N] [--workers W] [--optimizer O] [--fabric]
-//!   experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|all [--quick|--full]
+//!   experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|all
+//!              [--quick|--full]
 //!   selftest                     quick end-to-end sanity run
 
 use anyhow::{bail, Context, Result};
 use dtopt::coordinator::{Coordinator, CoordinatorConfig, OptimizerKind, TransferRequest};
 use dtopt::experiments::common::{default_backend, ExpConfig, World};
-use dtopt::experiments::{fig12, fig3, fig5, fig6, fig7, fleet, live};
+use dtopt::experiments::{fig12, fig3, fig5, fig6, fig7, fleet, live, rush};
+use dtopt::probe::ProbePlane;
 use dtopt::logs::generate::{generate, GenConfig};
 use dtopt::logs::store::LogStore;
 use dtopt::offline::pipeline::{build, OfflineConfig};
@@ -122,7 +124,7 @@ fn print_help() {
          offline --logs DIR --out KB.json [--backend native|pjrt|auto]\n  \
          transfer --testbed T --files N --avg-mb M [--optimizer O] [--kb F] [--load L]\n  \
          serve [--requests N] [--workers W] [--optimizer O] [--fabric]\n  \
-         experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|all [--quick|--full]\n  \
+         experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|all [--quick|--full]\n  \
          selftest"
     );
 }
@@ -207,7 +209,12 @@ fn cmd_transfer(opts: &Opts) -> Result<()> {
     let coord = Coordinator::new(
         Arc::new(kb),
         Arc::new(history),
-        CoordinatorConfig { workers: 1, default_optimizer: optimizer, seed },
+        CoordinatorConfig {
+            workers: 1,
+            default_optimizer: optimizer,
+            seed,
+            probe: None,
+        },
     );
     let mut rng = Rng::new(seed);
     let contention = Contention::sample(&mut rng, testbed.path.link.bandwidth_mbps, load);
@@ -248,6 +255,8 @@ fn cmd_transfer(opts: &Opts) -> Result<()> {
 }
 
 fn cmd_serve(opts: &Opts) -> Result<()> {
+    use std::time::Duration;
+
     let n = opts.get_u64("requests", 24)? as usize;
     let workers = opts.get_u64("workers", 4)? as usize;
     let optimizer = match opts.get("optimizer") {
@@ -256,20 +265,31 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
     };
     let mut backend = default_backend();
     let world = World::prepare(ExpConfig::quick(), &mut backend);
+    let scratch = std::env::temp_dir().join(format!("dtopt_serve_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&scratch);
+    // ASM requests share the probe plane in both modes: coalesced
+    // sampling ladders, decaying per-shard estimates, probe budgets.
+    let plane = Arc::new(ProbePlane::default());
     // --fabric serves through the sharded knowledge fabric (per-network
     // shards cold-started from the global KB) instead of one global
     // snapshot slot; the metrics block then includes the shard table.
+    // Without it, a global feedback service ingests completed transfers
+    // so the closed loop runs (and drains) in both modes.
     let fabric = if opts.has("fabric") {
-        let dir = std::env::temp_dir().join(format!("dtopt_serve_fabric_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        Some((
-            Arc::new(dtopt::fabric::ShardRouter::open(
-                &dir,
-                world.kb.clone(),
-                dtopt::fabric::FabricConfig::default(),
-            )?),
-            dir,
-        ))
+        Some(Arc::new(dtopt::fabric::ShardRouter::open(
+            &scratch.join("fabric"),
+            world.kb.clone(),
+            dtopt::fabric::FabricConfig::default(),
+        )?))
+    } else {
+        None
+    };
+    let service = if fabric.is_none() {
+        Some(dtopt::feedback::FeedbackService::start(
+            world.kb.clone(),
+            dtopt::logs::store::LogStore::open(scratch.join("logs"))?,
+            dtopt::feedback::FeedbackConfig::default(),
+        )?)
     } else {
         None
     };
@@ -277,23 +297,23 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
     // policy in the background while requests are served, so borrowed
     // shards can fit natively mid-run (the fabric counterpart of the
     // feedback service's background refresher).
-    let pollster = fabric.as_ref().map(|(router, _)| {
-        dtopt::fabric::FabricPollster::spawn(
-            router.clone(),
-            std::time::Duration::from_millis(50),
-        )
+    let pollster = fabric.as_ref().map(|router| {
+        dtopt::fabric::FabricPollster::spawn(router.clone(), Duration::from_millis(50))
     });
-    let coord = match &fabric {
-        Some((router, _)) => Coordinator::with_fabric(
-            router.clone(),
-            world.rows.clone(),
-            CoordinatorConfig {
-                workers,
-                default_optimizer: OptimizerKind::Asm,
-                seed: world.config.seed,
-            },
-        ),
-        None => world.coordinator(workers),
+    let coordinator_config = CoordinatorConfig {
+        workers,
+        default_optimizer: OptimizerKind::Asm,
+        seed: world.config.seed,
+        probe: Some(plane),
+    };
+    let coord = match (&fabric, &service) {
+        (Some(router), _) => {
+            Coordinator::with_fabric(router.clone(), world.rows.clone(), coordinator_config)
+        }
+        (None, Some(service)) => {
+            Coordinator::with_feedback(service, world.rows.clone(), coordinator_config)
+        }
+        (None, None) => unreachable!("one knowledge source is always wired"),
     };
     let mut rng = Rng::new(world.config.seed);
     let requests: Vec<TransferRequest> = (0..n)
@@ -321,27 +341,57 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         workers,
         responses.len() as f64 / wall.as_secs_f64()
     );
-    if let Some((router, _)) = &fabric {
-        // Fold the run's completed transfers in before rendering, so
-        // the shard table reflects what the traffic just taught.
-        let _ = router.flush_all(std::time::Duration::from_secs(10));
-        let _ = router.tick_all();
-    }
-    print!("{}", coord.metrics.render());
+
+    // --- Graceful shutdown: stop accepting work, drain every ingest
+    // queue so rows accepted before shutdown reach their partitions,
+    // fold them into the knowledge source, then render the final state.
+    let metrics = coord.metrics.clone();
     coord.shutdown();
+    let drained = match (&fabric, &service) {
+        (Some(router), _) => {
+            let drained = router.flush_all(Duration::from_secs(30));
+            let _ = router.tick_all();
+            drained
+        }
+        (_, Some(service)) => {
+            let drained = service.flush_barrier(Duration::from_secs(30));
+            let _ = service.tick();
+            drained
+        }
+        _ => true,
+    };
+    let flushed = match (&fabric, &service) {
+        (Some(router), _) => router
+            .live_shards()
+            .iter()
+            .map(|s| s.stats.rows_flushed.load(std::sync::atomic::Ordering::Relaxed))
+            .sum::<u64>(),
+        (_, Some(service)) => {
+            service.stats.rows_flushed.load(std::sync::atomic::Ordering::Relaxed)
+        }
+        _ => 0,
+    };
+    println!(
+        "graceful shutdown: ingest queues {} ({flushed} rows flushed to partitions)\n",
+        if drained { "drained" } else { "DRAIN TIMED OUT" }
+    );
+    print!("{}", metrics.render());
     if let Some(pollster) = pollster {
         pollster.stop();
     }
-    if let Some((router, dir)) = fabric {
+    if let Some(router) = fabric {
         router.shutdown();
-        let _ = std::fs::remove_dir_all(&dir);
     }
+    if let Some(service) = service {
+        service.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&scratch);
     Ok(())
 }
 
 /// Every experiment the CLI can regenerate (`all` runs them in order).
-const EXPERIMENT_NAMES: [&str; 9] =
-    ["fig1", "fig2", "fig3a", "fig3b", "fig5", "fig6", "fig7", "live", "fleet"];
+const EXPERIMENT_NAMES: [&str; 10] =
+    ["fig1", "fig2", "fig3a", "fig3b", "fig5", "fig6", "fig7", "live", "fleet", "rush"];
 
 fn cmd_experiment(opts: &Opts) -> Result<()> {
     let Some(which) = opts.positional.first().map(|s| s.as_str()) else {
@@ -352,7 +402,8 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
     };
     let config = if opts.has("full") { ExpConfig::full() } else { ExpConfig::quick() };
     let reps = if opts.has("full") { 4 } else { 2 };
-    let needs_world = matches!(which, "fig5" | "fig6" | "fig7" | "live" | "fleet" | "all");
+    let needs_world =
+        matches!(which, "fig5" | "fig6" | "fig7" | "live" | "fleet" | "rush" | "all");
     let world = if needs_world {
         let mut backend = default_backend();
         eprintln!("preparing world ({} backend)...", backend.name());
@@ -404,6 +455,14 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
                 let _ = std::fs::remove_dir_all(&dir);
                 print!("{}", live::render(&r));
                 for (desc, ok) in live::headline_checks(&r) {
+                    println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
+                }
+            }
+            "rush" => {
+                let (burst, workers) = if opts.has("full") { (64, 8) } else { (24, 6) };
+                let r = rush::run(world.unwrap(), burst, workers);
+                print!("{}", rush::render(&r));
+                for (desc, ok) in rush::headline_checks(&r) {
                     println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
                 }
             }

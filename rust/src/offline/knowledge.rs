@@ -187,13 +187,20 @@ pub struct KnowledgeBase {
 impl KnowledgeBase {
     /// Constant-time cluster lookup for a request (nearest centroid).
     pub fn query(&self, request: &RequestInfo) -> Option<&ClusterKnowledge> {
+        self.query_idx(request).map(|idx| &self.clusters[idx])
+    }
+
+    /// Index of the request's nearest cluster (`None` for an empty KB)
+    /// — the same lookup [`Self::query`] performs. The probe plane keys
+    /// estimate validity on it: a surface index only means something
+    /// within the cluster whose stack it indexes.
+    pub fn query_idx(&self, request: &RequestInfo) -> Option<usize> {
         if self.clusters.is_empty() {
             return None;
         }
         let feats = self.normalizer.apply(&request.raw_features());
         let flat: Vec<f64> = self.clusters.iter().flat_map(|c| c.centroid.clone()).collect();
-        let idx = nearest_centroid(&feats, &flat, self.clusters.len(), FEATURE_DIM);
-        Some(&self.clusters[idx])
+        Some(nearest_centroid(&feats, &flat, self.clusters.len(), FEATURE_DIM))
     }
 
     /// Squared distance from a raw feature vector to the nearest

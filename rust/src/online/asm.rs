@@ -54,14 +54,66 @@ impl Default for AsmConfig {
     }
 }
 
+/// What one run learned about the network — what the probe plane's
+/// per-shard estimate absorbs after the transfer completes.
+#[derive(Debug, Clone, Copy)]
+pub struct AsmOutcome {
+    /// Surface the bulk phase ended on (post drift re-tunes) — the best
+    /// current description of the network's external load.
+    pub surface_idx: usize,
+    /// Surface the sampling ladder converged on (equals `surface_idx`
+    /// when no mid-transfer drift occurred).
+    pub converged_idx: usize,
+    /// Whether any sampling transfer actually ran.
+    pub sampled: bool,
+    /// The ending surface's external-load intensity.
+    pub intensity: f64,
+}
+
 pub struct AdaptiveSampling<'kb> {
     pub kb: &'kb KnowledgeBase,
     pub config: AsmConfig,
+    /// Warm start from the probe plane: begin bisection at this surface
+    /// index instead of the median (Eq. 24's start point). Clamped to
+    /// the stack, so a stale index from an older KB generation is safe.
+    pub start_surface: Option<usize>,
+    /// Serve mode: skip the sampling ladder entirely and trust
+    /// `start_surface` (or the median) — used when a confident estimate
+    /// or a piggybacked leader result already answers what sampling
+    /// would ask. Drift monitoring still runs during bulk.
+    pub skip_sampling: bool,
+    /// Pre-resolved cluster index for the request (the probe plane's
+    /// admission already ran the nearest-centroid lookup); `run` uses
+    /// it instead of repeating the query. Out-of-range hints fall back
+    /// to querying.
+    pub cluster_hint: Option<usize>,
+    /// Set by [`Optimizer::run`]: what the transfer learned (`None` on
+    /// the cold-start fallback, which has no surfaces to index).
+    pub outcome: Option<AsmOutcome>,
+    /// Fired the moment the sampling ladder settles on a surface —
+    /// *before* the bulk transfer begins. The probe plane hooks this to
+    /// release piggybacking followers at convergence rather than making
+    /// them wait out the leader's whole transfer. Never fired on the
+    /// cold-start fallback (no surfaces); a hook left unfired is simply
+    /// dropped with the optimizer.
+    pub on_converged: Option<Box<dyn FnOnce(AsmOutcome) + 'kb>>,
 }
 
 impl<'kb> AdaptiveSampling<'kb> {
     pub fn new(kb: &'kb KnowledgeBase) -> Self {
-        AdaptiveSampling { kb, config: AsmConfig::default() }
+        AdaptiveSampling::with_config(kb, AsmConfig::default())
+    }
+
+    pub fn with_config(kb: &'kb KnowledgeBase, config: AsmConfig) -> Self {
+        AdaptiveSampling {
+            kb,
+            config,
+            start_surface: None,
+            skip_sampling: false,
+            cluster_hint: None,
+            outcome: None,
+            on_converged: None,
+        }
     }
 }
 
@@ -71,8 +123,14 @@ impl Optimizer for AdaptiveSampling<'_> {
     }
 
     fn run(&mut self, env: &mut TransferEnv) -> RunReport {
+        self.outcome = None;
         let dataset = env.dataset;
-        let cluster = match self.kb.query(&env.request) {
+        let hinted = self.cluster_hint.filter(|&idx| idx < self.kb.clusters.len());
+        let cluster = match hinted {
+            Some(idx) => Some(&self.kb.clusters[idx]),
+            None => self.kb.query(&env.request),
+        };
+        let cluster = match cluster {
             Some(c) if !c.surfaces.is_empty() => c,
             // Cold start (no history): fall back to the SC heuristic.
             _ => {
@@ -96,15 +154,25 @@ impl Optimizer for AdaptiveSampling<'_> {
         // jump to the surface whose prediction is closest to the
         // measured throughput (`FindClosestSurface`, line 11) — each
         // jump discards the mismatched half of the stack.
-        let mut idx = (surfaces.len() - 1) / 2; // median-intensity surface
+        // Start at the probe plane's estimated surface when one exists;
+        // the median-intensity surface otherwise.
+        let median = (surfaces.len() - 1) / 2;
+        let mut idx = self
+            .start_surface
+            .map(|s| s.min(surfaces.len() - 1))
+            .unwrap_or(median);
         let mut chosen = idx;
         let mut last_sample: Option<(Params, f64)> = None;
         let mut samples = 0usize;
         // Short-transfer fast path: when the expected duration cannot
-        // amortize even one probe, act like the static-historical choice.
-        let median_rate = surfaces[idx].argmax.1.max(1.0);
-        let expected_duration_s = dataset.total_mb() * 8.0 / median_rate;
-        let max_samples = if expected_duration_s < self.config.min_sampling_duration_s {
+        // amortize even one probe, act like the static-historical choice
+        // — taken from the *estimated* surface when the probe plane
+        // supplied one, not blindly from the median.
+        let start_rate = surfaces[idx].argmax.1.max(1.0);
+        let expected_duration_s = dataset.total_mb() * 8.0 / start_rate;
+        let max_samples = if self.skip_sampling
+            || expected_duration_s < self.config.min_sampling_duration_s
+        {
             0
         } else {
             self.config.max_samples
@@ -140,6 +208,17 @@ impl Optimizer for AdaptiveSampling<'_> {
                 _ => break, // already the closest: accept it
             }
             chosen = idx;
+        }
+        // The ladder has settled (converged, exhausted its budget, or
+        // was skipped): anyone coalesced behind this run can proceed
+        // now — the bulk transfer below adds nothing they wait for.
+        if let Some(on_converged) = self.on_converged.take() {
+            on_converged(AsmOutcome {
+                surface_idx: chosen,
+                converged_idx: chosen,
+                sampled: samples > 0,
+                intensity: surfaces[chosen].intensity,
+            });
         }
 
         // --- Bulk transfer with drift monitoring ---------------------------
@@ -193,6 +272,12 @@ impl Optimizer for AdaptiveSampling<'_> {
             }
             None => predicted,
         };
+        self.outcome = Some(AsmOutcome {
+            surface_idx: active,
+            converged_idx: chosen,
+            sampled: samples > 0,
+            intensity: surfaces[active].intensity,
+        });
         RunReport {
             optimizer: self.name(),
             phases,
@@ -275,7 +360,8 @@ mod tests {
     fn drift_mid_transfer_triggers_retune() {
         let tb = Testbed::xsede();
         let kb = kb(&tb, 47);
-        let mut asm = AdaptiveSampling { kb: &kb, config: AsmConfig { bulk_chunks: 8, ..Default::default() } };
+        let mut asm =
+            AdaptiveSampling::with_config(&kb, AsmConfig { bulk_chunks: 8, ..Default::default() });
         let mut env =
             TransferEnv::new(tb, Dataset::new(2_000, 100.0), NetState::with_load(0.1), 9);
         // Load jumps dramatically partway through the (long) transfer.
@@ -293,6 +379,83 @@ mod tests {
         };
         assert!(distinct >= 1, "drift handling did not run");
         assert!(report.total_mb() >= env.dataset.total_mb() * 0.99);
+    }
+
+    #[test]
+    fn warm_start_short_transfer_uses_estimated_surface() {
+        // A transfer too short to amortize a probe used to fall back to
+        // the *median* surface even when the probe plane had a fresh
+        // estimate; it must take the estimated surface's argmax instead.
+        let tb = Testbed::xsede();
+        let kb = kb(&tb, 59);
+        let mut exercised = false;
+        for avg_mb in [4.0, 16.0] {
+            let dataset = Dataset::new(3, avg_mb); // ≤ 48 MB ⇒ far below 20 s
+            let mut env = TransferEnv::new(tb.clone(), dataset, NetState::with_load(0.7), 13);
+            let cluster = kb.query(&env.request).expect("cluster");
+            if cluster.surfaces.len() < 2 {
+                continue; // need a stack to distinguish surfaces
+            }
+            let estimated = cluster.surfaces.len() - 1; // not the median
+            let mut asm = AdaptiveSampling::new(&kb);
+            asm.start_surface = Some(estimated);
+            let report = asm.run(&mut env);
+            assert_eq!(report.sample_transfers(), 0, "short transfer must not probe");
+            assert_eq!(
+                report.phases[0].params, cluster.surfaces[estimated].argmax.0,
+                "first bulk chunk must use the estimated surface's argmax"
+            );
+            let outcome = asm.outcome.expect("outcome reported");
+            assert_eq!(outcome.converged_idx, estimated);
+            assert!(!outcome.sampled);
+            exercised = true;
+            break;
+        }
+        assert!(exercised, "no small-file cluster had a surface stack");
+    }
+
+    #[test]
+    fn skip_sampling_serves_without_probing() {
+        let tb = Testbed::xsede();
+        let kb = kb(&tb, 61);
+        let mut env =
+            TransferEnv::new(tb, Dataset::new(300, 100.0), NetState::with_load(0.3), 17);
+        let cluster = kb.query(&env.request).expect("cluster");
+        let mut asm = AdaptiveSampling::new(&kb);
+        asm.start_surface = Some(0);
+        asm.skip_sampling = true;
+        let report = asm.run(&mut env);
+        assert_eq!(report.sample_transfers(), 0, "serve mode must never probe");
+        assert!(report.total_mb() >= env.dataset.total_mb() * 0.99);
+        let outcome = asm.outcome.expect("outcome reported");
+        assert!(outcome.surface_idx < cluster.surfaces.len());
+        assert!(!outcome.sampled);
+    }
+
+    #[test]
+    fn outcome_reports_active_surface_and_intensity() {
+        let tb = Testbed::xsede();
+        let kb = kb(&tb, 63);
+        let mut env =
+            TransferEnv::new(tb, Dataset::new(200, 100.0), NetState::with_load(0.2), 19);
+        let mut asm = AdaptiveSampling::new(&kb);
+        let report = asm.run(&mut env);
+        let cluster = kb.query(&env.request).expect("cluster");
+        let outcome = asm.outcome.expect("outcome reported after a surfaced run");
+        assert!(outcome.surface_idx < cluster.surfaces.len());
+        assert_eq!(
+            outcome.intensity,
+            cluster.surfaces[outcome.surface_idx].intensity
+        );
+        assert_eq!(outcome.sampled, report.sample_transfers() > 0);
+        // Out-of-range warm starts (stale estimate across a KB refresh)
+        // are clamped, never a panic.
+        let mut stale = AdaptiveSampling::new(&kb);
+        stale.start_surface = Some(usize::MAX);
+        let mut env2 =
+            TransferEnv::new(Testbed::xsede(), Dataset::new(50, 64.0), NetState::quiet(), 23);
+        let report2 = stale.run(&mut env2);
+        assert!(report2.total_mb() > 0.0);
     }
 
     #[test]

@@ -4,5 +4,5 @@
 pub mod asm;
 pub mod monitor;
 
-pub use asm::{AdaptiveSampling, AsmConfig};
+pub use asm::{AdaptiveSampling, AsmConfig, AsmOutcome};
 pub use monitor::DriftMonitor;

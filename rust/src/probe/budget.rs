@@ -1,0 +1,228 @@
+//! Per-shard probe budgets: a token bucket denominated in megabytes.
+//!
+//! Sampling is useful but not free — every probe byte is a byte of the
+//! user's transfer moved at possibly-wrong parameters. The budget caps
+//! the long-run fraction of bytes spent probing: bulk bytes *earn*
+//! tokens at `earn_fraction`, probes *spend* them, and an empty bucket
+//! forces the plane to reuse the current estimate instead of sampling.
+//! The capacity bounds how large a probing burst can ever get, no
+//! matter how much credit quiet bulk traffic has accrued.
+//!
+//! Invariants (property-tested below): tokens never go negative, and no
+//! refill ever pushes them past capacity.
+
+use std::sync::Mutex;
+
+/// Budget tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BudgetConfig {
+    /// Token ceiling (MB). Bounds probe bursts.
+    pub capacity_mb: f64,
+    /// Tokens at startup (clamped to capacity) — a full bucket lets a
+    /// cold system learn before any bulk bytes have been earned.
+    pub initial_mb: f64,
+    /// Tokens earned per bulk megabyte moved: the long-run cap on the
+    /// probe-byte fraction.
+    pub earn_fraction: f64,
+}
+
+impl Default for BudgetConfig {
+    fn default() -> Self {
+        BudgetConfig { capacity_mb: 8192.0, initial_mb: 8192.0, earn_fraction: 0.05 }
+    }
+}
+
+/// A megabyte-denominated token bucket. All operations are total: bad
+/// inputs (negative, NaN, infinite) are ignored rather than corrupting
+/// the invariants.
+#[derive(Debug)]
+pub struct TokenBucket {
+    capacity_mb: f64,
+    tokens: Mutex<f64>,
+}
+
+impl TokenBucket {
+    pub fn new(capacity_mb: f64, initial_mb: f64) -> TokenBucket {
+        let capacity = if capacity_mb.is_finite() { capacity_mb.max(0.0) } else { 0.0 };
+        let initial = if initial_mb.is_finite() { initial_mb.clamp(0.0, capacity) } else { 0.0 };
+        TokenBucket { capacity_mb: capacity, tokens: Mutex::new(initial) }
+    }
+
+    pub fn of(config: &BudgetConfig) -> TokenBucket {
+        TokenBucket::new(config.capacity_mb, config.initial_mb)
+    }
+
+    pub fn capacity_mb(&self) -> f64 {
+        self.capacity_mb
+    }
+
+    pub fn available_mb(&self) -> f64 {
+        *self.tokens.lock().expect("token bucket poisoned")
+    }
+
+    /// All-or-nothing reservation: deduct `mb` iff that many tokens are
+    /// available. Non-finite or negative requests are refused.
+    pub fn try_take(&self, mb: f64) -> bool {
+        if !mb.is_finite() || mb < 0.0 {
+            return false;
+        }
+        let mut tokens = self.tokens.lock().expect("token bucket poisoned");
+        if *tokens >= mb {
+            *tokens -= mb;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Add tokens (earned bulk bytes, or a reservation refund), capped
+    /// at capacity.
+    pub fn credit(&self, mb: f64) {
+        if !mb.is_finite() || mb <= 0.0 {
+            return;
+        }
+        let mut tokens = self.tokens.lock().expect("token bucket poisoned");
+        *tokens = (*tokens + mb).min(self.capacity_mb);
+    }
+
+    /// Charge actual probe bytes, saturating at zero (the reservation
+    /// was an estimate; actuals can overshoot it).
+    pub fn drain(&self, mb: f64) {
+        if !mb.is_finite() || mb <= 0.0 {
+            return;
+        }
+        let mut tokens = self.tokens.lock().expect("token bucket poisoned");
+        *tokens = (*tokens - mb).max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn take_credit_drain_basics() {
+        let bucket = TokenBucket::new(100.0, 40.0);
+        assert_eq!(bucket.available_mb(), 40.0);
+        assert!(bucket.try_take(40.0));
+        assert!(!bucket.try_take(0.001), "empty bucket must refuse");
+        assert!(bucket.try_take(0.0), "zero-size take always succeeds");
+        bucket.credit(1_000.0);
+        assert_eq!(bucket.available_mb(), 100.0, "credit caps at capacity");
+        bucket.drain(1_000.0);
+        assert_eq!(bucket.available_mb(), 0.0, "drain saturates at zero");
+    }
+
+    #[test]
+    fn initial_tokens_clamped_to_capacity() {
+        assert_eq!(TokenBucket::new(50.0, 500.0).available_mb(), 50.0);
+        assert_eq!(TokenBucket::new(50.0, -3.0).available_mb(), 0.0);
+        assert_eq!(TokenBucket::new(-10.0, 5.0).capacity_mb(), 0.0);
+    }
+
+    /// One random operation on the bucket.
+    #[derive(Debug, Clone, Copy)]
+    enum Op {
+        Take(f64),
+        Credit(f64),
+        Drain(f64),
+    }
+
+    fn gen_ops(rng: &mut Rng) -> (f64, f64, Vec<Op>) {
+        let capacity = rng.range_f64(0.0, 2_000.0);
+        let initial = rng.range_f64(-100.0, 3_000.0);
+        let ops = (0..rng.range_u(1, 60))
+            .map(|_| {
+                // Amounts deliberately include negatives and values far
+                // beyond capacity.
+                let amount = rng.range_f64(-500.0, 4_000.0);
+                match rng.index(3) {
+                    0 => Op::Take(amount),
+                    1 => Op::Credit(amount),
+                    _ => Op::Drain(amount),
+                }
+            })
+            .collect();
+        (capacity, initial, ops)
+    }
+
+    #[test]
+    fn property_tokens_stay_within_bounds() {
+        forall(
+            Config { cases: 200, seed: 0xB4D6E7 },
+            gen_ops,
+            |(capacity, initial, ops)| {
+                let bucket = TokenBucket::new(*capacity, *initial);
+                for op in ops {
+                    match *op {
+                        Op::Take(mb) => {
+                            let _ = bucket.try_take(mb);
+                        }
+                        Op::Credit(mb) => bucket.credit(mb),
+                        Op::Drain(mb) => bucket.drain(mb),
+                    }
+                    let tokens = bucket.available_mb();
+                    if tokens < 0.0 {
+                        return Err(format!("tokens went negative: {tokens}"));
+                    }
+                    if tokens > bucket.capacity_mb() {
+                        return Err(format!(
+                            "refill exceeded capacity: {tokens} > {}",
+                            bucket.capacity_mb()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_take_matches_model() {
+        forall(
+            Config { cases: 200, seed: 0x7A4E },
+            gen_ops,
+            |(capacity, initial, ops)| {
+                let bucket = TokenBucket::new(*capacity, *initial);
+                let mut model = bucket.available_mb();
+                for op in ops {
+                    match *op {
+                        Op::Take(mb) => {
+                            let took = bucket.try_take(mb);
+                            let expect = mb >= 0.0 && model >= mb;
+                            if took != expect {
+                                return Err(format!(
+                                    "try_take({mb}) = {took}, model had {model}"
+                                ));
+                            }
+                            if took {
+                                model -= mb;
+                            }
+                        }
+                        Op::Credit(mb) => {
+                            bucket.credit(mb);
+                            if mb > 0.0 {
+                                model = (model + mb).min(capacity.max(0.0));
+                            }
+                        }
+                        Op::Drain(mb) => {
+                            bucket.drain(mb);
+                            if mb > 0.0 {
+                                model = (model - mb).max(0.0);
+                            }
+                        }
+                    }
+                    if (bucket.available_mb() - model).abs() > 1e-6 {
+                        return Err(format!(
+                            "model diverged: bucket {} vs model {model}",
+                            bucket.available_mb()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

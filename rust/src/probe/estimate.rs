@@ -1,0 +1,291 @@
+//! Decaying per-shard network-state estimates.
+//!
+//! The knowledge base describes a network's *long-run* behavior; the
+//! estimate store remembers what the most recent transfers learned
+//! about its state *right now*: the surface index the sampling ladder
+//! (or the drift monitor) last settled on and that surface's load
+//! intensity. An estimate's confidence decays on a freshness half-life
+//! — "the obtained information is *partial* and the network is
+//! *dynamic*" — so a stale observation gracefully stops short-circuiting
+//! the ladder instead of serving wrong parameters forever.
+//!
+//! Estimates are fed from three directions, in decreasing strength:
+//! a sampling ladder the shard led (direct measurement), a completed
+//! bulk transfer (the steady phase confirmed the surface), and a
+//! mid-transfer drift re-tune (the monitor moved to a new surface
+//! without fresh sampling).
+
+use crate::fabric::ShardKey;
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Estimate tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct EstimateConfig {
+    /// Confidence halves every `half_life` of wall time.
+    pub half_life: Duration,
+    /// Serve the estimate (skip sampling entirely) at or above this
+    /// decayed confidence.
+    pub serve_threshold: f64,
+    /// Multiplier applied when the serving KB generation differs from
+    /// the one the estimate was recorded under (the surface stack may
+    /// have shifted under the index).
+    pub generation_penalty: f64,
+    /// Confidence of an estimate written by a led sampling ladder.
+    pub lead_confidence: f64,
+    /// Confidence when a led run never actually sampled (short-transfer
+    /// fast path): the surface is an unmeasured guess, so this sits
+    /// *below* `serve_threshold` by default — strong enough to
+    /// warm-start later ladders, never strong enough to suppress their
+    /// sampling. Bulk completions then reinforce it toward the
+    /// threshold if the guess keeps holding up.
+    pub lead_unsampled_confidence: f64,
+    /// Confidence bump from a completed bulk transfer that confirmed
+    /// the estimate (no drift re-tunes).
+    pub bulk_bonus: f64,
+    /// Confidence of an estimate re-pointed by a mid-transfer drift
+    /// re-tune (the monitor's surface re-selection, not a fresh probe).
+    pub drift_confidence: f64,
+}
+
+impl Default for EstimateConfig {
+    fn default() -> Self {
+        EstimateConfig {
+            half_life: Duration::from_secs(60),
+            serve_threshold: 0.6,
+            generation_penalty: 0.5,
+            lead_confidence: 1.0,
+            lead_unsampled_confidence: 0.5,
+            bulk_bonus: 0.1,
+            drift_confidence: 0.7,
+        }
+    }
+}
+
+/// One shard's current network-state estimate.
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkEstimate {
+    /// KB cluster whose surface stack `surface_idx` indexes — a surface
+    /// index is meaningless in any other cluster, so lookups for a
+    /// different cluster miss.
+    pub cluster_idx: usize,
+    /// Index into the cluster's ascending-intensity surface stack.
+    pub surface_idx: usize,
+    /// That surface's external-load intensity.
+    pub intensity: f64,
+    /// Confidence at `updated_at` (decays from there).
+    pub confidence: f64,
+    /// KB generation the index refers to.
+    pub generation: u64,
+    pub updated_at: Instant,
+}
+
+impl NetworkEstimate {
+    /// Confidence as of now: exponential decay on the half-life, with
+    /// the generation penalty applied when the serving KB has moved on.
+    pub fn decayed(&self, config: &EstimateConfig, serving_generation: u64) -> f64 {
+        let age = self.updated_at.elapsed().as_secs_f64();
+        let half_life = config.half_life.as_secs_f64().max(1e-9);
+        let mut confidence = self.confidence * 0.5_f64.powf(age / half_life);
+        if serving_generation != self.generation {
+            confidence *= config.generation_penalty;
+        }
+        confidence.clamp(0.0, 1.0)
+    }
+}
+
+/// Thread-safe map of per-shard estimates.
+#[derive(Debug)]
+pub struct EstimateStore {
+    config: EstimateConfig,
+    inner: Mutex<HashMap<ShardKey, NetworkEstimate>>,
+}
+
+impl EstimateStore {
+    pub fn new(config: EstimateConfig) -> EstimateStore {
+        EstimateStore { config, inner: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn config(&self) -> &EstimateConfig {
+        &self.config
+    }
+
+    /// The shard's estimate plus its decayed confidence under the
+    /// serving generation; `None` when nothing has been observed yet or
+    /// the stored estimate indexes a different cluster's surface stack.
+    pub fn current(
+        &self,
+        key: ShardKey,
+        cluster_idx: usize,
+        serving_generation: u64,
+    ) -> Option<(NetworkEstimate, f64)> {
+        let map = self.inner.lock().expect("estimate store poisoned");
+        map.get(&key)
+            .filter(|e| e.cluster_idx == cluster_idx)
+            .map(|e| (*e, e.decayed(&self.config, serving_generation)))
+    }
+
+    /// Overwrite the shard's estimate with a fresh observation.
+    pub fn record(
+        &self,
+        key: ShardKey,
+        cluster_idx: usize,
+        surface_idx: usize,
+        intensity: f64,
+        confidence: f64,
+        generation: u64,
+    ) {
+        let mut map = self.inner.lock().expect("estimate store poisoned");
+        map.insert(
+            key,
+            NetworkEstimate {
+                cluster_idx,
+                surface_idx,
+                intensity,
+                confidence: confidence.clamp(0.0, 1.0),
+                generation,
+                updated_at: Instant::now(),
+            },
+        );
+    }
+
+    /// A completed bulk transfer confirmed the surface: bump the
+    /// decayed confidence by the bulk bonus (capped at 1) and refresh
+    /// the timestamp. Creates the estimate at bonus confidence when the
+    /// shard had none (or held another cluster's estimate).
+    pub fn reinforce(
+        &self,
+        key: ShardKey,
+        cluster_idx: usize,
+        surface_idx: usize,
+        intensity: f64,
+        generation: u64,
+    ) {
+        let mut map = self.inner.lock().expect("estimate store poisoned");
+        let confidence = map
+            .get(&key)
+            .filter(|e| e.cluster_idx == cluster_idx)
+            .map(|e| e.decayed(&self.config, generation) + self.config.bulk_bonus)
+            .unwrap_or(self.config.bulk_bonus)
+            .clamp(0.0, 1.0);
+        map.insert(
+            key,
+            NetworkEstimate {
+                cluster_idx,
+                surface_idx,
+                intensity,
+                confidence,
+                generation,
+                updated_at: Instant::now(),
+            },
+        );
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("estimate store poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Sorted snapshot for rendering.
+    pub fn entries(&self) -> Vec<(ShardKey, NetworkEstimate)> {
+        let map = self.inner.lock().expect("estimate store poisoned");
+        let mut out: Vec<(ShardKey, NetworkEstimate)> =
+            map.iter().map(|(k, e)| (*k, *e)).collect();
+        out.sort_by_key(|(k, _)| *k);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::dataset::SizeClass;
+    use crate::sim::testbed::TestbedId;
+
+    fn key() -> ShardKey {
+        ShardKey::new(TestbedId::Xsede, SizeClass::Large)
+    }
+
+    #[test]
+    fn fresh_estimate_keeps_its_confidence() {
+        let store = EstimateStore::new(EstimateConfig {
+            half_life: Duration::from_secs(500),
+            ..Default::default()
+        });
+        assert!(store.current(key(), 0, 0).is_none());
+        store.record(key(), 0, 3, 0.5, 1.0, 0);
+        let (est, confidence) = store.current(key(), 0, 0).unwrap();
+        assert_eq!(est.surface_idx, 3);
+        assert!(confidence > 0.9, "fresh confidence decayed to {confidence}");
+    }
+
+    #[test]
+    fn cluster_mismatch_is_a_miss() {
+        let store = EstimateStore::new(EstimateConfig {
+            half_life: Duration::from_secs(500),
+            ..Default::default()
+        });
+        store.record(key(), 2, 3, 0.5, 1.0, 0);
+        // A surface index only means something within its own cluster.
+        assert!(store.current(key(), 1, 0).is_none());
+        assert!(store.current(key(), 2, 0).is_some());
+        // Reinforcing under another cluster starts fresh instead of
+        // bumping the stale cluster's confidence.
+        store.reinforce(key(), 5, 1, 0.3, 0);
+        let (est, confidence) = store.current(key(), 5, 0).unwrap();
+        assert_eq!(est.surface_idx, 1);
+        assert!(confidence <= store.config().bulk_bonus + 1e-9);
+    }
+
+    #[test]
+    fn confidence_decays_on_the_half_life() {
+        let store = EstimateStore::new(EstimateConfig {
+            half_life: Duration::from_millis(20),
+            ..Default::default()
+        });
+        store.record(key(), 0, 2, 0.4, 1.0, 0);
+        std::thread::sleep(Duration::from_millis(80));
+        let (_, confidence) = store.current(key(), 0, 0).unwrap();
+        // ≥ 4 half-lives have passed ⇒ ≤ 1/16 (with slack for timing).
+        assert!(confidence < 0.2, "stale confidence still {confidence}");
+    }
+
+    #[test]
+    fn generation_mismatch_applies_penalty() {
+        let config = EstimateConfig { half_life: Duration::from_secs(500), ..Default::default() };
+        let store = EstimateStore::new(config);
+        store.record(key(), 0, 1, 0.2, 1.0, 7);
+        let (_, same_gen) = store.current(key(), 0, 7).unwrap();
+        let (_, new_gen) = store.current(key(), 0, 8).unwrap();
+        assert!(new_gen < same_gen);
+        assert!(
+            (new_gen - same_gen * config.generation_penalty).abs() < 0.05,
+            "penalty not applied: {new_gen} vs {same_gen}"
+        );
+    }
+
+    #[test]
+    fn reinforce_bumps_and_caps_confidence() {
+        let store = EstimateStore::new(EstimateConfig {
+            half_life: Duration::from_secs(500),
+            bulk_bonus: 0.3,
+            ..Default::default()
+        });
+        // Creates at bonus confidence when absent.
+        store.reinforce(key(), 0, 2, 0.4, 0);
+        let (est, confidence) = store.current(key(), 0, 0).unwrap();
+        assert_eq!(est.surface_idx, 2);
+        assert!((0.2..=0.3001).contains(&confidence), "created at {confidence}");
+        // Repeated confirmations approach — and never exceed — 1.
+        for _ in 0..10 {
+            store.reinforce(key(), 0, 2, 0.4, 0);
+        }
+        let (_, confidence) = store.current(key(), 0, 0).unwrap();
+        assert!(confidence <= 1.0);
+        assert!(confidence > 0.9);
+    }
+}

@@ -1,0 +1,53 @@
+//! The shared probe plane — the paper's "real-time investigation is
+//! expensive and provides partial knowledge" (§1) made into a fleet-wide
+//! invariant.
+//!
+//! Historically every request ran its own private ASM sampling ladder:
+//! a burst of concurrent requests on the same network re-probed it
+//! redundantly, multiplying exactly the overhead the knowledge base
+//! exists to avoid. The probe plane sits between the coordinator (or a
+//! fabric shard) and the ASM and treats the online probe as a scarce
+//! *shared* resource, the way HARP's historical tuning and the
+//! two-phase model treat their online phases:
+//!
+//! ```text
+//!             ┌──────────────────────────────────────────────────┐
+//!  ASM req ──▶│ estimate fresh enough? ──yes──▶ serve estimate   │
+//!             │        │ no                     (no sampling)    │
+//!             │        ▼                                         │
+//!             │ flight in progress? ──yes──▶ piggyback on leader │
+//!             │        │ no                   (bounded wait)     │
+//!             │        ▼                                         │
+//!             │ probe budget left? ──no───▶ forced estimate use  │
+//!             │        │ yes                                     │
+//!             │        ▼                                         │
+//!             │ lead the sampling ladder (warm-started at the    │
+//!             │ estimated surface), publish result to followers  │
+//!             └──────────────────────────────────────────────────┘
+//! ```
+//!
+//! * [`estimate`] — per-[`ShardKey`] network-state estimates (last
+//!   converged surface index + load intensity) whose confidence decays
+//!   on a freshness half-life; fed by sampling outcomes and passively
+//!   by completed bulk transfers and mid-transfer drift re-tunes.
+//! * [`singleflight`] — concurrent requests for the same shard
+//!   coalesce: one leader runs the ladder, followers piggyback on its
+//!   result (bounded wait) or proceed on the current estimate.
+//! * [`budget`] — a token-bucket probe budget per shard capping the
+//!   fraction of bytes spent on sampling; exhaustion forces estimate
+//!   reuse instead of probing.
+//! * [`plane`] — the [`ProbePlane`] facade the coordinator calls:
+//!   admission (`led` / `piggybacked` / `estimate-served`), outcome
+//!   settlement, and the probe metrics block.
+//!
+//! [`ShardKey`]: crate::fabric::ShardKey
+
+pub mod budget;
+pub mod estimate;
+pub mod plane;
+pub mod singleflight;
+
+pub use budget::{BudgetConfig, TokenBucket};
+pub use estimate::{EstimateConfig, EstimateStore, NetworkEstimate};
+pub use plane::{Admission, ProbeConfig, ProbeMode, ProbePlane, ProbeStats};
+pub use singleflight::{FlightGuard, FollowOutcome, ProbeResult, Role, SingleFlight};

@@ -1,0 +1,732 @@
+//! The [`ProbePlane`] facade — what the coordinator's request path
+//! actually talks to.
+//!
+//! Admission decides how a request obtains network knowledge, in
+//! decreasing order of reuse: serve the decayed per-shard estimate
+//! outright; piggyback on a sampling ladder another request is already
+//! flying; or lead a new ladder — warm-started at the estimated surface
+//! and paid for from the shard's probe budget. After the transfer the
+//! plane settles the books: the budget is charged actual probe bytes
+//! and earns on bulk bytes, the estimate absorbs what the run learned
+//! (sampling outcome, bulk confirmation, or drift re-tune), and the
+//! flight's followers are released.
+
+use super::budget::{BudgetConfig, TokenBucket};
+use super::estimate::{EstimateConfig, EstimateStore};
+use super::singleflight::{FlightGuard, FollowOutcome, ProbeResult, Role, SingleFlight};
+use crate::baselines::RunReport;
+use crate::fabric::ShardKey;
+use crate::online::asm::AsmOutcome;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Probe-plane tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ProbeConfig {
+    pub estimate: EstimateConfig,
+    pub budget: BudgetConfig,
+    /// How long a follower waits for the leader before falling back to
+    /// the estimate (or probing independently).
+    pub follower_wait: Duration,
+    /// Budget reservation for one sampling ladder, as a fraction of the
+    /// dataset (settled against actual probe bytes after the run).
+    pub expected_sample_fraction: f64,
+}
+
+impl Default for ProbeConfig {
+    fn default() -> Self {
+        ProbeConfig {
+            estimate: EstimateConfig::default(),
+            budget: BudgetConfig::default(),
+            follower_wait: Duration::from_millis(250),
+            expected_sample_fraction: 0.05,
+        }
+    }
+}
+
+/// How the plane served one request — attributed on every response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeMode {
+    /// This request ran the sampling ladder itself.
+    Led,
+    /// Coalesced onto a concurrent leader's ladder.
+    Piggybacked,
+    /// Served from the decayed estimate (or, budget-forced with no
+    /// estimate, the median surface) without any sampling.
+    EstimateServed,
+}
+
+impl ProbeMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProbeMode::Led => "led",
+            ProbeMode::Piggybacked => "piggybacked",
+            ProbeMode::EstimateServed => "estimate-served",
+        }
+    }
+}
+
+impl std::fmt::Display for ProbeMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// What `admit` tells the request path to do.
+pub enum Admission {
+    /// Run the sampling ladder (warm-started at `warm_start` when an
+    /// unconfident estimate exists). `guard` is `None` for the rare
+    /// unregistered probe after a follower timeout.
+    Lead { guard: Option<FlightGuard>, warm_start: Option<usize> },
+    /// Skip sampling; start at the leader's converged surface.
+    Piggyback(ProbeResult),
+    /// Skip sampling; start at the estimated surface (`None` = median:
+    /// the budget is exhausted and nothing has been observed yet).
+    Serve(Option<usize>),
+}
+
+/// Plane-wide counters, rendered in the coordinator metrics block.
+#[derive(Debug, Default)]
+pub struct ProbeStats {
+    pub led: AtomicU64,
+    pub piggybacked: AtomicU64,
+    pub estimate_served: AtomicU64,
+    /// Estimate-served admissions forced by an exhausted budget rather
+    /// than by confidence.
+    pub budget_forced: AtomicU64,
+    pub follower_timeouts: AtomicU64,
+    /// Leaders whose run produced no usable outcome (cold-start KB).
+    pub leader_aborts: AtomicU64,
+    /// (sample_mb, bulk_mb) moved through the plane.
+    bytes: Mutex<(f64, f64)>,
+}
+
+impl ProbeStats {
+    pub fn note_bytes(&self, sample_mb: f64, bulk_mb: f64) {
+        let mut bytes = self.bytes.lock().expect("probe bytes poisoned");
+        bytes.0 += sample_mb.max(0.0);
+        bytes.1 += bulk_mb.max(0.0);
+    }
+
+    /// (sample_mb, bulk_mb) totals.
+    pub fn bytes(&self) -> (f64, f64) {
+        *self.bytes.lock().expect("probe bytes poisoned")
+    }
+
+    pub fn admissions(&self) -> u64 {
+        self.led.load(Ordering::Relaxed)
+            + self.piggybacked.load(Ordering::Relaxed)
+            + self.estimate_served.load(Ordering::Relaxed)
+    }
+}
+
+/// The shared probe plane.
+pub struct ProbePlane {
+    config: ProbeConfig,
+    estimates: EstimateStore,
+    flights: SingleFlight,
+    budgets: Mutex<HashMap<ShardKey, Arc<TokenBucket>>>,
+    pub stats: ProbeStats,
+}
+
+impl Default for ProbePlane {
+    fn default() -> Self {
+        ProbePlane::new(ProbeConfig::default())
+    }
+}
+
+impl ProbePlane {
+    pub fn new(config: ProbeConfig) -> ProbePlane {
+        ProbePlane {
+            config,
+            estimates: EstimateStore::new(config.estimate),
+            flights: SingleFlight::new(),
+            budgets: Mutex::new(HashMap::new()),
+            stats: ProbeStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &ProbeConfig {
+        &self.config
+    }
+
+    pub fn estimates(&self) -> &EstimateStore {
+        &self.estimates
+    }
+
+    /// The shard's token bucket (created full on first contact).
+    pub fn budget(&self, key: ShardKey) -> Arc<TokenBucket> {
+        let mut budgets = self.budgets.lock().expect("budget map poisoned");
+        budgets
+            .entry(key)
+            .or_insert_with(|| Arc::new(TokenBucket::of(&self.config.budget)))
+            .clone()
+    }
+
+    /// The budget reservation for a sampling ladder over `total_mb` of
+    /// data — an expectation, settled against actuals after the run.
+    pub fn expected_sample_mb(&self, total_mb: f64) -> f64 {
+        (total_mb * self.config.expected_sample_fraction).clamp(1.0, 4096.0)
+    }
+
+    /// Decide how a request for `key` (mapping to KB cluster
+    /// `cluster_idx`, served at `generation`) obtains network
+    /// knowledge. Never blocks longer than `follower_wait`.
+    /// `cluster_idx` is `None` only for an empty (cold-start) KB, where
+    /// estimates and piggybacked surface indices mean nothing.
+    pub fn admit(
+        &self,
+        key: ShardKey,
+        cluster_idx: Option<usize>,
+        generation: u64,
+        expected_sample_mb: f64,
+    ) -> Admission {
+        let estimate =
+            cluster_idx.and_then(|ci| self.estimates.current(key, ci, generation));
+        if let Some((est, confidence)) = estimate {
+            if confidence >= self.config.estimate.serve_threshold {
+                self.stats.estimate_served.fetch_add(1, Ordering::Relaxed);
+                return Admission::Serve(Some(est.surface_idx));
+            }
+        }
+        let warm_start = estimate.map(|(est, _)| est.surface_idx);
+        // Probing costs budget; reserve before trying to lead, refund
+        // if another request turns out to already be flying the ladder.
+        let budget = self.budget(key);
+        if !budget.try_take(expected_sample_mb) {
+            self.stats.budget_forced.fetch_add(1, Ordering::Relaxed);
+            self.stats.estimate_served.fetch_add(1, Ordering::Relaxed);
+            return Admission::Serve(warm_start);
+        }
+        match self.flights.lead_or_join(key) {
+            Role::Leader(guard) => {
+                self.stats.led.fetch_add(1, Ordering::Relaxed);
+                Admission::Lead { guard: Some(guard), warm_start }
+            }
+            Role::Follower(flight) => {
+                budget.credit(expected_sample_mb); // the leader pays, not us
+                match flight.wait(self.config.follower_wait) {
+                    // The leader's surface index is only usable when the
+                    // follower's request maps to the same cluster AND is
+                    // pinned to the same KB generation — a refresh can
+                    // rebuild the stack under the index.
+                    FollowOutcome::Result(result)
+                        if Some(result.cluster_idx) == cluster_idx
+                            && result.generation == generation =>
+                    {
+                        self.stats.piggybacked.fetch_add(1, Ordering::Relaxed);
+                        Admission::Piggyback(result)
+                    }
+                    FollowOutcome::Result(_) | FollowOutcome::Aborted => {
+                        self.follower_fallback(key, warm_start, expected_sample_mb)
+                    }
+                    FollowOutcome::TimedOut => {
+                        self.stats.follower_timeouts.fetch_add(1, Ordering::Relaxed);
+                        self.follower_fallback(key, warm_start, expected_sample_mb)
+                    }
+                }
+            }
+        }
+    }
+
+    /// A follower whose leader vanished (abort, timeout, or a result
+    /// this request can't use): probe independently — unregistered,
+    /// warm-started at whatever estimate exists — if the budget allows;
+    /// otherwise fall back to the estimate. Serving a low-confidence
+    /// estimate outright is NOT an option here: by construction the
+    /// confident case was handled before joining the flight.
+    fn follower_fallback(
+        &self,
+        key: ShardKey,
+        warm_start: Option<usize>,
+        expected_sample_mb: f64,
+    ) -> Admission {
+        let budget = self.budget(key);
+        if budget.try_take(expected_sample_mb) {
+            self.stats.led.fetch_add(1, Ordering::Relaxed);
+            Admission::Lead { guard: None, warm_start }
+        } else {
+            self.stats.budget_forced.fetch_add(1, Ordering::Relaxed);
+            self.stats.estimate_served.fetch_add(1, Ordering::Relaxed);
+            Admission::Serve(warm_start)
+        }
+    }
+
+    /// The leader's sampling ladder just converged (mid-run, before the
+    /// bulk transfer): record the estimate and release the flight's
+    /// followers *now* — a follower's bounded wait covers the ladder,
+    /// never the leader's whole transfer. Wired into the ASM's
+    /// `on_converged` hook.
+    ///
+    /// A ladder that never actually sampled (short-transfer fast path)
+    /// measured nothing: its surface is recorded only at warm-start
+    /// strength and its flight is *aborted*, never handed to followers
+    /// as if it were a measurement.
+    pub fn lead_converged(
+        &self,
+        key: ShardKey,
+        cluster_idx: Option<usize>,
+        guard: Option<FlightGuard>,
+        outcome: AsmOutcome,
+        generation: u64,
+    ) {
+        let Some(cluster_idx) = cluster_idx else {
+            // Unreachable in practice: the ladder only runs when the KB
+            // has a cluster. Wake followers rather than strand them.
+            if let Some(guard) = guard {
+                guard.abort();
+            }
+            return;
+        };
+        let confidence = if outcome.sampled {
+            self.config.estimate.lead_confidence
+        } else {
+            self.config.estimate.lead_unsampled_confidence
+        };
+        self.estimates.record(
+            key,
+            cluster_idx,
+            outcome.surface_idx,
+            outcome.intensity,
+            confidence,
+            generation,
+        );
+        if let Some(guard) = guard {
+            if outcome.sampled {
+                guard.complete(ProbeResult {
+                    cluster_idx,
+                    generation,
+                    surface_idx: outcome.surface_idx,
+                    intensity: outcome.intensity,
+                });
+            } else {
+                guard.abort();
+            }
+        }
+    }
+
+    /// Settle a led run after the transfer completes: charge the budget
+    /// actual probe bytes (the reservation was an expectation) and fold
+    /// the *final* surface into the estimate at evidence-appropriate
+    /// confidence — sampled convergence is a measurement, a post-drift
+    /// surface is the monitor's inference, and an unsampled run's clean
+    /// bulk completion is mere reinforcement. The flight itself was
+    /// already released at convergence by [`Self::lead_converged`] (or
+    /// aborts with the run on the cold-start path).
+    pub fn finish_led(
+        &self,
+        key: ShardKey,
+        cluster_idx: Option<usize>,
+        outcome: Option<AsmOutcome>,
+        report: &RunReport,
+        reserved_mb: f64,
+        generation: u64,
+    ) {
+        let (sample_mb, bulk_mb) = split_bytes(report);
+        self.stats.note_bytes(sample_mb, bulk_mb);
+        let budget = self.budget(key);
+        budget.credit(reserved_mb);
+        budget.drain(sample_mb);
+        budget.credit(bulk_mb * self.config.budget.earn_fraction);
+        match (outcome, cluster_idx) {
+            (Some(outcome), Some(cluster_idx)) => {
+                if report.bulk_retunes() > 0 {
+                    // The final surface was chosen by the drift monitor,
+                    // not by a probe — moderate confidence, same as the
+                    // passive path treats drift.
+                    self.estimates.record(
+                        key,
+                        cluster_idx,
+                        outcome.surface_idx,
+                        outcome.intensity,
+                        self.config.estimate.drift_confidence,
+                        generation,
+                    );
+                } else if outcome.sampled {
+                    self.estimates.record(
+                        key,
+                        cluster_idx,
+                        outcome.surface_idx,
+                        outcome.intensity,
+                        self.config.estimate.lead_confidence,
+                        generation,
+                    );
+                } else {
+                    // Never sampled: the clean bulk run is the only
+                    // evidence, so reinforce the warm-start record.
+                    self.estimates.reinforce(
+                        key,
+                        cluster_idx,
+                        outcome.surface_idx,
+                        outcome.intensity,
+                        generation,
+                    );
+                }
+            }
+            (None, _) => {
+                self.stats.leader_aborts.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {}
+        }
+    }
+
+    /// Settle a piggybacked or estimate-served run: earn bulk credit
+    /// and feed the estimate passively — a drift re-tune re-points it
+    /// at the monitor's new surface, a clean completion reinforces it.
+    pub fn finish_passive(
+        &self,
+        key: ShardKey,
+        cluster_idx: Option<usize>,
+        outcome: Option<AsmOutcome>,
+        report: &RunReport,
+        generation: u64,
+    ) {
+        let (sample_mb, bulk_mb) = split_bytes(report);
+        self.stats.note_bytes(sample_mb, bulk_mb);
+        self.budget(key).credit(bulk_mb * self.config.budget.earn_fraction);
+        if let (Some(outcome), Some(cluster_idx)) = (outcome, cluster_idx) {
+            if report.bulk_retunes() > 0 {
+                self.estimates.record(
+                    key,
+                    cluster_idx,
+                    outcome.surface_idx,
+                    outcome.intensity,
+                    self.config.estimate.drift_confidence,
+                    generation,
+                );
+            } else {
+                self.estimates.reinforce(
+                    key,
+                    cluster_idx,
+                    outcome.surface_idx,
+                    outcome.intensity,
+                    generation,
+                );
+            }
+        }
+    }
+
+    /// The probe metrics block (rendered by `coordinator::Metrics`).
+    pub fn render(&self) -> String {
+        let led = self.stats.led.load(Ordering::Relaxed);
+        let piggybacked = self.stats.piggybacked.load(Ordering::Relaxed);
+        let estimate_served = self.stats.estimate_served.load(Ordering::Relaxed);
+        let admissions = led + piggybacked + estimate_served;
+        let reuse_pct = if admissions > 0 {
+            100.0 * (piggybacked + estimate_served) as f64 / admissions as f64
+        } else {
+            0.0
+        };
+        let (sample_mb, bulk_mb) = self.stats.bytes();
+        let total_mb = sample_mb + bulk_mb;
+        let overhead_pct = if total_mb > 0.0 { 100.0 * sample_mb / total_mb } else { 0.0 };
+        let mut out = format!(
+            "probe plane: {led} led, {piggybacked} piggybacked, {estimate_served} estimate-served \
+             ({} budget-forced), {} follower timeouts, {} leader aborts\n\
+             probe bytes: {sample_mb:.0} MB sampled of {total_mb:.0} MB moved \
+             ({overhead_pct:.2}% overhead), estimate reuse {reuse_pct:.0}% of {admissions} admissions\n",
+            self.stats.budget_forced.load(Ordering::Relaxed),
+            self.stats.follower_timeouts.load(Ordering::Relaxed),
+            self.stats.leader_aborts.load(Ordering::Relaxed),
+        );
+        for (key, est) in self.estimates.entries() {
+            let budget = self.budget(key);
+            out.push_str(&format!(
+                "  {}: surface {} (intensity {:.2}), confidence {:.2} @gen {}, \
+                 budget {:.0}/{:.0} MB\n",
+                key.name(),
+                est.surface_idx,
+                est.intensity,
+                est.decayed(self.estimates.config(), est.generation),
+                est.generation,
+                budget.available_mb(),
+                budget.capacity_mb(),
+            ));
+        }
+        out
+    }
+}
+
+impl std::fmt::Debug for ProbePlane {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ProbePlane")
+            .field("estimates", &self.estimates.len())
+            .field("in_flight", &self.flights.in_flight())
+            .field("admissions", &self.stats.admissions())
+            .finish()
+    }
+}
+
+fn split_bytes(report: &RunReport) -> (f64, f64) {
+    let sample_mb: f64 =
+        report.phases.iter().filter(|p| p.is_sample).map(|p| p.mb).sum();
+    (sample_mb, report.total_mb() - sample_mb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::Phase;
+    use crate::sim::dataset::SizeClass;
+    use crate::sim::params::Params;
+    use crate::sim::testbed::TestbedId;
+
+    fn key() -> ShardKey {
+        ShardKey::new(TestbedId::Xsede, SizeClass::Large)
+    }
+
+    fn outcome(surface_idx: usize, sampled: bool) -> AsmOutcome {
+        AsmOutcome { surface_idx, converged_idx: surface_idx, sampled, intensity: 0.5 }
+    }
+
+    fn report(sample_mb: f64, bulk_params: &[Params]) -> RunReport {
+        let mut phases = Vec::new();
+        if sample_mb > 0.0 {
+            phases.push(Phase {
+                params: Params::new(2, 2, 2),
+                mb: sample_mb,
+                seconds: 2.0,
+                steady_mbps: 1_000.0,
+                is_sample: true,
+            });
+        }
+        for &params in bulk_params {
+            phases.push(Phase {
+                params,
+                mb: 500.0,
+                seconds: 4.0,
+                steady_mbps: 1_000.0,
+                is_sample: false,
+            });
+        }
+        RunReport {
+            optimizer: "ASM",
+            phases,
+            final_params: *bulk_params.last().unwrap(),
+            predicted_mbps: Some(1_000.0),
+        }
+    }
+
+    #[test]
+    fn lead_then_confident_estimate_is_served() {
+        let plane = ProbePlane::default();
+        let guard = match plane.admit(key(), Some(0), 0, 10.0) {
+            Admission::Lead { guard, warm_start } => {
+                assert!(warm_start.is_none(), "no estimate yet");
+                guard
+            }
+            _ => panic!("cold plane must lead"),
+        };
+        // Convergence releases the flight and records the estimate...
+        plane.lead_converged(key(), Some(0), guard, outcome(3, true), 0);
+        // ...and the post-transfer settlement charges the budget.
+        plane.finish_led(
+            key(),
+            Some(0),
+            Some(outcome(3, true)),
+            &report(50.0, &[Params::new(4, 4, 2)]),
+            10.0,
+            0,
+        );
+        match plane.admit(key(), Some(0), 0, 10.0) {
+            Admission::Serve(Some(3)) => {}
+            Admission::Serve(other) => panic!("served the wrong surface: {other:?}"),
+            _ => panic!("fresh confident estimate must be served"),
+        }
+        // A request mapping to a *different* cluster must not be served
+        // this cluster's surface index; it leads its own ladder.
+        match plane.admit(key(), Some(1), 0, 10.0) {
+            Admission::Lead { warm_start: None, .. } => {}
+            _ => panic!("another cluster's estimate must not short-circuit"),
+        }
+        assert_eq!(plane.stats.led.load(Ordering::Relaxed), 2);
+        assert_eq!(plane.stats.estimate_served.load(Ordering::Relaxed), 1);
+        let rendered = plane.render();
+        assert!(rendered.contains("probe plane: 2 led"), "{rendered}");
+        assert!(rendered.contains("xsede/large"), "{rendered}");
+    }
+
+    #[test]
+    fn exhausted_budget_forces_estimate_reuse() {
+        let plane = ProbePlane::new(ProbeConfig {
+            budget: BudgetConfig { capacity_mb: 100.0, initial_mb: 20.0, earn_fraction: 0.0 },
+            ..Default::default()
+        });
+        // Over budget with no estimate at all: median, no sampling.
+        match plane.admit(key(), Some(0), 0, 50.0) {
+            Admission::Serve(None) => {}
+            _ => panic!("exhausted budget must force estimate reuse"),
+        }
+        assert_eq!(plane.stats.budget_forced.load(Ordering::Relaxed), 1);
+        // Within budget: lead (and pay).
+        match plane.admit(key(), Some(0), 0, 15.0) {
+            Admission::Lead { .. } => {}
+            _ => panic!("affordable probe must lead"),
+        }
+        assert!(plane.budget(key()).available_mb() < 20.0);
+        // The guard dropped above (abort); a low-confidence estimate
+        // plus no budget serves that estimate, not the median.
+        plane.finish_passive(
+            key(),
+            Some(0),
+            Some(outcome(4, false)),
+            &report(0.0, &[Params::new(4, 4, 2)]),
+            0,
+        );
+        match plane.admit(key(), Some(0), 0, 50.0) {
+            Admission::Serve(Some(4)) => {}
+            _ => panic!("budget-forced reuse must still prefer the estimate"),
+        }
+    }
+
+    #[test]
+    fn generation_bump_degrades_confidence_to_warm_start() {
+        let plane = ProbePlane::default();
+        match plane.admit(key(), Some(0), 0, 10.0) {
+            Admission::Lead { guard, .. } => {
+                plane.lead_converged(key(), Some(0), guard, outcome(3, true), 0);
+                plane.finish_led(
+                    key(),
+                    Some(0),
+                    Some(outcome(3, true)),
+                    &report(50.0, &[Params::new(4, 4, 2)]),
+                    10.0,
+                    0,
+                );
+            }
+            _ => panic!("cold plane must lead"),
+        }
+        // Same generation: confident serve. New generation: the 0.5
+        // penalty drops it below the 0.6 threshold, so the request
+        // leads again — warm-started at the old surface.
+        match plane.admit(key(), Some(0), 1, 10.0) {
+            Admission::Lead { warm_start: Some(3), .. } => {}
+            _ => panic!("generation bump must demote the estimate to a warm start"),
+        }
+    }
+
+    #[test]
+    fn passive_drift_repoints_the_estimate() {
+        let plane = ProbePlane::default();
+        // Two bulk phases with different params ⇒ one drift re-tune.
+        let drifted = report(0.0, &[Params::new(4, 4, 2), Params::new(8, 2, 2)]);
+        assert_eq!(drifted.bulk_retunes(), 1);
+        plane.finish_passive(key(), Some(0), Some(outcome(4, false)), &drifted, 0);
+        match plane.admit(key(), Some(0), 0, 10.0) {
+            Admission::Serve(Some(4)) => {}
+            _ => panic!("drift confidence (0.7) clears the serve threshold"),
+        }
+    }
+
+    #[test]
+    fn bulk_bytes_earn_budget_back() {
+        let plane = ProbePlane::new(ProbeConfig {
+            budget: BudgetConfig { capacity_mb: 1_000.0, initial_mb: 0.0, earn_fraction: 0.1 },
+            ..Default::default()
+        });
+        // 1000 MB of bulk at 10% earn = 100 MB of tokens.
+        plane.finish_passive(
+            key(),
+            None,
+            None,
+            &report(0.0, &[Params::new(4, 4, 2), Params::new(4, 4, 2)]),
+            0,
+        );
+        let available = plane.budget(key()).available_mb();
+        assert!((available - 100.0).abs() < 1e-6, "earned {available}");
+    }
+
+    #[test]
+    fn unsampled_leader_warm_starts_but_never_suppresses_sampling() {
+        let plane = ProbePlane::default();
+        let guard = match plane.admit(key(), Some(0), 0, 10.0) {
+            Admission::Lead { guard, .. } => guard,
+            _ => panic!("cold plane must lead"),
+        };
+        // Short-transfer fast path: the ladder ran zero samples. The
+        // surface is an unmeasured guess — followers must not inherit
+        // it as a result, and later requests must still sample.
+        plane.lead_converged(key(), Some(0), guard, outcome(5, false), 0);
+        match plane.admit(key(), Some(0), 0, 10.0) {
+            Admission::Lead { warm_start: Some(5), .. } => {}
+            Admission::Serve(_) => panic!("unmeasured guess must not be served outright"),
+            _ => panic!("next request must lead, warm-started at the guess"),
+        }
+        // Clean bulk completions reinforce the guess over the serve
+        // threshold (0.5 → +0.1 per confirmation, decay in between) —
+        // after two it has real evidence behind it.
+        for _ in 0..2 {
+            plane.finish_led(
+                key(),
+                Some(0),
+                Some(outcome(5, false)),
+                &report(0.0, &[Params::new(4, 4, 2)]),
+                10.0,
+                0,
+            );
+        }
+        match plane.admit(key(), Some(0), 0, 10.0) {
+            Admission::Serve(Some(5)) => {}
+            _ => panic!("bulk-confirmed estimate clears the threshold"),
+        }
+    }
+
+    #[test]
+    fn drift_inferred_final_surface_gets_moderate_confidence() {
+        let plane = ProbePlane::default();
+        // Sampled ladder converged on 3, drift re-tuned to 8 mid-bulk:
+        // the final surface is the monitor's inference, not a probe.
+        let drifted = report(50.0, &[Params::new(4, 4, 2), Params::new(8, 2, 2)]);
+        assert_eq!(drifted.bulk_retunes(), 1);
+        plane.finish_led(
+            key(),
+            Some(0),
+            Some(AsmOutcome { surface_idx: 8, converged_idx: 3, sampled: true, intensity: 0.9 }),
+            &drifted,
+            10.0,
+            0,
+        );
+        let (est, confidence) = plane.estimates.current(key(), 0, 0).unwrap();
+        assert_eq!(est.surface_idx, 8);
+        assert!(
+            (confidence - plane.config.estimate.drift_confidence).abs() < 0.01,
+            "drift-inferred surface recorded at {confidence}, want drift confidence"
+        );
+    }
+
+    #[test]
+    fn followers_release_at_convergence_not_transfer_end() {
+        let plane = Arc::new(ProbePlane::default());
+        let guard = match plane.admit(key(), Some(0), 0, 10.0) {
+            Admission::Lead { guard, .. } => guard,
+            _ => panic!("cold plane must lead"),
+        };
+        let follower = {
+            let plane = plane.clone();
+            std::thread::spawn(move || plane.admit(key(), Some(0), 0, 10.0))
+        };
+        // Simulate the mid-run convergence hook firing while the
+        // leader's bulk transfer is still in progress.
+        std::thread::sleep(Duration::from_millis(10));
+        plane.lead_converged(key(), Some(0), guard, outcome(2, true), 0);
+        match follower.join().unwrap() {
+            // Piggybacked on the converged ladder, or admitted after the
+            // estimate was already recorded — either way, no re-probe.
+            Admission::Piggyback(result) => assert_eq!(result.surface_idx, 2),
+            Admission::Serve(Some(2)) => {}
+            _ => panic!("follower must reuse the converged ladder"),
+        }
+        // The bulk transfer "completes" much later; settlement only
+        // touches the budget and the estimate.
+        plane.finish_led(
+            key(),
+            Some(0),
+            Some(outcome(2, true)),
+            &report(50.0, &[Params::new(4, 4, 2)]),
+            10.0,
+            0,
+        );
+    }
+}

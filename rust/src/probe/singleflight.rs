@@ -1,0 +1,253 @@
+//! Single-flight coalescing of sampling ladders.
+//!
+//! When concurrent requests hit the same shard with no fresh estimate,
+//! only one of them — the *leader* — should pay for sampling; the rest
+//! — *followers* — wait (bounded) and piggyback on the leader's result,
+//! or fall back to whatever estimate exists if the wait runs out. The
+//! map entry lives exactly as long as the leader's [`FlightGuard`]:
+//! completion and abort both publish to waiting followers and clear the
+//! key, and a leader that panics mid-ladder aborts via `Drop`, so
+//! followers can never wait on a flight nobody is flying.
+
+use crate::fabric::ShardKey;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// What a completed sampling ladder hands to its followers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProbeResult {
+    /// KB cluster whose surface stack `surface_idx` indexes; a follower
+    /// whose request maps to a different cluster must not use it.
+    pub cluster_idx: usize,
+    /// KB generation the leader sampled under; a refresh can rebuild
+    /// the stack, so a follower pinned to another generation must not
+    /// reuse the index.
+    pub generation: u64,
+    /// Surface index the leader's run settled on.
+    pub surface_idx: usize,
+    /// That surface's external-load intensity.
+    pub intensity: f64,
+}
+
+enum FlightState {
+    Pending,
+    Done(Option<ProbeResult>),
+}
+
+/// One in-progress sampling ladder that followers can wait on.
+pub struct Flight {
+    state: Mutex<FlightState>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn new() -> Flight {
+        Flight { state: Mutex::new(FlightState::Pending), cv: Condvar::new() }
+    }
+
+    /// Wait (bounded) for the leader's result.
+    pub fn wait(&self, timeout: Duration) -> FollowOutcome {
+        let deadline = Instant::now() + timeout;
+        let mut state = self.state.lock().expect("flight poisoned");
+        loop {
+            match &*state {
+                FlightState::Done(Some(result)) => return FollowOutcome::Result(*result),
+                FlightState::Done(None) => return FollowOutcome::Aborted,
+                FlightState::Pending => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return FollowOutcome::TimedOut;
+                    }
+                    let (next, _) = self
+                        .cv
+                        .wait_timeout(state, deadline - now)
+                        .expect("flight poisoned");
+                    state = next;
+                }
+            }
+        }
+    }
+}
+
+/// How a follower's wait ended.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FollowOutcome {
+    /// The leader converged; here is its result.
+    Result(ProbeResult),
+    /// The leader finished without a usable result (e.g. cold-start KB).
+    Aborted,
+    /// The bounded wait ran out before the leader finished.
+    TimedOut,
+}
+
+type FlightMap = Arc<Mutex<HashMap<ShardKey, Arc<Flight>>>>;
+
+/// Per-shard coalescing map. Cloning shares the same map.
+#[derive(Clone, Default)]
+pub struct SingleFlight {
+    inner: FlightMap,
+}
+
+/// What `lead_or_join` decided for the caller.
+pub enum Role {
+    /// No flight was active: the caller leads. It MUST `complete` or
+    /// `abort` the guard (dropping it aborts).
+    Leader(FlightGuard),
+    /// A flight is active: wait on it.
+    Follower(Arc<Flight>),
+}
+
+impl SingleFlight {
+    pub fn new() -> SingleFlight {
+        SingleFlight::default()
+    }
+
+    /// Atomically either register a new flight for `key` (caller
+    /// becomes the leader) or hand back the in-progress flight to wait
+    /// on.
+    pub fn lead_or_join(&self, key: ShardKey) -> Role {
+        let mut map = self.inner.lock().expect("flight map poisoned");
+        if let Some(flight) = map.get(&key) {
+            return Role::Follower(flight.clone());
+        }
+        let flight = Arc::new(Flight::new());
+        map.insert(key, flight.clone());
+        Role::Leader(FlightGuard { map: self.inner.clone(), key, flight, settled: false })
+    }
+
+    /// Number of in-progress flights (diagnostics).
+    pub fn in_flight(&self) -> usize {
+        self.inner.lock().expect("flight map poisoned").len()
+    }
+}
+
+/// The leader's obligation: publish a result (or an abort) exactly
+/// once, clearing the key so the next cold request can lead again.
+pub struct FlightGuard {
+    map: FlightMap,
+    key: ShardKey,
+    flight: Arc<Flight>,
+    settled: bool,
+}
+
+impl FlightGuard {
+    /// Publish the ladder's result to every waiting follower.
+    pub fn complete(mut self, result: ProbeResult) {
+        self.settle(Some(result));
+    }
+
+    /// The ladder learned nothing (cold-start KB, error path); wake
+    /// followers so they fall back instead of timing out.
+    pub fn abort(mut self) {
+        self.settle(None);
+    }
+
+    fn settle(&mut self, result: Option<ProbeResult>) {
+        if self.settled {
+            return;
+        }
+        self.settled = true;
+        {
+            let mut state = self.flight.state.lock().expect("flight poisoned");
+            *state = FlightState::Done(result);
+        }
+        self.flight.cv.notify_all();
+        // Only this guard ever inserted for the key, and it holds the
+        // entry until settled — the removal cannot hit a newer flight.
+        self.map.lock().expect("flight map poisoned").remove(&self.key);
+    }
+}
+
+impl Drop for FlightGuard {
+    fn drop(&mut self) {
+        self.settle(None);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::dataset::SizeClass;
+    use crate::sim::testbed::TestbedId;
+
+    fn key() -> ShardKey {
+        ShardKey::new(TestbedId::Xsede, SizeClass::Large)
+    }
+
+    #[test]
+    fn one_leader_many_followers_observe_the_result() {
+        let flights = SingleFlight::new();
+        let guard = match flights.lead_or_join(key()) {
+            Role::Leader(guard) => guard,
+            Role::Follower(_) => panic!("fresh map must elect a leader"),
+        };
+        // Followers spawned while the flight is registered are
+        // deterministically followers.
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                let flights = flights.clone();
+                std::thread::spawn(move || match flights.lead_or_join(key()) {
+                    Role::Follower(flight) => flight.wait(Duration::from_secs(30)),
+                    Role::Leader(_) => panic!("second leader elected"),
+                })
+            })
+            .collect();
+        // Give the followers a moment to start waiting (correctness
+        // does not depend on it — late waiters see the Done state).
+        std::thread::sleep(Duration::from_millis(10));
+        let published =
+            ProbeResult { cluster_idx: 0, generation: 0, surface_idx: 2, intensity: 0.4 };
+        guard.complete(published);
+        for handle in handles {
+            match handle.join().unwrap() {
+                FollowOutcome::Result(result) => {
+                    assert_eq!(result, published);
+                }
+                other => panic!("follower missed the leader's result: {other:?}"),
+            }
+        }
+        // The key is clear again: the next request leads.
+        assert_eq!(flights.in_flight(), 0);
+        assert!(matches!(flights.lead_or_join(key()), Role::Leader(_)));
+    }
+
+    #[test]
+    fn follower_wait_is_bounded() {
+        let flights = SingleFlight::new();
+        let _guard = match flights.lead_or_join(key()) {
+            Role::Leader(guard) => guard,
+            Role::Follower(_) => panic!("fresh map must elect a leader"),
+        };
+        let flight = match flights.lead_or_join(key()) {
+            Role::Follower(flight) => flight,
+            Role::Leader(_) => panic!("flight already registered"),
+        };
+        let started = Instant::now();
+        assert_eq!(flight.wait(Duration::from_millis(20)), FollowOutcome::TimedOut);
+        assert!(started.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn abort_and_drop_wake_followers() {
+        for explicit in [true, false] {
+            let flights = SingleFlight::new();
+            let guard = match flights.lead_or_join(key()) {
+                Role::Leader(guard) => guard,
+                Role::Follower(_) => panic!("fresh map must elect a leader"),
+            };
+            let flight = match flights.lead_or_join(key()) {
+                Role::Follower(flight) => flight,
+                Role::Leader(_) => panic!("flight already registered"),
+            };
+            let waiter = std::thread::spawn(move || flight.wait(Duration::from_secs(30)));
+            if explicit {
+                guard.abort();
+            } else {
+                drop(guard); // a panicking leader unwinds through Drop
+            }
+            assert_eq!(waiter.join().unwrap(), FollowOutcome::Aborted);
+            assert_eq!(flights.in_flight(), 0);
+        }
+    }
+}

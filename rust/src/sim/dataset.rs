@@ -43,12 +43,25 @@ impl SizeClass {
         }
     }
 
+    /// The class's representative average file size (MB): the lognormal
+    /// location [`Self::sample_avg_file_mb`] samples around. Anything
+    /// that needs one canonical size per class (e.g. positioning a
+    /// cold-starting knowledge shard in feature space) should use this
+    /// rather than re-stating the constants.
+    pub fn location_mb(&self) -> f64 {
+        match self {
+            SizeClass::Small => 2.0,
+            SizeClass::Medium => 24.0,
+            SizeClass::Large => 200.0,
+        }
+    }
+
     /// Sample a plausible average file size (MB) for this class.
     pub fn sample_avg_file_mb(&self, rng: &mut Rng) -> f64 {
         match self {
-            SizeClass::Small => rng.lognormal(2.0, 0.8).clamp(0.1, 7.9),
-            SizeClass::Medium => rng.lognormal(24.0, 0.6).clamp(8.0, 63.9),
-            SizeClass::Large => rng.lognormal(200.0, 0.7).clamp(64.0, 2048.0),
+            SizeClass::Small => rng.lognormal(self.location_mb(), 0.8).clamp(0.1, 7.9),
+            SizeClass::Medium => rng.lognormal(self.location_mb(), 0.6).clamp(8.0, 63.9),
+            SizeClass::Large => rng.lognormal(self.location_mb(), 0.7).clamp(64.0, 2048.0),
         }
     }
 }

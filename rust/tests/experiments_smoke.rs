@@ -2,7 +2,7 @@
 //! runs at quick scale and satisfies the paper's qualitative claims.
 
 use dtopt::experiments::common::{ExpConfig, World};
-use dtopt::experiments::{fig12, fig3, fig5, fig6, fig7, fleet};
+use dtopt::experiments::{fig12, fig3, fig5, fig6, fig7, fleet, rush};
 use dtopt::runtime::Backend;
 
 fn quick_world() -> World {
@@ -67,6 +67,18 @@ fn fleet_fabric_matches_single_global_kb() {
     assert!(rendered.contains("fabric:"), "{rendered}");
     for (desc, ok) in fleet::headline_checks(&result) {
         assert!(ok, "fleet check failed: {desc}\n{rendered}");
+    }
+}
+
+#[test]
+fn rush_probe_plane_coalesces_the_burst() {
+    let world = quick_world();
+    let result = rush::run(&world, 16, 4);
+    let rendered = rush::render(&result);
+    assert!(rendered.contains("probe-plane"), "{rendered}");
+    assert!(rendered.contains("probe plane:"), "{rendered}");
+    for (desc, ok) in rush::headline_checks(&result) {
+        assert!(ok, "rush check failed: {desc}\n{rendered}");
     }
 }
 

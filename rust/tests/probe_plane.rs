@@ -1,0 +1,77 @@
+//! Integration: the shared probe plane on a fabric-backed coordinator.
+//!
+//! A burst of concurrent requests for one shard must coalesce its
+//! sampling ladders (one leader, the rest piggybacked or served from
+//! the estimate), attribute every response with its `probe_mode`, key
+//! the plane by the serving shard, and render the probe metrics block
+//! alongside the shard table.
+
+use dtopt::coordinator::{Coordinator, CoordinatorConfig, OptimizerKind, TransferRequest};
+use dtopt::fabric::{FabricConfig, ShardKey, ShardRouter};
+use dtopt::logs::generate::{generate, GenConfig};
+use dtopt::offline::kmeans::NativeAssign;
+use dtopt::offline::pipeline::{build, OfflineConfig};
+use dtopt::probe::{ProbeMode, ProbePlane};
+use dtopt::sim::dataset::{Dataset, SizeClass};
+use dtopt::sim::testbed::{Testbed, TestbedId};
+use std::sync::Arc;
+
+#[test]
+fn fabric_coordinator_shares_one_probe_plane_per_shard() {
+    let tb = Testbed::xsede();
+    let rows =
+        generate(&tb, &GenConfig { days: 5, arrivals_per_hour: 25.0, start_day: 0, seed: 71 });
+    let kb = Arc::new(build(&rows, &OfflineConfig::default(), &mut NativeAssign).unwrap());
+    let dir = std::env::temp_dir().join(format!("dtopt_probe_fabric_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let fabric = Arc::new(ShardRouter::open(&dir, kb, FabricConfig::default()).unwrap());
+    let plane = Arc::new(ProbePlane::default());
+    let coord = Coordinator::with_fabric(
+        fabric.clone(),
+        Arc::new(rows),
+        CoordinatorConfig { workers: 3, probe: Some(plane.clone()), ..Default::default() },
+    );
+    let requests: Vec<TransferRequest> = (1..=12)
+        .map(|i| TransferRequest {
+            id: i,
+            testbed: TestbedId::Xsede,
+            dataset: Dataset::new(400, 100.0), // one shard: xsede/large
+            t_submit: 3_600.0 * 10.0,
+            state_override: None,
+            optimizer: Some(OptimizerKind::Asm),
+            seed: 4_000 + i,
+        })
+        .collect();
+    let responses = coord.run_batch(requests);
+
+    // Every response is attributed to the shard AND to a probe mode.
+    let expected_key = ShardKey::new(TestbedId::Xsede, SizeClass::Large);
+    for response in &responses {
+        assert_eq!(response.shard_key, Some(expected_key));
+        assert!(response.probe_mode.is_some(), "ASM under a plane always has a mode");
+    }
+    let led = responses
+        .iter()
+        .filter(|r| r.probe_mode == Some(ProbeMode::Led))
+        .count();
+    assert!(led >= 1, "someone led the sampling ladder");
+    assert!(led < responses.len(), "the burst coalesced instead of all leading");
+
+    // The plane learned an estimate for the serving shard, and sampled
+    // far less than one ladder per request.
+    assert!(!plane.estimates().is_empty());
+    let sampled: usize = responses.iter().map(|r| r.report.sample_transfers()).sum();
+    assert!(sampled < responses.len(), "{sampled} samples across 12 coalesced requests");
+
+    // Metrics: shard table, pooled latency line, and probe block all
+    // render together.
+    let table = coord.metrics.render();
+    assert!(table.contains("fabric:"), "{table}");
+    assert!(table.contains("request latency: p50"), "{table}");
+    assert!(table.contains("probe plane:"), "{table}");
+    assert!(table.contains("xsede/large"), "{table}");
+
+    coord.shutdown();
+    fabric.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
