@@ -66,6 +66,7 @@ fn main() -> anyhow::Result<()> {
             default_optimizer: OptimizerKind::Asm,
             seed: world.config.seed,
             probe: Some(plane),
+            ..Default::default()
         },
     );
 

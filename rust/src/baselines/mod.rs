@@ -36,15 +36,25 @@ pub struct TransferEnv {
 }
 
 impl TransferEnv {
-    pub fn new(testbed: Testbed, dataset: Dataset, state: NetState, seed: u64) -> TransferEnv {
-        let request = RequestInfo {
+    /// The request features a transfer presents to the knowledge base,
+    /// derived from the (possibly fault-shaped) testbed and dataset.
+    /// The single source of truth for this mapping: [`TransferEnv::new`]
+    /// and the scenario runner's pre-admission cluster peeks both call
+    /// it, so they can never disagree about which cluster a request
+    /// lands in.
+    pub fn request_info(testbed: &Testbed, dataset: &Dataset) -> RequestInfo {
+        RequestInfo {
             rtt_ms: testbed.path.link.rtt_ms,
             bandwidth_mbps: testbed.path.link.bandwidth_mbps,
             tcp_buffer_mb: testbed.path.src.tcp_buffer_mb.min(testbed.path.dst.tcp_buffer_mb),
             disk_mbps: testbed.path.src.disk_mbps.min(testbed.path.dst.disk_mbps),
             avg_file_mb: dataset.avg_file_mb,
             num_files: dataset.num_files,
-        };
+        }
+    }
+
+    pub fn new(testbed: Testbed, dataset: Dataset, state: NetState, seed: u64) -> TransferEnv {
+        let request = TransferEnv::request_info(&testbed, &dataset);
         TransferEnv {
             testbed,
             request,

@@ -27,6 +27,7 @@ use crate::logs::record::TransferLog;
 use crate::offline::knowledge::KnowledgeBase;
 use crate::online::asm::AdaptiveSampling;
 use crate::probe::{Admission, ProbeMode, ProbePlane};
+use crate::sim::fault::FaultBoard;
 use crate::sim::params::BETA;
 use crate::sim::testbed::Testbed;
 use crate::sim::traffic::Contention;
@@ -50,6 +51,17 @@ pub struct CoordinatorConfig {
     /// per-shard probe budgets. `None` = every request samples for
     /// itself (the pre-plane behavior).
     pub probe: Option<Arc<ProbePlane>>,
+    /// Fault board consulted while building each request's hidden
+    /// environment: link-capacity degradation and external-load steps
+    /// registered on the board shape the testbed the transfer runs on
+    /// (and the ground-truth optimum it is scored against). `None` =
+    /// pristine testbeds. Driven by the scenario engine's timed fault
+    /// events.
+    pub faults: Option<Arc<FaultBoard>>,
+    /// Timeline tap: every completed response also appends a compact
+    /// [`TapEvent`] here, in completion order — the scenario engine's
+    /// structured event timeline reads from it. `None` = no taping.
+    pub tap: Option<Arc<ResponseTap>>,
 }
 
 impl Default for CoordinatorConfig {
@@ -59,7 +71,58 @@ impl Default for CoordinatorConfig {
             default_optimizer: OptimizerKind::Asm,
             seed: 0xC0,
             probe: None,
+            faults: None,
+            tap: None,
         }
+    }
+}
+
+/// One taped response: the cross-cutting facts the scenario engine's
+/// invariant checkers reason about, without dragging the full
+/// [`RunReport`] into the timeline.
+#[derive(Debug, Clone)]
+pub struct TapEvent {
+    pub id: u64,
+    pub t_submit: f64,
+    pub optimizer: &'static str,
+    pub kb_generation: u64,
+    pub shard_key: Option<ShardKey>,
+    pub borrowed: bool,
+    pub probe_mode: Option<ProbeMode>,
+    pub samples: usize,
+    pub bulk_retunes: usize,
+    pub total_mb: f64,
+    pub transfer_s: f64,
+    pub achieved_mbps: f64,
+}
+
+/// A thread-safe response tap (see [`CoordinatorConfig::tap`]): workers
+/// append one event per completed response; a harness drains them.
+#[derive(Debug, Default)]
+pub struct ResponseTap {
+    events: Mutex<Vec<TapEvent>>,
+}
+
+impl ResponseTap {
+    pub fn new() -> ResponseTap {
+        ResponseTap::default()
+    }
+
+    fn push(&self, event: TapEvent) {
+        self.events.lock().expect("response tap poisoned").push(event);
+    }
+
+    /// Take every taped event, in completion order.
+    pub fn drain(&self) -> Vec<TapEvent> {
+        std::mem::take(&mut *self.events.lock().expect("response tap poisoned"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().expect("response tap poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -94,6 +157,11 @@ struct Shared {
     metrics: Arc<Metrics>,
     /// Shared probe plane for ASM requests (see `CoordinatorConfig`).
     probe: Option<Arc<ProbePlane>>,
+    /// Fault board shaping each request's testbed (see
+    /// `CoordinatorConfig::faults`).
+    faults: Option<Arc<FaultBoard>>,
+    /// Timeline tap fed on every response (see `CoordinatorConfig::tap`).
+    tap: Option<Arc<ResponseTap>>,
 }
 
 enum Job {
@@ -182,6 +250,8 @@ impl Coordinator {
             harp,
             metrics: metrics.clone(),
             probe: config.probe.clone(),
+            faults: config.faults.clone(),
+            tap: config.tap.clone(),
         });
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -270,16 +340,19 @@ fn serve_one(
                 (routed.snapshot, routed.shard, Some(routed.key), routed.borrowed)
             }
         };
-    let testbed = Testbed::by_id(request.testbed);
+    let mut testbed = Testbed::by_id(request.testbed);
+    // Injected faults shape the hidden environment first: a degraded
+    // link narrows the pipe and a load step raises the diurnal floor,
+    // for this transfer *and* for the ground-truth optimum it is scored
+    // against — optimizers only ever see the fault through measurement.
+    if let Some(board) = &shared.faults {
+        board.shape(&mut testbed);
+    }
     // Hidden network state: diurnal profile at submission time (plus
     // contending transfers), unless the request pins a state.
-    let mut state_rng = Rng::new(request.seed ^ 0x57A7E);
-    let state = request.state_override.unwrap_or_else(|| {
-        let load = testbed.profile.sample_load(request.t_submit, &mut state_rng);
-        let contention =
-            Contention::sample(&mut state_rng, testbed.path.link.bandwidth_mbps, load);
-        NetState { external_load: load, contention }
-    });
+    let state = request
+        .state_override
+        .unwrap_or_else(|| hidden_state_for(&testbed, request.seed, request.t_submit));
     // Seeded by the request alone — never by which worker picked the
     // job — so identical request sets produce identical hidden-network
     // draws across runs and coordinators (the experiment harnesses
@@ -346,6 +419,22 @@ fn serve_one(
             }
         }
     }
+    if let Some(tap) = &shared.tap {
+        tap.push(TapEvent {
+            id: request.id,
+            t_submit: request.t_submit,
+            optimizer: report.optimizer,
+            kb_generation: snapshot.generation,
+            shard_key,
+            borrowed,
+            probe_mode,
+            samples: report.sample_transfers(),
+            bulk_retunes: report.bulk_retunes(),
+            total_mb: report.total_mb(),
+            transfer_s: report.total_s(),
+            achieved_mbps: report.achieved_mbps(),
+        });
+    }
     TransferResponse {
         id: request.id,
         optimizer: report.optimizer,
@@ -375,9 +464,30 @@ fn run_asm_with_plane(
     // estimate validity and piggybacking are both keyed on it.
     let cluster_idx = snapshot.kb.query_idx(&env.request);
     let generation = snapshot.generation;
-    let mut asm = AdaptiveSampling::new(&snapshot.kb);
+    let admission = plane.admit(key, cluster_idx, generation, expected_mb);
+    run_admitted_asm(plane, key, cluster_idx, generation, expected_mb, &snapshot.kb, env, admission)
+}
+
+/// Execute one ASM request for an already-decided admission: wire the
+/// convergence hook, run the ladder/bulk, settle the plane. The single
+/// body behind both the worker path above (which lets the plane decide
+/// the admission) and the scenario runner's directly driven coalesced
+/// bursts (which stage admissions themselves) — shared so the replay
+/// can never stop mirroring production's settle logic.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_admitted_asm<'kb>(
+    plane: &'kb ProbePlane,
+    key: ShardKey,
+    cluster_idx: Option<usize>,
+    generation: u64,
+    expected_mb: f64,
+    kb: &'kb KnowledgeBase,
+    env: &mut TransferEnv,
+    admission: Admission,
+) -> (RunReport, ProbeMode) {
+    let mut asm = AdaptiveSampling::new(kb);
     asm.cluster_hint = cluster_idx; // don't repeat the centroid lookup
-    match plane.admit(key, cluster_idx, generation, expected_mb) {
+    match admission {
         Admission::Lead { guard, warm_start } => {
             asm.start_surface = warm_start;
             // Followers are released the moment the ladder converges —
@@ -408,10 +518,26 @@ fn run_asm_with_plane(
     }
 }
 
+/// The hidden-state draw for a request: seeded by the request alone —
+/// never by which worker picked the job — so identical request sets
+/// produce identical hidden-network draws across runs and
+/// coordinators. `pub(crate)` as the single source of truth: the
+/// scenario runner's coalesced-burst path calls it too, so a directly
+/// driven environment draws exactly what the worker path would have.
+pub(crate) fn hidden_state_for(testbed: &Testbed, request_seed: u64, t_submit: f64) -> NetState {
+    let mut state_rng = Rng::new(request_seed ^ 0x57A7E);
+    let load = testbed.profile.sample_load(t_submit, &mut state_rng);
+    let contention =
+        Contention::sample(&mut state_rng, testbed.path.link.bandwidth_mbps, load);
+    NetState { external_load: load, contention }
+}
+
 /// Render a completed request as a log row with the same schema the
 /// offline analysis mines from historical logs: request shape, the
 /// *final* parameter decision, and the steady throughput it sustained.
-fn completed_log(
+/// `pub(crate)` so the scenario engine's coalesced-burst path can feed
+/// the serving shard exactly like the worker path does.
+pub(crate) fn completed_log(
     request: &TransferRequest,
     testbed: &Testbed,
     state: &NetState,
@@ -668,6 +794,55 @@ mod tests {
         coord.shutdown();
         service.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fault_board_degrades_served_requests_and_tap_records_them() {
+        use crate::sim::fault::FaultBoard;
+
+        let tb = Testbed::xsede();
+        let rows =
+            generate(&tb, &GenConfig { days: 5, arrivals_per_hour: 25.0, start_day: 0, seed: 61 });
+        let kb = Arc::new(build(&rows, &OfflineConfig::default(), &mut NativeAssign).unwrap());
+        let board = Arc::new(FaultBoard::new());
+        let tap = Arc::new(ResponseTap::new());
+        let coord = Coordinator::new(
+            kb,
+            Arc::new(rows),
+            CoordinatorConfig {
+                workers: 1,
+                faults: Some(board.clone()),
+                tap: Some(tap.clone()),
+                ..Default::default()
+            },
+        );
+        // Same request (same seed, same hidden draws) healthy vs under a
+        // halved link: the degraded run must be scored against — and
+        // bounded by — the narrower pipe.
+        let healthy = &coord.run_batch(vec![request(1, Some(OptimizerKind::Go))])[0];
+        board.degrade_link(TestbedId::Xsede, 0.3);
+        let degraded = &coord.run_batch(vec![request(1, Some(OptimizerKind::Go))])[0];
+        assert!(
+            degraded.optimal_mbps < healthy.optimal_mbps,
+            "degraded optimum {} vs healthy {}",
+            degraded.optimal_mbps,
+            healthy.optimal_mbps
+        );
+        assert!(
+            degraded.report.achieved_mbps() < healthy.report.achieved_mbps(),
+            "degraded {} vs healthy {}",
+            degraded.report.achieved_mbps(),
+            healthy.report.achieved_mbps()
+        );
+        board.restore_link(TestbedId::Xsede);
+        let healed = &coord.run_batch(vec![request(1, Some(OptimizerKind::Go))])[0];
+        assert_eq!(healed.optimal_mbps, healthy.optimal_mbps, "restore heals exactly");
+        // The tap recorded all three responses in completion order.
+        let taped = tap.drain();
+        assert_eq!(taped.len(), 3);
+        assert!(taped.iter().all(|e| e.optimizer == "GO" && e.total_mb > 0.0));
+        assert!(tap.is_empty(), "drain empties the tap");
+        coord.shutdown();
     }
 
     #[test]

@@ -74,6 +74,8 @@ impl World {
                 default_optimizer: OptimizerKind::Asm,
                 seed: self.config.seed,
                 probe: None,
+                faults: None,
+                tap: None,
             },
         )
     }
@@ -93,6 +95,8 @@ impl World {
                 default_optimizer: OptimizerKind::Asm,
                 seed: self.config.seed,
                 probe: Some(probe),
+                faults: None,
+                tap: None,
             },
         )
     }

@@ -125,6 +125,22 @@ impl ShardMap {
         Ok((shard, evicted))
     }
 
+    /// Forcibly evict one shard (fault injection — the scenario
+    /// engine's shard-churn events; the LRU cap evicts organically).
+    /// The shard is removed from the map and shut down — its queue
+    /// spilled to its partitions — under the materialization lock, so a
+    /// concurrent rematerialization of the same key can never race the
+    /// spill. Returns the evicted shard, `None` when the key was not
+    /// live.
+    pub fn evict(&self, key: &ShardKey) -> Option<Arc<Shard>> {
+        let _guard = self.materialize_lock.lock().expect("materialize lock poisoned");
+        let shard = self.shards.write().expect("shard map poisoned").remove(key);
+        if let Some(cold) = &shard {
+            cold.shutdown();
+        }
+        shard
+    }
+
     /// Snapshot of every live shard (metrics, tick sweeps), sorted by
     /// key for stable rendering.
     pub fn live(&self) -> Vec<Arc<Shard>> {

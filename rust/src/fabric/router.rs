@@ -224,6 +224,22 @@ impl ShardRouter {
         self.map.live().iter().all(|shard| shard.flush_barrier(timeout))
     }
 
+    /// Fault hook: forcibly evict `key`'s shard (the scenario engine's
+    /// shard-churn injection). The shard spills its queue to its
+    /// partitions and leaves the map; the next route rematerializes it
+    /// from that spill — natively when enough rows were banked, via a
+    /// fresh borrow otherwise. Counted with the LRU's evictions.
+    /// Returns whether a live shard was actually evicted.
+    pub fn evict(&self, key: &ShardKey) -> bool {
+        match self.map.evict(key) {
+            Some(_) => {
+                self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
     pub fn live_shards(&self) -> Vec<Arc<Shard>> {
         self.map.live()
     }
@@ -467,6 +483,40 @@ mod tests {
         assert!(table.contains("didclab/medium"), "{table}");
         assert!(table.contains("native"), "{table}");
         assert!(table.contains("1 native fits"), "{table}");
+        r.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn forced_eviction_spills_and_rematerializes_natively() {
+        let dir = tmpdir("evict");
+        let config = FabricConfig {
+            shard: ShardConfig { min_native_rows: 25, ..Default::default() },
+            ..Default::default()
+        };
+        let r = router(&dir, config);
+        let key = ShardKey::new(TestbedId::Didclab, SizeClass::Medium);
+        let shard = r.route(key).shard.unwrap();
+        assert!(shard.is_borrowed());
+        for row in generate(
+            &Testbed::didclab(),
+            &GenConfig { days: 1, arrivals_per_hour: 10.0, start_day: 0, seed: 81 },
+        )
+        .into_iter()
+        .take(30)
+        {
+            shard.offer(row);
+        }
+        assert!(r.flush_all(Duration::from_secs(30)));
+        assert!(r.evict(&key), "live shard evicts");
+        assert!(!r.evict(&key), "double eviction is a no-op");
+        assert_eq!(r.stats.evictions.load(Ordering::Relaxed), 1);
+        assert!(r.shard(&key).is_none(), "evicted shard left the map");
+        // The spill banked >= min_native_rows rows, so the next route
+        // rematerializes the shard natively from its own partitions.
+        let again = r.route(key);
+        assert!(!again.borrowed, "rematerializes natively from the spill");
+        assert_eq!(again.shard.unwrap().native_rows(), 30);
         r.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -67,9 +67,27 @@
 //! surface; skip sampling entirely when confidence clears the
 //! threshold), and every response reports its `probe_mode`.
 //!
+//! ## The scenario engine (`crate::scenario`)
+//!
+//! The hard cases for all of the above are *regime changes*: load
+//! shifts, stale history, contention spikes, churned shards. The
+//! [`scenario`] subsystem composes them deterministically: a scripted
+//! workload trace (plain-text fixture files under `rust/scenarios/`)
+//! replays through the full stack — coordinator → fabric → probe plane
+//! → ASM — while timed faults hit each layer through its own fault
+//! hook (`sim::fault::FaultBoard`, probe-budget starvation, forced
+//! shard eviction, forced/paused refresh). The runner records a
+//! structured event timeline (byte-identical across same-seed runs)
+//! and cross-cutting invariant checkers judge it: estimate
+//! cluster/generation guards, piggyback-leader match, monotone shard
+//! generations, non-negative budgets, bounded goodput degradation
+//! against a fault-free control replay. `dtopt scenario <name|file>`
+//! runs one; `tests/scenario_conformance.rs` runs the bundled library.
+//!
 //! See `DESIGN.md` (repo root) for the layering diagram, the feedback
 //! dataflow, the fabric's routing diagram and shard lifecycle, the
-//! probe-plane dataflow, and the experiment index.
+//! probe-plane dataflow, the scenario engine's dataflow and scenario
+//! library, and the experiment index.
 
 pub mod logs;
 pub mod math;
@@ -82,5 +100,6 @@ pub mod experiments;
 pub mod fabric;
 pub mod feedback;
 pub mod probe;
+pub mod scenario;
 pub mod sim;
 pub mod util;

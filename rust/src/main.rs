@@ -9,6 +9,8 @@
 //!   serve      [--requests N] [--workers W] [--optimizer O] [--fabric]
 //!   experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|all
 //!              [--quick|--full]
+//!   scenario   <name|file> [--seed S] [--full] [--timeline]
+//!              deterministic fault-injecting replay + invariant verdict
 //!   selftest                     quick end-to-end sanity run
 
 use anyhow::{bail, Context, Result};
@@ -105,6 +107,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "transfer" => cmd_transfer(&opts),
         "serve" => cmd_serve(&opts),
         "experiment" => cmd_experiment(&opts),
+        "scenario" => cmd_scenario(&opts),
         "selftest" => cmd_selftest(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -125,6 +128,7 @@ fn print_help() {
          transfer --testbed T --files N --avg-mb M [--optimizer O] [--kb F] [--load L]\n  \
          serve [--requests N] [--workers W] [--optimizer O] [--fabric]\n  \
          experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|all [--quick|--full]\n  \
+         scenario <name|file> [--seed S] [--full] [--timeline]\n  \
          selftest"
     );
 }
@@ -214,6 +218,8 @@ fn cmd_transfer(opts: &Opts) -> Result<()> {
             default_optimizer: optimizer,
             seed,
             probe: None,
+            faults: None,
+            tap: None,
         },
     );
     let mut rng = Rng::new(seed);
@@ -305,6 +311,8 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         default_optimizer: OptimizerKind::Asm,
         seed: world.config.seed,
         probe: Some(plane),
+        faults: None,
+        tap: None,
     };
     let coord = match (&fabric, &service) {
         (Some(router), _) => {
@@ -494,6 +502,50 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
     } else {
         run_one(which, world.as_ref())
     }
+}
+
+/// Run one scenario by bundled name or fixture-file path. Exits
+/// non-zero (via the error path) on an unknown/missing name AND on any
+/// invariant violation, so CI and scripts can gate on it.
+fn cmd_scenario(opts: &Opts) -> Result<()> {
+    use dtopt::scenario::{render_timeline, render_verdict, run, RunOptions, Scenario};
+
+    let names = dtopt::scenario::script::bundled_names().join("|");
+    let Some(which) = opts.positional.first().map(|s| s.as_str()) else {
+        bail!("scenario name or file required; bundled: {names}");
+    };
+    let scenario = match dtopt::scenario::script::bundled(which) {
+        Some(text) => Scenario::parse(text)
+            .with_context(|| format!("bundled scenario '{which}' failed to parse"))?,
+        None => {
+            let path = std::path::Path::new(which);
+            if !path.is_file() {
+                bail!("unknown scenario '{which}' and no such file; bundled: {names}");
+            }
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading scenario file '{which}'"))?;
+            Scenario::parse(&text)
+                .with_context(|| format!("scenario file '{which}' failed to parse"))?
+        }
+    };
+    let options = RunOptions {
+        quick: !opts.has("full"),
+        seed_override: opts.get("seed").map(|s| s.parse::<u64>()).transpose()
+            .context("--seed expects an integer")?,
+    };
+    let outcome = run(&scenario, &options)?;
+    if opts.has("timeline") {
+        print!("{}", render_timeline(&outcome.timeline));
+        println!();
+    }
+    print!("{}", render_verdict(&outcome));
+    let violations: usize = outcome.reports.iter().map(|r| r.violations.len()).sum();
+    anyhow::ensure!(
+        outcome.passed(),
+        "scenario '{}' violated {violations} invariant check(s)",
+        outcome.name
+    );
+    Ok(())
 }
 
 fn cmd_selftest() -> Result<()> {

@@ -185,6 +185,21 @@ pub struct KnowledgeBase {
 }
 
 impl KnowledgeBase {
+    /// An empty knowledge base (no history at all): queries miss and
+    /// the online path takes its cold-start fallback. A deterministic
+    /// stand-in wherever the KB's *content* is irrelevant — fabric
+    /// fallbacks in harnesses, golden-render fixtures.
+    pub fn empty() -> KnowledgeBase {
+        KnowledgeBase {
+            normalizer: Normalizer { mean: [0.0; FEATURE_DIM], std: [1.0; FEATURE_DIM] },
+            clusters: Vec::new(),
+            k_scores: Vec::new(),
+            built_through_day: 0,
+            region_config: RegionConfig::default(),
+            seed: 0,
+        }
+    }
+
     /// Constant-time cluster lookup for a request (nearest centroid).
     pub fn query(&self, request: &RequestInfo) -> Option<&ClusterKnowledge> {
         self.query_idx(request).map(|idx| &self.clusters[idx])

@@ -126,7 +126,23 @@ impl EstimateStore {
             .map(|e| (*e, e.decayed(&self.config, serving_generation)))
     }
 
-    /// Overwrite the shard's estimate with a fresh observation.
+    /// The raw stored estimate for `key`, regardless of cluster or
+    /// generation — an observation hook for harnesses (the scenario
+    /// engine's invariant checkers peek before admission to verify the
+    /// plane never serves a cluster- or generation-mismatched
+    /// estimate). Request-path lookups go through [`Self::current`],
+    /// which enforces the cluster guard.
+    pub fn peek(&self, key: ShardKey) -> Option<NetworkEstimate> {
+        self.inner.lock().expect("estimate store poisoned").get(&key).copied()
+    }
+
+    /// Record a fresh observation, ranked by evidence: re-recording the
+    /// estimate the shard already holds (same cluster, surface, and
+    /// generation) never *lowers* its confidence — weaker evidence for
+    /// the same conclusion must not erase stronger evidence. An
+    /// observation that re-points the estimate (different surface,
+    /// cluster, or generation) is new information and replaces the old
+    /// record outright, whatever its confidence.
     pub fn record(
         &self,
         key: ShardKey,
@@ -137,6 +153,16 @@ impl EstimateStore {
         generation: u64,
     ) {
         let mut map = self.inner.lock().expect("estimate store poisoned");
+        let confidence = match map.get(&key) {
+            Some(e)
+                if e.cluster_idx == cluster_idx
+                    && e.surface_idx == surface_idx
+                    && e.generation == generation =>
+            {
+                confidence.max(e.decayed(&self.config, generation))
+            }
+            _ => confidence,
+        };
         map.insert(
             key,
             NetworkEstimate {
@@ -266,6 +292,161 @@ mod tests {
             (new_gen - same_gen * config.generation_penalty).abs() < 0.05,
             "penalty not applied: {new_gen} vs {same_gen}"
         );
+    }
+
+    // --- property tests (same `util::proptest` harness as budget.rs) ---
+
+    use crate::util::proptest::{forall, Config};
+
+    #[test]
+    fn property_decay_is_monotone_in_elapsed_time() {
+        forall(
+            Config { cases: 200, seed: 0xDECA1 },
+            |rng| {
+                (
+                    rng.range_f64(0.0, 1.0), // confidence
+                    rng.range_u(10, 2_000),  // half-life (ms)
+                    rng.range_u(0, 2_000),   // younger age (ms)
+                    rng.range_u(1, 3_000),   // extra age of the older twin (ms)
+                )
+            },
+            |&(confidence, half_life_ms, young_ms, extra_ms)| {
+                let config = EstimateConfig {
+                    half_life: Duration::from_millis(half_life_ms),
+                    ..Default::default()
+                };
+                let now = Instant::now();
+                let estimate_aged = |age_ms: u64| {
+                    now.checked_sub(Duration::from_millis(age_ms)).map(|updated_at| {
+                        NetworkEstimate {
+                            cluster_idx: 0,
+                            surface_idx: 0,
+                            intensity: 0.5,
+                            confidence,
+                            generation: 0,
+                            updated_at,
+                        }
+                    })
+                };
+                let (Some(young), Some(old)) =
+                    (estimate_aged(young_ms), estimate_aged(young_ms + extra_ms))
+                else {
+                    return Ok(()); // clock too close to boot to back-date
+                };
+                // The older estimate is evaluated second, so its true age
+                // is strictly larger; monotone decay must hold anyway.
+                let young_conf = young.decayed(&config, 0);
+                let old_conf = old.decayed(&config, 0);
+                if old_conf > young_conf + 1e-9 {
+                    return Err(format!(
+                        "confidence rose with age: {old_conf} (older) > {young_conf} (younger)"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_generation_penalty_never_raises_confidence() {
+        forall(
+            Config { cases: 200, seed: 0x6E4A },
+            |rng| {
+                (
+                    rng.range_f64(0.0, 1.0), // recorded confidence
+                    rng.range_f64(0.0, 1.0), // generation penalty
+                    rng.range_u(0, 40),      // recorded generation
+                )
+            },
+            |&(confidence, penalty, generation)| {
+                let config = EstimateConfig {
+                    half_life: Duration::from_secs(500),
+                    generation_penalty: penalty,
+                    ..Default::default()
+                };
+                let store = EstimateStore::new(config);
+                store.record(key(), 0, 1, 0.5, confidence, generation);
+                let (_, same_gen) = store.current(key(), 0, generation).unwrap();
+                let (_, cross_gen) = store.current(key(), 0, generation + 1).unwrap();
+                if cross_gen > same_gen + 1e-9 {
+                    return Err(format!(
+                        "cross-generation penalty raised confidence: {cross_gen} > {same_gen}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_record_never_replaces_stronger_evidence_for_same_conclusion() {
+        forall(
+            Config { cases: 300, seed: 0xE71D },
+            |rng| -> Vec<(usize, usize, u64, f64)> {
+                (0..rng.range_u(1, 30))
+                    .map(|_| {
+                        (
+                            rng.index(2),            // cluster
+                            rng.index(3),            // surface
+                            rng.range_u(0, 2),       // generation
+                            rng.range_f64(0.0, 1.0), // confidence
+                        )
+                    })
+                    .collect()
+            },
+            |ops| {
+                let store = EstimateStore::new(EstimateConfig {
+                    half_life: Duration::from_secs(500),
+                    ..Default::default()
+                });
+                for &(cluster, surface, generation, confidence) in ops {
+                    let before = store.peek(key());
+                    store.record(key(), cluster, surface, 0.4, confidence, generation);
+                    let after = store.peek(key()).expect("just recorded");
+                    // Incoming evidence is always at least honored.
+                    if after.confidence + 1e-9 < confidence.min(1.0) {
+                        return Err(format!(
+                            "recorded at {confidence} but stored only {}",
+                            after.confidence
+                        ));
+                    }
+                    // Same conclusion (cluster, surface, generation):
+                    // stronger prior evidence must survive a weaker
+                    // re-record. The floor is computed after the record,
+                    // so it has decayed at least as much as the value the
+                    // store compared against.
+                    if let Some(prev) = before {
+                        if prev.cluster_idx == cluster
+                            && prev.surface_idx == surface
+                            && prev.generation == generation
+                        {
+                            let floor = prev.decayed(store.config(), generation);
+                            if after.confidence + 1e-6 < floor.min(1.0) {
+                                return Err(format!(
+                                    "weaker re-record dropped confidence to {} (floor {floor})",
+                                    after.confidence
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn peek_returns_raw_estimate_across_clusters() {
+        let store = EstimateStore::new(EstimateConfig {
+            half_life: Duration::from_secs(500),
+            ..Default::default()
+        });
+        assert!(store.peek(key()).is_none());
+        store.record(key(), 2, 3, 0.5, 1.0, 7);
+        // `current` under another cluster misses; `peek` still sees it.
+        assert!(store.current(key(), 0, 7).is_none());
+        let raw = store.peek(key()).unwrap();
+        assert_eq!((raw.cluster_idx, raw.surface_idx, raw.generation), (2, 3, 7));
     }
 
     #[test]

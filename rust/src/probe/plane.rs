@@ -171,6 +171,28 @@ impl ProbePlane {
         (total_mb * self.config.expected_sample_fraction).clamp(1.0, 4096.0)
     }
 
+    /// Fault hook: drain the shard's probe budget to zero (the scenario
+    /// engine's probe-famine injection). Until bulk traffic earns
+    /// tokens back, admissions on the shard are budget-forced onto the
+    /// current estimate.
+    pub fn starve_budget(&self, key: ShardKey) {
+        let budget = self.budget(key);
+        budget.drain(budget.capacity_mb());
+    }
+
+    /// Followers currently blocked on `key`'s in-progress sampling
+    /// ladder (0 when none is flying). Harness hook: the scenario
+    /// engine's coalesced bursts wait for their cohort to join before
+    /// running the leader, so replay admission is deterministic.
+    pub fn waiting_followers(&self, key: ShardKey) -> usize {
+        self.flights.waiters(key)
+    }
+
+    /// Sampling ladders currently in flight (diagnostics).
+    pub fn in_flight(&self) -> usize {
+        self.flights.in_flight()
+    }
+
     /// Decide how a request for `key` (mapping to KB cluster
     /// `cluster_idx`, served at `generation`) obtains network
     /// knowledge. Never blocks longer than `follower_wait`.
@@ -617,6 +639,34 @@ mod tests {
         match plane.admit(key(), Some(0), 0, 10.0) {
             Admission::Serve(Some(4)) => {}
             _ => panic!("drift confidence (0.7) clears the serve threshold"),
+        }
+    }
+
+    #[test]
+    fn starved_budget_forces_estimate_reuse_until_bulk_earns() {
+        let plane = ProbePlane::new(ProbeConfig {
+            budget: BudgetConfig { capacity_mb: 500.0, initial_mb: 500.0, earn_fraction: 0.1 },
+            ..Default::default()
+        });
+        plane.starve_budget(key());
+        assert_eq!(plane.budget(key()).available_mb(), 0.0);
+        match plane.admit(key(), Some(0), 0, 50.0) {
+            Admission::Serve(None) => {}
+            _ => panic!("starved budget must force estimate reuse"),
+        }
+        assert_eq!(plane.stats.budget_forced.load(Ordering::Relaxed), 1);
+        // Bulk traffic earns tokens back; probing resumes.
+        plane.finish_passive(
+            key(),
+            None,
+            None,
+            &report(0.0, &[Params::new(4, 4, 2)]),
+            0,
+        );
+        assert!(plane.budget(key()).available_mb() > 0.0);
+        match plane.admit(key(), Some(0), 0, 10.0) {
+            Admission::Lead { .. } => {}
+            _ => panic!("earned budget must allow probing again"),
         }
     }
 

@@ -11,6 +11,7 @@
 
 use crate::fabric::ShardKey;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -39,15 +40,35 @@ enum FlightState {
 pub struct Flight {
     state: Mutex<FlightState>,
     cv: Condvar,
+    /// Followers currently blocked in [`Flight::wait`] — an observation
+    /// hook for harnesses that need to know a coalesced cohort has
+    /// fully joined before releasing the leader (scenario engine).
+    waiters: AtomicUsize,
 }
 
 impl Flight {
     fn new() -> Flight {
-        Flight { state: Mutex::new(FlightState::Pending), cv: Condvar::new() }
+        Flight {
+            state: Mutex::new(FlightState::Pending),
+            cv: Condvar::new(),
+            waiters: AtomicUsize::new(0),
+        }
+    }
+
+    /// Followers currently blocked in [`Flight::wait`].
+    pub fn waiting(&self) -> usize {
+        self.waiters.load(Ordering::SeqCst)
     }
 
     /// Wait (bounded) for the leader's result.
     pub fn wait(&self, timeout: Duration) -> FollowOutcome {
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        let outcome = self.wait_inner(timeout);
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+        outcome
+    }
+
+    fn wait_inner(&self, timeout: Duration) -> FollowOutcome {
         let deadline = Instant::now() + timeout;
         let mut state = self.state.lock().expect("flight poisoned");
         loop {
@@ -119,6 +140,17 @@ impl SingleFlight {
     /// Number of in-progress flights (diagnostics).
     pub fn in_flight(&self) -> usize {
         self.inner.lock().expect("flight map poisoned").len()
+    }
+
+    /// Followers currently blocked on `key`'s in-progress flight (0
+    /// when no flight is registered). Harness hook: lets a driver know
+    /// a coalesced cohort has joined before the leader converges.
+    pub fn waiters(&self, key: ShardKey) -> usize {
+        self.inner
+            .lock()
+            .expect("flight map poisoned")
+            .get(&key)
+            .map_or(0, |flight| flight.waiting())
     }
 }
 
@@ -210,6 +242,32 @@ mod tests {
         // The key is clear again: the next request leads.
         assert_eq!(flights.in_flight(), 0);
         assert!(matches!(flights.lead_or_join(key()), Role::Leader(_)));
+    }
+
+    #[test]
+    fn waiters_counts_blocked_followers() {
+        let flights = SingleFlight::new();
+        assert_eq!(flights.waiters(key()), 0, "no flight, no waiters");
+        let guard = match flights.lead_or_join(key()) {
+            Role::Leader(guard) => guard,
+            Role::Follower(_) => panic!("fresh map must elect a leader"),
+        };
+        assert_eq!(flights.waiters(key()), 0, "a flight with no followers yet");
+        let waiter = {
+            let flights = flights.clone();
+            std::thread::spawn(move || match flights.lead_or_join(key()) {
+                Role::Follower(flight) => flight.wait(Duration::from_secs(30)),
+                Role::Leader(_) => panic!("second leader elected"),
+            })
+        };
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while flights.waiters(key()) < 1 && Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(flights.waiters(key()), 1);
+        guard.complete(ProbeResult { cluster_idx: 0, generation: 0, surface_idx: 1, intensity: 0.2 });
+        assert!(matches!(waiter.join().unwrap(), FollowOutcome::Result(_)));
+        assert_eq!(flights.waiters(key()), 0, "flight cleared with its waiters");
     }
 
     #[test]

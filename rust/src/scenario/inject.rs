@@ -1,0 +1,190 @@
+//! Timed fault events — the regime changes a scenario injects while the
+//! replay runs.
+//!
+//! Each [`FaultEvent`] fires at a virtual time and mutates exactly one
+//! layer of the stack through that layer's own fault hook:
+//!
+//! * link-capacity degradation / recovery and external-load steps go to
+//!   the [`FaultBoard`] the coordinator consults per request
+//!   (`sim::fault`);
+//! * probe-budget starvation drains the shard's token bucket
+//!   (`ProbePlane::starve_budget`);
+//! * forced shard eviction spills and removes a live shard
+//!   (`ShardRouter::evict`);
+//! * a forced refresh re-publishes the shard's knowledge base as the
+//!   next snapshot generation — the stack-rebuild a real additive
+//!   refresh performs, minus the fit, so replay stays fast and
+//!   deterministic;
+//! * pause/resume-refresh gate the runner's maintenance sweep, so
+//!   snapshots go stale exactly the way a delayed refresher leaves them.
+//!
+//! Everything here is deterministic: faults carry no randomness and are
+//! applied at fixed points in the replay's op order.
+
+use crate::fabric::{ShardKey, ShardRouter};
+use crate::probe::ProbePlane;
+use crate::sim::fault::FaultBoard;
+use crate::sim::testbed::TestbedId;
+
+/// One injectable fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// Scale the network's bottleneck capacity to `factor` (0..1].
+    DegradeLink { network: TestbedId, factor: f64 },
+    /// Heal the network's link back to full capacity.
+    RestoreLink { network: TestbedId },
+    /// Step the network's base external load by `delta`.
+    LoadStep { network: TestbedId, delta: f64 },
+    /// Clear the network's load step.
+    ClearLoad { network: TestbedId },
+    /// Drain the shard's probe budget to zero.
+    StarveBudget { key: ShardKey },
+    /// Forcibly evict the shard (spill + remove; rematerializes on the
+    /// next request for the key).
+    EvictShard { key: ShardKey },
+    /// Publish the shard's KB as the next snapshot generation (a
+    /// refresh's generation bump and stack rebuild, without the fit).
+    ForceRefresh { key: ShardKey },
+    /// Stop the runner's refresh sweep: ingested rows pile up and
+    /// snapshots go stale until [`Fault::ResumeRefresh`].
+    PauseRefresh,
+    /// Resume the runner's refresh sweep.
+    ResumeRefresh,
+}
+
+impl Fault {
+    /// Deterministic one-line description (timeline rendering).
+    pub fn describe(&self) -> String {
+        match self {
+            Fault::DegradeLink { network, factor } => {
+                format!("degrade-link {} {factor:.2}", network.name())
+            }
+            Fault::RestoreLink { network } => format!("restore-link {}", network.name()),
+            Fault::LoadStep { network, delta } => {
+                format!("load-step {} {delta:+.2}", network.name())
+            }
+            Fault::ClearLoad { network } => format!("clear-load {}", network.name()),
+            Fault::StarveBudget { key } => format!("starve-budget {key}"),
+            Fault::EvictShard { key } => format!("evict-shard {key}"),
+            Fault::ForceRefresh { key } => format!("force-refresh {key}"),
+            Fault::PauseRefresh => "pause-refresh".to_string(),
+            Fault::ResumeRefresh => "resume-refresh".to_string(),
+        }
+    }
+}
+
+/// One fault scheduled at a virtual time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at_s: f64,
+    pub fault: Fault,
+}
+
+/// The handles a fault can touch.
+pub struct FaultTargets<'a> {
+    pub board: &'a FaultBoard,
+    pub plane: &'a ProbePlane,
+    pub router: &'a ShardRouter,
+}
+
+/// What applying a fault additionally tells the timeline recorder.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Applied {
+    /// The fault took effect (possibly trivially); record it.
+    Done,
+    /// A forced refresh published this generation; record the fault
+    /// plus a refresh event.
+    Refreshed { key: ShardKey, generation: u64 },
+    /// The eviction found no live shard. The runner must NOT record the
+    /// fault event: the monotone-generations checker legalizes a
+    /// generation reset at a recorded eviction, and a no-op eviction
+    /// must not hand out that license.
+    EvictionNoop,
+}
+
+/// Apply one fault to the stack.
+pub fn apply(fault: &Fault, targets: &FaultTargets<'_>, refresh_paused: &mut bool) -> Applied {
+    match fault {
+        Fault::DegradeLink { network, factor } => {
+            targets.board.degrade_link(*network, *factor);
+        }
+        Fault::RestoreLink { network } => targets.board.restore_link(*network),
+        Fault::LoadStep { network, delta } => targets.board.load_step(*network, *delta),
+        Fault::ClearLoad { network } => targets.board.clear_load(*network),
+        Fault::StarveBudget { key } => targets.plane.starve_budget(*key),
+        Fault::EvictShard { key } => {
+            if !targets.router.evict(key) {
+                return Applied::EvictionNoop;
+            }
+        }
+        Fault::ForceRefresh { key } => {
+            // Materialize on demand so the bump lands even if no request
+            // has touched the key yet, then re-publish the current KB as
+            // the next generation.
+            let routed = targets.router.route(*key);
+            if let Some(shard) = routed.shard {
+                let kb = shard.slot.resolve().kb.clone();
+                let generation = shard.slot.publish(kb);
+                return Applied::Refreshed { key: *key, generation };
+            }
+        }
+        Fault::PauseRefresh => *refresh_paused = true,
+        Fault::ResumeRefresh => *refresh_paused = false,
+    }
+    Applied::Done
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::dataset::SizeClass;
+
+    #[test]
+    fn describe_is_stable_and_distinct() {
+        let key = ShardKey::new(TestbedId::Xsede, SizeClass::Large);
+        let faults = [
+            Fault::DegradeLink { network: TestbedId::Xsede, factor: 0.5 },
+            Fault::RestoreLink { network: TestbedId::Xsede },
+            Fault::LoadStep { network: TestbedId::Xsede, delta: 0.25 },
+            Fault::ClearLoad { network: TestbedId::Xsede },
+            Fault::StarveBudget { key },
+            Fault::EvictShard { key },
+            Fault::ForceRefresh { key },
+            Fault::PauseRefresh,
+            Fault::ResumeRefresh,
+        ];
+        let mut seen: Vec<String> = faults.iter().map(|f| f.describe()).collect();
+        assert_eq!(seen[0], "degrade-link xsede 0.50");
+        assert_eq!(seen[2], "load-step xsede +0.25");
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen.len(), faults.len(), "descriptions must be distinct");
+    }
+
+    #[test]
+    fn pause_and_resume_toggle_the_flag() {
+        let board = FaultBoard::new();
+        let plane = ProbePlane::default();
+        let dir = std::env::temp_dir()
+            .join(format!("dtopt_inject_pause_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let kb = std::sync::Arc::new(crate::offline::knowledge::KnowledgeBase::empty());
+        let router =
+            ShardRouter::open(&dir, kb, crate::fabric::FabricConfig::default()).unwrap();
+        let targets = FaultTargets { board: &board, plane: &plane, router: &router };
+        let mut paused = false;
+        assert_eq!(apply(&Fault::PauseRefresh, &targets, &mut paused), Applied::Done);
+        assert!(paused);
+        assert_eq!(apply(&Fault::ResumeRefresh, &targets, &mut paused), Applied::Done);
+        assert!(!paused);
+        // Evicting a shard that was never materialized is a no-op the
+        // timeline must not record (a generation-reset license).
+        let key = ShardKey::new(TestbedId::Xsede, SizeClass::Large);
+        assert_eq!(
+            apply(&Fault::EvictShard { key }, &targets, &mut paused),
+            Applied::EvictionNoop
+        );
+        router.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,540 @@
+//! The structured replay timeline and the cross-cutting invariant
+//! checkers evaluated over it.
+//!
+//! The runner records one [`Event`] per fault application, refresh
+//! publication, and served response. Every field is derived from the
+//! simulation (virtual times, seeds, deterministic settlement) — never
+//! from wall clocks — so two same-seed replays produce byte-identical
+//! timelines, and the checkers below are pure functions of the event
+//! list:
+//!
+//! * **estimate-cluster-guard** — no response is ever served from an
+//!   estimate recorded for a different KB cluster (a surface index is
+//!   meaningless in another cluster's stack).
+//! * **estimate-generation-guard** — no response is ever served from an
+//!   estimate recorded under a different KB generation (a refresh can
+//!   rebuild the stack under the index). This is the invariant that
+//!   catches removal of PR 3's cross-generation penalty.
+//! * **piggyback-leader-match** — a piggybacked follower always matches
+//!   its leader's cluster and KB generation.
+//! * **monotone-generations** — the KB generations observed on each
+//!   shard never go backwards, except across an injected eviction
+//!   (which the checker accounts for explicitly).
+//! * **budget-non-negative** — the probe budget never goes negative
+//!   (nor above capacity, which the bucket enforces by construction).
+//! * **goodput-floor** — computed by the runner against a fault-free
+//!   control replay; reported through the same [`InvariantReport`]
+//!   shape.
+//! * **starvation-serves** — with a starved, zero-earn budget, requests
+//!   on the starved shard never lead a sampling ladder again.
+
+use super::inject::Fault;
+use crate::fabric::ShardKey;
+use crate::probe::ProbeMode;
+use std::collections::HashMap;
+
+/// The estimate the runner peeked immediately before a sequential
+/// request's admission (race-free: replay is single-threaded outside
+/// coalesced bursts).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EstimateObs {
+    pub cluster: usize,
+    pub surface: usize,
+    pub generation: u64,
+    /// Its decayed confidence — under the serving generation, penalty
+    /// included — cleared the plane's serve threshold at admission.
+    pub confident: bool,
+}
+
+/// A piggybacked follower's view of the leader result it adopted.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PiggybackObs {
+    pub leader_cluster: usize,
+    pub leader_generation: u64,
+}
+
+/// One served response on the replay timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResponseEvent {
+    pub t_s: f64,
+    pub id: u64,
+    pub key: ShardKey,
+    pub generation: u64,
+    pub borrowed: bool,
+    pub mode: Option<ProbeMode>,
+    pub samples: usize,
+    pub retunes: usize,
+    pub mb: f64,
+    pub transfer_s: f64,
+    pub achieved_mbps: f64,
+    /// Probe budget on the shard after settlement.
+    pub budget_after_mb: f64,
+    /// The request's KB cluster at admission (`None` = cold KB).
+    pub cluster: Option<usize>,
+    /// Estimate peeked right before admission (`None` = none stored).
+    pub est: Option<EstimateObs>,
+    /// Admission was budget-forced onto the estimate.
+    pub budget_forced: bool,
+    /// Set on coalesced-burst members that piggybacked.
+    pub piggyback: Option<PiggybackObs>,
+    /// Served inside a coalesced burst (admission raced by design; the
+    /// estimate guards defer to the piggyback checker there).
+    pub coalesced: bool,
+}
+
+/// One entry of the replay timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    Fault { t_s: f64, fault: Fault },
+    Refresh { t_s: f64, key: ShardKey, generation: u64, cause: String },
+    Response(ResponseEvent),
+}
+
+/// One invariant violation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Violation {
+    pub at_s: f64,
+    pub detail: String,
+}
+
+/// Verdict of one invariant over one replay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InvariantReport {
+    pub name: &'static str,
+    /// Observations the invariant actually judged (0 = vacuous).
+    pub checked: usize,
+    pub violations: Vec<Violation>,
+}
+
+impl InvariantReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Which optional checkers apply to this scenario.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CheckSpec {
+    /// The scenario starves a zero-earn budget: once starved, requests
+    /// on that shard must never lead a ladder again.
+    pub starvation_is_permanent: bool,
+}
+
+/// Evaluate every applicable invariant over the timeline, most
+/// fundamental first.
+pub fn check_timeline(timeline: &[Event], spec: &CheckSpec) -> Vec<InvariantReport> {
+    let mut reports = vec![
+        budget_non_negative(timeline),
+        monotone_generations(timeline),
+        estimate_cluster_guard(timeline),
+        estimate_generation_guard(timeline),
+        piggyback_leader_match(timeline),
+    ];
+    if spec.starvation_is_permanent {
+        reports.push(starvation_serves(timeline));
+    }
+    reports
+}
+
+fn responses(timeline: &[Event]) -> impl Iterator<Item = &ResponseEvent> {
+    timeline.iter().filter_map(|event| match event {
+        Event::Response(r) => Some(r),
+        _ => None,
+    })
+}
+
+/// Budget never negative after any settlement.
+fn budget_non_negative(timeline: &[Event]) -> InvariantReport {
+    let mut report = InvariantReport { name: "budget-non-negative", checked: 0, violations: vec![] };
+    for r in responses(timeline) {
+        report.checked += 1;
+        if r.budget_after_mb < -1e-9 {
+            report.violations.push(Violation {
+                at_s: r.t_s,
+                detail: format!(
+                    "response {} on {} left the budget at {:.3} MB",
+                    r.id, r.key, r.budget_after_mb
+                ),
+            });
+        }
+    }
+    report
+}
+
+/// Observed KB generations are monotone per shard; an injected eviction
+/// legally resets the shard's incarnation (and its counter).
+fn monotone_generations(timeline: &[Event]) -> InvariantReport {
+    let mut report = InvariantReport { name: "monotone-generations", checked: 0, violations: vec![] };
+    let mut last: HashMap<ShardKey, u64> = HashMap::new();
+    for event in timeline {
+        match event {
+            Event::Fault { fault: Fault::EvictShard { key }, .. } => {
+                last.remove(key);
+            }
+            Event::Refresh { t_s, key, generation, .. } => {
+                report.checked += 1;
+                observe_generation(&mut report, &mut last, *key, *generation, *t_s, "refresh");
+            }
+            Event::Response(r) => {
+                report.checked += 1;
+                observe_generation(&mut report, &mut last, r.key, r.generation, r.t_s, "response");
+            }
+            Event::Fault { .. } => {}
+        }
+    }
+    report
+}
+
+fn observe_generation(
+    report: &mut InvariantReport,
+    last: &mut HashMap<ShardKey, u64>,
+    key: ShardKey,
+    generation: u64,
+    t_s: f64,
+    what: &str,
+) {
+    let entry = last.entry(key).or_insert(generation);
+    if generation < *entry {
+        report.violations.push(Violation {
+            at_s: t_s,
+            detail: format!(
+                "{what} on {key} observed generation {generation} after {} with no eviction",
+                *entry
+            ),
+        });
+    } else {
+        *entry = generation;
+    }
+}
+
+/// An estimate-served response (outside coalesced bursts, and not
+/// budget-forced) must have been backed by a stored estimate for the
+/// request's own cluster, confident under the serving generation.
+fn estimate_cluster_guard(timeline: &[Event]) -> InvariantReport {
+    let mut report =
+        InvariantReport { name: "estimate-cluster-guard", checked: 0, violations: vec![] };
+    for r in responses(timeline) {
+        if r.mode != Some(ProbeMode::EstimateServed) || r.budget_forced || r.coalesced {
+            continue;
+        }
+        report.checked += 1;
+        match (&r.est, r.cluster) {
+            (Some(est), Some(cluster)) if est.cluster == cluster && est.confident => {}
+            (Some(est), Some(cluster)) if est.cluster != cluster => {
+                report.violations.push(Violation {
+                    at_s: r.t_s,
+                    detail: format!(
+                        "response {} on {} served cluster {}'s estimate for a cluster-{} request",
+                        r.id, r.key, est.cluster, cluster
+                    ),
+                });
+            }
+            (Some(est), Some(_)) if !est.confident => {
+                report.violations.push(Violation {
+                    at_s: r.t_s,
+                    detail: format!(
+                        "response {} on {} was estimate-served below the confidence threshold \
+                         without budget pressure",
+                        r.id, r.key
+                    ),
+                });
+            }
+            _ => {
+                report.violations.push(Violation {
+                    at_s: r.t_s,
+                    detail: format!(
+                        "response {} on {} was estimate-served with no stored estimate at all",
+                        r.id, r.key
+                    ),
+                });
+            }
+        }
+    }
+    report
+}
+
+/// An estimate-served response must observe the estimate's own KB
+/// generation — the cross-generation penalty makes a stale estimate
+/// unconfident, so serving across generations means the guard is gone.
+fn estimate_generation_guard(timeline: &[Event]) -> InvariantReport {
+    let mut report =
+        InvariantReport { name: "estimate-generation-guard", checked: 0, violations: vec![] };
+    for r in responses(timeline) {
+        if r.mode != Some(ProbeMode::EstimateServed) || r.budget_forced || r.coalesced {
+            continue;
+        }
+        report.checked += 1;
+        if let Some(est) = &r.est {
+            if est.generation != r.generation {
+                report.violations.push(Violation {
+                    at_s: r.t_s,
+                    detail: format!(
+                        "response {} on {} pinned generation {} but was served a generation-{} \
+                         estimate",
+                        r.id, r.key, r.generation, est.generation
+                    ),
+                });
+            }
+        }
+    }
+    report
+}
+
+/// A piggybacked follower always matches its leader's cluster and KB
+/// generation — a mismatched follower must fall back, never adopt.
+fn piggyback_leader_match(timeline: &[Event]) -> InvariantReport {
+    let mut report =
+        InvariantReport { name: "piggyback-leader-match", checked: 0, violations: vec![] };
+    for r in responses(timeline) {
+        if r.mode != Some(ProbeMode::Piggybacked) {
+            continue;
+        }
+        report.checked += 1;
+        match (&r.piggyback, r.cluster) {
+            (Some(pig), Some(cluster))
+                if pig.leader_cluster == cluster && pig.leader_generation == r.generation => {}
+            (Some(pig), _) => {
+                report.violations.push(Violation {
+                    at_s: r.t_s,
+                    detail: format!(
+                        "follower {} on {} (cluster {:?}, generation {}) adopted a leader result \
+                         from cluster {} generation {}",
+                        r.id, r.key, r.cluster, r.generation, pig.leader_cluster,
+                        pig.leader_generation
+                    ),
+                });
+            }
+            (None, _) => {
+                report.violations.push(Violation {
+                    at_s: r.t_s,
+                    detail: format!(
+                        "follower {} on {} piggybacked without a recorded leader result",
+                        r.id, r.key
+                    ),
+                });
+            }
+        }
+    }
+    report
+}
+
+/// After a starve-budget fault on a zero-earn budget, requests on the
+/// starved shard never lead a sampling ladder (and never sample).
+fn starvation_serves(timeline: &[Event]) -> InvariantReport {
+    let mut report = InvariantReport { name: "starvation-serves", checked: 0, violations: vec![] };
+    let mut starved: Vec<ShardKey> = Vec::new();
+    for event in timeline {
+        match event {
+            Event::Fault { fault: Fault::StarveBudget { key }, .. } => {
+                if !starved.contains(key) {
+                    starved.push(*key);
+                }
+            }
+            Event::Response(r) if starved.contains(&r.key) => {
+                report.checked += 1;
+                if r.mode == Some(ProbeMode::Led) || r.samples > 0 {
+                    report.violations.push(Violation {
+                        at_s: r.t_s,
+                        detail: format!(
+                            "response {} on starved shard {} still probed (mode {:?}, {} samples)",
+                            r.id, r.key, r.mode, r.samples
+                        ),
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+    report
+}
+
+/// The goodput-floor verdict (computed by the runner from the faulted
+/// and control replays, reported in the same shape as the timeline
+/// checkers).
+pub fn goodput_floor_report(
+    faulted_mean_mbps: f64,
+    control_mean_mbps: f64,
+    floor: f64,
+) -> InvariantReport {
+    let mut report = InvariantReport { name: "goodput-floor", checked: 1, violations: vec![] };
+    if control_mean_mbps > 0.0 && faulted_mean_mbps < floor * control_mean_mbps {
+        report.violations.push(Violation {
+            at_s: 0.0,
+            detail: format!(
+                "mean goodput under fault {faulted_mean_mbps:.0} Mbps fell below {floor:.2} x \
+                 control {control_mean_mbps:.0} Mbps"
+            ),
+        });
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::dataset::SizeClass;
+    use crate::sim::testbed::TestbedId;
+
+    fn key() -> ShardKey {
+        ShardKey::new(TestbedId::Xsede, SizeClass::Large)
+    }
+
+    fn response(id: u64, generation: u64) -> ResponseEvent {
+        ResponseEvent {
+            t_s: id as f64,
+            id,
+            key: key(),
+            generation,
+            borrowed: true,
+            mode: None,
+            samples: 0,
+            retunes: 0,
+            mb: 100.0,
+            transfer_s: 1.0,
+            achieved_mbps: 800.0,
+            budget_after_mb: 10.0,
+            cluster: Some(0),
+            est: None,
+            budget_forced: false,
+            piggyback: None,
+            coalesced: false,
+        }
+    }
+
+    #[test]
+    fn clean_timeline_passes_everything() {
+        let timeline = vec![
+            Event::Response(ResponseEvent { mode: Some(ProbeMode::Led), ..response(1, 0) }),
+            Event::Refresh { t_s: 2.0, key: key(), generation: 1, cause: "forced".into() },
+            Event::Response(ResponseEvent {
+                mode: Some(ProbeMode::EstimateServed),
+                est: Some(EstimateObs { cluster: 0, surface: 3, generation: 1, confident: true }),
+                ..response(3, 1)
+            }),
+        ];
+        let reports = check_timeline(&timeline, &CheckSpec::default());
+        assert_eq!(reports.len(), 5);
+        for report in &reports {
+            assert!(report.ok(), "{} flagged a clean timeline: {:?}", report.name, report.violations);
+        }
+    }
+
+    #[test]
+    fn generation_guard_catches_a_guardless_serve() {
+        // What the stale-kb scenario would record if PR 3's
+        // cross-generation penalty were removed: a generation-1 request
+        // served straight from the generation-0 estimate.
+        let timeline = vec![
+            Event::Refresh { t_s: 1.0, key: key(), generation: 1, cause: "forced".into() },
+            Event::Response(ResponseEvent {
+                mode: Some(ProbeMode::EstimateServed),
+                est: Some(EstimateObs { cluster: 0, surface: 3, generation: 0, confident: true }),
+                ..response(2, 1)
+            }),
+        ];
+        let reports = check_timeline(&timeline, &CheckSpec::default());
+        let guard = reports.iter().find(|r| r.name == "estimate-generation-guard").unwrap();
+        assert_eq!(guard.checked, 1);
+        assert!(!guard.ok(), "guardless cross-generation serve must be flagged");
+    }
+
+    #[test]
+    fn cluster_guard_catches_mismatch_and_unconfident_serves() {
+        let mismatched = Event::Response(ResponseEvent {
+            mode: Some(ProbeMode::EstimateServed),
+            est: Some(EstimateObs { cluster: 2, surface: 1, generation: 0, confident: true }),
+            ..response(1, 0)
+        });
+        let unconfident = Event::Response(ResponseEvent {
+            mode: Some(ProbeMode::EstimateServed),
+            est: Some(EstimateObs { cluster: 0, surface: 1, generation: 0, confident: false }),
+            ..response(2, 0)
+        });
+        // Budget-forced and coalesced serves are exempt.
+        let forced = Event::Response(ResponseEvent {
+            mode: Some(ProbeMode::EstimateServed),
+            budget_forced: true,
+            ..response(3, 0)
+        });
+        let reports =
+            check_timeline(&[mismatched, unconfident, forced], &CheckSpec::default());
+        let guard = reports.iter().find(|r| r.name == "estimate-cluster-guard").unwrap();
+        assert_eq!(guard.checked, 2, "the budget-forced serve is exempt");
+        assert_eq!(guard.violations.len(), 2);
+    }
+
+    #[test]
+    fn piggyback_checker_requires_leader_match() {
+        let good = Event::Response(ResponseEvent {
+            mode: Some(ProbeMode::Piggybacked),
+            piggyback: Some(PiggybackObs { leader_cluster: 0, leader_generation: 0 }),
+            coalesced: true,
+            ..response(1, 0)
+        });
+        let bad_gen = Event::Response(ResponseEvent {
+            mode: Some(ProbeMode::Piggybacked),
+            piggyback: Some(PiggybackObs { leader_cluster: 0, leader_generation: 7 }),
+            coalesced: true,
+            ..response(2, 0)
+        });
+        let reports = check_timeline(&[good, bad_gen], &CheckSpec::default());
+        let pig = reports.iter().find(|r| r.name == "piggyback-leader-match").unwrap();
+        assert_eq!(pig.checked, 2);
+        assert_eq!(pig.violations.len(), 1);
+        assert!(pig.violations[0].detail.contains("generation 7"));
+    }
+
+    #[test]
+    fn monotone_checker_resets_only_at_evictions() {
+        let regression = vec![
+            Event::Response(response(1, 2)),
+            Event::Response(response(2, 1)), // backwards, no eviction
+        ];
+        let reports = check_timeline(&regression, &CheckSpec::default());
+        let mono = reports.iter().find(|r| r.name == "monotone-generations").unwrap();
+        assert_eq!(mono.violations.len(), 1);
+
+        let churn = vec![
+            Event::Response(response(1, 2)),
+            Event::Fault { t_s: 1.5, fault: Fault::EvictShard { key: key() } },
+            Event::Response(response(2, 0)), // fresh incarnation
+        ];
+        let reports = check_timeline(&churn, &CheckSpec::default());
+        let mono = reports.iter().find(|r| r.name == "monotone-generations").unwrap();
+        assert!(mono.ok(), "eviction legalizes the reset: {:?}", mono.violations);
+    }
+
+    #[test]
+    fn budget_and_starvation_checkers() {
+        let timeline = vec![
+            Event::Fault { t_s: 0.5, fault: Fault::StarveBudget { key: key() } },
+            Event::Response(ResponseEvent {
+                mode: Some(ProbeMode::EstimateServed),
+                budget_forced: true,
+                budget_after_mb: 0.0,
+                ..response(1, 0)
+            }),
+            Event::Response(ResponseEvent {
+                mode: Some(ProbeMode::Led),
+                samples: 2,
+                budget_after_mb: -3.0,
+                ..response(2, 0)
+            }),
+        ];
+        let spec = CheckSpec { starvation_is_permanent: true };
+        let reports = check_timeline(&timeline, &spec);
+        let budget = reports.iter().find(|r| r.name == "budget-non-negative").unwrap();
+        assert_eq!(budget.violations.len(), 1);
+        let starve = reports.iter().find(|r| r.name == "starvation-serves").unwrap();
+        assert_eq!(starve.checked, 2);
+        assert_eq!(starve.violations.len(), 1, "the led response after starvation is flagged");
+    }
+
+    #[test]
+    fn goodput_floor_report_flags_collapse() {
+        assert!(goodput_floor_report(900.0, 1000.0, 0.5).ok());
+        let collapsed = goodput_floor_report(100.0, 1000.0, 0.5);
+        assert!(!collapsed.ok());
+        assert!(collapsed.violations[0].detail.contains("fell below"));
+    }
+}

@@ -1,0 +1,51 @@
+//! Deterministic scenario engine: fault-injecting trace replay with an
+//! invariant conformance suite.
+//!
+//! The paper's central claim is robustness — near-optimal throughput
+//! "over different networks" despite partial, expensive real-time
+//! knowledge — and the hard cases are *regime changes*: load shifts,
+//! stale history, contention spikes. Each subsystem's bake-off
+//! exercises its own happy path; the scenario engine composes the hard
+//! cases deterministically and asserts system-wide invariants over
+//! them:
+//!
+//! ```text
+//!   fixture file ──▶ script::Scenario ──▶ runner (virtual time)
+//!                        │                  │  serves arrivals through
+//!                        │ faults           │  coordinator → fabric →
+//!                        ▼                  │  probe plane → ASM
+//!                    inject::apply ─────────┤
+//!                    (FaultBoard, plane,    │ structured Event timeline
+//!                     router hooks)         ▼
+//!                                   invariant::check_timeline
+//!                                        │
+//!                                        ▼ verdict table (+ control-run
+//!                                          goodput floor)
+//! ```
+//!
+//! * [`script`] — the declarative scenario description (arrival rules,
+//!   bursts, fault schedule) with a plain-text parser; the bundled
+//!   library (`flash-crowd`, `brownout`, `stale-kb`, `probe-famine`,
+//!   `shard-churn`) ships as fixture files under `rust/scenarios/`.
+//! * [`inject`] — timed fault events, each applied through the target
+//!   layer's own fault hook (`sim::fault::FaultBoard`, probe-budget
+//!   starvation, forced shard eviction, forced/paused refresh).
+//! * [`invariant`] — the structured replay timeline and the
+//!   cross-cutting checkers evaluated over it (cluster/generation
+//!   estimate guards, piggyback-leader match, monotone shard
+//!   generations, non-negative budgets, bounded goodput degradation).
+//! * [`runner`] — drives the replay on simulated time, records the
+//!   timeline (byte-identical across same-seed runs), and renders the
+//!   verdict table. `dtopt scenario <name|file>` is the CLI entry;
+//!   `tests/scenario_conformance.rs` runs every bundled scenario in
+//!   quick mode.
+
+pub mod inject;
+pub mod invariant;
+pub mod runner;
+pub mod script;
+
+pub use inject::{Fault, FaultEvent};
+pub use invariant::{Event, EstimateObs, InvariantReport, PiggybackObs, ResponseEvent, Violation};
+pub use runner::{render_timeline, render_verdict, run, RunOptions, ScenarioOutcome};
+pub use script::{ArrivalRule, Burst, Scenario};

@@ -1,0 +1,937 @@
+//! The scenario runner: drives a scripted replay through the full stack
+//! on simulated time, injecting faults, recording the structured event
+//! timeline, and rendering the verdict table.
+//!
+//! ## Determinism
+//!
+//! Two same-seed runs must produce **byte-identical** timelines, so the
+//! replay is engineered around that:
+//!
+//! * arrivals are served strictly sequentially through a one-worker
+//!   coordinator — every hidden-network draw is a function of the
+//!   request seed alone;
+//! * coalesced bursts elect their leader deterministically: the runner
+//!   admits the leader first, spawns the followers, and waits (via the
+//!   single-flight waiter hook) until the whole cohort is blocked on
+//!   the flight before the leader's ladder runs; follower outcomes are
+//!   then settled sequentially in request-id order;
+//! * the probe plane runs with an hour-long confidence half-life and an
+//!   off-lattice serve threshold, so wall-clock decay over a
+//!   seconds-long replay can never flip an admission decision —
+//!   staleness inside a scenario comes from generation bumps and
+//!   injected faults, which are scripted;
+//! * shard refreshes fire only from the runner's maintenance sweep
+//!   (flush barrier + `tick_all`) after each request, never from
+//!   wall-clock policy triggers;
+//! * no wall-clock quantity is ever recorded on the timeline.
+//!
+//! When a scenario declares a goodput floor, the runner performs a
+//! second, fault-free **control replay** with the same seed and request
+//! schedule, and scores mean goodput under fault against it.
+
+use super::inject::{self, Fault, FaultEvent, FaultTargets};
+use super::invariant::{
+    self, CheckSpec, EstimateObs, Event, InvariantReport, PiggybackObs, ResponseEvent,
+};
+use super::script::{Burst, Scenario};
+use crate::baselines::TransferEnv;
+use crate::coordinator::server::{completed_log, hidden_state_for, run_admitted_asm};
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, OptimizerKind, ResponseTap, TransferRequest,
+};
+use crate::fabric::{FabricConfig, Shard, ShardConfig, ShardKey, ShardMapConfig, ShardRouter};
+use crate::feedback::{IngestConfig, KbSnapshot, RefreshPolicy};
+use crate::logs::generate::{generate, GenConfig};
+use crate::offline::kmeans::NativeAssign;
+use crate::offline::pipeline::{build, OfflineConfig};
+use crate::probe::{
+    Admission, BudgetConfig, EstimateConfig, ProbeConfig, ProbeMode, ProbePlane,
+};
+use crate::sim::dataset::Dataset;
+use crate::sim::fault::FaultBoard;
+use crate::sim::testbed::{Testbed, TestbedId};
+use crate::sim::traffic::DAY_S;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Quick mode caps (`tests/scenario_conformance.rs`, CLI default): the
+/// scripted structure survives, the tail of each rule is trimmed.
+const QUICK_ARRIVALS_PER_RULE: usize = 6;
+const QUICK_BURST_SIZE: usize = 5;
+
+/// How the replay is run.
+#[derive(Debug, Clone, Copy)]
+pub struct RunOptions {
+    /// Trim arrival rules and bursts to quick-mode caps.
+    pub quick: bool,
+    /// Replace the scenario's own seed.
+    pub seed_override: Option<u64>,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions { quick: true, seed_override: None }
+    }
+}
+
+/// Everything one scenario run produced.
+#[derive(Debug)]
+pub struct ScenarioOutcome {
+    pub name: String,
+    pub seed: u64,
+    pub quick: bool,
+    pub timeline: Vec<Event>,
+    pub reports: Vec<InvariantReport>,
+    /// Mean response goodput of the (faulted) replay.
+    pub faulted_mean_mbps: f64,
+    /// Mean response goodput of the fault-free control replay (only
+    /// when the scenario declares a goodput floor).
+    pub control_mean_mbps: Option<f64>,
+}
+
+impl ScenarioOutcome {
+    pub fn passed(&self) -> bool {
+        self.reports.iter().all(|r| r.ok())
+    }
+
+    pub fn responses(&self) -> impl Iterator<Item = &ResponseEvent> {
+        self.timeline.iter().filter_map(|event| match event {
+            Event::Response(r) => Some(r),
+            _ => None,
+        })
+    }
+
+    pub fn report(&self, name: &str) -> Option<&InvariantReport> {
+        self.reports.iter().find(|r| r.name == name)
+    }
+}
+
+/// Run a scenario: the faulted replay, the control replay when a
+/// goodput floor is declared, and the invariant verdicts.
+pub fn run(scenario: &Scenario, options: &RunOptions) -> Result<ScenarioOutcome> {
+    let seed = options.seed_override.unwrap_or(scenario.seed);
+    let (timeline, faulted_mean) = replay(scenario, seed, options.quick, true)?;
+    let control_mean = if scenario.goodput_floor.is_some() && !scenario.faults.is_empty() {
+        Some(replay(scenario, seed, options.quick, false)?.1)
+    } else {
+        None
+    };
+    let spec = CheckSpec {
+        starvation_is_permanent: scenario.budget.is_some_and(|b| b.earn_fraction == 0.0)
+            && scenario
+                .faults
+                .iter()
+                .any(|event| matches!(event.fault, Fault::StarveBudget { .. })),
+    };
+    let mut reports = invariant::check_timeline(&timeline, &spec);
+    if let (Some(floor), Some(control)) = (scenario.goodput_floor, control_mean) {
+        reports.push(invariant::goodput_floor_report(faulted_mean, control, floor));
+    }
+    Ok(ScenarioOutcome {
+        name: scenario.name.clone(),
+        seed,
+        quick: options.quick,
+        timeline,
+        reports,
+        faulted_mean_mbps: faulted_mean,
+        control_mean_mbps: control_mean,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Replay machinery
+// ---------------------------------------------------------------------------
+
+/// Distinguishes concurrent replays' scratch directories (tests run in
+/// parallel within one process).
+static SCRATCH_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// One scheduled unit of replay work.
+enum OpKind {
+    Fault(FaultEvent),
+    Arrive { key: ShardKey, files: u64, avg_mb: f64 },
+    Burst(Burst),
+}
+
+struct Op {
+    t_s: f64,
+    /// Tie-break at equal times: faults land before bursts before
+    /// arrivals, then script order.
+    rank: u8,
+    seq: usize,
+    kind: OpKind,
+}
+
+struct ReplayCtx {
+    coordinator: Coordinator,
+    router: Arc<ShardRouter>,
+    plane: Arc<ProbePlane>,
+    /// Attached only on the faulted replay; the control replay serves
+    /// pristine testbeds.
+    board: Option<Arc<FaultBoard>>,
+    tap: Arc<ResponseTap>,
+    seed: u64,
+    /// Virtual submission-time base: the day after the history ends.
+    t_base: f64,
+}
+
+fn request_seed(seed: u64, id: u64) -> u64 {
+    seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// The probe plane a replay runs on. Decay constants are chosen so
+/// wall-clock time cannot flip admission decisions over a seconds-long
+/// replay (see the module docs); the budget default leaves coalesced
+/// bursts headroom for their transient concurrent reservations.
+fn replay_probe_config(scenario: &Scenario) -> ProbeConfig {
+    ProbeConfig {
+        estimate: EstimateConfig {
+            half_life: Duration::from_secs(3_600),
+            serve_threshold: 0.65,
+            ..EstimateConfig::default()
+        },
+        budget: scenario.budget.unwrap_or(BudgetConfig {
+            capacity_mb: 65_536.0,
+            initial_mb: 65_536.0,
+            earn_fraction: 0.05,
+        }),
+        follower_wait: Duration::from_secs(30),
+        expected_sample_fraction: 0.05,
+    }
+}
+
+fn replay_fabric_config(scenario: &Scenario) -> FabricConfig {
+    FabricConfig {
+        shard: ShardConfig {
+            ingest: IngestConfig {
+                capacity: 4_096,
+                flush_batch: 8,
+                flush_interval: Duration::from_millis(2),
+            },
+            // Wall-clock policy triggers are disabled: refreshes fire
+            // only from the runner's deterministic maintenance sweep
+            // (native fits) and injected force-refresh faults.
+            policy: RefreshPolicy {
+                min_new_rows: 0,
+                max_interval: Duration::from_secs(10 * 365 * 24 * 3_600),
+                drift_threshold: 0,
+                min_interval: Duration::ZERO,
+            },
+            min_native_rows: scenario.min_native_rows,
+        },
+        map: ShardMapConfig::default(),
+    }
+}
+
+fn shaped_testbed(ctx: &ReplayCtx, key: ShardKey) -> Testbed {
+    let mut testbed = Testbed::by_id(key.network);
+    if let Some(board) = &ctx.board {
+        board.shape(&mut testbed);
+    }
+    testbed
+}
+
+fn peek_estimate(ctx: &ReplayCtx, key: ShardKey, serving_generation: u64) -> Option<EstimateObs> {
+    let config = &ctx.plane.config().estimate;
+    ctx.plane.estimates().peek(key).map(|e| EstimateObs {
+        cluster: e.cluster_idx,
+        surface: e.surface_idx,
+        generation: e.generation,
+        confident: e.decayed(config, serving_generation) >= config.serve_threshold,
+    })
+}
+
+fn mean_goodput(timeline: &[Event]) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for event in timeline {
+        if let Event::Response(r) = event {
+            sum += r.achieved_mbps;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+/// One full replay. `inject_faults = false` is the control run: same
+/// seed, same request schedule, no faults applied or recorded.
+fn replay(
+    scenario: &Scenario,
+    seed: u64,
+    quick: bool,
+    inject_faults: bool,
+) -> Result<(Vec<Event>, f64)> {
+    let scratch = std::env::temp_dir().join(format!(
+        "dtopt_scenario_{}_{}_{}",
+        std::process::id(),
+        SCRATCH_SEQ.fetch_add(1, Ordering::Relaxed),
+        scenario.name,
+    ));
+    let _ = std::fs::remove_dir_all(&scratch);
+    let result = replay_in(scenario, seed, quick, inject_faults, &scratch);
+    let _ = std::fs::remove_dir_all(&scratch);
+    result
+}
+
+fn replay_in(
+    scenario: &Scenario,
+    seed: u64,
+    quick: bool,
+    inject_faults: bool,
+    scratch: &std::path::Path,
+) -> Result<(Vec<Event>, f64)> {
+    // --- World: per-network history + one knowledge base -------------------
+    let mut rows = Vec::new();
+    for id in scenario.networks() {
+        // Seed stream keyed by the network's stable enum discriminant —
+        // never by anything incidental like the name's length, which
+        // two networks could share (identical history streams would
+        // correlate their KBs and silently skew cross-network results).
+        let discriminant = TestbedId::all()
+            .iter()
+            .position(|t| *t == id)
+            .expect("every scenario network is a known testbed") as u64;
+        rows.extend(generate(
+            &Testbed::by_id(id),
+            &GenConfig {
+                days: scenario.history_days,
+                arrivals_per_hour: 20.0,
+                start_day: 0,
+                seed: seed ^ (0xD15C_0000 + discriminant).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            },
+        ));
+    }
+    let kb = Arc::new(build(&rows, &OfflineConfig::default(), &mut NativeAssign)?);
+    let t_base = (scenario.history_days + 1) as f64 * DAY_S;
+
+    // --- Stack: plane + fault board + fabric + taped coordinator -----------
+    let plane = Arc::new(ProbePlane::new(replay_probe_config(scenario)));
+    let board = inject_faults.then(|| Arc::new(FaultBoard::new()));
+    let tap = Arc::new(ResponseTap::new());
+    let router = Arc::new(ShardRouter::open(
+        &scratch.join("fabric"),
+        kb,
+        replay_fabric_config(scenario),
+    )?);
+    let coordinator = Coordinator::with_fabric(
+        router.clone(),
+        Arc::new(rows),
+        CoordinatorConfig {
+            workers: 1, // sequential replay: determinism over throughput
+            default_optimizer: OptimizerKind::Asm,
+            seed,
+            probe: Some(plane.clone()),
+            faults: board.clone(),
+            tap: Some(tap.clone()),
+        },
+    );
+    let ctx = ReplayCtx { coordinator, router, plane, board, tap, seed, t_base };
+
+    // --- Schedule: merge arrivals, bursts, and faults -----------------------
+    let mut ops: Vec<Op> = Vec::new();
+    let mut seq = 0usize;
+    for event in &scenario.faults {
+        ops.push(Op { t_s: event.at_s, rank: 0, seq, kind: OpKind::Fault(*event) });
+        seq += 1;
+    }
+    for burst in &scenario.bursts {
+        let mut burst = *burst;
+        if quick {
+            burst.count = burst.count.min(QUICK_BURST_SIZE);
+        }
+        ops.push(Op { t_s: burst.at_s, rank: 1, seq, kind: OpKind::Burst(burst) });
+        seq += 1;
+    }
+    for rule in &scenario.arrivals {
+        let count = if quick { rule.count.min(QUICK_ARRIVALS_PER_RULE) } else { rule.count };
+        for i in 0..count {
+            ops.push(Op {
+                t_s: rule.start_s + i as f64 * rule.every_s,
+                rank: 2,
+                seq,
+                kind: OpKind::Arrive {
+                    key: rule.key,
+                    files: rule.files,
+                    avg_mb: rule.avg_mb,
+                },
+            });
+            seq += 1;
+        }
+    }
+    ops.sort_by(|a, b| {
+        a.t_s
+            .total_cmp(&b.t_s)
+            .then(a.rank.cmp(&b.rank))
+            .then(a.seq.cmp(&b.seq))
+    });
+
+    // --- Replay -------------------------------------------------------------
+    let mut timeline: Vec<Event> = Vec::new();
+    let mut refresh_paused = false;
+    let mut next_id = 1u64;
+    for op in ops {
+        match op.kind {
+            OpKind::Fault(event) => {
+                if !inject_faults {
+                    continue; // the control run lives in a fault-free world
+                }
+                let board = ctx.board.as_ref().expect("faulted replay has a board");
+                let targets =
+                    FaultTargets { board, plane: &ctx.plane, router: &ctx.router };
+                match inject::apply(&event.fault, &targets, &mut refresh_paused) {
+                    inject::Applied::Done => {
+                        timeline.push(Event::Fault { t_s: event.at_s, fault: event.fault });
+                    }
+                    inject::Applied::Refreshed { key, generation } => {
+                        timeline.push(Event::Fault { t_s: event.at_s, fault: event.fault });
+                        timeline.push(Event::Refresh {
+                            t_s: event.at_s,
+                            key,
+                            generation,
+                            cause: "forced".to_string(),
+                        });
+                    }
+                    // A no-op eviction is deliberately NOT recorded:
+                    // the monotone-generations checker legalizes a
+                    // reset at a recorded eviction, and nothing was
+                    // actually evicted here. (Which shards are live at
+                    // a scripted time is deterministic, so two
+                    // same-seed runs agree on the omission.)
+                    inject::Applied::EvictionNoop => {}
+                }
+            }
+            OpKind::Arrive { key, files, avg_mb } => {
+                let id = next_id;
+                next_id += 1;
+                let response = serve_sequential(&ctx, op.t_s, id, key, files, avg_mb)?;
+                timeline.push(Event::Response(response));
+                maintenance(&ctx, op.t_s, refresh_paused, &mut timeline);
+            }
+            OpKind::Burst(burst) => {
+                let ids: Vec<u64> = (0..burst.count)
+                    .map(|_| {
+                        let id = next_id;
+                        next_id += 1;
+                        id
+                    })
+                    .collect();
+                let responses = if burst.coalesce {
+                    serve_coalesced(&ctx, &burst, &ids)?
+                } else {
+                    let mut out = Vec::with_capacity(ids.len());
+                    for &id in &ids {
+                        out.push(serve_sequential(
+                            &ctx, burst.at_s, id, burst.key, burst.files, burst.avg_mb,
+                        )?);
+                    }
+                    out
+                };
+                timeline.extend(responses.into_iter().map(Event::Response));
+                maintenance(&ctx, burst.at_s, refresh_paused, &mut timeline);
+            }
+        }
+    }
+    let mean = mean_goodput(&timeline);
+    ctx.coordinator.shutdown();
+    let _ = ctx.router.flush_all(Duration::from_secs(30));
+    ctx.router.shutdown();
+    Ok((timeline, mean))
+}
+
+/// Post-request maintenance sweep: drain every ingest queue, then give
+/// each shard one deterministic refresh evaluation (native fits). The
+/// pause-refresh fault gates exactly this.
+fn maintenance(ctx: &ReplayCtx, t_s: f64, refresh_paused: bool, timeline: &mut Vec<Event>) {
+    if refresh_paused {
+        return;
+    }
+    let _ = ctx.router.flush_all(Duration::from_secs(30));
+    for (key, generation, cause) in ctx.router.tick_all() {
+        timeline.push(Event::Refresh { t_s, key, generation, cause: cause.to_string() });
+    }
+}
+
+/// Serve one arrival through the coordinator (fabric -> probe plane ->
+/// ASM), with the race-free pre-admission peeks the invariant checkers
+/// need.
+fn serve_sequential(
+    ctx: &ReplayCtx,
+    t_s: f64,
+    id: u64,
+    key: ShardKey,
+    files: u64,
+    avg_mb: f64,
+) -> Result<ResponseEvent> {
+    let dataset = Dataset::new(files, avg_mb);
+    let routed = ctx.router.route(key);
+    let serving_generation = routed.snapshot.generation;
+    let testbed = shaped_testbed(ctx, key);
+    let cluster =
+        routed.snapshot.kb.query_idx(&TransferEnv::request_info(&testbed, &dataset));
+    let est = peek_estimate(ctx, key, serving_generation);
+    let forced_before = ctx.plane.stats.budget_forced.load(Ordering::Relaxed);
+    let request = TransferRequest {
+        id,
+        testbed: key.network,
+        dataset,
+        t_submit: ctx.t_base + t_s,
+        state_override: None,
+        optimizer: Some(OptimizerKind::Asm),
+        seed: request_seed(ctx.seed, id),
+    };
+    let _response = ctx
+        .coordinator
+        .run_batch(vec![request])
+        .pop()
+        .ok_or_else(|| anyhow!("coordinator returned no response for request {id}"))?;
+    let budget_forced =
+        ctx.plane.stats.budget_forced.load(Ordering::Relaxed) > forced_before;
+    let taped = ctx.tap.drain();
+    anyhow::ensure!(taped.len() == 1, "tap recorded {} events for one request", taped.len());
+    let tape = &taped[0];
+    anyhow::ensure!(
+        tape.shard_key == Some(key),
+        "request {id} routed to {:?}, scripted for {key}",
+        tape.shard_key
+    );
+    Ok(ResponseEvent {
+        t_s,
+        id,
+        key,
+        generation: tape.kb_generation,
+        borrowed: tape.borrowed,
+        mode: tape.probe_mode,
+        samples: tape.samples,
+        retunes: tape.bulk_retunes,
+        mb: tape.total_mb,
+        transfer_s: tape.transfer_s,
+        achieved_mbps: tape.achieved_mbps,
+        budget_after_mb: ctx.plane.budget(key).available_mb(),
+        cluster,
+        est,
+        budget_forced,
+        piggyback: None,
+        coalesced: false,
+    })
+}
+
+/// Serve a coalesced burst: the first request admits as the flight's
+/// leader on this thread; the followers are spawned and the runner
+/// waits until every one is blocked on the flight; then the leader's
+/// ladder runs (releasing the cohort at convergence via `on_converged`)
+/// and the followers' outcomes settle sequentially in id order. This is
+/// the coordinator's `run_asm_with_plane` arm driven deterministically.
+fn serve_coalesced(ctx: &ReplayCtx, burst: &Burst, ids: &[u64]) -> Result<Vec<ResponseEvent>> {
+    let key = burst.key;
+    let dataset = Dataset::new(burst.files, burst.avg_mb);
+    let routed = ctx.router.route(key);
+    let shard = routed.shard.clone();
+    let snapshot = routed.snapshot.clone();
+    let generation = snapshot.generation;
+    let testbed = shaped_testbed(ctx, key);
+    let cluster = snapshot.kb.query_idx(&TransferEnv::request_info(&testbed, &dataset));
+    let est0 = peek_estimate(ctx, key, generation);
+    let expected_mb = ctx.plane.expected_sample_mb(dataset.total_mb());
+
+    // Concurrent follower admissions transiently reserve-and-refund
+    // budget, so with less headroom than the whole cohort's worth of
+    // reservations, WHICH follower's try_take fails would depend on
+    // refund interleaving — nondeterministic. A burst without that
+    // headroom (a scripted tight budget) is served strictly
+    // sequentially instead: same requests, deterministic admissions.
+    let headroom = ctx.plane.budget(key).available_mb();
+    if headroom < ids.len() as f64 * expected_mb {
+        let mut events = Vec::with_capacity(ids.len());
+        for &id in ids {
+            let est = peek_estimate(ctx, key, generation);
+            let admission = ctx.plane.admit(key, cluster, generation, expected_mb);
+            let forced =
+                matches!(&admission, Admission::Serve(_)) && !est.is_some_and(|e| e.confident);
+            events.push(run_admitted(
+                ctx, &testbed, dataset, key, cluster, generation, &snapshot, &shard,
+                burst.at_s, id, admission, expected_mb, est, forced,
+            ));
+        }
+        return Ok(events);
+    }
+
+    let leader_admission = ctx.plane.admit(key, cluster, generation, expected_mb);
+    let mut events = Vec::with_capacity(ids.len());
+    match leader_admission {
+        Admission::Lead { guard, warm_start } => {
+            // Spawn the cohort, then hold the leader until every
+            // spawned admission is accounted for: blocked on the flight
+            // as a follower, or already resolved without joining it —
+            // counting resolved threads keeps the wait tight.
+            let handles: Vec<_> = ids[1..]
+                .iter()
+                .map(|_| {
+                    let plane = ctx.plane.clone();
+                    std::thread::spawn(move || plane.admit(key, cluster, generation, expected_mb))
+                })
+                .collect();
+            let deadline = Instant::now() + Duration::from_secs(30);
+            loop {
+                let unresolved = handles.iter().filter(|h| !h.is_finished()).count();
+                if ctx.plane.waiting_followers(key) >= unresolved {
+                    break;
+                }
+                // Staging must fail loudly, not silently converge the
+                // leader while a follower is still unscheduled — that
+                // would turn a machine-load hiccup into a
+                // nondeterministic timeline with no diagnostic.
+                // (Dropping `guard` on this error path aborts the
+                // flight and wakes every follower that did join.)
+                anyhow::ensure!(
+                    Instant::now() < deadline,
+                    "coalesced burst staging timed out: {} follower(s) never reached the \
+                     flight within 30s",
+                    unresolved.saturating_sub(ctx.plane.waiting_followers(key))
+                );
+                std::thread::yield_now();
+            }
+            events.push(run_admitted(
+                ctx,
+                &testbed,
+                dataset,
+                key,
+                cluster,
+                generation,
+                &snapshot,
+                &shard,
+                burst.at_s,
+                ids[0],
+                Admission::Lead { guard, warm_start },
+                expected_mb,
+                est0,
+                false,
+            ));
+            for (offset, handle) in handles.into_iter().enumerate() {
+                let admission =
+                    handle.join().map_err(|_| anyhow!("burst follower thread panicked"))?;
+                // A follower only ever receives `Serve` from the
+                // budget-exhausted fallback — the confident-estimate
+                // case is handled before a request joins a flight — so
+                // a Serve here is budget-forced by construction.
+                let budget_forced = matches!(&admission, Admission::Serve(_));
+                events.push(run_admitted(
+                    ctx,
+                    &testbed,
+                    dataset,
+                    key,
+                    cluster,
+                    generation,
+                    &snapshot,
+                    &shard,
+                    burst.at_s,
+                    ids[1 + offset],
+                    admission,
+                    expected_mb,
+                    None,
+                    budget_forced,
+                ));
+            }
+        }
+        other => {
+            // No flight to coalesce on (a confident estimate or budget
+            // pressure pre-empted it): serve the burst sequentially. A
+            // Serve admission without a confident peeked estimate can
+            // only be budget pressure.
+            let forced =
+                matches!(&other, Admission::Serve(_)) && !est0.is_some_and(|e| e.confident);
+            events.push(run_admitted(
+                ctx, &testbed, dataset, key, cluster, generation, &snapshot, &shard,
+                burst.at_s, ids[0], other, expected_mb, est0, forced,
+            ));
+            for &id in &ids[1..] {
+                let est = peek_estimate(ctx, key, generation);
+                let admission = ctx.plane.admit(key, cluster, generation, expected_mb);
+                let forced = matches!(&admission, Admission::Serve(_))
+                    && !est.is_some_and(|e| e.confident);
+                events.push(run_admitted(
+                    ctx, &testbed, dataset, key, cluster, generation, &snapshot, &shard,
+                    burst.at_s, id, admission, expected_mb, est, forced,
+                ));
+            }
+        }
+    }
+    Ok(events)
+}
+
+/// Run one coalesced-burst member for an already-decided admission —
+/// the body of the coordinator's `run_asm_with_plane`, inlined so the
+/// runner controls when the leader's flight opens and closes. Settles
+/// the plane, feeds the serving shard, and records coordinator metrics
+/// exactly like the worker path.
+#[allow(clippy::too_many_arguments)]
+fn run_admitted(
+    ctx: &ReplayCtx,
+    testbed: &Testbed,
+    dataset: Dataset,
+    key: ShardKey,
+    cluster: Option<usize>,
+    generation: u64,
+    snapshot: &Arc<KbSnapshot>,
+    shard: &Option<Arc<Shard>>,
+    t_s: f64,
+    id: u64,
+    admission: Admission,
+    expected_mb: f64,
+    est: Option<EstimateObs>,
+    budget_forced: bool,
+) -> ResponseEvent {
+    let seed = request_seed(ctx.seed, id);
+    let t_submit = ctx.t_base + t_s;
+    let state = hidden_state_for(testbed, seed, t_submit);
+    let mut env = TransferEnv::new(testbed.clone(), dataset, state, seed);
+    // What a piggybacked follower adopted, noted before the admission
+    // is consumed by the shared execution body.
+    let piggyback = match &admission {
+        Admission::Piggyback(result) => Some(PiggybackObs {
+            leader_cluster: result.cluster_idx,
+            leader_generation: result.generation,
+        }),
+        _ => None,
+    };
+    // The same admission->run->settle body the worker path runs
+    // (`coordinator::server::run_asm_with_plane` delegates to it too),
+    // so the replay cannot drift from production's settle logic.
+    let (report, mode) = run_admitted_asm(
+        &ctx.plane,
+        key,
+        cluster,
+        generation,
+        expected_mb,
+        &snapshot.kb,
+        &mut env,
+        admission,
+    );
+    // Close the loop the way the worker path does: drift signal and
+    // completed-log ingestion to the serving shard, plus the pooled
+    // coordinator metrics.
+    let request = TransferRequest {
+        id,
+        testbed: key.network,
+        dataset,
+        t_submit,
+        state_override: None,
+        optimizer: Some(OptimizerKind::Asm),
+        seed,
+    };
+    if let Some(shard) = shard {
+        shard.stats.note_drift(report.bulk_retunes() as u64);
+        shard.offer(completed_log(&request, testbed, &state, &report));
+    }
+    ctx.coordinator.metrics.record(
+        report.optimizer,
+        report.achieved_mbps(),
+        report.total_mb(),
+        report.total_s(),
+        report.sample_transfers(),
+        0,
+    );
+    ResponseEvent {
+        t_s,
+        id,
+        key,
+        generation,
+        borrowed: routed_borrowed(shard),
+        mode: Some(mode),
+        samples: report.sample_transfers(),
+        retunes: report.bulk_retunes(),
+        mb: report.total_mb(),
+        transfer_s: report.total_s(),
+        achieved_mbps: report.achieved_mbps(),
+        budget_after_mb: ctx.plane.budget(key).available_mb(),
+        cluster,
+        est,
+        budget_forced,
+        piggyback,
+        coalesced: true,
+    }
+}
+
+fn routed_borrowed(shard: &Option<Arc<Shard>>) -> bool {
+    shard.as_ref().map_or(true, |s| s.is_borrowed())
+}
+
+// ---------------------------------------------------------------------------
+// Rendering
+// ---------------------------------------------------------------------------
+
+/// Canonical timeline rendering: every field is simulation-derived, so
+/// same-seed runs render byte-identically.
+pub fn render_timeline(timeline: &[Event]) -> String {
+    let mut out = String::new();
+    for event in timeline {
+        match event {
+            Event::Fault { t_s, fault } => {
+                out.push_str(&format!("[{t_s:>8.1}] fault    {}\n", fault.describe()));
+            }
+            Event::Refresh { t_s, key, generation, cause } => {
+                out.push_str(&format!(
+                    "[{t_s:>8.1}] refresh  {key} gen={generation} ({cause})\n"
+                ));
+            }
+            Event::Response(r) => {
+                let mode = r.mode.map_or("none", |m| m.name());
+                let cluster = r.cluster.map_or_else(|| "-".to_string(), |c| format!("c{c}"));
+                let est = match &r.est {
+                    Some(e) => format!(
+                        "c{}/s{}@g{}{}",
+                        e.cluster,
+                        e.surface,
+                        e.generation,
+                        if e.confident { "+" } else { "-" }
+                    ),
+                    None => "-".to_string(),
+                };
+                let pig = match &r.piggyback {
+                    Some(p) => format!("c{}@g{}", p.leader_cluster, p.leader_generation),
+                    None => "-".to_string(),
+                };
+                out.push_str(&format!(
+                    "[{:>8.1}] response id={:<3} key={} gen={} borrowed={} mode={} \
+                     samples={} retunes={} mb={:.0} s={:.3} goodput={:.1} budget={:.3} \
+                     cluster={} est={} pig={}{}{}\n",
+                    r.t_s,
+                    r.id,
+                    r.key,
+                    r.generation,
+                    r.borrowed,
+                    mode,
+                    r.samples,
+                    r.retunes,
+                    r.mb,
+                    r.transfer_s,
+                    r.achieved_mbps,
+                    r.budget_after_mb,
+                    cluster,
+                    est,
+                    pig,
+                    if r.budget_forced { " budget-forced" } else { "" },
+                    if r.coalesced { " coalesced" } else { "" },
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// The verdict table: headline line, then one row per invariant with
+/// its violations inlined.
+pub fn render_verdict(outcome: &ScenarioOutcome) -> String {
+    let responses = outcome.responses().count();
+    let control = match outcome.control_mean_mbps {
+        Some(control) => {
+            format!(", control {control:.0} Mbps")
+        }
+        None => String::new(),
+    };
+    let mut out = format!(
+        "scenario {} (seed {}, {}): {} timeline events, {} responses, \
+         mean goodput {:.0} Mbps{}\n",
+        outcome.name,
+        outcome.seed,
+        if outcome.quick { "quick" } else { "full" },
+        outcome.timeline.len(),
+        responses,
+        outcome.faulted_mean_mbps,
+        control,
+    );
+    out.push_str("invariant                   checked  violations  verdict\n");
+    for report in &outcome.reports {
+        out.push_str(&format!(
+            "{:<27} {:>7} {:>11}  {}\n",
+            report.name,
+            report.checked,
+            report.violations.len(),
+            if report.ok() { "ok" } else { "FAIL" },
+        ));
+        for violation in &report.violations {
+            out.push_str(&format!("    at {:>8.1}s: {}\n", violation.at_s, violation.detail));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::script::Scenario;
+
+    #[test]
+    fn minimal_scenario_replays_and_passes() {
+        let scenario = Scenario::parse(
+            "scenario mini\n\
+             seed 5\n\
+             history-days 3\n\
+             min-native-rows 1000000\n\
+             arrive xsede/large start 10 every 30 count 3 files 200 avg-mb 100\n",
+        )
+        .unwrap();
+        let outcome = run(&scenario, &RunOptions::default()).unwrap();
+        assert_eq!(outcome.responses().count(), 3);
+        assert!(outcome.passed(), "{}", render_verdict(&outcome));
+        // The first request leads; a confident estimate then short-
+        // circuits the rest of the slice's sampling.
+        let modes: Vec<_> = outcome.responses().map(|r| r.mode).collect();
+        assert_eq!(modes[0], Some(ProbeMode::Led));
+        assert!(modes[1..].iter().all(|m| *m == Some(ProbeMode::EstimateServed)));
+        // Verdict renders a row per invariant.
+        let verdict = render_verdict(&outcome);
+        assert!(verdict.contains("budget-non-negative"), "{verdict}");
+        assert!(verdict.contains("monotone-generations"), "{verdict}");
+    }
+
+    #[test]
+    fn timeline_rendering_is_stable_for_synthetic_events() {
+        use crate::sim::dataset::SizeClass;
+        use crate::sim::testbed::TestbedId;
+
+        let key = ShardKey::new(TestbedId::Xsede, SizeClass::Large);
+        let timeline = vec![
+            Event::Fault {
+                t_s: 12.5,
+                fault: Fault::DegradeLink { network: TestbedId::Xsede, factor: 0.5 },
+            },
+            Event::Refresh { t_s: 13.0, key, generation: 2, cause: "forced".to_string() },
+            Event::Response(ResponseEvent {
+                t_s: 14.0,
+                id: 7,
+                key,
+                generation: 2,
+                borrowed: false,
+                mode: Some(ProbeMode::EstimateServed),
+                samples: 0,
+                retunes: 1,
+                mb: 1000.0,
+                transfer_s: 3.25,
+                achieved_mbps: 2461.5,
+                budget_after_mb: 512.0,
+                cluster: Some(1),
+                est: Some(EstimateObs {
+                    cluster: 1,
+                    surface: 4,
+                    generation: 2,
+                    confident: true,
+                }),
+                budget_forced: false,
+                piggyback: None,
+                coalesced: false,
+            }),
+        ];
+        let rendered = render_timeline(&timeline);
+        assert_eq!(rendered, render_timeline(&timeline), "rendering is a pure function");
+        assert!(rendered.contains("fault    degrade-link xsede 0.50"), "{rendered}");
+        assert!(rendered.contains("refresh  xsede/large gen=2 (forced)"), "{rendered}");
+        assert!(rendered.contains("est=c1/s4@g2+"), "{rendered}");
+        assert!(rendered.contains("goodput=2461.5"), "{rendered}");
+    }
+}

@@ -1,0 +1,414 @@
+//! Declarative scenario descriptions and their plain-text parser.
+//!
+//! A scenario is a scripted workload trace plus timed faults: periodic
+//! arrival rules per (network, size-class), flash-crowd bursts, the
+//! fault schedule, and the knobs the replay honors (probe budget,
+//! native-fit threshold, goodput floor). Scenarios live as fixture
+//! files — one directive per line, `#` comments — so new regime-change
+//! cases are a text file, not a code change:
+//!
+//! ```text
+//! scenario brownout
+//! seed 23
+//! arrive xsede/large start 30 every 60 count 10 files 200 avg-mb 100
+//! fault 150 degrade-link xsede 0.45
+//! fault 390 restore-link xsede
+//! floor 0.30
+//! ```
+//!
+//! The bundled library (`flash-crowd`, `brownout`, `stale-kb`,
+//! `probe-famine`, `shard-churn`) is compiled in from
+//! `rust/scenarios/*.scn` and exercised end-to-end by
+//! `tests/scenario_conformance.rs`.
+
+use super::inject::{Fault, FaultEvent};
+use crate::fabric::ShardKey;
+use crate::probe::BudgetConfig;
+use crate::sim::dataset::SizeClass;
+use crate::sim::testbed::TestbedId;
+use anyhow::{bail, Context, Result};
+
+/// One periodic arrival rule: `count` requests on `key`, the first at
+/// `start_s`, then every `every_s` virtual seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrivalRule {
+    pub key: ShardKey,
+    pub start_s: f64,
+    pub every_s: f64,
+    pub count: usize,
+    pub files: u64,
+    pub avg_mb: f64,
+}
+
+/// A burst of simultaneous arrivals on one shard.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Burst {
+    pub at_s: f64,
+    pub key: ShardKey,
+    pub count: usize,
+    pub files: u64,
+    pub avg_mb: f64,
+    /// Drive the burst through the probe plane's single-flight
+    /// coalescing (one deterministic leader, piggybacking followers)
+    /// instead of strictly sequential replay.
+    pub coalesce: bool,
+}
+
+/// A parsed scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub seed: u64,
+    pub history_days: u64,
+    /// Borrowed shards fit natively at this many rows (`u64::MAX`
+    /// effectively freezes shards at their borrowed KB).
+    pub min_native_rows: u64,
+    /// Probe-budget override (probe-famine scenarios); `None` keeps the
+    /// plane's default.
+    pub budget: Option<BudgetConfig>,
+    pub arrivals: Vec<ArrivalRule>,
+    pub bursts: Vec<Burst>,
+    pub faults: Vec<FaultEvent>,
+    /// Mean goodput under fault must stay at or above this fraction of
+    /// a fault-free control replay's mean goodput.
+    pub goodput_floor: Option<f64>,
+}
+
+/// The bundled scenario library: (name, fixture text).
+const BUNDLED: [(&str, &str); 5] = [
+    ("flash-crowd", include_str!("../../scenarios/flash-crowd.scn")),
+    ("brownout", include_str!("../../scenarios/brownout.scn")),
+    ("stale-kb", include_str!("../../scenarios/stale-kb.scn")),
+    ("probe-famine", include_str!("../../scenarios/probe-famine.scn")),
+    ("shard-churn", include_str!("../../scenarios/shard-churn.scn")),
+];
+
+/// Names of the bundled scenarios, in library order.
+pub fn bundled_names() -> Vec<&'static str> {
+    BUNDLED.iter().map(|(name, _)| *name).collect()
+}
+
+/// Fixture text of a bundled scenario.
+pub fn bundled(name: &str) -> Option<&'static str> {
+    BUNDLED.iter().find(|(n, _)| *n == name).map(|(_, text)| *text)
+}
+
+fn parse_key(token: &str) -> Result<ShardKey> {
+    ShardKey::parse(token)
+        .with_context(|| format!("'{token}' is not a network/class shard key"))
+}
+
+fn parse_network(token: &str) -> Result<TestbedId> {
+    TestbedId::parse(token).with_context(|| format!("'{token}' is not a known network"))
+}
+
+fn parse_f64(token: &str, what: &str) -> Result<f64> {
+    token.parse::<f64>().with_context(|| format!("{what} expects a number, got '{token}'"))
+}
+
+fn parse_u64(token: &str, what: &str) -> Result<u64> {
+    token.parse::<u64>().with_context(|| format!("{what} expects an integer, got '{token}'"))
+}
+
+/// Read `key value key value ...` pairs into a lookup closure.
+fn kv_lookup<'a>(tokens: &'a [&'a str]) -> impl Fn(&str) -> Option<&'a str> {
+    move |want: &str| {
+        tokens
+            .chunks(2)
+            .find(|pair| pair.len() == 2 && pair[0] == want)
+            .map(|pair| pair[1])
+    }
+}
+
+/// Reject malformed key-value token runs instead of silently falling
+/// back to defaults: every key must be known, have a value, and appear
+/// at most once. (A typo'd `cout 5`, a misplaced `coalesce`, or a
+/// second `count` that kv_lookup would shadow must all be parse
+/// errors, not a scenario that quietly tests less than it claims to.)
+fn validate_kv(tokens: &[&str], allowed: &[&str], context: &str) -> Result<()> {
+    anyhow::ensure!(
+        tokens.len() % 2 == 0,
+        "{context}: dangling token '{}' (expected `key value` pairs of {allowed:?})",
+        tokens.last().copied().unwrap_or("")
+    );
+    let mut seen: Vec<&str> = Vec::new();
+    for pair in tokens.chunks(2) {
+        anyhow::ensure!(
+            allowed.contains(&pair[0]),
+            "{context}: unknown option '{}' (expected one of {allowed:?})",
+            pair[0]
+        );
+        anyhow::ensure!(
+            !seen.contains(&pair[0]),
+            "{context}: option '{}' given twice",
+            pair[0]
+        );
+        seen.push(pair[0]);
+    }
+    Ok(())
+}
+
+impl Scenario {
+    /// Parse a scenario from its fixture text.
+    pub fn parse(text: &str) -> Result<Scenario> {
+        let mut scenario = Scenario {
+            name: String::new(),
+            seed: 7,
+            history_days: 5,
+            min_native_rows: 40,
+            budget: None,
+            arrivals: Vec::new(),
+            bursts: Vec::new(),
+            faults: Vec::new(),
+            goodput_floor: None,
+        };
+        for (line_no, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let tokens: Vec<&str> = line.split_whitespace().collect();
+            let context = || format!("line {}: '{line}'", line_no + 1);
+            match tokens[0] {
+                "scenario" => {
+                    let name = tokens.get(1).with_context(context)?;
+                    scenario.name = name.to_string();
+                }
+                "seed" => {
+                    scenario.seed =
+                        parse_u64(tokens.get(1).with_context(context)?, "seed")?;
+                }
+                "history-days" => {
+                    scenario.history_days =
+                        parse_u64(tokens.get(1).with_context(context)?, "history-days")?;
+                }
+                "min-native-rows" => {
+                    scenario.min_native_rows =
+                        parse_u64(tokens.get(1).with_context(context)?, "min-native-rows")?;
+                }
+                "budget" => {
+                    anyhow::ensure!(tokens.len() == 4, "{}: budget CAP INIT EARN", context());
+                    scenario.budget = Some(BudgetConfig {
+                        capacity_mb: parse_f64(tokens[1], "budget capacity")?,
+                        initial_mb: parse_f64(tokens[2], "budget initial")?,
+                        earn_fraction: parse_f64(tokens[3], "budget earn fraction")?,
+                    });
+                }
+                "floor" => {
+                    let floor = parse_f64(tokens.get(1).with_context(context)?, "floor")?;
+                    anyhow::ensure!(
+                        (0.0..=1.0).contains(&floor),
+                        "{}: floor must be a fraction in [0, 1]",
+                        context()
+                    );
+                    scenario.goodput_floor = Some(floor);
+                }
+                "arrive" => {
+                    let key = parse_key(tokens.get(1).with_context(context)?)?;
+                    validate_kv(
+                        &tokens[2..],
+                        &["start", "every", "count", "files", "avg-mb"],
+                        &context(),
+                    )?;
+                    let get = kv_lookup(&tokens[2..]);
+                    let rule = ArrivalRule {
+                        key,
+                        start_s: parse_f64(get("start").unwrap_or("0"), "arrive start")?,
+                        every_s: parse_f64(get("every").unwrap_or("60"), "arrive every")?,
+                        count: parse_u64(get("count").unwrap_or("1"), "arrive count")?
+                            as usize,
+                        files: parse_u64(get("files").unwrap_or("100"), "arrive files")?,
+                        avg_mb: parse_f64(get("avg-mb").unwrap_or("100"), "arrive avg-mb")?,
+                    };
+                    anyhow::ensure!(
+                        rule.every_s > 0.0 && rule.count >= 1 && rule.files >= 1
+                            && rule.avg_mb > 0.0,
+                        "{}: arrive needs every > 0, count >= 1, files >= 1, avg-mb > 0",
+                        context()
+                    );
+                    anyhow::ensure!(
+                        SizeClass::classify(rule.avg_mb) == key.class,
+                        "{}: avg-mb {} is class '{}', but the rule targets shard {key}",
+                        context(),
+                        rule.avg_mb,
+                        SizeClass::classify(rule.avg_mb).name()
+                    );
+                    scenario.arrivals.push(rule);
+                }
+                "burst" => {
+                    let at_s = parse_f64(tokens.get(1).with_context(context)?, "burst time")?;
+                    let key = parse_key(tokens.get(2).with_context(context)?)?;
+                    let coalesce = tokens.last() == Some(&"coalesce");
+                    let kv_end = if coalesce { tokens.len() - 1 } else { tokens.len() };
+                    validate_kv(
+                        &tokens[3..kv_end],
+                        &["count", "files", "avg-mb"],
+                        &context(),
+                    )?;
+                    let get = kv_lookup(&tokens[3..kv_end]);
+                    let burst = Burst {
+                        at_s,
+                        key,
+                        count: parse_u64(get("count").unwrap_or("4"), "burst count")? as usize,
+                        files: parse_u64(get("files").unwrap_or("100"), "burst files")?,
+                        avg_mb: parse_f64(get("avg-mb").unwrap_or("100"), "burst avg-mb")?,
+                        coalesce,
+                    };
+                    anyhow::ensure!(
+                        burst.count >= 1 && burst.files >= 1 && burst.avg_mb > 0.0,
+                        "{}: burst needs count >= 1, files >= 1, avg-mb > 0",
+                        context()
+                    );
+                    anyhow::ensure!(
+                        SizeClass::classify(burst.avg_mb) == key.class,
+                        "{}: avg-mb {} is class '{}', but the burst targets shard {key}",
+                        context(),
+                        burst.avg_mb,
+                        SizeClass::classify(burst.avg_mb).name()
+                    );
+                    scenario.bursts.push(burst);
+                }
+                "fault" => {
+                    let at_s = parse_f64(tokens.get(1).with_context(context)?, "fault time")?;
+                    let kind = *tokens.get(2).with_context(context)?;
+                    let arg = |i: usize| -> Result<&str> {
+                        tokens.get(3 + i).map(|s| *s).with_context(context)
+                    };
+                    let fault = match kind {
+                        "degrade-link" => Fault::DegradeLink {
+                            network: parse_network(arg(0)?)?,
+                            factor: parse_f64(arg(1)?, "degrade factor")?,
+                        },
+                        "restore-link" => {
+                            Fault::RestoreLink { network: parse_network(arg(0)?)? }
+                        }
+                        "load-step" => Fault::LoadStep {
+                            network: parse_network(arg(0)?)?,
+                            delta: parse_f64(arg(1)?, "load delta")?,
+                        },
+                        "clear-load" => Fault::ClearLoad { network: parse_network(arg(0)?)? },
+                        "starve-budget" => Fault::StarveBudget { key: parse_key(arg(0)?)? },
+                        "evict-shard" => Fault::EvictShard { key: parse_key(arg(0)?)? },
+                        "force-refresh" => Fault::ForceRefresh { key: parse_key(arg(0)?)? },
+                        "pause-refresh" => Fault::PauseRefresh,
+                        "resume-refresh" => Fault::ResumeRefresh,
+                        other => bail!("{}: unknown fault kind '{other}'", context()),
+                    };
+                    scenario.faults.push(FaultEvent { at_s, fault });
+                }
+                other => bail!("{}: unknown directive '{other}'", context()),
+            }
+        }
+        anyhow::ensure!(!scenario.name.is_empty(), "scenario needs a 'scenario NAME' line");
+        anyhow::ensure!(
+            !scenario.arrivals.is_empty() || !scenario.bursts.is_empty(),
+            "scenario '{}' schedules no traffic at all",
+            scenario.name
+        );
+        Ok(scenario)
+    }
+
+    /// All networks the scenario touches (history is generated for
+    /// exactly these).
+    pub fn networks(&self) -> Vec<TestbedId> {
+        let mut nets: Vec<TestbedId> = self
+            .arrivals
+            .iter()
+            .map(|r| r.key.network)
+            .chain(self.bursts.iter().map(|b| b.key.network))
+            .collect();
+        nets.sort();
+        nets.dedup();
+        nets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_bundled_scenario_parses() {
+        for name in bundled_names() {
+            let text = bundled(name).unwrap();
+            let scenario = Scenario::parse(text)
+                .unwrap_or_else(|e| panic!("bundled scenario '{name}' failed to parse: {e:#}"));
+            assert_eq!(scenario.name, name, "fixture name matches its registry key");
+            assert!(!scenario.networks().is_empty());
+        }
+        assert_eq!(bundled_names().len(), 5);
+        assert!(bundled("no-such-scenario").is_none());
+    }
+
+    #[test]
+    fn parses_a_full_scenario() {
+        let text = "\
+# comment line
+scenario demo
+seed 99
+history-days 3
+min-native-rows 12
+budget 512 256 0.0
+arrive xsede/large start 10 every 30 count 2 files 50 avg-mb 128
+burst 90 xsede/large count 3 files 200 avg-mb 100 coalesce
+fault 120 degrade-link xsede 0.5   # trailing comment
+fault 150 restore-link xsede
+floor 0.4
+";
+        let s = Scenario::parse(text).unwrap();
+        assert_eq!(s.name, "demo");
+        assert_eq!(s.seed, 99);
+        assert_eq!(s.history_days, 3);
+        assert_eq!(s.min_native_rows, 12);
+        assert_eq!(s.budget.map(|b| b.capacity_mb), Some(512.0));
+        assert_eq!(s.arrivals.len(), 1);
+        assert_eq!(s.arrivals[0].count, 2);
+        assert_eq!(s.bursts.len(), 1);
+        assert!(s.bursts[0].coalesce);
+        assert_eq!(s.faults.len(), 2);
+        assert_eq!(
+            s.faults[0].fault,
+            Fault::DegradeLink { network: TestbedId::Xsede, factor: 0.5 }
+        );
+        assert_eq!(s.goodput_floor, Some(0.4));
+        assert_eq!(s.networks(), vec![TestbedId::Xsede]);
+    }
+
+    #[test]
+    fn rejects_malformed_scenarios() {
+        assert!(Scenario::parse("arrive xsede/large count 1").is_err(), "missing name");
+        assert!(Scenario::parse("scenario empty\n").is_err(), "no traffic");
+        assert!(
+            Scenario::parse("scenario x\narrive xsede/large avg-mb 1 count 1").is_err(),
+            "class mismatch: avg-mb 1 is small, shard is large"
+        );
+        assert!(
+            Scenario::parse("scenario x\nfault 1 explode xsede\narrive xsede/large count 1")
+                .is_err(),
+            "unknown fault kind"
+        );
+        assert!(
+            Scenario::parse("scenario x\nwat 1\narrive xsede/large count 1").is_err(),
+            "unknown directive"
+        );
+        assert!(
+            Scenario::parse("scenario x\narrive xsede/large cout 5").is_err(),
+            "typo'd option key must be rejected, not defaulted"
+        );
+        assert!(
+            Scenario::parse("scenario x\narrive xsede/large count").is_err(),
+            "dangling key without a value must be rejected"
+        );
+        assert!(
+            Scenario::parse("scenario x\narrive xsede/large count 2 every 60 count 9").is_err(),
+            "duplicate option keys must be rejected, not first-one-wins"
+        );
+        assert!(
+            Scenario::parse(
+                "scenario x\nburst 10 xsede/large coalesce count 3\narrive xsede/large count 1"
+            )
+            .is_err(),
+            "misplaced 'coalesce' (not last) must be rejected, not silently dropped"
+        );
+    }
+}

@@ -1,0 +1,173 @@
+//! Fault injection for the simulated substrate.
+//!
+//! A [`FaultBoard`] is a thread-safe registry of the faults currently
+//! afflicting each network: link-capacity degradation and external-load
+//! step changes. The coordinator consults the board (when one is
+//! attached via `CoordinatorConfig::faults`) while building a request's
+//! hidden environment, so every layer above the simulator — optimizers,
+//! the probe plane, the knowledge fabric — experiences the fault the
+//! way it would a real regime change: through measured throughput only.
+//!
+//! The scenario engine (`crate::scenario`) drives the board from timed
+//! fault events; nothing else mutates it, so replay stays deterministic.
+
+use super::testbed::{Testbed, TestbedId};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// The faults currently applied to one network.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkFault {
+    /// Multiplier on the bottleneck capacity (1.0 = healthy; clamped to
+    /// [0.01, 1.0] — degradation only, and `Link::new` needs > 0).
+    pub capacity_factor: f64,
+    /// Additive step on the diurnal profile's base external load.
+    pub load_delta: f64,
+}
+
+impl Default for LinkFault {
+    fn default() -> Self {
+        LinkFault { capacity_factor: 1.0, load_delta: 0.0 }
+    }
+}
+
+impl LinkFault {
+    fn is_clear(&self) -> bool {
+        self.capacity_factor >= 1.0 && self.load_delta == 0.0
+    }
+}
+
+/// Thread-safe registry of per-network faults. Attach one board to a
+/// coordinator (`CoordinatorConfig::faults`) and mutate it from the
+/// fault-injection side; requests served while a fault is active see
+/// the shaped testbed.
+#[derive(Debug, Default)]
+pub struct FaultBoard {
+    inner: Mutex<HashMap<TestbedId, LinkFault>>,
+}
+
+impl FaultBoard {
+    pub fn new() -> FaultBoard {
+        FaultBoard::default()
+    }
+
+    /// Degrade the network's bottleneck capacity to `factor` of its
+    /// nominal bandwidth (factor clamped to [0.01, 1.0]).
+    pub fn degrade_link(&self, network: TestbedId, factor: f64) {
+        let factor = if factor.is_finite() { factor.clamp(0.01, 1.0) } else { 1.0 };
+        let mut map = self.inner.lock().expect("fault board poisoned");
+        map.entry(network).or_default().capacity_factor = factor;
+        if map[&network].is_clear() {
+            map.remove(&network);
+        }
+    }
+
+    /// Restore the network's link to full capacity (load steps persist).
+    pub fn restore_link(&self, network: TestbedId) {
+        self.degrade_link(network, 1.0);
+    }
+
+    /// Step the network's base external load by `delta` (replaces any
+    /// previous step; the profile clamps the result to its valid range).
+    pub fn load_step(&self, network: TestbedId, delta: f64) {
+        let delta = if delta.is_finite() { delta } else { 0.0 };
+        let mut map = self.inner.lock().expect("fault board poisoned");
+        map.entry(network).or_default().load_delta = delta;
+        if map[&network].is_clear() {
+            map.remove(&network);
+        }
+    }
+
+    /// Clear the network's load step (capacity degradation persists).
+    pub fn clear_load(&self, network: TestbedId) {
+        self.load_step(network, 0.0);
+    }
+
+    /// Clear every fault on every network.
+    pub fn clear_all(&self) {
+        self.inner.lock().expect("fault board poisoned").clear();
+    }
+
+    /// The network's current fault, if any.
+    pub fn effect(&self, network: TestbedId) -> Option<LinkFault> {
+        self.inner.lock().expect("fault board poisoned").get(&network).copied()
+    }
+
+    /// Any fault active anywhere?
+    pub fn is_active(&self) -> bool {
+        !self.inner.lock().expect("fault board poisoned").is_empty()
+    }
+
+    /// Apply the network's current fault to a testbed in place: scale
+    /// the link capacity and offset the diurnal load profile. No-op for
+    /// a healthy network.
+    pub fn shape(&self, testbed: &mut Testbed) {
+        if let Some(fault) = self.effect(testbed.id) {
+            testbed.path.link = testbed.path.link.scaled(fault.capacity_factor);
+            testbed.profile = testbed.profile.with_load_delta(fault.load_delta);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_board_leaves_testbed_untouched() {
+        let board = FaultBoard::new();
+        let mut shaped = Testbed::xsede();
+        board.shape(&mut shaped);
+        assert_eq!(shaped.path.link, Testbed::xsede().path.link);
+        assert!(!board.is_active());
+    }
+
+    #[test]
+    fn degrade_scales_capacity_and_restore_heals() {
+        let board = FaultBoard::new();
+        board.degrade_link(TestbedId::Xsede, 0.4);
+        assert!(board.is_active());
+        let mut shaped = Testbed::xsede();
+        board.shape(&mut shaped);
+        assert!((shaped.path.link.bandwidth_mbps - 4_000.0).abs() < 1e-9);
+        // Other networks are untouched.
+        let mut other = Testbed::didclab();
+        board.shape(&mut other);
+        assert_eq!(other.path.link.bandwidth_mbps, 1_000.0);
+        board.restore_link(TestbedId::Xsede);
+        assert!(!board.is_active());
+        let mut healed = Testbed::xsede();
+        board.shape(&mut healed);
+        assert_eq!(healed.path.link.bandwidth_mbps, 10_000.0);
+    }
+
+    #[test]
+    fn load_step_offsets_profile_and_clears_independently() {
+        let board = FaultBoard::new();
+        board.degrade_link(TestbedId::Xsede, 0.5);
+        board.load_step(TestbedId::Xsede, 0.3);
+        let mut shaped = Testbed::xsede();
+        board.shape(&mut shaped);
+        let clean = Testbed::xsede();
+        let t = 3.0 * 3_600.0;
+        assert!(shaped.profile.mean_load(t) > clean.profile.mean_load(t) + 0.25);
+        // Clearing the load keeps the capacity fault.
+        board.clear_load(TestbedId::Xsede);
+        assert_eq!(
+            board.effect(TestbedId::Xsede),
+            Some(LinkFault { capacity_factor: 0.5, load_delta: 0.0 })
+        );
+        board.clear_all();
+        assert!(!board.is_active());
+    }
+
+    #[test]
+    fn factors_are_clamped() {
+        let board = FaultBoard::new();
+        board.degrade_link(TestbedId::Didclab, -3.0);
+        let fault = board.effect(TestbedId::Didclab).unwrap();
+        assert!(fault.capacity_factor >= 0.01);
+        board.degrade_link(TestbedId::Didclab, f64::NAN);
+        assert_eq!(board.effect(TestbedId::Didclab), None, "NaN clears to healthy");
+    }
+}

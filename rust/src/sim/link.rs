@@ -27,6 +27,15 @@ impl Link {
         self.rtt_ms / 1e3
     }
 
+    /// Fault hook: this link with its bottleneck capacity scaled by
+    /// `factor` (clamped to [0.01, 1.0] — degradation only). RTT and
+    /// loss are untouched; a brownout narrows the pipe, it does not
+    /// move the endpoints.
+    pub fn scaled(&self, factor: f64) -> Link {
+        let factor = if factor.is_finite() { factor.clamp(0.01, 1.0) } else { 1.0 };
+        Link { bandwidth_mbps: self.bandwidth_mbps * factor, ..self.clone() }
+    }
+
     /// Bandwidth-delay product in MB — how much buffer a single stream
     /// needs to fill the pipe.
     pub fn bdp_mb(&self) -> f64 {

@@ -6,6 +6,7 @@
 
 pub mod dataset;
 pub mod endpoint;
+pub mod fault;
 pub mod link;
 pub mod params;
 pub mod testbed;
@@ -13,6 +14,7 @@ pub mod traffic;
 pub mod transfer;
 
 pub use dataset::{Dataset, SizeClass};
+pub use fault::{FaultBoard, LinkFault};
 pub use params::{Params, BETA, PP_LEVELS};
 pub use testbed::{Testbed, TestbedId};
 pub use traffic::{ContendKind, Contention, LoadProfile, Period};

@@ -97,6 +97,16 @@ impl LoadProfile {
         }
     }
 
+    /// Fault hook: this profile with its quiet-hours floor stepped by
+    /// `delta` (an external-load regime change — flash crowds, a new
+    /// tenant, a brownout's rerouted traffic). The result is clamped so
+    /// the profile stays a valid load fraction; `mean_load` clamps the
+    /// final value as usual.
+    pub fn with_load_delta(&self, delta: f64) -> LoadProfile {
+        let delta = if delta.is_finite() { delta } else { 0.0 };
+        LoadProfile { base: (self.base + delta).clamp(0.0, 0.95), ..self.clone() }
+    }
+
     /// Hour-of-day in [0, 24).
     pub fn hour_of_day(t_s: f64) -> f64 {
         (t_s.rem_euclid(DAY_S)) / HOUR_S

@@ -1,0 +1,61 @@
+//! CLI contract smoke tests: unknown or missing experiment/scenario
+//! names must exit non-zero (listing what *is* available on stderr), so
+//! scripts and CI can gate on the exit code instead of scraping output.
+
+use std::process::{Command, Output};
+
+fn dtopt(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_dtopt"))
+        .args(args)
+        .output()
+        .expect("spawning the dtopt binary")
+}
+
+#[test]
+fn help_exits_zero_and_lists_scenario() {
+    let out = dtopt(&["help"]);
+    assert!(out.status.success(), "help must exit 0");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("experiment"), "{stdout}");
+    assert!(stdout.contains("scenario"), "{stdout}");
+}
+
+#[test]
+fn unknown_command_exits_nonzero() {
+    let out = dtopt(&["frobnicate"]);
+    assert!(!out.status.success(), "unknown command must exit non-zero");
+}
+
+#[test]
+fn missing_experiment_name_exits_nonzero() {
+    let out = dtopt(&["experiment"]);
+    assert!(!out.status.success(), "missing experiment name must exit non-zero");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("available"), "stderr lists what exists: {stderr}");
+    assert!(stderr.contains("fig5"), "{stderr}");
+}
+
+#[test]
+fn unknown_experiment_name_exits_nonzero() {
+    let out = dtopt(&["experiment", "fig99"]);
+    assert!(!out.status.success(), "unknown experiment name must exit non-zero");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("available"), "stderr lists what exists: {stderr}");
+}
+
+#[test]
+fn missing_scenario_name_exits_nonzero() {
+    let out = dtopt(&["scenario"]);
+    assert!(!out.status.success(), "missing scenario name must exit non-zero");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("bundled"), "stderr lists the bundled library: {stderr}");
+    assert!(stderr.contains("flash-crowd"), "{stderr}");
+}
+
+#[test]
+fn unknown_scenario_name_exits_nonzero() {
+    let out = dtopt(&["scenario", "no-such-scenario"]);
+    assert!(!out.status.success(), "unknown scenario name must exit non-zero");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("bundled"), "stderr lists the bundled library: {stderr}");
+}

@@ -1,0 +1,103 @@
+//! Golden-render test for the operator-facing metrics output: the full
+//! `coordinator::Metrics::render` — per-optimizer table, pooled
+//! request-latency line, knowledge-service block, fabric shard table,
+//! and probe-plane block — is snapshotted against a checked-in fixture,
+//! so format drift is a reviewed diff instead of a silent reshape of
+//! what operators parse and alert on.
+//!
+//! Every input is hand-picked so the render is bit-deterministic: fixed
+//! nanosecond latencies (never wall-clock measurements), manually set
+//! service counters, an empty fallback KB for the fabric (one
+//! borrowed(fallback) shard, zero rows), and a probe estimate whose
+//! confidence cannot visibly decay (million-second half-life).
+//!
+//! To regenerate after an *intentional* format change:
+//! `DTOPT_UPDATE_GOLDEN=1 cargo test --test metrics_golden` — then
+//! review and commit the fixture diff.
+
+use dtopt::coordinator::Metrics;
+use dtopt::fabric::{FabricConfig, ShardKey, ShardRouter};
+use dtopt::feedback::FeedbackStats;
+use dtopt::offline::knowledge::KnowledgeBase;
+use dtopt::probe::{BudgetConfig, EstimateConfig, ProbeConfig, ProbePlane};
+use dtopt::sim::dataset::SizeClass;
+use dtopt::sim::testbed::TestbedId;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+const GOLDEN_PATH: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/metrics_golden.txt");
+
+#[test]
+fn full_metrics_render_matches_golden_fixture() {
+    let metrics = Metrics::new();
+    // Per-optimizer entries with fixed decision latencies.
+    metrics.record("ASM", 2000.0, 1000.0, 4.0, 2, 10_000);
+    metrics.record("ASM", 1000.0, 1000.0, 8.0, 0, 30_000);
+    metrics.record("GO", 500.0, 250.0, 4.0, 0, 2_000_000);
+
+    // Knowledge-service block: counters set by hand.
+    let feedback = Arc::new(FeedbackStats::default());
+    feedback.kb_generation.store(3, Ordering::Relaxed);
+    feedback.refreshes.store(2, Ordering::Relaxed);
+    feedback.rows_consumed.store(120, Ordering::Relaxed);
+    feedback.last_refresh_ns.store(2_000_000, Ordering::Relaxed);
+    feedback.total_refresh_ns.store(6_000_000, Ordering::Relaxed);
+    feedback.rows_enqueued.store(130, Ordering::Relaxed);
+    feedback.rows_flushed.store(128, Ordering::Relaxed);
+    feedback.flushes.store(16, Ordering::Relaxed);
+    feedback.rows_dropped.store(2, Ordering::Relaxed);
+    feedback.drift_events.store(5, Ordering::Relaxed);
+    metrics.attach_feedback(feedback);
+
+    // Fabric shard table: an empty fallback KB means the routed shard
+    // borrows it with zero rows — every rendered counter is fixed.
+    let dir = std::env::temp_dir()
+        .join(format!("dtopt_metrics_golden_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let fabric = Arc::new(
+        ShardRouter::open(&dir, Arc::new(KnowledgeBase::empty()), FabricConfig::default())
+            .unwrap(),
+    );
+    let _ = fabric.route(ShardKey::new(TestbedId::Xsede, SizeClass::Large));
+    metrics.attach_fabric(fabric.clone());
+
+    // Probe block: scripted counters, bytes, and one estimate whose
+    // confidence cannot visibly decay before the render.
+    let plane = Arc::new(ProbePlane::new(ProbeConfig {
+        estimate: EstimateConfig {
+            half_life: Duration::from_secs(1_000_000),
+            ..Default::default()
+        },
+        budget: BudgetConfig { capacity_mb: 4096.0, initial_mb: 4096.0, earn_fraction: 0.05 },
+        ..Default::default()
+    }));
+    plane.stats.led.store(2, Ordering::Relaxed);
+    plane.stats.piggybacked.store(5, Ordering::Relaxed);
+    plane.stats.estimate_served.store(3, Ordering::Relaxed);
+    plane.stats.budget_forced.store(1, Ordering::Relaxed);
+    plane.stats.note_bytes(500.0, 9_500.0);
+    plane
+        .estimates()
+        .record(ShardKey::new(TestbedId::Xsede, SizeClass::Large), 1, 3, 0.42, 1.0, 2);
+    metrics.attach_probe(plane);
+
+    let rendered = metrics.render();
+    fabric.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    if std::env::var("DTOPT_UPDATE_GOLDEN").is_ok() {
+        std::fs::write(GOLDEN_PATH, &rendered).expect("rewriting the golden fixture");
+        eprintln!("metrics_golden: fixture regenerated at {GOLDEN_PATH}");
+        return;
+    }
+    let golden = include_str!("fixtures/metrics_golden.txt");
+    assert_eq!(
+        rendered, golden,
+        "metrics render drifted from the golden fixture.\n\
+         If the change is intentional, regenerate with \
+         DTOPT_UPDATE_GOLDEN=1 cargo test --test metrics_golden\n\
+         --- rendered ---\n{rendered}\n--- golden ---\n{golden}"
+    );
+}

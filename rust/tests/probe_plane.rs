@@ -11,10 +11,12 @@ use dtopt::fabric::{FabricConfig, ShardKey, ShardRouter};
 use dtopt::logs::generate::{generate, GenConfig};
 use dtopt::offline::kmeans::NativeAssign;
 use dtopt::offline::pipeline::{build, OfflineConfig};
-use dtopt::probe::{ProbeMode, ProbePlane};
+use dtopt::online::asm::AsmOutcome;
+use dtopt::probe::{Admission, ProbeMode, ProbePlane};
 use dtopt::sim::dataset::{Dataset, SizeClass};
 use dtopt::sim::testbed::{Testbed, TestbedId};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 #[test]
 fn fabric_coordinator_shares_one_probe_plane_per_shard() {
@@ -74,4 +76,71 @@ fn fabric_coordinator_shares_one_probe_plane_per_shard() {
     coord.shutdown();
     fabric.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Regression lock on PR 3's documented piggyback mismatch path: a
+/// follower whose request maps to a different KB cluster, or is pinned
+/// to a different KB generation, must treat the leader's result as a
+/// miss and fall back to its own decision (an unregistered independent
+/// probe when the budget allows) — never adopt the leader's surface. A
+/// matched follower, admitted in the same cohort, still piggybacks.
+#[test]
+fn mismatched_followers_fall_back_instead_of_adopting() {
+    let plane = Arc::new(ProbePlane::default());
+    let key = ShardKey::new(TestbedId::Xsede, SizeClass::Large);
+    let guard = match plane.admit(key, Some(0), 0, 10.0) {
+        Admission::Lead { guard, .. } => guard,
+        _ => panic!("cold plane must lead"),
+    };
+    let spawn_follower = |cluster: usize, generation: u64| {
+        let plane = plane.clone();
+        std::thread::spawn(move || plane.admit(key, Some(cluster), generation, 10.0))
+    };
+    let wrong_cluster = spawn_follower(1, 0);
+    let wrong_generation = spawn_follower(0, 1);
+    let matched = spawn_follower(0, 0);
+    // Converge the leader only once the whole cohort is blocked on the
+    // flight, so every follower deterministically observes the result.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while plane.waiting_followers(key) < 3 && Instant::now() < deadline {
+        std::thread::yield_now();
+    }
+    assert_eq!(plane.waiting_followers(key), 3, "cohort never joined the flight");
+    plane.lead_converged(
+        key,
+        Some(0),
+        guard,
+        AsmOutcome { surface_idx: 3, converged_idx: 3, sampled: true, intensity: 0.5 },
+        0,
+    );
+    match matched.join().unwrap() {
+        Admission::Piggyback(result) => {
+            assert_eq!(result.cluster_idx, 0);
+            assert_eq!(result.generation, 0);
+            assert_eq!(result.surface_idx, 3);
+        }
+        _ => panic!("the matched follower must piggyback on the leader"),
+    }
+    for (what, handle) in [("cluster", wrong_cluster), ("generation", wrong_generation)] {
+        match handle.join().unwrap() {
+            Admission::Piggyback(result) => {
+                panic!("{what}-mismatched follower adopted the leader's result {result:?}")
+            }
+            Admission::Serve(surface) => {
+                panic!("{what}-mismatched follower was served {surface:?} instead of probing")
+            }
+            Admission::Lead { guard, warm_start } => {
+                // The documented fallback: probe independently, without
+                // registering a new flight, warm-started only by an
+                // estimate valid for the follower's own cluster and
+                // generation — none exists here.
+                assert!(guard.is_none(), "{what}: fallback probes are unregistered");
+                assert!(warm_start.is_none(), "{what}: no valid estimate to warm-start from");
+            }
+        }
+    }
+    // Attribution: the leader plus the two fallback probes all count as
+    // led; only the matched follower piggybacked.
+    assert_eq!(plane.stats.led.load(std::sync::atomic::Ordering::Relaxed), 3);
+    assert_eq!(plane.stats.piggybacked.load(std::sync::atomic::Ordering::Relaxed), 1);
 }
