@@ -1,0 +1,28 @@
+//! Bench/regenerator for the convoy bake-off: parameter decisions made
+//! on the shared-link contention plane (live occupancy folded into
+//! every measurement, fair-share stream allowance) versus decisions
+//! made against the private-testbed fiction — both cohorts then scored
+//! under identical mutual contention by the deterministic fixed-point
+//! solver. Companion to `rush_bakeoff.rs` (which shares the *probe*;
+//! this shares the *link itself*).
+
+use dtopt::experiments::common::{config_from_args, default_backend, World};
+use dtopt::experiments::convoy;
+
+fn main() {
+    let config = config_from_args();
+    let full = std::env::var("DTOPT_FULL").is_ok();
+    let mut backend = default_backend();
+    eprintln!("convoy_bakeoff: preparing world ({} backend)...", backend.name());
+    let world = World::prepare(config, &mut backend);
+    let (cohort, workers) = if full { (32, 8) } else { (16, 6) };
+    let start = std::time::Instant::now();
+    let result = convoy::run(&world, cohort, workers);
+    let elapsed = start.elapsed();
+    println!("== Convoy bake-off: shared-link contention plane vs isolated fiction ==");
+    print!("{}", convoy::render(&result));
+    for (desc, ok) in convoy::headline_checks(&result) {
+        println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
+    }
+    println!("\ntiming: cohort x2 {elapsed:.2?}");
+}

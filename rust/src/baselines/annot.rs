@@ -81,6 +81,8 @@ impl Optimizer for AnnOt {
         // Sample transfer with the historical best.
         let chunk = env.sample_chunk(&dataset, pred0, 3.0);
         let out = env.run_chunk(&chunk, p0);
+        // The theta the sample actually ran at (allowance-clamped).
+        let p0 = env.current_params.unwrap_or(p0);
         let mut phases = vec![Phase {
             params: p0,
             mb: chunk.total_mb(),
@@ -97,6 +99,7 @@ impl Optimizer for AnnOt {
             dataset.avg_file_mb,
         );
         let bulk = env.run_chunk(&remaining, p1);
+        let p1 = env.current_params.unwrap_or(p1);
         phases.push(Phase {
             params: p1,
             mb: remaining.total_mb(),

@@ -28,8 +28,9 @@ impl Optimizer for GlobusOnline {
         let phase = bulk_phase(env, &dataset, params);
         RunReport {
             optimizer: self.name(),
+            // The phase carries the allowance-clamped theta that ran.
+            final_params: phase.params,
             phases: vec![phase],
-            final_params: params,
             predicted_mbps: None,
         }
     }

@@ -93,6 +93,9 @@ impl Optimizer for Harp {
             let rem = crate::sim::dataset::Dataset::new(remaining_files, dataset.avg_file_mb);
             let chunk = env.sample_chunk(&rem, 1_000.0, 3.0);
             let out = env.run_chunk(&chunk, params);
+            // The link allowance may have clamped the probe: fit the
+            // regression at the theta the chunk actually ran.
+            let params = env.current_params.unwrap_or(params);
             phases.push(Phase {
                 params,
                 mb: chunk.total_mb(),
@@ -178,6 +181,7 @@ impl Optimizer for Harp {
             dataset.avg_file_mb,
         );
         let out = env.run_chunk(&remaining, best);
+        let best = env.current_params.unwrap_or(best);
         phases.push(Phase {
             params: best,
             mb: remaining.total_mb(),

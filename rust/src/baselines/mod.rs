@@ -11,6 +11,7 @@ pub mod nmt;
 pub mod sc;
 pub mod sp;
 
+use crate::netplane::{ContentionExposure, LinkLease};
 use crate::offline::knowledge::RequestInfo;
 use crate::sim::dataset::Dataset;
 use crate::sim::params::Params;
@@ -33,6 +34,12 @@ pub struct TransferEnv {
     pub rng: Rng,
     /// Currently configured parameters (None before the first chunk).
     pub current_params: Option<Params>,
+    /// Registration on the shared-link contention plane, when the
+    /// coordinator attached one: every chunk re-reads the neighbors'
+    /// live occupancy, folds it into the hidden contention, and reports
+    /// this transfer's own load back so neighbors see it. `None` = the
+    /// pre-plane isolated world.
+    link: Option<LinkLease>,
 }
 
 impl TransferEnv {
@@ -63,6 +70,36 @@ impl TransferEnv {
             clock_s: 0.0,
             rng: Rng::new(seed),
             current_params: None,
+            link: None,
+        }
+    }
+
+    /// Join the shared link: from now on every chunk sees (and is seen
+    /// by) the network's other live transfers through the contention
+    /// plane.
+    pub fn attach_link(&mut self, lease: LinkLease) {
+        self.link = Some(lease);
+    }
+
+    /// Leave the shared link and summarize what this transfer
+    /// experienced there. `None` when no plane was attached. (The lease
+    /// also releases on drop, so a panicking optimizer cannot leak
+    /// occupancy — calling this is only needed to *observe* the
+    /// exposure.)
+    pub fn release_link(&mut self) -> Option<ContentionExposure> {
+        self.link.take().map(LinkLease::release)
+    }
+
+    /// The parameters the shared link will actually grant right now:
+    /// identity without a plane (or for a solo transfer); under
+    /// contention, cc×p is clamped to the plane's fair-share stream
+    /// allowance. Optimizers that want truthful phase ledgers call this
+    /// before building a phase; `run_chunk` applies it regardless, so
+    /// the physics can never ignore the allowance.
+    pub fn effective_params(&self, params: Params) -> Params {
+        match &self.link {
+            Some(lease) => lease.clamp_params(params),
+            None => params,
         }
     }
 
@@ -94,8 +131,20 @@ impl TransferEnv {
 
     /// Execute a chunk under `params`. Charges re-tuning costs relative
     /// to the currently configured parameters and advances the clock.
+    ///
+    /// With a link lease attached this is the occupancy-aware rate
+    /// path: the allowance clamps the parameters, the neighbors' live
+    /// occupancy (re-read per chunk, so join/leave epochs recompute the
+    /// rate) joins the sampled external contention, and afterwards the
+    /// chunk's achieved steady rate is published back to the plane so
+    /// neighbors price *this* transfer correctly too.
     pub fn run_chunk(&mut self, chunk: &Dataset, params: Params) -> Outcome {
-        let state = self.state_at(self.clock_s);
+        let params = self.effective_params(params);
+        let mut state = self.state_at(self.clock_s);
+        let view = self.link.as_ref().map(|lease| lease.view());
+        if let Some(view) = &view {
+            state = state.with_neighbors(view.offered_mbps, view.streams);
+        }
         let (new_procs, new_streams) = match self.current_params {
             None => (params.cc, params.streams()),
             Some(prev) => (prev.new_processes(&params), prev.new_streams(&params)),
@@ -108,6 +157,10 @@ impl TransferEnv {
             new_streams,
             Some(&mut self.rng),
         );
+        if let (Some(lease), Some(view)) = (self.link.as_mut(), view.as_ref()) {
+            lease.update(params.cc, params.streams(), out.steady_mbps);
+            lease.observe(view, out.duration_s, out.steady_mbps);
+        }
         self.clock_s += out.duration_s;
         self.current_params = Some(params);
         out
@@ -195,9 +248,13 @@ pub trait Optimizer {
     fn run(&mut self, env: &mut TransferEnv) -> RunReport;
 }
 
-/// Helper: transfer `remaining` fully in one bulk phase.
+/// Helper: transfer `remaining` fully in one bulk phase. The phase
+/// records the parameters the chunk *actually ran at* — `run_chunk`
+/// clamps to the link allowance and stores the applied θ in
+/// `current_params` — so the ledger can never drift from the physics.
 pub fn bulk_phase(env: &mut TransferEnv, remaining: &Dataset, params: Params) -> Phase {
     let out = env.run_chunk(remaining, params);
+    let params = env.current_params.unwrap_or(params);
     Phase {
         params,
         mb: remaining.total_mb(),
@@ -259,6 +316,48 @@ mod tests {
         let chunk = e.sample_chunk(&e.dataset, 5_000.0, 3.0);
         assert!(chunk.num_files >= 1);
         assert!(chunk.num_files <= e.dataset.num_files / 4);
+    }
+
+    #[test]
+    fn attached_link_makes_neighbors_and_allowance_bite() {
+        use crate::netplane::{LinkPlane, LinkPlaneConfig, PlaneMode};
+        use crate::sim::testbed::TestbedId;
+        use std::sync::Arc;
+
+        let plane = Arc::new(LinkPlane::with_config(
+            PlaneMode::Shared,
+            LinkPlaneConfig { stream_budget: 16, min_streams: 2 },
+            None,
+        ));
+        // A heavy neighbor occupies the link before our transfer runs.
+        let neighbor = plane.clone().admit(TestbedId::Xsede, 99);
+        neighbor.update(8, 32, 6_000.0);
+
+        let mut quiet = env();
+        let mut contended = env();
+        contended.attach_link(plane.clone().admit(TestbedId::Xsede, 1));
+        let (chunk, _) = quiet.dataset.split_chunk(50);
+        let p = Params::new(8, 4, 2);
+        let q = quiet.run_chunk(&chunk, p);
+        let c = contended.run_chunk(&chunk, p);
+        // The neighbor's occupancy bites, and the allowance (16/2 = 8
+        // streams) clamps the applied parameters.
+        assert!(c.steady_mbps < q.steady_mbps, "{} vs {}", c.steady_mbps, q.steady_mbps);
+        let applied = contended.current_params.unwrap();
+        assert!(applied.streams() <= 8, "allowance must clamp: {applied}");
+        assert_eq!(contended.effective_params(p), applied);
+        // Our transfer published its load: the neighbor now sees it.
+        assert_eq!(neighbor.view().transfers, 1);
+        assert!(neighbor.view().offered_mbps > 0.0);
+        // Release yields the exposure summary and drains occupancy.
+        let exposure = contended.release_link().expect("lease was attached");
+        assert_eq!(exposure.peak_neighbors, 1);
+        assert!(exposure.mean_neighbor_mbps > 0.0);
+        assert!(exposure.total_s > 0.0);
+        assert_eq!(neighbor.view().transfers, 0);
+        assert!(quiet.release_link().is_none(), "no plane, no exposure");
+        drop(neighbor);
+        assert_eq!(plane.active_total(), 0);
     }
 
     #[test]

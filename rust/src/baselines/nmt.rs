@@ -64,6 +64,10 @@ impl Optimizer for NelderMeadTuner {
                     crate::sim::dataset::Dataset::new(*remaining, dataset.avg_file_mb);
                 let chunk = env.sample_chunk(&rem_ds, 1_000.0, 2.0);
                 let out = env.run_chunk(&chunk, params);
+                // Log the theta the chunk actually ran at (the link
+                // allowance may have clamped it), so the search learns
+                // the measured point, not the requested one.
+                let params = env.current_params.unwrap_or(params);
                 *remaining -= chunk.num_files.min(*remaining - 1);
                 evals.push((params, chunk.total_mb(), out.duration_s, out.steady_mbps));
                 out.steady_mbps
@@ -96,6 +100,7 @@ impl Optimizer for NelderMeadTuner {
         let remaining =
             crate::sim::dataset::Dataset::new(remaining_files.max(1), dataset.avg_file_mb);
         let out = env.run_chunk(&remaining, best);
+        let best = env.current_params.unwrap_or(best);
         phases.push(Phase {
             params: best,
             mb: remaining.total_mb(),

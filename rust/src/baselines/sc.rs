@@ -51,8 +51,9 @@ impl Optimizer for SingleChunk {
         let phase = bulk_phase(env, &dataset, params);
         RunReport {
             optimizer: self.name(),
+            // The phase carries the allowance-clamped theta that ran.
+            final_params: phase.params,
             phases: vec![phase],
-            final_params: params,
             predicted_mbps: None,
         }
     }

@@ -2,6 +2,7 @@
 
 use crate::baselines::RunReport;
 use crate::fabric::ShardKey;
+use crate::netplane::ContentionExposure;
 use crate::probe::ProbeMode;
 use crate::sim::dataset::Dataset;
 use crate::sim::testbed::TestbedId;
@@ -101,6 +102,13 @@ pub struct TransferResponse {
     /// `piggybacked`, or `estimate-served`). `None` when no probe plane
     /// is attached or the optimizer was not ASM.
     pub probe_mode: Option<ProbeMode>,
+    /// What this transfer experienced on the shared link — distinct
+    /// occupancy epochs, peak/mean neighbor pressure, peak carried load
+    /// — when a contention plane (`CoordinatorConfig::links`) is
+    /// attached. `None` without one. An isolated-mode plane still
+    /// attributes (all-zero neighbor fields), so bake-off sides stay
+    /// comparable.
+    pub contention: Option<ContentionExposure>,
 }
 
 #[cfg(test)]

@@ -8,6 +8,7 @@
 
 use crate::fabric::ShardRouter;
 use crate::feedback::FeedbackStats;
+use crate::netplane::LinkPlane;
 use crate::probe::ProbePlane;
 use crate::util::stats::{mean, quantile};
 use std::collections::BTreeMap;
@@ -48,6 +49,7 @@ pub struct Metrics {
     feedback: Mutex<Option<Arc<FeedbackStats>>>,
     fabric: Mutex<Option<Arc<ShardRouter>>>,
     probe: Mutex<Option<Arc<ProbePlane>>>,
+    links: Mutex<Option<Arc<LinkPlane>>>,
 }
 
 impl Metrics {
@@ -85,6 +87,18 @@ impl Metrics {
     /// The attached probe plane, if any.
     pub fn probe(&self) -> Option<Arc<ProbePlane>> {
         self.probe.lock().unwrap().clone()
+    }
+
+    /// Attach the shared-link contention plane so `render` includes its
+    /// block (mode, live occupancy per network, ambient convoys,
+    /// carried load vs scaled capacity).
+    pub fn attach_links(&self, links: Arc<LinkPlane>) {
+        *self.links.lock().unwrap() = Some(links);
+    }
+
+    /// The attached contention plane, if any.
+    pub fn links(&self) -> Option<Arc<LinkPlane>> {
+        self.links.lock().unwrap().clone()
     }
 
     pub fn record(
@@ -155,6 +169,10 @@ impl Metrics {
             out.push('\n');
             out.push_str(&plane.render());
         }
+        if let Some(links) = self.links() {
+            out.push('\n');
+            out.push_str(&links.render());
+        }
         out
     }
 }
@@ -220,6 +238,24 @@ mod tests {
         let table = m.render();
         assert!(table.contains("probe plane:"), "{table}");
         assert!(table.contains("estimate reuse"), "{table}");
+    }
+
+    #[test]
+    fn render_includes_attached_link_plane_block() {
+        use crate::sim::testbed::TestbedId;
+
+        let m = Metrics::new();
+        m.record("ASM", 1000.0, 500.0, 4.0, 2, 10_000);
+        assert!(!m.render().contains("link plane"));
+        let links = Arc::new(LinkPlane::shared());
+        let lease = links.clone().admit(TestbedId::Xsede, 1);
+        lease.update(4, 8, 1_500.0);
+        m.attach_links(links);
+        let table = m.render();
+        assert!(table.contains("link plane: shared mode"), "{table}");
+        assert!(table.contains("xsede: 1 active / 8 streams"), "{table}");
+        drop(lease);
+        assert!(m.render().contains("0 active transfer(s)"));
     }
 
     #[test]

@@ -24,9 +24,10 @@ use crate::fabric::{Shard, ShardKey, ShardRouter};
 use crate::feedback::{FeedbackService, FeedbackStats, IngestQueue, SnapshotSlot};
 use crate::feedback::KbSnapshot;
 use crate::logs::record::TransferLog;
+use crate::netplane::{ContentionExposure, LinkPlane};
 use crate::offline::knowledge::KnowledgeBase;
 use crate::online::asm::AdaptiveSampling;
-use crate::probe::{Admission, ProbeMode, ProbePlane};
+use crate::probe::{Admission, ProbeMode, ProbeOcc, ProbePlane};
 use crate::sim::fault::FaultBoard;
 use crate::sim::params::BETA;
 use crate::sim::testbed::Testbed;
@@ -62,6 +63,14 @@ pub struct CoordinatorConfig {
     /// [`TapEvent`] here, in completion order — the scenario engine's
     /// structured event timeline reads from it. `None` = no taping.
     pub tap: Option<Arc<ResponseTap>>,
+    /// Shared-link contention plane: each served transfer registers its
+    /// live (procs × streams, offered rate) on its network's link, sees
+    /// its neighbors' occupancy fold into the hidden contention on
+    /// every chunk, and is clamped to the plane's fair-share stream
+    /// allowance while the link is shared. `None` = every transfer
+    /// believes it owns the link (the pre-plane fiction, equivalent to
+    /// attaching `LinkPlane::isolated()` minus the attribution).
+    pub links: Option<Arc<LinkPlane>>,
 }
 
 impl Default for CoordinatorConfig {
@@ -73,6 +82,7 @@ impl Default for CoordinatorConfig {
             probe: None,
             faults: None,
             tap: None,
+            links: None,
         }
     }
 }
@@ -94,6 +104,8 @@ pub struct TapEvent {
     pub total_mb: f64,
     pub transfer_s: f64,
     pub achieved_mbps: f64,
+    /// Shared-link exposure (`None` without a contention plane).
+    pub contention: Option<ContentionExposure>,
 }
 
 /// A thread-safe response tap (see [`CoordinatorConfig::tap`]): workers
@@ -162,6 +174,8 @@ struct Shared {
     faults: Option<Arc<FaultBoard>>,
     /// Timeline tap fed on every response (see `CoordinatorConfig::tap`).
     tap: Option<Arc<ResponseTap>>,
+    /// Shared-link contention plane (see `CoordinatorConfig::links`).
+    links: Option<Arc<LinkPlane>>,
 }
 
 enum Job {
@@ -239,6 +253,9 @@ impl Coordinator {
         if let Some(plane) = &config.probe {
             metrics.attach_probe(plane.clone());
         }
+        if let Some(links) = &config.links {
+            metrics.attach_links(links.clone());
+        }
         // Train the ANN (and fit HARP/SP) once, shared by every worker.
         let annot = Arc::new(AnnOt::train(&history, config.seed ^ 0xA22));
         let sp = Arc::new(StaticParams::mine(&history));
@@ -252,6 +269,7 @@ impl Coordinator {
             probe: config.probe.clone(),
             faults: config.faults.clone(),
             tap: config.tap.clone(),
+            links: config.links.clone(),
         });
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -359,6 +377,20 @@ fn serve_one(
     // compare optimizers and knowledge sources on exactly that basis).
     let mut env = TransferEnv::new(testbed.clone(), request.dataset, state, request.seed);
     let (_, optimal_mbps) = testbed.path.optimal(&request.dataset, &state, BETA);
+    // Join the shared link before anything measures: from this moment
+    // concurrent transfers on the network see this one (and it sees
+    // them) through the contention plane. The occupancy observed at
+    // admission is stamped onto whatever the probe plane learns, so
+    // busy-link knowledge is never replayed as quiet-network truth.
+    let occ = match &shared.links {
+        Some(links) => {
+            let lease = links.clone().admit(request.testbed, request.id);
+            let view = lease.view();
+            env.attach_link(lease);
+            ProbeOcc { epoch: view.epoch, streams: view.streams }
+        }
+        None => ProbeOcc::default(),
+    };
 
     let kind = request.optimizer.unwrap_or(default_opt);
     let started = Instant::now();
@@ -372,7 +404,7 @@ fn serve_one(
                 // share one sampling ladder and one estimate.
                 let key = shard_key
                     .unwrap_or_else(|| ShardKey::of_request(request.testbed, &request.dataset));
-                let (report, mode) = run_asm_with_plane(plane, key, &snapshot, &mut env);
+                let (report, mode) = run_asm_with_plane(plane, key, &snapshot, &mut env, occ);
                 probe_mode = Some(mode);
                 report
             }
@@ -391,6 +423,10 @@ fn serve_one(
         OptimizerKind::Nmt => NelderMeadTuner::default().run(&mut env),
     };
     let decision_wall_ns = started.elapsed().as_nanos() as u64;
+    // Leave the shared link and keep what the transfer experienced
+    // there for the response (the lease would release on drop anyway —
+    // this is the observation, not the cleanup).
+    let contention = env.release_link();
     shared.metrics.record(
         report.optimizer,
         report.achieved_mbps(),
@@ -433,6 +469,7 @@ fn serve_one(
             total_mb: report.total_mb(),
             transfer_s: report.total_s(),
             achieved_mbps: report.achieved_mbps(),
+            contention,
         });
     }
     TransferResponse {
@@ -445,6 +482,7 @@ fn serve_one(
         shard_key,
         borrowed,
         probe_mode,
+        contention,
     }
 }
 
@@ -458,14 +496,17 @@ fn run_asm_with_plane(
     key: ShardKey,
     snapshot: &KbSnapshot,
     env: &mut TransferEnv,
+    occ: ProbeOcc,
 ) -> (RunReport, ProbeMode) {
     let expected_mb = plane.expected_sample_mb(env.dataset.total_mb());
     // Surface indices only mean something within one cluster's stack:
     // estimate validity and piggybacking are both keyed on it.
     let cluster_idx = snapshot.kb.query_idx(&env.request);
     let generation = snapshot.generation;
-    let admission = plane.admit(key, cluster_idx, generation, expected_mb);
-    run_admitted_asm(plane, key, cluster_idx, generation, expected_mb, &snapshot.kb, env, admission)
+    let admission = plane.admit(key, cluster_idx, generation, expected_mb, occ);
+    run_admitted_asm(
+        plane, key, cluster_idx, generation, expected_mb, &snapshot.kb, env, admission, occ,
+    )
 }
 
 /// Execute one ASM request for an already-decided admission: wire the
@@ -484,6 +525,7 @@ pub(crate) fn run_admitted_asm<'kb>(
     kb: &'kb KnowledgeBase,
     env: &mut TransferEnv,
     admission: Admission,
+    occ: ProbeOcc,
 ) -> (RunReport, ProbeMode) {
     let mut asm = AdaptiveSampling::new(kb);
     asm.cluster_hint = cluster_idx; // don't repeat the centroid lookup
@@ -495,24 +537,26 @@ pub(crate) fn run_admitted_asm<'kb>(
             // reaches the ladder (cold-start KB), the unfired hook drops
             // with `asm` and its guard wakes followers via abort.
             asm.on_converged = Some(Box::new(move |outcome| {
-                plane.lead_converged(key, cluster_idx, guard, outcome, generation);
+                plane.lead_converged(key, cluster_idx, guard, outcome, generation, occ);
             }));
             let report = asm.run(env);
-            plane.finish_led(key, cluster_idx, asm.outcome, &report, expected_mb, generation);
+            plane.finish_led(
+                key, cluster_idx, asm.outcome, &report, expected_mb, generation, occ,
+            );
             (report, ProbeMode::Led)
         }
         Admission::Piggyback(result) => {
             asm.start_surface = Some(result.surface_idx);
             asm.skip_sampling = true;
             let report = asm.run(env);
-            plane.finish_passive(key, cluster_idx, asm.outcome, &report, generation);
+            plane.finish_passive(key, cluster_idx, asm.outcome, &report, generation, occ);
             (report, ProbeMode::Piggybacked)
         }
         Admission::Serve(surface_idx) => {
             asm.start_surface = surface_idx;
             asm.skip_sampling = true;
             let report = asm.run(env);
-            plane.finish_passive(key, cluster_idx, asm.outcome, &report, generation);
+            plane.finish_passive(key, cluster_idx, asm.outcome, &report, generation, occ);
             (report, ProbeMode::EstimateServed)
         }
     }
@@ -842,6 +886,70 @@ mod tests {
         assert_eq!(taped.len(), 3);
         assert!(taped.iter().all(|e| e.optimizer == "GO" && e.total_mb > 0.0));
         assert!(tap.is_empty(), "drain empties the tap");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn link_plane_makes_contention_bite_and_attributes_exposure() {
+        use crate::netplane::LinkPlane;
+
+        let tb = Testbed::xsede();
+        let rows =
+            generate(&tb, &GenConfig { days: 5, arrivals_per_hour: 25.0, start_day: 0, seed: 61 });
+        let kb = Arc::new(build(&rows, &OfflineConfig::default(), &mut NativeAssign).unwrap());
+
+        // Baseline: no plane — the old private-testbed world.
+        let coord = Coordinator::new(kb.clone(), Arc::new(rows.clone()), CoordinatorConfig::default());
+        let quiet = &coord.run_batch(vec![request(1, Some(OptimizerKind::Go))])[0];
+        assert!(quiet.contention.is_none(), "no plane, no exposure");
+        coord.shutdown();
+
+        // Shared plane with a scripted ambient convoy: the same request
+        // (same seed, same hidden draws) must achieve less, and the
+        // response must attribute the pressure it ran under.
+        let links = Arc::new(LinkPlane::shared());
+        links.set_ambient(TestbedId::Xsede, 6_000.0, 48);
+        let coord = Coordinator::new(
+            kb.clone(),
+            Arc::new(rows.clone()),
+            CoordinatorConfig { workers: 1, links: Some(links.clone()), ..Default::default() },
+        );
+        let contended = &coord.run_batch(vec![request(1, Some(OptimizerKind::Go))])[0];
+        let exposure = contended.contention.expect("plane attributes exposure");
+        assert!(exposure.peak_neighbor_mbps >= 5_999.0, "{exposure:?}");
+        assert!(exposure.mean_neighbor_mbps > 0.0);
+        assert!(exposure.contended_s > 0.0);
+        assert!(exposure.peak_carried_mbps <= 10_000.0 + 1e-6);
+        assert!(
+            contended.report.achieved_mbps() < quiet.report.achieved_mbps(),
+            "convoy must bite: {} vs {}",
+            contended.report.achieved_mbps(),
+            quiet.report.achieved_mbps()
+        );
+        // Occupancy drains when the transfer completes.
+        assert_eq!(links.active_total(), 0);
+        assert_eq!(links.occupancy(TestbedId::Xsede).offered_mbps, 0.0);
+        let table = coord.metrics.render();
+        assert!(table.contains("link plane: shared mode"), "{table}");
+        coord.shutdown();
+
+        // Isolated plane: attribution exists, neighbors are invisible —
+        // the pre-plane numbers for bake-off comparability.
+        let isolated = Arc::new(LinkPlane::isolated());
+        isolated.set_ambient(TestbedId::Xsede, 6_000.0, 48);
+        let coord = Coordinator::new(
+            kb,
+            Arc::new(rows),
+            CoordinatorConfig { workers: 1, links: Some(isolated), ..Default::default() },
+        );
+        let fiction = &coord.run_batch(vec![request(1, Some(OptimizerKind::Go))])[0];
+        let exposure = fiction.contention.expect("isolated plane still attributes");
+        assert_eq!(exposure.peak_neighbor_mbps, 0.0);
+        assert_eq!(
+            fiction.report.achieved_mbps(),
+            quiet.report.achieved_mbps(),
+            "isolated mode must reproduce the pre-plane numbers exactly"
+        );
         coord.shutdown();
     }
 

@@ -76,6 +76,7 @@ impl World {
                 probe: None,
                 faults: None,
                 tap: None,
+                links: None,
             },
         )
     }
@@ -97,6 +98,30 @@ impl World {
                 probe: Some(probe),
                 faults: None,
                 tap: None,
+                links: None,
+            },
+        )
+    }
+
+    /// A coordinator whose transfers share the given link plane:
+    /// concurrent requests on one network contend for (and fair-share)
+    /// its capacity instead of each owning a private copy.
+    pub fn coordinator_with_links(
+        &self,
+        workers: usize,
+        links: Arc<crate::netplane::LinkPlane>,
+    ) -> Coordinator {
+        Coordinator::new(
+            self.kb.clone(),
+            self.rows.clone(),
+            CoordinatorConfig {
+                workers,
+                default_optimizer: OptimizerKind::Asm,
+                seed: self.config.seed,
+                probe: None,
+                faults: None,
+                tap: None,
+                links: Some(links),
             },
         )
     }

@@ -8,10 +8,14 @@
 //! global KB under interleaved three-network traffic, and the
 //! rush-hour bake-off (`rush`): the shared probe plane (coalesced
 //! sampling, decaying estimates, probe budgets) vs independent
-//! per-request sampling under a synchronized burst on one network.
+//! per-request sampling under a synchronized burst on one network, and
+//! the convoy bake-off (`convoy`): decisions made on the shared-link
+//! contention plane vs the private-testbed fiction, both scored under
+//! identical mutual contention.
 //! Table 1 is `sim::testbed::Testbed::table1()`.
 
 pub mod common;
+pub mod convoy;
 pub mod fig12;
 pub mod fig3;
 pub mod fig5;

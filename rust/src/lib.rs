@@ -67,6 +67,22 @@
 //! surface; skip sampling entirely when confidence clears the
 //! threshold), and every response reports its `probe_mode`.
 //!
+//! ## The shared-link contention plane (`crate::netplane`)
+//!
+//! A coordinator that hands every request a private testbed scores
+//! decisions against a fiction: self-traffic is invisible. The
+//! [`netplane`] subsystem tracks live link occupancy per network — a
+//! worker registers each transfer's (procs × streams, offered rate) on
+//! admission through a [`netplane::LinkLease`], every chunk re-reads
+//! its neighbors (plus any scripted ambient convoy) and folds them
+//! into the transfer's contention, and a fair-share stream allowance
+//! caps cc×p while two or more transfers share the link. Estimates the
+//! probe plane records carry the occupancy observed at admission, so
+//! knowledge learned under heavy self-traffic is never reused as
+//! quiet-network truth. [`netplane::LinkPlane::isolated`] keeps the
+//! pre-plane behaviour selectable; `experiments::convoy` scores both
+//! against the mutual-contention fixed point (`netplane::cohort`).
+//!
 //! ## The scenario engine (`crate::scenario`)
 //!
 //! The hard cases for all of the above are *regime changes*: load
@@ -99,6 +115,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod fabric;
 pub mod feedback;
+pub mod netplane;
 pub mod probe;
 pub mod scenario;
 pub mod sim;

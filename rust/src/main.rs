@@ -7,16 +7,16 @@
 //!   transfer   --testbed T --files N --avg-mb M [--optimizer O]
 //!              [--kb KB.json] [--load L] [--seed S]
 //!   serve      [--requests N] [--workers W] [--optimizer O] [--fabric]
-//!   experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|all
+//!   experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|convoy|all
 //!              [--quick|--full]
-//!   scenario   <name|file> [--seed S] [--full] [--timeline]
+//!   scenario   <name|file> [--seed S] [--full] [--timeline] [--list]
 //!              deterministic fault-injecting replay + invariant verdict
 //!   selftest                     quick end-to-end sanity run
 
 use anyhow::{bail, Context, Result};
 use dtopt::coordinator::{Coordinator, CoordinatorConfig, OptimizerKind, TransferRequest};
 use dtopt::experiments::common::{default_backend, ExpConfig, World};
-use dtopt::experiments::{fig12, fig3, fig5, fig6, fig7, fleet, live, rush};
+use dtopt::experiments::{convoy, fig12, fig3, fig5, fig6, fig7, fleet, live, rush};
 use dtopt::probe::ProbePlane;
 use dtopt::logs::generate::{generate, GenConfig};
 use dtopt::logs::store::LogStore;
@@ -127,8 +127,8 @@ fn print_help() {
          offline --logs DIR --out KB.json [--backend native|pjrt|auto]\n  \
          transfer --testbed T --files N --avg-mb M [--optimizer O] [--kb F] [--load L]\n  \
          serve [--requests N] [--workers W] [--optimizer O] [--fabric]\n  \
-         experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|all [--quick|--full]\n  \
-         scenario <name|file> [--seed S] [--full] [--timeline]\n  \
+         experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|convoy|all [--quick|--full]\n  \
+         scenario <name|file> [--seed S] [--full] [--timeline] (--list prints bundled names)\n  \
          selftest"
     );
 }
@@ -220,6 +220,7 @@ fn cmd_transfer(opts: &Opts) -> Result<()> {
             probe: None,
             faults: None,
             tap: None,
+            links: None,
         },
     );
     let mut rng = Rng::new(seed);
@@ -276,6 +277,10 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
     // ASM requests share the probe plane in both modes: coalesced
     // sampling ladders, decaying per-shard estimates, probe budgets.
     let plane = Arc::new(ProbePlane::default());
+    // Transfers on one network share its link: concurrent requests see
+    // each other's occupancy and fair-share the stream budget instead
+    // of each being scored against a private-testbed fiction.
+    let links = Arc::new(dtopt::netplane::LinkPlane::shared());
     // --fabric serves through the sharded knowledge fabric (per-network
     // shards cold-started from the global KB) instead of one global
     // snapshot slot; the metrics block then includes the shard table.
@@ -313,6 +318,7 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         probe: Some(plane),
         faults: None,
         tap: None,
+        links: Some(links),
     };
     let coord = match (&fabric, &service) {
         (Some(router), _) => {
@@ -398,8 +404,8 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
 }
 
 /// Every experiment the CLI can regenerate (`all` runs them in order).
-const EXPERIMENT_NAMES: [&str; 10] =
-    ["fig1", "fig2", "fig3a", "fig3b", "fig5", "fig6", "fig7", "live", "fleet", "rush"];
+const EXPERIMENT_NAMES: [&str; 11] =
+    ["fig1", "fig2", "fig3a", "fig3b", "fig5", "fig6", "fig7", "live", "fleet", "rush", "convoy"];
 
 fn cmd_experiment(opts: &Opts) -> Result<()> {
     let Some(which) = opts.positional.first().map(|s| s.as_str()) else {
@@ -411,7 +417,7 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
     let config = if opts.has("full") { ExpConfig::full() } else { ExpConfig::quick() };
     let reps = if opts.has("full") { 4 } else { 2 };
     let needs_world =
-        matches!(which, "fig5" | "fig6" | "fig7" | "live" | "fleet" | "rush" | "all");
+        matches!(which, "fig5" | "fig6" | "fig7" | "live" | "fleet" | "rush" | "convoy" | "all");
     let world = if needs_world {
         let mut backend = default_backend();
         eprintln!("preparing world ({} backend)...", backend.name());
@@ -474,6 +480,14 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
                     println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
                 }
             }
+            "convoy" => {
+                let (cohort, workers) = if opts.has("full") { (32, 8) } else { (16, 6) };
+                let r = convoy::run(world.unwrap(), cohort, workers);
+                print!("{}", convoy::render(&r));
+                for (desc, ok) in convoy::headline_checks(&r) {
+                    println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
+                }
+            }
             "fleet" => {
                 let eval_days = if opts.has("full") { 8 } else { 3 };
                 let dir = std::env::temp_dir()
@@ -510,6 +524,15 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
 fn cmd_scenario(opts: &Opts) -> Result<()> {
     use dtopt::scenario::{render_timeline, render_verdict, run, RunOptions, Scenario};
 
+    // `dtopt scenario --list` prints the bundled library (one name per
+    // line, exit 0) for scripts; a missing name still exits non-zero
+    // with the list on stderr, matching `dtopt experiment`'s behavior.
+    if opts.has("list") {
+        for name in dtopt::scenario::script::bundled_names() {
+            println!("{name}");
+        }
+        return Ok(());
+    }
     let names = dtopt::scenario::script::bundled_names().join("|");
     let Some(which) = opts.positional.first().map(|s| s.as_str()) else {
         bail!("scenario name or file required; bundled: {names}");

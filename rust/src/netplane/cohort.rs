@@ -1,0 +1,139 @@
+//! Deterministic cohort scoring: what a set of parameter decisions
+//! actually achieves when every transfer runs *simultaneously* on one
+//! shared link.
+//!
+//! The convoy bake-off needs a ground truth that is independent of the
+//! wall-clock interleaving of a live multi-worker run: given each
+//! transfer's final θ and its own hidden network state, solve the
+//! mutual-contention fixed point — every transfer's steady rate is
+//! computed with all the others' rates and streams folded into its
+//! contention, iterated (with damping) until the cohort settles. The
+//! solver is a pure function of its inputs, so plane-aware and
+//! fiction-scored decision sets are compared on identical footing.
+
+use crate::sim::dataset::Dataset;
+use crate::sim::params::Params;
+use crate::sim::transfer::{NetState, PathSpec};
+
+/// One transfer in the cohort: the decision under evaluation plus the
+/// hidden state its request was served under.
+#[derive(Debug, Clone, Copy)]
+pub struct CohortMember {
+    pub params: Params,
+    pub dataset: Dataset,
+    pub state: NetState,
+}
+
+/// Solve the cohort's mutual-contention fixed point: returns each
+/// member's steady rate (Mbps) when all of them share `path`'s link.
+/// Deterministic; `rounds` damped iterations (a dozen is plenty — the
+/// map is a contraction under the damping).
+pub fn solve_cohort(path: &PathSpec, members: &[CohortMember], rounds: usize) -> Vec<f64> {
+    let n = members.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let bw = path.link.bandwidth_mbps;
+    let streams_total: u32 = members.iter().map(|m| m.params.streams()).sum();
+    // Start from an even split; the iteration reshapes it.
+    let mut rates = vec![bw / n as f64; n];
+    for _ in 0..rounds.max(1) {
+        let total: f64 = rates.iter().sum();
+        let mut next = Vec::with_capacity(n);
+        for (i, member) in members.iter().enumerate() {
+            let neighbor_rate = (total - rates[i]).max(0.0).min(bw);
+            let neighbor_streams = streams_total.saturating_sub(member.params.streams());
+            let state = member.state.with_neighbors(neighbor_rate, neighbor_streams);
+            next.push(path.steady_rate_mbps(&member.dataset, &member.params, &state));
+        }
+        for i in 0..n {
+            rates[i] = 0.5 * rates[i] + 0.5 * next[i];
+        }
+    }
+    rates
+}
+
+/// Aggregate cohort goodput (Mbps): the fleet-level number a
+/// coordinator's decisions are judged on.
+pub fn aggregate_mbps(rates: &[f64]) -> f64 {
+    rates.iter().sum()
+}
+
+/// Fairness spread: `(max − min) / mean` of the cohort rates (0 = every
+/// transfer gets the same). 0 for empty or degenerate cohorts.
+pub fn fairness_spread(rates: &[f64]) -> f64 {
+    if rates.is_empty() {
+        return 0.0;
+    }
+    let mean = rates.iter().sum::<f64>() / rates.len() as f64;
+    if mean <= 0.0 {
+        return 0.0;
+    }
+    let max = rates.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+    (max - min) / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::testbed::Testbed;
+
+    fn members(n: usize, params: Params) -> Vec<CohortMember> {
+        (0..n)
+            .map(|_| CohortMember {
+                params,
+                dataset: Dataset::new(200, 100.0),
+                state: NetState::with_load(0.2),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn solo_member_matches_the_plain_model() {
+        let path = Testbed::xsede().path;
+        let member = members(1, Params::new(8, 4, 4));
+        let rates = solve_cohort(&path, &member, 16);
+        let direct =
+            path.steady_rate_mbps(&member[0].dataset, &member[0].params, &member[0].state);
+        assert!((rates[0] - direct).abs() < 0.05 * direct, "{} vs {direct}", rates[0]);
+    }
+
+    #[test]
+    fn crowding_degrades_everyone_and_oversubscription_collapses() {
+        let path = Testbed::xsede().path;
+        let solo = solve_cohort(&path, &members(1, Params::new(8, 4, 4)), 16)[0];
+        let crowded = solve_cohort(&path, &members(12, Params::new(8, 4, 4)), 16);
+        assert!(crowded.iter().all(|r| *r > 0.0 && r.is_finite()));
+        assert!(
+            crowded[0] < 0.5 * solo,
+            "12-way contention must bite: {} vs solo {solo}",
+            crowded[0]
+        );
+        // A modestly-parallel cohort beats an over-parallelized one in
+        // aggregate — the loss-synchronization penalty is the point.
+        let modest = solve_cohort(&path, &members(12, Params::new(2, 2, 4)), 16);
+        assert!(
+            aggregate_mbps(&modest) > aggregate_mbps(&crowded),
+            "modest {} vs oversubscribed {}",
+            aggregate_mbps(&modest),
+            aggregate_mbps(&crowded)
+        );
+    }
+
+    #[test]
+    fn solver_is_deterministic() {
+        let path = Testbed::xsede().path;
+        let cohort = members(8, Params::new(4, 4, 2));
+        assert_eq!(solve_cohort(&path, &cohort, 16), solve_cohort(&path, &cohort, 16));
+    }
+
+    #[test]
+    fn spread_and_aggregate_helpers() {
+        assert_eq!(aggregate_mbps(&[]), 0.0);
+        assert_eq!(fairness_spread(&[]), 0.0);
+        assert!((aggregate_mbps(&[100.0, 300.0]) - 400.0).abs() < 1e-9);
+        assert!((fairness_spread(&[100.0, 300.0]) - 1.0).abs() < 1e-9);
+        assert_eq!(fairness_spread(&[250.0, 250.0]), 0.0);
+    }
+}

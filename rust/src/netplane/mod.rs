@@ -1,0 +1,56 @@
+//! The shared-link contention plane — concurrent transfers actually
+//! contend, end to end.
+//!
+//! The paper's online model reasons explicitly about contending
+//! transfers on a shared link, yet a coordinator that hands every
+//! request a private copy of the testbed scores decisions against a
+//! fiction: self-traffic is invisible, so under heavy multi-user load
+//! each transfer believes it owns the bottleneck. HARP's historical
+//! tuning (Arslan & Kosar) and the two-phase dynamic model (Nine &
+//! Kosar) both treat concurrent-transfer interference as the
+//! first-order effect; this module makes it physical:
+//!
+//! ```text
+//!                    ┌────────────────────────────────────────────┐
+//!  serve_one ───────▶│ LinkPlane (per network → LinkState)        │
+//!   admit(id)        │   registry: id → (procs×streams, offered)  │
+//!     │              │   ambient convoy (scenario `contention`)   │
+//!     ▼              │   epoch: bumps on join / leave / ambient   │
+//!  LinkLease ───────▶│ neighbors(id): everyone else's offered     │
+//!   per chunk:       │   rate + streams, capped at the scaled     │
+//!   view → merge     │   (fault-shaped) link capacity             │
+//!   into NetState ──▶│ stream_allowance: fair-share cap on        │
+//!   update(θ, rate)  │   cc×p while ≥ 2 transfers share the link  │
+//!   release ────────▶│ exposure: what this transfer experienced   │
+//!                    └────────────────────────────────────────────┘
+//! ```
+//!
+//! * [`plane`] — the [`LinkPlane`] registry itself, the [`LinkLease`]
+//!   a transfer holds while it occupies the link, and the
+//!   [`ContentionExposure`] summary attributed on every response.
+//!   [`LinkPlane::isolated`] keeps the old private-testbed behaviour
+//!   selectable so pre-plane bake-offs stay comparable.
+//! * [`cohort`] — a deterministic fixed-point solver scoring a whole
+//!   cohort of parameter decisions under mutual contention: the
+//!   ground-truth evaluator `experiments::convoy` uses to compare
+//!   plane-aware decisions against fiction-scored ones.
+//!
+//! `sim/transfer.rs` composes the three contention sources in one
+//! place: live occupancy from this plane, the sampled external
+//! [`Contention`](crate::sim::traffic::Contention), and
+//! [`FaultBoard`](crate::sim::fault::FaultBoard) capacity scaling —
+//! `TransferEnv::run_chunk` re-reads the plane on every chunk, so a
+//! transfer's achieved goodput degrades the moment neighbors pile on
+//! (and recovers when they drain). The probe plane records the
+//! occupancy observed at admission next to each estimate, so knowledge
+//! learned under heavy self-traffic is never reused as quiet-network
+//! truth (see `probe::estimate::ProbeOcc`).
+
+pub mod cohort;
+pub mod plane;
+
+pub use cohort::{aggregate_mbps, fairness_spread, solve_cohort, CohortMember};
+pub use plane::{
+    ContentionExposure, LinkLease, LinkPlane, LinkPlaneConfig, NeighborView, Occupancy,
+    PlaneMode,
+};

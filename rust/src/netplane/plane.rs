@@ -1,0 +1,680 @@
+//! The [`LinkPlane`]: per-network live-occupancy registry.
+//!
+//! One [`LinkState`] per network tracks every transfer currently on the
+//! wire — its parameter load (procs × streams) and the steady rate it
+//! last offered — plus an *ambient* convoy (a scripted fleet of
+//! contending transfers the scenario engine injects through the
+//! `contention` fault). An epoch counter bumps on every join, leave,
+//! and ambient change, so consumers can tell "the link's population
+//! changed since I last looked" apart from "same neighbors, new
+//! numbers".
+//!
+//! Invariants the scenario conformance suite asserts end-to-end:
+//! occupancy is never negative and always returns to zero at drain
+//! (leases release on drop, so a panicking worker cannot leak
+//! registration), and the carried load reported for a network never
+//! exceeds its fault-scaled link capacity — the plane saturates the
+//! snapshot at capacity, because a link cannot carry more than it has.
+
+use crate::sim::fault::FaultBoard;
+use crate::sim::params::Params;
+use crate::sim::testbed::{Testbed, TestbedId};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Shared vs isolated serving (see [`LinkPlane::isolated`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlaneMode {
+    /// Transfers on the same network see each other: neighbor views are
+    /// real and the fair-share stream allowance applies.
+    Shared,
+    /// The pre-plane fiction, kept selectable so existing bake-offs
+    /// stay comparable: registration is tracked (bookkeeping and
+    /// metrics still work) but neighbor views are empty and no
+    /// allowance is imposed.
+    Isolated,
+}
+
+/// Plane tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkPlaneConfig {
+    /// Total cc×p streams the plane is willing to see on one network
+    /// before fair-sharing kicks in: while `n ≥ 2` transfers share the
+    /// link each one's decision is capped at `stream_budget / n`.
+    pub stream_budget: u32,
+    /// Floor of the per-transfer allowance — even a crowded link grants
+    /// at least this many streams.
+    pub min_streams: u32,
+}
+
+impl Default for LinkPlaneConfig {
+    fn default() -> Self {
+        LinkPlaneConfig { stream_budget: 64, min_streams: 2 }
+    }
+}
+
+/// One registered transfer's current load on the link.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+struct TransferLoad {
+    procs: u32,
+    streams: u32,
+    offered_mbps: f64,
+}
+
+/// Per-network shared state.
+#[derive(Debug, Default)]
+struct LinkState {
+    active: BTreeMap<u64, TransferLoad>,
+    ambient_mbps: f64,
+    ambient_streams: u32,
+    /// Bumps on join / leave / ambient change.
+    epoch: u64,
+    peak_concurrent: usize,
+    joins: u64,
+    leaves: u64,
+}
+
+/// A bookkeeping snapshot of one network's occupancy: the registered
+/// transfers (ambient reported separately) as the invariant checkers
+/// see them.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Occupancy {
+    /// Registered transfers currently on the link.
+    pub transfers: usize,
+    /// Their cc×p streams, summed.
+    pub streams: u32,
+    /// Their offered rates, summed (Mbps).
+    pub offered_mbps: f64,
+    /// The scripted ambient convoy, if any.
+    pub ambient_mbps: f64,
+    pub ambient_streams: u32,
+    pub epoch: u64,
+}
+
+/// What one transfer sees of everyone else: its neighbors' load plus
+/// the ambient convoy, ready to merge into a [`NetState`]'s contention.
+///
+/// [`NetState`]: crate::sim::transfer::NetState
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct NeighborView {
+    /// Neighbor transfers (self excluded; ambient not counted here).
+    pub transfers: usize,
+    /// Neighbor + ambient streams.
+    pub streams: u32,
+    /// Neighbor + ambient offered rate (Mbps), capped at the scaled
+    /// link capacity — a link cannot present more pressure than it
+    /// carries.
+    pub offered_mbps: f64,
+    pub epoch: u64,
+}
+
+/// Per-request contention attribution: what the transfer experienced
+/// on the shared link, chunk by chunk. Rendered into
+/// `TransferResponse::contention` and the scenario timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ContentionExposure {
+    /// Distinct occupancy epochs observed across the transfer's chunks
+    /// (1 = the link's population never changed underneath it).
+    pub epochs_observed: u64,
+    /// Peak concurrent neighbor transfers seen by any chunk.
+    pub peak_neighbors: usize,
+    /// Peak neighbor + ambient offered rate seen by any chunk (Mbps).
+    pub peak_neighbor_mbps: f64,
+    /// Time-weighted mean neighbor + ambient offered rate (Mbps).
+    pub mean_neighbor_mbps: f64,
+    /// Peak total carried load on the link (self + neighbors + ambient,
+    /// saturated at the fault-scaled capacity) — the quantity the
+    /// `offered-within-capacity` invariant checks.
+    pub peak_carried_mbps: f64,
+    /// Seconds spent with at least one neighbor or ambient load present.
+    pub contended_s: f64,
+    /// Total transfer seconds observed through the lease.
+    pub total_s: f64,
+}
+
+/// The shared-link contention plane.
+#[derive(Debug)]
+pub struct LinkPlane {
+    mode: PlaneMode,
+    config: LinkPlaneConfig,
+    /// Fault board supplying the capacity scale factor (the same board
+    /// the coordinator shapes testbeds with, so a brownout narrows the
+    /// plane's idea of the pipe too). `None` = nominal capacity.
+    faults: Option<Arc<FaultBoard>>,
+    nets: Mutex<BTreeMap<TestbedId, LinkState>>,
+}
+
+impl LinkPlane {
+    /// A shared plane with default knobs: concurrent transfers see each
+    /// other and fair-share the stream budget.
+    pub fn shared() -> LinkPlane {
+        LinkPlane::with_config(PlaneMode::Shared, LinkPlaneConfig::default(), None)
+    }
+
+    /// The pre-plane behaviour: every transfer believes it owns the
+    /// link. Registration is still tracked for bookkeeping, so
+    /// bake-offs can attribute both sides identically.
+    pub fn isolated() -> LinkPlane {
+        LinkPlane::with_config(PlaneMode::Isolated, LinkPlaneConfig::default(), None)
+    }
+
+    pub fn with_config(
+        mode: PlaneMode,
+        config: LinkPlaneConfig,
+        faults: Option<Arc<FaultBoard>>,
+    ) -> LinkPlane {
+        LinkPlane { mode, config, faults, nets: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn mode(&self) -> PlaneMode {
+        self.mode
+    }
+
+    pub fn config(&self) -> &LinkPlaneConfig {
+        &self.config
+    }
+
+    /// The network's current fault capacity factor (1.0 = healthy).
+    /// Touches only the fault board, never the `nets` lock.
+    fn capacity_factor(&self, network: TestbedId) -> f64 {
+        self.faults
+            .as_ref()
+            .and_then(|board| board.effect(network))
+            .map(|fault| fault.capacity_factor)
+            .unwrap_or(1.0)
+    }
+
+    /// The network's current link capacity (Mbps), fault scaling
+    /// applied — the ceiling the carried-load snapshot saturates at.
+    pub fn scaled_capacity_mbps(&self, network: TestbedId) -> f64 {
+        Testbed::by_id(network).path.link.bandwidth_mbps * self.capacity_factor(network)
+    }
+
+    /// Register a transfer on the network's link (zero load until its
+    /// first chunk reports in). The returned lease releases the
+    /// registration on drop, so occupancy always drains. Takes an
+    /// owned `Arc` (callers clone their handle): `&Arc<Self>` is not a
+    /// legal receiver on stable rust and the lease needs to own the
+    /// plane for its `Drop` release.
+    pub fn admit(self: Arc<Self>, network: TestbedId, id: u64) -> LinkLease {
+        {
+            let mut nets = self.nets.lock().expect("link plane poisoned");
+            let state = nets.entry(network).or_default();
+            state.active.insert(id, TransferLoad::default());
+            state.epoch += 1;
+            state.joins += 1;
+            state.peak_concurrent = state.peak_concurrent.max(state.active.len());
+        }
+        let nominal_mbps = Testbed::by_id(network).path.link.bandwidth_mbps;
+        LinkLease {
+            plane: self,
+            network,
+            id,
+            nominal_mbps,
+            released: false,
+            acc: ExposureAcc::default(),
+        }
+    }
+
+    fn release(&self, network: TestbedId, id: u64) {
+        let mut nets = self.nets.lock().expect("link plane poisoned");
+        if let Some(state) = nets.get_mut(&network) {
+            if state.active.remove(&id).is_some() {
+                state.epoch += 1;
+                state.leaves += 1;
+            }
+        }
+    }
+
+    fn update(&self, network: TestbedId, id: u64, procs: u32, streams: u32, offered_mbps: f64) {
+        let offered = if offered_mbps.is_finite() { offered_mbps.max(0.0) } else { 0.0 };
+        let mut nets = self.nets.lock().expect("link plane poisoned");
+        if let Some(load) = nets.get_mut(&network).and_then(|s| s.active.get_mut(&id)) {
+            *load = TransferLoad { procs, streams, offered_mbps: offered };
+        }
+    }
+
+    /// Inject (or replace) the ambient convoy on a network — the
+    /// scenario engine's `contention` fault hook.
+    pub fn set_ambient(&self, network: TestbedId, offered_mbps: f64, streams: u32) {
+        let offered = if offered_mbps.is_finite() { offered_mbps.max(0.0) } else { 0.0 };
+        let mut nets = self.nets.lock().expect("link plane poisoned");
+        let state = nets.entry(network).or_default();
+        state.ambient_mbps = offered;
+        state.ambient_streams = streams;
+        state.epoch += 1;
+    }
+
+    /// Clear the network's ambient convoy (`clear-contention`).
+    pub fn clear_ambient(&self, network: TestbedId) {
+        self.set_ambient(network, 0.0, 0);
+    }
+
+    /// Bookkeeping snapshot of the network's registered occupancy.
+    /// Truthful in both modes — isolation hides neighbors from
+    /// *transfers*, not from the operator.
+    pub fn occupancy(&self, network: TestbedId) -> Occupancy {
+        let nets = self.nets.lock().expect("link plane poisoned");
+        match nets.get(&network) {
+            Some(state) => Occupancy {
+                transfers: state.active.len(),
+                streams: state.active.values().map(|l| l.streams).sum(),
+                offered_mbps: state.active.values().map(|l| l.offered_mbps).sum(),
+                ambient_mbps: state.ambient_mbps,
+                ambient_streams: state.ambient_streams,
+                epoch: state.epoch,
+            },
+            None => Occupancy {
+                transfers: 0,
+                streams: 0,
+                offered_mbps: 0.0,
+                ambient_mbps: 0.0,
+                ambient_streams: 0,
+                epoch: 0,
+            },
+        }
+    }
+
+    /// Registered transfers across every network (0 = fully drained).
+    pub fn active_total(&self) -> usize {
+        let nets = self.nets.lock().expect("link plane poisoned");
+        nets.values().map(|s| s.active.len()).sum()
+    }
+
+    /// What a transfer (or a request about to be admitted — pass
+    /// `exclude = None`) sees of everyone else on the network. Empty in
+    /// isolated mode: the fiction, by request.
+    pub fn neighbor_view(&self, network: TestbedId, exclude: Option<u64>) -> NeighborView {
+        if self.mode == PlaneMode::Isolated {
+            return NeighborView::default();
+        }
+        let cap = self.scaled_capacity_mbps(network);
+        let nets = self.nets.lock().expect("link plane poisoned");
+        match nets.get(&network) {
+            Some(state) => {
+                let mut transfers = 0usize;
+                let mut streams = state.ambient_streams;
+                let mut offered = state.ambient_mbps;
+                for (id, load) in &state.active {
+                    if Some(*id) == exclude {
+                        continue;
+                    }
+                    transfers += 1;
+                    streams = streams.saturating_add(load.streams);
+                    offered += load.offered_mbps;
+                }
+                NeighborView {
+                    transfers,
+                    streams,
+                    offered_mbps: offered.min(cap),
+                    epoch: state.epoch,
+                }
+            }
+            None => NeighborView::default(),
+        }
+    }
+
+    /// Total carried load on the network — registered + ambient,
+    /// saturated at the scaled capacity. This is the quantity the
+    /// `offered-within-capacity` invariant bounds.
+    pub fn carried_mbps(&self, network: TestbedId) -> f64 {
+        let cap = self.scaled_capacity_mbps(network);
+        let occ = self.occupancy(network);
+        (occ.offered_mbps + occ.ambient_mbps).min(cap)
+    }
+
+    /// Fair-share stream allowance for one transfer on the network:
+    /// `stream_budget / active` while at least two transfers share the
+    /// link; `None` (uncapped) for a solo transfer or in isolated mode.
+    pub fn stream_allowance(&self, network: TestbedId) -> Option<u32> {
+        if self.mode == PlaneMode::Isolated {
+            return None;
+        }
+        let nets = self.nets.lock().expect("link plane poisoned");
+        let active = nets.get(&network).map(|s| s.active.len()).unwrap_or(0);
+        if active < 2 {
+            return None;
+        }
+        Some((self.config.stream_budget / active as u32).max(self.config.min_streams))
+    }
+
+    /// The contention metrics block (rendered by `coordinator::Metrics`
+    /// when a plane is attached).
+    pub fn render(&self) -> String {
+        let mode = match self.mode {
+            PlaneMode::Shared => "shared",
+            PlaneMode::Isolated => "isolated",
+        };
+        let nets = self.nets.lock().expect("link plane poisoned");
+        let active: usize = nets.values().map(|s| s.active.len()).sum();
+        let peak: usize = nets.values().map(|s| s.peak_concurrent).max().unwrap_or(0);
+        let joins: u64 = nets.values().map(|s| s.joins).sum();
+        let leaves: u64 = nets.values().map(|s| s.leaves).sum();
+        let mut out = format!(
+            "link plane: {mode} mode, {active} active transfer(s), peak {peak} concurrent, \
+             {joins} joins, {leaves} leaves\n"
+        );
+        for (id, state) in nets.iter() {
+            let streams: u32 = state.active.values().map(|l| l.streams).sum();
+            let offered: f64 = state.active.values().map(|l| l.offered_mbps).sum();
+            // scaled_capacity_mbps touches only the fault board, never
+            // the nets lock held here.
+            let cap = self.scaled_capacity_mbps(*id);
+            let carried = (offered + state.ambient_mbps).min(cap);
+            out.push_str(&format!(
+                "  {}: {} active / {} streams, offered {:.0} Mbps, ambient {:.0} Mbps \
+                 ({} streams), carried {:.0}/{:.0} Mbps, epoch {}\n",
+                id.name(),
+                state.active.len(),
+                streams,
+                offered,
+                state.ambient_mbps,
+                state.ambient_streams,
+                carried,
+                cap,
+                state.epoch,
+            ));
+        }
+        out
+    }
+}
+
+/// Exposure accumulator (single-threaded: lives inside one lease).
+#[derive(Debug, Clone, Copy, Default)]
+struct ExposureAcc {
+    last_epoch: Option<u64>,
+    epochs_observed: u64,
+    peak_neighbors: usize,
+    peak_neighbor_mbps: f64,
+    weighted_neighbor_mbps_s: f64,
+    peak_carried_mbps: f64,
+    contended_s: f64,
+    total_s: f64,
+}
+
+/// A transfer's registration on the shared link. Obtained from
+/// [`LinkPlane::admit`]; held by the [`TransferEnv`] for the run;
+/// releases the registration (and yields the exposure summary) on
+/// [`LinkLease::release`] — or on drop, so a panicking worker cannot
+/// leak occupancy.
+///
+/// [`TransferEnv`]: crate::baselines::TransferEnv
+#[derive(Debug)]
+pub struct LinkLease {
+    plane: Arc<LinkPlane>,
+    network: TestbedId,
+    id: u64,
+    /// Nominal link capacity, cached at admission so the per-chunk
+    /// exposure path never rebuilds a `Testbed`.
+    nominal_mbps: f64,
+    released: bool,
+    acc: ExposureAcc,
+}
+
+impl LinkLease {
+    pub fn network(&self) -> TestbedId {
+        self.network
+    }
+
+    /// What everyone else on the link currently offers (empty in
+    /// isolated mode).
+    pub fn view(&self) -> NeighborView {
+        self.plane.neighbor_view(self.network, Some(self.id))
+    }
+
+    /// The fair-share cap on this transfer's cc×p decision right now
+    /// (`None` = uncapped).
+    pub fn stream_allowance(&self) -> Option<u32> {
+        self.plane.stream_allowance(self.network)
+    }
+
+    /// Clamp a parameter choice to the current stream allowance:
+    /// parallelism sheds first (streams are the contended resource),
+    /// then concurrency; pipelining is per-channel and stays.
+    pub fn clamp_params(&self, params: Params) -> Params {
+        let Some(allowance) = self.stream_allowance() else {
+            return params;
+        };
+        let mut capped = params;
+        while capped.streams() > allowance {
+            if capped.p > 1 {
+                capped.p -= 1;
+            } else if capped.cc > 1 {
+                capped.cc -= 1;
+            } else {
+                break;
+            }
+        }
+        capped
+    }
+
+    /// Report this transfer's current load so neighbors see it.
+    pub fn update(&self, procs: u32, streams: u32, offered_mbps: f64) {
+        self.plane.update(self.network, self.id, procs, streams, offered_mbps);
+    }
+
+    /// Fold one executed chunk into the exposure summary. `view` is the
+    /// neighbor view the chunk ran under and `own_mbps` the steady rate
+    /// this transfer just offered — the carried load is derived from
+    /// the two (view is already capacity-capped), so the per-chunk hot
+    /// path takes no extra pass through the plane's registry lock.
+    pub fn observe(&mut self, view: &NeighborView, chunk_s: f64, own_mbps: f64) {
+        let chunk_s = if chunk_s.is_finite() { chunk_s.max(0.0) } else { 0.0 };
+        if self.acc.last_epoch != Some(view.epoch) {
+            self.acc.last_epoch = Some(view.epoch);
+            self.acc.epochs_observed += 1;
+        }
+        self.acc.peak_neighbors = self.acc.peak_neighbors.max(view.transfers);
+        self.acc.peak_neighbor_mbps = self.acc.peak_neighbor_mbps.max(view.offered_mbps);
+        self.acc.weighted_neighbor_mbps_s += view.offered_mbps * chunk_s;
+        let own = if own_mbps.is_finite() { own_mbps.max(0.0) } else { 0.0 };
+        let cap = self.nominal_mbps * self.plane.capacity_factor(self.network);
+        let carried = (view.offered_mbps + own).min(cap);
+        self.acc.peak_carried_mbps = self.acc.peak_carried_mbps.max(carried);
+        if view.transfers > 0 || view.offered_mbps > 0.0 {
+            self.acc.contended_s += chunk_s;
+        }
+        self.acc.total_s += chunk_s;
+    }
+
+    /// Release the registration and summarize the exposure.
+    pub fn release(mut self) -> ContentionExposure {
+        self.plane.release(self.network, self.id);
+        self.released = true;
+        let acc = self.acc;
+        ContentionExposure {
+            epochs_observed: acc.epochs_observed,
+            peak_neighbors: acc.peak_neighbors,
+            peak_neighbor_mbps: acc.peak_neighbor_mbps,
+            mean_neighbor_mbps: if acc.total_s > 0.0 {
+                acc.weighted_neighbor_mbps_s / acc.total_s
+            } else {
+                0.0
+            },
+            peak_carried_mbps: acc.peak_carried_mbps,
+            contended_s: acc.contended_s,
+            total_s: acc.total_s,
+        }
+    }
+}
+
+impl Drop for LinkLease {
+    fn drop(&mut self) {
+        if !self.released {
+            self.plane.release(self.network, self.id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neighbors_see_each_other_and_drain_restores_zero() {
+        let plane = Arc::new(LinkPlane::shared());
+        let a = plane.clone().admit(TestbedId::Xsede, 1);
+        let b = plane.clone().admit(TestbedId::Xsede, 2);
+        a.update(8, 32, 4_000.0);
+        b.update(4, 8, 1_000.0);
+        // A sees B, B sees A — never themselves.
+        assert_eq!(a.view().offered_mbps, 1_000.0);
+        assert_eq!(a.view().streams, 8);
+        assert_eq!(b.view().offered_mbps, 4_000.0);
+        assert_eq!(b.view().transfers, 1);
+        // Another network is untouched.
+        assert_eq!(plane.occupancy(TestbedId::Didclab).transfers, 0);
+        let occ = plane.occupancy(TestbedId::Xsede);
+        assert_eq!(occ.transfers, 2);
+        assert_eq!(occ.streams, 40);
+        assert!((occ.offered_mbps - 5_000.0).abs() < 1e-9);
+        drop(a);
+        drop(b);
+        let drained = plane.occupancy(TestbedId::Xsede);
+        assert_eq!(drained.transfers, 0);
+        assert_eq!(drained.offered_mbps, 0.0);
+        assert_eq!(plane.active_total(), 0);
+    }
+
+    #[test]
+    fn epochs_bump_on_join_leave_and_ambient() {
+        let plane = Arc::new(LinkPlane::shared());
+        let e0 = plane.occupancy(TestbedId::Xsede).epoch;
+        let lease = plane.clone().admit(TestbedId::Xsede, 1);
+        let e1 = plane.occupancy(TestbedId::Xsede).epoch;
+        assert!(e1 > e0);
+        lease.update(4, 8, 500.0); // load updates do NOT bump the epoch
+        assert_eq!(plane.occupancy(TestbedId::Xsede).epoch, e1);
+        plane.set_ambient(TestbedId::Xsede, 2_000.0, 16);
+        let e2 = plane.occupancy(TestbedId::Xsede).epoch;
+        assert!(e2 > e1);
+        drop(lease);
+        assert!(plane.occupancy(TestbedId::Xsede).epoch > e2);
+    }
+
+    #[test]
+    fn isolated_mode_hides_neighbors_but_keeps_books() {
+        let plane = Arc::new(LinkPlane::isolated());
+        let a = plane.clone().admit(TestbedId::Xsede, 1);
+        let b = plane.clone().admit(TestbedId::Xsede, 2);
+        b.update(8, 32, 4_000.0);
+        // The fiction: a sees nothing...
+        assert_eq!(a.view(), NeighborView::default());
+        assert_eq!(a.stream_allowance(), None);
+        // ...but the operator's books are truthful.
+        assert_eq!(plane.occupancy(TestbedId::Xsede).transfers, 2);
+        drop(a);
+        drop(b);
+    }
+
+    #[test]
+    fn ambient_convoy_counts_as_neighbor_pressure() {
+        let plane = Arc::new(LinkPlane::shared());
+        plane.set_ambient(TestbedId::Xsede, 6_000.0, 48);
+        let lease = plane.clone().admit(TestbedId::Xsede, 1);
+        let view = lease.view();
+        assert_eq!(view.transfers, 0, "ambient is not a registered transfer");
+        assert_eq!(view.streams, 48);
+        assert!((view.offered_mbps - 6_000.0).abs() < 1e-9);
+        plane.clear_ambient(TestbedId::Xsede);
+        assert_eq!(lease.view().offered_mbps, 0.0);
+    }
+
+    #[test]
+    fn neighbor_pressure_and_carried_load_saturate_at_scaled_capacity() {
+        use crate::sim::fault::FaultBoard;
+
+        let board = Arc::new(FaultBoard::new());
+        let plane = Arc::new(LinkPlane::with_config(
+            PlaneMode::Shared,
+            LinkPlaneConfig::default(),
+            Some(board.clone()),
+        ));
+        plane.set_ambient(TestbedId::Xsede, 50_000.0, 100);
+        let lease = plane.clone().admit(TestbedId::Xsede, 1);
+        lease.update(8, 32, 9_000.0);
+        // Nominal capacity caps the view and the carried load.
+        assert!((plane.carried_mbps(TestbedId::Xsede) - 10_000.0).abs() < 1e-9);
+        assert!((lease.view().offered_mbps - 10_000.0).abs() < 1e-9);
+        // A brownout narrows the plane's pipe too.
+        board.degrade_link(TestbedId::Xsede, 0.4);
+        assert!((plane.scaled_capacity_mbps(TestbedId::Xsede) - 4_000.0).abs() < 1e-9);
+        assert!((plane.carried_mbps(TestbedId::Xsede) - 4_000.0).abs() < 1e-9);
+        drop(lease);
+    }
+
+    #[test]
+    fn stream_allowance_fair_shares_only_under_contention() {
+        let plane = Arc::new(LinkPlane::with_config(
+            PlaneMode::Shared,
+            LinkPlaneConfig { stream_budget: 24, min_streams: 2 },
+            None,
+        ));
+        let a = plane.clone().admit(TestbedId::Xsede, 1);
+        // Solo: the transfer owns the link, no cap.
+        assert_eq!(a.stream_allowance(), None);
+        let b = plane.clone().admit(TestbedId::Xsede, 2);
+        assert_eq!(a.stream_allowance(), Some(12));
+        let c = plane.clone().admit(TestbedId::Xsede, 3);
+        assert_eq!(a.stream_allowance(), Some(8));
+        // The clamp sheds parallelism first, then concurrency, and
+        // never touches pipelining.
+        let clamped = a.clamp_params(Params::new(8, 4, 16));
+        assert!(clamped.streams() <= 8, "clamped to {clamped}");
+        assert_eq!(clamped.pp, 16);
+        assert_eq!(a.clamp_params(Params::new(2, 2, 4)), Params::new(2, 2, 4));
+        // The floor holds on a very crowded link.
+        let extras: Vec<LinkLease> =
+            (4..=30).map(|i| plane.clone().admit(TestbedId::Xsede, i)).collect();
+        assert_eq!(a.stream_allowance(), Some(2));
+        assert_eq!(a.clamp_params(Params::new(8, 4, 16)).streams(), 2);
+        drop(extras);
+        drop(c);
+        drop(b);
+        assert_eq!(a.stream_allowance(), None, "drain lifts the cap");
+        drop(a);
+    }
+
+    #[test]
+    fn exposure_summarizes_what_the_transfer_experienced() {
+        let plane = Arc::new(LinkPlane::shared());
+        let mut a = plane.clone().admit(TestbedId::Xsede, 1);
+        a.update(4, 8, 1_000.0);
+        // Quiet chunk.
+        let quiet = a.view();
+        a.observe(&quiet, 5.0, 1_000.0);
+        // A neighbor joins: epoch changes, contended chunk.
+        let b = plane.clone().admit(TestbedId::Xsede, 2);
+        b.update(8, 32, 3_000.0);
+        let busy = a.view();
+        assert_eq!(busy.transfers, 1);
+        a.observe(&busy, 5.0, 800.0);
+        drop(b);
+        let exposure = a.release();
+        assert_eq!(exposure.epochs_observed, 2);
+        assert_eq!(exposure.peak_neighbors, 1);
+        assert!((exposure.peak_neighbor_mbps - 3_000.0).abs() < 1e-9);
+        assert!((exposure.mean_neighbor_mbps - 1_500.0).abs() < 1e-9);
+        assert!((exposure.contended_s - 5.0).abs() < 1e-9);
+        assert!((exposure.total_s - 10.0).abs() < 1e-9);
+        // Carried = neighbors (3000) + what this transfer offered on
+        // the busy chunk (800), well under the 10 Gbps cap.
+        assert!((exposure.peak_carried_mbps - 3_800.0).abs() < 1e-9);
+        assert_eq!(plane.active_total(), 0, "release drains the registration");
+    }
+
+    #[test]
+    fn render_reports_mode_occupancy_and_ambient() {
+        let plane = Arc::new(LinkPlane::shared());
+        let lease = plane.clone().admit(TestbedId::Xsede, 7);
+        lease.update(8, 24, 2_500.0);
+        plane.set_ambient(TestbedId::Xsede, 4_000.0, 48);
+        let rendered = plane.render();
+        assert!(rendered.contains("link plane: shared mode, 1 active"), "{rendered}");
+        assert!(rendered.contains("xsede: 1 active / 24 streams"), "{rendered}");
+        assert!(rendered.contains("ambient 4000 Mbps (48 streams)"), "{rendered}");
+        assert!(rendered.contains("carried 6500/10000 Mbps"), "{rendered}");
+        drop(lease);
+        assert!(plane.render().contains("0 active transfer(s)"));
+    }
+}

@@ -138,8 +138,9 @@ impl Optimizer for AdaptiveSampling<'_> {
                 let phase = crate::baselines::bulk_phase(env, &dataset, params);
                 return RunReport {
                     optimizer: self.name(),
+                    // The phase carries the allowance-clamped theta.
+                    final_params: phase.params,
                     phases: vec![phase],
-                    final_params: params,
                     predicted_mbps: None,
                 };
             }
@@ -187,6 +188,13 @@ impl Optimizer for AdaptiveSampling<'_> {
             let rem = Dataset::new(remaining_files, dataset.avg_file_mb);
             let chunk = env.sample_chunk(&rem, predicted, self.config.sample_target_s);
             let out = env.run_chunk(&chunk, params);
+            // Under link contention run_chunk clamps cc×p to the
+            // plane's fair-share allowance; read the *applied* θ back
+            // so the ledger, the convergence check, and the drift
+            // model all describe the chunk that actually ran (the
+            // allowance can move between any two reads as neighbors
+            // join and leave).
+            let params = env.current_params.unwrap_or(params);
             phases.push(Phase {
                 params,
                 mb: chunk.total_mb(),
@@ -236,6 +244,9 @@ impl Optimizer for AdaptiveSampling<'_> {
             };
             let chunk = Dataset::new(files, dataset.avg_file_mb);
             let out = env.run_chunk(&chunk, params);
+            // As in the sampling ladder: the allowance-clamped θ the
+            // chunk actually ran at, not the argmax we asked for.
+            let params = env.current_params.unwrap_or(params);
             phases.push(Phase {
                 params,
                 mb: chunk.total_mb(),
@@ -257,6 +268,7 @@ impl Optimizer for AdaptiveSampling<'_> {
             }
         }
         let (final_params, predicted) = surfaces[active].argmax;
+        let final_params = env.effective_params(final_params);
         // Report the sample-calibrated prediction: the ratio of the last
         // sample's measurement to the *active* surface's prediction at
         // the sampled θ corrects the surface magnitude to the network as

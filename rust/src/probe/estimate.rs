@@ -20,6 +20,35 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+/// The link-occupancy observation an estimate was recorded under (and
+/// a request is admitted under): the contention plane's join/leave
+/// epoch plus the concurrent self-traffic streams (neighbors + any
+/// ambient convoy) on the network at that moment. Zero everywhere when
+/// no link plane is attached — which keeps the pre-plane behaviour
+/// bit-for-bit (no penalty can ever fire on matching zero classes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ProbeOcc {
+    /// `netplane::LinkPlane` epoch at observation time.
+    pub epoch: u64,
+    /// Concurrent self-traffic streams on the link (neighbors + ambient).
+    pub streams: u32,
+}
+
+impl ProbeOcc {
+    /// Coarse busy class: 0 = quiet link, 1 = moderate self-traffic,
+    /// 2 = heavy. An estimate learned in one class is demoted when
+    /// served in another — a surface measured under a convoy is not
+    /// quiet-network truth, and vice versa — while chunk-to-chunk
+    /// jitter inside a class never churns confidence.
+    pub fn class(&self) -> u8 {
+        match self.streams {
+            0 => 0,
+            1..=16 => 1,
+            _ => 2,
+        }
+    }
+}
+
 /// Estimate tuning knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct EstimateConfig {
@@ -47,6 +76,16 @@ pub struct EstimateConfig {
     /// Confidence of an estimate re-pointed by a mid-transfer drift
     /// re-tune (the monitor's surface re-selection, not a fresh probe).
     pub drift_confidence: f64,
+    /// Multiplier applied when the link's occupancy class at admission
+    /// differs from the class the estimate was recorded under (see
+    /// [`ProbeOcc::class`]): knowledge learned under heavy self-traffic
+    /// must not be served as quiet-network truth. Sized so a
+    /// full-confidence estimate drops below the serve threshold on a
+    /// class change and re-leads (warm-started) instead — and so that
+    /// even one cross-class bulk reinforcement (penalized base +
+    /// `bulk_bonus`) still sits below the threshold; only repeated
+    /// confirmations under the *new* class earn a serve.
+    pub occupancy_penalty: f64,
 }
 
 impl Default for EstimateConfig {
@@ -59,6 +98,7 @@ impl Default for EstimateConfig {
             lead_unsampled_confidence: 0.5,
             bulk_bonus: 0.1,
             drift_confidence: 0.7,
+            occupancy_penalty: 0.45,
         }
     }
 }
@@ -78,6 +118,10 @@ pub struct NetworkEstimate {
     pub confidence: f64,
     /// KB generation the index refers to.
     pub generation: u64,
+    /// Link occupancy the observation was made under — recorded
+    /// alongside cluster and generation so the serve path can tell
+    /// "learned under a convoy" from "learned on a quiet link".
+    pub occ: ProbeOcc,
     pub updated_at: Instant,
 }
 
@@ -90,6 +134,23 @@ impl NetworkEstimate {
         let mut confidence = self.confidence * 0.5_f64.powf(age / half_life);
         if serving_generation != self.generation {
             confidence *= config.generation_penalty;
+        }
+        confidence.clamp(0.0, 1.0)
+    }
+
+    /// Full serve-path confidence: [`Self::decayed`] with the
+    /// occupancy penalty applied on top when the link's busy class has
+    /// changed since the estimate was recorded. This is what admission
+    /// compares against the serve threshold.
+    pub fn decayed_for(
+        &self,
+        config: &EstimateConfig,
+        serving_generation: u64,
+        occ_now: ProbeOcc,
+    ) -> f64 {
+        let mut confidence = self.decayed(config, serving_generation);
+        if occ_now.class() != self.occ.class() {
+            confidence *= config.occupancy_penalty;
         }
         confidence.clamp(0.0, 1.0)
     }
@@ -112,18 +173,20 @@ impl EstimateStore {
     }
 
     /// The shard's estimate plus its decayed confidence under the
-    /// serving generation; `None` when nothing has been observed yet or
-    /// the stored estimate indexes a different cluster's surface stack.
+    /// serving generation and the link occupancy observed at admission;
+    /// `None` when nothing has been observed yet or the stored estimate
+    /// indexes a different cluster's surface stack.
     pub fn current(
         &self,
         key: ShardKey,
         cluster_idx: usize,
         serving_generation: u64,
+        occ_now: ProbeOcc,
     ) -> Option<(NetworkEstimate, f64)> {
         let map = self.inner.lock().expect("estimate store poisoned");
         map.get(&key)
             .filter(|e| e.cluster_idx == cluster_idx)
-            .map(|e| (*e, e.decayed(&self.config, serving_generation)))
+            .map(|e| (*e, e.decayed_for(&self.config, serving_generation, occ_now)))
     }
 
     /// The raw stored estimate for `key`, regardless of cluster or
@@ -143,6 +206,13 @@ impl EstimateStore {
     /// observation that re-points the estimate (different surface,
     /// cluster, or generation) is new information and replaces the old
     /// record outright, whatever its confidence.
+    ///
+    /// Inherited confidence is discounted across occupancy classes
+    /// (`decayed_for` with the incoming `occ`): evidence gathered on a
+    /// quiet link must not be laundered into full-confidence convoy
+    /// truth through a merge, nor vice versa — the merged record is
+    /// stamped with the *new* occupancy, so the old class's penalty is
+    /// applied exactly once, here.
     pub fn record(
         &self,
         key: ShardKey,
@@ -151,6 +221,7 @@ impl EstimateStore {
         intensity: f64,
         confidence: f64,
         generation: u64,
+        occ: ProbeOcc,
     ) {
         let mut map = self.inner.lock().expect("estimate store poisoned");
         let confidence = match map.get(&key) {
@@ -159,7 +230,7 @@ impl EstimateStore {
                     && e.surface_idx == surface_idx
                     && e.generation == generation =>
             {
-                confidence.max(e.decayed(&self.config, generation))
+                confidence.max(e.decayed_for(&self.config, generation, occ))
             }
             _ => confidence,
         };
@@ -171,6 +242,7 @@ impl EstimateStore {
                 intensity,
                 confidence: confidence.clamp(0.0, 1.0),
                 generation,
+                occ,
                 updated_at: Instant::now(),
             },
         );
@@ -179,7 +251,12 @@ impl EstimateStore {
     /// A completed bulk transfer confirmed the surface: bump the
     /// decayed confidence by the bulk bonus (capped at 1) and refresh
     /// the timestamp. Creates the estimate at bonus confidence when the
-    /// shard had none (or held another cluster's estimate).
+    /// shard had none (or held another cluster's estimate). The base
+    /// confidence is discounted across occupancy classes (see
+    /// [`Self::record`]): a convoy-time completion reinforcing a
+    /// quiet-learned surface starts from the penalized confidence, so
+    /// one bulk run can never promote cross-class knowledge straight
+    /// past the serve threshold.
     pub fn reinforce(
         &self,
         key: ShardKey,
@@ -187,12 +264,13 @@ impl EstimateStore {
         surface_idx: usize,
         intensity: f64,
         generation: u64,
+        occ: ProbeOcc,
     ) {
         let mut map = self.inner.lock().expect("estimate store poisoned");
         let confidence = map
             .get(&key)
             .filter(|e| e.cluster_idx == cluster_idx)
-            .map(|e| e.decayed(&self.config, generation) + self.config.bulk_bonus)
+            .map(|e| e.decayed_for(&self.config, generation, occ) + self.config.bulk_bonus)
             .unwrap_or(self.config.bulk_bonus)
             .clamp(0.0, 1.0);
         map.insert(
@@ -203,6 +281,7 @@ impl EstimateStore {
                 intensity,
                 confidence,
                 generation,
+                occ,
                 updated_at: Instant::now(),
             },
         );
@@ -242,9 +321,9 @@ mod tests {
             half_life: Duration::from_secs(500),
             ..Default::default()
         });
-        assert!(store.current(key(), 0, 0).is_none());
-        store.record(key(), 0, 3, 0.5, 1.0, 0);
-        let (est, confidence) = store.current(key(), 0, 0).unwrap();
+        assert!(store.current(key(), 0, 0, ProbeOcc::default()).is_none());
+        store.record(key(), 0, 3, 0.5, 1.0, 0, ProbeOcc::default());
+        let (est, confidence) = store.current(key(), 0, 0, ProbeOcc::default()).unwrap();
         assert_eq!(est.surface_idx, 3);
         assert!(confidence > 0.9, "fresh confidence decayed to {confidence}");
     }
@@ -255,14 +334,14 @@ mod tests {
             half_life: Duration::from_secs(500),
             ..Default::default()
         });
-        store.record(key(), 2, 3, 0.5, 1.0, 0);
+        store.record(key(), 2, 3, 0.5, 1.0, 0, ProbeOcc::default());
         // A surface index only means something within its own cluster.
-        assert!(store.current(key(), 1, 0).is_none());
-        assert!(store.current(key(), 2, 0).is_some());
+        assert!(store.current(key(), 1, 0, ProbeOcc::default()).is_none());
+        assert!(store.current(key(), 2, 0, ProbeOcc::default()).is_some());
         // Reinforcing under another cluster starts fresh instead of
         // bumping the stale cluster's confidence.
-        store.reinforce(key(), 5, 1, 0.3, 0);
-        let (est, confidence) = store.current(key(), 5, 0).unwrap();
+        store.reinforce(key(), 5, 1, 0.3, 0, ProbeOcc::default());
+        let (est, confidence) = store.current(key(), 5, 0, ProbeOcc::default()).unwrap();
         assert_eq!(est.surface_idx, 1);
         assert!(confidence <= store.config().bulk_bonus + 1e-9);
     }
@@ -273,9 +352,9 @@ mod tests {
             half_life: Duration::from_millis(20),
             ..Default::default()
         });
-        store.record(key(), 0, 2, 0.4, 1.0, 0);
+        store.record(key(), 0, 2, 0.4, 1.0, 0, ProbeOcc::default());
         std::thread::sleep(Duration::from_millis(80));
-        let (_, confidence) = store.current(key(), 0, 0).unwrap();
+        let (_, confidence) = store.current(key(), 0, 0, ProbeOcc::default()).unwrap();
         // ≥ 4 half-lives have passed ⇒ ≤ 1/16 (with slack for timing).
         assert!(confidence < 0.2, "stale confidence still {confidence}");
     }
@@ -284,14 +363,79 @@ mod tests {
     fn generation_mismatch_applies_penalty() {
         let config = EstimateConfig { half_life: Duration::from_secs(500), ..Default::default() };
         let store = EstimateStore::new(config);
-        store.record(key(), 0, 1, 0.2, 1.0, 7);
-        let (_, same_gen) = store.current(key(), 0, 7).unwrap();
-        let (_, new_gen) = store.current(key(), 0, 8).unwrap();
+        store.record(key(), 0, 1, 0.2, 1.0, 7, ProbeOcc::default());
+        let (_, same_gen) = store.current(key(), 0, 7, ProbeOcc::default()).unwrap();
+        let (_, new_gen) = store.current(key(), 0, 8, ProbeOcc::default()).unwrap();
         assert!(new_gen < same_gen);
         assert!(
             (new_gen - same_gen * config.generation_penalty).abs() < 0.05,
             "penalty not applied: {new_gen} vs {same_gen}"
         );
+    }
+
+    #[test]
+    fn occupancy_class_change_applies_penalty_both_ways() {
+        let config = EstimateConfig { half_life: Duration::from_secs(500), ..Default::default() };
+        let store = EstimateStore::new(config);
+        let busy = ProbeOcc { epoch: 9, streams: 48 };
+        let quiet = ProbeOcc::default();
+        // Learned under a convoy: quiet admission is demoted...
+        store.record(key(), 0, 3, 0.8, 1.0, 0, busy);
+        let (est, under_convoy) = store.current(key(), 0, 0, busy).unwrap();
+        assert_eq!(est.occ, busy, "the occupancy observation is recorded");
+        let (_, on_quiet) = store.current(key(), 0, 0, quiet).unwrap();
+        assert!(on_quiet < under_convoy);
+        assert!(
+            (on_quiet - under_convoy * config.occupancy_penalty).abs() < 0.05,
+            "penalty not applied: {on_quiet} vs {under_convoy}"
+        );
+        // ...and vice versa: quiet knowledge is not convoy truth.
+        store.record(key(), 0, 3, 0.8, 1.0, 0, quiet);
+        let (_, served_quiet) = store.current(key(), 0, 0, quiet).unwrap();
+        let (_, served_busy) = store.current(key(), 0, 0, busy).unwrap();
+        assert!(served_busy < served_quiet);
+        // Jitter inside one class never churns confidence.
+        let jitter = ProbeOcc { epoch: 11, streams: 0 };
+        let (_, same_class) = store.current(key(), 0, 0, jitter).unwrap();
+        assert!((same_class - served_quiet).abs() < 0.02);
+        // Default sizing: a full-confidence estimate drops below the
+        // serve threshold on a class change.
+        assert!(served_busy < config.serve_threshold);
+    }
+
+    #[test]
+    fn cross_class_reinforcement_cannot_launder_confidence() {
+        let store = EstimateStore::new(EstimateConfig {
+            half_life: Duration::from_secs(500),
+            ..Default::default()
+        });
+        let quiet = ProbeOcc::default();
+        let busy = ProbeOcc { epoch: 3, streams: 48 };
+        // Full-confidence quiet knowledge...
+        store.record(key(), 0, 3, 0.5, 1.0, 0, quiet);
+        // ...confirmed once by a bulk completion under a convoy: the
+        // bonus applies to the *penalized* base, so one cross-class
+        // confirmation cannot clear the serve threshold.
+        store.reinforce(key(), 0, 3, 0.5, 0, busy);
+        let (est, confidence) = store.current(key(), 0, 0, busy).unwrap();
+        assert_eq!(est.occ, busy, "the merge is stamped with the new occupancy");
+        assert!(
+            confidence < store.config().serve_threshold,
+            "one convoy-time confirmation laundered quiet confidence to {confidence}"
+        );
+        // The same guard holds on the record max-merge path.
+        store.record(key(), 0, 3, 0.5, 0.2, 0, quiet);
+        let (_, merged) = store.current(key(), 0, 0, quiet).unwrap();
+        assert!(
+            merged < store.config().serve_threshold,
+            "a weak quiet re-record inherited busy confidence at {merged}"
+        );
+        // Repeated confirmations under the new class do earn a serve.
+        for _ in 0..4 {
+            store.reinforce(key(), 0, 3, 0.5, 0, quiet);
+        }
+        let (_, earned) = store.current(key(), 0, 0, quiet).unwrap();
+        assert!(earned >= store.config().serve_threshold, "{earned}");
     }
 
     // --- property tests (same `util::proptest` harness as budget.rs) ---
@@ -324,6 +468,7 @@ mod tests {
                             intensity: 0.5,
                             confidence,
                             generation: 0,
+                            occ: ProbeOcc::default(),
                             updated_at,
                         }
                     })
@@ -365,12 +510,53 @@ mod tests {
                     ..Default::default()
                 };
                 let store = EstimateStore::new(config);
-                store.record(key(), 0, 1, 0.5, confidence, generation);
-                let (_, same_gen) = store.current(key(), 0, generation).unwrap();
-                let (_, cross_gen) = store.current(key(), 0, generation + 1).unwrap();
+                store.record(key(), 0, 1, 0.5, confidence, generation, ProbeOcc::default());
+                let (_, same_gen) = store.current(key(), 0, generation, ProbeOcc::default()).unwrap();
+                let (_, cross_gen) = store.current(key(), 0, generation + 1, ProbeOcc::default()).unwrap();
                 if cross_gen > same_gen + 1e-9 {
                     return Err(format!(
                         "cross-generation penalty raised confidence: {cross_gen} > {same_gen}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_occupancy_penalty_never_raises_confidence() {
+        forall(
+            Config { cases: 200, seed: 0x0CC0 },
+            |rng| {
+                (
+                    rng.range_f64(0.0, 1.0),  // recorded confidence
+                    rng.range_f64(0.0, 1.0),  // occupancy penalty
+                    rng.range_u(0, 64) as u32, // recorded occ streams
+                    rng.range_u(0, 64) as u32, // admission occ streams
+                )
+            },
+            |&(confidence, penalty, recorded_streams, now_streams)| {
+                let config = EstimateConfig {
+                    half_life: Duration::from_secs(500),
+                    occupancy_penalty: penalty,
+                    ..Default::default()
+                };
+                let store = EstimateStore::new(config);
+                let recorded = ProbeOcc { epoch: 1, streams: recorded_streams };
+                let now = ProbeOcc { epoch: 2, streams: now_streams };
+                store.record(key(), 0, 1, 0.5, confidence, 0, recorded);
+                let (_, matched) = store.current(key(), 0, 0, recorded).unwrap();
+                let (_, shifted) = store.current(key(), 0, 0, now).unwrap();
+                // Tolerances cover the sub-millisecond wall decay
+                // between the two lookups.
+                if shifted > matched + 1e-6 {
+                    return Err(format!(
+                        "occupancy shift raised confidence: {shifted} > {matched}"
+                    ));
+                }
+                if recorded.class() == now.class() && (shifted - matched).abs() > 1e-4 {
+                    return Err(format!(
+                        "same busy class must not change confidence: {shifted} vs {matched}"
                     ));
                 }
                 Ok(())
@@ -401,7 +587,7 @@ mod tests {
                 });
                 for &(cluster, surface, generation, confidence) in ops {
                     let before = store.peek(key());
-                    store.record(key(), cluster, surface, 0.4, confidence, generation);
+                    store.record(key(), cluster, surface, 0.4, confidence, generation, ProbeOcc::default());
                     let after = store.peek(key()).expect("just recorded");
                     // Incoming evidence is always at least honored.
                     if after.confidence + 1e-9 < confidence.min(1.0) {
@@ -442,9 +628,9 @@ mod tests {
             ..Default::default()
         });
         assert!(store.peek(key()).is_none());
-        store.record(key(), 2, 3, 0.5, 1.0, 7);
+        store.record(key(), 2, 3, 0.5, 1.0, 7, ProbeOcc::default());
         // `current` under another cluster misses; `peek` still sees it.
-        assert!(store.current(key(), 0, 7).is_none());
+        assert!(store.current(key(), 0, 7, ProbeOcc::default()).is_none());
         let raw = store.peek(key()).unwrap();
         assert_eq!((raw.cluster_idx, raw.surface_idx, raw.generation), (2, 3, 7));
     }
@@ -457,15 +643,15 @@ mod tests {
             ..Default::default()
         });
         // Creates at bonus confidence when absent.
-        store.reinforce(key(), 0, 2, 0.4, 0);
-        let (est, confidence) = store.current(key(), 0, 0).unwrap();
+        store.reinforce(key(), 0, 2, 0.4, 0, ProbeOcc::default());
+        let (est, confidence) = store.current(key(), 0, 0, ProbeOcc::default()).unwrap();
         assert_eq!(est.surface_idx, 2);
         assert!((0.2..=0.3001).contains(&confidence), "created at {confidence}");
         // Repeated confirmations approach — and never exceed — 1.
         for _ in 0..10 {
-            store.reinforce(key(), 0, 2, 0.4, 0);
+            store.reinforce(key(), 0, 2, 0.4, 0, ProbeOcc::default());
         }
-        let (_, confidence) = store.current(key(), 0, 0).unwrap();
+        let (_, confidence) = store.current(key(), 0, 0, ProbeOcc::default()).unwrap();
         assert!(confidence <= 1.0);
         assert!(confidence > 0.9);
     }

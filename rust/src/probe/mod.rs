@@ -48,6 +48,6 @@ pub mod plane;
 pub mod singleflight;
 
 pub use budget::{BudgetConfig, TokenBucket};
-pub use estimate::{EstimateConfig, EstimateStore, NetworkEstimate};
+pub use estimate::{EstimateConfig, EstimateStore, NetworkEstimate, ProbeOcc};
 pub use plane::{Admission, ProbeConfig, ProbeMode, ProbePlane, ProbeStats};
 pub use singleflight::{FlightGuard, FollowOutcome, ProbeResult, Role, SingleFlight};

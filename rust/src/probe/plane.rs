@@ -12,7 +12,7 @@
 //! flight's followers are released.
 
 use super::budget::{BudgetConfig, TokenBucket};
-use super::estimate::{EstimateConfig, EstimateStore};
+use super::estimate::{EstimateConfig, EstimateStore, ProbeOcc};
 use super::singleflight::{FlightGuard, FollowOutcome, ProbeResult, Role, SingleFlight};
 use crate::baselines::RunReport;
 use crate::fabric::ShardKey;
@@ -194,19 +194,25 @@ impl ProbePlane {
     }
 
     /// Decide how a request for `key` (mapping to KB cluster
-    /// `cluster_idx`, served at `generation`) obtains network
-    /// knowledge. Never blocks longer than `follower_wait`.
-    /// `cluster_idx` is `None` only for an empty (cold-start) KB, where
-    /// estimates and piggybacked surface indices mean nothing.
+    /// `cluster_idx`, served at `generation`, admitted under link
+    /// occupancy `occ`) obtains network knowledge. Never blocks longer
+    /// than `follower_wait`. `cluster_idx` is `None` only for an empty
+    /// (cold-start) KB, where estimates and piggybacked surface indices
+    /// mean nothing. `occ` is the contention plane's view at admission
+    /// (`ProbeOcc::default()` when no plane is attached): an estimate
+    /// recorded under a different link busy class is demoted, so
+    /// knowledge learned under heavy self-traffic is never served as
+    /// quiet-network truth.
     pub fn admit(
         &self,
         key: ShardKey,
         cluster_idx: Option<usize>,
         generation: u64,
         expected_sample_mb: f64,
+        occ: ProbeOcc,
     ) -> Admission {
         let estimate =
-            cluster_idx.and_then(|ci| self.estimates.current(key, ci, generation));
+            cluster_idx.and_then(|ci| self.estimates.current(key, ci, generation, occ));
         if let Some((est, confidence)) = estimate {
             if confidence >= self.config.estimate.serve_threshold {
                 self.stats.estimate_served.fetch_add(1, Ordering::Relaxed);
@@ -293,6 +299,7 @@ impl ProbePlane {
         guard: Option<FlightGuard>,
         outcome: AsmOutcome,
         generation: u64,
+        occ: ProbeOcc,
     ) {
         let Some(cluster_idx) = cluster_idx else {
             // Unreachable in practice: the ladder only runs when the KB
@@ -314,6 +321,7 @@ impl ProbePlane {
             outcome.intensity,
             confidence,
             generation,
+            occ,
         );
         if let Some(guard) = guard {
             if outcome.sampled {
@@ -345,6 +353,7 @@ impl ProbePlane {
         report: &RunReport,
         reserved_mb: f64,
         generation: u64,
+        occ: ProbeOcc,
     ) {
         let (sample_mb, bulk_mb) = split_bytes(report);
         self.stats.note_bytes(sample_mb, bulk_mb);
@@ -365,6 +374,7 @@ impl ProbePlane {
                         outcome.intensity,
                         self.config.estimate.drift_confidence,
                         generation,
+                        occ,
                     );
                 } else if outcome.sampled {
                     self.estimates.record(
@@ -374,6 +384,7 @@ impl ProbePlane {
                         outcome.intensity,
                         self.config.estimate.lead_confidence,
                         generation,
+                        occ,
                     );
                 } else {
                     // Never sampled: the clean bulk run is the only
@@ -384,6 +395,7 @@ impl ProbePlane {
                         outcome.surface_idx,
                         outcome.intensity,
                         generation,
+                        occ,
                     );
                 }
             }
@@ -404,6 +416,7 @@ impl ProbePlane {
         outcome: Option<AsmOutcome>,
         report: &RunReport,
         generation: u64,
+        occ: ProbeOcc,
     ) {
         let (sample_mb, bulk_mb) = split_bytes(report);
         self.stats.note_bytes(sample_mb, bulk_mb);
@@ -417,6 +430,7 @@ impl ProbePlane {
                     outcome.intensity,
                     self.config.estimate.drift_confidence,
                     generation,
+                    occ,
                 );
             } else {
                 self.estimates.reinforce(
@@ -425,6 +439,7 @@ impl ProbePlane {
                     outcome.surface_idx,
                     outcome.intensity,
                     generation,
+                    occ,
                 );
             }
         }
@@ -534,7 +549,7 @@ mod tests {
     #[test]
     fn lead_then_confident_estimate_is_served() {
         let plane = ProbePlane::default();
-        let guard = match plane.admit(key(), Some(0), 0, 10.0) {
+        let guard = match plane.admit(key(), Some(0), 0, 10.0, ProbeOcc::default()) {
             Admission::Lead { guard, warm_start } => {
                 assert!(warm_start.is_none(), "no estimate yet");
                 guard
@@ -542,7 +557,7 @@ mod tests {
             _ => panic!("cold plane must lead"),
         };
         // Convergence releases the flight and records the estimate...
-        plane.lead_converged(key(), Some(0), guard, outcome(3, true), 0);
+        plane.lead_converged(key(), Some(0), guard, outcome(3, true), 0, ProbeOcc::default());
         // ...and the post-transfer settlement charges the budget.
         plane.finish_led(
             key(),
@@ -551,15 +566,16 @@ mod tests {
             &report(50.0, &[Params::new(4, 4, 2)]),
             10.0,
             0,
+            ProbeOcc::default(),
         );
-        match plane.admit(key(), Some(0), 0, 10.0) {
+        match plane.admit(key(), Some(0), 0, 10.0, ProbeOcc::default()) {
             Admission::Serve(Some(3)) => {}
             Admission::Serve(other) => panic!("served the wrong surface: {other:?}"),
             _ => panic!("fresh confident estimate must be served"),
         }
         // A request mapping to a *different* cluster must not be served
         // this cluster's surface index; it leads its own ladder.
-        match plane.admit(key(), Some(1), 0, 10.0) {
+        match plane.admit(key(), Some(1), 0, 10.0, ProbeOcc::default()) {
             Admission::Lead { warm_start: None, .. } => {}
             _ => panic!("another cluster's estimate must not short-circuit"),
         }
@@ -577,13 +593,13 @@ mod tests {
             ..Default::default()
         });
         // Over budget with no estimate at all: median, no sampling.
-        match plane.admit(key(), Some(0), 0, 50.0) {
+        match plane.admit(key(), Some(0), 0, 50.0, ProbeOcc::default()) {
             Admission::Serve(None) => {}
             _ => panic!("exhausted budget must force estimate reuse"),
         }
         assert_eq!(plane.stats.budget_forced.load(Ordering::Relaxed), 1);
         // Within budget: lead (and pay).
-        match plane.admit(key(), Some(0), 0, 15.0) {
+        match plane.admit(key(), Some(0), 0, 15.0, ProbeOcc::default()) {
             Admission::Lead { .. } => {}
             _ => panic!("affordable probe must lead"),
         }
@@ -596,8 +612,9 @@ mod tests {
             Some(outcome(4, false)),
             &report(0.0, &[Params::new(4, 4, 2)]),
             0,
+            ProbeOcc::default(),
         );
-        match plane.admit(key(), Some(0), 0, 50.0) {
+        match plane.admit(key(), Some(0), 0, 50.0, ProbeOcc::default()) {
             Admission::Serve(Some(4)) => {}
             _ => panic!("budget-forced reuse must still prefer the estimate"),
         }
@@ -606,9 +623,9 @@ mod tests {
     #[test]
     fn generation_bump_degrades_confidence_to_warm_start() {
         let plane = ProbePlane::default();
-        match plane.admit(key(), Some(0), 0, 10.0) {
+        match plane.admit(key(), Some(0), 0, 10.0, ProbeOcc::default()) {
             Admission::Lead { guard, .. } => {
-                plane.lead_converged(key(), Some(0), guard, outcome(3, true), 0);
+                plane.lead_converged(key(), Some(0), guard, outcome(3, true), 0, ProbeOcc::default());
                 plane.finish_led(
                     key(),
                     Some(0),
@@ -616,16 +633,62 @@ mod tests {
                     &report(50.0, &[Params::new(4, 4, 2)]),
                     10.0,
                     0,
-                );
+            ProbeOcc::default(),
+        );
             }
             _ => panic!("cold plane must lead"),
         }
         // Same generation: confident serve. New generation: the 0.5
         // penalty drops it below the 0.6 threshold, so the request
         // leads again — warm-started at the old surface.
-        match plane.admit(key(), Some(0), 1, 10.0) {
+        match plane.admit(key(), Some(0), 1, 10.0, ProbeOcc::default()) {
             Admission::Lead { warm_start: Some(3), .. } => {}
             _ => panic!("generation bump must demote the estimate to a warm start"),
+        }
+    }
+
+    #[test]
+    fn occupancy_shift_demotes_estimate_to_warm_start() {
+        let plane = ProbePlane::default();
+        let quiet = ProbeOcc::default();
+        let convoy = ProbeOcc { epoch: 4, streams: 48 };
+        // Learn the network on a quiet link.
+        let guard = match plane.admit(key(), Some(0), 0, 10.0, quiet) {
+            Admission::Lead { guard, .. } => guard,
+            _ => panic!("cold plane must lead"),
+        };
+        plane.lead_converged(key(), Some(0), guard, outcome(3, true), 0, quiet);
+        plane.finish_led(
+            key(),
+            Some(0),
+            Some(outcome(3, true)),
+            &report(50.0, &[Params::new(4, 4, 2)]),
+            10.0,
+            0,
+            quiet,
+        );
+        // Same occupancy class: confident serve.
+        match plane.admit(key(), Some(0), 0, 10.0, quiet) {
+            Admission::Serve(Some(3)) => {}
+            _ => panic!("quiet estimate serves quiet admissions"),
+        }
+        // A convoy arrives: quiet knowledge is demoted to a warm start
+        // and the request re-samples under the contention it will
+        // actually transfer under.
+        let guard = match plane.admit(key(), Some(0), 0, 10.0, convoy) {
+            Admission::Lead { guard, warm_start: Some(3) } => guard,
+            _ => panic!("occupancy shift must demote the estimate to a warm start"),
+        };
+        // The convoy-learned surface serves convoy admissions, but not
+        // quiet ones after the convoy drains.
+        plane.lead_converged(key(), Some(0), guard, outcome(7, true), 0, convoy);
+        match plane.admit(key(), Some(0), 0, 10.0, convoy) {
+            Admission::Serve(Some(7)) => {}
+            _ => panic!("convoy estimate serves convoy admissions"),
+        }
+        match plane.admit(key(), Some(0), 0, 10.0, quiet) {
+            Admission::Lead { warm_start: Some(7), .. } => {}
+            _ => panic!("convoy knowledge must not be served as quiet-network truth"),
         }
     }
 
@@ -635,8 +698,8 @@ mod tests {
         // Two bulk phases with different params ⇒ one drift re-tune.
         let drifted = report(0.0, &[Params::new(4, 4, 2), Params::new(8, 2, 2)]);
         assert_eq!(drifted.bulk_retunes(), 1);
-        plane.finish_passive(key(), Some(0), Some(outcome(4, false)), &drifted, 0);
-        match plane.admit(key(), Some(0), 0, 10.0) {
+        plane.finish_passive(key(), Some(0), Some(outcome(4, false)), &drifted, 0, ProbeOcc::default());
+        match plane.admit(key(), Some(0), 0, 10.0, ProbeOcc::default()) {
             Admission::Serve(Some(4)) => {}
             _ => panic!("drift confidence (0.7) clears the serve threshold"),
         }
@@ -650,7 +713,7 @@ mod tests {
         });
         plane.starve_budget(key());
         assert_eq!(plane.budget(key()).available_mb(), 0.0);
-        match plane.admit(key(), Some(0), 0, 50.0) {
+        match plane.admit(key(), Some(0), 0, 50.0, ProbeOcc::default()) {
             Admission::Serve(None) => {}
             _ => panic!("starved budget must force estimate reuse"),
         }
@@ -662,9 +725,10 @@ mod tests {
             None,
             &report(0.0, &[Params::new(4, 4, 2)]),
             0,
+            ProbeOcc::default(),
         );
         assert!(plane.budget(key()).available_mb() > 0.0);
-        match plane.admit(key(), Some(0), 0, 10.0) {
+        match plane.admit(key(), Some(0), 0, 10.0, ProbeOcc::default()) {
             Admission::Lead { .. } => {}
             _ => panic!("earned budget must allow probing again"),
         }
@@ -683,6 +747,7 @@ mod tests {
             None,
             &report(0.0, &[Params::new(4, 4, 2), Params::new(4, 4, 2)]),
             0,
+            ProbeOcc::default(),
         );
         let available = plane.budget(key()).available_mb();
         assert!((available - 100.0).abs() < 1e-6, "earned {available}");
@@ -691,15 +756,15 @@ mod tests {
     #[test]
     fn unsampled_leader_warm_starts_but_never_suppresses_sampling() {
         let plane = ProbePlane::default();
-        let guard = match plane.admit(key(), Some(0), 0, 10.0) {
+        let guard = match plane.admit(key(), Some(0), 0, 10.0, ProbeOcc::default()) {
             Admission::Lead { guard, .. } => guard,
             _ => panic!("cold plane must lead"),
         };
         // Short-transfer fast path: the ladder ran zero samples. The
         // surface is an unmeasured guess — followers must not inherit
         // it as a result, and later requests must still sample.
-        plane.lead_converged(key(), Some(0), guard, outcome(5, false), 0);
-        match plane.admit(key(), Some(0), 0, 10.0) {
+        plane.lead_converged(key(), Some(0), guard, outcome(5, false), 0, ProbeOcc::default());
+        match plane.admit(key(), Some(0), 0, 10.0, ProbeOcc::default()) {
             Admission::Lead { warm_start: Some(5), .. } => {}
             Admission::Serve(_) => panic!("unmeasured guess must not be served outright"),
             _ => panic!("next request must lead, warm-started at the guess"),
@@ -715,9 +780,10 @@ mod tests {
                 &report(0.0, &[Params::new(4, 4, 2)]),
                 10.0,
                 0,
-            );
+            ProbeOcc::default(),
+        );
         }
-        match plane.admit(key(), Some(0), 0, 10.0) {
+        match plane.admit(key(), Some(0), 0, 10.0, ProbeOcc::default()) {
             Admission::Serve(Some(5)) => {}
             _ => panic!("bulk-confirmed estimate clears the threshold"),
         }
@@ -737,8 +803,9 @@ mod tests {
             &drifted,
             10.0,
             0,
+            ProbeOcc::default(),
         );
-        let (est, confidence) = plane.estimates.current(key(), 0, 0).unwrap();
+        let (est, confidence) = plane.estimates.current(key(), 0, 0, ProbeOcc::default()).unwrap();
         assert_eq!(est.surface_idx, 8);
         assert!(
             (confidence - plane.config.estimate.drift_confidence).abs() < 0.01,
@@ -749,18 +816,18 @@ mod tests {
     #[test]
     fn followers_release_at_convergence_not_transfer_end() {
         let plane = Arc::new(ProbePlane::default());
-        let guard = match plane.admit(key(), Some(0), 0, 10.0) {
+        let guard = match plane.admit(key(), Some(0), 0, 10.0, ProbeOcc::default()) {
             Admission::Lead { guard, .. } => guard,
             _ => panic!("cold plane must lead"),
         };
         let follower = {
             let plane = plane.clone();
-            std::thread::spawn(move || plane.admit(key(), Some(0), 0, 10.0))
+            std::thread::spawn(move || plane.admit(key(), Some(0), 0, 10.0, ProbeOcc::default()))
         };
         // Simulate the mid-run convergence hook firing while the
         // leader's bulk transfer is still in progress.
         std::thread::sleep(Duration::from_millis(10));
-        plane.lead_converged(key(), Some(0), guard, outcome(2, true), 0);
+        plane.lead_converged(key(), Some(0), guard, outcome(2, true), 0, ProbeOcc::default());
         match follower.join().unwrap() {
             // Piggybacked on the converged ladder, or admitted after the
             // estimate was already recorded — either way, no re-probe.
@@ -777,6 +844,7 @@ mod tests {
             &report(50.0, &[Params::new(4, 4, 2)]),
             10.0,
             0,
+            ProbeOcc::default(),
         );
     }
 }

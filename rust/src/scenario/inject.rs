@@ -22,6 +22,7 @@
 //! applied at fixed points in the replay's op order.
 
 use crate::fabric::{ShardKey, ShardRouter};
+use crate::netplane::LinkPlane;
 use crate::probe::ProbePlane;
 use crate::sim::fault::FaultBoard;
 use crate::sim::testbed::TestbedId;
@@ -37,6 +38,14 @@ pub enum Fault {
     LoadStep { network: TestbedId, delta: f64 },
     /// Clear the network's load step.
     ClearLoad { network: TestbedId },
+    /// Park an ambient convoy on the network's shared link: a fleet of
+    /// contending transfers offering `offered_mbps` across `streams`
+    /// TCP streams. Every transfer served while it stands sees it as
+    /// live neighbor pressure through the contention plane (replaces
+    /// any previous convoy on the network).
+    Contention { network: TestbedId, offered_mbps: f64, streams: u32 },
+    /// Drain the network's ambient convoy.
+    ClearContention { network: TestbedId },
     /// Drain the shard's probe budget to zero.
     StarveBudget { key: ShardKey },
     /// Forcibly evict the shard (spill + remove; rematerializes on the
@@ -64,6 +73,12 @@ impl Fault {
                 format!("load-step {} {delta:+.2}", network.name())
             }
             Fault::ClearLoad { network } => format!("clear-load {}", network.name()),
+            Fault::Contention { network, offered_mbps, streams } => {
+                format!("contention {} {offered_mbps:.0} Mbps / {streams} streams", network.name())
+            }
+            Fault::ClearContention { network } => {
+                format!("clear-contention {}", network.name())
+            }
             Fault::StarveBudget { key } => format!("starve-budget {key}"),
             Fault::EvictShard { key } => format!("evict-shard {key}"),
             Fault::ForceRefresh { key } => format!("force-refresh {key}"),
@@ -85,6 +100,7 @@ pub struct FaultTargets<'a> {
     pub board: &'a FaultBoard,
     pub plane: &'a ProbePlane,
     pub router: &'a ShardRouter,
+    pub links: &'a LinkPlane,
 }
 
 /// What applying a fault additionally tells the timeline recorder.
@@ -111,6 +127,10 @@ pub fn apply(fault: &Fault, targets: &FaultTargets<'_>, refresh_paused: &mut boo
         Fault::RestoreLink { network } => targets.board.restore_link(*network),
         Fault::LoadStep { network, delta } => targets.board.load_step(*network, *delta),
         Fault::ClearLoad { network } => targets.board.clear_load(*network),
+        Fault::Contention { network, offered_mbps, streams } => {
+            targets.links.set_ambient(*network, *offered_mbps, *streams);
+        }
+        Fault::ClearContention { network } => targets.links.clear_ambient(*network),
         Fault::StarveBudget { key } => targets.plane.starve_budget(*key),
         Fault::EvictShard { key } => {
             if !targets.router.evict(key) {
@@ -147,6 +167,8 @@ mod tests {
             Fault::RestoreLink { network: TestbedId::Xsede },
             Fault::LoadStep { network: TestbedId::Xsede, delta: 0.25 },
             Fault::ClearLoad { network: TestbedId::Xsede },
+            Fault::Contention { network: TestbedId::Xsede, offered_mbps: 6_000.0, streams: 48 },
+            Fault::ClearContention { network: TestbedId::Xsede },
             Fault::StarveBudget { key },
             Fault::EvictShard { key },
             Fault::ForceRefresh { key },
@@ -156,6 +178,8 @@ mod tests {
         let mut seen: Vec<String> = faults.iter().map(|f| f.describe()).collect();
         assert_eq!(seen[0], "degrade-link xsede 0.50");
         assert_eq!(seen[2], "load-step xsede +0.25");
+        assert_eq!(seen[4], "contention xsede 6000 Mbps / 48 streams");
+        assert_eq!(seen[5], "clear-contention xsede");
         seen.sort();
         seen.dedup();
         assert_eq!(seen.len(), faults.len(), "descriptions must be distinct");
@@ -171,12 +195,27 @@ mod tests {
         let kb = std::sync::Arc::new(crate::offline::knowledge::KnowledgeBase::empty());
         let router =
             ShardRouter::open(&dir, kb, crate::fabric::FabricConfig::default()).unwrap();
-        let targets = FaultTargets { board: &board, plane: &plane, router: &router };
+        let links = LinkPlane::shared();
+        let targets = FaultTargets { board: &board, plane: &plane, router: &router, links: &links };
         let mut paused = false;
         assert_eq!(apply(&Fault::PauseRefresh, &targets, &mut paused), Applied::Done);
         assert!(paused);
         assert_eq!(apply(&Fault::ResumeRefresh, &targets, &mut paused), Applied::Done);
         assert!(!paused);
+        // Contention faults park and drain the ambient convoy.
+        let fault = Fault::Contention {
+            network: TestbedId::Xsede,
+            offered_mbps: 4_000.0,
+            streams: 32,
+        };
+        assert_eq!(apply(&fault, &targets, &mut paused), Applied::Done);
+        let occ = links.occupancy(TestbedId::Xsede);
+        assert_eq!((occ.ambient_mbps, occ.ambient_streams), (4_000.0, 32));
+        assert_eq!(
+            apply(&Fault::ClearContention { network: TestbedId::Xsede }, &targets, &mut paused),
+            Applied::Done
+        );
+        assert_eq!(links.occupancy(TestbedId::Xsede).ambient_mbps, 0.0);
         // Evicting a shard that was never materialized is a no-op the
         // timeline must not record (a generation-reset license).
         let key = ShardKey::new(TestbedId::Xsede, SizeClass::Large);

@@ -22,6 +22,15 @@
 //!   (which the checker accounts for explicitly).
 //! * **budget-non-negative** — the probe budget never goes negative
 //!   (nor above capacity, which the bucket enforces by construction).
+//! * **occupancy-drained** — the contention plane's registered
+//!   occupancy is never negative and returns exactly to zero after
+//!   every settlement: a served transfer must not leak its link
+//!   registration (ambient convoys injected by a `contention` fault
+//!   are tracked separately and do not count).
+//! * **offered-within-capacity** — the peak carried load any transfer
+//!   observed on its link (self + neighbors + ambient) never exceeds
+//!   the network's fault-scaled capacity, with the capacity factor
+//!   tracked from the degrade/restore fault schedule.
 //! * **goodput-floor** — computed by the runner against a fault-free
 //!   control replay; reported through the same [`InvariantReport`]
 //!   shape.
@@ -31,6 +40,7 @@
 use super::inject::Fault;
 use crate::fabric::ShardKey;
 use crate::probe::ProbeMode;
+use crate::sim::testbed::{Testbed, TestbedId};
 use std::collections::HashMap;
 
 /// The estimate the runner peeked immediately before a sequential
@@ -41,8 +51,11 @@ pub struct EstimateObs {
     pub cluster: usize,
     pub surface: usize,
     pub generation: u64,
-    /// Its decayed confidence — under the serving generation, penalty
-    /// included — cleared the plane's serve threshold at admission.
+    /// Link-occupancy streams the estimate was recorded under.
+    pub occ_streams: u32,
+    /// Its decayed confidence — under the serving generation,
+    /// generation and occupancy penalties included — cleared the
+    /// plane's serve threshold at admission.
     pub confident: bool,
 }
 
@@ -80,6 +93,15 @@ pub struct ResponseEvent {
     /// Served inside a coalesced burst (admission raced by design; the
     /// estimate guards defer to the piggyback checker there).
     pub coalesced: bool,
+    /// Registered transfers left on the link plane after this
+    /// response's settlement (ambient excluded) — must always be 0 in
+    /// the sequential replay.
+    pub occ_transfers_after: usize,
+    /// Their summed offered rate (Mbps) after settlement — must be 0.
+    pub occ_offered_after: f64,
+    /// Peak carried load this transfer observed on its link (self +
+    /// neighbors + ambient, Mbps) — bounded by the scaled capacity.
+    pub occ_peak_offered: f64,
 }
 
 /// One entry of the replay timeline.
@@ -125,6 +147,8 @@ pub struct CheckSpec {
 pub fn check_timeline(timeline: &[Event], spec: &CheckSpec) -> Vec<InvariantReport> {
     let mut reports = vec![
         budget_non_negative(timeline),
+        occupancy_drained(timeline),
+        offered_within_capacity(timeline),
         monotone_generations(timeline),
         estimate_cluster_guard(timeline),
         estimate_generation_guard(timeline),
@@ -156,6 +180,67 @@ fn budget_non_negative(timeline: &[Event]) -> InvariantReport {
                     r.id, r.key, r.budget_after_mb
                 ),
             });
+        }
+    }
+    report
+}
+
+/// The link plane's registered occupancy is never negative and returns
+/// exactly to zero after every settlement — a served transfer must not
+/// leak its registration. Ambient convoys are tracked separately by
+/// the plane, so they never mask (or excuse) a leak.
+fn occupancy_drained(timeline: &[Event]) -> InvariantReport {
+    let mut report =
+        InvariantReport { name: "occupancy-drained", checked: 0, violations: vec![] };
+    for r in responses(timeline) {
+        report.checked += 1;
+        if r.occ_offered_after.abs() > 1e-6 || r.occ_transfers_after != 0 {
+            report.violations.push(Violation {
+                at_s: r.t_s,
+                detail: format!(
+                    "response {} on {} left {} transfer(s) / {:.3} Mbps registered after \
+                     settlement",
+                    r.id, r.key, r.occ_transfers_after, r.occ_offered_after
+                ),
+            });
+        }
+    }
+    report
+}
+
+/// The peak carried load a transfer observed on its link never exceeds
+/// the network's scaled capacity — the capacity factor is tracked from
+/// the degrade/restore fault schedule, exactly as the fault board
+/// clamps it.
+fn offered_within_capacity(timeline: &[Event]) -> InvariantReport {
+    let mut report =
+        InvariantReport { name: "offered-within-capacity", checked: 0, violations: vec![] };
+    let mut factor: HashMap<TestbedId, f64> = HashMap::new();
+    for event in timeline {
+        match event {
+            Event::Fault { fault: Fault::DegradeLink { network, factor: f }, .. } => {
+                let f = if f.is_finite() { f.clamp(0.01, 1.0) } else { 1.0 };
+                factor.insert(*network, f);
+            }
+            Event::Fault { fault: Fault::RestoreLink { network }, .. } => {
+                factor.remove(network);
+            }
+            Event::Response(r) if r.occ_peak_offered > 0.0 => {
+                report.checked += 1;
+                let nominal = Testbed::by_id(r.key.network).path.link.bandwidth_mbps;
+                let cap = nominal * factor.get(&r.key.network).copied().unwrap_or(1.0);
+                if r.occ_peak_offered > cap + 1e-6 {
+                    report.violations.push(Violation {
+                        at_s: r.t_s,
+                        detail: format!(
+                            "response {} on {} observed {:.0} Mbps carried on a {:.0} Mbps \
+                             (scaled) link",
+                            r.id, r.key, r.occ_peak_offered, cap
+                        ),
+                    });
+                }
+            }
+            _ => {}
         }
     }
     report
@@ -398,7 +483,14 @@ mod tests {
             budget_forced: false,
             piggyback: None,
             coalesced: false,
+            occ_transfers_after: 0,
+            occ_offered_after: 0.0,
+            occ_peak_offered: 800.0,
         }
+    }
+
+    fn est_obs(cluster: usize, surface: usize, generation: u64, confident: bool) -> EstimateObs {
+        EstimateObs { cluster, surface, generation, occ_streams: 0, confident }
     }
 
     #[test]
@@ -408,12 +500,12 @@ mod tests {
             Event::Refresh { t_s: 2.0, key: key(), generation: 1, cause: "forced".into() },
             Event::Response(ResponseEvent {
                 mode: Some(ProbeMode::EstimateServed),
-                est: Some(EstimateObs { cluster: 0, surface: 3, generation: 1, confident: true }),
+                est: Some(est_obs(0, 3, 1, true)),
                 ..response(3, 1)
             }),
         ];
         let reports = check_timeline(&timeline, &CheckSpec::default());
-        assert_eq!(reports.len(), 5);
+        assert_eq!(reports.len(), 7);
         for report in &reports {
             assert!(report.ok(), "{} flagged a clean timeline: {:?}", report.name, report.violations);
         }
@@ -428,7 +520,7 @@ mod tests {
             Event::Refresh { t_s: 1.0, key: key(), generation: 1, cause: "forced".into() },
             Event::Response(ResponseEvent {
                 mode: Some(ProbeMode::EstimateServed),
-                est: Some(EstimateObs { cluster: 0, surface: 3, generation: 0, confident: true }),
+                est: Some(est_obs(0, 3, 0, true)),
                 ..response(2, 1)
             }),
         ];
@@ -442,12 +534,12 @@ mod tests {
     fn cluster_guard_catches_mismatch_and_unconfident_serves() {
         let mismatched = Event::Response(ResponseEvent {
             mode: Some(ProbeMode::EstimateServed),
-            est: Some(EstimateObs { cluster: 2, surface: 1, generation: 0, confident: true }),
+            est: Some(est_obs(2, 1, 0, true)),
             ..response(1, 0)
         });
         let unconfident = Event::Response(ResponseEvent {
             mode: Some(ProbeMode::EstimateServed),
-            est: Some(EstimateObs { cluster: 0, surface: 1, generation: 0, confident: false }),
+            est: Some(est_obs(0, 1, 0, false)),
             ..response(2, 0)
         });
         // Budget-forced and coalesced serves are exempt.
@@ -528,6 +620,65 @@ mod tests {
         let starve = reports.iter().find(|r| r.name == "starvation-serves").unwrap();
         assert_eq!(starve.checked, 2);
         assert_eq!(starve.violations.len(), 1, "the led response after starvation is flagged");
+    }
+
+    #[test]
+    fn occupancy_checker_flags_leaked_registrations() {
+        let clean = Event::Response(response(1, 0));
+        let leaked = Event::Response(ResponseEvent {
+            occ_transfers_after: 1,
+            occ_offered_after: 750.0,
+            ..response(2, 0)
+        });
+        let negative = Event::Response(ResponseEvent {
+            occ_offered_after: -3.0,
+            ..response(3, 0)
+        });
+        let reports = check_timeline(&[clean, leaked, negative], &CheckSpec::default());
+        let occ = reports.iter().find(|r| r.name == "occupancy-drained").unwrap();
+        assert_eq!(occ.checked, 3);
+        assert_eq!(occ.violations.len(), 2);
+        assert!(occ.violations[0].detail.contains("1 transfer(s)"));
+    }
+
+    #[test]
+    fn capacity_checker_tracks_degrade_and_restore() {
+        // 9 Gbps carried on a healthy 10 Gbps xsede link: fine.
+        let healthy = Event::Response(ResponseEvent {
+            occ_peak_offered: 9_000.0,
+            ..response(1, 0)
+        });
+        // The link degrades to 40% (4 Gbps): the same carried load must
+        // now be flagged...
+        let degrade = Event::Fault {
+            t_s: 1.5,
+            fault: Fault::DegradeLink { network: TestbedId::Xsede, factor: 0.4 },
+        };
+        let over = Event::Response(ResponseEvent {
+            occ_peak_offered: 9_000.0,
+            ..response(2, 0)
+        });
+        let within = Event::Response(ResponseEvent {
+            occ_peak_offered: 3_900.0,
+            ..response(3, 0)
+        });
+        // ...and the restore lifts the bound again.
+        let restore = Event::Fault {
+            t_s: 3.5,
+            fault: Fault::RestoreLink { network: TestbedId::Xsede },
+        };
+        let after = Event::Response(ResponseEvent {
+            occ_peak_offered: 9_000.0,
+            ..response(4, 0)
+        });
+        let reports = check_timeline(
+            &[healthy, degrade, over, within, restore, after],
+            &CheckSpec::default(),
+        );
+        let cap = reports.iter().find(|r| r.name == "offered-within-capacity").unwrap();
+        assert_eq!(cap.checked, 4);
+        assert_eq!(cap.violations.len(), 1);
+        assert!(cap.violations[0].detail.contains("4000 Mbps"), "{:?}", cap.violations);
     }
 
     #[test]

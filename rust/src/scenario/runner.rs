@@ -42,10 +42,11 @@ use crate::coordinator::{
 use crate::fabric::{FabricConfig, Shard, ShardConfig, ShardKey, ShardMapConfig, ShardRouter};
 use crate::feedback::{IngestConfig, KbSnapshot, RefreshPolicy};
 use crate::logs::generate::{generate, GenConfig};
+use crate::netplane::{LinkPlane, LinkPlaneConfig, PlaneMode};
 use crate::offline::kmeans::NativeAssign;
 use crate::offline::pipeline::{build, OfflineConfig};
 use crate::probe::{
-    Admission, BudgetConfig, EstimateConfig, ProbeConfig, ProbeMode, ProbePlane,
+    Admission, BudgetConfig, EstimateConfig, ProbeConfig, ProbeMode, ProbeOcc, ProbePlane,
 };
 use crate::sim::dataset::Dataset;
 use crate::sim::fault::FaultBoard;
@@ -168,6 +169,12 @@ struct ReplayCtx {
     coordinator: Coordinator,
     router: Arc<ShardRouter>,
     plane: Arc<ProbePlane>,
+    /// The shared-link contention plane: always attached (shared mode),
+    /// so served transfers register/release occupancy and the
+    /// `contention` fault's ambient convoys actually press on them.
+    /// Sequential replay keeps it deterministic: at most one registered
+    /// transfer at any instant, so occupancy = ambient + at-most-self.
+    links: Arc<LinkPlane>,
     /// Attached only on the faulted replay; the control replay serves
     /// pristine testbeds.
     board: Option<Arc<FaultBoard>>,
@@ -175,6 +182,14 @@ struct ReplayCtx {
     seed: u64,
     /// Virtual submission-time base: the day after the history ends.
     t_base: f64,
+}
+
+/// The link occupancy a request on `key`'s network would be admitted
+/// under right now (ambient + registered; nothing is registered
+/// between sequential requests).
+fn admission_occ(ctx: &ReplayCtx, network: crate::sim::testbed::TestbedId) -> ProbeOcc {
+    let occ = ctx.links.occupancy(network);
+    ProbeOcc { epoch: occ.epoch, streams: occ.streams.saturating_add(occ.ambient_streams) }
 }
 
 fn request_seed(seed: u64, id: u64) -> u64 {
@@ -235,11 +250,16 @@ fn shaped_testbed(ctx: &ReplayCtx, key: ShardKey) -> Testbed {
 
 fn peek_estimate(ctx: &ReplayCtx, key: ShardKey, serving_generation: u64) -> Option<EstimateObs> {
     let config = &ctx.plane.config().estimate;
+    // Mirror the admission computation exactly: generation AND
+    // occupancy penalties included, under the occupancy the admission
+    // will observe.
+    let occ_now = admission_occ(ctx, key.network);
     ctx.plane.estimates().peek(key).map(|e| EstimateObs {
         cluster: e.cluster_idx,
         surface: e.surface_idx,
         generation: e.generation,
-        confident: e.decayed(config, serving_generation) >= config.serve_threshold,
+        occ_streams: e.occ.streams,
+        confident: e.decayed_for(config, serving_generation, occ_now) >= config.serve_threshold,
     })
 }
 
@@ -310,9 +330,17 @@ fn replay_in(
     let kb = Arc::new(build(&rows, &OfflineConfig::default(), &mut NativeAssign)?);
     let t_base = (scenario.history_days + 1) as f64 * DAY_S;
 
-    // --- Stack: plane + fault board + fabric + taped coordinator -----------
+    // --- Stack: plane + links + fault board + fabric + coordinator ---------
     let plane = Arc::new(ProbePlane::new(replay_probe_config(scenario)));
     let board = inject_faults.then(|| Arc::new(FaultBoard::new()));
+    // The contention plane shares the replay's fault board so a
+    // degraded link narrows its capacity ceiling too. Sequential
+    // serving keeps occupancy deterministic.
+    let links = Arc::new(LinkPlane::with_config(
+        PlaneMode::Shared,
+        LinkPlaneConfig::default(),
+        board.clone(),
+    ));
     let tap = Arc::new(ResponseTap::new());
     let router = Arc::new(ShardRouter::open(
         &scratch.join("fabric"),
@@ -329,9 +357,10 @@ fn replay_in(
             probe: Some(plane.clone()),
             faults: board.clone(),
             tap: Some(tap.clone()),
+            links: Some(links.clone()),
         },
     );
-    let ctx = ReplayCtx { coordinator, router, plane, board, tap, seed, t_base };
+    let ctx = ReplayCtx { coordinator, router, plane, links, board, tap, seed, t_base };
 
     // --- Schedule: merge arrivals, bursts, and faults -----------------------
     let mut ops: Vec<Op> = Vec::new();
@@ -382,8 +411,12 @@ fn replay_in(
                     continue; // the control run lives in a fault-free world
                 }
                 let board = ctx.board.as_ref().expect("faulted replay has a board");
-                let targets =
-                    FaultTargets { board, plane: &ctx.plane, router: &ctx.router };
+                let targets = FaultTargets {
+                    board,
+                    plane: &ctx.plane,
+                    router: &ctx.router,
+                    links: &ctx.links,
+                };
                 match inject::apply(&event.fault, &targets, &mut refresh_paused) {
                     inject::Applied::Done => {
                         timeline.push(Event::Fault { t_s: event.at_s, fault: event.fault });
@@ -500,6 +533,7 @@ fn serve_sequential(
         "request {id} routed to {:?}, scripted for {key}",
         tape.shard_key
     );
+    let occ_after = ctx.links.occupancy(key.network);
     Ok(ResponseEvent {
         t_s,
         id,
@@ -518,6 +552,11 @@ fn serve_sequential(
         budget_forced,
         piggyback: None,
         coalesced: false,
+        occ_transfers_after: occ_after.transfers,
+        occ_offered_after: occ_after.offered_mbps,
+        occ_peak_offered: tape
+            .contention
+            .map_or(0.0, |exposure| exposure.peak_carried_mbps),
     })
 }
 
@@ -538,6 +577,12 @@ fn serve_coalesced(ctx: &ReplayCtx, burst: &Burst, ids: &[u64]) -> Result<Vec<Re
     let cluster = snapshot.kb.query_idx(&TransferEnv::request_info(&testbed, &dataset));
     let est0 = peek_estimate(ctx, key, generation);
     let expected_mb = ctx.plane.expected_sample_mb(dataset.total_mb());
+    // One admission-time occupancy for the whole cohort: nothing
+    // registers on the link between the burst's admissions (execution
+    // is staged after them), so the shared observation is exactly what
+    // each member would see — and it keeps threaded admissions off the
+    // link plane entirely, preserving byte-determinism.
+    let occ = admission_occ(ctx, key.network);
 
     // Concurrent follower admissions transiently reserve-and-refund
     // budget, so with less headroom than the whole cohort's worth of
@@ -550,18 +595,18 @@ fn serve_coalesced(ctx: &ReplayCtx, burst: &Burst, ids: &[u64]) -> Result<Vec<Re
         let mut events = Vec::with_capacity(ids.len());
         for &id in ids {
             let est = peek_estimate(ctx, key, generation);
-            let admission = ctx.plane.admit(key, cluster, generation, expected_mb);
+            let admission = ctx.plane.admit(key, cluster, generation, expected_mb, occ);
             let forced =
                 matches!(&admission, Admission::Serve(_)) && !est.is_some_and(|e| e.confident);
             events.push(run_admitted(
                 ctx, &testbed, dataset, key, cluster, generation, &snapshot, &shard,
-                burst.at_s, id, admission, expected_mb, est, forced,
+                burst.at_s, id, admission, expected_mb, est, forced, occ,
             ));
         }
         return Ok(events);
     }
 
-    let leader_admission = ctx.plane.admit(key, cluster, generation, expected_mb);
+    let leader_admission = ctx.plane.admit(key, cluster, generation, expected_mb, occ);
     let mut events = Vec::with_capacity(ids.len());
     match leader_admission {
         Admission::Lead { guard, warm_start } => {
@@ -573,7 +618,7 @@ fn serve_coalesced(ctx: &ReplayCtx, burst: &Burst, ids: &[u64]) -> Result<Vec<Re
                 .iter()
                 .map(|_| {
                     let plane = ctx.plane.clone();
-                    std::thread::spawn(move || plane.admit(key, cluster, generation, expected_mb))
+                    std::thread::spawn(move || plane.admit(key, cluster, generation, expected_mb, occ))
                 })
                 .collect();
             let deadline = Instant::now() + Duration::from_secs(30);
@@ -611,6 +656,7 @@ fn serve_coalesced(ctx: &ReplayCtx, burst: &Burst, ids: &[u64]) -> Result<Vec<Re
                 expected_mb,
                 est0,
                 false,
+                occ,
             ));
             for (offset, handle) in handles.into_iter().enumerate() {
                 let admission =
@@ -635,6 +681,7 @@ fn serve_coalesced(ctx: &ReplayCtx, burst: &Burst, ids: &[u64]) -> Result<Vec<Re
                     expected_mb,
                     None,
                     budget_forced,
+                    occ,
                 ));
             }
         }
@@ -647,16 +694,16 @@ fn serve_coalesced(ctx: &ReplayCtx, burst: &Burst, ids: &[u64]) -> Result<Vec<Re
                 matches!(&other, Admission::Serve(_)) && !est0.is_some_and(|e| e.confident);
             events.push(run_admitted(
                 ctx, &testbed, dataset, key, cluster, generation, &snapshot, &shard,
-                burst.at_s, ids[0], other, expected_mb, est0, forced,
+                burst.at_s, ids[0], other, expected_mb, est0, forced, occ,
             ));
             for &id in &ids[1..] {
                 let est = peek_estimate(ctx, key, generation);
-                let admission = ctx.plane.admit(key, cluster, generation, expected_mb);
+                let admission = ctx.plane.admit(key, cluster, generation, expected_mb, occ);
                 let forced = matches!(&admission, Admission::Serve(_))
                     && !est.is_some_and(|e| e.confident);
                 events.push(run_admitted(
                     ctx, &testbed, dataset, key, cluster, generation, &snapshot, &shard,
-                    burst.at_s, id, admission, expected_mb, est, forced,
+                    burst.at_s, id, admission, expected_mb, est, forced, occ,
                 ));
             }
         }
@@ -685,11 +732,16 @@ fn run_admitted(
     expected_mb: f64,
     est: Option<EstimateObs>,
     budget_forced: bool,
+    occ: ProbeOcc,
 ) -> ResponseEvent {
     let seed = request_seed(ctx.seed, id);
     let t_submit = ctx.t_base + t_s;
     let state = hidden_state_for(testbed, seed, t_submit);
     let mut env = TransferEnv::new(testbed.clone(), dataset, state, seed);
+    // Register on the shared link exactly like the worker path does —
+    // execution is sequential here, so the registration (and its
+    // release below) is deterministic.
+    env.attach_link(ctx.links.clone().admit(key.network, id));
     // What a piggybacked follower adopted, noted before the admission
     // is consumed by the shared execution body.
     let piggyback = match &admission {
@@ -711,7 +763,10 @@ fn run_admitted(
         &snapshot.kb,
         &mut env,
         admission,
+        occ,
     );
+    let exposure = env.release_link();
+    let occ_after = ctx.links.occupancy(key.network);
     // Close the loop the way the worker path does: drift signal and
     // completed-log ingestion to the serving shard, plus the pooled
     // coordinator metrics.
@@ -754,6 +809,9 @@ fn run_admitted(
         budget_forced,
         piggyback,
         coalesced: true,
+        occ_transfers_after: occ_after.transfers,
+        occ_offered_after: occ_after.offered_mbps,
+        occ_peak_offered: exposure.map_or(0.0, |e| e.peak_carried_mbps),
     }
 }
 
@@ -784,10 +842,11 @@ pub fn render_timeline(timeline: &[Event]) -> String {
                 let cluster = r.cluster.map_or_else(|| "-".to_string(), |c| format!("c{c}"));
                 let est = match &r.est {
                     Some(e) => format!(
-                        "c{}/s{}@g{}{}",
+                        "c{}/s{}@g{}o{}{}",
                         e.cluster,
                         e.surface,
                         e.generation,
+                        e.occ_streams,
                         if e.confident { "+" } else { "-" }
                     ),
                     None => "-".to_string(),
@@ -799,7 +858,7 @@ pub fn render_timeline(timeline: &[Event]) -> String {
                 out.push_str(&format!(
                     "[{:>8.1}] response id={:<3} key={} gen={} borrowed={} mode={} \
                      samples={} retunes={} mb={:.0} s={:.3} goodput={:.1} budget={:.3} \
-                     cluster={} est={} pig={}{}{}\n",
+                     cluster={} est={} pig={} occ={}/{:.0} peak={:.0}{}{}\n",
                     r.t_s,
                     r.id,
                     r.key,
@@ -815,6 +874,9 @@ pub fn render_timeline(timeline: &[Event]) -> String {
                     cluster,
                     est,
                     pig,
+                    r.occ_transfers_after,
+                    r.occ_offered_after,
+                    r.occ_peak_offered,
                     if r.budget_forced { " budget-forced" } else { "" },
                     if r.coalesced { " coalesced" } else { "" },
                 ));
@@ -920,18 +982,23 @@ mod tests {
                     cluster: 1,
                     surface: 4,
                     generation: 2,
+                    occ_streams: 48,
                     confident: true,
                 }),
                 budget_forced: false,
                 piggyback: None,
                 coalesced: false,
+                occ_transfers_after: 0,
+                occ_offered_after: 0.0,
+                occ_peak_offered: 7250.0,
             }),
         ];
         let rendered = render_timeline(&timeline);
         assert_eq!(rendered, render_timeline(&timeline), "rendering is a pure function");
         assert!(rendered.contains("fault    degrade-link xsede 0.50"), "{rendered}");
         assert!(rendered.contains("refresh  xsede/large gen=2 (forced)"), "{rendered}");
-        assert!(rendered.contains("est=c1/s4@g2+"), "{rendered}");
+        assert!(rendered.contains("est=c1/s4@g2o48+"), "{rendered}");
+        assert!(rendered.contains("occ=0/0 peak=7250"), "{rendered}");
         assert!(rendered.contains("goodput=2461.5"), "{rendered}");
     }
 }

@@ -75,12 +75,13 @@ pub struct Scenario {
 }
 
 /// The bundled scenario library: (name, fixture text).
-const BUNDLED: [(&str, &str); 5] = [
+const BUNDLED: [(&str, &str); 6] = [
     ("flash-crowd", include_str!("../../scenarios/flash-crowd.scn")),
     ("brownout", include_str!("../../scenarios/brownout.scn")),
     ("stale-kb", include_str!("../../scenarios/stale-kb.scn")),
     ("probe-famine", include_str!("../../scenarios/probe-famine.scn")),
     ("shard-churn", include_str!("../../scenarios/shard-churn.scn")),
+    ("convoy", include_str!("../../scenarios/convoy.scn")),
 ];
 
 /// Names of the bundled scenarios, in library order.
@@ -287,6 +288,21 @@ impl Scenario {
                             delta: parse_f64(arg(1)?, "load delta")?,
                         },
                         "clear-load" => Fault::ClearLoad { network: parse_network(arg(0)?)? },
+                        "contention" => {
+                            let network = parse_network(arg(0)?)?;
+                            let offered_mbps = parse_f64(arg(1)?, "contention rate")?;
+                            let streams = parse_u64(arg(2)?, "contention streams")? as u32;
+                            anyhow::ensure!(
+                                offered_mbps.is_finite() && offered_mbps > 0.0 && streams >= 1,
+                                "{}: contention NETWORK RATE_MBPS STREAMS needs rate > 0 \
+                                 and streams >= 1",
+                                context()
+                            );
+                            Fault::Contention { network, offered_mbps, streams }
+                        }
+                        "clear-contention" => {
+                            Fault::ClearContention { network: parse_network(arg(0)?)? }
+                        }
                         "starve-budget" => Fault::StarveBudget { key: parse_key(arg(0)?)? },
                         "evict-shard" => Fault::EvictShard { key: parse_key(arg(0)?)? },
                         "force-refresh" => Fault::ForceRefresh { key: parse_key(arg(0)?)? },
@@ -336,8 +352,38 @@ mod tests {
             assert_eq!(scenario.name, name, "fixture name matches its registry key");
             assert!(!scenario.networks().is_empty());
         }
-        assert_eq!(bundled_names().len(), 5);
+        assert_eq!(bundled_names().len(), 6);
         assert!(bundled("no-such-scenario").is_none());
+    }
+
+    #[test]
+    fn parses_contention_faults() {
+        let s = Scenario::parse(
+            "scenario c\n\
+             arrive xsede/large count 1\n\
+             fault 50 contention xsede 6000 48\n\
+             fault 90 clear-contention xsede\n",
+        )
+        .unwrap();
+        assert_eq!(
+            s.faults[0].fault,
+            Fault::Contention { network: TestbedId::Xsede, offered_mbps: 6000.0, streams: 48 }
+        );
+        assert_eq!(
+            s.faults[1].fault,
+            Fault::ClearContention { network: TestbedId::Xsede }
+        );
+        // Malformed convoys are parse errors, not silent defaults.
+        assert!(
+            Scenario::parse("scenario c\narrive xsede/large count 1\nfault 1 contention xsede 0 8")
+                .is_err(),
+            "zero-rate convoy must be rejected"
+        );
+        assert!(
+            Scenario::parse("scenario c\narrive xsede/large count 1\nfault 1 contention xsede 100")
+                .is_err(),
+            "missing stream count must be rejected"
+        );
     }
 
     #[test]

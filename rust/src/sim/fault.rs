@@ -161,6 +161,80 @@ mod tests {
         assert!(!board.is_active());
     }
 
+    /// Regression: brownout (capacity scaling) and external-load
+    /// contention must *compose*, never double-count. `shape` applies
+    /// each fault exactly once — the shaped testbed is byte-identical
+    /// to manually composing `Link::scaled` with
+    /// `LoadProfile::with_load_delta` — and every load-dependent
+    /// quantity downstream prices against the *scaled* capacity: the
+    /// external-load fraction consumes a fraction of the narrowed pipe,
+    /// and `loss_at_load`'s offered/capacity ratio is taken against the
+    /// scaled bandwidth (the ratio math itself is untouched by scaling,
+    /// so nothing inflates the loss twice).
+    #[test]
+    fn capacity_scaling_composes_with_external_load_without_double_counting() {
+        use crate::sim::dataset::Dataset;
+        use crate::sim::params::Params;
+        use crate::sim::transfer::NetState;
+
+        let board = FaultBoard::new();
+        board.degrade_link(TestbedId::Xsede, 0.5);
+        board.load_step(TestbedId::Xsede, 0.2);
+        let mut shaped = Testbed::xsede();
+        board.shape(&mut shaped);
+
+        // 1. Exactly-once application: shape == manual composition.
+        let pristine = Testbed::xsede();
+        let mut manual = Testbed::xsede();
+        manual.path.link = pristine.path.link.scaled(0.5);
+        manual.profile = pristine.profile.with_load_delta(0.2);
+        assert_eq!(shaped.path.link, manual.path.link);
+        let t = 9.0 * 3_600.0;
+        assert_eq!(shaped.profile.mean_load(t), manual.profile.mean_load(t));
+
+        // 2. The load fraction consumes the *scaled* pipe: the shaped
+        // testbed's steady rate equals the manual composition's and
+        // sits below both the pristine rate and the scaled capacity.
+        let d = Dataset::new(50, 200.0);
+        let params = Params::new(8, 4, 4);
+        let state = NetState::with_load(0.4);
+        let shaped_rate = shaped.path.steady_rate_mbps(&d, &params, &state);
+        let manual_rate = manual.path.steady_rate_mbps(&d, &params, &state);
+        assert_eq!(shaped_rate, manual_rate, "shape must equal manual composition");
+        let pristine_rate = pristine.path.steady_rate_mbps(&d, &params, &state);
+        assert!(shaped_rate < pristine_rate, "{shaped_rate:.0} vs {pristine_rate:.0}");
+        assert!(shaped_rate <= shaped.path.link.bandwidth_mbps + 1e-9);
+        // Double-counting the load (pricing it against the pristine
+        // bandwidth on the scaled link ⇒ twice the load fraction) would
+        // under-report the rate — the composed rate must beat it.
+        let double_counted =
+            shaped.path.steady_rate_mbps(&d, &params, &NetState::with_load(0.8));
+        assert!(
+            shaped_rate > double_counted,
+            "composed {shaped_rate:.0} must beat double-counted {double_counted:.0}"
+        );
+
+        // 3. `loss_at_load` takes offered/capacity: the same offered
+        // bytes are a larger *fraction* of the narrowed pipe, so the
+        // congestion term rises — but only through the ratio. At equal
+        // ratio the scaled link's loss is identical (no hidden second
+        // penalty inside the loss model itself).
+        let offered_mbps = 9_500.0;
+        let pristine_loss =
+            pristine.path.link.loss_at_load(offered_mbps / pristine.path.link.bandwidth_mbps);
+        let shaped_loss =
+            shaped.path.link.loss_at_load(offered_mbps / shaped.path.link.bandwidth_mbps);
+        assert!(
+            shaped_loss > pristine_loss,
+            "same offered load must congest the narrowed pipe: {shaped_loss} vs {pristine_loss}"
+        );
+        assert_eq!(
+            shaped.path.link.loss_at_load(1.2),
+            pristine.path.link.loss_at_load(1.2),
+            "at equal offered/capacity ratio the loss model is scale-invariant"
+        );
+    }
+
     #[test]
     fn factors_are_clamped() {
         let board = FaultBoard::new();

@@ -117,6 +117,101 @@ mod tests {
         assert!(l.loss_at_load(10.0) <= 0.05);
     }
 
+    // --- property tests (via `util::proptest`) --------------------------
+
+    use crate::util::proptest::{forall, Config};
+    use crate::util::rng::Rng;
+
+    /// A random-but-sane link drawn across the parameter grid the
+    /// testbeds live in (plus generous margins).
+    fn gen_link(rng: &mut Rng) -> Link {
+        Link::new(
+            rng.range_f64(10.0, 40_000.0),  // bandwidth (Mbps)
+            rng.range_f64(0.1, 200.0),      // rtt (ms)
+            rng.range_f64(0.0, 1e-3),       // base loss
+            rng.f64() < 0.5,
+        )
+    }
+
+    #[test]
+    fn property_loss_at_load_monotone_finite_and_scale_invariant() {
+        forall(
+            Config { cases: 300, seed: 0x11AD },
+            |rng| {
+                (
+                    gen_link(rng),
+                    rng.range_f64(0.0, 20.0), // offered/capacity
+                    rng.range_f64(0.0, 5.0),  // extra offered load
+                    rng.range_f64(-1.0, 2.0), // scale factor (incl. bad values)
+                )
+            },
+            |(link, x, extra, factor)| {
+                let at_x = link.loss_at_load(*x);
+                let at_more = link.loss_at_load(x + extra);
+                if !(at_x.is_finite() && at_x >= 0.0 && at_x <= 0.05) {
+                    return Err(format!("loss_at_load({x}) = {at_x} out of range"));
+                }
+                if at_more + 1e-12 < at_x {
+                    return Err(format!(
+                        "loss not monotone in offered load: {at_more} < {at_x}"
+                    ));
+                }
+                // Loss is a function of the offered/capacity *ratio* and
+                // the base rate only, so capacity scaling commutes with
+                // it: scaled().loss_at_load(x) == loss_at_load(x).
+                let scaled = link.scaled(*factor).loss_at_load(*x);
+                if (scaled - at_x).abs() > 1e-12 {
+                    return Err(format!(
+                        "scaled({factor}) changed loss_at_load: {scaled} vs {at_x}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_per_stream_cap_finite_monotone_and_commutes_with_scaled() {
+        forall(
+            Config { cases: 300, seed: 0x5CA1E },
+            |rng| {
+                (
+                    gen_link(rng),
+                    rng.range_f64(0.5, 128.0), // tcp buffer (MB)
+                    rng.range_f64(0.0, 0.05),  // loss
+                    rng.range_f64(0.0, 0.05),  // extra loss
+                    rng.range_f64(0.05, 1.0),  // scale factor
+                )
+            },
+            |(link, buf, loss, extra, factor)| {
+                let cap = link.per_stream_cap_mbps(*buf, *loss);
+                if !(cap.is_finite() && cap > 0.0) {
+                    return Err(format!("per_stream_cap({buf}, {loss}) = {cap}"));
+                }
+                if cap > link.bandwidth_mbps + 1e-9 {
+                    return Err(format!("cap {cap} exceeds link rate {}", link.bandwidth_mbps));
+                }
+                // More loss never raises the cap (Mathis is decreasing).
+                let lossier = link.per_stream_cap_mbps(*buf, loss + extra);
+                if lossier > cap + 1e-9 {
+                    return Err(format!("cap rose with loss: {lossier} > {cap}"));
+                }
+                // Scaling commutes: the scaled link's cap is exactly the
+                // unscaled window/Mathis bound re-clamped to the scaled
+                // rate — narrowing the pipe must not change the TCP
+                // window math, only the ceiling.
+                let scaled_cap = link.scaled(*factor).per_stream_cap_mbps(*buf, *loss);
+                let expect = cap.min(link.scaled(*factor).bandwidth_mbps);
+                if (scaled_cap - expect).abs() > 1e-9 * expect.max(1.0) {
+                    return Err(format!(
+                        "scaled({factor}) cap {scaled_cap} != min(cap, scaled bw) {expect}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
     #[test]
     fn slow_start_scales_with_rtt_and_rate() {
         let wan = xsede();

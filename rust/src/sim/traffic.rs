@@ -238,6 +238,22 @@ impl Contention {
         self.rate_mbps.iter().sum()
     }
 
+    /// This snapshot with live self-traffic folded in: `rate_mbps` of
+    /// concurrent coordinator transfers (and any ambient convoy) on the
+    /// same endpoint pair, carrying `streams` TCP streams. Self-traffic
+    /// shares the full path, so it lands in the same-pair category —
+    /// the occupancy-aware rate path (`netplane`) is built on exactly
+    /// the contention terms the paper already models for *logged*
+    /// contenders.
+    pub fn plus_path_traffic(&self, rate_mbps: f64, streams: u32) -> Contention {
+        let mut merged = *self;
+        if rate_mbps.is_finite() && rate_mbps > 0.0 {
+            merged.rate_mbps[0] += rate_mbps; // ContendKind::SamePair
+        }
+        merged.streams = merged.streams.saturating_add(streams);
+        merged
+    }
+
     /// Sample a contention snapshot: a Poisson-ish number of known
     /// transfers, each with a rate drawn from the typical share range.
     pub fn sample(rng: &mut Rng, link_mbps: f64, intensity: f64) -> Contention {
@@ -319,6 +335,24 @@ mod tests {
             }
         }
         assert!(any_nonzero);
+    }
+
+    #[test]
+    fn plus_path_traffic_lands_in_same_pair() {
+        let mut base = Contention::none();
+        base.rate_mbps[1] = 500.0; // src_out
+        base.streams = 4;
+        let merged = base.plus_path_traffic(2_000.0, 16);
+        assert_eq!(merged.rate_mbps[0], 2_000.0);
+        assert_eq!(merged.rate_mbps[1], 500.0);
+        assert_eq!(merged.streams, 20);
+        // Same-pair traffic shares the path, so the merge raises the
+        // path-sharing total by exactly the self-traffic rate.
+        assert!((merged.total_path_mbps() - base.total_path_mbps() - 2_000.0).abs() < 1e-9);
+        // Bad inputs are ignored rather than corrupting the snapshot.
+        let nan = base.plus_path_traffic(f64::NAN, 0);
+        assert_eq!(nan.rate_mbps, base.rate_mbps);
+        assert_eq!(nan.streams, base.streams);
     }
 
     #[test]

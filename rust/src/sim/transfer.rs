@@ -46,6 +46,19 @@ impl NetState {
     pub fn with_load(external_load: f64) -> NetState {
         NetState { external_load, contention: Contention::none() }
     }
+
+    /// This state with live neighbor transfers folded into the known
+    /// contention — the occupancy-aware rate path. The hidden external
+    /// load and the sampled contention snapshot stay untouched; the
+    /// neighbors' offered rate and streams join the same-pair category,
+    /// so the steady-rate model prices self-traffic exactly like the
+    /// contending transfers it already knows how to price.
+    pub fn with_neighbors(&self, neighbor_mbps: f64, neighbor_streams: u32) -> NetState {
+        NetState {
+            external_load: self.external_load,
+            contention: self.contention.plus_path_traffic(neighbor_mbps, neighbor_streams),
+        }
+    }
 }
 
 /// Result of one simulated transfer (or chunk).
@@ -339,6 +352,24 @@ mod tests {
         let with_c = path.steady_rate_mbps(&d, &params, &NetState { external_load: 0.0, contention: c });
         let without = path.steady_rate_mbps(&d, &params, &NetState::quiet());
         assert!(with_c < without, "{with_c:.0} vs {without:.0}");
+    }
+
+    #[test]
+    fn neighbor_occupancy_reduces_throughput_like_contention() {
+        let path = xsede_path();
+        let d = large();
+        let params = Params::new(8, 4, 4);
+        let quiet = NetState::quiet();
+        let alone = path.steady_rate_mbps(&d, &params, &quiet);
+        let crowded = path.steady_rate_mbps(&d, &params, &quiet.with_neighbors(4_000.0, 32));
+        assert!(crowded < alone, "neighbors must bite: {crowded:.0} vs {alone:.0}");
+        // Piling more neighbors on degrades further (monotone pressure).
+        let heavier =
+            path.steady_rate_mbps(&d, &params, &quiet.with_neighbors(7_000.0, 96));
+        assert!(heavier < crowded, "{heavier:.0} vs {crowded:.0}");
+        // Zero neighbors is exactly the old path.
+        let zero = path.steady_rate_mbps(&d, &params, &quiet.with_neighbors(0.0, 0));
+        assert_eq!(zero, alone);
     }
 
     #[test]

@@ -58,4 +58,32 @@ fn unknown_scenario_name_exits_nonzero() {
     assert!(!out.status.success(), "unknown scenario name must exit non-zero");
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(stderr.contains("bundled"), "stderr lists the bundled library: {stderr}");
+    assert!(stderr.contains("convoy"), "{stderr}");
+}
+
+#[test]
+fn scenario_list_prints_bundled_names_and_exits_zero() {
+    let out = dtopt(&["scenario", "--list"]);
+    assert!(out.status.success(), "--list is a successful query, not an error");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let names: Vec<&str> = stdout.lines().collect();
+    assert_eq!(
+        names,
+        vec!["flash-crowd", "brownout", "stale-kb", "probe-famine", "shard-churn", "convoy"],
+        "{stdout}"
+    );
+}
+
+#[test]
+fn missing_scenario_listing_matches_experiment_listing_behavior() {
+    // Both subcommands answer a missing name the same way: non-zero
+    // exit, the available set on stderr.
+    let scenario = dtopt(&["scenario"]);
+    let experiment = dtopt(&["experiment"]);
+    assert!(!scenario.status.success());
+    assert!(!experiment.status.success());
+    let scenario_err = String::from_utf8_lossy(&scenario.stderr);
+    let experiment_err = String::from_utf8_lossy(&experiment.stderr);
+    assert!(scenario_err.contains("convoy"), "{scenario_err}");
+    assert!(experiment_err.contains("convoy"), "{experiment_err}");
 }

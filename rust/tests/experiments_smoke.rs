@@ -2,7 +2,7 @@
 //! runs at quick scale and satisfies the paper's qualitative claims.
 
 use dtopt::experiments::common::{ExpConfig, World};
-use dtopt::experiments::{fig12, fig3, fig5, fig6, fig7, fleet, rush};
+use dtopt::experiments::{convoy, fig12, fig3, fig5, fig6, fig7, fleet, rush};
 use dtopt::runtime::Backend;
 
 fn quick_world() -> World {
@@ -79,6 +79,20 @@ fn rush_probe_plane_coalesces_the_burst() {
     assert!(rendered.contains("probe plane:"), "{rendered}");
     for (desc, ok) in rush::headline_checks(&result) {
         assert!(ok, "rush check failed: {desc}\n{rendered}");
+    }
+}
+
+#[test]
+fn convoy_plane_aware_decisions_beat_the_fiction() {
+    let world = quick_world();
+    let result = convoy::run(&world, 12, 4);
+    let rendered = convoy::render(&result);
+    assert!(rendered.contains("plane-aware"), "{rendered}");
+    assert!(rendered.contains("link plane:"), "{rendered}");
+    assert_eq!(result.plane.cohort_mbps.len(), 12);
+    assert_eq!(result.isolated.cohort_mbps.len(), 12);
+    for (desc, ok) in convoy::headline_checks(&result) {
+        assert!(ok, "convoy check failed: {desc}\n{rendered}");
     }
 }
 

@@ -1,15 +1,18 @@
 //! Golden-render test for the operator-facing metrics output: the full
 //! `coordinator::Metrics::render` — per-optimizer table, pooled
 //! request-latency line, knowledge-service block, fabric shard table,
-//! and probe-plane block — is snapshotted against a checked-in fixture,
-//! so format drift is a reviewed diff instead of a silent reshape of
-//! what operators parse and alert on.
+//! probe-plane block, and the shared-link contention block — is
+//! snapshotted against a checked-in fixture, so format drift is a
+//! reviewed diff instead of a silent reshape of what operators parse
+//! and alert on.
 //!
 //! Every input is hand-picked so the render is bit-deterministic: fixed
 //! nanosecond latencies (never wall-clock measurements), manually set
 //! service counters, an empty fallback KB for the fabric (one
-//! borrowed(fallback) shard, zero rows), and a probe estimate whose
-//! confidence cannot visibly decay (million-second half-life).
+//! borrowed(fallback) shard, zero rows), a probe estimate whose
+//! confidence cannot visibly decay (million-second half-life), and a
+//! link plane holding one scripted registration plus an ambient convoy
+//! (epochs and occupancy are counters, not clocks).
 //!
 //! To regenerate after an *intentional* format change:
 //! `DTOPT_UPDATE_GOLDEN=1 cargo test --test metrics_golden` — then
@@ -18,8 +21,9 @@
 use dtopt::coordinator::Metrics;
 use dtopt::fabric::{FabricConfig, ShardKey, ShardRouter};
 use dtopt::feedback::FeedbackStats;
+use dtopt::netplane::LinkPlane;
 use dtopt::offline::knowledge::KnowledgeBase;
-use dtopt::probe::{BudgetConfig, EstimateConfig, ProbeConfig, ProbePlane};
+use dtopt::probe::{BudgetConfig, EstimateConfig, ProbeConfig, ProbeOcc, ProbePlane};
 use dtopt::sim::dataset::SizeClass;
 use dtopt::sim::testbed::TestbedId;
 use std::sync::atomic::Ordering;
@@ -78,12 +82,27 @@ fn full_metrics_render_matches_golden_fixture() {
     plane.stats.estimate_served.store(3, Ordering::Relaxed);
     plane.stats.budget_forced.store(1, Ordering::Relaxed);
     plane.stats.note_bytes(500.0, 9_500.0);
-    plane
-        .estimates()
-        .record(ShardKey::new(TestbedId::Xsede, SizeClass::Large), 1, 3, 0.42, 1.0, 2);
+    plane.estimates().record(
+        ShardKey::new(TestbedId::Xsede, SizeClass::Large),
+        1,
+        3,
+        0.42,
+        1.0,
+        2,
+        ProbeOcc::default(),
+    );
     metrics.attach_probe(plane);
 
+    // Link-plane block: one scripted registration plus an ambient
+    // convoy — counters only, so the render is exact.
+    let links = Arc::new(LinkPlane::shared());
+    let lease = links.clone().admit(TestbedId::Xsede, 7);
+    lease.update(8, 24, 2_500.0);
+    links.set_ambient(TestbedId::Xsede, 4_000.0, 48);
+    metrics.attach_links(links);
+
     let rendered = metrics.render();
+    drop(lease);
     fabric.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
 

@@ -12,7 +12,7 @@ use dtopt::logs::generate::{generate, GenConfig};
 use dtopt::offline::kmeans::NativeAssign;
 use dtopt::offline::pipeline::{build, OfflineConfig};
 use dtopt::online::asm::AsmOutcome;
-use dtopt::probe::{Admission, ProbeMode, ProbePlane};
+use dtopt::probe::{Admission, ProbeMode, ProbeOcc, ProbePlane};
 use dtopt::sim::dataset::{Dataset, SizeClass};
 use dtopt::sim::testbed::{Testbed, TestbedId};
 use std::sync::Arc;
@@ -88,13 +88,13 @@ fn fabric_coordinator_shares_one_probe_plane_per_shard() {
 fn mismatched_followers_fall_back_instead_of_adopting() {
     let plane = Arc::new(ProbePlane::default());
     let key = ShardKey::new(TestbedId::Xsede, SizeClass::Large);
-    let guard = match plane.admit(key, Some(0), 0, 10.0) {
+    let guard = match plane.admit(key, Some(0), 0, 10.0, ProbeOcc::default()) {
         Admission::Lead { guard, .. } => guard,
         _ => panic!("cold plane must lead"),
     };
     let spawn_follower = |cluster: usize, generation: u64| {
         let plane = plane.clone();
-        std::thread::spawn(move || plane.admit(key, Some(cluster), generation, 10.0))
+        std::thread::spawn(move || plane.admit(key, Some(cluster), generation, 10.0, ProbeOcc::default()))
     };
     let wrong_cluster = spawn_follower(1, 0);
     let wrong_generation = spawn_follower(0, 1);
@@ -112,6 +112,7 @@ fn mismatched_followers_fall_back_instead_of_adopting() {
         guard,
         AsmOutcome { surface_idx: 3, converged_idx: 3, sampled: true, intensity: 0.5 },
         0,
+        ProbeOcc::default(),
     );
     match matched.join().unwrap() {
         Admission::Piggyback(result) => {

@@ -31,8 +31,24 @@ fn assert_passed(outcome: &ScenarioOutcome) {
 fn bundled_library_is_complete() {
     assert_eq!(
         bundled_names(),
-        vec!["flash-crowd", "brownout", "stale-kb", "probe-famine", "shard-churn"]
+        vec!["flash-crowd", "brownout", "stale-kb", "probe-famine", "shard-churn", "convoy"]
     );
+}
+
+#[test]
+fn every_bundled_scenario_passes_conformance() {
+    // The two newest invariants apply to every scenario (every replay
+    // runs on the contention plane), so sweep the whole library: each
+    // bundled scenario must pass every checker, with the occupancy
+    // invariants actually exercised, never vacuous.
+    for name in bundled_names() {
+        let outcome = run_bundled(name);
+        assert_passed(&outcome);
+        let drained = outcome.report("occupancy-drained").unwrap();
+        assert!(drained.checked >= 1, "'{name}': occupancy-drained never exercised");
+        let capacity = outcome.report("offered-within-capacity").unwrap();
+        assert!(capacity.checked >= 1, "'{name}': offered-within-capacity never exercised");
+    }
 }
 
 #[test]
@@ -162,12 +178,107 @@ fn shard_churn_resets_generations_only_at_evictions() {
 }
 
 #[test]
+fn convoy_contention_bites_and_occupancy_stamps_estimates() {
+    let outcome = run_bundled("convoy");
+    assert_passed(&outcome);
+
+    // The convoy actually hurts: mean goodput of the responses served
+    // while it stands sits below the quiet ones' (same replay, same
+    // seeds — the only difference is the ambient neighbor pressure).
+    let convoy_at = outcome
+        .timeline
+        .iter()
+        .find_map(|event| match event {
+            Event::Fault { t_s, fault: Fault::Contention { .. } } => Some(*t_s),
+            _ => None,
+        })
+        .expect("convoy scenario parks a convoy");
+    let clear_at = outcome
+        .timeline
+        .iter()
+        .find_map(|event| match event {
+            Event::Fault { t_s, fault: Fault::ClearContention { .. } } => Some(*t_s),
+            _ => None,
+        })
+        .expect("convoy scenario drains the convoy");
+    let mean = |values: Vec<f64>| -> f64 {
+        if values.is_empty() {
+            0.0
+        } else {
+            values.iter().sum::<f64>() / values.len() as f64
+        }
+    };
+    let under = mean(
+        outcome
+            .responses()
+            .filter(|r| r.t_s > convoy_at && r.t_s < clear_at)
+            .map(|r| r.achieved_mbps)
+            .collect(),
+    );
+    let quiet = mean(
+        outcome
+            .responses()
+            .filter(|r| r.t_s < convoy_at || r.t_s > clear_at)
+            .map(|r| r.achieved_mbps)
+            .collect(),
+    );
+    assert!(
+        under < quiet,
+        "the convoy must bite: {under:.0} under vs {quiet:.0} quiet\n{}",
+        render_timeline(&outcome.timeline)
+    );
+
+    // Occupancy-stamped estimates: the first request under the convoy
+    // must re-lead (quiet knowledge demoted), the next one serves the
+    // convoy-learned estimate, and the first request after the drain
+    // re-leads again (convoy knowledge is not quiet-network truth).
+    let first_under = outcome.responses().find(|r| r.t_s > convoy_at && r.t_s < clear_at).unwrap();
+    assert_eq!(
+        first_under.mode,
+        Some(ProbeMode::Led),
+        "first contended request must re-sample\n{}",
+        render_timeline(&outcome.timeline)
+    );
+    let stale = first_under.est.expect("the quiet estimate was still stored");
+    assert_eq!(stale.occ_streams, 0, "it was recorded on a quiet link");
+    assert!(!stale.confident, "the occupancy penalty demoted it");
+    let second_under = outcome
+        .responses()
+        .find(|r| r.t_s > first_under.t_s && r.t_s < clear_at)
+        .expect("two arrivals land inside the convoy window");
+    assert_eq!(
+        second_under.mode,
+        Some(ProbeMode::EstimateServed),
+        "convoy-learned knowledge serves while the convoy stands\n{}",
+        render_timeline(&outcome.timeline)
+    );
+    let first_after = outcome.responses().find(|r| r.t_s > clear_at).unwrap();
+    assert_eq!(
+        first_after.mode,
+        Some(ProbeMode::Led),
+        "post-drain request must re-sample, not serve convoy truth\n{}",
+        render_timeline(&outcome.timeline)
+    );
+    assert!(first_after.est.expect("convoy estimate stored").occ_streams > 16);
+
+    // The goodput floor ran against a fault-free control replay.
+    let control = outcome.control_mean_mbps.expect("convoy declares a floor");
+    assert!(outcome.faulted_mean_mbps < control, "the convoy run must trail its control");
+
+    // Occupancy invariants were exercised with real pressure: at least
+    // one response observed carried load above its own offered rate.
+    assert!(outcome
+        .responses()
+        .any(|r| r.t_s > convoy_at && r.t_s < clear_at && r.occ_peak_offered > 6_000.0));
+}
+
+#[test]
 fn same_seed_replays_are_byte_identical() {
-    // The acceptance bar: two runs with the same seed produce
-    // byte-identical event timelines. Exercised on the scenario with
-    // real thread concurrency (the coalesced burst) and on the
-    // refresh-heavy one.
-    for name in ["flash-crowd", "stale-kb"] {
+    // The acceptance bar: two quick-mode runs with the same seed
+    // produce byte-identical event timelines — for every bundled
+    // scenario, including the one with real thread concurrency
+    // (flash-crowd's coalesced burst) and the contention-plane one.
+    for name in bundled_names() {
         let a = run_bundled(name);
         let b = run_bundled(name);
         assert_eq!(
