@@ -17,6 +17,7 @@ use crate::sim::dataset::Dataset;
 use crate::sim::params::Params;
 use crate::sim::testbed::Testbed;
 use crate::sim::transfer::{NetState, Outcome};
+use crate::telemetry::{TraceBuilder, TraceEvent};
 use crate::util::rng::Rng;
 
 /// The environment one transfer request runs in. The *true* network
@@ -40,6 +41,11 @@ pub struct TransferEnv {
     /// this transfer's own load back so neighbors see it. `None` = the
     /// pre-plane isolated world.
     link: Option<LinkLease>,
+    /// Decision-trace accumulator, when the coordinator attached one.
+    /// Carried here — like the link lease — so every layer that already
+    /// holds the environment (ladder, chunk execution) can append
+    /// events without new plumbing. `None` = tracing off, zero cost.
+    trace: Option<TraceBuilder>,
 }
 
 impl TransferEnv {
@@ -71,6 +77,7 @@ impl TransferEnv {
             rng: Rng::new(seed),
             current_params: None,
             link: None,
+            trace: None,
         }
     }
 
@@ -88,6 +95,31 @@ impl TransferEnv {
     /// exposure.)
     pub fn release_link(&mut self) -> Option<ContentionExposure> {
         self.link.take().map(LinkLease::release)
+    }
+
+    /// Start collecting this request's decision trace.
+    pub fn attach_trace(&mut self, builder: TraceBuilder) {
+        self.trace = Some(builder);
+    }
+
+    /// Detach the trace accumulator (the coordinator finishes it after
+    /// settlement). `None` when tracing was never attached.
+    pub fn take_trace(&mut self) -> Option<TraceBuilder> {
+        self.trace.take()
+    }
+
+    /// Append one event to the attached trace; no-op when tracing is
+    /// off, so emission sites never need to guard.
+    pub fn note(&mut self, event: TraceEvent) {
+        if let Some(trace) = &mut self.trace {
+            trace.note(event);
+        }
+    }
+
+    /// Is a trace attached? (Emission sites that would do real work to
+    /// *construct* an event can skip it when not.)
+    pub fn tracing(&self) -> bool {
+        self.trace.is_some()
     }
 
     /// The parameters the shared link will actually grant right now:
@@ -139,11 +171,26 @@ impl TransferEnv {
     /// chunk's achieved steady rate is published back to the plane so
     /// neighbors price *this* transfer correctly too.
     pub fn run_chunk(&mut self, chunk: &Dataset, params: Params) -> Outcome {
+        let asked = params;
         let params = self.effective_params(params);
+        if params != asked {
+            self.note(TraceEvent::AllowanceClamp {
+                asked_cc: asked.cc,
+                asked_p: asked.p,
+                asked_pp: asked.pp,
+                granted_cc: params.cc,
+                granted_p: params.p,
+                granted_pp: params.pp,
+            });
+        }
         let mut state = self.state_at(self.clock_s);
         let view = self.link.as_ref().map(|lease| lease.view());
         if let Some(view) = &view {
             state = state.with_neighbors(view.offered_mbps, view.streams);
+            if view.streams > 0 || view.offered_mbps > 0.0 {
+                let (offered_mbps, streams) = (view.offered_mbps, view.streams);
+                self.note(TraceEvent::NeighborPressure { offered_mbps, streams });
+            }
         }
         let (new_procs, new_streams) = match self.current_params {
             None => (params.cc, params.streams()),

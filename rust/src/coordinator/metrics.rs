@@ -5,13 +5,32 @@
 //! pooled request-latency line renders in *both* modes — and the probe
 //! plane block (coalesced followers, estimate hit rate, probe-byte
 //! overhead) when a plane is attached.
+//!
+//! Every per-request distribution (goodput, decision latency, sample
+//! counts) lives in a bounded [`LogHistogram`]: memory is a function of
+//! the value range, never of request volume, and quantiles stay within
+//! 1% of exact (bit-exact whenever distinct values occupy distinct
+//! buckets — which is what keeps the golden fixture stable).
+//!
+//! ## Render consistency
+//!
+//! `render()` and `render_json()` snapshot the per-optimizer table and
+//! all four attachment slots **once, up front**, then render from those
+//! snapshots without re-locking. The blocks of one render are therefore
+//! mutually consistent with respect to attachment: an attachment
+//! swapped in mid-render can never produce a table from one epoch and a
+//! plane block from another. (Counters *inside* a live attachment are
+//! still read at render time — they are monotone atomics, so the worst
+//! case is a block slightly newer than the table above it.)
 
 use crate::fabric::ShardRouter;
 use crate::feedback::FeedbackStats;
-use crate::netplane::LinkPlane;
+use crate::netplane::{LinkPlane, PlaneMode};
 use crate::probe::ProbePlane;
-use crate::util::stats::{mean, quantile};
+use crate::telemetry::LogHistogram;
+use crate::util::json::Json;
 use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
 #[derive(Debug, Default, Clone)]
@@ -19,26 +38,26 @@ pub struct OptimizerStats {
     pub requests: u64,
     pub total_mb: f64,
     pub total_transfer_s: f64,
-    pub achieved_mbps: Vec<f64>,
-    pub decision_wall_ns: Vec<f64>,
-    pub samples_used: Vec<f64>,
+    pub achieved_mbps: LogHistogram,
+    pub decision_wall_ns: LogHistogram,
+    pub samples_used: LogHistogram,
 }
 
 impl OptimizerStats {
     pub fn mean_achieved_mbps(&self) -> f64 {
-        mean(&self.achieved_mbps)
+        self.achieved_mbps.mean()
     }
 
     pub fn p50_decision_ns(&self) -> f64 {
-        quantile(&self.decision_wall_ns, 0.50)
+        self.decision_wall_ns.quantile(0.50)
     }
 
     pub fn p95_decision_ns(&self) -> f64 {
-        quantile(&self.decision_wall_ns, 0.95)
+        self.decision_wall_ns.quantile(0.95)
     }
 
     pub fn p99_decision_ns(&self) -> f64 {
-        quantile(&self.decision_wall_ns, 0.99)
+        self.decision_wall_ns.quantile(0.99)
     }
 }
 
@@ -50,6 +69,16 @@ pub struct Metrics {
     fabric: Mutex<Option<Arc<ShardRouter>>>,
     probe: Mutex<Option<Arc<ProbePlane>>>,
     links: Mutex<Option<Arc<LinkPlane>>>,
+}
+
+/// One render's consistent view of the sink: the per-optimizer table
+/// and every attachment slot, captured under each lock exactly once.
+struct RenderSnapshot {
+    stats: BTreeMap<&'static str, OptimizerStats>,
+    feedback: Option<Arc<FeedbackStats>>,
+    fabric: Option<Arc<ShardRouter>>,
+    probe: Option<Arc<ProbePlane>>,
+    links: Option<Arc<LinkPlane>>,
 }
 
 impl Metrics {
@@ -115,65 +144,182 @@ impl Metrics {
         entry.requests += 1;
         entry.total_mb += total_mb;
         entry.total_transfer_s += total_s;
-        entry.achieved_mbps.push(achieved_mbps);
-        entry.decision_wall_ns.push(decision_wall_ns as f64);
-        entry.samples_used.push(samples as f64);
+        entry.achieved_mbps.record(achieved_mbps);
+        entry.decision_wall_ns.record(decision_wall_ns as f64);
+        entry.samples_used.record(samples as f64);
     }
 
     pub fn snapshot(&self) -> BTreeMap<&'static str, OptimizerStats> {
         self.inner.lock().unwrap().clone()
     }
 
+    /// Capture everything one render needs, taking each lock exactly
+    /// once (see the module docs for the consistency guarantee).
+    fn render_snapshot(&self) -> RenderSnapshot {
+        RenderSnapshot {
+            stats: self.snapshot(),
+            feedback: self.feedback(),
+            fabric: self.fabric(),
+            probe: self.probe(),
+            links: self.links(),
+        }
+    }
+
+    /// Decision-latency histogram pooled over every optimizer — the
+    /// service-level distribution an operator alerts on.
+    fn pooled_latency(snap: &BTreeMap<&'static str, OptimizerStats>) -> LogHistogram {
+        let mut pooled = LogHistogram::new();
+        for s in snap.values() {
+            pooled.merge(&s.decision_wall_ns);
+        }
+        pooled
+    }
+
     /// Render the standard metrics table.
     pub fn render(&self) -> String {
-        let snap = self.snapshot();
+        let view = self.render_snapshot();
         let mut out = String::from(
             "optimizer   reqs  mean_mbps  p50_mbps  mean_samples  p50_decision  p95_decision  p99_decision\n",
         );
-        for (name, s) in &snap {
+        for (name, s) in &view.stats {
             out.push_str(&format!(
                 "{:<11} {:>4} {:>10.0} {:>9.0} {:>13.2} {:>13} {:>13} {:>13}\n",
                 name,
                 s.requests,
                 s.mean_achieved_mbps(),
-                quantile(&s.achieved_mbps, 0.5),
-                mean(&s.samples_used),
+                s.achieved_mbps.quantile(0.5),
+                s.samples_used.mean(),
                 crate::util::timer::fmt_ns(s.p50_decision_ns()),
                 crate::util::timer::fmt_ns(s.p95_decision_ns()),
                 crate::util::timer::fmt_ns(s.p99_decision_ns()),
             ));
         }
-        // Request-latency percentiles pooled over every optimizer — the
-        // service-level numbers an operator alerts on.
-        let all_ns: Vec<f64> = snap
-            .values()
-            .flat_map(|s| s.decision_wall_ns.iter().copied())
-            .collect();
-        if !all_ns.is_empty() {
+        let pooled = Self::pooled_latency(&view.stats);
+        if !pooled.is_empty() {
             out.push_str(&format!(
                 "request latency: p50 {}, p99 {} over {} requests\n",
-                crate::util::timer::fmt_ns(quantile(&all_ns, 0.50)),
-                crate::util::timer::fmt_ns(quantile(&all_ns, 0.99)),
-                all_ns.len(),
+                crate::util::timer::fmt_ns(pooled.quantile(0.50)),
+                crate::util::timer::fmt_ns(pooled.quantile(0.99)),
+                pooled.count(),
             ));
         }
-        if let Some(fb) = self.feedback() {
+        if let Some(fb) = &view.feedback {
             out.push('\n');
             out.push_str(&fb.render());
         }
-        if let Some(fabric) = self.fabric() {
+        if let Some(fabric) = &view.fabric {
             out.push('\n');
             out.push_str(&fabric.render());
         }
-        if let Some(plane) = self.probe() {
+        if let Some(plane) = &view.probe {
             out.push('\n');
             out.push_str(&plane.render());
         }
-        if let Some(links) = self.links() {
+        if let Some(links) = &view.links {
             out.push('\n');
             out.push_str(&links.render());
         }
         out
+    }
+
+    /// Machine-readable export of the same view `render` prints:
+    /// per-optimizer aggregates (with full histograms, so a consumer
+    /// can re-derive any quantile or merge across coordinators), the
+    /// pooled request-latency histogram, and one object per attached
+    /// subsystem. Snapshot semantics match `render` exactly.
+    pub fn render_json(&self) -> Json {
+        let view = self.render_snapshot();
+        let mut root = Json::obj();
+
+        let mut optimizers = Json::obj();
+        for (name, s) in &view.stats {
+            let mut o = Json::obj();
+            o.set("requests", Json::Num(s.requests as f64))
+                .set("total_mb", Json::Num(s.total_mb))
+                .set("total_transfer_s", Json::Num(s.total_transfer_s))
+                .set("mean_mbps", Json::Num(s.mean_achieved_mbps()))
+                .set("p50_mbps", Json::Num(s.achieved_mbps.quantile(0.5)))
+                .set("mean_samples", Json::Num(s.samples_used.mean()))
+                .set("p50_decision_ns", Json::Num(s.p50_decision_ns()))
+                .set("p99_decision_ns", Json::Num(s.p99_decision_ns()))
+                .set("achieved_mbps", s.achieved_mbps.to_json())
+                .set("decision_wall_ns", s.decision_wall_ns.to_json())
+                .set("samples_used", s.samples_used.to_json());
+            optimizers.set(name, o);
+        }
+        root.set("optimizers", optimizers);
+
+        let pooled = Self::pooled_latency(&view.stats);
+        if !pooled.is_empty() {
+            let mut latency = Json::obj();
+            latency
+                .set("p50_ns", Json::Num(pooled.quantile(0.50)))
+                .set("p99_ns", Json::Num(pooled.quantile(0.99)))
+                .set("requests", Json::Num(pooled.count() as f64))
+                .set("histogram", pooled.to_json());
+            root.set("request_latency", latency);
+        }
+
+        if let Some(fb) = &view.feedback {
+            let mut o = Json::obj();
+            o.set(
+                "kb_generation",
+                Json::Num(fb.kb_generation.load(Ordering::Relaxed) as f64),
+            )
+            .set("refreshes", Json::Num(fb.refreshes.load(Ordering::Relaxed) as f64))
+            .set("rows_flushed", Json::Num(fb.rows_flushed.load(Ordering::Relaxed) as f64))
+            .set("rows_dropped", Json::Num(fb.rows_dropped.load(Ordering::Relaxed) as f64))
+            .set("drift_events", Json::Num(fb.drift_events.load(Ordering::Relaxed) as f64));
+            root.set("feedback", o);
+        }
+
+        if let Some(fabric) = &view.fabric {
+            let shards = fabric.live_shards();
+            let borrowed = shards.iter().filter(|s| s.is_borrowed()).count();
+            let mut o = Json::obj();
+            o.set("live_shards", Json::Num(shards.len() as f64))
+                .set("borrowed_shards", Json::Num(borrowed as f64));
+            root.set("fabric", o);
+        }
+
+        if let Some(plane) = &view.probe {
+            let (sample_mb, bulk_mb) = plane.stats.bytes();
+            let mut o = Json::obj();
+            o.set("led", Json::Num(plane.stats.led.load(Ordering::Relaxed) as f64))
+                .set(
+                    "piggybacked",
+                    Json::Num(plane.stats.piggybacked.load(Ordering::Relaxed) as f64),
+                )
+                .set(
+                    "estimate_served",
+                    Json::Num(plane.stats.estimate_served.load(Ordering::Relaxed) as f64),
+                )
+                .set(
+                    "budget_forced",
+                    Json::Num(plane.stats.budget_forced.load(Ordering::Relaxed) as f64),
+                )
+                .set("sample_mb", Json::Num(sample_mb))
+                .set("bulk_mb", Json::Num(bulk_mb));
+            root.set("probe", o);
+        }
+
+        if let Some(links) = &view.links {
+            let mut o = Json::obj();
+            o.set(
+                "mode",
+                Json::Str(
+                    match links.mode() {
+                        PlaneMode::Shared => "shared",
+                        PlaneMode::Isolated => "isolated",
+                    }
+                    .to_string(),
+                ),
+            )
+            .set("active_transfers", Json::Num(links.active_total() as f64));
+            root.set("links", o);
+        }
+
+        root
     }
 }
 
@@ -213,6 +359,83 @@ mod tests {
         // Pooled across optimizers: the p99 catches GO's 1 ms outlier.
         assert!(table.contains("request latency: p50"), "{table}");
         assert!(table.contains("over 5 requests"), "{table}");
+    }
+
+    #[test]
+    fn memory_stays_bounded_over_100k_records() {
+        // The regression behind the histogram migration: the old
+        // Vec-backed stats grew one f64 per request forever. Bucket
+        // count must plateau regardless of record volume.
+        let m = Metrics::new();
+        let mut rng = crate::util::rng::Rng::new(0x31_07);
+        let bound = ((1e12f64).ln() / crate::telemetry::hist::GAMMA.ln()).ceil() as usize + 1;
+        let mut plateau = 0usize;
+        for i in 0..100_000u64 {
+            m.record(
+                "ASM",
+                rng.range_f64(100.0, 10_000.0),
+                500.0,
+                4.0,
+                (i % 5) as usize,
+                rng.range_u(1_000, 50_000_000),
+            );
+            if i == 9_999 {
+                let snap = m.snapshot();
+                let s = &snap["ASM"];
+                plateau = s.achieved_mbps.bucket_count()
+                    + s.decision_wall_ns.bucket_count()
+                    + s.samples_used.bucket_count();
+            }
+        }
+        let snap = m.snapshot();
+        let s = &snap["ASM"];
+        assert_eq!(s.requests, 100_000);
+        let total = s.achieved_mbps.bucket_count()
+            + s.decision_wall_ns.bucket_count()
+            + s.samples_used.bucket_count();
+        assert!(total <= 3 * bound, "bucket total {total} exceeded analytic bound");
+        // 10x the records after the warm-up added (essentially) no
+        // buckets: memory is range-bound, not volume-bound.
+        assert!(
+            total <= plateau + plateau / 10 + 8,
+            "bucket count kept growing: {plateau} after 10k, {total} after 100k"
+        );
+    }
+
+    #[test]
+    fn render_json_round_trips_histograms() {
+        let m = Metrics::new();
+        m.record("ASM", 1000.0, 500.0, 4.0, 2, 10_000);
+        m.record("ASM", 2000.0, 500.0, 2.0, 3, 20_000);
+        m.record("GO", 800.0, 500.0, 5.0, 0, 1_000_000);
+        let text = m.render_json().to_string_compact();
+        let parsed = Json::parse(&text).unwrap();
+        let asm = parsed.get("optimizers").unwrap().get("ASM").unwrap();
+        assert_eq!(asm.req_usize("requests").unwrap(), 2);
+        assert_eq!(asm.req_f64("mean_mbps").unwrap(), 1500.0);
+        // The embedded histogram reconstructs to the exact quantiles.
+        let hist =
+            LogHistogram::from_json(asm.get("decision_wall_ns").unwrap()).unwrap();
+        assert_eq!(hist.quantile(0.5), m.snapshot()["ASM"].p50_decision_ns());
+        let latency = parsed.get("request_latency").unwrap();
+        assert_eq!(latency.req_usize("requests").unwrap(), 3);
+        let pooled = LogHistogram::from_json(latency.get("histogram").unwrap()).unwrap();
+        assert_eq!(pooled.count(), 3);
+        assert_eq!(pooled.quantile(1.0), 1_000_000.0);
+    }
+
+    #[test]
+    fn render_json_includes_attached_blocks() {
+        let m = Metrics::new();
+        m.record("ASM", 1000.0, 500.0, 4.0, 2, 10_000);
+        let empty = m.render_json();
+        assert!(empty.get("probe").is_none());
+        assert!(empty.get("links").is_none());
+        m.attach_probe(Arc::new(ProbePlane::default()));
+        m.attach_links(Arc::new(LinkPlane::shared()));
+        let full = m.render_json();
+        assert_eq!(full.get("links").unwrap().req_str("mode").unwrap(), "shared");
+        assert_eq!(full.get("probe").unwrap().req_usize("led").unwrap(), 0);
     }
 
     #[test]

@@ -33,6 +33,7 @@ use crate::sim::params::BETA;
 use crate::sim::testbed::Testbed;
 use crate::sim::traffic::Contention;
 use crate::sim::transfer::NetState;
+use crate::telemetry::{Provenance, TraceBuilder, TraceEvent, TraceSink};
 use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -71,6 +72,14 @@ pub struct CoordinatorConfig {
     /// believes it owns the link (the pre-plane fiction, equivalent to
     /// attaching `LinkPlane::isolated()` minus the attribution).
     pub links: Option<Arc<LinkPlane>>,
+    /// Decision-trace sink: when attached, every served request builds
+    /// a [`crate::telemetry::DecisionTrace`] — one typed event per
+    /// layer hop (routing, fault consult, link + probe admission, ASM
+    /// ladder, allowance clamps, lease release, settlement), each
+    /// carrying the provenance of the knowledge it consumed — and
+    /// pushes it here on completion. `None` = tracing off: the serve
+    /// path allocates nothing and every emission site is a no-op.
+    pub traces: Option<Arc<TraceSink>>,
 }
 
 impl Default for CoordinatorConfig {
@@ -83,6 +92,7 @@ impl Default for CoordinatorConfig {
             faults: None,
             tap: None,
             links: None,
+            traces: None,
         }
     }
 }
@@ -176,6 +186,8 @@ struct Shared {
     tap: Option<Arc<ResponseTap>>,
     /// Shared-link contention plane (see `CoordinatorConfig::links`).
     links: Option<Arc<LinkPlane>>,
+    /// Decision-trace sink (see `CoordinatorConfig::traces`).
+    traces: Option<Arc<TraceSink>>,
 }
 
 enum Job {
@@ -270,6 +282,7 @@ impl Coordinator {
             faults: config.faults.clone(),
             tap: config.tap.clone(),
             links: config.links.clone(),
+            traces: config.traces.clone(),
         });
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -358,6 +371,23 @@ fn serve_one(
                 (routed.snapshot, routed.shard, Some(routed.key), routed.borrowed)
             }
         };
+    // Probe key: the serving shard when the fabric routed us, the
+    // request's natural shard otherwise — either way, concurrent
+    // requests for the same network slice share one sampling ladder,
+    // one estimate, and one trace label.
+    let probe_key =
+        shard_key.unwrap_or_else(|| ShardKey::of_request(request.testbed, &request.dataset));
+    // The decision trace starts at routing, before the environment
+    // exists; it rides the builder until the env can carry it.
+    let mut trace =
+        shared.traces.as_ref().map(|_| TraceBuilder::new(request.id, request.seed));
+    if let Some(tb) = &mut trace {
+        tb.note(TraceEvent::Route {
+            key: probe_key.name(),
+            borrowed,
+            generation: snapshot.generation,
+        });
+    }
     let mut testbed = Testbed::by_id(request.testbed);
     // Injected faults shape the hidden environment first: a degraded
     // link narrows the pipe and a load step raises the diurnal floor,
@@ -365,6 +395,11 @@ fn serve_one(
     // against — optimizers only ever see the fault through measurement.
     if let Some(board) = &shared.faults {
         board.shape(&mut testbed);
+        if let Some(tb) = &mut trace {
+            tb.note(TraceEvent::FaultConsult {
+                bandwidth_mbps: testbed.path.link.bandwidth_mbps,
+            });
+        }
     }
     // Hidden network state: diurnal profile at submission time (plus
     // contending transfers), unless the request pins a state.
@@ -376,6 +411,9 @@ fn serve_one(
     // draws across runs and coordinators (the experiment harnesses
     // compare optimizers and knowledge sources on exactly that basis).
     let mut env = TransferEnv::new(testbed.clone(), request.dataset, state, request.seed);
+    if let Some(tb) = trace.take() {
+        env.attach_trace(tb);
+    }
     let (_, optimal_mbps) = testbed.path.optimal(&request.dataset, &state, BETA);
     // Join the shared link before anything measures: from this moment
     // concurrent transfers on the network see this one (and it sees
@@ -387,24 +425,35 @@ fn serve_one(
             let lease = links.clone().admit(request.testbed, request.id);
             let view = lease.view();
             env.attach_link(lease);
+            env.note(TraceEvent::LinkAdmit { epoch: view.epoch, streams: view.streams });
             ProbeOcc { epoch: view.epoch, streams: view.streams }
         }
         None => ProbeOcc::default(),
     };
 
     let kind = request.optimizer.unwrap_or(default_opt);
+    // Every trace carries exactly one admission event: the probe
+    // plane's is emitted inside `run_admitted_asm` (it knows the
+    // lead/piggyback/serve verdict); every other dispatch consults the
+    // pinned KB directly.
+    let planed_asm = matches!(kind, OptimizerKind::Asm) && shared.probe.is_some();
+    if !planed_asm {
+        env.note(TraceEvent::Admission {
+            mode: "direct",
+            cluster: None,
+            generation: snapshot.generation,
+            reserved_mb: 0.0,
+            warm_start: None,
+            provenance: Provenance::Kb { generation: snapshot.generation, cluster: None },
+        });
+    }
     let started = Instant::now();
     let mut probe_mode: Option<ProbeMode> = None;
     let report = match kind {
         OptimizerKind::Asm => match &shared.probe {
             Some(plane) => {
-                // Probe key: the serving shard when the fabric routed
-                // us, the request's natural shard otherwise — either
-                // way, concurrent requests for the same network slice
-                // share one sampling ladder and one estimate.
-                let key = shard_key
-                    .unwrap_or_else(|| ShardKey::of_request(request.testbed, &request.dataset));
-                let (report, mode) = run_asm_with_plane(plane, key, &snapshot, &mut env, occ);
+                let (report, mode) =
+                    run_asm_with_plane(plane, probe_key, &snapshot, &mut env, occ);
                 probe_mode = Some(mode);
                 report
             }
@@ -453,6 +502,44 @@ fn serve_one(
                 shard.stats.note_drift(report.bulk_retunes() as u64);
                 shard.offer(completed_log(request, &testbed, &state, &report));
             }
+        }
+    }
+    // Settlement spans close the trace: what the link lease observed,
+    // what the probe plane's estimate now says for this shard, whether
+    // the completed log was offered back to the knowledge loop, and the
+    // terminal accounting. The whole block is skipped when no trace is
+    // attached.
+    if env.tracing() {
+        if let Some(exposure) = &contention {
+            env.note(TraceEvent::LeaseRelease {
+                contended_s: exposure.contended_s,
+                peak_neighbor_mbps: exposure.peak_neighbor_mbps,
+            });
+        }
+        let estimate = if planed_asm {
+            shared.probe.as_ref().and_then(|plane| plane.estimates().peek(probe_key))
+        } else {
+            None
+        };
+        let ingest_offered = match &shared.knowledge {
+            Knowledge::Global { feedback, .. } => feedback.is_some(),
+            Knowledge::Fabric(_) => shard.is_some(),
+        };
+        env.note(TraceEvent::Settle {
+            estimate_surface: estimate.as_ref().map(|e| e.surface_idx),
+            estimate_generation: estimate.as_ref().map(|e| e.generation),
+            ingest_offered,
+        });
+        env.note(TraceEvent::Done {
+            optimizer: report.optimizer.to_string(),
+            achieved_mbps: report.achieved_mbps(),
+            total_mb: report.total_mb(),
+            samples: report.sample_transfers(),
+        });
+    }
+    if let Some(sink) = &shared.traces {
+        if let Some(tb) = env.take_trace() {
+            sink.push(tb.finish());
         }
     }
     if let Some(tap) = &shared.tap {
@@ -532,6 +619,17 @@ pub(crate) fn run_admitted_asm<'kb>(
     match admission {
         Admission::Lead { guard, warm_start } => {
             asm.start_surface = warm_start;
+            // A leader pays for fresh samples: the budget reservation
+            // and (when an unconfident estimate seeded one) the
+            // warm-start surface are the whole admission story.
+            env.note(TraceEvent::Admission {
+                mode: "lead",
+                cluster: cluster_idx,
+                generation,
+                reserved_mb: expected_mb,
+                warm_start,
+                provenance: Provenance::Fresh,
+            });
             // Followers are released the moment the ladder converges —
             // not when this whole transfer finishes. If the run never
             // reaches the ladder (cold-start KB), the unfired hook drops
@@ -548,6 +646,18 @@ pub(crate) fn run_admitted_asm<'kb>(
         Admission::Piggyback(result) => {
             asm.start_surface = Some(result.surface_idx);
             asm.skip_sampling = true;
+            env.note(TraceEvent::Admission {
+                mode: "piggyback",
+                cluster: cluster_idx,
+                generation,
+                reserved_mb: 0.0,
+                warm_start: Some(result.surface_idx),
+                provenance: Provenance::Leader {
+                    cluster: result.cluster_idx,
+                    surface: result.surface_idx,
+                    generation: result.generation,
+                },
+            });
             let report = asm.run(env);
             plane.finish_passive(key, cluster_idx, asm.outcome, &report, generation, occ);
             (report, ProbeMode::Piggybacked)
@@ -555,6 +665,27 @@ pub(crate) fn run_admitted_asm<'kb>(
         Admission::Serve(surface_idx) => {
             asm.start_surface = surface_idx;
             asm.skip_sampling = true;
+            // Serve mode trusts stored knowledge: attribute the actual
+            // estimate when the store still holds one for this shard,
+            // the pinned KB otherwise (budget-forced serves with no
+            // estimate land there).
+            let provenance = match surface_idx.and_then(|_| plane.estimates().peek(key)) {
+                Some(e) => Provenance::Estimate {
+                    cluster: e.cluster_idx,
+                    surface: e.surface_idx,
+                    generation: e.generation,
+                    occ_streams: e.occ.streams,
+                },
+                None => Provenance::Kb { generation, cluster: cluster_idx },
+            };
+            env.note(TraceEvent::Admission {
+                mode: "serve",
+                cluster: cluster_idx,
+                generation,
+                reserved_mb: 0.0,
+                warm_start: surface_idx,
+                provenance,
+            });
             let report = asm.run(env);
             plane.finish_passive(key, cluster_idx, asm.outcome, &report, generation, occ);
             (report, ProbeMode::EstimateServed)

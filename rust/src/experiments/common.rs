@@ -77,6 +77,7 @@ impl World {
                 faults: None,
                 tap: None,
                 links: None,
+                traces: None,
             },
         )
     }
@@ -99,6 +100,7 @@ impl World {
                 faults: None,
                 tap: None,
                 links: None,
+                traces: None,
             },
         )
     }
@@ -122,6 +124,7 @@ impl World {
                 faults: None,
                 tap: None,
                 links: Some(links),
+                traces: None,
             },
         )
     }

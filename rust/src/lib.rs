@@ -100,6 +100,23 @@
 //! against a fault-free control replay. `dtopt scenario <name|file>`
 //! runs one; `tests/scenario_conformance.rs` runs the bundled library.
 //!
+//! ## Decision-provenance telemetry (`crate::telemetry`)
+//!
+//! Nothing above can *explain* a single decision after the fact — which
+//! KB cluster, estimate, piggybacked ladder, or allowance clamp
+//! produced a given θ. The [`telemetry`] subsystem makes attribution a
+//! first-class artifact: every served request can carry a
+//! [`telemetry::DecisionTrace`] — one typed event per layer hop
+//! (routing, fault consult, link + probe admission, ladder steps,
+//! allowance clamps, lease release, settlement), each stamped with the
+//! [`telemetry::Provenance`] of the knowledge it consumed. Traces are
+//! byte-identical under the same seed; the scenario engine appends a
+//! `trace-complete` invariant and `dtopt trace <scenario>` prints the
+//! "why this θ" chain for any request. The same subsystem provides the
+//! bounded [`telemetry::LogHistogram`] behind every metrics
+//! distribution (mergeable, ≤1% quantile error, constant memory) and
+//! `Metrics::render_json` for machine-readable export.
+//!
 //! See `DESIGN.md` (repo root) for the layering diagram, the feedback
 //! dataflow, the fabric's routing diagram and shard lifecycle, the
 //! probe-plane dataflow, the scenario engine's dataflow and scenario
@@ -119,4 +136,5 @@ pub mod netplane;
 pub mod probe;
 pub mod scenario;
 pub mod sim;
+pub mod telemetry;
 pub mod util;

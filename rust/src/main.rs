@@ -9,8 +9,10 @@
 //!   serve      [--requests N] [--workers W] [--optimizer O] [--fabric]
 //!   experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|convoy|all
 //!              [--quick|--full]
-//!   scenario   <name|file> [--seed S] [--full] [--timeline] [--list]
+//!   scenario   <name|file> [--seed S] [--full] [--timeline] [--json] [--list]
 //!              deterministic fault-injecting replay + invariant verdict
+//!   trace      <name|file> [--request N] [--json] [--seed S] [--full]
+//!              per-request decision-provenance traces for one replay
 //!   selftest                     quick end-to-end sanity run
 
 use anyhow::{bail, Context, Result};
@@ -108,6 +110,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "serve" => cmd_serve(&opts),
         "experiment" => cmd_experiment(&opts),
         "scenario" => cmd_scenario(&opts),
+        "trace" => cmd_trace(&opts),
         "selftest" => cmd_selftest(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -128,7 +131,8 @@ fn print_help() {
          transfer --testbed T --files N --avg-mb M [--optimizer O] [--kb F] [--load L]\n  \
          serve [--requests N] [--workers W] [--optimizer O] [--fabric]\n  \
          experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|convoy|all [--quick|--full]\n  \
-         scenario <name|file> [--seed S] [--full] [--timeline] (--list prints bundled names)\n  \
+         scenario <name|file> [--seed S] [--full] [--timeline] [--json] (--list prints bundled names)\n  \
+         trace <name|file> [--request N] [--json] [--seed S] [--full]\n  \
          selftest"
     );
 }
@@ -221,6 +225,7 @@ fn cmd_transfer(opts: &Opts) -> Result<()> {
             faults: None,
             tap: None,
             links: None,
+            traces: None,
         },
     );
     let mut rng = Rng::new(seed);
@@ -319,6 +324,7 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         faults: None,
         tap: None,
         links: Some(links),
+        traces: None,
     };
     let coord = match (&fabric, &service) {
         (Some(router), _) => {
@@ -522,7 +528,7 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
 /// non-zero (via the error path) on an unknown/missing name AND on any
 /// invariant violation, so CI and scripts can gate on it.
 fn cmd_scenario(opts: &Opts) -> Result<()> {
-    use dtopt::scenario::{render_timeline, render_verdict, run, RunOptions, Scenario};
+    use dtopt::scenario::{render_timeline, render_verdict, run, timeline_to_json};
 
     // `dtopt scenario --list` prints the bundled library (one name per
     // line, exit 0) for scripts; a missing name still exits non-zero
@@ -533,33 +539,15 @@ fn cmd_scenario(opts: &Opts) -> Result<()> {
         }
         return Ok(());
     }
-    let names = dtopt::scenario::script::bundled_names().join("|");
-    let Some(which) = opts.positional.first().map(|s| s.as_str()) else {
-        bail!("scenario name or file required; bundled: {names}");
-    };
-    let scenario = match dtopt::scenario::script::bundled(which) {
-        Some(text) => Scenario::parse(text)
-            .with_context(|| format!("bundled scenario '{which}' failed to parse"))?,
-        None => {
-            let path = std::path::Path::new(which);
-            if !path.is_file() {
-                bail!("unknown scenario '{which}' and no such file; bundled: {names}");
-            }
-            let text = std::fs::read_to_string(path)
-                .with_context(|| format!("reading scenario file '{which}'"))?;
-            Scenario::parse(&text)
-                .with_context(|| format!("scenario file '{which}' failed to parse"))?
-        }
-    };
-    let options = RunOptions {
-        quick: !opts.has("full"),
-        seed_override: opts.get("seed").map(|s| s.parse::<u64>()).transpose()
-            .context("--seed expects an integer")?,
-    };
-    let outcome = run(&scenario, &options)?;
+    let scenario = resolve_scenario(opts)?;
+    let outcome = run(&scenario, &run_options(opts)?)?;
     if opts.has("timeline") {
-        print!("{}", render_timeline(&outcome.timeline));
-        println!();
+        if opts.has("json") {
+            println!("{}", timeline_to_json(&outcome.timeline).to_string_compact());
+        } else {
+            print!("{}", render_timeline(&outcome.timeline));
+            println!();
+        }
     }
     print!("{}", render_verdict(&outcome));
     let violations: usize = outcome.reports.iter().map(|r| r.violations.len()).sum();
@@ -568,6 +556,81 @@ fn cmd_scenario(opts: &Opts) -> Result<()> {
         "scenario '{}' violated {violations} invariant check(s)",
         outcome.name
     );
+    Ok(())
+}
+
+/// Resolve the first positional argument to a parsed scenario: bundled
+/// name first, then fixture-file path. Shared by `scenario` and
+/// `trace` so both report the same errors (and exit codes) for missing
+/// or unknown names.
+fn resolve_scenario(opts: &Opts) -> Result<dtopt::scenario::Scenario> {
+    use dtopt::scenario::Scenario;
+
+    let names = dtopt::scenario::script::bundled_names().join("|");
+    let Some(which) = opts.positional.first().map(|s| s.as_str()) else {
+        bail!("scenario name or file required; bundled: {names}");
+    };
+    match dtopt::scenario::script::bundled(which) {
+        Some(text) => Scenario::parse(text)
+            .with_context(|| format!("bundled scenario '{which}' failed to parse")),
+        None => {
+            let path = std::path::Path::new(which);
+            if !path.is_file() {
+                bail!("unknown scenario '{which}' and no such file; bundled: {names}");
+            }
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading scenario file '{which}'"))?;
+            Scenario::parse(&text)
+                .with_context(|| format!("scenario file '{which}' failed to parse"))
+        }
+    }
+}
+
+fn run_options(opts: &Opts) -> Result<dtopt::scenario::RunOptions> {
+    Ok(dtopt::scenario::RunOptions {
+        quick: !opts.has("full"),
+        seed_override: opts.get("seed").map(|s| s.parse::<u64>()).transpose()
+            .context("--seed expects an integer")?,
+    })
+}
+
+/// Replay one scenario and print the decision-provenance trace of every
+/// served request (or one request via `--request N`, a 0-based index
+/// into the id-sorted traces). `--json` emits the same machine-readable
+/// form the trace goldens are built from; both forms are byte-identical
+/// across same-seed runs.
+fn cmd_trace(opts: &Opts) -> Result<()> {
+    use dtopt::scenario::run;
+    use dtopt::telemetry::traces_to_json;
+
+    let scenario = resolve_scenario(opts)?;
+    let outcome = run(&scenario, &run_options(opts)?)?;
+    let picked = match opts.get("request") {
+        None => None,
+        Some(v) => {
+            let n: usize = v.parse().context("--request expects a 0-based index")?;
+            anyhow::ensure!(
+                n < outcome.traces.len(),
+                "--request {n} out of range; scenario '{}' served {} request(s)",
+                outcome.name,
+                outcome.traces.len()
+            );
+            Some(n)
+        }
+    };
+    if opts.has("json") {
+        let json = match picked {
+            Some(n) => outcome.traces[n].to_json(),
+            None => traces_to_json(&outcome.traces),
+        };
+        println!("{}", json.to_string_compact());
+    } else if let Some(n) = picked {
+        print!("{}", outcome.traces[n].render_text());
+    } else {
+        for trace in &outcome.traces {
+            print!("{}", trace.render_text());
+        }
+    }
     Ok(())
 }
 

@@ -22,6 +22,7 @@ use crate::baselines::{Optimizer, Phase, RunReport, TransferEnv};
 use crate::offline::knowledge::KnowledgeBase;
 use crate::sim::dataset::Dataset;
 use crate::sim::params::Params;
+use crate::telemetry::TraceEvent;
 
 /// ASM configuration.
 #[derive(Debug, Clone, Copy)]
@@ -134,6 +135,7 @@ impl Optimizer for AdaptiveSampling<'_> {
             Some(c) if !c.surfaces.is_empty() => c,
             // Cold start (no history): fall back to the SC heuristic.
             _ => {
+                env.note(TraceEvent::ColdStartFallback);
                 let params = SingleChunk::default().choose(env);
                 let phase = crate::baselines::bulk_phase(env, &dataset, params);
                 return RunReport {
@@ -206,20 +208,41 @@ impl Optimizer for AdaptiveSampling<'_> {
             samples += 1;
             chosen = idx;
             last_sample = Some((params, out.steady_mbps));
-            if surface.contains(&params, out.steady_mbps) {
-                break; // converged
-            }
+            let in_bound = surface.contains(&params, out.steady_mbps);
             // Outside the confidence region: the surface does not
             // represent the current external load — jump to the closest.
-            match closest_surface(surfaces, &params, out.steady_mbps) {
-                Some((ci, _)) if ci != idx => idx = ci,
-                _ => break, // already the closest: accept it
+            let jump = if in_bound {
+                None
+            } else {
+                match closest_surface(surfaces, &params, out.steady_mbps) {
+                    Some((ci, _)) if ci != idx => Some(ci),
+                    _ => None, // already the closest: accept it
+                }
+            };
+            env.note(TraceEvent::LadderStep {
+                step: samples,
+                surface: idx,
+                cc: params.cc,
+                p: params.p,
+                pp: params.pp,
+                measured_mbps: out.steady_mbps,
+                in_bound,
+                jump_to: jump,
+            });
+            match jump {
+                Some(ci) => idx = ci,
+                None => break, // converged, or no closer surface
             }
             chosen = idx;
         }
         // The ladder has settled (converged, exhausted its budget, or
         // was skipped): anyone coalesced behind this run can proceed
         // now — the bulk transfer below adds nothing they wait for.
+        env.note(TraceEvent::Converged {
+            surface: chosen,
+            sampled: samples > 0,
+            intensity: surfaces[chosen].intensity,
+        });
         if let Some(on_converged) = self.on_converged.take() {
             on_converged(AsmOutcome {
                 surface_idx: chosen,
@@ -261,6 +284,7 @@ impl Optimizer for AdaptiveSampling<'_> {
                 // recent achieved throughput.
                 if let Some((ci, _)) = closest_surface(surfaces, &params, out.steady_mbps) {
                     if ci != active {
+                        env.note(TraceEvent::BulkRetune { from_surface: active, to_surface: ci });
                         active = ci;
                         monitor.reset();
                     }

@@ -41,6 +41,7 @@ use super::inject::Fault;
 use crate::fabric::ShardKey;
 use crate::probe::ProbeMode;
 use crate::sim::testbed::{Testbed, TestbedId};
+use crate::telemetry::DecisionTrace;
 use std::collections::HashMap;
 
 /// The estimate the runner peeked immediately before a sequential
@@ -454,11 +455,46 @@ pub fn goodput_floor_report(
     report
 }
 
+/// The trace-completeness verdict: every served response on the
+/// timeline carries a [`DecisionTrace`], and every trace is structurally
+/// complete — an admission, a decision (for ASM), a settlement, a lease
+/// release for every link admission, and strictly monotone virtual
+/// timestamps (see [`DecisionTrace::completeness_errors`]). Reported in
+/// the same shape as the timeline checkers; appended by the runner,
+/// which holds the traces the timeline doesn't carry.
+pub fn trace_completeness_report(
+    timeline: &[Event],
+    traces: &[DecisionTrace],
+) -> InvariantReport {
+    let mut report = InvariantReport { name: "trace-complete", checked: 0, violations: vec![] };
+    let by_id: HashMap<u64, &DecisionTrace> =
+        traces.iter().map(|t| (t.request_id, t)).collect();
+    for r in responses(timeline) {
+        report.checked += 1;
+        match by_id.get(&r.id) {
+            None => report.violations.push(Violation {
+                at_s: r.t_s,
+                detail: format!("response {} on {} has no decision trace", r.id, r.key),
+            }),
+            Some(trace) => {
+                for error in trace.completeness_errors() {
+                    report.violations.push(Violation {
+                        at_s: r.t_s,
+                        detail: format!("trace for response {} on {}: {error}", r.id, r.key),
+                    });
+                }
+            }
+        }
+    }
+    report
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sim::dataset::SizeClass;
     use crate::sim::testbed::TestbedId;
+    use crate::telemetry::{Provenance, TraceBuilder, TraceEvent};
 
     fn key() -> ShardKey {
         ShardKey::new(TestbedId::Xsede, SizeClass::Large)
@@ -687,5 +723,52 @@ mod tests {
         let collapsed = goodput_floor_report(100.0, 1000.0, 0.5);
         assert!(!collapsed.ok());
         assert!(collapsed.violations[0].detail.contains("fell below"));
+    }
+
+    fn complete_trace(id: u64) -> DecisionTrace {
+        let mut tb = TraceBuilder::new(id, 0xF00 + id);
+        tb.note(TraceEvent::Admission {
+            mode: "serve",
+            cluster: Some(0),
+            generation: 0,
+            reserved_mb: 0.0,
+            warm_start: Some(1),
+            provenance: Provenance::Kb { generation: 0, cluster: Some(0) },
+        });
+        tb.note(TraceEvent::Converged { surface: 1, sampled: false, intensity: 0.2 });
+        tb.note(TraceEvent::Settle {
+            estimate_surface: Some(1),
+            estimate_generation: Some(0),
+            ingest_offered: true,
+        });
+        tb.note(TraceEvent::Done {
+            optimizer: "ASM".to_string(),
+            achieved_mbps: 900.0,
+            total_mb: 100.0,
+            samples: 0,
+        });
+        tb.finish()
+    }
+
+    #[test]
+    fn trace_completeness_requires_a_complete_trace_per_response() {
+        let timeline =
+            vec![Event::Response(response(1, 0)), Event::Response(response(2, 0))];
+        let complete = [complete_trace(1), complete_trace(2)];
+        let report = trace_completeness_report(&timeline, &complete);
+        assert_eq!(report.checked, 2);
+        assert!(report.ok(), "{:?}", report.violations);
+
+        // Response 2's trace missing entirely.
+        let report = trace_completeness_report(&timeline, &complete[..1]);
+        assert_eq!(report.violations.len(), 1);
+        assert!(report.violations[0].detail.contains("no decision trace"));
+
+        // Response 2's trace present but structurally broken.
+        let mut broken = complete_trace(2);
+        broken.events.retain(|(_, e)| e.kind() != "settle");
+        let report = trace_completeness_report(&timeline, &[complete_trace(1), broken]);
+        assert_eq!(report.violations.len(), 1);
+        assert!(report.violations[0].detail.contains("no settlement event"));
     }
 }

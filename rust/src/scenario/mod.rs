@@ -26,17 +26,23 @@
 //! * [`script`] — the declarative scenario description (arrival rules,
 //!   bursts, fault schedule) with a plain-text parser; the bundled
 //!   library (`flash-crowd`, `brownout`, `stale-kb`, `probe-famine`,
-//!   `shard-churn`) ships as fixture files under `rust/scenarios/`.
+//!   `shard-churn`, `convoy`) ships as fixture files under
+//!   `rust/scenarios/`.
 //! * [`inject`] — timed fault events, each applied through the target
 //!   layer's own fault hook (`sim::fault::FaultBoard`, probe-budget
 //!   starvation, forced shard eviction, forced/paused refresh).
 //! * [`invariant`] — the structured replay timeline and the
 //!   cross-cutting checkers evaluated over it (cluster/generation
 //!   estimate guards, piggyback-leader match, monotone shard
-//!   generations, non-negative budgets, bounded goodput degradation).
+//!   generations, non-negative budgets, bounded goodput degradation,
+//!   and trace completeness: every served response must carry a
+//!   structurally complete [`crate::telemetry::DecisionTrace`]).
 //! * [`runner`] — drives the replay on simulated time, records the
-//!   timeline (byte-identical across same-seed runs), and renders the
-//!   verdict table. `dtopt scenario <name|file>` is the CLI entry;
+//!   timeline (byte-identical across same-seed runs) plus one decision
+//!   trace per response, and renders the verdict table (or the
+//!   machine-readable [`runner::timeline_to_json`]). `dtopt scenario
+//!   <name|file>` is the CLI entry, `dtopt trace <name|file>` prints
+//!   the per-request provenance chains;
 //!   `tests/scenario_conformance.rs` runs every bundled scenario in
 //!   quick mode.
 
@@ -46,6 +52,11 @@ pub mod runner;
 pub mod script;
 
 pub use inject::{Fault, FaultEvent};
-pub use invariant::{Event, EstimateObs, InvariantReport, PiggybackObs, ResponseEvent, Violation};
-pub use runner::{render_timeline, render_verdict, run, RunOptions, ScenarioOutcome};
+pub use invariant::{
+    trace_completeness_report, Event, EstimateObs, InvariantReport, PiggybackObs,
+    ResponseEvent, Violation,
+};
+pub use runner::{
+    render_timeline, render_verdict, run, timeline_to_json, RunOptions, ScenarioOutcome,
+};
 pub use script::{ArrivalRule, Burst, Scenario};

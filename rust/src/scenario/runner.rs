@@ -52,6 +52,8 @@ use crate::sim::dataset::Dataset;
 use crate::sim::fault::FaultBoard;
 use crate::sim::testbed::{Testbed, TestbedId};
 use crate::sim::traffic::DAY_S;
+use crate::telemetry::{DecisionTrace, TraceBuilder, TraceEvent, TraceSink};
+use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -85,6 +87,10 @@ pub struct ScenarioOutcome {
     pub quick: bool,
     pub timeline: Vec<Event>,
     pub reports: Vec<InvariantReport>,
+    /// One decision trace per served response of the faulted replay,
+    /// sorted by request id (the control replay's traces are discarded
+    /// — its responses never reach the timeline either).
+    pub traces: Vec<DecisionTrace>,
     /// Mean response goodput of the (faulted) replay.
     pub faulted_mean_mbps: f64,
     /// Mean response goodput of the fault-free control replay (only
@@ -107,13 +113,17 @@ impl ScenarioOutcome {
     pub fn report(&self, name: &str) -> Option<&InvariantReport> {
         self.reports.iter().find(|r| r.name == name)
     }
+
+    pub fn trace(&self, request_id: u64) -> Option<&DecisionTrace> {
+        self.traces.iter().find(|t| t.request_id == request_id)
+    }
 }
 
 /// Run a scenario: the faulted replay, the control replay when a
 /// goodput floor is declared, and the invariant verdicts.
 pub fn run(scenario: &Scenario, options: &RunOptions) -> Result<ScenarioOutcome> {
     let seed = options.seed_override.unwrap_or(scenario.seed);
-    let (timeline, faulted_mean) = replay(scenario, seed, options.quick, true)?;
+    let (timeline, faulted_mean, traces) = replay(scenario, seed, options.quick, true)?;
     let control_mean = if scenario.goodput_floor.is_some() && !scenario.faults.is_empty() {
         Some(replay(scenario, seed, options.quick, false)?.1)
     } else {
@@ -130,12 +140,14 @@ pub fn run(scenario: &Scenario, options: &RunOptions) -> Result<ScenarioOutcome>
     if let (Some(floor), Some(control)) = (scenario.goodput_floor, control_mean) {
         reports.push(invariant::goodput_floor_report(faulted_mean, control, floor));
     }
+    reports.push(invariant::trace_completeness_report(&timeline, &traces));
     Ok(ScenarioOutcome {
         name: scenario.name.clone(),
         seed,
         quick: options.quick,
         timeline,
         reports,
+        traces,
         faulted_mean_mbps: faulted_mean,
         control_mean_mbps: control_mean,
     })
@@ -179,6 +191,10 @@ struct ReplayCtx {
     /// pristine testbeds.
     board: Option<Arc<FaultBoard>>,
     tap: Arc<ResponseTap>,
+    /// Decision-trace sink: always attached, so every replay (and the
+    /// directly driven coalesced path, which mirrors the worker's
+    /// emissions) yields one trace per response.
+    traces: Arc<TraceSink>,
     seed: u64,
     /// Virtual submission-time base: the day after the history ends.
     t_base: f64,
@@ -286,7 +302,7 @@ fn replay(
     seed: u64,
     quick: bool,
     inject_faults: bool,
-) -> Result<(Vec<Event>, f64)> {
+) -> Result<(Vec<Event>, f64, Vec<DecisionTrace>)> {
     let scratch = std::env::temp_dir().join(format!(
         "dtopt_scenario_{}_{}_{}",
         std::process::id(),
@@ -305,7 +321,7 @@ fn replay_in(
     quick: bool,
     inject_faults: bool,
     scratch: &std::path::Path,
-) -> Result<(Vec<Event>, f64)> {
+) -> Result<(Vec<Event>, f64, Vec<DecisionTrace>)> {
     // --- World: per-network history + one knowledge base -------------------
     let mut rows = Vec::new();
     for id in scenario.networks() {
@@ -342,6 +358,7 @@ fn replay_in(
         board.clone(),
     ));
     let tap = Arc::new(ResponseTap::new());
+    let traces = Arc::new(TraceSink::new());
     let router = Arc::new(ShardRouter::open(
         &scratch.join("fabric"),
         kb,
@@ -358,9 +375,11 @@ fn replay_in(
             faults: board.clone(),
             tap: Some(tap.clone()),
             links: Some(links.clone()),
+            traces: Some(traces.clone()),
         },
     );
-    let ctx = ReplayCtx { coordinator, router, plane, links, board, tap, seed, t_base };
+    let ctx =
+        ReplayCtx { coordinator, router, plane, links, board, tap, traces, seed, t_base };
 
     // --- Schedule: merge arrivals, bursts, and faults -----------------------
     let mut ops: Vec<Op> = Vec::new();
@@ -474,7 +493,11 @@ fn replay_in(
     ctx.coordinator.shutdown();
     let _ = ctx.router.flush_all(Duration::from_secs(30));
     ctx.router.shutdown();
-    Ok((timeline, mean))
+    // Sorted by request id: sink order is completion order, which the
+    // coalesced path's follower threads would make schedule-dependent.
+    let mut traces = ctx.traces.drain();
+    traces.sort_by_key(|t| t.request_id);
+    Ok((timeline, mean, traces))
 }
 
 /// Post-request maintenance sweep: drain every ingest queue, then give
@@ -738,10 +761,27 @@ fn run_admitted(
     let t_submit = ctx.t_base + t_s;
     let state = hidden_state_for(testbed, seed, t_submit);
     let mut env = TransferEnv::new(testbed.clone(), dataset, state, seed);
+    // Mirror the worker path's trace head: routing, the fault consult
+    // (the testbed arrives here already shaped), then the link
+    // admission below. The admission event itself is emitted inside
+    // `run_admitted_asm`, shared with the worker path.
+    let mut tb = TraceBuilder::new(id, seed);
+    tb.note(TraceEvent::Route {
+        key: key.name(),
+        borrowed: routed_borrowed(shard),
+        generation,
+    });
+    if ctx.board.is_some() {
+        tb.note(TraceEvent::FaultConsult { bandwidth_mbps: testbed.path.link.bandwidth_mbps });
+    }
+    env.attach_trace(tb);
     // Register on the shared link exactly like the worker path does —
     // execution is sequential here, so the registration (and its
     // release below) is deterministic.
-    env.attach_link(ctx.links.clone().admit(key.network, id));
+    let lease = ctx.links.clone().admit(key.network, id);
+    let view = lease.view();
+    env.attach_link(lease);
+    env.note(TraceEvent::LinkAdmit { epoch: view.epoch, streams: view.streams });
     // What a piggybacked follower adopted, noted before the admission
     // is consumed by the shared execution body.
     let piggyback = match &admission {
@@ -791,6 +831,28 @@ fn run_admitted(
         report.sample_transfers(),
         0,
     );
+    // Mirror the worker path's settlement spans, then bank the trace.
+    if let Some(exposure) = &exposure {
+        env.note(TraceEvent::LeaseRelease {
+            contended_s: exposure.contended_s,
+            peak_neighbor_mbps: exposure.peak_neighbor_mbps,
+        });
+    }
+    let settled = ctx.plane.estimates().peek(key);
+    env.note(TraceEvent::Settle {
+        estimate_surface: settled.as_ref().map(|e| e.surface_idx),
+        estimate_generation: settled.as_ref().map(|e| e.generation),
+        ingest_offered: shard.is_some(),
+    });
+    env.note(TraceEvent::Done {
+        optimizer: report.optimizer.to_string(),
+        achieved_mbps: report.achieved_mbps(),
+        total_mb: report.total_mb(),
+        samples: report.sample_transfers(),
+    });
+    if let Some(tb) = env.take_trace() {
+        ctx.traces.push(tb.finish());
+    }
     ResponseEvent {
         t_s,
         id,
@@ -886,6 +948,59 @@ pub fn render_timeline(timeline: &[Event]) -> String {
     out
 }
 
+/// Machine-readable timeline: the same simulation-derived facts as
+/// [`render_timeline`], as a JSON array (byte-identical across
+/// same-seed runs — object keys are sorted and every value is
+/// deterministic). Each response entry carries `trace_id`, the
+/// request id its [`DecisionTrace`] is keyed by in
+/// [`ScenarioOutcome::traces`] and in `dtopt trace` output.
+pub fn timeline_to_json(timeline: &[Event]) -> Json {
+    Json::Arr(
+        timeline
+            .iter()
+            .map(|event| {
+                let mut obj = Json::obj();
+                match event {
+                    Event::Fault { t_s, fault } => {
+                        obj.set("type", Json::Str("fault".to_string()))
+                            .set("t_s", Json::Num(*t_s))
+                            .set("fault", Json::Str(fault.describe()));
+                    }
+                    Event::Refresh { t_s, key, generation, cause } => {
+                        obj.set("type", Json::Str("refresh".to_string()))
+                            .set("t_s", Json::Num(*t_s))
+                            .set("key", Json::Str(key.name()))
+                            .set("generation", Json::Num(*generation as f64))
+                            .set("cause", Json::Str(cause.clone()));
+                    }
+                    Event::Response(r) => {
+                        obj.set("type", Json::Str("response".to_string()))
+                            .set("t_s", Json::Num(r.t_s))
+                            .set("id", Json::Num(r.id as f64))
+                            .set("trace_id", Json::Num(r.id as f64))
+                            .set("key", Json::Str(r.key.name()))
+                            .set("generation", Json::Num(r.generation as f64))
+                            .set("borrowed", Json::Bool(r.borrowed))
+                            .set(
+                                "mode",
+                                r.mode.map_or(Json::Null, |m| Json::Str(m.name().to_string())),
+                            )
+                            .set("samples", Json::Num(r.samples as f64))
+                            .set("retunes", Json::Num(r.retunes as f64))
+                            .set("mb", Json::Num(r.mb))
+                            .set("transfer_s", Json::Num(r.transfer_s))
+                            .set("achieved_mbps", Json::Num(r.achieved_mbps))
+                            .set("budget_after_mb", Json::Num(r.budget_after_mb))
+                            .set("budget_forced", Json::Bool(r.budget_forced))
+                            .set("coalesced", Json::Bool(r.coalesced));
+                    }
+                }
+                obj
+            })
+            .collect(),
+    )
+}
+
 /// The verdict table: headline line, then one row per invariant with
 /// its violations inlined.
 pub fn render_verdict(outcome: &ScenarioOutcome) -> String {
@@ -950,6 +1065,21 @@ mod tests {
         let verdict = render_verdict(&outcome);
         assert!(verdict.contains("budget-non-negative"), "{verdict}");
         assert!(verdict.contains("monotone-generations"), "{verdict}");
+        assert!(verdict.contains("trace-complete"), "{verdict}");
+        // Every response carries a complete decision trace, keyed by id.
+        assert_eq!(outcome.traces.len(), 3);
+        for r in outcome.responses() {
+            let trace = outcome.trace(r.id).expect("trace per response");
+            assert!(trace.is_complete(), "{:?}", trace.completeness_errors());
+            assert!(trace.event_kinds().any(|k| k == "admission"));
+            assert!(trace.event_kinds().any(|k| k == "link-admit"));
+        }
+        // The first (led) trace explains itself as a fresh sample; the
+        // estimate-served rest attribute the stored estimate.
+        let led = outcome.trace(1).unwrap().render_text();
+        assert!(led.contains("admission lead"), "{led}");
+        let served = outcome.trace(2).unwrap().render_text();
+        assert!(served.contains("admission serve"), "{served}");
     }
 
     #[test]
@@ -1000,5 +1130,17 @@ mod tests {
         assert!(rendered.contains("est=c1/s4@g2o48+"), "{rendered}");
         assert!(rendered.contains("occ=0/0 peak=7250"), "{rendered}");
         assert!(rendered.contains("goodput=2461.5"), "{rendered}");
+
+        // The JSON timeline is deterministic, parses, and keys each
+        // response to its decision trace.
+        let json = timeline_to_json(&timeline).to_string_compact();
+        assert_eq!(json, timeline_to_json(&timeline).to_string_compact());
+        let parsed = Json::parse(&json).unwrap();
+        let entries = parsed.as_arr().unwrap();
+        assert_eq!(entries.len(), 3);
+        assert_eq!(entries[0].req_str("type").unwrap(), "fault");
+        assert_eq!(entries[2].req_str("type").unwrap(), "response");
+        assert_eq!(entries[2].req_usize("trace_id").unwrap(), 7);
+        assert_eq!(entries[2].req_str("mode").unwrap(), "estimate-served");
     }
 }

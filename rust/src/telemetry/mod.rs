@@ -1,0 +1,26 @@
+//! Decision-provenance telemetry: bounded streaming histograms and
+//! deterministic per-request decision traces.
+//!
+//! Two halves, both serde-free and dependency-light:
+//!
+//! * [`hist`] — the log-bucketed [`LogHistogram`] behind every
+//!   latency/throughput aggregate in [`crate::coordinator::metrics`]:
+//!   bounded memory, mergeable, ≤1% relative quantile error, exact
+//!   mean.
+//! * [`trace`] — the per-request [`DecisionTrace`]: a typed event per
+//!   layer hop of the serve path (routing, fault consult, link + probe
+//!   admission, ASM ladder, allowance clamps, lease release,
+//!   settlement), each carrying the [`Provenance`] of the knowledge it
+//!   consumed. Byte-identical under the same seed; the scenario
+//!   engine's `trace-complete` invariant and the `dtopt trace` CLI are
+//!   built on it.
+//!
+//! See DESIGN.md § "Decision-provenance telemetry".
+
+pub mod hist;
+pub mod trace;
+
+pub use hist::LogHistogram;
+pub use trace::{
+    traces_to_json, DecisionTrace, Provenance, TraceBuilder, TraceEvent, TraceSink,
+};

@@ -1,0 +1,662 @@
+//! Decision-provenance traces: one structured, deterministic event
+//! stream per served request, emitted at every layer hop of the serve
+//! path — shard routing, fault-board consultation, link admission,
+//! probe-plane admission, the ASM ladder, netplane allowance clamps,
+//! lease release, and settlement.
+//!
+//! ## Determinism contract
+//!
+//! Two same-seed runs must produce **byte-identical** traces, so every
+//! field is a discrete fact or a simulation-derived number:
+//!
+//! * virtual timestamps are a per-trace monotone sequence counter, not
+//!   wall clocks;
+//! * no wall-clock quantity is ever recorded (in particular, the probe
+//!   plane's *decayed estimate confidence* is wall-clock-dependent and
+//!   deliberately excluded — provenance carries the estimate's cluster,
+//!   surface, KB generation, and occupancy stamp instead);
+//! * all floats (goodput, clamped allowances, contention exposure)
+//!   derive from the simulator's seeded arithmetic.
+//!
+//! See DESIGN.md § "Decision-provenance telemetry" for the span
+//! taxonomy.
+
+use crate::util::json::Json;
+use std::sync::Mutex;
+
+/// Where the knowledge behind a decision came from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Provenance {
+    /// The offline knowledge base: generation + matched cluster
+    /// (`None` = cold/empty KB).
+    Kb { generation: u64, cluster: Option<usize> },
+    /// A stored network estimate, identified by its recording stamp.
+    /// The decayed confidence float is deliberately absent: it depends
+    /// on wall-clock elapsed time and would break byte-determinism.
+    Estimate { cluster: usize, surface: usize, generation: u64, occ_streams: u32 },
+    /// A coalesced leader's published probe result.
+    Leader { cluster: usize, surface: usize, generation: u64 },
+    /// Fresh real-time sampling (the request pays for its own probes).
+    Fresh,
+}
+
+impl Provenance {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Provenance::Kb { .. } => "kb",
+            Provenance::Estimate { .. } => "estimate",
+            Provenance::Leader { .. } => "leader",
+            Provenance::Fresh => "fresh",
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("kind", Json::Str(self.kind().to_string()));
+        match self {
+            Provenance::Kb { generation, cluster } => {
+                obj.set("generation", Json::Num(*generation as f64));
+                obj.set(
+                    "cluster",
+                    cluster.map_or(Json::Null, |c| Json::Num(c as f64)),
+                );
+            }
+            Provenance::Estimate { cluster, surface, generation, occ_streams } => {
+                obj.set("cluster", Json::Num(*cluster as f64))
+                    .set("surface", Json::Num(*surface as f64))
+                    .set("generation", Json::Num(*generation as f64))
+                    .set("occ_streams", Json::Num(*occ_streams as f64));
+            }
+            Provenance::Leader { cluster, surface, generation } => {
+                obj.set("cluster", Json::Num(*cluster as f64))
+                    .set("surface", Json::Num(*surface as f64))
+                    .set("generation", Json::Num(*generation as f64));
+            }
+            Provenance::Fresh => {}
+        }
+        obj
+    }
+
+    fn describe(&self) -> String {
+        match self {
+            Provenance::Kb { generation, cluster } => match cluster {
+                Some(c) => format!("kb gen={generation} cluster={c}"),
+                None => format!("kb gen={generation} (cold)"),
+            },
+            Provenance::Estimate { cluster, surface, generation, occ_streams } => format!(
+                "estimate c{cluster}/s{surface}@g{generation} occ={occ_streams}"
+            ),
+            Provenance::Leader { cluster, surface, generation } => {
+                format!("leader c{cluster}/s{surface}@g{generation}")
+            }
+            Provenance::Fresh => "fresh sample".to_string(),
+        }
+    }
+}
+
+/// One typed event on a request's decision trace.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// Shard routing resolved: which shard key serves the request and
+    /// whether the shard's KB is borrowed from the global build.
+    Route { key: String, borrowed: bool, generation: u64 },
+    /// The fault board shaped the testbed before serving (records the
+    /// post-shape link capacity so degradations are visible).
+    FaultConsult { bandwidth_mbps: f64 },
+    /// The contention plane admitted the transfer onto its link.
+    LinkAdmit { epoch: u64, streams: u32 },
+    /// Probe-plane admission: how this request obtains network
+    /// knowledge, what it reserved from the probe budget, and the
+    /// provenance of the knowledge it starts from.
+    Admission {
+        mode: &'static str,
+        cluster: Option<usize>,
+        generation: u64,
+        /// Probe budget debited at admission (0 when not leading).
+        reserved_mb: f64,
+        /// Ladder warm-start surface, when an unconfident estimate
+        /// seeded one.
+        warm_start: Option<usize>,
+        provenance: Provenance,
+    },
+    /// The KB had no surfaces for this cluster: single-chunk fallback.
+    ColdStartFallback,
+    /// One rung of the ASM ladder: the surface sampled, the θ it chose,
+    /// the measured rate, and where the bisection went next.
+    LadderStep {
+        step: usize,
+        surface: usize,
+        cc: u32,
+        p: u32,
+        pp: u32,
+        measured_mbps: f64,
+        /// The sample fell inside this surface's confidence band.
+        in_bound: bool,
+        /// Next surface the ladder jumped to (`None` = converged here).
+        jump_to: Option<usize>,
+    },
+    /// The ladder converged (or adopted its admission surface without
+    /// sampling).
+    Converged { surface: usize, sampled: bool, intensity: f64 },
+    /// The drift monitor re-tuned the bulk phase onto another surface.
+    BulkRetune { from_surface: usize, to_surface: usize },
+    /// The netplane lease clamped the optimizer's asked parallelism.
+    AllowanceClamp {
+        asked_cc: u32,
+        asked_p: u32,
+        asked_pp: u32,
+        granted_cc: u32,
+        granted_p: u32,
+        granted_pp: u32,
+    },
+    /// Neighbor traffic observed on the shared link during a chunk.
+    NeighborPressure { offered_mbps: f64, streams: u32 },
+    /// The link lease was released; its folded contention exposure.
+    LeaseRelease { contended_s: f64, peak_neighbor_mbps: f64 },
+    /// Settlement: what was written back to the estimate store and
+    /// whether the completed log was offered to ingest.
+    Settle {
+        estimate_surface: Option<usize>,
+        estimate_generation: Option<u64>,
+        ingest_offered: bool,
+    },
+    /// Terminal accounting for the request.
+    Done { optimizer: String, achieved_mbps: f64, total_mb: f64, samples: usize },
+}
+
+impl TraceEvent {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::Route { .. } => "route",
+            TraceEvent::FaultConsult { .. } => "fault-consult",
+            TraceEvent::LinkAdmit { .. } => "link-admit",
+            TraceEvent::Admission { .. } => "admission",
+            TraceEvent::ColdStartFallback => "cold-start-fallback",
+            TraceEvent::LadderStep { .. } => "ladder-step",
+            TraceEvent::Converged { .. } => "converged",
+            TraceEvent::BulkRetune { .. } => "bulk-retune",
+            TraceEvent::AllowanceClamp { .. } => "allowance-clamp",
+            TraceEvent::NeighborPressure { .. } => "neighbor-pressure",
+            TraceEvent::LeaseRelease { .. } => "lease-release",
+            TraceEvent::Settle { .. } => "settle",
+            TraceEvent::Done { .. } => "done",
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("kind", Json::Str(self.kind().to_string()));
+        match self {
+            TraceEvent::Route { key, borrowed, generation } => {
+                obj.set("key", Json::Str(key.clone()))
+                    .set("borrowed", Json::Bool(*borrowed))
+                    .set("generation", Json::Num(*generation as f64));
+            }
+            TraceEvent::FaultConsult { bandwidth_mbps } => {
+                obj.set("bandwidth_mbps", Json::Num(*bandwidth_mbps));
+            }
+            TraceEvent::LinkAdmit { epoch, streams } => {
+                obj.set("epoch", Json::Num(*epoch as f64))
+                    .set("streams", Json::Num(*streams as f64));
+            }
+            TraceEvent::Admission {
+                mode,
+                cluster,
+                generation,
+                reserved_mb,
+                warm_start,
+                provenance,
+            } => {
+                obj.set("mode", Json::Str(mode.to_string()))
+                    .set("cluster", cluster.map_or(Json::Null, |c| Json::Num(c as f64)))
+                    .set("generation", Json::Num(*generation as f64))
+                    .set("reserved_mb", Json::Num(*reserved_mb))
+                    .set(
+                        "warm_start",
+                        warm_start.map_or(Json::Null, |s| Json::Num(s as f64)),
+                    )
+                    .set("provenance", provenance.to_json());
+            }
+            TraceEvent::ColdStartFallback => {}
+            TraceEvent::LadderStep { step, surface, cc, p, pp, measured_mbps, in_bound, jump_to } => {
+                obj.set("step", Json::Num(*step as f64))
+                    .set("surface", Json::Num(*surface as f64))
+                    .set("cc", Json::Num(*cc as f64))
+                    .set("p", Json::Num(*p as f64))
+                    .set("pp", Json::Num(*pp as f64))
+                    .set("measured_mbps", Json::Num(*measured_mbps))
+                    .set("in_bound", Json::Bool(*in_bound))
+                    .set("jump_to", jump_to.map_or(Json::Null, |s| Json::Num(s as f64)));
+            }
+            TraceEvent::Converged { surface, sampled, intensity } => {
+                obj.set("surface", Json::Num(*surface as f64))
+                    .set("sampled", Json::Bool(*sampled))
+                    .set("intensity", Json::Num(*intensity));
+            }
+            TraceEvent::BulkRetune { from_surface, to_surface } => {
+                obj.set("from_surface", Json::Num(*from_surface as f64))
+                    .set("to_surface", Json::Num(*to_surface as f64));
+            }
+            TraceEvent::AllowanceClamp {
+                asked_cc,
+                asked_p,
+                asked_pp,
+                granted_cc,
+                granted_p,
+                granted_pp,
+            } => {
+                obj.set("asked_cc", Json::Num(*asked_cc as f64))
+                    .set("asked_p", Json::Num(*asked_p as f64))
+                    .set("asked_pp", Json::Num(*asked_pp as f64))
+                    .set("granted_cc", Json::Num(*granted_cc as f64))
+                    .set("granted_p", Json::Num(*granted_p as f64))
+                    .set("granted_pp", Json::Num(*granted_pp as f64));
+            }
+            TraceEvent::NeighborPressure { offered_mbps, streams } => {
+                obj.set("offered_mbps", Json::Num(*offered_mbps))
+                    .set("streams", Json::Num(*streams as f64));
+            }
+            TraceEvent::LeaseRelease { contended_s, peak_neighbor_mbps } => {
+                obj.set("contended_s", Json::Num(*contended_s))
+                    .set("peak_neighbor_mbps", Json::Num(*peak_neighbor_mbps));
+            }
+            TraceEvent::Settle { estimate_surface, estimate_generation, ingest_offered } => {
+                obj.set(
+                    "estimate_surface",
+                    estimate_surface.map_or(Json::Null, |s| Json::Num(s as f64)),
+                )
+                .set(
+                    "estimate_generation",
+                    estimate_generation.map_or(Json::Null, |g| Json::Num(g as f64)),
+                )
+                .set("ingest_offered", Json::Bool(*ingest_offered));
+            }
+            TraceEvent::Done { optimizer, achieved_mbps, total_mb, samples } => {
+                obj.set("optimizer", Json::Str(optimizer.clone()))
+                    .set("achieved_mbps", Json::Num(*achieved_mbps))
+                    .set("total_mb", Json::Num(*total_mb))
+                    .set("samples", Json::Num(*samples as f64));
+            }
+        }
+        obj
+    }
+
+    fn describe(&self) -> String {
+        match self {
+            TraceEvent::Route { key, borrowed, generation } => format!(
+                "routed to {key} gen={generation}{}",
+                if *borrowed { " (borrowed)" } else { " (native)" }
+            ),
+            TraceEvent::FaultConsult { bandwidth_mbps } => {
+                format!("fault board consulted; link at {bandwidth_mbps:.0} Mbps")
+            }
+            TraceEvent::LinkAdmit { epoch, streams } => {
+                format!("link admitted at epoch {epoch} ({streams} neighbor streams)")
+            }
+            TraceEvent::Admission { mode, reserved_mb, warm_start, provenance, .. } => {
+                let warm = match warm_start {
+                    Some(s) => format!(", warm-start s{s}"),
+                    None => String::new(),
+                };
+                format!(
+                    "admission {mode} [{}]{warm} reserved={reserved_mb:.1} MB",
+                    provenance.describe()
+                )
+            }
+            TraceEvent::ColdStartFallback => "cold KB: single-chunk fallback".to_string(),
+            TraceEvent::LadderStep { step, surface, cc, p, pp, measured_mbps, in_bound, jump_to } => {
+                let next = match jump_to {
+                    Some(s) => format!("jump s{s}"),
+                    None => "converge".to_string(),
+                };
+                format!(
+                    "ladder step {step}: s{surface} θ=({cc},{p},{pp}) -> {measured_mbps:.0} Mbps \
+                     {} -> {next}",
+                    if *in_bound { "in-bound" } else { "out-of-bound" }
+                )
+            }
+            TraceEvent::Converged { surface, sampled, intensity } => format!(
+                "converged on s{surface} (intensity {intensity:.2}{})",
+                if *sampled { ", sampled" } else { ", unsampled" }
+            ),
+            TraceEvent::BulkRetune { from_surface, to_surface } => {
+                format!("bulk drift re-tune s{from_surface} -> s{to_surface}")
+            }
+            TraceEvent::AllowanceClamp {
+                asked_cc,
+                asked_p,
+                asked_pp,
+                granted_cc,
+                granted_p,
+                granted_pp,
+            } => format!(
+                "allowance clamp ({asked_cc},{asked_p},{asked_pp}) -> \
+                 ({granted_cc},{granted_p},{granted_pp})"
+            ),
+            TraceEvent::NeighborPressure { offered_mbps, streams } => {
+                format!("neighbor pressure {offered_mbps:.0} Mbps / {streams} streams")
+            }
+            TraceEvent::LeaseRelease { contended_s, peak_neighbor_mbps } => format!(
+                "lease released (contended {contended_s:.2}s, peak neighbors \
+                 {peak_neighbor_mbps:.0} Mbps)"
+            ),
+            TraceEvent::Settle { estimate_surface, estimate_generation, ingest_offered } => {
+                let est = match (estimate_surface, estimate_generation) {
+                    (Some(s), Some(g)) => format!("estimate s{s}@g{g}"),
+                    _ => "no estimate".to_string(),
+                };
+                format!(
+                    "settled: {est}, ingest {}",
+                    if *ingest_offered { "offered" } else { "skipped" }
+                )
+            }
+            TraceEvent::Done { optimizer, achieved_mbps, total_mb, samples } => format!(
+                "done: {optimizer} moved {total_mb:.0} MB at {achieved_mbps:.1} Mbps \
+                 ({samples} samples)"
+            ),
+        }
+    }
+}
+
+/// Accumulates one request's events with monotone virtual timestamps.
+/// Carried inside the transfer environment so every layer can append
+/// without new plumbing.
+#[derive(Debug)]
+pub struct TraceBuilder {
+    request_id: u64,
+    seed: u64,
+    seq: u64,
+    events: Vec<(u64, TraceEvent)>,
+}
+
+impl TraceBuilder {
+    pub fn new(request_id: u64, seed: u64) -> Self {
+        TraceBuilder { request_id, seed, seq: 0, events: Vec::new() }
+    }
+
+    pub fn note(&mut self, event: TraceEvent) {
+        let at = self.seq;
+        self.seq += 1;
+        self.events.push((at, event));
+    }
+
+    pub fn finish(self) -> DecisionTrace {
+        DecisionTrace { request_id: self.request_id, seed: self.seed, events: self.events }
+    }
+}
+
+/// One request's complete, immutable decision trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionTrace {
+    pub request_id: u64,
+    pub seed: u64,
+    /// `(virtual timestamp, event)` pairs; timestamps are a strictly
+    /// monotone per-trace counter.
+    pub events: Vec<(u64, TraceEvent)>,
+}
+
+impl DecisionTrace {
+    pub fn event_kinds(&self) -> impl Iterator<Item = &'static str> + '_ {
+        self.events.iter().map(|(_, e)| e.kind())
+    }
+
+    fn has(&self, kind: &str) -> bool {
+        self.event_kinds().any(|k| k == kind)
+    }
+
+    /// Every structural defect in this trace; empty = complete. A
+    /// complete trace has an admission, a decision (convergence or
+    /// cold-start fallback — required only of ASM traces; the baseline
+    /// optimizers have no sampling ladder to converge), a settlement, a
+    /// lease release for every link admission, and strictly monotone
+    /// virtual timestamps.
+    pub fn completeness_errors(&self) -> Vec<String> {
+        let mut errors = Vec::new();
+        if !self.has("admission") {
+            errors.push("no admission event".to_string());
+        }
+        let asm = self.events.iter().any(|(_, e)| {
+            matches!(e, TraceEvent::Done { optimizer, .. } if optimizer == "ASM")
+        });
+        if asm && !self.has("converged") && !self.has("cold-start-fallback") {
+            errors.push("no decision event (converged or cold-start-fallback)".to_string());
+        }
+        if !self.has("settle") {
+            errors.push("no settlement event".to_string());
+        }
+        if !self.has("done") {
+            errors.push("no terminal done event".to_string());
+        }
+        if self.has("link-admit") && !self.has("lease-release") {
+            errors.push("link admitted but lease never released".to_string());
+        }
+        for pair in self.events.windows(2) {
+            if pair[1].0 <= pair[0].0 {
+                errors.push(format!(
+                    "virtual timestamps not strictly monotone: {} then {}",
+                    pair[0].0, pair[1].0
+                ));
+                break;
+            }
+        }
+        errors
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.completeness_errors().is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("request_id", Json::Num(self.request_id as f64))
+            .set("seed", Json::Num(self.seed as f64))
+            .set(
+                "events",
+                Json::Arr(
+                    self.events
+                        .iter()
+                        .map(|(at, event)| {
+                            let mut e = event.to_json();
+                            e.set("at", Json::Num(*at as f64));
+                            e
+                        })
+                        .collect(),
+                ),
+            );
+        obj
+    }
+
+    /// The human-readable "why this θ" explanation.
+    pub fn render_text(&self) -> String {
+        let mut out = format!("request {} (seed {:#x})\n", self.request_id, self.seed);
+        for (at, event) in &self.events {
+            out.push_str(&format!("  [{at:>3}] {:<18} {}\n", event.kind(), event.describe()));
+        }
+        out
+    }
+}
+
+/// Collects finished traces across requests; the coordinator's
+/// counterpart to [`crate::coordinator::ResponseTap`].
+#[derive(Debug, Default)]
+pub struct TraceSink {
+    traces: Mutex<Vec<DecisionTrace>>,
+}
+
+impl TraceSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&self, trace: DecisionTrace) {
+        self.traces.lock().expect("trace sink poisoned").push(trace);
+    }
+
+    /// Take everything collected so far.
+    pub fn drain(&self) -> Vec<DecisionTrace> {
+        std::mem::take(&mut *self.traces.lock().expect("trace sink poisoned"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.traces.lock().expect("trace sink poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Deterministic JSON for a batch of traces.
+pub fn traces_to_json(traces: &[DecisionTrace]) -> Json {
+    Json::Arr(traces.iter().map(DecisionTrace::to_json).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn complete_trace() -> DecisionTrace {
+        let mut tb = TraceBuilder::new(7, 0xABC);
+        tb.note(TraceEvent::Route {
+            key: "xsede/large".to_string(),
+            borrowed: false,
+            generation: 2,
+        });
+        tb.note(TraceEvent::LinkAdmit { epoch: 4, streams: 8 });
+        tb.note(TraceEvent::Admission {
+            mode: "lead",
+            cluster: Some(1),
+            generation: 2,
+            reserved_mb: 320.0,
+            warm_start: Some(3),
+            provenance: Provenance::Fresh,
+        });
+        tb.note(TraceEvent::LadderStep {
+            step: 1,
+            surface: 3,
+            cc: 4,
+            p: 4,
+            pp: 2,
+            measured_mbps: 2500.0,
+            in_bound: true,
+            jump_to: None,
+        });
+        tb.note(TraceEvent::Converged { surface: 3, sampled: true, intensity: 0.4 });
+        tb.note(TraceEvent::AllowanceClamp {
+            asked_cc: 8,
+            asked_p: 4,
+            asked_pp: 2,
+            granted_cc: 4,
+            granted_p: 4,
+            granted_pp: 2,
+        });
+        tb.note(TraceEvent::LeaseRelease { contended_s: 1.5, peak_neighbor_mbps: 900.0 });
+        tb.note(TraceEvent::Settle {
+            estimate_surface: Some(3),
+            estimate_generation: Some(2),
+            ingest_offered: true,
+        });
+        tb.note(TraceEvent::Done {
+            optimizer: "ASM".to_string(),
+            achieved_mbps: 2400.0,
+            total_mb: 20_000.0,
+            samples: 1,
+        });
+        tb.finish()
+    }
+
+    #[test]
+    fn builder_assigns_strictly_monotone_timestamps() {
+        let trace = complete_trace();
+        for (i, (at, _)) in trace.events.iter().enumerate() {
+            assert_eq!(*at, i as u64);
+        }
+        assert!(trace.is_complete(), "{:?}", trace.completeness_errors());
+    }
+
+    #[test]
+    fn completeness_flags_each_missing_piece() {
+        let mut missing_admission = complete_trace();
+        missing_admission.events.retain(|(_, e)| e.kind() != "admission");
+        assert!(missing_admission
+            .completeness_errors()
+            .iter()
+            .any(|e| e.contains("no admission")));
+
+        let mut missing_release = complete_trace();
+        missing_release.events.retain(|(_, e)| e.kind() != "lease-release");
+        assert!(missing_release
+            .completeness_errors()
+            .iter()
+            .any(|e| e.contains("lease never released")));
+
+        let mut shuffled = complete_trace();
+        shuffled.events[1].0 = 0; // duplicate timestamp
+        assert!(shuffled
+            .completeness_errors()
+            .iter()
+            .any(|e| e.contains("not strictly monotone")));
+
+        // The decision event is required of ASM traces only: baseline
+        // optimizers have no sampling ladder to converge.
+        let mut no_decision = complete_trace();
+        no_decision.events.retain(|(_, e)| e.kind() != "converged");
+        assert!(no_decision
+            .completeness_errors()
+            .iter()
+            .any(|e| e.contains("no decision event")));
+        for (_, e) in &mut no_decision.events {
+            if let TraceEvent::Done { optimizer, .. } = e {
+                *optimizer = "GO".to_string();
+            }
+        }
+        assert!(no_decision.is_complete(), "{:?}", no_decision.completeness_errors());
+    }
+
+    #[test]
+    fn json_rendering_is_deterministic_and_parses() {
+        let trace = complete_trace();
+        let a = trace.to_json().to_string_compact();
+        let b = trace.to_json().to_string_compact();
+        assert_eq!(a, b);
+        let parsed = Json::parse(&a).unwrap();
+        assert_eq!(parsed.req_usize("request_id").unwrap(), 7);
+        let events = parsed.req_arr("events").unwrap();
+        assert_eq!(events.len(), trace.events.len());
+        assert_eq!(events[0].req_str("kind").unwrap(), "route");
+    }
+
+    #[test]
+    fn text_rendering_reads_as_a_provenance_chain() {
+        let text = complete_trace().render_text();
+        assert!(text.contains("routed to xsede/large"), "{text}");
+        assert!(text.contains("admission lead [fresh sample]"), "{text}");
+        assert!(text.contains("ladder step 1"), "{text}");
+        assert!(text.contains("allowance clamp (8,4,2) -> (4,4,2)"), "{text}");
+        assert!(text.contains("settled: estimate s3@g2, ingest offered"), "{text}");
+    }
+
+    #[test]
+    fn sink_drains_in_push_order() {
+        let sink = TraceSink::new();
+        assert!(sink.is_empty());
+        sink.push(complete_trace());
+        sink.push(complete_trace());
+        assert_eq!(sink.len(), 2);
+        let drained = sink.drain();
+        assert_eq!(drained.len(), 2);
+        assert!(sink.is_empty());
+    }
+
+    #[test]
+    fn provenance_kinds_and_descriptions() {
+        let kb = Provenance::Kb { generation: 3, cluster: None };
+        assert_eq!(kb.kind(), "kb");
+        assert!(kb.describe().contains("cold"));
+        let est =
+            Provenance::Estimate { cluster: 1, surface: 4, generation: 2, occ_streams: 16 };
+        assert_eq!(est.describe(), "estimate c1/s4@g2 occ=16");
+        let leader = Provenance::Leader { cluster: 0, surface: 2, generation: 1 };
+        assert_eq!(leader.describe(), "leader c0/s2@g1");
+    }
+}

@@ -18,6 +18,7 @@ fn help_exits_zero_and_lists_scenario() {
     let stdout = String::from_utf8_lossy(&out.stdout);
     assert!(stdout.contains("experiment"), "{stdout}");
     assert!(stdout.contains("scenario"), "{stdout}");
+    assert!(stdout.contains("trace"), "{stdout}");
 }
 
 #[test]
@@ -72,6 +73,30 @@ fn scenario_list_prints_bundled_names_and_exits_zero() {
         vec!["flash-crowd", "brownout", "stale-kb", "probe-famine", "shard-churn", "convoy"],
         "{stdout}"
     );
+}
+
+#[test]
+fn missing_trace_scenario_exits_nonzero() {
+    let out = dtopt(&["trace"]);
+    assert!(!out.status.success(), "missing trace scenario must exit non-zero");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("bundled"), "stderr lists the bundled library: {stderr}");
+    assert!(stderr.contains("flash-crowd"), "{stderr}");
+}
+
+#[test]
+fn unknown_trace_scenario_exits_nonzero_like_scenario() {
+    // `trace` resolves its argument through the same path as
+    // `scenario`, so an unknown name yields the same error text (modulo
+    // exit status both non-zero).
+    let trace = dtopt(&["trace", "no-such-scenario"]);
+    let scenario = dtopt(&["scenario", "no-such-scenario"]);
+    assert!(!trace.status.success(), "unknown trace scenario must exit non-zero");
+    assert!(!scenario.status.success());
+    let trace_err = String::from_utf8_lossy(&trace.stderr);
+    assert!(trace_err.contains("bundled"), "{trace_err}");
+    assert!(trace_err.contains("convoy"), "{trace_err}");
+    assert_eq!(trace_err, String::from_utf8_lossy(&scenario.stderr));
 }
 
 #[test]

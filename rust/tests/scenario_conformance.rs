@@ -9,6 +9,7 @@ use dtopt::probe::ProbeMode;
 use dtopt::scenario::invariant::Event;
 use dtopt::scenario::script::{bundled, bundled_names, Scenario};
 use dtopt::scenario::{render_timeline, render_verdict, run, Fault, RunOptions, ScenarioOutcome};
+use dtopt::telemetry::traces_to_json;
 
 fn run_bundled(name: &str) -> ScenarioOutcome {
     let scenario = Scenario::parse(bundled(name).expect("bundled scenario exists"))
@@ -275,9 +276,10 @@ fn convoy_contention_bites_and_occupancy_stamps_estimates() {
 #[test]
 fn same_seed_replays_are_byte_identical() {
     // The acceptance bar: two quick-mode runs with the same seed
-    // produce byte-identical event timelines — for every bundled
-    // scenario, including the one with real thread concurrency
-    // (flash-crowd's coalesced burst) and the contention-plane one.
+    // produce byte-identical event timelines AND byte-identical
+    // decision traces — for every bundled scenario, including the one
+    // with real thread concurrency (flash-crowd's coalesced burst) and
+    // the contention-plane one.
     for name in bundled_names() {
         let a = run_bundled(name);
         let b = run_bundled(name);
@@ -286,5 +288,38 @@ fn same_seed_replays_are_byte_identical() {
             render_timeline(&b.timeline),
             "scenario '{name}' replay is not deterministic"
         );
+        assert_eq!(
+            traces_to_json(&a.traces).to_string_compact(),
+            traces_to_json(&b.traces).to_string_compact(),
+            "scenario '{name}' decision traces are not deterministic"
+        );
+    }
+}
+
+#[test]
+fn every_response_carries_a_complete_decision_trace() {
+    // The trace-completeness invariant is part of every verdict, and
+    // the structural guarantee holds scenario-wide: one trace per
+    // response, each passing its own completeness check.
+    for name in bundled_names() {
+        let outcome = run_bundled(name);
+        let report = outcome.report("trace-complete").unwrap();
+        assert!(report.checked >= 1, "'{name}': trace completeness never exercised");
+        assert!(report.violations.is_empty(), "'{name}': {:?}", report.violations);
+        let responses = outcome.responses().count();
+        assert_eq!(
+            outcome.traces.len(),
+            responses,
+            "'{name}': {} traces for {responses} responses",
+            outcome.traces.len()
+        );
+        for trace in &outcome.traces {
+            assert!(
+                trace.is_complete(),
+                "'{name}' request {} trace incomplete:\n{}",
+                trace.request_id,
+                trace.render_text()
+            );
+        }
     }
 }

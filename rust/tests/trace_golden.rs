@@ -1,0 +1,64 @@
+//! Golden fixtures for the decision-provenance traces: every bundled
+//! scenario's full `traces_to_json` output is snapshotted, so any drift
+//! in the trace schema, the emission points, or the replay itself shows
+//! up as a reviewed fixture diff instead of a silent change to what
+//! `dtopt trace --json` consumers parse.
+//!
+//! Unlike `metrics_golden` this reads its fixtures at runtime (not
+//! `include_str!`): the goldens bootstrap from a machine that can run
+//! the suite, so a missing fixture is a note to regenerate, not a
+//! compile error. Once a fixture is committed it is enforced bytewise.
+//!
+//! To (re)generate after an *intentional* trace change:
+//! `DTOPT_UPDATE_GOLDEN=1 cargo test --test trace_golden` — then review
+//! and commit the fixture diffs.
+
+use dtopt::scenario::script::{bundled, bundled_names, Scenario};
+use dtopt::scenario::{run, RunOptions};
+use dtopt::telemetry::traces_to_json;
+use std::path::PathBuf;
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/traces")
+        .join(format!("{name}.json"))
+}
+
+#[test]
+fn bundled_scenario_traces_match_golden_fixtures() {
+    let update = std::env::var("DTOPT_UPDATE_GOLDEN").is_ok();
+    let mut missing = Vec::new();
+    for name in bundled_names() {
+        let scenario = Scenario::parse(bundled(name).expect("bundled scenario exists"))
+            .unwrap_or_else(|e| panic!("parsing bundled '{name}': {e:#}"));
+        let outcome = run(&scenario, &RunOptions::default())
+            .unwrap_or_else(|e| panic!("running bundled '{name}': {e:#}"));
+        // The golden ends in a newline so `diff` in CI stays quiet
+        // about incomplete last lines.
+        let rendered = format!("{}\n", traces_to_json(&outcome.traces).to_string_compact());
+        let path = fixture_path(name);
+        if update {
+            std::fs::create_dir_all(path.parent().unwrap())
+                .expect("creating the trace fixture directory");
+            std::fs::write(&path, &rendered).expect("rewriting the trace golden");
+            eprintln!("trace_golden: fixture regenerated at {}", path.display());
+            continue;
+        }
+        match std::fs::read_to_string(&path) {
+            Ok(golden) => assert_eq!(
+                rendered,
+                golden,
+                "scenario '{name}' traces drifted from the golden fixture.\n\
+                 If the change is intentional, regenerate with \
+                 DTOPT_UPDATE_GOLDEN=1 cargo test --test trace_golden"
+            ),
+            Err(_) => missing.push(name),
+        }
+    }
+    if !missing.is_empty() {
+        eprintln!(
+            "trace_golden: no fixture yet for {missing:?}; bootstrap with \
+             DTOPT_UPDATE_GOLDEN=1 cargo test --test trace_golden"
+        );
+    }
+}
