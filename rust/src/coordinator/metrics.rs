@@ -27,11 +27,17 @@ use crate::fabric::ShardRouter;
 use crate::feedback::FeedbackStats;
 use crate::netplane::{LinkPlane, PlaneMode};
 use crate::probe::ProbePlane;
-use crate::telemetry::LogHistogram;
+use crate::telemetry::{
+    AccuracyLedger, FlightRecorder, LogHistogram, Registry, Samples, Snapshot,
+};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+fn load(a: &AtomicU64) -> u64 {
+    a.load(Ordering::Relaxed)
+}
 
 #[derive(Debug, Default, Clone)]
 pub struct OptimizerStats {
@@ -62,6 +68,14 @@ impl OptimizerStats {
 }
 
 /// Thread-safe metrics sink.
+///
+/// Beyond the per-optimizer table and the four render attachments,
+/// every `Metrics` carries the fleet health plane: the unified
+/// [`Registry`] (each `attach_*` also installs a snapshot-time
+/// collector publishing that subsystem's hierarchical families), the
+/// per-shard achieved-vs-optimal [`AccuracyLedger`], and the bounded
+/// [`FlightRecorder`]. [`Metrics::export_snapshot`] reads all of them
+/// out as one deterministic cut for the exporters.
 #[derive(Debug, Default)]
 pub struct Metrics {
     inner: Mutex<BTreeMap<&'static str, OptimizerStats>>,
@@ -69,6 +83,13 @@ pub struct Metrics {
     fabric: Mutex<Option<Arc<ShardRouter>>>,
     probe: Mutex<Option<Arc<ProbePlane>>>,
     links: Mutex<Option<Arc<LinkPlane>>>,
+    /// The unified fleet-health registry every subsystem publishes
+    /// into (see DESIGN.md §Fleet health plane for the name taxonomy).
+    pub registry: Registry,
+    /// Per-shard achieved-vs-optimal accuracy quantiles.
+    pub ledger: AccuracyLedger,
+    /// Bounded ring of per-request flight summaries.
+    pub recorder: FlightRecorder,
 }
 
 /// One render's consistent view of the sink: the per-optimizer table
@@ -86,9 +107,24 @@ impl Metrics {
         Metrics::default()
     }
 
-    /// Attach the knowledge-service counters so `render` includes them.
+    /// Attach the knowledge-service counters so `render` includes them
+    /// and the registry publishes the `feedback.*` families.
     pub fn attach_feedback(&self, stats: Arc<FeedbackStats>) {
-        *self.feedback.lock().unwrap() = Some(stats);
+        *self.feedback.lock().unwrap() = Some(stats.clone());
+        self.registry.collect(move |s| {
+            s.gauge("feedback.kb_generation", load(&stats.kb_generation) as f64);
+            s.gauge("feedback.queue_depth", load(&stats.queue_depth) as f64);
+            s.counter("feedback.refreshes", load(&stats.refreshes));
+            s.counter("feedback.rows_enqueued", load(&stats.rows_enqueued));
+            s.counter("feedback.rows_flushed", load(&stats.rows_flushed));
+            s.counter("feedback.rows_dropped", load(&stats.rows_dropped));
+            s.counter("feedback.rows_flush_failed", load(&stats.rows_flush_failed));
+            s.counter("feedback.rows_consumed", load(&stats.rows_consumed));
+            s.counter("feedback.drift_events", load(&stats.drift_events));
+            // last/total_refresh_ns and `flushes` (batch cadence) are
+            // wall-clock/scheduler-shaped; the export determinism
+            // contract keeps them out of the registry.
+        });
     }
 
     /// The attached knowledge-service counters, if any.
@@ -97,9 +133,31 @@ impl Metrics {
     }
 
     /// Attach the knowledge fabric so `render` includes its per-shard
-    /// table (generation, rows, queue depth, borrow status).
+    /// table (generation, rows, queue depth, borrow status) and the
+    /// registry publishes the `fabric.*` families.
     pub fn attach_fabric(&self, fabric: Arc<ShardRouter>) {
-        *self.fabric.lock().unwrap() = Some(fabric);
+        *self.fabric.lock().unwrap() = Some(fabric.clone());
+        self.registry.collect(move |s| {
+            let st = &fabric.stats;
+            s.counter("fabric.routed", load(&st.routed));
+            s.counter("fabric.route_errors", load(&st.route_errors));
+            s.counter("fabric.materialized", load(&st.materialized));
+            s.counter("fabric.borrows", load(&st.borrows));
+            s.counter("fabric.native_fits", load(&st.native_fits));
+            s.counter("fabric.evictions", load(&st.evictions));
+            s.counter("fabric.tick_errors", load(&st.tick_errors));
+            let shards = fabric.live_shards();
+            s.gauge("fabric.live_shards", shards.len() as f64);
+            for shard in shards {
+                let base = format!("fabric.shard.{}", shard.key.name());
+                s.gauge(&format!("{base}.native_rows"), shard.native_rows() as f64);
+                s.gauge(&format!("{base}.generation"), shard.generation() as f64);
+                s.gauge(
+                    &format!("{base}.borrowed"),
+                    if shard.is_borrowed() { 1.0 } else { 0.0 },
+                );
+            }
+        });
     }
 
     /// The attached fabric, if any.
@@ -108,9 +166,29 @@ impl Metrics {
     }
 
     /// Attach the shared probe plane so `render` includes its block
-    /// (admission modes, estimate reuse, probe-byte overhead, budgets).
+    /// (admission modes, estimate reuse, probe-byte overhead, budgets)
+    /// and the registry publishes the `probe.*` families.
     pub fn attach_probe(&self, plane: Arc<ProbePlane>) {
-        *self.probe.lock().unwrap() = Some(plane);
+        *self.probe.lock().unwrap() = Some(plane.clone());
+        self.registry.collect(move |s| {
+            let st = &plane.stats;
+            s.counter("probe.led", load(&st.led));
+            s.counter("probe.piggybacked", load(&st.piggybacked));
+            s.counter("probe.estimate_served", load(&st.estimate_served));
+            s.counter("probe.budget_forced", load(&st.budget_forced));
+            s.counter("probe.follower_timeouts", load(&st.follower_timeouts));
+            s.counter("probe.leader_aborts", load(&st.leader_aborts));
+            let (sample_mb, bulk_mb) = st.bytes();
+            s.gauge("probe.bytes.sample_mb", sample_mb);
+            s.gauge("probe.bytes.bulk_mb", bulk_mb);
+            s.gauge("probe.in_flight", plane.in_flight() as f64);
+            for (key, _est) in plane.estimates().entries() {
+                let bucket = plane.budget(key);
+                let base = format!("probe.budget.{}", key.name());
+                s.gauge(&format!("{base}.available_mb"), bucket.available_mb());
+                s.gauge(&format!("{base}.capacity_mb"), bucket.capacity_mb());
+            }
+        });
     }
 
     /// The attached probe plane, if any.
@@ -120,9 +198,25 @@ impl Metrics {
 
     /// Attach the shared-link contention plane so `render` includes its
     /// block (mode, live occupancy per network, ambient convoys,
-    /// carried load vs scaled capacity).
+    /// carried load vs scaled capacity) and the registry publishes the
+    /// `netplane.*` families.
     pub fn attach_links(&self, links: Arc<LinkPlane>) {
-        *self.links.lock().unwrap() = Some(links);
+        *self.links.lock().unwrap() = Some(links.clone());
+        self.registry.collect(move |s| {
+            use crate::sim::testbed::TestbedId;
+            s.gauge("netplane.active_transfers", links.active_total() as f64);
+            for net in TestbedId::all() {
+                let occ = links.occupancy(net);
+                let base = format!("netplane.{}", net.name());
+                s.gauge(&format!("{base}.transfers"), occ.transfers as f64);
+                s.gauge(&format!("{base}.streams"), occ.streams as f64);
+                s.gauge(&format!("{base}.offered_mbps"), occ.offered_mbps);
+                s.gauge(&format!("{base}.ambient_mbps"), occ.ambient_mbps);
+                s.gauge(&format!("{base}.ambient_streams"), occ.ambient_streams as f64);
+                s.gauge(&format!("{base}.epoch"), occ.epoch as f64);
+                s.gauge(&format!("{base}.carried_mbps"), links.carried_mbps(net));
+            }
+        });
     }
 
     /// The attached contention plane, if any.
@@ -262,23 +356,42 @@ impl Metrics {
 
         if let Some(fb) = &view.feedback {
             let mut o = Json::obj();
-            o.set(
-                "kb_generation",
-                Json::Num(fb.kb_generation.load(Ordering::Relaxed) as f64),
-            )
-            .set("refreshes", Json::Num(fb.refreshes.load(Ordering::Relaxed) as f64))
-            .set("rows_flushed", Json::Num(fb.rows_flushed.load(Ordering::Relaxed) as f64))
-            .set("rows_dropped", Json::Num(fb.rows_dropped.load(Ordering::Relaxed) as f64))
-            .set("drift_events", Json::Num(fb.drift_events.load(Ordering::Relaxed) as f64));
+            o.set("kb_generation", Json::Num(load(&fb.kb_generation) as f64))
+                .set("refreshes", Json::Num(load(&fb.refreshes) as f64))
+                .set("rows_enqueued", Json::Num(load(&fb.rows_enqueued) as f64))
+                .set("rows_flushed", Json::Num(load(&fb.rows_flushed) as f64))
+                .set("rows_flush_failed", Json::Num(load(&fb.rows_flush_failed) as f64))
+                .set("rows_dropped", Json::Num(load(&fb.rows_dropped) as f64))
+                .set("rows_consumed", Json::Num(load(&fb.rows_consumed) as f64))
+                .set("flushes", Json::Num(load(&fb.flushes) as f64))
+                .set("queue_depth", Json::Num(load(&fb.queue_depth) as f64))
+                .set("drift_events", Json::Num(load(&fb.drift_events) as f64));
             root.set("feedback", o);
         }
 
         if let Some(fabric) = &view.fabric {
             let shards = fabric.live_shards();
             let borrowed = shards.iter().filter(|s| s.is_borrowed()).count();
+            let st = &fabric.stats;
             let mut o = Json::obj();
             o.set("live_shards", Json::Num(shards.len() as f64))
-                .set("borrowed_shards", Json::Num(borrowed as f64));
+                .set("borrowed_shards", Json::Num(borrowed as f64))
+                .set("routed", Json::Num(load(&st.routed) as f64))
+                .set("route_errors", Json::Num(load(&st.route_errors) as f64))
+                .set("materialized", Json::Num(load(&st.materialized) as f64))
+                .set("borrows", Json::Num(load(&st.borrows) as f64))
+                .set("native_fits", Json::Num(load(&st.native_fits) as f64))
+                .set("evictions", Json::Num(load(&st.evictions) as f64))
+                .set("tick_errors", Json::Num(load(&st.tick_errors) as f64));
+            let mut per_shard = Json::obj();
+            for shard in &shards {
+                let mut row = Json::obj();
+                row.set("native_rows", Json::Num(shard.native_rows() as f64))
+                    .set("generation", Json::Num(shard.generation() as f64))
+                    .set("borrowed", Json::Bool(shard.is_borrowed()));
+                per_shard.set(&shard.key.name(), row);
+            }
+            o.set("shards", per_shard);
             root.set("fabric", o);
         }
 
@@ -320,6 +433,43 @@ impl Metrics {
         }
 
         root
+    }
+
+    /// One deterministic fleet-health cut: the registry (every
+    /// attached subsystem's collector included), the per-optimizer
+    /// aggregates as `coordinator.<name>.*` families, the accuracy
+    /// ledger as `health.accuracy.*` histograms, and the flight
+    /// recorder's retention counters. This is what `dtopt obs` and
+    /// every `--metrics-out` path feed to the exporters.
+    ///
+    /// Wall-clock families (`decision_wall_ns`, refresh timings,
+    /// flush batch counts) are deliberately absent: two same-seed
+    /// runs must export byte-identically (DESIGN.md §Fleet health
+    /// plane, determinism contract — CI's obs-conformance job diffs
+    /// exactly this output).
+    pub fn export_snapshot(&self) -> Snapshot {
+        let mut snap = self.registry.snapshot();
+        let mut extra = Samples::default();
+        for (name, s) in self.snapshot() {
+            let base = format!("coordinator.{}", name.to_ascii_lowercase());
+            extra.counter(&format!("{base}.requests"), s.requests);
+            extra.gauge(&format!("{base}.total_mb"), s.total_mb);
+            extra.gauge(&format!("{base}.total_transfer_s"), s.total_transfer_s);
+            extra.hist(&format!("{base}.achieved_mbps"), &s.achieved_mbps);
+            extra.hist(&format!("{base}.samples"), &s.samples_used);
+        }
+        extra.counter("health.scored_transfers", self.ledger.scored());
+        let overall = self.ledger.overall_hist();
+        if !overall.is_empty() {
+            extra.hist("health.accuracy.overall", &overall);
+        }
+        for (shard, hist) in self.ledger.snapshot() {
+            extra.hist(&format!("health.accuracy.{shard}"), &hist);
+        }
+        extra.counter("recorder.flights_seen", self.recorder.total_seen());
+        extra.gauge("recorder.flights_retained", self.recorder.len() as f64);
+        snap.merge(&Snapshot::from(extra));
+        snap
     }
 }
 
@@ -509,6 +659,89 @@ mod tests {
         assert!(table.contains("fabric:"), "{table}");
         fabric.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn render_and_render_json_agree_on_one_cut() {
+        // Regression: the human table and the JSON export must report
+        // the same values for the same single-cut snapshot.
+        let m = Metrics::new();
+        m.record("ASM", 1000.0, 500.0, 4.0, 2, 10_000);
+        m.record("ASM", 2000.0, 700.0, 2.0, 3, 20_000);
+        let fb = Arc::new(FeedbackStats::default());
+        fb.kb_generation.store(3, Ordering::Relaxed);
+        fb.rows_dropped.store(7, Ordering::Relaxed);
+        m.attach_feedback(fb);
+        let text = m.render();
+        let json = m.render_json();
+        let asm = json.get("optimizers").unwrap().get("ASM").unwrap();
+        assert_eq!(asm.req_usize("requests").unwrap(), 2);
+        let mean = asm.req_f64("mean_mbps").unwrap();
+        assert_eq!(mean, 1500.0);
+        assert!(text.contains(&format!("{mean:.0}")), "{text}");
+        let p50 = asm.req_f64("p50_mbps").unwrap();
+        assert!(text.contains(&format!("{p50:.0}")), "{text}");
+        let fb_json = json.get("feedback").unwrap();
+        assert_eq!(fb_json.req_usize("kb_generation").unwrap(), 3);
+        assert_eq!(fb_json.req_usize("rows_dropped").unwrap(), 7);
+        assert_eq!(fb_json.req_usize("queue_depth").unwrap(), 0);
+        assert!(text.contains("knowledge service: generation 3"), "{text}");
+        assert!(text.contains("7 dropped at offer"), "{text}");
+    }
+
+    #[test]
+    fn export_snapshot_covers_every_family_and_excludes_wall_clock() {
+        use crate::telemetry::registry::Value;
+        use crate::telemetry::FlightRecord;
+
+        let m = Metrics::new();
+        m.record("ASM", 1000.0, 500.0, 4.0, 2, 10_000);
+        m.ledger.score("xsede/large", 930.0, 1000.0);
+        m.recorder.push(FlightRecord {
+            id: 1,
+            optimizer: "ASM",
+            shard: "xsede/large".to_string(),
+            probe_mode: Some("led"),
+            kb_generation: 1,
+            borrowed: false,
+            samples: 2,
+            retunes: 0,
+            total_mb: 500.0,
+            transfer_s: 4.0,
+            achieved_mbps: 930.0,
+            optimal_mbps: 1000.0,
+        });
+        let fb = Arc::new(FeedbackStats::default());
+        fb.rows_dropped.store(7, Ordering::Relaxed);
+        m.attach_feedback(fb);
+        m.attach_probe(Arc::new(ProbePlane::default()));
+        m.attach_links(Arc::new(LinkPlane::shared()));
+
+        let snap = m.export_snapshot();
+        assert_eq!(snap.get("feedback.rows_dropped"), Some(&Value::Counter(7)));
+        assert_eq!(snap.get("coordinator.asm.requests"), Some(&Value::Counter(1)));
+        assert!(
+            matches!(snap.get("coordinator.asm.achieved_mbps"), Some(Value::Hist(h)) if h.count() == 1)
+        );
+        assert!(
+            matches!(snap.get("health.accuracy.xsede/large"), Some(Value::Hist(h)) if h.count() == 1)
+        );
+        assert!(matches!(snap.get("health.accuracy.overall"), Some(Value::Hist(_))));
+        assert_eq!(snap.get("health.scored_transfers"), Some(&Value::Counter(1)));
+        assert_eq!(snap.get("recorder.flights_seen"), Some(&Value::Counter(1)));
+        assert!(snap.get("probe.led").is_some());
+        assert!(snap.get("netplane.active_transfers").is_some());
+        assert!(snap.get("netplane.xsede.carried_mbps").is_some());
+        // The determinism contract: nothing wall-clock or
+        // scheduler-shaped may reach an export.
+        for name in snap.values.keys() {
+            assert!(
+                !name.contains("wall_ns")
+                    && !name.contains("refresh_ns")
+                    && !name.ends_with("flushes"),
+                "wall-clock/scheduler family leaked into the export: {name}"
+            );
+        }
     }
 
     #[test]

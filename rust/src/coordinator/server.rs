@@ -484,6 +484,23 @@ fn serve_one(
         report.sample_transfers(),
         decision_wall_ns,
     );
+    // Fleet health plane: score achieved-vs-optimal on the serving
+    // shard and leave a bounded flight summary behind.
+    shared.metrics.ledger.score(&probe_key.name(), report.achieved_mbps(), optimal_mbps);
+    shared.metrics.recorder.push(crate::telemetry::FlightRecord {
+        id: request.id,
+        optimizer: report.optimizer,
+        shard: probe_key.name(),
+        probe_mode: probe_mode.map(|m| m.name()),
+        kb_generation: snapshot.generation,
+        borrowed,
+        samples: report.sample_transfers(),
+        retunes: report.bulk_retunes(),
+        total_mb: report.total_mb(),
+        transfer_s: report.total_s(),
+        achieved_mbps: report.achieved_mbps(),
+        optimal_mbps,
+    });
     match &shared.knowledge {
         Knowledge::Global { feedback: Some(fb), .. } => {
             // Drift-rate signal: bulk-phase re-tunes mean the surfaces no

@@ -117,6 +117,26 @@
 //! distribution (mergeable, ≤1% quantile error, constant memory) and
 //! `Metrics::render_json` for machine-readable export.
 //!
+//! ## The fleet health plane (`crate::telemetry` — registry, health, recorder, export)
+//!
+//! The traces answer per-request questions; the fleet-wide complement
+//! is the unified [`telemetry::Registry`]: one typed, lock-sharded
+//! metrics namespace (counters, gauges, mergeable histograms under
+//! hierarchical names, registered once at construction) that every
+//! subsystem publishes into — feedback, fabric, probe plane, link
+//! plane, coordinator. From one deterministic
+//! [`telemetry::Snapshot`] cut, [`telemetry::export`] renders
+//! Prometheus text and JSON byte-identically across same-seed runs (no
+//! wall-clock family ever enters an export). On top sit two always-on
+//! health instruments: the [`telemetry::AccuracyLedger`] scores every
+//! completed transfer against the sim oracle's optimal — the paper's
+//! "93% of optimal" headline as a continuously tracked per-shard
+//! quantile, with a per-replay floor invariant in the scenario engine
+//! — and the bounded [`telemetry::FlightRecorder`] retains the last N
+//! flight summaries. `dtopt obs [--prom|--json|--recent N]` is the
+//! viewer; `--metrics-out` on scenario/serve/experiment runs writes
+//! the same export to disk (CI diffs two same-seed runs bytewise).
+//!
 //! See `DESIGN.md` (repo root) for the layering diagram, the feedback
 //! dataflow, the fabric's routing diagram and shard lifecycle, the
 //! probe-plane dataflow, the scenario engine's dataflow and scenario

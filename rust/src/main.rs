@@ -7,13 +7,22 @@
 //!   transfer   --testbed T --files N --avg-mb M [--optimizer O]
 //!              [--kb KB.json] [--load L] [--seed S]
 //!   serve      [--requests N] [--workers W] [--optimizer O] [--fabric]
+//!              [--metrics-out F]
 //!   experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|convoy|all
-//!              [--quick|--full]
+//!              [--quick|--full] [--metrics-out F]
 //!   scenario   <name|file> [--seed S] [--full] [--timeline] [--json] [--list]
+//!              [--metrics-out F]
 //!              deterministic fault-injecting replay + invariant verdict
 //!   trace      <name|file> [--request N] [--json] [--seed S] [--full]
 //!              per-request decision-provenance traces for one replay
+//!   obs        [--scenario NAME|FILE] [--seed S] [--prom|--json|--recent N]
+//!              fleet health plane: registry export, flight recorder, ledger
 //!   selftest                     quick end-to-end sanity run
+//!
+//! `--metrics-out F` writes the run's unified registry snapshot to F:
+//! Prometheus text when F ends in `.prom`, compact JSON otherwise.
+//! Scenario exports are deterministic (same seed → byte-identical;
+//! CI's obs-conformance job diffs two runs).
 
 use anyhow::{bail, Context, Result};
 use dtopt::coordinator::{Coordinator, CoordinatorConfig, OptimizerKind, TransferRequest};
@@ -111,6 +120,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "experiment" => cmd_experiment(&opts),
         "scenario" => cmd_scenario(&opts),
         "trace" => cmd_trace(&opts),
+        "obs" => cmd_obs(&opts),
         "selftest" => cmd_selftest(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -129,10 +139,11 @@ fn print_help() {
          gen-logs --testbed T --days N --out DIR [--rate R] [--seed S]\n  \
          offline --logs DIR --out KB.json [--backend native|pjrt|auto]\n  \
          transfer --testbed T --files N --avg-mb M [--optimizer O] [--kb F] [--load L]\n  \
-         serve [--requests N] [--workers W] [--optimizer O] [--fabric]\n  \
-         experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|convoy|all [--quick|--full]\n  \
-         scenario <name|file> [--seed S] [--full] [--timeline] [--json] (--list prints bundled names)\n  \
+         serve [--requests N] [--workers W] [--optimizer O] [--fabric] [--metrics-out F]\n  \
+         experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|convoy|all [--quick|--full] [--metrics-out F]\n  \
+         scenario <name|file> [--seed S] [--full] [--timeline] [--json] [--metrics-out F] (--list prints bundled names)\n  \
          trace <name|file> [--request N] [--json] [--seed S] [--full]\n  \
+         obs [--scenario NAME|FILE] [--seed S] [--prom|--json|--recent N]\n  \
          selftest"
     );
 }
@@ -396,6 +407,9 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         if drained { "drained" } else { "DRAIN TIMED OUT" }
     );
     print!("{}", metrics.render());
+    if let Some(path) = opts.get("metrics-out") {
+        write_metrics_out(path, &metrics.export_snapshot())?;
+    }
     if let Some(pollster) = pollster {
         pollster.stop();
     }
@@ -431,6 +445,23 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
     } else {
         None
     };
+    // Harness-level health registry: every experiment's headline
+    // checks land as ok/miss counters so `--metrics-out` captures a
+    // machine-readable pass/fail tally alongside the rendered tables.
+    let registry = dtopt::telemetry::Registry::new();
+    let tally = |name: &str, checks: Vec<(String, bool)>| -> Result<()> {
+        let ok = registry.counter(&format!("experiment.{name}.headline_ok"))?;
+        let miss = registry.counter(&format!("experiment.{name}.headline_miss"))?;
+        for (desc, passed) in checks {
+            println!("[{}] {desc}", if passed { "ok" } else { "MISS" });
+            if passed {
+                ok.inc();
+            } else {
+                miss.inc();
+            }
+        }
+        Ok(())
+    };
     let run_one = |name: &str, world: Option<&World>| -> Result<()> {
         match name {
             "fig1" => print!("{}", fig12::run_fig1(reps, 11)),
@@ -439,32 +470,24 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
             "fig3b" => {
                 let r = fig3::run_3b(reps, 128, 14);
                 print!("{}", fig3::render_3b(&r));
-                for (desc, ok) in fig3::headline_checks_3b(&r) {
-                    println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
-                }
+                tally("fig3b", fig3::headline_checks_3b(&r))?;
             }
             "fig5" => {
                 let r = fig5::run(world.unwrap(), 4);
                 print!("{}", fig5::render(&r));
-                for (desc, ok) in fig5::headline_checks(&r) {
-                    println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
-                }
+                tally("fig5", fig5::headline_checks(&r))?;
             }
             "fig6" => {
                 let r = fig6::run(world.unwrap());
                 print!("{}", fig6::render(&r));
-                for (desc, ok) in fig6::headline_checks(&r) {
-                    println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
-                }
+                tally("fig6", fig6::headline_checks(&r))?;
             }
             "fig7" => {
                 let eval_days = if opts.has("full") { 20 } else { 6 };
                 let periods: &[u64] = if opts.has("full") { &[1, 2, 5, 10] } else { &[1, 3] };
                 let r = fig7::run(world.unwrap(), eval_days, periods);
                 print!("{}", fig7::render(&r));
-                for (desc, ok) in fig7::headline_checks(&r) {
-                    println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
-                }
+                tally("fig7", fig7::headline_checks(&r))?;
             }
             "live" => {
                 let eval_days = if opts.has("full") { 12 } else { 4 };
@@ -474,25 +497,19 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
                 let r = live::run(world.unwrap(), eval_days, &dir)?;
                 let _ = std::fs::remove_dir_all(&dir);
                 print!("{}", live::render(&r));
-                for (desc, ok) in live::headline_checks(&r) {
-                    println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
-                }
+                tally("live", live::headline_checks(&r))?;
             }
             "rush" => {
                 let (burst, workers) = if opts.has("full") { (64, 8) } else { (24, 6) };
                 let r = rush::run(world.unwrap(), burst, workers);
                 print!("{}", rush::render(&r));
-                for (desc, ok) in rush::headline_checks(&r) {
-                    println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
-                }
+                tally("rush", rush::headline_checks(&r))?;
             }
             "convoy" => {
                 let (cohort, workers) = if opts.has("full") { (32, 8) } else { (16, 6) };
                 let r = convoy::run(world.unwrap(), cohort, workers);
                 print!("{}", convoy::render(&r));
-                for (desc, ok) in convoy::headline_checks(&r) {
-                    println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
-                }
+                tally("convoy", convoy::headline_checks(&r))?;
             }
             "fleet" => {
                 let eval_days = if opts.has("full") { 8 } else { 3 };
@@ -502,9 +519,7 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
                 let r = fleet::run(world.unwrap(), eval_days, &dir)?;
                 let _ = std::fs::remove_dir_all(&dir);
                 print!("{}", fleet::render(&r));
-                for (desc, ok) in fleet::headline_checks(&r) {
-                    println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
-                }
+                tally("fleet", fleet::headline_checks(&r))?;
             }
             other => bail!(
                 "unknown experiment '{other}'; available: {}|all",
@@ -518,10 +533,13 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
             println!("==================== {name} ====================");
             run_one(name, world.as_ref())?;
         }
-        Ok(())
     } else {
-        run_one(which, world.as_ref())
+        run_one(which, world.as_ref())?;
     }
+    if let Some(path) = opts.get("metrics-out") {
+        write_metrics_out(path, &registry.snapshot())?;
+    }
+    Ok(())
 }
 
 /// Run one scenario by bundled name or fixture-file path. Exits
@@ -550,6 +568,11 @@ fn cmd_scenario(opts: &Opts) -> Result<()> {
         }
     }
     print!("{}", render_verdict(&outcome));
+    // Written before the pass/fail gate so a violating run still
+    // leaves its export behind for postmortems.
+    if let Some(path) = opts.get("metrics-out") {
+        write_metrics_out(path, &outcome.metrics.export_snapshot())?;
+    }
     let violations: usize = outcome.reports.iter().map(|r| r.violations.len()).sum();
     anyhow::ensure!(
         outcome.passed(),
@@ -564,18 +587,25 @@ fn cmd_scenario(opts: &Opts) -> Result<()> {
 /// `trace` so both report the same errors (and exit codes) for missing
 /// or unknown names.
 fn resolve_scenario(opts: &Opts) -> Result<dtopt::scenario::Scenario> {
-    use dtopt::scenario::Scenario;
-
     let names = dtopt::scenario::script::bundled_names().join("|");
     let Some(which) = opts.positional.first().map(|s| s.as_str()) else {
         bail!("scenario name or file required; bundled: {names}");
     };
+    resolve_scenario_name(which)
+}
+
+/// Bundled name first, then fixture-file path (shared with `obs`,
+/// which names its scenario via `--scenario` instead of a positional).
+fn resolve_scenario_name(which: &str) -> Result<dtopt::scenario::Scenario> {
+    use dtopt::scenario::Scenario;
+
     match dtopt::scenario::script::bundled(which) {
         Some(text) => Scenario::parse(text)
             .with_context(|| format!("bundled scenario '{which}' failed to parse")),
         None => {
             let path = std::path::Path::new(which);
             if !path.is_file() {
+                let names = dtopt::scenario::script::bundled_names().join("|");
                 bail!("unknown scenario '{which}' and no such file; bundled: {names}");
             }
             let text = std::fs::read_to_string(path)
@@ -584,6 +614,74 @@ fn resolve_scenario(opts: &Opts) -> Result<dtopt::scenario::Scenario> {
                 .with_context(|| format!("scenario file '{which}' failed to parse"))
         }
     }
+}
+
+/// Write one export of `snap` to `path`: Prometheus text when the path
+/// ends in `.prom`, compact JSON otherwise. Backs `--metrics-out` on
+/// scenario/serve/experiment runs; scenario exports are deterministic,
+/// which CI's obs-conformance job enforces by diffing two same-seed
+/// runs byte-for-byte.
+fn write_metrics_out(path: &str, snap: &dtopt::telemetry::Snapshot) -> Result<()> {
+    use dtopt::telemetry::export;
+
+    let body = if path.ends_with(".prom") {
+        export::to_prometheus(snap)
+    } else {
+        let mut text = export::to_json(snap).to_string_compact();
+        text.push('\n');
+        text
+    };
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    std::fs::write(path, &body).with_context(|| format!("writing --metrics-out {path}"))?;
+    eprintln!("wrote {} metric families to {path}", snap.len());
+    Ok(())
+}
+
+/// Fleet health plane viewer: replay one bundled scenario (default
+/// `flash-crowd`) and print the unified registry's export — Prometheus
+/// text (default / `--prom`), compact JSON (`--json`), or the flight
+/// recorder's last N flights plus the accuracy ledger (`--recent N`).
+/// Same seed → byte-identical output; no wall-clock family ever enters
+/// an export (DESIGN.md §Fleet health plane, determinism contract).
+fn cmd_obs(opts: &Opts) -> Result<()> {
+    use dtopt::telemetry::export;
+
+    // The shared parser swallows unknown `--flags` silently; obs
+    // validates strictly so a typo exits non-zero instead of quietly
+    // printing the default export.
+    const USAGE: &str =
+        "obs takes [--scenario NAME|FILE] [--seed S] [--full] and one of [--prom|--json|--recent N]";
+    for key in opts.values.keys() {
+        anyhow::ensure!(
+            matches!(key.as_str(), "scenario" | "seed" | "recent"),
+            "unknown option '--{key} <value>'; {USAGE}"
+        );
+    }
+    for flag in &opts.flags {
+        anyhow::ensure!(flag != "recent", "--recent expects a count; {USAGE}");
+        anyhow::ensure!(
+            matches!(flag.as_str(), "prom" | "json" | "full"),
+            "unknown flag '--{flag}'; {USAGE}"
+        );
+    }
+    anyhow::ensure!(opts.positional.is_empty(), "obs takes no positional arguments; {USAGE}");
+    let scenario = resolve_scenario_name(opts.get("scenario").unwrap_or("flash-crowd"))?;
+    let outcome = dtopt::scenario::run(&scenario, &run_options(opts)?)?;
+    if let Some(n) = opts.get("recent") {
+        let n: usize = n.parse().context("--recent expects a count")?;
+        print!("{}", outcome.metrics.recorder.render_recent(n));
+        print!("{}", outcome.metrics.ledger.render());
+    } else if opts.has("json") {
+        println!("{}", export::to_json(&outcome.metrics.export_snapshot()).to_string_compact());
+    } else {
+        print!("{}", export::to_prometheus(&outcome.metrics.export_snapshot()));
+    }
+    Ok(())
 }
 
 fn run_options(opts: &Opts) -> Result<dtopt::scenario::RunOptions> {

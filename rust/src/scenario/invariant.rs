@@ -34,6 +34,11 @@
 //! * **goodput-floor** — computed by the runner against a fault-free
 //!   control replay; reported through the same [`InvariantReport`]
 //!   shape.
+//! * **accuracy-floor** — per shard, the mean achieved-vs-optimal
+//!   ratio over the replay clears a floor: the paper's
+//!   accuracy-against-the-oracle headline, checked on every replay
+//!   (the continuous form lives in the accuracy ledger,
+//!   `crate::telemetry::health`).
 //! * **starvation-serves** — with a starved, zero-earn budget, requests
 //!   on the starved shard never lead a sampling ladder again.
 
@@ -81,6 +86,9 @@ pub struct ResponseEvent {
     pub mb: f64,
     pub transfer_s: f64,
     pub achieved_mbps: f64,
+    /// The sim oracle's optimal goodput under the request's submit-time
+    /// state (0 = no oracle computed).
+    pub optimal_mbps: f64,
     /// Probe budget on the shard after settlement.
     pub budget_after_mb: f64,
     /// The request's KB cluster at admission (`None` = cold KB).
@@ -455,6 +463,40 @@ pub fn goodput_floor_report(
     report
 }
 
+/// The accuracy-floor verdict: per shard, the mean achieved-vs-optimal
+/// ratio over the replay must clear `floor`. Responses with no oracle
+/// (`optimal_mbps` 0) are skipped; `checked` counts the responses that
+/// carried one. This is the paper's achieved-vs-optimal accuracy as a
+/// per-replay conformance check — the rolling per-shard quantile form
+/// lives in the accuracy ledger (`crate::telemetry::health`).
+pub fn accuracy_floor_report(timeline: &[Event], floor: f64) -> InvariantReport {
+    let mut report = InvariantReport { name: "accuracy-floor", checked: 0, violations: vec![] };
+    let mut per_shard: HashMap<ShardKey, (f64, usize)> = HashMap::new();
+    for r in responses(timeline) {
+        if r.optimal_mbps > 0.0 {
+            report.checked += 1;
+            let entry = per_shard.entry(r.key).or_insert((0.0, 0));
+            entry.0 += (r.achieved_mbps / r.optimal_mbps).max(0.0);
+            entry.1 += 1;
+        }
+    }
+    let mut shards: Vec<_> = per_shard.into_iter().collect();
+    shards.sort_by_key(|(key, _)| *key);
+    for (key, (sum, n)) in shards {
+        let mean = sum / n as f64;
+        if mean < floor {
+            report.violations.push(Violation {
+                at_s: 0.0,
+                detail: format!(
+                    "shard {key} averaged {mean:.2} of the oracle's optimal over {n} \
+                     response(s), below the {floor:.2} floor"
+                ),
+            });
+        }
+    }
+    report
+}
+
 /// The trace-completeness verdict: every served response on the
 /// timeline carries a [`DecisionTrace`], and every trace is structurally
 /// complete — an admission, a decision (for ASM), a settlement, a lease
@@ -513,6 +555,7 @@ mod tests {
             mb: 100.0,
             transfer_s: 1.0,
             achieved_mbps: 800.0,
+            optimal_mbps: 1000.0,
             budget_after_mb: 10.0,
             cluster: Some(0),
             est: None,
@@ -723,6 +766,25 @@ mod tests {
         let collapsed = goodput_floor_report(100.0, 1000.0, 0.5);
         assert!(!collapsed.ok());
         assert!(collapsed.violations[0].detail.contains("fell below"));
+    }
+
+    #[test]
+    fn accuracy_floor_skips_oracle_less_responses_and_flags_collapse() {
+        // 800/1000 = 0.8 clears the floor; the oracle-less response is
+        // skipped entirely rather than scored as zero.
+        let good = Event::Response(response(1, 0));
+        let no_oracle =
+            Event::Response(ResponseEvent { optimal_mbps: 0.0, ..response(2, 0) });
+        let report = accuracy_floor_report(&[good, no_oracle], 0.3);
+        assert_eq!(report.checked, 1, "only the oracled response is judged");
+        assert!(report.ok(), "{:?}", report.violations);
+
+        // 100/1000 = 0.1 on the shard's only response: below the floor.
+        let collapsed =
+            Event::Response(ResponseEvent { achieved_mbps: 100.0, ..response(3, 0) });
+        let report = accuracy_floor_report(&[collapsed], 0.3);
+        assert!(!report.ok());
+        assert!(report.violations[0].detail.contains("below the 0.30 floor"), "{:?}", report.violations);
     }
 
     fn complete_trace(id: u64) -> DecisionTrace {

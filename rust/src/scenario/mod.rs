@@ -35,8 +35,11 @@
 //!   cross-cutting checkers evaluated over it (cluster/generation
 //!   estimate guards, piggyback-leader match, monotone shard
 //!   generations, non-negative budgets, bounded goodput degradation,
-//!   and trace completeness: every served response must carry a
-//!   structurally complete [`crate::telemetry::DecisionTrace`]).
+//!   a per-shard achieved-vs-optimal accuracy floor (the continuous
+//!   form lives in the fleet health plane's accuracy ledger,
+//!   [`crate::telemetry::AccuracyLedger`]), and trace completeness:
+//!   every served response must carry a structurally complete
+//!   [`crate::telemetry::DecisionTrace`]).
 //! * [`runner`] — drives the replay on simulated time, records the
 //!   timeline (byte-identical across same-seed runs) plus one decision
 //!   trace per response, and renders the verdict table (or the
@@ -53,10 +56,11 @@ pub mod script;
 
 pub use inject::{Fault, FaultEvent};
 pub use invariant::{
-    trace_completeness_report, Event, EstimateObs, InvariantReport, PiggybackObs,
-    ResponseEvent, Violation,
+    accuracy_floor_report, trace_completeness_report, Event, EstimateObs, InvariantReport,
+    PiggybackObs, ResponseEvent, Violation,
 };
 pub use runner::{
     render_timeline, render_verdict, run, timeline_to_json, RunOptions, ScenarioOutcome,
+    ACCURACY_FLOOR,
 };
 pub use script::{ArrivalRule, Burst, Scenario};

@@ -37,7 +37,7 @@ use super::script::{Burst, Scenario};
 use crate::baselines::TransferEnv;
 use crate::coordinator::server::{completed_log, hidden_state_for, run_admitted_asm};
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, OptimizerKind, ResponseTap, TransferRequest,
+    Coordinator, CoordinatorConfig, Metrics, OptimizerKind, ResponseTap, TransferRequest,
 };
 use crate::fabric::{FabricConfig, Shard, ShardConfig, ShardKey, ShardMapConfig, ShardRouter};
 use crate::feedback::{IngestConfig, KbSnapshot, RefreshPolicy};
@@ -50,6 +50,7 @@ use crate::probe::{
 };
 use crate::sim::dataset::Dataset;
 use crate::sim::fault::FaultBoard;
+use crate::sim::params::BETA;
 use crate::sim::testbed::{Testbed, TestbedId};
 use crate::sim::traffic::DAY_S;
 use crate::telemetry::{DecisionTrace, TraceBuilder, TraceEvent, TraceSink};
@@ -63,6 +64,13 @@ use std::time::{Duration, Instant};
 /// scripted structure survives, the tail of each rule is trimmed.
 const QUICK_ARRIVALS_PER_RULE: usize = 6;
 const QUICK_BURST_SIZE: usize = 5;
+
+/// Per-shard mean achieved-vs-optimal floor every replay must clear
+/// (see `invariant::accuracy_floor_report`). Deliberately conservative:
+/// the paper reports up to 93% of optimal in the *mean over a tuned
+/// workload*; a faulted replay's worst shard (starved budgets, stale
+/// KBs, degraded links) still has to keep a meaningful fraction.
+pub const ACCURACY_FLOOR: f64 = 0.3;
 
 /// How the replay is run.
 #[derive(Debug, Clone, Copy)]
@@ -96,6 +104,11 @@ pub struct ScenarioOutcome {
     /// Mean response goodput of the fault-free control replay (only
     /// when the scenario declares a goodput floor).
     pub control_mean_mbps: Option<f64>,
+    /// The faulted replay's coordinator metrics — fleet health plane
+    /// included (registry, accuracy ledger, flight recorder) — kept
+    /// alive past shutdown so `dtopt obs` and `--metrics-out` can
+    /// export the run.
+    pub metrics: Arc<Metrics>,
 }
 
 impl ScenarioOutcome {
@@ -123,7 +136,8 @@ impl ScenarioOutcome {
 /// goodput floor is declared, and the invariant verdicts.
 pub fn run(scenario: &Scenario, options: &RunOptions) -> Result<ScenarioOutcome> {
     let seed = options.seed_override.unwrap_or(scenario.seed);
-    let (timeline, faulted_mean, traces) = replay(scenario, seed, options.quick, true)?;
+    let (timeline, faulted_mean, traces, metrics) =
+        replay(scenario, seed, options.quick, true)?;
     let control_mean = if scenario.goodput_floor.is_some() && !scenario.faults.is_empty() {
         Some(replay(scenario, seed, options.quick, false)?.1)
     } else {
@@ -140,6 +154,7 @@ pub fn run(scenario: &Scenario, options: &RunOptions) -> Result<ScenarioOutcome>
     if let (Some(floor), Some(control)) = (scenario.goodput_floor, control_mean) {
         reports.push(invariant::goodput_floor_report(faulted_mean, control, floor));
     }
+    reports.push(invariant::accuracy_floor_report(&timeline, ACCURACY_FLOOR));
     reports.push(invariant::trace_completeness_report(&timeline, &traces));
     Ok(ScenarioOutcome {
         name: scenario.name.clone(),
@@ -150,6 +165,7 @@ pub fn run(scenario: &Scenario, options: &RunOptions) -> Result<ScenarioOutcome>
         traces,
         faulted_mean_mbps: faulted_mean,
         control_mean_mbps: control_mean,
+        metrics,
     })
 }
 
@@ -302,7 +318,7 @@ fn replay(
     seed: u64,
     quick: bool,
     inject_faults: bool,
-) -> Result<(Vec<Event>, f64, Vec<DecisionTrace>)> {
+) -> Result<(Vec<Event>, f64, Vec<DecisionTrace>, Arc<Metrics>)> {
     let scratch = std::env::temp_dir().join(format!(
         "dtopt_scenario_{}_{}_{}",
         std::process::id(),
@@ -321,7 +337,7 @@ fn replay_in(
     quick: bool,
     inject_faults: bool,
     scratch: &std::path::Path,
-) -> Result<(Vec<Event>, f64, Vec<DecisionTrace>)> {
+) -> Result<(Vec<Event>, f64, Vec<DecisionTrace>, Arc<Metrics>)> {
     // --- World: per-network history + one knowledge base -------------------
     let mut rows = Vec::new();
     for id in scenario.networks() {
@@ -490,6 +506,9 @@ fn replay_in(
         }
     }
     let mean = mean_goodput(&timeline);
+    // Keep the metrics (registry, ledger, recorder) alive past the
+    // stack teardown below — exports read them after the run.
+    let metrics = ctx.coordinator.metrics.clone();
     ctx.coordinator.shutdown();
     let _ = ctx.router.flush_all(Duration::from_secs(30));
     ctx.router.shutdown();
@@ -497,7 +516,7 @@ fn replay_in(
     // coalesced path's follower threads would make schedule-dependent.
     let mut traces = ctx.traces.drain();
     traces.sort_by_key(|t| t.request_id);
-    Ok((timeline, mean, traces))
+    Ok((timeline, mean, traces, metrics))
 }
 
 /// Post-request maintenance sweep: drain every ingest queue, then give
@@ -541,7 +560,7 @@ fn serve_sequential(
         optimizer: Some(OptimizerKind::Asm),
         seed: request_seed(ctx.seed, id),
     };
-    let _response = ctx
+    let response = ctx
         .coordinator
         .run_batch(vec![request])
         .pop()
@@ -569,6 +588,7 @@ fn serve_sequential(
         mb: tape.total_mb,
         transfer_s: tape.transfer_s,
         achieved_mbps: tape.achieved_mbps,
+        optimal_mbps: response.optimal_mbps,
         budget_after_mb: ctx.plane.budget(key).available_mb(),
         cluster,
         est,
@@ -760,6 +780,10 @@ fn run_admitted(
     let seed = request_seed(ctx.seed, id);
     let t_submit = ctx.t_base + t_s;
     let state = hidden_state_for(testbed, seed, t_submit);
+    // Same submit-time oracle the worker path computes: the testbed
+    // arrives here already fault-shaped, so degraded links lower the
+    // optimum exactly like production.
+    let (_, optimal_mbps) = testbed.path.optimal(&dataset, &state, BETA);
     let mut env = TransferEnv::new(testbed.clone(), dataset, state, seed);
     // Mirror the worker path's trace head: routing, the fault consult
     // (the testbed arrives here already shaped), then the link
@@ -831,6 +855,23 @@ fn run_admitted(
         report.sample_transfers(),
         0,
     );
+    // Fleet health plane, mirrored from the worker path: score the
+    // shard's achieved-vs-optimal and leave a flight summary.
+    ctx.coordinator.metrics.ledger.score(&key.name(), report.achieved_mbps(), optimal_mbps);
+    ctx.coordinator.metrics.recorder.push(crate::telemetry::FlightRecord {
+        id,
+        optimizer: report.optimizer,
+        shard: key.name(),
+        probe_mode: Some(mode.name()),
+        kb_generation: generation,
+        borrowed: routed_borrowed(shard),
+        samples: report.sample_transfers(),
+        retunes: report.bulk_retunes(),
+        total_mb: report.total_mb(),
+        transfer_s: report.total_s(),
+        achieved_mbps: report.achieved_mbps(),
+        optimal_mbps,
+    });
     // Mirror the worker path's settlement spans, then bank the trace.
     if let Some(exposure) = &exposure {
         env.note(TraceEvent::LeaseRelease {
@@ -865,6 +906,7 @@ fn run_admitted(
         mb: report.total_mb(),
         transfer_s: report.total_s(),
         achieved_mbps: report.achieved_mbps(),
+        optimal_mbps,
         budget_after_mb: ctx.plane.budget(key).available_mb(),
         cluster,
         est,
@@ -990,6 +1032,7 @@ pub fn timeline_to_json(timeline: &[Event]) -> Json {
                             .set("mb", Json::Num(r.mb))
                             .set("transfer_s", Json::Num(r.transfer_s))
                             .set("achieved_mbps", Json::Num(r.achieved_mbps))
+                            .set("optimal_mbps", Json::Num(r.optimal_mbps))
                             .set("budget_after_mb", Json::Num(r.budget_after_mb))
                             .set("budget_forced", Json::Bool(r.budget_forced))
                             .set("coalesced", Json::Bool(r.coalesced));
@@ -1065,7 +1108,14 @@ mod tests {
         let verdict = render_verdict(&outcome);
         assert!(verdict.contains("budget-non-negative"), "{verdict}");
         assert!(verdict.contains("monotone-generations"), "{verdict}");
+        assert!(verdict.contains("accuracy-floor"), "{verdict}");
         assert!(verdict.contains("trace-complete"), "{verdict}");
+        // The fleet health plane saw every response: one accuracy score
+        // and one flight record per served request.
+        assert_eq!(outcome.metrics.ledger.scored(), 3);
+        assert_eq!(outcome.metrics.recorder.total_seen(), 3);
+        let accuracy = outcome.report("accuracy-floor").unwrap();
+        assert_eq!(accuracy.checked, 3);
         // Every response carries a complete decision trace, keyed by id.
         assert_eq!(outcome.traces.len(), 3);
         for r in outcome.responses() {
@@ -1106,6 +1156,7 @@ mod tests {
                 mb: 1000.0,
                 transfer_s: 3.25,
                 achieved_mbps: 2461.5,
+                optimal_mbps: 3000.0,
                 budget_after_mb: 512.0,
                 cluster: Some(1),
                 est: Some(EstimateObs {

@@ -1,0 +1,191 @@
+//! Deterministic exporters over a registry [`Snapshot`]: Prometheus
+//! text exposition and JSON (via [`crate::util::json`]).
+//!
+//! Both exporters are pure functions of the snapshot: iteration order
+//! is the snapshot's `BTreeMap` order, float formatting is the same
+//! shortest-roundtrip form `util::json` uses, and nothing wall-clock
+//! ever enters a snapshot destined for export (the registry's
+//! publishers exclude wall-time families — see `DESIGN.md` §Fleet
+//! health plane, determinism contract). Two same-seed runs therefore
+//! produce byte-identical exports, which CI enforces by diffing
+//! (`obs-conformance`).
+//!
+//! Histograms export as Prometheus *summaries* (rolling quantiles +
+//! exact sum/count) rather than fixed le-buckets: the log-bucketed
+//! [`crate::telemetry::LogHistogram`] keeps ≤1% quantile error, and a
+//! summary is byte-stable where a re-bucketing to static boundaries
+//! would invent precision. The JSON form additionally carries the full
+//! mergeable histogram encoding, so downstream consumers can aggregate
+//! exports exactly.
+
+use super::hist::LogHistogram;
+use super::registry::{Snapshot, Value};
+use crate::util::json::Json;
+
+/// Sanitize a hierarchical metric name into the Prometheus charset
+/// (`[a-zA-Z_:][a-zA-Z0-9_:]*`): every other byte becomes `_`, and a
+/// leading digit gets a `_` prefix.
+pub fn sanitize(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 1);
+    for (i, c) in name.chars().enumerate() {
+        if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+            if i == 0 && c.is_ascii_digit() {
+                out.push('_');
+            }
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    if out.is_empty() {
+        out.push('_');
+    }
+    out
+}
+
+/// Deterministic number formatting, matching `util::json`'s: integral
+/// values in f64-exact range print without a fraction, everything else
+/// prints shortest-roundtrip. Non-finite becomes `NaN` (Prometheus
+/// accepts it; it never appears in practice).
+fn fmt_num(v: f64) -> String {
+    if !v.is_finite() {
+        "NaN".to_string()
+    } else if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{v:.0}")
+    } else {
+        format!("{v}")
+    }
+}
+
+fn hist_sum(h: &LogHistogram) -> f64 {
+    h.mean() * h.count() as f64
+}
+
+/// Render a snapshot as Prometheus text exposition (0.0.4 format).
+pub fn to_prometheus(snapshot: &Snapshot) -> String {
+    let mut out = String::new();
+    for (name, value) in &snapshot.values {
+        let name = sanitize(name);
+        match value {
+            Value::Counter(v) => {
+                out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+            }
+            Value::Gauge(v) => {
+                out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", fmt_num(*v)));
+            }
+            Value::Hist(h) => {
+                out.push_str(&format!("# TYPE {name} summary\n"));
+                for (label, p) in [("0.5", 0.5), ("0.9", 0.9), ("0.99", 0.99)] {
+                    out.push_str(&format!(
+                        "{name}{{quantile=\"{label}\"}} {}\n",
+                        fmt_num(h.quantile(p))
+                    ));
+                }
+                out.push_str(&format!("{name}_sum {}\n", fmt_num(hist_sum(h))));
+                out.push_str(&format!("{name}_count {}\n", h.count()));
+            }
+        }
+    }
+    out
+}
+
+/// Render a snapshot as one JSON object keyed by metric name.
+/// Counters and gauges are plain numbers; histograms are objects with
+/// quantiles plus the full mergeable encoding.
+pub fn to_json(snapshot: &Snapshot) -> Json {
+    let mut obj = Json::obj();
+    for (name, value) in &snapshot.values {
+        match value {
+            Value::Counter(v) => {
+                obj.set(name, Json::Num(*v as f64));
+            }
+            Value::Gauge(v) => {
+                obj.set(name, Json::Num(*v));
+            }
+            Value::Hist(h) => {
+                let mut entry = Json::obj();
+                entry
+                    .set("count", Json::Num(h.count() as f64))
+                    .set("sum", Json::Num(hist_sum(h)))
+                    .set("p50", Json::Num(h.quantile(0.5)))
+                    .set("p90", Json::Num(h.quantile(0.9)))
+                    .set("p99", Json::Num(h.quantile(0.99)))
+                    .set("histogram", h.to_json());
+                obj.set(name, entry);
+            }
+        }
+    }
+    obj
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::Registry;
+
+    fn sample_snapshot() -> Snapshot {
+        let reg = Registry::new();
+        reg.counter("feedback.rows_dropped").unwrap().add(7);
+        reg.gauge("probe.budget.xsede/large.available_mb").unwrap().set(512.5);
+        let h = reg.histogram("coordinator.asm.achieved_mbps").unwrap();
+        h.record(1000.0);
+        h.record(2000.0);
+        reg.snapshot()
+    }
+
+    #[test]
+    fn sanitize_maps_hierarchical_names_into_the_prom_charset() {
+        assert_eq!(sanitize("probe.budget.spent_mb"), "probe_budget_spent_mb");
+        assert_eq!(sanitize("fabric.shard.xsede/large.rows"), "fabric_shard_xsede_large_rows");
+        assert_eq!(sanitize("9lives"), "_9lives");
+        assert_eq!(sanitize("a-b c"), "a_b_c");
+        assert_eq!(sanitize(""), "_");
+    }
+
+    #[test]
+    fn prometheus_exposition_covers_all_three_kinds() {
+        let text = to_prometheus(&sample_snapshot());
+        assert!(text.contains("# TYPE feedback_rows_dropped counter\nfeedback_rows_dropped 7\n"), "{text}");
+        assert!(
+            text.contains("# TYPE probe_budget_xsede_large_available_mb gauge\nprobe_budget_xsede_large_available_mb 512.5\n"),
+            "{text}"
+        );
+        assert!(text.contains("# TYPE coordinator_asm_achieved_mbps summary\n"), "{text}");
+        assert!(text.contains("coordinator_asm_achieved_mbps{quantile=\"0.5\"} 1500\n"), "{text}");
+        assert!(text.contains("coordinator_asm_achieved_mbps_sum 3000\n"), "{text}");
+        assert!(text.contains("coordinator_asm_achieved_mbps_count 2\n"), "{text}");
+    }
+
+    #[test]
+    fn json_export_parses_back_and_keeps_the_histogram_mergeable(
+    ) {
+        let json = to_json(&sample_snapshot());
+        let text = json.to_string_compact();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("feedback.rows_dropped").and_then(Json::as_u64), Some(7));
+        let hist_entry = back.get("coordinator.asm.achieved_mbps").unwrap();
+        assert_eq!(hist_entry.get("count").and_then(Json::as_u64), Some(2));
+        let decoded =
+            LogHistogram::from_json(hist_entry.get("histogram").unwrap()).unwrap();
+        assert_eq!(decoded.count(), 2);
+        assert_eq!(decoded.mean(), 1500.0);
+    }
+
+    #[test]
+    fn exports_are_deterministic_for_equal_snapshots() {
+        // Two independently built but identical snapshots must render
+        // byte-identically in both formats — the contract the
+        // obs-conformance CI job enforces end to end.
+        let (a, b) = (sample_snapshot(), sample_snapshot());
+        assert_eq!(to_prometheus(&a), to_prometheus(&b));
+        assert_eq!(to_json(&a).to_string_compact(), to_json(&b).to_string_compact());
+    }
+
+    #[test]
+    fn non_integral_and_large_values_format_stably() {
+        assert_eq!(fmt_num(0.93), "0.93");
+        assert_eq!(fmt_num(3.0), "3");
+        assert_eq!(fmt_num(1e16), "10000000000000000");
+        assert_eq!(fmt_num(f64::NAN), "NaN");
+    }
+}

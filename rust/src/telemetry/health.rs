@@ -1,0 +1,231 @@
+//! The accuracy ledger: achieved-vs-optimal scoring, per shard,
+//! continuously.
+//!
+//! The paper's headline number — "up to 93% accuracy compared with the
+//! optimal achievable throughput" — is an offline evaluation result.
+//! This module makes it an always-on fleet metric: every completed
+//! transfer is scored as `achieved_mbps / optimal_mbps`, where the
+//! oracle is the same one the experiments score against —
+//! `TransferPath::optimal` evaluated under the request's own hidden
+//! network state (the simulator's exhaustive best over every parameter
+//! choice, the quantity `TransferResponse::optimal_mbps` already
+//! carries). Ratios accumulate into one mergeable
+//! [`LogHistogram`] per shard plus an overall pool, so rolling
+//! quantiles (p10/p50/p90) are available per `ShardKey` at any time
+//! and merge exactly across coordinators.
+//!
+//! The ratio can exceed 1.0: the oracle is evaluated at the *submit*
+//! instant's state, while a transfer's achieved goodput integrates
+//! over its whole (simulated) run — a load drop mid-transfer can beat
+//! the frozen oracle. That is signal, not error, so ratios are only
+//! clamped below at zero.
+//!
+//! The scenario engine asserts a floor over these ratios per replay
+//! (`scenario::invariant::accuracy_floor_report`); the exporters
+//! publish the per-shard histograms as `health.accuracy.<shard>`
+//! families (see `DESIGN.md` §Fleet health plane).
+
+use super::hist::LogHistogram;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Per-shard achieved-vs-optimal accuracy quantiles (see module docs).
+#[derive(Debug, Default)]
+pub struct AccuracyLedger {
+    shards: Mutex<BTreeMap<String, LogHistogram>>,
+    overall: Mutex<LogHistogram>,
+}
+
+/// One shard's rolled-up accuracy summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccuracySummary {
+    pub transfers: u64,
+    pub mean: f64,
+    pub p10: f64,
+    pub p50: f64,
+    pub p90: f64,
+}
+
+fn summarize(hist: &LogHistogram) -> AccuracySummary {
+    AccuracySummary {
+        transfers: hist.count(),
+        mean: hist.mean(),
+        p10: hist.quantile(0.10),
+        p50: hist.quantile(0.50),
+        p90: hist.quantile(0.90),
+    }
+}
+
+impl AccuracyLedger {
+    pub fn new() -> AccuracyLedger {
+        AccuracyLedger::default()
+    }
+
+    /// Score one completed transfer. A non-positive or non-finite
+    /// oracle means no oracle was computed for this request — nothing
+    /// is recorded (scoring against a missing optimum would poison the
+    /// quantiles with zeros).
+    pub fn score(&self, shard: &str, achieved_mbps: f64, optimal_mbps: f64) {
+        if !(optimal_mbps > 0.0) || !achieved_mbps.is_finite() {
+            return;
+        }
+        let ratio = (achieved_mbps / optimal_mbps).max(0.0);
+        self.shards
+            .lock()
+            .expect("ledger poisoned")
+            .entry(shard.to_string())
+            .or_default()
+            .record(ratio);
+        self.overall.lock().expect("ledger poisoned").record(ratio);
+    }
+
+    /// Transfers scored across every shard.
+    pub fn scored(&self) -> u64 {
+        self.overall.lock().expect("ledger poisoned").count()
+    }
+
+    /// The pooled accuracy summary (`None` when nothing is scored yet).
+    pub fn overall(&self) -> Option<AccuracySummary> {
+        let overall = self.overall.lock().expect("ledger poisoned");
+        (!overall.is_empty()).then(|| summarize(&overall))
+    }
+
+    /// One shard's accuracy summary.
+    pub fn shard(&self, shard: &str) -> Option<AccuracySummary> {
+        self.shards.lock().expect("ledger poisoned").get(shard).map(summarize)
+    }
+
+    /// Every shard's raw histogram, ordered by shard name (the pooled
+    /// histogram under the reserved name is *not* included).
+    pub fn snapshot(&self) -> BTreeMap<String, LogHistogram> {
+        self.shards.lock().expect("ledger poisoned").clone()
+    }
+
+    /// The pooled histogram.
+    pub fn overall_hist(&self) -> LogHistogram {
+        self.overall.lock().expect("ledger poisoned").clone()
+    }
+
+    /// Human-readable block (rendered by `dtopt obs`, deliberately not
+    /// part of `Metrics::render`, whose bytes are golden-pinned).
+    pub fn render(&self) -> String {
+        let Some(overall) = self.overall() else {
+            return "accuracy ledger: no scored transfers yet\n".to_string();
+        };
+        let mut out = format!(
+            "accuracy ledger: p10 {:.2}, p50 {:.2}, p90 {:.2} of optimal over {} transfers\n",
+            overall.p10, overall.p50, overall.p90, overall.transfers,
+        );
+        for (shard, hist) in self.snapshot() {
+            let s = summarize(&hist);
+            out.push_str(&format!(
+                "  {shard}: p10 {:.2}, p50 {:.2}, p90 {:.2} ({} transfers)\n",
+                s.p10, s.p50, s.p90, s.transfers,
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable form: quantiles plus the raw mergeable
+    /// histograms, per shard and pooled.
+    pub fn to_json(&self) -> Json {
+        let summary_json = |s: &AccuracySummary, hist: &LogHistogram| {
+            let mut obj = Json::obj();
+            obj.set("transfers", Json::Num(s.transfers as f64))
+                .set("mean", Json::Num(s.mean))
+                .set("p10", Json::Num(s.p10))
+                .set("p50", Json::Num(s.p50))
+                .set("p90", Json::Num(s.p90))
+                .set("histogram", hist.to_json());
+            obj
+        };
+        let mut obj = Json::obj();
+        if let Some(overall) = self.overall() {
+            obj.set("overall", summary_json(&overall, &self.overall_hist()));
+        }
+        let mut shards = Json::obj();
+        for (shard, hist) in self.snapshot() {
+            shards.set(&shard, summary_json(&summarize(&hist), &hist));
+        }
+        obj.set("shards", shards);
+        obj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scores_accumulate_per_shard_and_overall() {
+        let ledger = AccuracyLedger::new();
+        ledger.score("xsede/large", 930.0, 1000.0);
+        ledger.score("xsede/large", 800.0, 1000.0);
+        ledger.score("didclab/small", 450.0, 500.0);
+        assert_eq!(ledger.scored(), 3);
+        let xsede = ledger.shard("xsede/large").unwrap();
+        assert_eq!(xsede.transfers, 2);
+        assert!((xsede.mean - 0.865).abs() < 1e-9, "{}", xsede.mean);
+        let overall = ledger.overall().unwrap();
+        assert_eq!(overall.transfers, 3);
+        assert!(ledger.shard("no/such").is_none());
+    }
+
+    #[test]
+    fn missing_oracle_is_not_scored() {
+        let ledger = AccuracyLedger::new();
+        ledger.score("x", 100.0, 0.0);
+        ledger.score("x", 100.0, -1.0);
+        ledger.score("x", 100.0, f64::NAN);
+        ledger.score("x", f64::NAN, 100.0);
+        assert_eq!(ledger.scored(), 0);
+        assert!(ledger.overall().is_none());
+    }
+
+    #[test]
+    fn ratios_above_one_are_kept() {
+        // A mid-transfer load drop can beat the frozen submit-time
+        // oracle; the ledger records it rather than clamping to 1.
+        let ledger = AccuracyLedger::new();
+        ledger.score("x", 1200.0, 1000.0);
+        let s = ledger.shard("x").unwrap();
+        assert!((s.p50 - 1.2).abs() < 1e-9, "{}", s.p50);
+    }
+
+    #[test]
+    fn quantiles_track_the_distribution() {
+        let ledger = AccuracyLedger::new();
+        for pct in [80, 85, 90, 93, 96] {
+            ledger.score("x", pct as f64, 100.0);
+        }
+        let s = ledger.shard("x").unwrap();
+        assert!((s.p50 - 0.90).abs() < 0.01, "{}", s.p50);
+        assert!(s.p10 >= 0.79 && s.p10 <= 0.86, "{}", s.p10);
+        assert!(s.p90 >= 0.92 && s.p90 <= 0.97, "{}", s.p90);
+    }
+
+    #[test]
+    fn render_and_json_report_every_shard() {
+        let ledger = AccuracyLedger::new();
+        ledger.score("a/one", 90.0, 100.0);
+        ledger.score("b/two", 50.0, 100.0);
+        let text = ledger.render();
+        assert!(text.contains("a/one"), "{text}");
+        assert!(text.contains("b/two"), "{text}");
+        assert!(text.contains("over 2 transfers"), "{text}");
+        let json = ledger.to_json();
+        let shards = json.get("shards").unwrap();
+        assert!(shards.get("a/one").is_some());
+        assert_eq!(
+            json.get("overall").and_then(|o| o.get("transfers")).and_then(Json::as_u64),
+            Some(2)
+        );
+    }
+
+    #[test]
+    fn empty_ledger_renders_a_placeholder() {
+        let ledger = AccuracyLedger::new();
+        assert_eq!(ledger.render(), "accuracy ledger: no scored transfers yet\n");
+    }
+}

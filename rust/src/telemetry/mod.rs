@@ -1,7 +1,9 @@
-//! Decision-provenance telemetry: bounded streaming histograms and
-//! deterministic per-request decision traces.
+//! Decision-provenance telemetry and the fleet health plane: bounded
+//! streaming histograms, deterministic per-request decision traces,
+//! and the always-on observability substrate (registry, flight
+//! recorder, accuracy ledger, exporters).
 //!
-//! Two halves, both serde-free and dependency-light:
+//! Six parts, all serde-free and dependency-light:
 //!
 //! * [`hist`] — the log-bucketed [`LogHistogram`] behind every
 //!   latency/throughput aggregate in [`crate::coordinator::metrics`]:
@@ -14,13 +16,35 @@
 //!   consumed. Byte-identical under the same seed; the scenario
 //!   engine's `trace-complete` invariant and the `dtopt trace` CLI are
 //!   built on it.
+//! * [`registry`] — the unified, lock-sharded metrics [`Registry`]:
+//!   typed counters/gauges/histograms under hierarchical names plus
+//!   snapshot-time collectors, read out as one deterministic
+//!   [`Snapshot`] every subsystem publishes into.
+//! * [`recorder`] — the bounded [`FlightRecorder`]: a fixed-capacity
+//!   ring of per-request [`FlightRecord`] summaries, always on
+//!   (`dtopt obs --recent N`).
+//! * [`health`] — the [`AccuracyLedger`]: every completed transfer
+//!   scored against the simulator oracle's optimal, rolled into
+//!   per-shard quantiles — the paper's 93%-of-optimal headline as a
+//!   continuously tracked fleet metric.
+//! * [`export`] — deterministic Prometheus-text and JSON exporters
+//!   over a snapshot (`dtopt obs`, `--metrics-out`, CI's
+//!   obs-conformance byte-diff).
 //!
-//! See DESIGN.md § "Decision-provenance telemetry".
+//! See DESIGN.md § "Decision-provenance telemetry" and § "Fleet health
+//! plane".
 
+pub mod export;
+pub mod health;
 pub mod hist;
+pub mod recorder;
+pub mod registry;
 pub mod trace;
 
+pub use health::{AccuracyLedger, AccuracySummary};
 pub use hist::LogHistogram;
+pub use recorder::{FlightRecord, FlightRecorder};
+pub use registry::{Counter, Gauge, Hist, Registry, Samples, Snapshot, Value};
 pub use trace::{
     traces_to_json, DecisionTrace, Provenance, TraceBuilder, TraceEvent, TraceSink,
 };

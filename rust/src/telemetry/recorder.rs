@@ -1,0 +1,278 @@
+//! The flight recorder: a fixed-capacity ring of per-request transfer
+//! summaries, always on and cheap enough to stay on.
+//!
+//! [`crate::telemetry::trace::DecisionTrace`] answers "why did *this*
+//! request get θ?" with a full per-hop chain — but carrying one for
+//! every request forever is unbounded. The recorder keeps the bounded
+//! complement: one flat [`FlightRecord`] per completed transfer (ids,
+//! knowledge provenance, probe mode, achieved vs optimal), retained in
+//! a ring whose memory is fixed at construction. `dtopt obs --recent N`
+//! prints the tail; the total-seen counter keeps the drop count honest
+//! (`seen - retained` flights have aged out).
+//!
+//! ## Retention contract
+//!
+//! * Capacity is fixed (default [`DEFAULT_CAPACITY`]); pushing past it
+//!   evicts the oldest record. Memory never grows with traffic.
+//! * Records carry only replay-stable fields — ids, counts, simulated
+//!   seconds, Mbps — never wall-clock readings, so a same-seed replay
+//!   produces byte-identical recorder contents (part of the export
+//!   determinism contract in DESIGN.md §Fleet health plane).
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Default ring capacity: enough to hold every bundled scenario's full
+/// replay while staying trivially bounded for long-lived services.
+pub const DEFAULT_CAPACITY: usize = 256;
+
+/// One completed transfer's flat summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlightRecord {
+    pub id: u64,
+    pub optimizer: &'static str,
+    /// Shard the request resolved to (`ShardKey::name`).
+    pub shard: String,
+    /// Probe-plane admission mode name, when the plane served it.
+    pub probe_mode: Option<&'static str>,
+    pub kb_generation: u64,
+    pub borrowed: bool,
+    pub samples: usize,
+    pub retunes: usize,
+    pub total_mb: f64,
+    pub transfer_s: f64,
+    pub achieved_mbps: f64,
+    /// The oracle's optimal for the same conditions (see
+    /// [`super::health`]); 0 when no oracle was computed.
+    pub optimal_mbps: f64,
+}
+
+impl FlightRecord {
+    /// Achieved-vs-optimal ratio; `None` when no oracle was recorded.
+    pub fn accuracy(&self) -> Option<f64> {
+        (self.optimal_mbps > 0.0).then(|| self.achieved_mbps / self.optimal_mbps)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("id", Json::Num(self.id as f64))
+            .set("optimizer", Json::Str(self.optimizer.to_string()))
+            .set("shard", Json::Str(self.shard.clone()))
+            .set(
+                "probe_mode",
+                match self.probe_mode {
+                    Some(mode) => Json::Str(mode.to_string()),
+                    None => Json::Null,
+                },
+            )
+            .set("kb_generation", Json::Num(self.kb_generation as f64))
+            .set("borrowed", Json::Bool(self.borrowed))
+            .set("samples", Json::Num(self.samples as f64))
+            .set("retunes", Json::Num(self.retunes as f64))
+            .set("total_mb", Json::Num(self.total_mb))
+            .set("transfer_s", Json::Num(self.transfer_s))
+            .set("achieved_mbps", Json::Num(self.achieved_mbps))
+            .set("optimal_mbps", Json::Num(self.optimal_mbps));
+        obj
+    }
+}
+
+#[derive(Debug)]
+struct Ring {
+    capacity: usize,
+    /// Every flight ever pushed (retained or aged out).
+    seen: u64,
+    entries: VecDeque<FlightRecord>,
+}
+
+/// The bounded recorder (see module docs). `Default` uses
+/// [`DEFAULT_CAPACITY`]; construction is the only place capacity is
+/// chosen.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    inner: Mutex<Ring>,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        FlightRecorder::with_capacity(DEFAULT_CAPACITY)
+    }
+}
+
+impl FlightRecorder {
+    pub fn with_capacity(capacity: usize) -> FlightRecorder {
+        FlightRecorder {
+            inner: Mutex::new(Ring {
+                capacity: capacity.max(1),
+                seen: 0,
+                entries: VecDeque::with_capacity(capacity.max(1).min(1024)),
+            }),
+        }
+    }
+
+    /// Record one completed flight, evicting the oldest past capacity.
+    pub fn push(&self, record: FlightRecord) {
+        let mut ring = self.inner.lock().expect("recorder poisoned");
+        ring.seen += 1;
+        if ring.entries.len() == ring.capacity {
+            ring.entries.pop_front();
+        }
+        ring.entries.push_back(record);
+    }
+
+    /// Flights currently retained.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("recorder poisoned").entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Every flight ever pushed, aged-out ones included.
+    pub fn total_seen(&self) -> u64 {
+        self.inner.lock().expect("recorder poisoned").seen
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.lock().expect("recorder poisoned").capacity
+    }
+
+    /// The most recent `n` records, oldest first.
+    pub fn recent(&self, n: usize) -> Vec<FlightRecord> {
+        let ring = self.inner.lock().expect("recorder poisoned");
+        let skip = ring.entries.len().saturating_sub(n);
+        ring.entries.iter().skip(skip).cloned().collect()
+    }
+
+    /// Human-readable tail: one line per flight, oldest first.
+    pub fn render_recent(&self, n: usize) -> String {
+        let records = self.recent(n);
+        let mut out = format!(
+            "flight recorder: {} retained of {} seen (capacity {})\n",
+            self.len(),
+            self.total_seen(),
+            self.capacity(),
+        );
+        if records.is_empty() {
+            return out;
+        }
+        out.push_str(
+            "    id  optimizer      shard                  mode             gen  \
+             samples  retunes        mb  achieved  optimal  accuracy\n",
+        );
+        for r in &records {
+            let accuracy = match r.accuracy() {
+                Some(a) => format!("{a:.2}"),
+                None => "-".to_string(),
+            };
+            out.push_str(&format!(
+                "{:>6}  {:<13} {:<22} {:<16} {:>4} {:>8} {:>8} {:>9.0} {:>9.0} {:>8.0} {:>9}\n",
+                r.id,
+                r.optimizer,
+                format!("{}{}", r.shard, if r.borrowed { "*" } else { "" }),
+                r.probe_mode.unwrap_or("-"),
+                r.kb_generation,
+                r.samples,
+                r.retunes,
+                r.total_mb,
+                r.achieved_mbps,
+                r.optimal_mbps,
+                accuracy,
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable tail (oldest first) plus retention counters.
+    pub fn to_json(&self, n: usize) -> Json {
+        let mut obj = Json::obj();
+        obj.set("seen", Json::Num(self.total_seen() as f64))
+            .set("retained", Json::Num(self.len() as f64))
+            .set("capacity", Json::Num(self.capacity() as f64))
+            .set(
+                "recent",
+                Json::Arr(self.recent(n).iter().map(FlightRecord::to_json).collect()),
+            );
+        obj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(id: u64) -> FlightRecord {
+        FlightRecord {
+            id,
+            optimizer: "ASM",
+            shard: "xsede/large".to_string(),
+            probe_mode: Some("led"),
+            kb_generation: 1,
+            borrowed: false,
+            samples: 3,
+            retunes: 0,
+            total_mb: 1000.0,
+            transfer_s: 4.0,
+            achieved_mbps: 1860.0,
+            optimal_mbps: 2000.0,
+        }
+    }
+
+    #[test]
+    fn ring_retains_only_the_newest_past_capacity() {
+        let rec = FlightRecorder::with_capacity(3);
+        for id in 1..=5 {
+            rec.push(record(id));
+        }
+        assert_eq!(rec.len(), 3);
+        assert_eq!(rec.total_seen(), 5);
+        let ids: Vec<u64> = rec.recent(10).iter().map(|r| r.id).collect();
+        assert_eq!(ids, [3, 4, 5], "oldest evicted, order oldest-first");
+    }
+
+    #[test]
+    fn recent_takes_the_tail() {
+        let rec = FlightRecorder::with_capacity(8);
+        for id in 1..=6 {
+            rec.push(record(id));
+        }
+        let ids: Vec<u64> = rec.recent(2).iter().map(|r| r.id).collect();
+        assert_eq!(ids, [5, 6]);
+    }
+
+    #[test]
+    fn accuracy_is_achieved_over_optimal() {
+        let r = record(1);
+        assert!((r.accuracy().unwrap() - 0.93).abs() < 1e-12);
+        let mut no_oracle = record(2);
+        no_oracle.optimal_mbps = 0.0;
+        assert_eq!(no_oracle.accuracy(), None);
+    }
+
+    #[test]
+    fn render_and_json_carry_the_retention_counters() {
+        let rec = FlightRecorder::with_capacity(2);
+        for id in 1..=4 {
+            rec.push(record(id));
+        }
+        let text = rec.render_recent(10);
+        assert!(text.contains("2 retained of 4 seen (capacity 2)"), "{text}");
+        assert!(text.contains("xsede/large"), "{text}");
+        let json = rec.to_json(10);
+        assert_eq!(json.get("seen").and_then(Json::as_u64), Some(4));
+        assert_eq!(json.get("retained").and_then(Json::as_u64), Some(2));
+        assert_eq!(json.get("recent").and_then(Json::as_arr).map(|a| a.len()), Some(2));
+    }
+
+    #[test]
+    fn default_capacity_is_bounded_and_nonzero() {
+        let rec = FlightRecorder::default();
+        assert_eq!(rec.capacity(), DEFAULT_CAPACITY);
+        for id in 0..(DEFAULT_CAPACITY as u64 * 2) {
+            rec.push(record(id));
+        }
+        assert_eq!(rec.len(), DEFAULT_CAPACITY);
+    }
+}

@@ -1,0 +1,486 @@
+//! The unified metrics registry: one lock-sharded namespace every
+//! subsystem publishes into, read out as a single deterministic
+//! snapshot by the exporters in [`super::export`].
+//!
+//! ## Shape
+//!
+//! Three typed instruments, registered once at construction under
+//! hierarchical dot names (`probe.budget.xsede/large.available_mb`):
+//!
+//! * [`Counter`] — a monotone `u64` (lock-free atomic adds).
+//! * [`Gauge`] — a last-write-wins `f64` (atomic bit store).
+//! * [`Hist`] — a mergeable [`LogHistogram`] behind a mutex.
+//!
+//! Registration hands back a cheap cloneable handle; the hot path
+//! touches only that handle's atomic (or the one histogram mutex),
+//! never the registry. The registry itself is sharded by name hash, so
+//! concurrent registrations and snapshots contend per shard, not
+//! globally. Registering the same name twice — any kind — is an error:
+//! a name means one instrument, forever.
+//!
+//! ## Collectors
+//!
+//! Subsystems that already keep their own counters (feedback stats,
+//! fabric stats, probe plane, link plane) publish through *collector*
+//! closures instead of double-counting into handles: a collector runs
+//! at snapshot time and emits `name → value` samples into the cut.
+//! Collisions between collectors are merged additively (counters add,
+//! histograms merge, gauges last-write-wins), so two coordinators
+//! attached to the same subsystem family sum instead of clobbering.
+//!
+//! ## Snapshots
+//!
+//! [`Registry::snapshot`] returns a [`Snapshot`]: an ordered
+//! `BTreeMap<String, Value>` — one consistent, deterministic cut.
+//! Snapshots [`Snapshot::merge`] with the same additive semantics, so
+//! merging two registries' snapshots equals recording the same data
+//! into one (property-tested below).
+
+use super::hist::LogHistogram;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shard count for the name map. Power of two, small: registration is
+/// construction-time, so this only bounds snapshot/registration
+/// contention, not hot-path throughput.
+const SHARDS: usize = 8;
+
+/// Monotone counter handle. Cloning shares the underlying cell.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge handle (an `f64` stored as atomic bits).
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Histogram handle over the shared mergeable [`LogHistogram`].
+#[derive(Debug, Clone, Default)]
+pub struct Hist(Arc<Mutex<LogHistogram>>);
+
+impl Hist {
+    pub fn record(&self, x: f64) {
+        self.0.lock().expect("hist poisoned").record(x);
+    }
+
+    pub fn snapshot(&self) -> LogHistogram {
+        self.0.lock().expect("hist poisoned").clone()
+    }
+}
+
+/// One sampled value in a snapshot cut.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Counter(u64),
+    Gauge(f64),
+    Hist(LogHistogram),
+}
+
+/// A registered instrument (what the shard map owns).
+#[derive(Debug)]
+enum Slot {
+    Counter(Counter),
+    Gauge(Gauge),
+    Hist(Hist),
+}
+
+impl Slot {
+    fn sample(&self) -> Value {
+        match self {
+            Slot::Counter(c) => Value::Counter(c.get()),
+            Slot::Gauge(g) => Value::Gauge(g.get()),
+            Slot::Hist(h) => Value::Hist(h.snapshot()),
+        }
+    }
+}
+
+/// A collector closure emits samples into this builder at snapshot
+/// time. Collisions merge additively (see module docs).
+#[derive(Debug, Default)]
+pub struct Samples {
+    values: BTreeMap<String, Value>,
+}
+
+impl Samples {
+    pub fn counter(&mut self, name: &str, v: u64) {
+        merge_value(&mut self.values, name, Value::Counter(v));
+    }
+
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        merge_value(&mut self.values, name, Value::Gauge(v));
+    }
+
+    pub fn hist(&mut self, name: &str, h: &LogHistogram) {
+        merge_value(&mut self.values, name, Value::Hist(h.clone()));
+    }
+}
+
+/// Additive merge of one sample into a cut: counters add, histograms
+/// merge, gauges (and any kind mismatch) last-write-wins.
+fn merge_value(into: &mut BTreeMap<String, Value>, name: &str, value: Value) {
+    match (into.get_mut(name), value) {
+        (Some(Value::Counter(a)), Value::Counter(b)) => *a += b,
+        (Some(Value::Hist(a)), Value::Hist(ref b)) => a.merge(b),
+        (Some(slot), value) => *slot = value,
+        (None, value) => {
+            into.insert(name.to_string(), value);
+        }
+    }
+}
+
+/// One consistent, deterministically-ordered cut of every registered
+/// instrument plus every collector's emissions.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Snapshot {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl From<Samples> for Snapshot {
+    fn from(samples: Samples) -> Snapshot {
+        Snapshot { values: samples.values }
+    }
+}
+
+impl Snapshot {
+    /// Fold `other` into `self` with the additive semantics: counters
+    /// add, histograms merge, gauges last-write-wins (`other` wins).
+    pub fn merge(&mut self, other: &Snapshot) {
+        for (name, value) in &other.values {
+            merge_value(&mut self.values, name, value.clone());
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Value> {
+        self.values.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+type CollectorFn = Box<dyn Fn(&mut Samples) + Send + Sync>;
+
+/// The lock-sharded registry (see module docs).
+pub struct Registry {
+    shards: Vec<Mutex<BTreeMap<String, Slot>>>,
+    collectors: Mutex<Vec<CollectorFn>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry {
+            shards: (0..SHARDS).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            collectors: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let registered: usize =
+            self.shards.iter().map(|s| s.lock().expect("registry shard poisoned").len()).sum();
+        f.debug_struct("Registry")
+            .field("registered", &registered)
+            .field("collectors", &self.collectors.lock().expect("collectors poisoned").len())
+            .finish()
+    }
+}
+
+/// FNV-1a over the name: same name always lands on the same shard, so
+/// duplicate detection is a single-shard map lookup.
+fn shard_of(name: &str) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h as usize) % SHARDS
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn register(&self, name: &str, slot: Slot) -> Result<()> {
+        let mut shard = self.shards[shard_of(name)].lock().expect("registry shard poisoned");
+        if shard.contains_key(name) {
+            bail!("metric '{name}' is already registered");
+        }
+        shard.insert(name.to_string(), slot);
+        Ok(())
+    }
+
+    /// Register a monotone counter under `name`. Errors if any
+    /// instrument already owns the name.
+    pub fn counter(&self, name: &str) -> Result<Counter> {
+        let handle = Counter::default();
+        self.register(name, Slot::Counter(handle.clone()))?;
+        Ok(handle)
+    }
+
+    /// Register a gauge under `name`.
+    pub fn gauge(&self, name: &str) -> Result<Gauge> {
+        let handle = Gauge::default();
+        self.register(name, Slot::Gauge(handle.clone()))?;
+        Ok(handle)
+    }
+
+    /// Register a histogram under `name`.
+    pub fn histogram(&self, name: &str) -> Result<Hist> {
+        let handle = Hist::default();
+        self.register(name, Slot::Hist(handle.clone()))?;
+        Ok(handle)
+    }
+
+    /// Register a snapshot-time collector (see module docs). Never
+    /// fails: collectors have no name of their own; collisions between
+    /// their emitted samples merge additively.
+    pub fn collect(&self, collector: impl Fn(&mut Samples) + Send + Sync + 'static) {
+        self.collectors.lock().expect("collectors poisoned").push(Box::new(collector));
+    }
+
+    /// One deterministic cut: every registered instrument sampled,
+    /// then every collector run, all merged additively into one
+    /// ordered map.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut samples = Samples::default();
+        for shard in &self.shards {
+            for (name, slot) in shard.lock().expect("registry shard poisoned").iter() {
+                merge_value(&mut samples.values, name, slot.sample());
+            }
+        }
+        for collector in self.collectors.lock().expect("collectors poisoned").iter() {
+            collector(&mut samples);
+        }
+        Snapshot { values: samples.values }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall, gen, Config};
+
+    #[test]
+    fn typed_handles_register_and_sample() {
+        let reg = Registry::new();
+        let c = reg.counter("feedback.rows_dropped").unwrap();
+        let g = reg.gauge("feedback.queue_depth").unwrap();
+        let h = reg.histogram("coordinator.asm.achieved_mbps").unwrap();
+        c.add(3);
+        c.inc();
+        g.set(7.5);
+        h.record(1000.0);
+        h.record(2000.0);
+        let snap = reg.snapshot();
+        assert_eq!(snap.get("feedback.rows_dropped"), Some(&Value::Counter(4)));
+        assert_eq!(snap.get("feedback.queue_depth"), Some(&Value::Gauge(7.5)));
+        match snap.get("coordinator.asm.achieved_mbps") {
+            Some(Value::Hist(h)) => assert_eq!((h.count(), h.mean()), (2, 1500.0)),
+            other => panic!("expected a histogram, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn snapshot_order_is_deterministic_and_sorted() {
+        let reg = Registry::new();
+        for name in ["z.last", "a.first", "m.middle"] {
+            reg.counter(name).unwrap();
+        }
+        let names: Vec<&String> = reg.snapshot().values.keys().collect();
+        assert_eq!(names, ["a.first", "m.middle", "z.last"]);
+    }
+
+    #[test]
+    fn collectors_merge_additively_on_collision() {
+        let reg = Registry::new();
+        reg.collect(|s| s.counter("probe.led", 2));
+        reg.collect(|s| s.counter("probe.led", 5));
+        reg.collect(|s| s.gauge("netplane.active", 1.0));
+        reg.collect(|s| s.gauge("netplane.active", 3.0));
+        let snap = reg.snapshot();
+        assert_eq!(snap.get("probe.led"), Some(&Value::Counter(7)));
+        // Gauges are last-write-wins, not additive.
+        assert_eq!(snap.get("netplane.active"), Some(&Value::Gauge(3.0)));
+    }
+
+    #[test]
+    fn duplicate_name_rejected_across_kinds() {
+        // Property: whatever the (first kind, second kind) pairing, the
+        // second registration of one name fails and the first handle
+        // keeps working.
+        forall(
+            Config { cases: 64, seed: 0x5E_61 },
+            |rng| (rng.index(3), rng.index(3), rng.index(1000)),
+            |&(first, second, n)| {
+                let reg = Registry::new();
+                let name = format!("dup.test.{n}");
+                let ok = match first {
+                    0 => reg.counter(&name).map(|_| ()),
+                    1 => reg.gauge(&name).map(|_| ()),
+                    _ => reg.histogram(&name).map(|_| ()),
+                };
+                if ok.is_err() {
+                    return Err("first registration must succeed".into());
+                }
+                let again = match second {
+                    0 => reg.counter(&name).map(|_| ()),
+                    1 => reg.gauge(&name).map(|_| ()),
+                    _ => reg.histogram(&name).map(|_| ()),
+                };
+                if again.is_ok() {
+                    return Err(format!("duplicate '{name}' accepted (kinds {first},{second})"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn counter_is_monotone_under_arbitrary_adds() {
+        forall(
+            Config { cases: 128, seed: 0x5E_62 },
+            |rng| {
+                (0..rng.index(40)).map(|_| rng.index(1000) as u64).collect::<Vec<u64>>()
+            },
+            |adds| {
+                let reg = Registry::new();
+                let c = reg.counter("mono").unwrap();
+                let mut last = c.get();
+                let mut expect = 0u64;
+                for &n in adds {
+                    c.add(n);
+                    expect += n;
+                    let now = c.get();
+                    if now < last {
+                        return Err(format!("counter moved backwards: {last} -> {now}"));
+                    }
+                    last = now;
+                }
+                if c.get() != expect {
+                    return Err(format!("counter {} != sum of adds {expect}", c.get()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn merging_two_registries_equals_sequential_recording() {
+        // Property: splitting a recording stream across two registries
+        // and merging their snapshots equals recording everything into
+        // one registry — for counters (adds commute) and histograms
+        // (merge is exact on counts). The registry's merge is the
+        // histogram's merge, so the f64 sums agree exactly here too:
+        // both sides add the same values in the same order per bucket.
+        forall(
+            Config { cases: 64, seed: 0x5E_63 },
+            |rng| {
+                (
+                    gen::vec_f64(rng, 0, 40, 1e-2, 1e6),
+                    gen::vec_f64(rng, 0, 40, 1e-2, 1e6),
+                    rng.index(1000) as u64,
+                    rng.index(1000) as u64,
+                )
+            },
+            |(xs_a, xs_b, n_a, n_b)| {
+                let a = Registry::new();
+                let b = Registry::new();
+                let one = Registry::new();
+                let (ca, cb, call) = (
+                    a.counter("c").unwrap(),
+                    b.counter("c").unwrap(),
+                    one.counter("c").unwrap(),
+                );
+                let (ha, hb, hall) = (
+                    a.histogram("h").unwrap(),
+                    b.histogram("h").unwrap(),
+                    one.histogram("h").unwrap(),
+                );
+                ca.add(*n_a);
+                cb.add(*n_b);
+                call.add(*n_a);
+                call.add(*n_b);
+                for &x in xs_a {
+                    ha.record(x);
+                    hall.record(x);
+                }
+                for &x in xs_b {
+                    hb.record(x);
+                    hall.record(x);
+                }
+                let mut merged = a.snapshot();
+                merged.merge(&b.snapshot());
+                let sequential = one.snapshot();
+                if merged != sequential {
+                    return Err(format!(
+                        "merged {merged:?} != sequential {sequential:?}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn snapshot_merge_prefers_others_gauge() {
+        let a = Registry::new();
+        let b = Registry::new();
+        a.gauge("g").unwrap().set(1.0);
+        b.gauge("g").unwrap().set(2.0);
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        assert_eq!(merged.get("g"), Some(&Value::Gauge(2.0)));
+    }
+
+    #[test]
+    fn handles_are_send_across_threads() {
+        let reg = std::sync::Arc::new(Registry::new());
+        let c = reg.counter("threads.hits").unwrap();
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(reg.snapshot().get("threads.hits"), Some(&Value::Counter(4000)));
+    }
+}

@@ -19,6 +19,36 @@ fn help_exits_zero_and_lists_scenario() {
     assert!(stdout.contains("experiment"), "{stdout}");
     assert!(stdout.contains("scenario"), "{stdout}");
     assert!(stdout.contains("trace"), "{stdout}");
+    assert!(stdout.contains("obs"), "{stdout}");
+}
+
+#[test]
+fn obs_rejects_unknown_flags_nonzero() {
+    // The shared parser swallows unknown `--flags`; obs validates
+    // strictly so a typo can't silently print the default export.
+    let out = dtopt(&["obs", "--bogus"]);
+    assert!(!out.status.success(), "unknown obs flag must exit non-zero");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown flag"), "{stderr}");
+    assert!(stderr.contains("--bogus"), "{stderr}");
+}
+
+#[test]
+fn obs_rejects_unknown_options_and_positionals_nonzero() {
+    let with_value = dtopt(&["obs", "--bogus", "value"]);
+    assert!(!with_value.status.success(), "unknown obs option must exit non-zero");
+    let positional = dtopt(&["obs", "flash-crowd"]);
+    assert!(!positional.status.success(), "obs takes --scenario, not a positional");
+    let stderr = String::from_utf8_lossy(&positional.stderr);
+    assert!(stderr.contains("--scenario"), "{stderr}");
+}
+
+#[test]
+fn obs_rejects_unknown_scenario_nonzero() {
+    let out = dtopt(&["obs", "--scenario", "no-such-scenario"]);
+    assert!(!out.status.success(), "unknown obs scenario must exit non-zero");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("bundled"), "stderr lists the bundled library: {stderr}");
 }
 
 #[test]

@@ -1,0 +1,202 @@
+//! Golden fixtures for the fleet health plane's exporters: one
+//! hand-built, bit-deterministic `Metrics` — the same scripted inputs
+//! as `metrics_golden`, plus accuracy-ledger scores and flight-recorder
+//! entries — is cut through `Metrics::export_snapshot` and rendered by
+//! both exporters, so any drift in the registry name taxonomy, the
+//! Prometheus/JSON formats, or the snapshot merge semantics shows up as
+//! a reviewed fixture diff instead of a silent change to what
+//! `dtopt obs` (and `--metrics-out`) consumers parse.
+//!
+//! Like `trace_golden` (and unlike `metrics_golden`) the fixtures are
+//! read at runtime, not `include_str!`: they bootstrap from a machine
+//! that can run the suite, so a missing fixture is a note to
+//! regenerate, not a compile error. Once committed they are enforced
+//! bytewise.
+//!
+//! To (re)generate after an *intentional* change:
+//! `DTOPT_UPDATE_GOLDEN=1 cargo test --test obs_golden` — then review
+//! and commit the fixture diffs.
+
+use dtopt::coordinator::Metrics;
+use dtopt::fabric::{FabricConfig, ShardKey, ShardRouter};
+use dtopt::feedback::FeedbackStats;
+use dtopt::netplane::LinkPlane;
+use dtopt::offline::knowledge::KnowledgeBase;
+use dtopt::probe::{BudgetConfig, EstimateConfig, ProbeConfig, ProbeOcc, ProbePlane};
+use dtopt::sim::dataset::SizeClass;
+use dtopt::sim::testbed::TestbedId;
+use dtopt::telemetry::{export, FlightRecord};
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/obs").join(name)
+}
+
+fn check(name: &str, rendered: &str, update: bool, missing: &mut Vec<String>) {
+    let path = fixture_path(name);
+    if update {
+        std::fs::create_dir_all(path.parent().unwrap())
+            .expect("creating the obs fixture directory");
+        std::fs::write(&path, rendered).expect("rewriting the obs golden");
+        eprintln!("obs_golden: fixture regenerated at {}", path.display());
+        return;
+    }
+    match std::fs::read_to_string(&path) {
+        Ok(golden) => assert_eq!(
+            rendered, golden,
+            "obs export '{name}' drifted from the golden fixture.\n\
+             If the change is intentional, regenerate with \
+             DTOPT_UPDATE_GOLDEN=1 cargo test --test obs_golden"
+        ),
+        Err(_) => missing.push(name.to_string()),
+    }
+}
+
+#[test]
+fn handbuilt_export_matches_golden_fixtures() {
+    let metrics = Metrics::new();
+    // Per-optimizer entries with fixed decision latencies (the wall-ns
+    // column is render-only; the export must never carry it).
+    metrics.record("ASM", 2000.0, 1000.0, 4.0, 2, 10_000);
+    metrics.record("ASM", 1000.0, 1000.0, 8.0, 0, 30_000);
+    metrics.record("GO", 500.0, 250.0, 4.0, 0, 2_000_000);
+
+    // Knowledge-service counters set by hand.
+    let feedback = Arc::new(FeedbackStats::default());
+    feedback.kb_generation.store(3, Ordering::Relaxed);
+    feedback.refreshes.store(2, Ordering::Relaxed);
+    feedback.rows_consumed.store(120, Ordering::Relaxed);
+    feedback.last_refresh_ns.store(2_000_000, Ordering::Relaxed);
+    feedback.total_refresh_ns.store(6_000_000, Ordering::Relaxed);
+    feedback.rows_enqueued.store(130, Ordering::Relaxed);
+    feedback.rows_flushed.store(128, Ordering::Relaxed);
+    feedback.flushes.store(16, Ordering::Relaxed);
+    feedback.rows_dropped.store(2, Ordering::Relaxed);
+    feedback.drift_events.store(5, Ordering::Relaxed);
+    metrics.attach_feedback(feedback);
+
+    // Fabric: an empty fallback KB means the routed shard borrows it
+    // with zero rows — every published gauge is fixed.
+    let dir = std::env::temp_dir().join(format!("dtopt_obs_golden_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let fabric = Arc::new(
+        ShardRouter::open(&dir, Arc::new(KnowledgeBase::empty()), FabricConfig::default())
+            .unwrap(),
+    );
+    let _ = fabric.route(ShardKey::new(TestbedId::Xsede, SizeClass::Large));
+    metrics.attach_fabric(fabric.clone());
+
+    // Probe plane: scripted counters plus one estimate whose
+    // confidence cannot visibly decay (million-second half-life).
+    let plane = Arc::new(ProbePlane::new(ProbeConfig {
+        estimate: EstimateConfig {
+            half_life: Duration::from_secs(1_000_000),
+            ..Default::default()
+        },
+        budget: BudgetConfig { capacity_mb: 4096.0, initial_mb: 4096.0, earn_fraction: 0.05 },
+        ..Default::default()
+    }));
+    plane.stats.led.store(2, Ordering::Relaxed);
+    plane.stats.piggybacked.store(5, Ordering::Relaxed);
+    plane.stats.estimate_served.store(3, Ordering::Relaxed);
+    plane.stats.budget_forced.store(1, Ordering::Relaxed);
+    plane.stats.note_bytes(500.0, 9_500.0);
+    plane.estimates().record(
+        ShardKey::new(TestbedId::Xsede, SizeClass::Large),
+        1,
+        3,
+        0.42,
+        1.0,
+        2,
+        ProbeOcc::default(),
+    );
+    metrics.attach_probe(plane);
+
+    // Link plane: one scripted registration plus an ambient convoy.
+    let links = Arc::new(LinkPlane::shared());
+    let lease = links.clone().admit(TestbedId::Xsede, 7);
+    lease.update(8, 24, 2_500.0);
+    links.set_ambient(TestbedId::Xsede, 4_000.0, 48);
+    metrics.attach_links(links);
+
+    // Fleet health plane: scripted accuracy scores and two retained
+    // flights (ids, simulated seconds, Mbps — nothing wall-clock).
+    metrics.ledger.score("xsede/large", 1860.0, 2000.0);
+    metrics.ledger.score("xsede/large", 1500.0, 2000.0);
+    metrics.ledger.score("didclab/small", 80.0, 100.0);
+    metrics.recorder.push(FlightRecord {
+        id: 1,
+        optimizer: "ASM",
+        shard: "xsede/large".to_string(),
+        probe_mode: Some("led"),
+        kb_generation: 3,
+        borrowed: false,
+        samples: 3,
+        retunes: 1,
+        total_mb: 1000.0,
+        transfer_s: 4.0,
+        achieved_mbps: 1860.0,
+        optimal_mbps: 2000.0,
+    });
+    metrics.recorder.push(FlightRecord {
+        id: 2,
+        optimizer: "GO",
+        shard: "didclab/small".to_string(),
+        probe_mode: None,
+        kb_generation: 3,
+        borrowed: true,
+        samples: 0,
+        retunes: 0,
+        total_mb: 250.0,
+        transfer_s: 4.0,
+        achieved_mbps: 80.0,
+        optimal_mbps: 100.0,
+    });
+
+    let snap = metrics.export_snapshot();
+    let prom = export::to_prometheus(&snap);
+    let json = format!("{}\n", export::to_json(&snap).to_string_compact());
+
+    drop(lease);
+    fabric.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // The export side of the determinism contract, independent of the
+    // fixtures: no wall-clock family ever enters a snapshot.
+    for name in snap.values.keys() {
+        assert!(
+            !name.contains("wall_ns") && !name.contains("refresh_ns") && !name.ends_with("flushes"),
+            "wall-clock or scheduler-dependent family '{name}' leaked into the export"
+        );
+    }
+
+    let update = std::env::var("DTOPT_UPDATE_GOLDEN").is_ok();
+    let mut missing = Vec::new();
+    check("handbuilt.prom", &prom, update, &mut missing);
+    check("handbuilt.json", &json, update, &mut missing);
+    if !missing.is_empty() {
+        eprintln!(
+            "obs_golden: no fixture yet for {missing:?}; bootstrap with \
+             DTOPT_UPDATE_GOLDEN=1 cargo test --test obs_golden"
+        );
+    }
+}
+
+#[test]
+fn export_snapshot_is_deterministic_across_cuts() {
+    // Two snapshots of the same unchanged metrics must render
+    // byte-identically in both formats — the property the CI
+    // obs-conformance job enforces end to end over a full scenario.
+    let metrics = Metrics::new();
+    metrics.record("ASM", 2000.0, 1000.0, 4.0, 2, 10_000);
+    metrics.ledger.score("xsede/large", 1860.0, 2000.0);
+    let (a, b) = (metrics.export_snapshot(), metrics.export_snapshot());
+    assert_eq!(export::to_prometheus(&a), export::to_prometheus(&b));
+    assert_eq!(
+        export::to_json(&a).to_string_compact(),
+        export::to_json(&b).to_string_compact()
+    );
+}

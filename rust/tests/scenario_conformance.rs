@@ -274,6 +274,70 @@ fn convoy_contention_bites_and_occupancy_stamps_estimates() {
 }
 
 #[test]
+fn accuracy_ledger_scores_every_bundled_scenario() {
+    // The paper's 93%-of-optimal headline as a continuously tracked
+    // metric: every replayed response is scored against the sim
+    // oracle's optimal, the accuracy-floor invariant judges the
+    // per-shard means, and the ledger reports per-shard quantiles.
+    for name in bundled_names() {
+        let outcome = run_bundled(name);
+        let floor = outcome.report("accuracy-floor").unwrap();
+        assert!(floor.checked >= 1, "'{name}': accuracy floor never exercised");
+        assert!(floor.violations.is_empty(), "'{name}': {:?}", floor.violations);
+        let responses = outcome.responses().count() as u64;
+        // Exactly one score and one flight per response — a mismatch
+        // here means a serve path skipped the health plane (too few) or
+        // double-fed it (too many).
+        assert_eq!(
+            outcome.metrics.ledger.scored(),
+            responses,
+            "'{name}': ledger scores != responses"
+        );
+        assert_eq!(
+            outcome.metrics.recorder.total_seen(),
+            responses,
+            "'{name}': recorded flights != responses"
+        );
+        let overall = outcome.metrics.ledger.overall().expect("scored scenarios summarize");
+        assert!(overall.transfers >= 1 && overall.p50 > 0.0, "'{name}': {overall:?}");
+        let shards = outcome.metrics.ledger.snapshot();
+        assert!(!shards.is_empty(), "'{name}': no per-shard accuracy");
+        for (shard, hist) in &shards {
+            assert!(!hist.is_empty(), "'{name}': shard '{shard}' empty");
+            let summary = outcome.metrics.ledger.shard(shard).unwrap();
+            assert!(
+                summary.p10 <= summary.p50 && summary.p50 <= summary.p90,
+                "'{name}' shard '{shard}': quantiles out of order: {summary:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn same_seed_metric_exports_are_byte_identical() {
+    // The obs-conformance bar, in-process: two same-seed replays must
+    // export byte-identical metrics in both formats (CI re-enforces
+    // this end to end through `dtopt scenario --metrics-out`).
+    use dtopt::telemetry::export;
+    for name in bundled_names() {
+        let a = run_bundled(name);
+        let b = run_bundled(name);
+        let (snap_a, snap_b) = (a.metrics.export_snapshot(), b.metrics.export_snapshot());
+        assert!(!snap_a.is_empty(), "'{name}': export snapshot is empty");
+        assert_eq!(
+            export::to_prometheus(&snap_a),
+            export::to_prometheus(&snap_b),
+            "scenario '{name}' prometheus export is not deterministic"
+        );
+        assert_eq!(
+            export::to_json(&snap_a).to_string_compact(),
+            export::to_json(&snap_b).to_string_compact(),
+            "scenario '{name}' json export is not deterministic"
+        );
+    }
+}
+
+#[test]
 fn same_seed_replays_are_byte_identical() {
     // The acceptance bar: two quick-mode runs with the same seed
     // produce byte-identical event timelines AND byte-identical
