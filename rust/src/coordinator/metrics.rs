@@ -28,7 +28,8 @@ use crate::feedback::FeedbackStats;
 use crate::netplane::{LinkPlane, PlaneMode};
 use crate::probe::ProbePlane;
 use crate::telemetry::{
-    AccuracyLedger, FlightRecorder, LogHistogram, Registry, Samples, Snapshot,
+    AccuracyLedger, FlightRecorder, LogHistogram, Registry, Samples, Sentry, Settlement,
+    Snapshot,
 };
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -90,6 +91,10 @@ pub struct Metrics {
     pub ledger: AccuracyLedger,
     /// Bounded ring of per-request flight summaries.
     pub recorder: FlightRecorder,
+    /// The anomaly-detector engine, ticked once per settlement on the
+    /// same single-cut snapshot the exporters read
+    /// ([`Metrics::tick_sentry`]).
+    pub sentry: Mutex<Sentry>,
 }
 
 /// One render's consistent view of the sink: the per-optimizer table
@@ -178,6 +183,7 @@ impl Metrics {
             s.counter("probe.budget_forced", load(&st.budget_forced));
             s.counter("probe.follower_timeouts", load(&st.follower_timeouts));
             s.counter("probe.leader_aborts", load(&st.leader_aborts));
+            s.counter("probe.stale_demotions", load(&st.stale_demotions));
             let (sample_mb, bulk_mb) = st.bytes();
             s.gauge("probe.bytes.sample_mb", sample_mb);
             s.gauge("probe.bytes.bulk_mb", bulk_mb);
@@ -448,6 +454,17 @@ impl Metrics {
     /// plane, determinism contract — CI's obs-conformance job diffs
     /// exactly this output).
     pub fn export_snapshot(&self) -> Snapshot {
+        let mut snap = self.base_snapshot();
+        let mut extra = Samples::default();
+        self.sentry.lock().unwrap().export_into(&mut extra);
+        snap.merge(&Snapshot::from(extra));
+        snap
+    }
+
+    /// The cut *before* the sentry block — exactly what the sentry
+    /// itself is fed on each tick, so a detector never reads its own
+    /// output families back as input.
+    fn base_snapshot(&self) -> Snapshot {
         let mut snap = self.registry.snapshot();
         let mut extra = Samples::default();
         for (name, s) in self.snapshot() {
@@ -468,8 +485,26 @@ impl Metrics {
         }
         extra.counter("recorder.flights_seen", self.recorder.total_seen());
         extra.gauge("recorder.flights_retained", self.recorder.len() as f64);
+        extra.gauge("recorder.capacity", self.recorder.capacity() as f64);
         snap.merge(&Snapshot::from(extra));
         snap
+    }
+
+    /// Feed the sentry one settlement at virtual time `t_s`, cutting
+    /// the same snapshot the exporters would see at this instant. Both
+    /// serve paths (worker `serve_one` and the scenario runner's
+    /// `run_admitted`) call this at the same point — after the ledger
+    /// is scored and the flight recorded, with the link lease released
+    /// — so their alert timelines are interchangeable.
+    pub fn tick_sentry(&self, t_s: f64, settlement: &Settlement) {
+        let snap = self.base_snapshot();
+        self.sentry.lock().unwrap().tick(t_s, settlement, &snap);
+    }
+
+    /// Every alert raised so far (raise order), cloned out of the
+    /// sentry.
+    pub fn alerts(&self) -> Vec<crate::telemetry::Alert> {
+        self.sentry.lock().unwrap().alerts().to_vec()
     }
 }
 
@@ -729,9 +764,15 @@ mod tests {
         assert!(matches!(snap.get("health.accuracy.overall"), Some(Value::Hist(_))));
         assert_eq!(snap.get("health.scored_transfers"), Some(&Value::Counter(1)));
         assert_eq!(snap.get("recorder.flights_seen"), Some(&Value::Counter(1)));
+        assert!(
+            matches!(snap.get("recorder.capacity"), Some(Value::Gauge(c)) if *c > 0.0)
+        );
         assert!(snap.get("probe.led").is_some());
+        assert!(snap.get("probe.stale_demotions").is_some());
         assert!(snap.get("netplane.active_transfers").is_some());
         assert!(snap.get("netplane.xsede.carried_mbps").is_some());
+        // A never-ticked sentry publishes nothing.
+        assert!(snap.get("sentry.ticks").is_none());
         // The determinism contract: nothing wall-clock or
         // scheduler-shaped may reach an export.
         for name in snap.values.keys() {
@@ -742,6 +783,37 @@ mod tests {
                 "wall-clock/scheduler family leaked into the export: {name}"
             );
         }
+    }
+
+    #[test]
+    fn ticked_sentry_joins_the_export_cut() {
+        use crate::telemetry::registry::Value;
+
+        let m = Metrics::new();
+        m.record("ASM", 1000.0, 500.0, 4.0, 2, 10_000);
+        let settlement = Settlement {
+            shard: "xsede/large".to_string(),
+            network: "xsede".to_string(),
+            achieved_mbps: 900.0,
+            optimal_mbps: 1000.0,
+            generation: 0,
+            contended: true,
+        };
+        m.tick_sentry(10.0, &settlement);
+        let snap = m.export_snapshot();
+        assert_eq!(snap.get("sentry.ticks"), Some(&Value::Counter(1)));
+        assert_eq!(snap.get("sentry.alerts.raised"), Some(&Value::Counter(1)));
+        assert_eq!(
+            snap.get("sentry.allowance-thrash.active"),
+            Some(&Value::Gauge(1.0))
+        );
+        let alerts = m.alerts();
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].detector, "allowance-thrash");
+        // The sentry reads the same cut it exports into, minus its own
+        // block: its input families (here, the coordinator table) were
+        // visible to the tick.
+        assert!(snap.get("coordinator.asm.requests").is_some());
     }
 
     #[test]

@@ -501,6 +501,21 @@ fn serve_one(
         achieved_mbps: report.achieved_mbps(),
         optimal_mbps,
     });
+    // Sentry tick: one settlement at the request's virtual submission
+    // time, on the post-release cut (the lease is already off the
+    // link, so surviving occupancy is a genuine leak). The scenario
+    // runner's `run_admitted` ticks at exactly the same point.
+    shared.metrics.tick_sentry(
+        request.t_submit,
+        &crate::telemetry::Settlement {
+            shard: probe_key.name(),
+            network: request.testbed.name().to_string(),
+            achieved_mbps: report.achieved_mbps(),
+            optimal_mbps,
+            generation: snapshot.generation,
+            contended: contention.as_ref().map(|c| c.contended_s > 0.0).unwrap_or(false),
+        },
+    );
     match &shared.knowledge {
         Knowledge::Global { feedback: Some(fb), .. } => {
             // Drift-rate signal: bulk-phase re-tunes mean the surfaces no

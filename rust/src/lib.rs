@@ -137,6 +137,25 @@
 //! viewer; `--metrics-out` on scenario/serve/experiment runs writes
 //! the same export to disk (CI diffs two same-seed runs bytewise).
 //!
+//! ## The sentry plane (`crate::telemetry` — window, sentry)
+//!
+//! The registry tells an operator the numbers; the sentry plane tells
+//! them something is *wrong*, and since when. A [`telemetry::WindowRing`]
+//! folds registry snapshots into fixed-width virtual-time windows
+//! (bounded retention, per-window accuracy histograms), and the
+//! [`telemetry::Sentry`] evaluates five deterministic detectors over it
+//! at every settlement — accuracy-below-floor, probe-budget-famine,
+//! occupancy-leak, stale-knowledge, allowance-thrash — emitting typed,
+//! edge-triggered [`telemetry::Alert`] raise/clear events in virtual
+//! time. Every detector input is replay-stable, so same-seed replays
+//! produce byte-identical alert timelines; scenarios declare the alerts
+//! their faults must provoke (`expect-alert <detector> [after T]`,
+//! `expect-quiet`) and the scenario engine's `alert-conformance`
+//! invariant enforces them, pinning fault-free control replays to zero
+//! alerts. `dtopt obs --alerts [--json]` and `dtopt scenario --alerts`
+//! print the timeline; golden fixtures under
+//! `rust/tests/fixtures/alerts/` pin the exact bytes.
+//!
 //! See `DESIGN.md` (repo root) for the layering diagram, the feedback
 //! dataflow, the fabric's routing diagram and shard lifecycle, the
 //! probe-plane dataflow, the scenario engine's dataflow and scenario

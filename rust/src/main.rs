@@ -10,13 +10,15 @@
 //!              [--metrics-out F]
 //!   experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|convoy|all
 //!              [--quick|--full] [--metrics-out F]
-//!   scenario   <name|file> [--seed S] [--full] [--timeline] [--json] [--list]
-//!              [--metrics-out F]
+//!   scenario   <name|file> [--seed S] [--full] [--timeline] [--alerts] [--json]
+//!              [--list] [--metrics-out F]
 //!              deterministic fault-injecting replay + invariant verdict
 //!   trace      <name|file> [--request N] [--json] [--seed S] [--full]
+//!              [--metrics-out F]
 //!              per-request decision-provenance traces for one replay
-//!   obs        [--scenario NAME|FILE] [--seed S] [--prom|--json|--recent N]
-//!              fleet health plane: registry export, flight recorder, ledger
+//!   obs        [--scenario NAME|FILE] [--seed S] [--prom|--json|--alerts|--recent N]
+//!              fleet health plane: registry export, flight recorder,
+//!              ledger, sentry alert timeline
 //!   selftest                     quick end-to-end sanity run
 //!
 //! `--metrics-out F` writes the run's unified registry snapshot to F:
@@ -141,9 +143,9 @@ fn print_help() {
          transfer --testbed T --files N --avg-mb M [--optimizer O] [--kb F] [--load L]\n  \
          serve [--requests N] [--workers W] [--optimizer O] [--fabric] [--metrics-out F]\n  \
          experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|convoy|all [--quick|--full] [--metrics-out F]\n  \
-         scenario <name|file> [--seed S] [--full] [--timeline] [--json] [--metrics-out F] (--list prints bundled names)\n  \
-         trace <name|file> [--request N] [--json] [--seed S] [--full]\n  \
-         obs [--scenario NAME|FILE] [--seed S] [--prom|--json|--recent N]\n  \
+         scenario <name|file> [--seed S] [--full] [--timeline] [--alerts] [--json] [--metrics-out F] (--list prints bundled names)\n  \
+         trace <name|file> [--request N] [--json] [--seed S] [--full] [--metrics-out F]\n  \
+         obs [--scenario NAME|FILE] [--seed S] [--prom|--json|--alerts|--recent N]\n  \
          selftest"
     );
 }
@@ -547,6 +549,7 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
 /// invariant violation, so CI and scripts can gate on it.
 fn cmd_scenario(opts: &Opts) -> Result<()> {
     use dtopt::scenario::{render_timeline, render_verdict, run, timeline_to_json};
+    use dtopt::telemetry::{alerts_to_json, render_alerts};
 
     // `dtopt scenario --list` prints the bundled library (one name per
     // line, exit 0) for scripts; a missing name still exits non-zero
@@ -565,6 +568,16 @@ fn cmd_scenario(opts: &Opts) -> Result<()> {
         } else {
             print!("{}", render_timeline(&outcome.timeline));
             println!();
+        }
+    }
+    // The sentry's raise/clear timeline, in scenario seconds. The JSON
+    // form is what CI's alert-conformance job byte-diffs across two
+    // same-seed runs, and what the alert goldens are built from.
+    if opts.has("alerts") {
+        if opts.has("json") {
+            println!("{}", alerts_to_json(&outcome.alerts).to_string_compact());
+        } else {
+            print!("{}", render_alerts(&outcome.alerts));
         }
     }
     print!("{}", render_verdict(&outcome));
@@ -654,8 +667,8 @@ fn cmd_obs(opts: &Opts) -> Result<()> {
     // The shared parser swallows unknown `--flags` silently; obs
     // validates strictly so a typo exits non-zero instead of quietly
     // printing the default export.
-    const USAGE: &str =
-        "obs takes [--scenario NAME|FILE] [--seed S] [--full] and one of [--prom|--json|--recent N]";
+    const USAGE: &str = "obs takes [--scenario NAME|FILE] [--seed S] [--full] and one of \
+         [--prom|--json|--alerts|--recent N] (--alerts --json for machine-readable alerts)";
     for key in opts.values.keys() {
         anyhow::ensure!(
             matches!(key.as_str(), "scenario" | "seed" | "recent"),
@@ -665,7 +678,7 @@ fn cmd_obs(opts: &Opts) -> Result<()> {
     for flag in &opts.flags {
         anyhow::ensure!(flag != "recent", "--recent expects a count; {USAGE}");
         anyhow::ensure!(
-            matches!(flag.as_str(), "prom" | "json" | "full"),
+            matches!(flag.as_str(), "prom" | "json" | "full" | "alerts"),
             "unknown flag '--{flag}'; {USAGE}"
         );
     }
@@ -674,8 +687,26 @@ fn cmd_obs(opts: &Opts) -> Result<()> {
     let outcome = dtopt::scenario::run(&scenario, &run_options(opts)?)?;
     if let Some(n) = opts.get("recent") {
         let n: usize = n.parse().context("--recent expects a count")?;
+        // The recorder is a bounded ring: asking past its capacity is
+        // reported, never silently truncated to the ring size.
+        let capacity = outcome.metrics.recorder.capacity();
+        if n > capacity {
+            eprintln!(
+                "note: --recent {n} exceeds the flight recorder's capacity of {capacity} \
+                 flights; showing the newest {capacity}"
+            );
+        }
         print!("{}", outcome.metrics.recorder.render_recent(n));
         print!("{}", outcome.metrics.ledger.render());
+    } else if opts.has("alerts") {
+        if opts.has("json") {
+            println!(
+                "{}",
+                dtopt::telemetry::alerts_to_json(&outcome.alerts).to_string_compact()
+            );
+        } else {
+            print!("{}", dtopt::telemetry::render_alerts(&outcome.alerts));
+        }
     } else if opts.has("json") {
         println!("{}", export::to_json(&outcome.metrics.export_snapshot()).to_string_compact());
     } else {
@@ -701,6 +732,26 @@ fn cmd_trace(opts: &Opts) -> Result<()> {
     use dtopt::scenario::run;
     use dtopt::telemetry::traces_to_json;
 
+    // Strict validation, matching `obs`: a typo exits non-zero instead
+    // of silently replaying with the option ignored.
+    const USAGE: &str =
+        "trace takes <name|file> [--request N] [--json] [--seed S] [--full] [--metrics-out F]";
+    for key in opts.values.keys() {
+        anyhow::ensure!(
+            matches!(key.as_str(), "request" | "seed" | "metrics-out"),
+            "unknown option '--{key} <value>'; {USAGE}"
+        );
+    }
+    for flag in &opts.flags {
+        anyhow::ensure!(
+            matches!(flag.as_str(), "json" | "full"),
+            "unknown flag '--{flag}'; {USAGE}"
+        );
+    }
+    anyhow::ensure!(
+        opts.positional.len() <= 1,
+        "trace takes one scenario name or file; {USAGE}"
+    );
     let scenario = resolve_scenario(opts)?;
     let outcome = run(&scenario, &run_options(opts)?)?;
     let picked = match opts.get("request") {
@@ -728,6 +779,12 @@ fn cmd_trace(opts: &Opts) -> Result<()> {
         for trace in &outcome.traces {
             print!("{}", trace.render_text());
         }
+    }
+    // Same export hook the scenario/serve/experiment commands have:
+    // the replay's unified registry snapshot, `.prom` or JSON by
+    // extension (see `write_metrics_out`).
+    if let Some(path) = opts.get("metrics-out") {
+        write_metrics_out(path, &outcome.metrics.export_snapshot())?;
     }
     Ok(())
 }

@@ -99,6 +99,11 @@ pub struct ProbeStats {
     pub follower_timeouts: AtomicU64,
     /// Leaders whose run produced no usable outcome (cold-start KB).
     pub leader_aborts: AtomicU64,
+    /// Admissions that consulted an estimate recorded under an older KB
+    /// generation than the one the request is pinned to — the estimate
+    /// is confidence-demoted, and the sentry's stale-knowledge detector
+    /// watches this rate.
+    pub stale_demotions: AtomicU64,
     /// (sample_mb, bulk_mb) moved through the plane.
     bytes: Mutex<(f64, f64)>,
 }
@@ -213,6 +218,11 @@ impl ProbePlane {
     ) -> Admission {
         let estimate =
             cluster_idx.and_then(|ci| self.estimates.current(key, ci, generation, occ));
+        if let Some((est, _)) = &estimate {
+            if est.generation != generation {
+                self.stats.stale_demotions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
         if let Some((est, confidence)) = estimate {
             if confidence >= self.config.estimate.serve_threshold {
                 self.stats.estimate_served.fetch_add(1, Ordering::Relaxed);

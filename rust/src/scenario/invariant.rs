@@ -41,12 +41,21 @@
 //!   `crate::telemetry::health`).
 //! * **starvation-serves** — with a starved, zero-earn budget, requests
 //!   on the starved shard never lead a sampling ladder again.
+//! * **alert-conformance** — the sentry's alert timeline matches the
+//!   scenario's declarations: every `expect-alert` detector raised (and
+//!   not before its declared fault time), an `expect-quiet` replay
+//!   raised nothing, and the fault-free control replay raised nothing
+//!   at all. Extra detectors on a *faulted* replay are deliberately
+//!   tolerated — faults cascade (a convoy also dents accuracy), and
+//!   the zero-alert baseline is pinned where it is deterministic: on
+//!   quiet replays and controls.
 
 use super::inject::Fault;
+use super::script::AlertExpectation;
 use crate::fabric::ShardKey;
 use crate::probe::ProbeMode;
 use crate::sim::testbed::{Testbed, TestbedId};
-use crate::telemetry::DecisionTrace;
+use crate::telemetry::{Alert, DecisionTrace};
 use std::collections::HashMap;
 
 /// The estimate the runner peeked immediately before a sequential
@@ -531,6 +540,80 @@ pub fn trace_completeness_report(
     report
 }
 
+/// The alert-conformance verdict: the faulted replay's sentry alerts
+/// against the scenario's declarations, plus the fault-free control's
+/// zero-alert baseline. Appended by the runner, which holds the alert
+/// timelines. Checks, in order:
+///
+/// * every `expect-alert` detector raised at least once on the faulted
+///   replay, and its **first** raise is at or after the declared
+///   `after` time (when one is declared);
+/// * an `expect-quiet` scenario raised nothing at all;
+/// * the control replay (when one ran) raised nothing at all.
+///
+/// Detectors raised on a faulted replay beyond those declared are *not*
+/// violations: fault effects cascade across detector families, and the
+/// deterministic zero-alert contract belongs to quiet replays and
+/// controls (see the module docs).
+pub fn alert_conformance_report(
+    expects: &[AlertExpectation],
+    expect_quiet: bool,
+    faulted: &[Alert],
+    control: Option<&[Alert]>,
+) -> InvariantReport {
+    let mut report =
+        InvariantReport { name: "alert-conformance", checked: 0, violations: vec![] };
+    for expect in expects {
+        report.checked += 1;
+        let first = faulted
+            .iter()
+            .filter(|a| a.detector == expect.detector)
+            .map(|a| a.raised_t_s)
+            .fold(f64::INFINITY, f64::min);
+        if first.is_infinite() {
+            report.violations.push(Violation {
+                at_s: expect.after_s.unwrap_or(0.0),
+                detail: format!("expected alert {} never raised", expect.detector),
+            });
+        } else if let Some(after) = expect.after_s {
+            if first < after {
+                report.violations.push(Violation {
+                    at_s: first,
+                    detail: format!(
+                        "alert {} raised at {first:.0}s, before its fault at {after:.0}s",
+                        expect.detector
+                    ),
+                });
+            }
+        }
+    }
+    if expect_quiet {
+        report.checked += 1;
+        for alert in faulted {
+            report.violations.push(Violation {
+                at_s: alert.raised_t_s,
+                detail: format!(
+                    "expect-quiet replay raised {} on {}: {}",
+                    alert.detector, alert.family, alert.detail
+                ),
+            });
+        }
+    }
+    if let Some(control) = control {
+        report.checked += 1;
+        for alert in control {
+            report.violations.push(Violation {
+                at_s: alert.raised_t_s,
+                detail: format!(
+                    "fault-free control raised {} on {}: {}",
+                    alert.detector, alert.family, alert.detail
+                ),
+            });
+        }
+    }
+    report
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -832,5 +915,72 @@ mod tests {
         let report = trace_completeness_report(&timeline, &[complete_trace(1), broken]);
         assert_eq!(report.violations.len(), 1);
         assert!(report.violations[0].detail.contains("no settlement event"));
+    }
+
+    fn alert(detector: &'static str, raised_t_s: f64) -> Alert {
+        Alert {
+            detector,
+            family: "netplane.xsede".to_string(),
+            raised_t_s,
+            cleared_t_s: None,
+            value: 1.0,
+            threshold: 0.5,
+            detail: "test alert".to_string(),
+        }
+    }
+
+    fn expect(detector: &str, after_s: Option<f64>) -> AlertExpectation {
+        AlertExpectation { detector: detector.to_string(), after_s }
+    }
+
+    #[test]
+    fn alert_conformance_requires_declared_alerts_after_their_fault() {
+        let expects = [expect("accuracy-below-floor", Some(150.0))];
+        // Fired after the fault — and an extra, undeclared detector on
+        // the faulted replay is tolerated (faults cascade).
+        let fired =
+            [alert("accuracy-below-floor", 210.0), alert("allowance-thrash", 190.0)];
+        let report = alert_conformance_report(&expects, false, &fired, None);
+        assert_eq!(report.checked, 1);
+        assert!(report.ok(), "{:?}", report.violations);
+
+        // Never fired.
+        let report = alert_conformance_report(&expects, false, &[], None);
+        assert_eq!(report.violations.len(), 1);
+        assert!(report.violations[0].detail.contains("never raised"));
+
+        // Fired before the declared fault time: the earliest raise is
+        // the one judged.
+        let early =
+            [alert("accuracy-below-floor", 90.0), alert("accuracy-below-floor", 210.0)];
+        let report = alert_conformance_report(&expects, false, &early, None);
+        assert_eq!(report.violations.len(), 1);
+        assert!(report.violations[0].detail.contains("before its fault"));
+    }
+
+    #[test]
+    fn alert_conformance_pins_quiet_replays_and_controls_to_zero() {
+        // expect-quiet: any alert on the replay is a violation.
+        let report =
+            alert_conformance_report(&[], true, &[alert("probe-budget-famine", 30.0)], None);
+        assert_eq!(report.checked, 1);
+        assert_eq!(report.violations.len(), 1);
+        assert!(report.violations[0].detail.contains("expect-quiet"));
+
+        // A clean quiet replay with a clean control passes, and both
+        // checks count as judged observations.
+        let report = alert_conformance_report(&[], true, &[], Some(&[]));
+        assert_eq!(report.checked, 2);
+        assert!(report.ok());
+
+        // The fault-free control must never raise, whatever the faulted
+        // replay declared.
+        let expects = [expect("stale-knowledge", None)];
+        let fired = [alert("stale-knowledge", 420.0)];
+        let control = [alert("stale-knowledge", 400.0)];
+        let report = alert_conformance_report(&expects, false, &fired, Some(&control));
+        assert_eq!(report.checked, 2);
+        assert_eq!(report.violations.len(), 1);
+        assert!(report.violations[0].detail.contains("fault-free control raised"));
     }
 }

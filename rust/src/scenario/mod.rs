@@ -37,9 +37,13 @@
 //!   generations, non-negative budgets, bounded goodput degradation,
 //!   a per-shard achieved-vs-optimal accuracy floor (the continuous
 //!   form lives in the fleet health plane's accuracy ledger,
-//!   [`crate::telemetry::AccuracyLedger`]), and trace completeness:
+//!   [`crate::telemetry::AccuracyLedger`]), trace completeness:
 //!   every served response must carry a structurally complete
-//!   [`crate::telemetry::DecisionTrace`]).
+//!   [`crate::telemetry::DecisionTrace`] — and alert conformance: the
+//!   sentry's raise/clear timeline matches the scenario's
+//!   `expect-alert` / `expect-quiet` declarations, with the fault-free
+//!   control replay pinned to zero alerts (see DESIGN.md § "Sentry
+//!   plane").
 //! * [`runner`] — drives the replay on simulated time, records the
 //!   timeline (byte-identical across same-seed runs) plus one decision
 //!   trace per response, and renders the verdict table (or the
@@ -56,11 +60,11 @@ pub mod script;
 
 pub use inject::{Fault, FaultEvent};
 pub use invariant::{
-    accuracy_floor_report, trace_completeness_report, Event, EstimateObs, InvariantReport,
-    PiggybackObs, ResponseEvent, Violation,
+    accuracy_floor_report, alert_conformance_report, trace_completeness_report, Event,
+    EstimateObs, InvariantReport, PiggybackObs, ResponseEvent, Violation,
 };
 pub use runner::{
     render_timeline, render_verdict, run, timeline_to_json, RunOptions, ScenarioOutcome,
     ACCURACY_FLOOR,
 };
-pub use script::{ArrivalRule, Burst, Scenario};
+pub use script::{AlertExpectation, ArrivalRule, Burst, Scenario};

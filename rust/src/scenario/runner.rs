@@ -27,7 +27,12 @@
 //!
 //! When a scenario declares a goodput floor, the runner performs a
 //! second, fault-free **control replay** with the same seed and request
-//! schedule, and scores mean goodput under fault against it.
+//! schedule, and scores mean goodput under fault against it. Scenarios
+//! that declare alert expectations (`expect-alert` / `expect-quiet`)
+//! get the same control treatment: the faulted replay's sentry alert
+//! timeline is checked against the declarations, and the fault-free
+//! control must raise nothing at all (see
+//! `invariant::alert_conformance_report`).
 
 use super::inject::{self, Fault, FaultEvent, FaultTargets};
 use super::invariant::{
@@ -53,7 +58,7 @@ use crate::sim::fault::FaultBoard;
 use crate::sim::params::BETA;
 use crate::sim::testbed::{Testbed, TestbedId};
 use crate::sim::traffic::DAY_S;
-use crate::telemetry::{DecisionTrace, TraceBuilder, TraceEvent, TraceSink};
+use crate::telemetry::{Alert, DecisionTrace, Settlement, TraceBuilder, TraceEvent, TraceSink};
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -102,8 +107,15 @@ pub struct ScenarioOutcome {
     /// Mean response goodput of the (faulted) replay.
     pub faulted_mean_mbps: f64,
     /// Mean response goodput of the fault-free control replay (only
-    /// when the scenario declares a goodput floor).
+    /// when a control ran: the scenario declares a goodput floor or an
+    /// alert expectation).
     pub control_mean_mbps: Option<f64>,
+    /// The faulted replay's sentry alert timeline, raise/clear edges in
+    /// scenario seconds (the history epoch is subtracted).
+    pub alerts: Vec<Alert>,
+    /// The fault-free control replay's alert timeline (only when a
+    /// control ran). Conformance requires it to be empty.
+    pub control_alerts: Option<Vec<Alert>>,
     /// The faulted replay's coordinator metrics — fleet health plane
     /// included (registry, accuracy ledger, flight recorder) — kept
     /// alive past shutdown so `dtopt obs` and `--metrics-out` can
@@ -138,10 +150,18 @@ pub fn run(scenario: &Scenario, options: &RunOptions) -> Result<ScenarioOutcome>
     let seed = options.seed_override.unwrap_or(scenario.seed);
     let (timeline, faulted_mean, traces, metrics) =
         replay(scenario, seed, options.quick, true)?;
-    let control_mean = if scenario.goodput_floor.is_some() && !scenario.faults.is_empty() {
-        Some(replay(scenario, seed, options.quick, false)?.1)
+    let t_base = (scenario.history_days + 1) as f64 * DAY_S;
+    let alerts = normalized_alerts(&metrics, t_base);
+    let wants_control = (scenario.goodput_floor.is_some()
+        || !scenario.expect_alerts.is_empty()
+        || scenario.expect_quiet)
+        && !scenario.faults.is_empty();
+    let (control_mean, control_alerts) = if wants_control {
+        let control = replay(scenario, seed, options.quick, false)?;
+        let control_alerts = normalized_alerts(&control.3, t_base);
+        (Some(control.1), Some(control_alerts))
     } else {
-        None
+        (None, None)
     };
     let spec = CheckSpec {
         starvation_is_permanent: scenario.budget.is_some_and(|b| b.earn_fraction == 0.0)
@@ -156,6 +176,14 @@ pub fn run(scenario: &Scenario, options: &RunOptions) -> Result<ScenarioOutcome>
     }
     reports.push(invariant::accuracy_floor_report(&timeline, ACCURACY_FLOOR));
     reports.push(invariant::trace_completeness_report(&timeline, &traces));
+    if !scenario.expect_alerts.is_empty() || scenario.expect_quiet || control_alerts.is_some() {
+        reports.push(invariant::alert_conformance_report(
+            &scenario.expect_alerts,
+            scenario.expect_quiet,
+            &alerts,
+            control_alerts.as_deref(),
+        ));
+    }
     Ok(ScenarioOutcome {
         name: scenario.name.clone(),
         seed,
@@ -165,8 +193,24 @@ pub fn run(scenario: &Scenario, options: &RunOptions) -> Result<ScenarioOutcome>
         traces,
         faulted_mean_mbps: faulted_mean,
         control_mean_mbps: control_mean,
+        alerts,
+        control_alerts,
         metrics,
     })
+}
+
+/// The sentry's alert timeline with every raise/clear edge shifted from
+/// absolute virtual time (history epoch + scenario seconds) back to
+/// scenario seconds, so declarations and renderings read in script time.
+fn normalized_alerts(metrics: &Metrics, t_base: f64) -> Vec<Alert> {
+    let mut alerts = metrics.alerts();
+    for alert in &mut alerts {
+        alert.raised_t_s -= t_base;
+        if let Some(cleared) = &mut alert.cleared_t_s {
+            *cleared -= t_base;
+        }
+    }
+    alerts
 }
 
 // ---------------------------------------------------------------------------
@@ -872,6 +916,20 @@ fn run_admitted(
         achieved_mbps: report.achieved_mbps(),
         optimal_mbps,
     });
+    // Sentry tick, mirrored from the worker path: one settlement per
+    // response at its virtual submission time, cut after the lease
+    // release so surviving occupancy is a genuine leak.
+    ctx.coordinator.metrics.tick_sentry(
+        t_submit,
+        &Settlement {
+            shard: key.name(),
+            network: key.network.name().to_string(),
+            achieved_mbps: report.achieved_mbps(),
+            optimal_mbps,
+            generation,
+            contended: exposure.as_ref().map(|e| e.contended_s > 0.0).unwrap_or(false),
+        },
+    );
     // Mirror the worker path's settlement spans, then bank the trace.
     if let Some(exposure) = &exposure {
         env.note(TraceEvent::LeaseRelease {

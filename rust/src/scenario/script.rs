@@ -14,7 +14,16 @@
 //! fault 150 degrade-link xsede 0.45
 //! fault 390 restore-link xsede
 //! floor 0.30
+//! expect-alert accuracy-below-floor after 150
 //! ```
+//!
+//! `expect-alert DETECTOR [after T]` declares that the replay's sentry
+//! must raise `DETECTOR` (one of [`crate::telemetry::DETECTORS`]), no
+//! earlier than `T` virtual seconds — normally the fault time, so an
+//! alert firing *before* its fault is a conformance failure, not a
+//! detection. `expect-quiet` declares the opposite: the replay must
+//! raise nothing at all. The `alert-conformance` invariant judges both
+//! (see `invariant::alert_conformance_report`).
 //!
 //! The bundled library (`flash-crowd`, `brownout`, `stale-kb`,
 //! `probe-famine`, `shard-churn`) is compiled in from
@@ -54,6 +63,17 @@ pub struct Burst {
     pub coalesce: bool,
 }
 
+/// One declared sentry expectation: the replay must raise `detector`,
+/// no earlier than `after_s` (when given).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlertExpectation {
+    /// A detector name from [`crate::telemetry::DETECTORS`].
+    pub detector: String,
+    /// Earliest legal raise time (scenario-relative virtual seconds) —
+    /// normally the fault's scripted time.
+    pub after_s: Option<f64>,
+}
+
 /// A parsed scenario.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Scenario {
@@ -72,6 +92,12 @@ pub struct Scenario {
     /// Mean goodput under fault must stay at or above this fraction of
     /// a fault-free control replay's mean goodput.
     pub goodput_floor: Option<f64>,
+    /// Sentry detectors this replay must raise (exactly these, each no
+    /// earlier than its declared time).
+    pub expect_alerts: Vec<AlertExpectation>,
+    /// The replay must raise no alert at all (mutually exclusive with
+    /// `expect_alerts`).
+    pub expect_quiet: bool,
 }
 
 /// The bundled scenario library: (name, fixture text).
@@ -162,6 +188,8 @@ impl Scenario {
             bursts: Vec::new(),
             faults: Vec::new(),
             goodput_floor: None,
+            expect_alerts: Vec::new(),
+            expect_quiet: false,
         };
         for (line_no, raw) in text.lines().enumerate() {
             let line = raw.split('#').next().unwrap_or("").trim();
@@ -312,6 +340,44 @@ impl Scenario {
                     };
                     scenario.faults.push(FaultEvent { at_s, fault });
                 }
+                "expect-alert" => {
+                    let detector = tokens.get(1).with_context(context)?.to_string();
+                    anyhow::ensure!(
+                        crate::telemetry::DETECTORS.contains(&detector.as_str()),
+                        "{}: unknown detector '{detector}' (expected one of {:?})",
+                        context(),
+                        crate::telemetry::DETECTORS
+                    );
+                    let after_s = match tokens.get(2) {
+                        Some(&"after") => {
+                            anyhow::ensure!(
+                                tokens.len() == 4,
+                                "{}: expect-alert DETECTOR after T",
+                                context()
+                            );
+                            Some(parse_f64(tokens[3], "expect-alert after")?)
+                        }
+                        Some(other) => bail!(
+                            "{}: unexpected token '{other}' (expected `after T`)",
+                            context()
+                        ),
+                        None => None,
+                    };
+                    anyhow::ensure!(
+                        !scenario.expect_alerts.iter().any(|e| e.detector == detector),
+                        "{}: detector '{detector}' already expected",
+                        context()
+                    );
+                    scenario.expect_alerts.push(AlertExpectation { detector, after_s });
+                }
+                "expect-quiet" => {
+                    anyhow::ensure!(
+                        tokens.len() == 1,
+                        "{}: expect-quiet takes no arguments",
+                        context()
+                    );
+                    scenario.expect_quiet = true;
+                }
                 other => bail!("{}: unknown directive '{other}'", context()),
             }
         }
@@ -319,6 +385,11 @@ impl Scenario {
         anyhow::ensure!(
             !scenario.arrivals.is_empty() || !scenario.bursts.is_empty(),
             "scenario '{}' schedules no traffic at all",
+            scenario.name
+        );
+        anyhow::ensure!(
+            !(scenario.expect_quiet && !scenario.expect_alerts.is_empty()),
+            "scenario '{}' declares both expect-quiet and expect-alert",
             scenario.name
         );
         Ok(scenario)
@@ -418,6 +489,73 @@ floor 0.4
         );
         assert_eq!(s.goodput_floor, Some(0.4));
         assert_eq!(s.networks(), vec![TestbedId::Xsede]);
+    }
+
+    #[test]
+    fn parses_alert_expectations() {
+        let s = Scenario::parse(
+            "scenario a\n\
+             arrive xsede/large count 1\n\
+             expect-alert accuracy-below-floor after 150\n\
+             expect-alert stale-knowledge\n",
+        )
+        .unwrap();
+        assert_eq!(s.expect_alerts.len(), 2);
+        assert_eq!(s.expect_alerts[0].detector, "accuracy-below-floor");
+        assert_eq!(s.expect_alerts[0].after_s, Some(150.0));
+        assert_eq!(s.expect_alerts[1].detector, "stale-knowledge");
+        assert_eq!(s.expect_alerts[1].after_s, None);
+        assert!(!s.expect_quiet);
+
+        let quiet = Scenario::parse(
+            "scenario q\narrive xsede/large count 1\nexpect-quiet\n",
+        )
+        .unwrap();
+        assert!(quiet.expect_quiet);
+        assert!(quiet.expect_alerts.is_empty());
+
+        // Detector names are validated against the sentry's fixed set.
+        assert!(
+            Scenario::parse(
+                "scenario x\narrive xsede/large count 1\nexpect-alert no-such-detector\n"
+            )
+            .is_err(),
+            "unknown detector must be rejected"
+        );
+        // `after` needs its time; stray tokens are rejected.
+        assert!(
+            Scenario::parse(
+                "scenario x\narrive xsede/large count 1\nexpect-alert stale-knowledge after\n"
+            )
+            .is_err()
+        );
+        assert!(
+            Scenario::parse(
+                "scenario x\narrive xsede/large count 1\nexpect-alert stale-knowledge at 5\n"
+            )
+            .is_err()
+        );
+        // One expectation per detector.
+        assert!(
+            Scenario::parse(
+                "scenario x\narrive xsede/large count 1\n\
+                 expect-alert stale-knowledge\nexpect-alert stale-knowledge after 10\n"
+            )
+            .is_err()
+        );
+        // expect-quiet and expect-alert contradict each other.
+        assert!(
+            Scenario::parse(
+                "scenario x\narrive xsede/large count 1\n\
+                 expect-quiet\nexpect-alert stale-knowledge\n"
+            )
+            .is_err()
+        );
+        assert!(
+            Scenario::parse("scenario x\narrive xsede/large count 1\nexpect-quiet now\n")
+                .is_err(),
+            "expect-quiet takes no arguments"
+        );
     }
 
     #[test]

@@ -160,6 +160,32 @@ impl LogHistogram {
         self.sum += other.sum;
     }
 
+    /// The per-bucket difference `self − earlier`: what was recorded
+    /// *since* the `earlier` cut, assuming `earlier` is a prefix of
+    /// `self`'s recording history (the cumulative-snapshot case the
+    /// windowed telemetry layer subtracts over). Counts subtract
+    /// saturating per bucket — a non-prefix `earlier` can never drive a
+    /// count negative — and each surviving bucket's sum is clamped to
+    /// ≥ 0 (zeroed when its count hits 0). The global count and sum are
+    /// recomputed from the surviving buckets, preserving the
+    /// `count == zero + Σ bucket counts` invariant `from_json` checks.
+    pub fn subtract(&self, earlier: &LogHistogram) -> LogHistogram {
+        let mut buckets = BTreeMap::new();
+        for (idx, b) in &self.buckets {
+            let prev = earlier.buckets.get(idx).copied().unwrap_or_default();
+            let count = b.count.saturating_sub(prev.count);
+            if count == 0 {
+                continue;
+            }
+            let sum = (b.sum - prev.sum).max(0.0);
+            buckets.insert(*idx, Bucket { count, sum });
+        }
+        let zero = self.zero.saturating_sub(earlier.zero);
+        let count = zero + buckets.values().map(|b| b.count).sum::<u64>();
+        let sum = buckets.values().map(|b| b.sum).sum::<f64>();
+        LogHistogram { buckets, zero, count, sum }
+    }
+
     /// JSON encoding: `{"gamma":1.01,"count":N,"sum":S,"zero":Z,
     /// "buckets":[[idx,count,sum],...]}` (buckets ascending by index).
     pub fn to_json(&self) -> Json {
@@ -442,6 +468,32 @@ mod tests {
             h.record(rng.range_f64(1.0, 1e6));
         }
         assert_eq!(h.bucket_count(), before, "steady-state bucket count moved");
+    }
+
+    #[test]
+    fn subtract_recovers_the_suffix_of_a_prefix_snapshot() {
+        // earlier is a prefix of later's recording history: the
+        // difference is exactly the histogram of the suffix.
+        let prefix = [0.0, 3.5, 42.0];
+        let suffix = [3.5, 7.0, 1e6];
+        let earlier = hist_of(&prefix);
+        let mut later = earlier.clone();
+        for &x in &suffix {
+            later.record(x);
+        }
+        let delta = later.subtract(&earlier);
+        let expect = hist_of(&suffix);
+        assert_eq!(delta.count(), expect.count());
+        assert!((delta.mean() - expect.mean()).abs() < 1e-9);
+        for p in [0.0, 0.5, 1.0] {
+            assert!((delta.quantile(p) - expect.quantile(p)).abs() < 1e-9, "p={p}");
+        }
+        // The result survives the JSON roundtrip's consistency check.
+        let text = delta.to_json().to_string_compact();
+        assert!(LogHistogram::from_json(&Json::parse(&text).unwrap()).is_ok());
+        // Subtracting self is empty; subtracting empty is identity.
+        assert!(later.subtract(&later).is_empty());
+        assert_eq!(later.subtract(&LogHistogram::new()), later);
     }
 
     #[test]

@@ -30,21 +30,36 @@
 //! * [`export`] — deterministic Prometheus-text and JSON exporters
 //!   over a snapshot (`dtopt obs`, `--metrics-out`, CI's
 //!   obs-conformance byte-diff).
+//! * [`window`] — the [`WindowRing`]: a fixed-capacity ring of
+//!   per-window counter deltas / histogram merges / gauge levels cut
+//!   from the cumulative snapshots, keyed by virtual time — rolling
+//!   rates and short/long horizons in bounded memory.
+//! * [`sentry`] — the [`Sentry`] detector engine over those windows: a
+//!   fixed, ordered anomaly detector set evaluated each settlement,
+//!   emitting typed [`Alert`] raise/clear edges deterministic enough to
+//!   be a scenario conformance surface (`expect-alert`,
+//!   `alert-conformance`).
 //!
-//! See DESIGN.md § "Decision-provenance telemetry" and § "Fleet health
-//! plane".
+//! See DESIGN.md § "Decision-provenance telemetry", § "Fleet health
+//! plane", and § "Sentry plane".
 
 pub mod export;
 pub mod health;
 pub mod hist;
 pub mod recorder;
 pub mod registry;
+pub mod sentry;
 pub mod trace;
+pub mod window;
 
 pub use health::{AccuracyLedger, AccuracySummary};
 pub use hist::LogHistogram;
 pub use recorder::{FlightRecord, FlightRecorder};
 pub use registry::{Counter, Gauge, Hist, Registry, Samples, Snapshot, Value};
+pub use sentry::{
+    alerts_to_json, render_alerts, Alert, Sentry, SentryConfig, Settlement, DETECTORS,
+};
 pub use trace::{
     traces_to_json, DecisionTrace, Provenance, TraceBuilder, TraceEvent, TraceSink,
 };
+pub use window::{WindowFrame, WindowRing};

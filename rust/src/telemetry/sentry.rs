@@ -1,0 +1,575 @@
+//! The sentry: deterministic anomaly detectors over the windowed
+//! telemetry, with typed raise/clear alert edges.
+//!
+//! PRs 6–7 built the *passive* observability half — traces, registry,
+//! exporters, accuracy ledger. The sentry is the active half: every
+//! settlement it is ticked with a virtual time, a [`Settlement`]
+//! summary, and the same single-cut cumulative [`Snapshot`] the
+//! exporters consume; it folds the cut into a [`WindowRing`] and
+//! evaluates a **fixed, ordered** detector set ([`DETECTORS`]) against
+//! the windows:
+//!
+//! 1. **accuracy-below-floor** — the accuracy ledger's p50 falls below
+//!    the SLO in *both* the short (last `accuracy_short_windows`
+//!    windows) and long (all retained windows) horizons, after at
+//!    least `accuracy_min_count` scores exist. Requiring both horizons
+//!    is the burn-rate guard: a couple of contended transfers dent the
+//!    short window without tripping the long one, while a real
+//!    brownout drags both.
+//! 2. **probe-budget-famine** — one or more budget-forced admissions
+//!    in the current window: the shard is serving estimates because it
+//!    *cannot afford* to sample, not because it is confident.
+//! 3. **occupancy-leak** — the settlement's network still carries load
+//!    (registered transfers, carried or ambient Mbps) at settlement,
+//!    when the sequential replay's lease discipline says it must be
+//!    drained.
+//! 4. **stale-knowledge** — one or more stale-generation estimate
+//!    demotions in the current window: requests keep consulting
+//!    knowledge recorded under a KB generation the refresher has
+//!    already superseded.
+//! 5. **allowance-thrash** — the settled transfer spent time clamped
+//!    below its solo stream allowance by fair-share contention.
+//!
+//! Detectors are edge-triggered: an [`Alert`] is raised on the first
+//! firing tick and carries its clear time once a tick evaluates calm.
+//! Every input is on the deterministic allowlist — virtual time,
+//! counters, per-window histogram deltas, gauges of the sequential
+//! replay, the settlement flags — never a wall clock, so same-seed
+//! replays produce byte-identical alert timelines. That is what lets
+//! the scenario engine treat alerts as a conformance surface
+//! (`expect-alert` / `expect-quiet`, the `alert-conformance`
+//! invariant) with a *tested* false-positive policy: a fault-free
+//! control replay must raise nothing at all.
+
+use super::hist::LogHistogram;
+use super::registry::{Samples, Snapshot, Value};
+use super::window::WindowRing;
+use crate::util::json::Json;
+
+/// The fixed detector set, in evaluation order.
+pub const DETECTORS: [&str; 5] = [
+    "accuracy-below-floor",
+    "probe-budget-famine",
+    "occupancy-leak",
+    "stale-knowledge",
+    "allowance-thrash",
+];
+
+/// Sentry tuning knobs. Every default is sized for the scenario
+/// engine's virtual-minutes timescale.
+#[derive(Debug, Clone, Copy)]
+pub struct SentryConfig {
+    /// Window width in virtual seconds.
+    pub window_s: f64,
+    /// Windows retained in the ring (the "long" horizon).
+    pub retain: usize,
+    /// Accuracy SLO: the ledger p50 the fleet must hold.
+    pub accuracy_slo: f64,
+    /// The "short" burn-rate horizon, in windows.
+    pub accuracy_short_windows: usize,
+    /// Minimum scores retained before the accuracy detector speaks at
+    /// all (a first led request's ratio is legitimate noise).
+    pub accuracy_min_count: u64,
+}
+
+impl Default for SentryConfig {
+    fn default() -> Self {
+        SentryConfig {
+            window_s: 60.0,
+            retain: 32,
+            accuracy_slo: 0.75,
+            accuracy_short_windows: 3,
+            accuracy_min_count: 3,
+        }
+    }
+}
+
+/// What one settlement tells the sentry beyond the snapshot: the
+/// serving shard/network, the score, the pinned generation, and
+/// whether the transfer was fair-share clamped.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Settlement {
+    pub shard: String,
+    pub network: String,
+    pub achieved_mbps: f64,
+    pub optimal_mbps: f64,
+    pub generation: u64,
+    /// The transfer spent time clamped below its solo allowance
+    /// (`ContentionExposure::contended_s > 0`).
+    pub contended: bool,
+}
+
+/// One raised alert, with its clear edge once observed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Alert {
+    pub detector: &'static str,
+    /// The metric family (or family prefix) whose windows fired.
+    pub family: String,
+    /// Virtual time of the raising tick.
+    pub raised_t_s: f64,
+    /// Virtual time of the first calm tick (`None` = still active).
+    pub cleared_t_s: Option<f64>,
+    /// The triggering window value...
+    pub value: f64,
+    /// ...and the threshold it crossed.
+    pub threshold: f64,
+    pub detail: String,
+}
+
+impl Alert {
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("detector", Json::Str(self.detector.to_string()))
+            .set("family", Json::Str(self.family.clone()))
+            .set("raised_t_s", Json::Num(self.raised_t_s))
+            .set("cleared_t_s", self.cleared_t_s.map_or(Json::Null, Json::Num))
+            .set("value", Json::Num(self.value))
+            .set("threshold", Json::Num(self.threshold))
+            .set("detail", Json::Str(self.detail.clone()));
+        obj
+    }
+}
+
+/// The alert timeline as a JSON array (raise order).
+pub fn alerts_to_json(alerts: &[Alert]) -> Json {
+    Json::Arr(alerts.iter().map(Alert::to_json).collect())
+}
+
+/// Human-readable alert timeline (the `--alerts` rendering).
+pub fn render_alerts(alerts: &[Alert]) -> String {
+    if alerts.is_empty() {
+        return "alerts: none raised\n".to_string();
+    }
+    let active = alerts.iter().filter(|a| a.cleared_t_s.is_none()).count();
+    let mut out = format!("alerts: {} raised, {} active\n", alerts.len(), active);
+    for a in alerts {
+        let edge = match a.cleared_t_s {
+            Some(t) => format!("cleared {t:.0}s"),
+            None => "active".to_string(),
+        };
+        out.push_str(&format!(
+            "  {} on {} raised {:.0}s ({edge}): {} [value {:.2}, threshold {:.2}]\n",
+            a.detector, a.family, a.raised_t_s, a.detail, a.value, a.threshold
+        ));
+    }
+    out
+}
+
+/// A detector's firing evidence for one tick.
+struct Firing {
+    family: String,
+    value: f64,
+    threshold: f64,
+    detail: String,
+}
+
+/// The detector engine (see the module docs).
+#[derive(Debug)]
+pub struct Sentry {
+    config: SentryConfig,
+    ring: WindowRing,
+    ticks: u64,
+    /// Per-detector index into `alerts` while active.
+    active: [Option<usize>; 5],
+    /// Per-detector raise totals (exported).
+    raised: [u64; 5],
+    alerts: Vec<Alert>,
+}
+
+impl Default for Sentry {
+    fn default() -> Self {
+        Sentry::new(SentryConfig::default())
+    }
+}
+
+impl Sentry {
+    pub fn new(config: SentryConfig) -> Sentry {
+        Sentry {
+            config,
+            ring: WindowRing::new(config.window_s, config.retain),
+            ticks: 0,
+            active: [None; 5],
+            raised: [0; 5],
+            alerts: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &SentryConfig {
+        &self.config
+    }
+
+    /// Settlements evaluated so far.
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Every alert raised so far, in raise order.
+    pub fn alerts(&self) -> &[Alert] {
+        &self.alerts
+    }
+
+    /// Alerts currently raised without a clear edge.
+    pub fn active_count(&self) -> usize {
+        self.active.iter().flatten().count()
+    }
+
+    /// Evaluate every detector against the settlement at virtual time
+    /// `t_s`, folding the cumulative `snap` into the window ring first.
+    pub fn tick(&mut self, t_s: f64, settlement: &Settlement, snap: &Snapshot) {
+        self.ring.observe(t_s, snap);
+        self.ticks += 1;
+        let firings = [
+            self.accuracy_below_floor(),
+            self.probe_budget_famine(),
+            self.occupancy_leak(settlement, snap),
+            self.stale_knowledge(settlement),
+            self.allowance_thrash(settlement),
+        ];
+        for (idx, firing) in firings.into_iter().enumerate() {
+            self.edge(idx, t_s, firing);
+        }
+    }
+
+    /// Edge-trigger detector `idx`: raise on calm→firing, clear on
+    /// firing→calm, hold otherwise.
+    fn edge(&mut self, idx: usize, t_s: f64, firing: Option<Firing>) {
+        match (firing, self.active[idx]) {
+            (Some(f), None) => {
+                self.active[idx] = Some(self.alerts.len());
+                self.raised[idx] += 1;
+                self.alerts.push(Alert {
+                    detector: DETECTORS[idx],
+                    family: f.family,
+                    raised_t_s: t_s,
+                    cleared_t_s: None,
+                    value: f.value,
+                    threshold: f.threshold,
+                    detail: f.detail,
+                });
+            }
+            (None, Some(alert_idx)) => {
+                self.alerts[alert_idx].cleared_t_s = Some(t_s);
+                self.active[idx] = None;
+            }
+            _ => {}
+        }
+    }
+
+    fn accuracy_hist(&self, windows: usize) -> LogHistogram {
+        self.ring.merged_hist("health.accuracy.overall", windows)
+    }
+
+    fn accuracy_below_floor(&self) -> Option<Firing> {
+        let long = self.accuracy_hist(usize::MAX);
+        if long.count() < self.config.accuracy_min_count {
+            return None;
+        }
+        let short = self.accuracy_hist(self.config.accuracy_short_windows);
+        if short.is_empty() {
+            return None;
+        }
+        let slo = self.config.accuracy_slo;
+        let (long_p50, short_p50) = (long.quantile(0.5), short.quantile(0.5));
+        if long_p50 < slo && short_p50 < slo {
+            // long_p50 < slo makes the denominator strictly positive.
+            let burn = (slo - short_p50) / (slo - long_p50);
+            Some(Firing {
+                family: "health.accuracy.overall".to_string(),
+                value: short_p50,
+                threshold: slo,
+                detail: format!(
+                    "accuracy p50 {short_p50:.2} over the last {} window(s) and {long_p50:.2} \
+                     over {} retained, both below SLO {slo:.2} (burn ratio {burn:.2})",
+                    self.config.accuracy_short_windows,
+                    self.ring.len(),
+                ),
+            })
+        } else {
+            None
+        }
+    }
+
+    fn probe_budget_famine(&self) -> Option<Firing> {
+        let forced = self.ring.counter_delta("probe.budget_forced", 1);
+        if forced >= 1 {
+            Some(Firing {
+                family: "probe.budget_forced".to_string(),
+                value: forced as f64,
+                threshold: 1.0,
+                detail: format!(
+                    "{forced} budget-forced admission(s) in the current window: estimates \
+                     served for want of probe budget, not for confidence"
+                ),
+            })
+        } else {
+            None
+        }
+    }
+
+    fn occupancy_leak(&self, settlement: &Settlement, snap: &Snapshot) -> Option<Firing> {
+        let gauge = |suffix: &str| -> f64 {
+            match snap.get(&format!("netplane.{}.{suffix}", settlement.network)) {
+                Some(Value::Gauge(v)) => *v,
+                _ => 0.0,
+            }
+        };
+        let transfers = gauge("transfers");
+        let carried = gauge("carried_mbps");
+        let ambient = gauge("ambient_mbps");
+        if transfers > 0.5 || carried > 1e-6 || ambient > 1e-6 {
+            Some(Firing {
+                family: format!("netplane.{}", settlement.network),
+                value: carried.max(ambient),
+                threshold: 0.0,
+                detail: format!(
+                    "{transfers:.0} transfer(s), {carried:.0} Mbps carried ({ambient:.0} Mbps \
+                     ambient) still on {} at settlement",
+                    settlement.network
+                ),
+            })
+        } else {
+            None
+        }
+    }
+
+    fn stale_knowledge(&self, settlement: &Settlement) -> Option<Firing> {
+        let demoted = self.ring.counter_delta("probe.stale_demotions", 1);
+        if demoted >= 1 {
+            Some(Firing {
+                family: "probe.stale_demotions".to_string(),
+                value: demoted as f64,
+                threshold: 1.0,
+                detail: format!(
+                    "{demoted} stale-generation estimate demotion(s) in the current window \
+                     (now serving generation {})",
+                    settlement.generation
+                ),
+            })
+        } else {
+            None
+        }
+    }
+
+    fn allowance_thrash(&self, settlement: &Settlement) -> Option<Firing> {
+        if settlement.contended {
+            Some(Firing {
+                family: format!("netplane.{}", settlement.network),
+                value: 1.0,
+                threshold: 0.5,
+                detail: format!(
+                    "settlement on {} ({}) spent time clamped below its solo stream \
+                     allowance by fair-share contention",
+                    settlement.shard, settlement.network
+                ),
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Publish the sentry families into an export cut. A sentry that
+    /// was never ticked publishes nothing: serve paths without
+    /// settlements (and hand-built metrics in tests) keep their
+    /// exports sentry-free.
+    pub fn export_into(&self, s: &mut Samples) {
+        if self.ticks == 0 {
+            return;
+        }
+        s.counter("sentry.ticks", self.ticks);
+        s.counter("sentry.alerts.raised", self.alerts.len() as u64);
+        s.gauge("sentry.alerts.active", self.active_count() as f64);
+        for (idx, name) in DETECTORS.iter().enumerate() {
+            s.counter(&format!("sentry.{name}.raised"), self.raised[idx]);
+            s.gauge(
+                &format!("sentry.{name}.active"),
+                if self.active[idx].is_some() { 1.0 } else { 0.0 },
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn settlement() -> Settlement {
+        Settlement {
+            shard: "xsede/large".to_string(),
+            network: "xsede".to_string(),
+            achieved_mbps: 900.0,
+            optimal_mbps: 1000.0,
+            generation: 0,
+            contended: false,
+        }
+    }
+
+    fn accuracy_snap(hist: &LogHistogram) -> Snapshot {
+        let mut s = Samples::default();
+        s.hist("health.accuracy.overall", hist);
+        Snapshot::from(s)
+    }
+
+    #[test]
+    fn accuracy_detector_needs_min_count_then_raises_and_clears() {
+        let mut sentry = Sentry::default();
+        let mut ledger = LogHistogram::new();
+        // Two bad scores: below min_count, no alert even at p50 0.4.
+        for (t, score) in [(10.0, 0.4), (20.0, 0.4)] {
+            ledger.record(score);
+            sentry.tick(t, &settlement(), &accuracy_snap(&ledger));
+        }
+        assert!(sentry.alerts().is_empty(), "min-count guard must hold early noise");
+        // Third bad score: both horizons breach.
+        ledger.record(0.4);
+        sentry.tick(30.0, &settlement(), &accuracy_snap(&ledger));
+        assert_eq!(sentry.alerts().len(), 1);
+        let alert = &sentry.alerts()[0];
+        assert_eq!(alert.detector, "accuracy-below-floor");
+        assert_eq!(alert.raised_t_s, 30.0);
+        assert!(alert.cleared_t_s.is_none());
+        assert!(alert.detail.contains("burn ratio"), "{}", alert.detail);
+        assert_eq!(sentry.active_count(), 1);
+        // Healthy scores far enough ahead that the short horizon sees
+        // only them: the alert clears (the long horizon still remembers
+        // the dip — that is the short window's job to forgive).
+        for (t, score) in [(400.0, 1.0), (460.0, 1.0), (520.0, 1.0), (580.0, 1.0)] {
+            ledger.record(score);
+            sentry.tick(t, &settlement(), &accuracy_snap(&ledger));
+        }
+        assert_eq!(sentry.alerts().len(), 1, "edge-triggered: no re-raise while calm");
+        assert_eq!(sentry.alerts()[0].cleared_t_s, Some(400.0));
+        assert_eq!(sentry.active_count(), 0);
+    }
+
+    #[test]
+    fn short_horizon_dip_alone_does_not_raise() {
+        // A healthy long history with a couple of contended transfers
+        // in the newest window: the conjunctive horizons hold.
+        let mut sentry = Sentry::default();
+        let mut ledger = LogHistogram::new();
+        for (idx, score) in [0.95, 0.9, 0.95, 0.9, 0.95, 0.9].iter().enumerate() {
+            ledger.record(*score);
+            sentry.tick(10.0 + 60.0 * idx as f64, &settlement(), &accuracy_snap(&ledger));
+        }
+        for score in [0.4, 0.4] {
+            ledger.record(score);
+            sentry.tick(400.0, &settlement(), &accuracy_snap(&ledger));
+        }
+        assert!(
+            sentry.alerts().is_empty(),
+            "a short-window dip with a healthy long horizon must not raise: {:?}",
+            sentry.alerts()
+        );
+    }
+
+    fn counter_snap(name: &str, total: u64) -> Snapshot {
+        let mut s = Samples::default();
+        s.counter(name, total);
+        Snapshot::from(s)
+    }
+
+    #[test]
+    fn famine_raises_on_forced_admissions_and_clears_on_a_calm_window() {
+        let mut sentry = Sentry::default();
+        sentry.tick(10.0, &settlement(), &counter_snap("probe.budget_forced", 0));
+        assert!(sentry.alerts().is_empty());
+        sentry.tick(70.0, &settlement(), &counter_snap("probe.budget_forced", 2));
+        let alert = &sentry.alerts()[0];
+        assert_eq!(alert.detector, "probe-budget-famine");
+        assert_eq!(alert.raised_t_s, 70.0);
+        assert_eq!(alert.value, 2.0);
+        // Next window, no new forced admissions: clears.
+        sentry.tick(140.0, &settlement(), &counter_snap("probe.budget_forced", 2));
+        assert_eq!(sentry.alerts()[0].cleared_t_s, Some(140.0));
+    }
+
+    #[test]
+    fn stale_knowledge_tracks_demotion_deltas() {
+        let mut sentry = Sentry::default();
+        sentry.tick(10.0, &settlement(), &counter_snap("probe.stale_demotions", 1));
+        assert_eq!(sentry.alerts().len(), 1);
+        assert_eq!(sentry.alerts()[0].detector, "stale-knowledge");
+        assert!(sentry.alerts()[0].detail.contains("generation 0"));
+        sentry.tick(100.0, &settlement(), &counter_snap("probe.stale_demotions", 1));
+        assert_eq!(sentry.alerts()[0].cleared_t_s, Some(100.0));
+        // A fresh demotion re-raises a *new* alert.
+        sentry.tick(130.0, &settlement(), &counter_snap("probe.stale_demotions", 2));
+        assert_eq!(sentry.alerts().len(), 2);
+    }
+
+    fn gauge_snap(name: &str, v: f64) -> Snapshot {
+        let mut s = Samples::default();
+        s.gauge(name, v);
+        Snapshot::from(s)
+    }
+
+    #[test]
+    fn occupancy_leak_watches_the_settlements_network() {
+        let mut sentry = Sentry::default();
+        // Ambient load on another network is not this settlement's leak.
+        sentry.tick(10.0, &settlement(), &gauge_snap("netplane.didclab.ambient_mbps", 500.0));
+        assert!(sentry.alerts().is_empty());
+        sentry.tick(20.0, &settlement(), &gauge_snap("netplane.xsede.ambient_mbps", 4000.0));
+        let alert = &sentry.alerts()[0];
+        assert_eq!(alert.detector, "occupancy-leak");
+        assert_eq!(alert.family, "netplane.xsede");
+        assert_eq!(alert.value, 4000.0);
+        sentry.tick(90.0, &settlement(), &gauge_snap("netplane.xsede.ambient_mbps", 0.0));
+        assert_eq!(sentry.alerts()[0].cleared_t_s, Some(90.0));
+    }
+
+    #[test]
+    fn allowance_thrash_follows_the_contended_flag() {
+        let mut sentry = Sentry::default();
+        let contended = Settlement { contended: true, ..settlement() };
+        sentry.tick(10.0, &contended, &Snapshot::default());
+        sentry.tick(20.0, &contended, &Snapshot::default());
+        assert_eq!(sentry.alerts().len(), 1, "held, not re-raised");
+        assert_eq!(sentry.alerts()[0].detector, "allowance-thrash");
+        sentry.tick(30.0, &settlement(), &Snapshot::default());
+        assert_eq!(sentry.alerts()[0].cleared_t_s, Some(30.0));
+    }
+
+    #[test]
+    fn identical_tick_sequences_produce_identical_alerts_and_exports() {
+        let run = || {
+            let mut sentry = Sentry::default();
+            sentry.tick(10.0, &settlement(), &counter_snap("probe.budget_forced", 1));
+            let contended = Settlement { contended: true, ..settlement() };
+            sentry.tick(70.0, &contended, &counter_snap("probe.budget_forced", 1));
+            sentry.tick(140.0, &settlement(), &counter_snap("probe.budget_forced", 1));
+            let mut samples = Samples::default();
+            sentry.export_into(&mut samples);
+            let rendered = render_alerts(sentry.alerts());
+            let json = alerts_to_json(sentry.alerts()).to_string_compact();
+            (sentry.alerts().to_vec(), Snapshot::from(samples), rendered, json)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1.values, b.1.values);
+        assert_eq!(a.2, b.2);
+        assert_eq!(a.3, b.3);
+        assert!(a.2.contains("probe-budget-famine"), "{}", a.2);
+        assert!(a.3.contains("\"cleared_t_s\":null") || a.3.contains("\"cleared_t_s\":"), "{}", a.3);
+    }
+
+    #[test]
+    fn untouched_sentry_exports_nothing() {
+        let sentry = Sentry::default();
+        let mut samples = Samples::default();
+        sentry.export_into(&mut samples);
+        assert!(Snapshot::from(samples).is_empty(), "never-ticked sentry must stay invisible");
+        // One tick makes every family appear, raised or not.
+        let mut sentry = Sentry::default();
+        sentry.tick(10.0, &settlement(), &Snapshot::default());
+        let mut samples = Samples::default();
+        sentry.export_into(&mut samples);
+        let snap = Snapshot::from(samples);
+        assert_eq!(snap.get("sentry.ticks"), Some(&Value::Counter(1)));
+        assert_eq!(snap.get("sentry.alerts.active"), Some(&Value::Gauge(0.0)));
+        for name in DETECTORS {
+            assert!(snap.get(&format!("sentry.{name}.raised")).is_some(), "{name}");
+            assert!(snap.get(&format!("sentry.{name}.active")).is_some(), "{name}");
+        }
+    }
+}

@@ -1,0 +1,401 @@
+//! Windowed time-series over the cumulative metrics [`Snapshot`]s the
+//! registry cuts: a fixed-capacity ring of per-window *deltas*, keyed
+//! by virtual time.
+//!
+//! The registry's instruments are cumulative — a counter only ever
+//! grows, a histogram only ever absorbs. Rate questions ("how many
+//! budget-forced admissions in the last minute?", "what is the
+//! accuracy p50 over the last three windows vs the whole retained
+//! history?") need differences between cuts. The [`WindowRing`] keeps
+//! them bounded: each observation diffs the new cumulative snapshot
+//! against the previous one (counters by saturating subtraction,
+//! histograms by [`LogHistogram::subtract`], gauges last-write) and
+//! folds the delta into the frame owning `floor(t_s / window_s)`.
+//! The ring holds at most `capacity` frames; older windows evict.
+//!
+//! Everything here is a pure function of (virtual time, snapshot)
+//! pairs — no wall clock — so two same-seed replays build
+//! byte-identical rings. This is the substrate the
+//! [sentry](`super::sentry`) evaluates its detectors over.
+
+use super::hist::LogHistogram;
+use super::registry::{Snapshot, Value};
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+/// One window's accumulated deltas.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WindowFrame {
+    /// `floor(t_s / window_s)` of every observation folded in.
+    pub id: u64,
+    /// Per-counter increments observed during this window.
+    pub counters: BTreeMap<String, u64>,
+    /// Per-histogram contents recorded during this window.
+    pub hists: BTreeMap<String, LogHistogram>,
+    /// Last-written gauge values (gauges are levels, not rates).
+    pub gauges: BTreeMap<String, f64>,
+}
+
+/// Fixed-capacity ring of [`WindowFrame`]s (see the module docs).
+#[derive(Debug, Clone, Default)]
+pub struct WindowRing {
+    window_s: f64,
+    capacity: usize,
+    prev: Option<Snapshot>,
+    frames: VecDeque<WindowFrame>,
+}
+
+impl WindowRing {
+    /// A ring of at most `capacity` windows, each `window_s` of virtual
+    /// time wide. Both are clamped to sane minima (1 s, 1 frame).
+    pub fn new(window_s: f64, capacity: usize) -> WindowRing {
+        WindowRing {
+            window_s: if window_s.is_finite() { window_s.max(1.0) } else { 1.0 },
+            capacity: capacity.max(1),
+            prev: None,
+            frames: VecDeque::new(),
+        }
+    }
+
+    pub fn window_s(&self) -> f64 {
+        self.window_s
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// The window id owning virtual time `t_s`.
+    pub fn window_id(&self, t_s: f64) -> u64 {
+        (t_s.max(0.0) / self.window_s).floor() as u64
+    }
+
+    /// Retained frames, oldest first.
+    pub fn frames(&self) -> impl Iterator<Item = &WindowFrame> {
+        self.frames.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.frames.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+
+    /// Observe a cumulative snapshot cut at virtual time `t_s`: diff it
+    /// against the previous cut and fold the delta into `t_s`'s window
+    /// frame. The first observation diffs against an empty snapshot, so
+    /// its frame carries the full cumulative values.
+    ///
+    /// Observations normally arrive in non-decreasing time order; a
+    /// late (out-of-order) cut folds into its own frame when that
+    /// window is still retained, else into the oldest retained frame —
+    /// deltas are never dropped, so window sums stay reconcilable with
+    /// the cumulative totals.
+    pub fn observe(&mut self, t_s: f64, snap: &Snapshot) {
+        let id = self.window_id(t_s);
+        let mut delta_counters: Vec<(String, u64)> = Vec::new();
+        let mut delta_hists: Vec<(String, LogHistogram)> = Vec::new();
+        let mut gauges: Vec<(String, f64)> = Vec::new();
+        let empty = Snapshot::default();
+        let prev = self.prev.as_ref().unwrap_or(&empty);
+        for (name, value) in &snap.values {
+            match value {
+                Value::Counter(c) => {
+                    let before = match prev.get(name) {
+                        Some(Value::Counter(p)) => *p,
+                        _ => 0,
+                    };
+                    let d = c.saturating_sub(before);
+                    if d > 0 {
+                        delta_counters.push((name.clone(), d));
+                    }
+                }
+                Value::Hist(h) => {
+                    let d = match prev.get(name) {
+                        Some(Value::Hist(p)) => h.subtract(p),
+                        _ => h.clone(),
+                    };
+                    if !d.is_empty() {
+                        delta_hists.push((name.clone(), d));
+                    }
+                }
+                Value::Gauge(g) => gauges.push((name.clone(), *g)),
+            }
+        }
+        self.prev = Some(snap.clone());
+
+        let frame = self.frame_for(id);
+        for (name, d) in delta_counters {
+            *frame.counters.entry(name).or_insert(0) += d;
+        }
+        for (name, d) in delta_hists {
+            frame.hists.entry(name).or_default().merge(&d);
+        }
+        for (name, g) in gauges {
+            frame.gauges.insert(name, g);
+        }
+    }
+
+    /// The frame an observation for window `id` folds into, creating
+    /// (and evicting) as needed.
+    fn frame_for(&mut self, id: u64) -> &mut WindowFrame {
+        let newest = self.frames.back().map(|f| f.id);
+        match newest {
+            None => {
+                self.frames.push_back(WindowFrame { id, ..Default::default() });
+            }
+            Some(newest_id) if id > newest_id => {
+                self.frames.push_back(WindowFrame { id, ..Default::default() });
+                while self.frames.len() > self.capacity {
+                    self.frames.pop_front();
+                }
+            }
+            Some(_) => {
+                // In-window or late observation: fold into the matching
+                // retained frame, else the oldest retained one.
+                let pos = self.frames.iter().position(|f| f.id == id).unwrap_or(0);
+                return &mut self.frames[pos];
+            }
+        }
+        self.frames.back_mut().expect("frame just pushed")
+    }
+
+    /// Sum of `name`'s counter deltas over the newest `n` retained
+    /// windows (`usize::MAX` for all retained).
+    pub fn counter_delta(&self, name: &str, n: usize) -> u64 {
+        self.frames
+            .iter()
+            .rev()
+            .take(n)
+            .filter_map(|f| f.counters.get(name))
+            .sum()
+    }
+
+    /// Merge of `name`'s per-window histogram deltas over the newest
+    /// `n` retained windows (`usize::MAX` for all retained).
+    pub fn merged_hist(&self, name: &str, n: usize) -> LogHistogram {
+        let mut merged = LogHistogram::new();
+        for frame in self.frames.iter().rev().take(n) {
+            if let Some(h) = frame.hists.get(name) {
+                merged.merge(h);
+            }
+        }
+        merged
+    }
+
+    /// The most recent value of gauge `name` across the newest `n`
+    /// retained windows.
+    pub fn gauge(&self, name: &str, n: usize) -> Option<f64> {
+        self.frames
+            .iter()
+            .rev()
+            .take(n)
+            .find_map(|f| f.gauges.get(name).copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::Samples;
+    use crate::util::proptest::{forall, gen, Config};
+    use crate::util::rng::Rng;
+
+    fn counter_snap(total: u64) -> Snapshot {
+        let mut s = Samples::default();
+        s.counter("c", total);
+        Snapshot::from(s)
+    }
+
+    #[test]
+    fn first_observation_carries_the_full_cumulative_value() {
+        let mut ring = WindowRing::new(60.0, 4);
+        ring.observe(10.0, &counter_snap(7));
+        assert_eq!(ring.len(), 1);
+        assert_eq!(ring.counter_delta("c", usize::MAX), 7);
+    }
+
+    #[test]
+    fn windows_split_deltas_by_virtual_time() {
+        let mut ring = WindowRing::new(60.0, 8);
+        ring.observe(10.0, &counter_snap(3)); // window 0: +3
+        ring.observe(50.0, &counter_snap(5)); // window 0: +2
+        ring.observe(70.0, &counter_snap(9)); // window 1: +4
+        ring.observe(200.0, &counter_snap(9)); // window 3: +0 (frame still opens)
+        let frames: Vec<_> = ring.frames().collect();
+        assert_eq!(
+            frames.iter().map(|f| f.id).collect::<Vec<_>>(),
+            vec![0, 1, 3],
+            "an empty delta still opens its window"
+        );
+        assert_eq!(frames[0].counters.get("c"), Some(&5));
+        assert_eq!(frames[1].counters.get("c"), Some(&4));
+        assert_eq!(frames[2].counters.get("c"), None);
+        assert_eq!(ring.counter_delta("c", 2), 4, "newest two windows");
+        assert_eq!(ring.counter_delta("c", usize::MAX), 9);
+    }
+
+    #[test]
+    fn gauges_are_levels_not_rates() {
+        let mut ring = WindowRing::new(60.0, 4);
+        let mut s = Samples::default();
+        s.gauge("g", 5.0);
+        ring.observe(10.0, &Snapshot::from(s));
+        let mut s = Samples::default();
+        s.gauge("g", 2.0);
+        ring.observe(20.0, &Snapshot::from(s));
+        assert_eq!(ring.gauge("g", usize::MAX), Some(2.0), "last write wins");
+        let mut s = Samples::default();
+        s.gauge("other", 1.0);
+        ring.observe(70.0, &Snapshot::from(s));
+        assert_eq!(ring.gauge("g", 1), None, "newest window never saw g");
+        assert_eq!(ring.gauge("g", 2), Some(2.0));
+    }
+
+    #[test]
+    fn late_observations_fold_into_their_own_retained_window() {
+        let mut ring = WindowRing::new(60.0, 8);
+        ring.observe(10.0, &counter_snap(1)); // window 0
+        ring.observe(70.0, &counter_snap(2)); // window 1
+        ring.observe(30.0, &counter_snap(5)); // late: window 0, +3
+        let frames: Vec<_> = ring.frames().collect();
+        assert_eq!(frames[0].counters.get("c"), Some(&4));
+        assert_eq!(frames[1].counters.get("c"), Some(&1));
+        // A late cut whose window already evicted folds into the oldest
+        // retained frame instead of vanishing.
+        let mut tiny = WindowRing::new(60.0, 1);
+        tiny.observe(10.0, &counter_snap(1));
+        tiny.observe(70.0, &counter_snap(2));
+        tiny.observe(30.0, &counter_snap(6));
+        assert_eq!(tiny.len(), 1);
+        assert_eq!(tiny.counter_delta("c", usize::MAX), 5);
+    }
+
+    // Satellite: window-delta sums equal the cumulative counter total
+    // whenever nothing evicted.
+    #[test]
+    fn window_delta_sums_equal_cumulative_totals() {
+        forall(
+            Config { cases: 120, seed: 0x51_D0 },
+            |rng| {
+                let steps = 1 + (rng.next_u64() % 40) as usize;
+                (0..steps)
+                    .map(|_| (rng.next_u64() % 400, rng.next_u64() % 50))
+                    .collect::<Vec<(u64, u64)>>()
+            },
+            |steps: &Vec<(u64, u64)>| {
+                let mut ring = WindowRing::new(10.0, usize::MAX);
+                let mut t = 0.0;
+                let mut total = 0u64;
+                for (dt, inc) in steps {
+                    t += *dt as f64 / 10.0;
+                    total += inc;
+                    ring.observe(t, &counter_snap(total));
+                }
+                let summed = ring.counter_delta("c", usize::MAX);
+                if summed != total {
+                    return Err(format!("window deltas sum to {summed}, cumulative is {total}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    // Satellite: eviction never produces a negative (underflowed)
+    // delta — every retained frame still matches the per-window
+    // increments computed independently, and their sum never exceeds
+    // the cumulative total.
+    #[test]
+    fn eviction_never_produces_negative_deltas() {
+        forall(
+            Config { cases: 120, seed: 0x51_D1 },
+            |rng| {
+                let steps = 1 + (rng.next_u64() % 60) as usize;
+                (0..steps)
+                    .map(|_| (rng.next_u64() % 300, rng.next_u64() % 50))
+                    .collect::<Vec<(u64, u64)>>()
+            },
+            |steps: &Vec<(u64, u64)>| {
+                let mut ring = WindowRing::new(10.0, 4);
+                let mut expected: BTreeMap<u64, u64> = BTreeMap::new();
+                let mut t = 0.0;
+                let mut total = 0u64;
+                for (dt, inc) in steps {
+                    t += *dt as f64 / 10.0;
+                    total += inc;
+                    ring.observe(t, &counter_snap(total));
+                    *expected.entry(ring.window_id(t)).or_insert(0) += inc;
+                }
+                if ring.len() > 4 {
+                    return Err(format!("ring retained {} frames over capacity 4", ring.len()));
+                }
+                for frame in ring.frames() {
+                    let got = frame.counters.get("c").copied().unwrap_or(0);
+                    let want = expected.get(&frame.id).copied().unwrap_or(0);
+                    // Eviction can fold a late delta into the oldest
+                    // frame, inflating it; it must never underflow or
+                    // lose counts.
+                    if got > total {
+                        return Err(format!(
+                            "window {} delta {got} exceeds cumulative total {total}",
+                            frame.id
+                        ));
+                    }
+                    if got < want && Some(frame.id) != ring.frames().next().map(|f| f.id) {
+                        return Err(format!(
+                            "window {} delta {got} lost counts (want >= {want})",
+                            frame.id
+                        ));
+                    }
+                }
+                if ring.counter_delta("c", usize::MAX) > total {
+                    return Err("retained deltas exceed the cumulative total".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    // Satellite: merging per-window histogram deltas reproduces a
+    // single wide window within LogHistogram's 1% bucket error.
+    #[test]
+    fn merged_window_quantiles_match_a_single_wide_window() {
+        forall(
+            Config { cases: 80, seed: 0x51_D2 },
+            |rng| gen::vec_f64(rng, 1, 120, 1e-2, 1e6),
+            |xs: &Vec<f64>| {
+                let mut ring = WindowRing::new(10.0, usize::MAX);
+                let mut wide = LogHistogram::new();
+                let mut cumulative = LogHistogram::new();
+                let mut inner = Rng::new(0x51_D3);
+                let mut t = 0.0;
+                for &x in xs {
+                    t += inner.range_f64(0.0, 25.0);
+                    wide.record(x);
+                    cumulative.record(x);
+                    let mut s = Samples::default();
+                    s.hist("h", &cumulative);
+                    ring.observe(t, &Snapshot::from(s));
+                }
+                let merged = ring.merged_hist("h", usize::MAX);
+                if merged.count() != wide.count() {
+                    return Err(format!(
+                        "merged windows hold {} records, wide window {}",
+                        merged.count(),
+                        wide.count()
+                    ));
+                }
+                for p in [0.0, 0.1, 0.5, 0.9, 1.0] {
+                    let (a, b) = (merged.quantile(p), wide.quantile(p));
+                    let tol = 0.01 * b.abs() + 1e-9;
+                    if (a - b).abs() > tol {
+                        return Err(format!("p={p}: merged {a} vs wide {b} (tol {tol})"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,65 @@
+//! Golden fixtures for the sentry plane's alert timelines: every
+//! bundled scenario replays in quick mode and its normalized raise/clear
+//! timeline (`alerts_to_json`, the exact bytes `dtopt scenario --alerts
+//! --json` prints) is pinned against `tests/fixtures/alerts/<name>.json`.
+//! Any drift in detector thresholds, window geometry, settlement
+//! ordering, or the JSON shape shows up as a reviewed fixture diff
+//! instead of a silent change to what alert consumers parse.
+//!
+//! Like `obs_golden` the fixtures are read at runtime, not
+//! `include_str!`: they bootstrap from a machine that can run the
+//! suite, so a missing fixture is a note to regenerate, not a compile
+//! error. Once committed they are enforced bytewise.
+//!
+//! To (re)generate after an *intentional* change:
+//! `DTOPT_UPDATE_GOLDEN=1 cargo test --test alert_golden` — then review
+//! and commit the fixture diffs.
+
+use dtopt::scenario::script::{bundled, bundled_names, Scenario};
+use dtopt::scenario::{run, RunOptions};
+use dtopt::telemetry::alerts_to_json;
+use std::path::PathBuf;
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/alerts").join(name)
+}
+
+fn check(name: &str, rendered: &str, update: bool, missing: &mut Vec<String>) {
+    let path = fixture_path(name);
+    if update {
+        std::fs::create_dir_all(path.parent().unwrap())
+            .expect("creating the alerts fixture directory");
+        std::fs::write(&path, rendered).expect("rewriting the alert golden");
+        eprintln!("alert_golden: fixture regenerated at {}", path.display());
+        return;
+    }
+    match std::fs::read_to_string(&path) {
+        Ok(golden) => assert_eq!(
+            rendered, golden,
+            "alert timeline '{name}' drifted from the golden fixture.\n\
+             If the change is intentional, regenerate with \
+             DTOPT_UPDATE_GOLDEN=1 cargo test --test alert_golden"
+        ),
+        Err(_) => missing.push(name.to_string()),
+    }
+}
+
+#[test]
+fn bundled_alert_timelines_match_golden_fixtures() {
+    let update = std::env::var("DTOPT_UPDATE_GOLDEN").is_ok();
+    let mut missing = Vec::new();
+    for name in bundled_names() {
+        let scenario = Scenario::parse(bundled(name).expect("bundled scenario exists"))
+            .unwrap_or_else(|e| panic!("parsing bundled '{name}': {e:#}"));
+        let outcome = run(&scenario, &RunOptions::default())
+            .unwrap_or_else(|e| panic!("running bundled '{name}': {e:#}"));
+        let rendered = format!("{}\n", alerts_to_json(&outcome.alerts).to_string_compact());
+        check(&format!("{name}.json"), &rendered, update, &mut missing);
+    }
+    if !missing.is_empty() {
+        eprintln!(
+            "alert_golden: no fixture yet for {missing:?}; bootstrap with \
+             DTOPT_UPDATE_GOLDEN=1 cargo test --test alert_golden"
+        );
+    }
+}

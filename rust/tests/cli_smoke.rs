@@ -130,6 +130,69 @@ fn unknown_trace_scenario_exits_nonzero_like_scenario() {
 }
 
 #[test]
+fn trace_rejects_unknown_flags_options_and_extra_positionals_nonzero() {
+    // `trace` validates strictly like `obs`: a typo exits non-zero
+    // before any replay starts, instead of silently replaying with the
+    // option ignored.
+    let flag = dtopt(&["trace", "flash-crowd", "--bogus"]);
+    assert!(!flag.status.success(), "unknown trace flag must exit non-zero");
+    let stderr = String::from_utf8_lossy(&flag.stderr);
+    assert!(stderr.contains("unknown flag"), "{stderr}");
+    assert!(stderr.contains("--bogus"), "{stderr}");
+
+    let option = dtopt(&["trace", "flash-crowd", "--bogus", "value"]);
+    assert!(!option.status.success(), "unknown trace option must exit non-zero");
+    let stderr = String::from_utf8_lossy(&option.stderr);
+    assert!(stderr.contains("unknown option"), "{stderr}");
+
+    // `--metrics-out` without a path parses as a flag: rejected.
+    let dangling = dtopt(&["trace", "flash-crowd", "--metrics-out"]);
+    assert!(!dangling.status.success(), "--metrics-out without a path must exit non-zero");
+
+    let extra = dtopt(&["trace", "flash-crowd", "stale-kb"]);
+    assert!(!extra.status.success(), "two scenario positionals must exit non-zero");
+    let stderr = String::from_utf8_lossy(&extra.stderr);
+    assert!(stderr.contains("one scenario"), "{stderr}");
+}
+
+#[test]
+fn trace_metrics_out_picks_format_by_extension() {
+    // Satellite of the sentry plane: `dtopt trace --metrics-out F`
+    // exports the replay's registry snapshot — Prometheus text for
+    // `.prom`, compact JSON otherwise — exactly like scenario/serve.
+    let dir = std::env::temp_dir().join(format!("dtopt_cli_smoke_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let prom = dir.join("metrics.prom");
+    let json = dir.join("metrics.json");
+
+    let out = dtopt(&["trace", "flash-crowd", "--request", "0", "--metrics-out",
+        prom.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let prom_text = std::fs::read_to_string(&prom).expect("prom export written");
+    assert!(prom_text.contains("sentry_ticks"), "prom names are sanitized: {prom_text}");
+    assert!(prom_text.contains("recorder_capacity"), "{prom_text}");
+
+    let out = dtopt(&["trace", "flash-crowd", "--request", "0", "--metrics-out",
+        json.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let json_text = std::fs::read_to_string(&json).expect("json export written");
+    assert!(json_text.starts_with('{'), "{json_text}");
+    assert!(json_text.contains("sentry.ticks"), "json keeps raw names: {json_text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn obs_alerts_json_is_empty_for_the_quiet_default_scenario() {
+    // flash-crowd is fault-free and declares expect-quiet: the sentry
+    // must raise nothing, so the machine-readable alert timeline is an
+    // empty array.
+    let out = dtopt(&["obs", "--alerts", "--json"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(stdout.trim(), "[]", "{stdout}");
+}
+
+#[test]
 fn missing_scenario_listing_matches_experiment_listing_behavior() {
     // Both subcommands answer a missing name the same way: non-zero
     // exit, the available set on stderr.

@@ -9,7 +9,7 @@ use dtopt::probe::ProbeMode;
 use dtopt::scenario::invariant::Event;
 use dtopt::scenario::script::{bundled, bundled_names, Scenario};
 use dtopt::scenario::{render_timeline, render_verdict, run, Fault, RunOptions, ScenarioOutcome};
-use dtopt::telemetry::traces_to_json;
+use dtopt::telemetry::{alerts_to_json, traces_to_json};
 
 fn run_bundled(name: &str) -> ScenarioOutcome {
     let scenario = Scenario::parse(bundled(name).expect("bundled scenario exists"))
@@ -356,6 +356,103 @@ fn same_seed_replays_are_byte_identical() {
             traces_to_json(&a.traces).to_string_compact(),
             traces_to_json(&b.traces).to_string_compact(),
             "scenario '{name}' decision traces are not deterministic"
+        );
+    }
+}
+
+#[test]
+fn declared_alerts_raise_after_their_faults() {
+    // The sentry's conformance surface, asserted directly on the alert
+    // timelines (the alert-conformance invariant re-checks the same
+    // facts inside each verdict). Every declared detector fires, and
+    // never before the fault that provokes it.
+    let first_raise = |outcome: &ScenarioOutcome, detector: &str| -> f64 {
+        outcome
+            .alerts
+            .iter()
+            .filter(|a| a.detector == detector)
+            .map(|a| a.raised_t_s)
+            .fold(f64::INFINITY, f64::min)
+    };
+
+    let convoy = run_bundled("convoy");
+    assert_passed(&convoy);
+    for detector in ["occupancy-leak", "allowance-thrash", "accuracy-below-floor"] {
+        let t = first_raise(&convoy, detector);
+        assert!(
+            t.is_finite() && t >= 125.0,
+            "convoy '{detector}' first raise at {t}, convoy parks at 125s:\n{}",
+            dtopt::telemetry::render_alerts(&convoy.alerts)
+        );
+    }
+
+    let famine = run_bundled("probe-famine");
+    assert_passed(&famine);
+    let t = first_raise(&famine, "probe-budget-famine");
+    assert!(t.is_finite() && t >= 140.0, "famine raise at {t}, starvation at 140s");
+    let t = first_raise(&famine, "stale-knowledge");
+    assert!(t.is_finite() && t >= 150.0, "stale raise at {t}, forced refresh at 150s");
+
+    for (name, fault_t) in [("stale-kb", 400.0), ("shard-churn", 140.0)] {
+        let outcome = run_bundled(name);
+        assert_passed(&outcome);
+        let t = first_raise(&outcome, "stale-knowledge");
+        assert!(
+            t.is_finite() && t >= fault_t,
+            "'{name}' stale-knowledge raise at {t}, forced refresh at {fault_t}s:\n{}",
+            dtopt::telemetry::render_alerts(&outcome.alerts)
+        );
+    }
+
+    // Declaring scenarios carry the conformance report in the verdict.
+    for name in ["convoy", "probe-famine", "stale-kb", "shard-churn", "flash-crowd"] {
+        let outcome = run_bundled(name);
+        let report = outcome.report("alert-conformance").unwrap();
+        assert!(report.checked >= 1, "'{name}': alert conformance never exercised");
+        assert!(report.violations.is_empty(), "'{name}': {:?}", report.violations);
+    }
+}
+
+#[test]
+fn quiet_replays_and_controls_raise_no_alerts() {
+    // The false-positive bar: flash-crowd (fault-free, expect-quiet)
+    // raises nothing, and every fault-free control replay the runner
+    // spawned is pinned to a zero-alert baseline.
+    let quiet = run_bundled("flash-crowd");
+    assert_passed(&quiet);
+    assert!(
+        quiet.alerts.is_empty(),
+        "fault-free flash-crowd raised alerts:\n{}",
+        dtopt::telemetry::render_alerts(&quiet.alerts)
+    );
+
+    let mut controls = 0;
+    for name in bundled_names() {
+        let outcome = run_bundled(name);
+        if let Some(control_alerts) = &outcome.control_alerts {
+            controls += 1;
+            assert!(
+                control_alerts.is_empty(),
+                "'{name}' control replay raised alerts:\n{}",
+                dtopt::telemetry::render_alerts(control_alerts)
+            );
+        }
+    }
+    assert!(controls >= 4, "only {controls} control replays ran — the pin is near-vacuous");
+}
+
+#[test]
+fn same_seed_alert_timelines_are_byte_identical() {
+    // Alerts inherit the replay's determinism contract: same seed, same
+    // raise/clear edges, byte for byte — the property CI re-checks end
+    // to end through `dtopt scenario --alerts --json`.
+    for name in bundled_names() {
+        let a = run_bundled(name);
+        let b = run_bundled(name);
+        assert_eq!(
+            alerts_to_json(&a.alerts).to_string_compact(),
+            alerts_to_json(&b.alerts).to_string_compact(),
+            "scenario '{name}' alert timeline is not deterministic"
         );
     }
 }
