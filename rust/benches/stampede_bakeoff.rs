@@ -1,0 +1,30 @@
+//! Bench/regenerator for the stampede bake-off: the concurrent
+//! N-worker runner swept 1→32 over one request population, with the
+//! legal-interleaving conformance audits on every point and a strict
+//! sequential-match pass against the deterministic oracle. Companion
+//! to `rush_bakeoff.rs` (which measures what the probe plane saves
+//! under a burst; this measures whether the serve path *scales* when
+//! the burst is real OS-thread concurrency).
+
+use dtopt::experiments::common::{config_from_args, default_backend, World};
+use dtopt::experiments::stampede;
+
+fn main() {
+    let config = config_from_args();
+    let full = std::env::var("DTOPT_FULL").is_ok();
+    let mut backend = default_backend();
+    eprintln!("stampede_bakeoff: preparing world ({} backend)...", backend.name());
+    let world = World::prepare(config, &mut backend);
+    // Full mode clears the 10^5-request bar across the sweep
+    // (6 points x 17k); quick keeps CI smoke fast.
+    let per_point = if full { 17_000 } else { 200 };
+    let start = std::time::Instant::now();
+    let result = stampede::run(&world, per_point);
+    let elapsed = start.elapsed();
+    println!("== Stampede bake-off: N-worker scaling under conformance ==");
+    print!("{}", stampede::render(&result));
+    for (desc, ok) in stampede::headline_checks(&result) {
+        println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
+    }
+    println!("\ntiming: sweep {elapsed:.2?}");
+}

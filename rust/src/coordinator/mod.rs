@@ -7,4 +7,4 @@ pub mod server;
 
 pub use api::{OptimizerKind, TransferRequest, TransferResponse};
 pub use metrics::Metrics;
-pub use server::{Coordinator, CoordinatorConfig, ResponseTap, TapEvent};
+pub use server::{Coordinator, CoordinatorConfig, ResponseTap, ServeHandle, TapEvent};

@@ -202,6 +202,36 @@ pub struct Coordinator {
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
     config: CoordinatorConfig,
+    /// The worker-shared serve context, retained so [`Coordinator::handle`]
+    /// can hand out direct serve handles (the stampede plane's entry
+    /// point, which bypasses the job channel entirely).
+    shared: Arc<Shared>,
+}
+
+/// A cloneable, thread-safe handle that serves requests *directly* on
+/// the calling thread — the same `serve_one` path the channel workers
+/// run, minus the channel. This is the stampede plane's entry point:
+/// `StampedeRunner` spawns its own worker pool, each worker cloning
+/// one handle and calling [`ServeHandle::serve`] in a loop, so
+/// admissions, ladder leads/piggybacks, lease epochs, and snapshot
+/// resolves race on real wall-clock concurrency instead of queueing
+/// behind one `mpsc` receiver lock.
+///
+/// The handle borrows nothing from the `Coordinator` — it keeps the
+/// shared context alive on its own — but the usual lifecycle rule
+/// still applies: any attached fabric/feedback service outlives every
+/// handle.
+#[derive(Clone)]
+pub struct ServeHandle {
+    shared: Arc<Shared>,
+    default_opt: OptimizerKind,
+}
+
+impl ServeHandle {
+    /// Serve one request on the calling thread and return its response.
+    pub fn serve(&self, request: &TransferRequest) -> TransferResponse {
+        serve_one(&self.shared, request, self.default_opt)
+    }
 }
 
 impl Coordinator {
@@ -295,11 +325,18 @@ impl Coordinator {
                 worker_loop(rx, shared, default_opt);
             }));
         }
-        Coordinator { tx, workers, metrics, next_id: AtomicU64::new(1), config }
+        Coordinator { tx, workers, metrics, next_id: AtomicU64::new(1), config, shared }
     }
 
     pub fn fresh_id(&self) -> u64 {
         self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// A direct serve handle over this coordinator's shared context
+    /// (see [`ServeHandle`]): same knowledge, planes, metrics, tap, and
+    /// trace sink as the channel workers, no channel in between.
+    pub fn handle(&self) -> ServeHandle {
+        ServeHandle { shared: self.shared.clone(), default_opt: self.config.default_optimizer }
     }
 
     /// Submit asynchronously; the receiver yields the response.

@@ -11,7 +11,10 @@
 //! per-request sampling under a synchronized burst on one network, and
 //! the convoy bake-off (`convoy`): decisions made on the shared-link
 //! contention plane vs the private-testbed fiction, both scored under
-//! identical mutual contention.
+//! identical mutual contention, and the stampede bake-off
+//! (`stampede`): the concurrent N-worker runner swept 1→32 with the
+//! legal-interleaving conformance audits and a strict sequential-match
+//! pass against the deterministic oracle.
 //! Table 1 is `sim::testbed::Testbed::table1()`.
 
 pub mod common;
@@ -24,3 +27,4 @@ pub mod fig7;
 pub mod fleet;
 pub mod live;
 pub mod rush;
+pub mod stampede;

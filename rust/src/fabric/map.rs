@@ -4,10 +4,24 @@
 //! The map itself never builds knowledge — the [`ShardRouter`] decides
 //! how a missing shard gets seeded (native fit vs cold-start borrow)
 //! and passes the recipe to [`ShardMap::get_or_materialize`]. Eviction
-//! selects the coldest shard and shuts it down under the
-//! materialization lock: its ingest queue drains into its log
+//! selects the coldest shard and shuts it down under *that key's*
+//! materialization guard: its ingest queue drains into its log
 //! partitions (the spill) before the same key could possibly
 //! rematerialize from that directory.
+//!
+//! ## Per-key materialization guards
+//!
+//! Materialization used to serialize under one global mutex, which
+//! meant a cold-start KB build for `xsede/large` stalled an unrelated
+//! `didclab/small` build behind it — unacceptable under the stampede
+//! plane's genuinely concurrent workers. The map now keeps one guard
+//! *per key* (the guard table is bounded by the key space: networks ×
+//! size classes). The safety property the global lock provided is
+//! preserved per key: every build of key K and every spill of key K
+//! run under K's guard, so a rematerialization can never read
+//! half-written partitions, and the same key is never built twice
+//! concurrently. No code path ever holds two per-key guards at once,
+//! so the guards cannot deadlock against each other.
 //!
 //! [`ShardRouter`]: super::router::ShardRouter
 
@@ -39,9 +53,11 @@ pub struct ShardMap {
     shards: RwLock<HashMap<ShardKey, Arc<Shard>>>,
     /// Logical clock stamped into `Shard::last_used` on every hit.
     clock: AtomicU64,
-    /// Serializes cold-start materializations so concurrent requests
-    /// for the same missing key build its KB once, not once per worker.
-    materialize_lock: Mutex<()>,
+    /// One materialization guard per key: builds and spills of the
+    /// same key serialize, unrelated keys proceed in parallel. The
+    /// table lock is only ever held long enough to clone a guard out —
+    /// never while a guard is being locked.
+    guards: Mutex<HashMap<ShardKey, Arc<Mutex<()>>>>,
     config: ShardMapConfig,
 }
 
@@ -51,7 +67,7 @@ impl ShardMap {
             root: root.to_path_buf(),
             shards: RwLock::new(HashMap::new()),
             clock: AtomicU64::new(1),
-            materialize_lock: Mutex::new(()),
+            guards: Mutex::new(HashMap::new()),
             config,
         }
     }
@@ -67,6 +83,17 @@ impl ShardMap {
         shard.last_used.store(self.clock.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
     }
 
+    /// The materialization guard for one key, created on first contact.
+    /// The guard table is never locked while holding a per-key guard.
+    fn guard_for(&self, key: ShardKey) -> Arc<Mutex<()>> {
+        self.guards
+            .lock()
+            .expect("guard table poisoned")
+            .entry(key)
+            .or_insert_with(|| Arc::new(Mutex::new(())))
+            .clone()
+    }
+
     /// Look up a live shard, refreshing its LRU stamp.
     pub fn get(&self, key: &ShardKey) -> Option<Arc<Shard>> {
         let shards = self.shards.read().expect("shard map poisoned");
@@ -76,16 +103,17 @@ impl ShardMap {
     }
 
     /// Look up a live shard, materializing it with `make` on a miss.
-    /// `make` runs outside the map lock but under a dedicated
-    /// materialization mutex, so the request path of *other* shards
-    /// never stalls behind a cold-start KB build and the same key is
-    /// never built twice. When the LRU cap forces a shard out, it is
-    /// shut down here — its queue spilled to its partitions and its
-    /// flusher joined — *before* the materialization lock is released,
-    /// so a rematerialization of the same key can never race the spill
-    /// (two flushers appending to one partition directory, or a
-    /// half-written tail read back mid-build). The evicted shard is
-    /// returned for the caller's accounting.
+    /// `make` runs outside the map lock and under *this key's* guard,
+    /// so the request path of other shards never stalls behind a
+    /// cold-start KB build — unrelated keys materialize in parallel —
+    /// and the same key is never built twice. When the LRU cap forces a
+    /// shard out, the victim is shut down under *its own* key's guard —
+    /// its queue spilled to its partitions and its flusher joined —
+    /// so a rematerialization of the victim key blocks on that guard
+    /// and can never race the spill (two flushers appending to one
+    /// partition directory, or a half-written tail read back
+    /// mid-build). The evicted shard is returned for the caller's
+    /// accounting.
     pub fn get_or_materialize(
         &self,
         key: ShardKey,
@@ -94,46 +122,61 @@ impl ShardMap {
         if let Some(shard) = self.get(&key) {
             return Ok((shard, None));
         }
-        let _guard = self.materialize_lock.lock().expect("materialize lock poisoned");
-        // Double-check: another request may have materialized it while
-        // we waited for the lock.
-        if let Some(shard) = self.get(&key) {
-            return Ok((shard, None));
-        }
-        let shard = Arc::new(make()?);
-        let evicted = {
+        let guard = self.guard_for(key);
+        let over_cap = {
+            let _held = guard.lock().expect("materialize guard poisoned");
+            // Double-check: another request may have materialized it
+            // while we waited for the guard.
+            if let Some(shard) = self.get(&key) {
+                return Ok((shard, None));
+            }
+            let shard = Arc::new(make()?);
             let mut shards = self.shards.write().expect("shard map poisoned");
-            let evicted = if shards.len() >= self.config.max_live.max(1) {
-                let coldest = shards
-                    .iter()
-                    .min_by_key(|(_, s)| s.last_used.load(Ordering::Relaxed))
-                    .map(|(k, _)| *k);
-                coldest.and_then(|k| shards.remove(&k))
-            } else {
-                None
-            };
             self.touch(&shard);
             shards.insert(key, shard.clone());
-            evicted
+            let over = shards.len() > self.config.max_live.max(1);
+            drop(shards);
+            if !over {
+                return Ok((shard, None));
+            }
+            Some(shard)
         };
-        // Spill outside the map lock (other lookups proceed) but inside
-        // the materialization lock (the evicted key cannot come back
-        // until its partitions are quiescent).
-        if let Some(cold) = &evicted {
-            cold.shutdown();
-        }
+        // Over the cap: evict the coldest shard *after* releasing this
+        // key's guard, so the victim's guard is taken with no other
+        // guard held (two concurrent materializations evicting each
+        // other's keys would otherwise deadlock).
+        let shard = over_cap.expect("over-cap path always carries the shard");
+        let evicted = self.evict_coldest(&key);
         Ok((shard, evicted))
+    }
+
+    /// Evict the least-recently-used shard other than `keep`, shutting
+    /// it down under its own key's guard. Between candidate selection
+    /// and removal the victim may be touched by a concurrent lookup —
+    /// the LRU is approximate under contention, which only costs a
+    /// rebuild, never a lost row.
+    fn evict_coldest(&self, keep: &ShardKey) -> Option<Arc<Shard>> {
+        let victim_key = {
+            let shards = self.shards.read().expect("shard map poisoned");
+            shards
+                .iter()
+                .filter(|(k, _)| *k != keep)
+                .min_by_key(|(_, s)| s.last_used.load(Ordering::Relaxed))
+                .map(|(k, _)| *k)?
+        };
+        self.evict(&victim_key)
     }
 
     /// Forcibly evict one shard (fault injection — the scenario
     /// engine's shard-churn events; the LRU cap evicts organically).
     /// The shard is removed from the map and shut down — its queue
-    /// spilled to its partitions — under the materialization lock, so a
-    /// concurrent rematerialization of the same key can never race the
-    /// spill. Returns the evicted shard, `None` when the key was not
-    /// live.
+    /// spilled to its partitions — under its key's materialization
+    /// guard, so a concurrent rematerialization of the same key can
+    /// never race the spill. Returns the evicted shard, `None` when
+    /// the key was not live.
     pub fn evict(&self, key: &ShardKey) -> Option<Arc<Shard>> {
-        let _guard = self.materialize_lock.lock().expect("materialize lock poisoned");
+        let guard = self.guard_for(*key);
+        let _held = guard.lock().expect("materialize guard poisoned");
         let shard = self.shards.write().expect("shard map poisoned").remove(key);
         if let Some(cold) = &shard {
             cold.shutdown();
@@ -265,6 +308,119 @@ mod tests {
             .unwrap();
         assert!(!shard.is_borrowed());
         assert_eq!(shard.native_rows(), native.len() as u64);
+        for shard in map.drain() {
+            shard.shutdown();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The spill/rematerialize window ISSUE 9 closes: a worker holding
+    /// an `Arc<Shard>` keeps offering rows while the map evicts that
+    /// shard and a third thread rematerializes the same key. Every row
+    /// whose `offer` returned `true` must survive into the key's
+    /// partition directory (shutdown drains the queue); offers that
+    /// arrive after shutdown return `false` and are counted dropped,
+    /// never silently lost. Regression for the per-key guard refactor —
+    /// under the old global lock the interleaving could not happen at
+    /// all; under per-key guards it must happen *safely*.
+    #[test]
+    fn eviction_under_live_offers_never_loses_accepted_rows() {
+        use std::sync::atomic::AtomicUsize;
+
+        let dir = tmpdir("evict_race");
+        let map = Arc::new(ShardMap::new(&dir, ShardMapConfig { max_live: 8 }));
+        let kb = donor_kb(64);
+        let key = ShardKey::new(TestbedId::Xsede, SizeClass::Medium);
+        let (shard, _) = materialize(&map, key, &kb);
+
+        let accepted = Arc::new(AtomicUsize::new(0));
+        let offerer = {
+            let shard = shard.clone();
+            let accepted = accepted.clone();
+            std::thread::spawn(move || {
+                for i in 0..400u64 {
+                    let mut row = crate::logs::record::tests::sample_log();
+                    row.id = 10_000 + i;
+                    if shard.offer(row) {
+                        accepted.fetch_add(1, Ordering::SeqCst);
+                    }
+                    if i % 16 == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+            })
+        };
+        // Evict mid-stream: shutdown (inside) spills the queue to the
+        // key's partitions while the offerer still holds its Arc.
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let evicted = map.evict(&key).expect("shard was live");
+        assert_eq!(evicted.key, key);
+        offerer.join().unwrap();
+
+        let accepted = accepted.load(Ordering::SeqCst);
+        assert!(accepted > 0, "the race never materialized: no offer landed before eviction");
+        let spilled = LogStore::open(map.shard_dir(&key)).unwrap().read_all().unwrap().len();
+        assert!(
+            spilled >= accepted,
+            "accepted {accepted} rows but only {spilled} reached the spill partitions"
+        );
+        // The same key rematerializes from quiescent partitions and
+        // serves again (the guard ordered spill before rebuild).
+        let (reborn, _) = map
+            .get_or_materialize(key, || {
+                Shard::materialize(
+                    key,
+                    &map.shard_dir(&key),
+                    || (donor_kb(65), None),
+                    ShardConfig { min_native_rows: 10, ..Default::default() },
+                )
+            })
+            .unwrap();
+        assert!(reborn.native_rows() >= accepted as u64);
+        for shard in map.drain() {
+            shard.shutdown();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Two threads racing to materialize the same missing key must
+    /// build it exactly once (the per-key guard preserves the global
+    /// lock's single-build property).
+    #[test]
+    fn concurrent_materialization_of_one_key_builds_once() {
+        use std::sync::atomic::AtomicUsize;
+
+        let dir = tmpdir("once");
+        let map = Arc::new(ShardMap::new(&dir, ShardMapConfig { max_live: 8 }));
+        let kb = donor_kb(66);
+        let key = ShardKey::new(TestbedId::DidclabToXsede, SizeClass::Large);
+        let builds = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let map = map.clone();
+                let kb = kb.clone();
+                let builds = builds.clone();
+                std::thread::spawn(move || {
+                    let (shard, _) = map
+                        .get_or_materialize(key, || {
+                            builds.fetch_add(1, Ordering::SeqCst);
+                            Shard::materialize(
+                                key,
+                                &map.shard_dir(&key),
+                                || (kb, None),
+                                ShardConfig::default(),
+                            )
+                        })
+                        .unwrap();
+                    shard
+                })
+            })
+            .collect();
+        let shards: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "same key built more than once");
+        for pair in shards.windows(2) {
+            assert!(Arc::ptr_eq(&pair[0], &pair[1]), "racers got different shards");
+        }
         for shard in map.drain() {
             shard.shutdown();
         }

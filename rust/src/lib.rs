@@ -156,6 +156,24 @@
 //! print the timeline; golden fixtures under
 //! `rust/tests/fixtures/alerts/` pin the exact bytes.
 //!
+//! ## The stampede plane (`crate::stampede`)
+//!
+//! Everything above executes deterministically — one thread or a pool
+//! fed one request at a time — but the coordinator is a *service*:
+//! requests arrive together, and snapshot swaps, single-flight
+//! leads/piggybacks, link-lease epochs, and shard materializations
+//! race for real. The [`stampede`] subsystem is that execution mode: a
+//! [`stampede::StampedeRunner`] drives 1→32 OS-thread workers (each a
+//! cloned [`coordinator::ServeHandle`]) over a shared request cursor,
+//! and [`stampede::conformance`] asserts every concurrent timeline is
+//! a *legal interleaving* the sequential oracle could have produced —
+//! generation causality, one leader per cohort, occupancy balance,
+//! budget conservation, plus a per-request `sequential-match` replay.
+//! Wall-clock concurrent runs are exempt from byte-determinism; the
+//! conformance suite is the contract instead. `dtopt experiment
+//! stampede` sweeps the worker counts and gates p99 decision latency;
+//! `tests/stampede_races.rs` holds the seeded race suite.
+//!
 //! See `DESIGN.md` (repo root) for the layering diagram, the feedback
 //! dataflow, the fabric's routing diagram and shard lifecycle, the
 //! probe-plane dataflow, the scenario engine's dataflow and scenario
@@ -175,5 +193,6 @@ pub mod netplane;
 pub mod probe;
 pub mod scenario;
 pub mod sim;
+pub mod stampede;
 pub mod telemetry;
 pub mod util;

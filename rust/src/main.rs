@@ -8,7 +8,7 @@
 //!              [--kb KB.json] [--load L] [--seed S]
 //!   serve      [--requests N] [--workers W] [--optimizer O] [--fabric]
 //!              [--metrics-out F]
-//!   experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|convoy|all
+//!   experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|convoy|stampede|all
 //!              [--quick|--full] [--metrics-out F]
 //!   scenario   <name|file> [--seed S] [--full] [--timeline] [--alerts] [--json]
 //!              [--list] [--metrics-out F]
@@ -29,7 +29,7 @@
 use anyhow::{bail, Context, Result};
 use dtopt::coordinator::{Coordinator, CoordinatorConfig, OptimizerKind, TransferRequest};
 use dtopt::experiments::common::{default_backend, ExpConfig, World};
-use dtopt::experiments::{convoy, fig12, fig3, fig5, fig6, fig7, fleet, live, rush};
+use dtopt::experiments::{convoy, fig12, fig3, fig5, fig6, fig7, fleet, live, rush, stampede};
 use dtopt::probe::ProbePlane;
 use dtopt::logs::generate::{generate, GenConfig};
 use dtopt::logs::store::LogStore;
@@ -142,7 +142,7 @@ fn print_help() {
          offline --logs DIR --out KB.json [--backend native|pjrt|auto]\n  \
          transfer --testbed T --files N --avg-mb M [--optimizer O] [--kb F] [--load L]\n  \
          serve [--requests N] [--workers W] [--optimizer O] [--fabric] [--metrics-out F]\n  \
-         experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|convoy|all [--quick|--full] [--metrics-out F]\n  \
+         experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|convoy|stampede|all [--quick|--full] [--metrics-out F]\n  \
          scenario <name|file> [--seed S] [--full] [--timeline] [--alerts] [--json] [--metrics-out F] (--list prints bundled names)\n  \
          trace <name|file> [--request N] [--json] [--seed S] [--full] [--metrics-out F]\n  \
          obs [--scenario NAME|FILE] [--seed S] [--prom|--json|--alerts|--recent N]\n  \
@@ -426,8 +426,10 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
 }
 
 /// Every experiment the CLI can regenerate (`all` runs them in order).
-const EXPERIMENT_NAMES: [&str; 11] =
-    ["fig1", "fig2", "fig3a", "fig3b", "fig5", "fig6", "fig7", "live", "fleet", "rush", "convoy"];
+const EXPERIMENT_NAMES: [&str; 12] = [
+    "fig1", "fig2", "fig3a", "fig3b", "fig5", "fig6", "fig7", "live", "fleet", "rush", "convoy",
+    "stampede",
+];
 
 fn cmd_experiment(opts: &Opts) -> Result<()> {
     let Some(which) = opts.positional.first().map(|s| s.as_str()) else {
@@ -438,8 +440,9 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
     };
     let config = if opts.has("full") { ExpConfig::full() } else { ExpConfig::quick() };
     let reps = if opts.has("full") { 4 } else { 2 };
-    let needs_world =
-        matches!(which, "fig5" | "fig6" | "fig7" | "live" | "fleet" | "rush" | "convoy" | "all");
+    let needs_world_list =
+        ["fig5", "fig6", "fig7", "live", "fleet", "rush", "convoy", "stampede", "all"];
+    let needs_world = needs_world_list.contains(&which);
     let world = if needs_world {
         let mut backend = default_backend();
         eprintln!("preparing world ({} backend)...", backend.name());
@@ -512,6 +515,14 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
                 let r = convoy::run(world.unwrap(), cohort, workers);
                 print!("{}", convoy::render(&r));
                 tally("convoy", convoy::headline_checks(&r))?;
+            }
+            "stampede" => {
+                // Full mode clears the 10^5-request bar across the
+                // sweep (6 points x 17k); quick keeps CI smoke fast.
+                let per_point = if opts.has("full") { 17_000 } else { 200 };
+                let r = stampede::run(world.unwrap(), per_point);
+                print!("{}", stampede::render(&r));
+                tally("stampede", stampede::headline_checks(&r))?;
             }
             "fleet" => {
                 let eval_days = if opts.has("full") { 8 } else { 3 };

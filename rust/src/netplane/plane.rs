@@ -9,6 +9,17 @@
 //! changed since I last looked" apart from "same neighbors, new
 //! numbers".
 //!
+//! ## Lock sharding
+//!
+//! The registry used to be one `Mutex<BTreeMap<TestbedId, LinkState>>`:
+//! every join, leave, per-chunk view, and load update on *any* network
+//! contended on the same mutex — the hottest lock on the serve path
+//! once the stampede plane runs genuinely concurrent workers. The
+//! network population is a closed enum ([`TestbedId::all`]), so the
+//! plane now holds one `Mutex<LinkState>` per network in a fixed
+//! array: transfers on different networks never touch each other's
+//! lock, and no code path ever holds two of them at once.
+//!
 //! Invariants the scenario conformance suite asserts end-to-end:
 //! occupancy is never negative and always returns to zero at drain
 //! (leases release on drop, so a panicking worker cannot leak
@@ -67,7 +78,8 @@ struct LinkState {
     active: BTreeMap<u64, TransferLoad>,
     ambient_mbps: f64,
     ambient_streams: u32,
-    /// Bumps on join / leave / ambient change.
+    /// Bumps on join / leave / ambient change. Zero means the network
+    /// has never been touched (the render filter below).
     epoch: u64,
     peak_concurrent: usize,
     joins: u64,
@@ -141,7 +153,9 @@ pub struct LinkPlane {
     /// the coordinator shapes testbeds with, so a brownout narrows the
     /// plane's idea of the pipe too). `None` = nominal capacity.
     faults: Option<Arc<FaultBoard>>,
-    nets: Mutex<BTreeMap<TestbedId, LinkState>>,
+    /// One lock per network, indexed by [`LinkPlane::slot`] — the
+    /// network population is closed, so sharding is a fixed array.
+    nets: [Mutex<LinkState>; 3],
 }
 
 impl LinkPlane {
@@ -163,7 +177,7 @@ impl LinkPlane {
         config: LinkPlaneConfig,
         faults: Option<Arc<FaultBoard>>,
     ) -> LinkPlane {
-        LinkPlane { mode, config, faults, nets: Mutex::new(BTreeMap::new()) }
+        LinkPlane { mode, config, faults, nets: Default::default() }
     }
 
     pub fn mode(&self) -> PlaneMode {
@@ -174,8 +188,19 @@ impl LinkPlane {
         &self.config
     }
 
+    /// The network's state shard. Each call locks exactly one network;
+    /// no plane method ever holds two shards at once.
+    fn slot(&self, network: TestbedId) -> &Mutex<LinkState> {
+        let idx = match network {
+            TestbedId::Xsede => 0,
+            TestbedId::Didclab => 1,
+            TestbedId::DidclabToXsede => 2,
+        };
+        &self.nets[idx]
+    }
+
     /// The network's current fault capacity factor (1.0 = healthy).
-    /// Touches only the fault board, never the `nets` lock.
+    /// Touches only the fault board, never any network shard.
     fn capacity_factor(&self, network: TestbedId) -> f64 {
         self.faults
             .as_ref()
@@ -198,8 +223,7 @@ impl LinkPlane {
     /// plane for its `Drop` release.
     pub fn admit(self: Arc<Self>, network: TestbedId, id: u64) -> LinkLease {
         {
-            let mut nets = self.nets.lock().expect("link plane poisoned");
-            let state = nets.entry(network).or_default();
+            let mut state = self.slot(network).lock().expect("link plane poisoned");
             state.active.insert(id, TransferLoad::default());
             state.epoch += 1;
             state.joins += 1;
@@ -217,19 +241,17 @@ impl LinkPlane {
     }
 
     fn release(&self, network: TestbedId, id: u64) {
-        let mut nets = self.nets.lock().expect("link plane poisoned");
-        if let Some(state) = nets.get_mut(&network) {
-            if state.active.remove(&id).is_some() {
-                state.epoch += 1;
-                state.leaves += 1;
-            }
+        let mut state = self.slot(network).lock().expect("link plane poisoned");
+        if state.active.remove(&id).is_some() {
+            state.epoch += 1;
+            state.leaves += 1;
         }
     }
 
     fn update(&self, network: TestbedId, id: u64, procs: u32, streams: u32, offered_mbps: f64) {
         let offered = if offered_mbps.is_finite() { offered_mbps.max(0.0) } else { 0.0 };
-        let mut nets = self.nets.lock().expect("link plane poisoned");
-        if let Some(load) = nets.get_mut(&network).and_then(|s| s.active.get_mut(&id)) {
+        let mut state = self.slot(network).lock().expect("link plane poisoned");
+        if let Some(load) = state.active.get_mut(&id) {
             *load = TransferLoad { procs, streams, offered_mbps: offered };
         }
     }
@@ -238,8 +260,7 @@ impl LinkPlane {
     /// scenario engine's `contention` fault hook.
     pub fn set_ambient(&self, network: TestbedId, offered_mbps: f64, streams: u32) {
         let offered = if offered_mbps.is_finite() { offered_mbps.max(0.0) } else { 0.0 };
-        let mut nets = self.nets.lock().expect("link plane poisoned");
-        let state = nets.entry(network).or_default();
+        let mut state = self.slot(network).lock().expect("link plane poisoned");
         state.ambient_mbps = offered;
         state.ambient_streams = streams;
         state.epoch += 1;
@@ -254,31 +275,23 @@ impl LinkPlane {
     /// Truthful in both modes — isolation hides neighbors from
     /// *transfers*, not from the operator.
     pub fn occupancy(&self, network: TestbedId) -> Occupancy {
-        let nets = self.nets.lock().expect("link plane poisoned");
-        match nets.get(&network) {
-            Some(state) => Occupancy {
-                transfers: state.active.len(),
-                streams: state.active.values().map(|l| l.streams).sum(),
-                offered_mbps: state.active.values().map(|l| l.offered_mbps).sum(),
-                ambient_mbps: state.ambient_mbps,
-                ambient_streams: state.ambient_streams,
-                epoch: state.epoch,
-            },
-            None => Occupancy {
-                transfers: 0,
-                streams: 0,
-                offered_mbps: 0.0,
-                ambient_mbps: 0.0,
-                ambient_streams: 0,
-                epoch: 0,
-            },
+        let state = self.slot(network).lock().expect("link plane poisoned");
+        Occupancy {
+            transfers: state.active.len(),
+            streams: state.active.values().map(|l| l.streams).sum(),
+            offered_mbps: state.active.values().map(|l| l.offered_mbps).sum(),
+            ambient_mbps: state.ambient_mbps,
+            ambient_streams: state.ambient_streams,
+            epoch: state.epoch,
         }
     }
 
     /// Registered transfers across every network (0 = fully drained).
     pub fn active_total(&self) -> usize {
-        let nets = self.nets.lock().expect("link plane poisoned");
-        nets.values().map(|s| s.active.len()).sum()
+        TestbedId::all()
+            .iter()
+            .map(|id| self.slot(*id).lock().expect("link plane poisoned").active.len())
+            .sum()
     }
 
     /// What a transfer (or a request about to be admitted — pass
@@ -289,29 +302,19 @@ impl LinkPlane {
             return NeighborView::default();
         }
         let cap = self.scaled_capacity_mbps(network);
-        let nets = self.nets.lock().expect("link plane poisoned");
-        match nets.get(&network) {
-            Some(state) => {
-                let mut transfers = 0usize;
-                let mut streams = state.ambient_streams;
-                let mut offered = state.ambient_mbps;
-                for (id, load) in &state.active {
-                    if Some(*id) == exclude {
-                        continue;
-                    }
-                    transfers += 1;
-                    streams = streams.saturating_add(load.streams);
-                    offered += load.offered_mbps;
-                }
-                NeighborView {
-                    transfers,
-                    streams,
-                    offered_mbps: offered.min(cap),
-                    epoch: state.epoch,
-                }
+        let state = self.slot(network).lock().expect("link plane poisoned");
+        let mut transfers = 0usize;
+        let mut streams = state.ambient_streams;
+        let mut offered = state.ambient_mbps;
+        for (id, load) in &state.active {
+            if Some(*id) == exclude {
+                continue;
             }
-            None => NeighborView::default(),
+            transfers += 1;
+            streams = streams.saturating_add(load.streams);
+            offered += load.offered_mbps;
         }
+        NeighborView { transfers, streams, offered_mbps: offered.min(cap), epoch: state.epoch }
     }
 
     /// Total carried load on the network — registered + ambient,
@@ -330,8 +333,7 @@ impl LinkPlane {
         if self.mode == PlaneMode::Isolated {
             return None;
         }
-        let nets = self.nets.lock().expect("link plane poisoned");
-        let active = nets.get(&network).map(|s| s.active.len()).unwrap_or(0);
+        let active = self.slot(network).lock().expect("link plane poisoned").active.len();
         if active < 2 {
             return None;
         }
@@ -345,34 +347,65 @@ impl LinkPlane {
             PlaneMode::Shared => "shared",
             PlaneMode::Isolated => "isolated",
         };
-        let nets = self.nets.lock().expect("link plane poisoned");
-        let active: usize = nets.values().map(|s| s.active.len()).sum();
-        let peak: usize = nets.values().map(|s| s.peak_concurrent).max().unwrap_or(0);
-        let joins: u64 = nets.values().map(|s| s.joins).sum();
-        let leaves: u64 = nets.values().map(|s| s.leaves).sum();
+        // Snapshot each shard in the fixed network order, one lock at a
+        // time (never two at once). Untouched networks (epoch 0) are
+        // skipped, matching the old lazily-populated map's render.
+        struct NetSnap {
+            id: TestbedId,
+            active: usize,
+            streams: u32,
+            offered: f64,
+            ambient_mbps: f64,
+            ambient_streams: u32,
+            epoch: u64,
+            peak: usize,
+            joins: u64,
+            leaves: u64,
+        }
+        let snaps: Vec<NetSnap> = TestbedId::all()
+            .iter()
+            .filter_map(|id| {
+                let state = self.slot(*id).lock().expect("link plane poisoned");
+                if state.epoch == 0 {
+                    return None;
+                }
+                Some(NetSnap {
+                    id: *id,
+                    active: state.active.len(),
+                    streams: state.active.values().map(|l| l.streams).sum(),
+                    offered: state.active.values().map(|l| l.offered_mbps).sum(),
+                    ambient_mbps: state.ambient_mbps,
+                    ambient_streams: state.ambient_streams,
+                    epoch: state.epoch,
+                    peak: state.peak_concurrent,
+                    joins: state.joins,
+                    leaves: state.leaves,
+                })
+            })
+            .collect();
+        let active: usize = snaps.iter().map(|s| s.active).sum();
+        let peak: usize = snaps.iter().map(|s| s.peak).max().unwrap_or(0);
+        let joins: u64 = snaps.iter().map(|s| s.joins).sum();
+        let leaves: u64 = snaps.iter().map(|s| s.leaves).sum();
         let mut out = format!(
             "link plane: {mode} mode, {active} active transfer(s), peak {peak} concurrent, \
              {joins} joins, {leaves} leaves\n"
         );
-        for (id, state) in nets.iter() {
-            let streams: u32 = state.active.values().map(|l| l.streams).sum();
-            let offered: f64 = state.active.values().map(|l| l.offered_mbps).sum();
-            // scaled_capacity_mbps touches only the fault board, never
-            // the nets lock held here.
-            let cap = self.scaled_capacity_mbps(*id);
-            let carried = (offered + state.ambient_mbps).min(cap);
+        for snap in &snaps {
+            let cap = self.scaled_capacity_mbps(snap.id);
+            let carried = (snap.offered + snap.ambient_mbps).min(cap);
             out.push_str(&format!(
                 "  {}: {} active / {} streams, offered {:.0} Mbps, ambient {:.0} Mbps \
                  ({} streams), carried {:.0}/{:.0} Mbps, epoch {}\n",
-                id.name(),
-                state.active.len(),
-                streams,
-                offered,
-                state.ambient_mbps,
-                state.ambient_streams,
+                snap.id.name(),
+                snap.active,
+                snap.streams,
+                snap.offered,
+                snap.ambient_mbps,
+                snap.ambient_streams,
                 carried,
                 cap,
-                state.epoch,
+                snap.epoch,
             ));
         }
         out
@@ -674,7 +707,44 @@ mod tests {
         assert!(rendered.contains("xsede: 1 active / 24 streams"), "{rendered}");
         assert!(rendered.contains("ambient 4000 Mbps (48 streams)"), "{rendered}");
         assert!(rendered.contains("carried 6500/10000 Mbps"), "{rendered}");
+        // Untouched networks are not rendered (epoch 0 filter).
+        assert!(!rendered.contains("didclab:"), "{rendered}");
         drop(lease);
         assert!(plane.render().contains("0 active transfer(s)"));
+    }
+
+    /// Stampede-plane sharding: joins/leaves on different networks
+    /// never contend, and a cross-network stampede still drains every
+    /// shard to exactly zero.
+    #[test]
+    fn cross_network_stampede_drains_every_shard() {
+        let plane = Arc::new(LinkPlane::shared());
+        let handles: Vec<_> = (0..6)
+            .map(|worker| {
+                let plane = plane.clone();
+                std::thread::spawn(move || {
+                    let network = TestbedId::all()[worker % 3];
+                    for i in 0..200u64 {
+                        let id = worker as u64 * 1_000 + i;
+                        let lease = plane.clone().admit(network, id);
+                        lease.update(4, 8, 500.0);
+                        let _ = lease.view();
+                        let _ = lease.stream_allowance();
+                        drop(lease);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(plane.active_total(), 0);
+        for id in TestbedId::all() {
+            let occ = plane.occupancy(id);
+            assert_eq!(occ.transfers, 0, "{} not drained", id.name());
+            assert_eq!(occ.offered_mbps, 0.0);
+            let state = plane.slot(id).lock().unwrap();
+            assert_eq!(state.joins, state.leaves, "{} join/leave imbalance", id.name());
+        }
     }
 }

@@ -51,7 +51,11 @@
 //!   <name|file>` is the CLI entry, `dtopt trace <name|file>` prints
 //!   the per-request provenance chains;
 //!   `tests/scenario_conformance.rs` runs every bundled scenario in
-//!   quick mode.
+//!   quick mode. [`runner::run_stampede`] replays the same script
+//!   through the concurrent stampede plane ([`crate::stampede`]) —
+//!   same-instant requests race on real worker threads, the verdict
+//!   keeps the order-insensitive invariants plus the stampede
+//!   conformance audits, and the sequential run stays the oracle.
 
 pub mod inject;
 pub mod invariant;
@@ -64,7 +68,7 @@ pub use invariant::{
     EstimateObs, InvariantReport, PiggybackObs, ResponseEvent, Violation,
 };
 pub use runner::{
-    render_timeline, render_verdict, run, timeline_to_json, RunOptions, ScenarioOutcome,
-    ACCURACY_FLOOR,
+    render_timeline, render_verdict, run, run_stampede, timeline_to_json, RunOptions,
+    ScenarioOutcome, ACCURACY_FLOOR,
 };
 pub use script::{AlertExpectation, ArrivalRule, Burst, Scenario};

@@ -42,7 +42,8 @@ use super::script::{Burst, Scenario};
 use crate::baselines::TransferEnv;
 use crate::coordinator::server::{completed_log, hidden_state_for, run_admitted_asm};
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, Metrics, OptimizerKind, ResponseTap, TransferRequest,
+    Coordinator, CoordinatorConfig, Metrics, OptimizerKind, ResponseTap, ServeHandle,
+    TransferRequest, TransferResponse,
 };
 use crate::fabric::{FabricConfig, Shard, ShardConfig, ShardKey, ShardMapConfig, ShardRouter};
 use crate::feedback::{IngestConfig, KbSnapshot, RefreshPolicy};
@@ -58,6 +59,7 @@ use crate::sim::fault::FaultBoard;
 use crate::sim::params::BETA;
 use crate::sim::testbed::{Testbed, TestbedId};
 use crate::sim::traffic::DAY_S;
+use crate::stampede::{conformance, StampedeRunner};
 use crate::telemetry::{Alert, DecisionTrace, Settlement, TraceBuilder, TraceEvent, TraceSink};
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
@@ -375,13 +377,16 @@ fn replay(
     result
 }
 
-fn replay_in(
+/// Build the full replay stack (world, planes, fabric, coordinator)
+/// for one scenario run. Shared between the sequential replay and the
+/// stampede replay so the two execution modes race over identical
+/// worlds.
+fn build_ctx(
     scenario: &Scenario,
     seed: u64,
-    quick: bool,
     inject_faults: bool,
     scratch: &std::path::Path,
-) -> Result<(Vec<Event>, f64, Vec<DecisionTrace>, Arc<Metrics>)> {
+) -> Result<ReplayCtx> {
     // --- World: per-network history + one knowledge base -------------------
     let mut rows = Vec::new();
     for id in scenario.networks() {
@@ -438,10 +443,12 @@ fn replay_in(
             traces: Some(traces.clone()),
         },
     );
-    let ctx =
-        ReplayCtx { coordinator, router, plane, links, board, tap, traces, seed, t_base };
+    Ok(ReplayCtx { coordinator, router, plane, links, board, tap, traces, seed, t_base })
+}
 
-    // --- Schedule: merge arrivals, bursts, and faults -----------------------
+/// The merged, deterministically ordered op schedule (faults before
+/// bursts before arrivals at equal times, then script order).
+fn build_ops(scenario: &Scenario, quick: bool) -> Vec<Op> {
     let mut ops: Vec<Op> = Vec::new();
     let mut seq = 0usize;
     for event in &scenario.faults {
@@ -478,6 +485,18 @@ fn replay_in(
             .then(a.rank.cmp(&b.rank))
             .then(a.seq.cmp(&b.seq))
     });
+    ops
+}
+
+fn replay_in(
+    scenario: &Scenario,
+    seed: u64,
+    quick: bool,
+    inject_faults: bool,
+    scratch: &std::path::Path,
+) -> Result<(Vec<Event>, f64, Vec<DecisionTrace>, Arc<Metrics>)> {
+    let ctx = build_ctx(scenario, seed, inject_faults, scratch)?;
+    let ops = build_ops(scenario, quick);
 
     // --- Replay -------------------------------------------------------------
     let mut timeline: Vec<Event> = Vec::new();
@@ -979,6 +998,284 @@ fn run_admitted(
 
 fn routed_borrowed(shard: &Option<Arc<Shard>>) -> bool {
     shard.as_ref().map_or(true, |s| s.is_borrowed())
+}
+
+// ---------------------------------------------------------------------------
+// Stampede replay (satellite of the stampede plane)
+// ---------------------------------------------------------------------------
+
+/// Run a scenario through the concurrent stampede runner: every group
+/// of same-instant requests (bursts, coincident arrivals) is served by
+/// `workers` racing OS threads through [`crate::stampede::StampedeRunner`]
+/// instead of one at a time.
+///
+/// Concurrency exempts the run from byte-determinism, so the verdict
+/// keeps only the order-insensitive invariants — occupancy drained,
+/// budgets non-negative, the accuracy floor, trace completeness, and
+/// (where the scenario declares them) alert conformance against a
+/// *sequential* fault-free control — and adds the stampede plane's
+/// live conformance audits (link drain, probe-cohort sanity, budget
+/// bounds). The order-sensitive checkers (monotone generations,
+/// estimate cluster/generation guards, piggyback-leader match) are
+/// deliberately excluded: their pre-admission peeks race the
+/// admissions they predict, which is exactly the nondeterminism this
+/// mode embraces. The sequential [`run`] stays the oracle for those.
+pub fn run_stampede(
+    scenario: &Scenario,
+    options: &RunOptions,
+    workers: usize,
+) -> Result<ScenarioOutcome> {
+    let seed = options.seed_override.unwrap_or(scenario.seed);
+    let scratch = std::env::temp_dir().join(format!(
+        "dtopt_stampede_{}_{}_{}",
+        std::process::id(),
+        SCRATCH_SEQ.fetch_add(1, Ordering::Relaxed),
+        scenario.name,
+    ));
+    let _ = std::fs::remove_dir_all(&scratch);
+    let result = stampede_replay(scenario, seed, options.quick, workers, &scratch);
+    let _ = std::fs::remove_dir_all(&scratch);
+    let (timeline, faulted_mean, traces, metrics, audits) = result?;
+
+    let t_base = (scenario.history_days + 1) as f64 * DAY_S;
+    let alerts = normalized_alerts(&metrics, t_base);
+    let wants_control = (!scenario.expect_alerts.is_empty() || scenario.expect_quiet)
+        && !scenario.faults.is_empty();
+    let (control_mean, control_alerts) = if wants_control {
+        let control = replay(scenario, seed, options.quick, false)?;
+        let control_alerts = normalized_alerts(&control.3, t_base);
+        (Some(control.1), Some(control_alerts))
+    } else {
+        (None, None)
+    };
+
+    const RETAINED: [&str; 2] = ["occupancy-drained", "budget-non-negative"];
+    let mut reports: Vec<InvariantReport> =
+        invariant::check_timeline(&timeline, &CheckSpec::default())
+            .into_iter()
+            .filter(|r| RETAINED.contains(&r.name))
+            .collect();
+    reports.push(invariant::accuracy_floor_report(&timeline, ACCURACY_FLOOR));
+    reports.push(invariant::trace_completeness_report(&timeline, &traces));
+    if !scenario.expect_alerts.is_empty() || scenario.expect_quiet || control_alerts.is_some() {
+        reports.push(invariant::alert_conformance_report(
+            &scenario.expect_alerts,
+            scenario.expect_quiet,
+            &alerts,
+            control_alerts.as_deref(),
+        ));
+    }
+    reports.extend(audits);
+
+    Ok(ScenarioOutcome {
+        name: scenario.name.clone(),
+        seed,
+        quick: options.quick,
+        timeline,
+        reports,
+        traces,
+        faulted_mean_mbps: faulted_mean,
+        control_mean_mbps: control_mean,
+        alerts,
+        control_alerts,
+        metrics,
+    })
+}
+
+/// One stampede window: consecutive same-instant requests, flushed
+/// concurrently through the runner when the virtual clock (or a fault)
+/// moves on. Virtual-time-separated arrivals must NOT share a window:
+/// the link plane contends whatever executes together in wall-clock,
+/// and making a 60-seconds-later arrival press on its predecessor
+/// would fabricate contention the script never wrote.
+struct StampedeWindow {
+    entries: Vec<(f64, u64, ShardKey, u64, f64)>,
+}
+
+impl StampedeWindow {
+    fn t_s(&self) -> Option<f64> {
+        self.entries.last().map(|e| e.0)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn flush(
+        &mut self,
+        ctx: &ReplayCtx,
+        runner: &StampedeRunner,
+        handle: &ServeHandle,
+        timeline: &mut Vec<Event>,
+        responses: &mut Vec<TransferResponse>,
+        refresh_paused: bool,
+    ) -> Result<()> {
+        let Some(t_last) = self.t_s() else { return Ok(()) };
+        let requests: Vec<TransferRequest> = self
+            .entries
+            .iter()
+            .map(|&(t_s, id, key, files, avg_mb)| TransferRequest {
+                id,
+                testbed: key.network,
+                dataset: Dataset::new(files, avg_mb),
+                t_submit: ctx.t_base + t_s,
+                state_override: None,
+                optimizer: Some(OptimizerKind::Asm),
+                seed: request_seed(ctx.seed, id),
+            })
+            .collect();
+        let outcome = runner.run(handle, requests);
+        let taped = ctx.tap.drain();
+        anyhow::ensure!(
+            taped.len() == self.entries.len(),
+            "tap recorded {} events for a {}-request window",
+            taped.len(),
+            self.entries.len()
+        );
+        for &(t_s, id, key, _, _) in &self.entries {
+            let tape = taped
+                .iter()
+                .find(|t| t.id == id)
+                .ok_or_else(|| anyhow!("request {id} was never taped"))?;
+            anyhow::ensure!(
+                tape.shard_key == Some(key),
+                "request {id} routed to {:?}, scripted for {key}",
+                tape.shard_key
+            );
+            let response = outcome
+                .responses
+                .iter()
+                .find(|r| r.id == id)
+                .ok_or_else(|| anyhow!("request {id} was never served"))?;
+            // Occupancy/budget are read after the window drains (the
+            // runner joined every worker): transient mid-window values
+            // are schedule-dependent, the drained state is not.
+            let occ_after = ctx.links.occupancy(key.network);
+            timeline.push(Event::Response(ResponseEvent {
+                t_s,
+                id,
+                key,
+                generation: tape.kb_generation,
+                borrowed: tape.borrowed,
+                mode: tape.probe_mode,
+                samples: tape.samples,
+                retunes: tape.bulk_retunes,
+                mb: tape.total_mb,
+                transfer_s: tape.transfer_s,
+                achieved_mbps: tape.achieved_mbps,
+                optimal_mbps: response.optimal_mbps,
+                budget_after_mb: ctx.plane.budget(key).available_mb(),
+                // No pre-admission peeks: they would race the very
+                // admissions they predict (see `run_stampede` docs).
+                cluster: None,
+                est: None,
+                budget_forced: false,
+                piggyback: None,
+                coalesced: self.entries.len() > 1,
+                occ_transfers_after: occ_after.transfers,
+                occ_offered_after: occ_after.offered_mbps,
+                occ_peak_offered: tape
+                    .contention
+                    .map_or(0.0, |exposure| exposure.peak_carried_mbps),
+            }));
+        }
+        responses.extend(outcome.responses);
+        self.entries.clear();
+        maintenance(ctx, t_last, refresh_paused, timeline);
+        Ok(())
+    }
+}
+
+#[allow(clippy::type_complexity)]
+fn stampede_replay(
+    scenario: &Scenario,
+    seed: u64,
+    quick: bool,
+    workers: usize,
+    scratch: &std::path::Path,
+) -> Result<(
+    Vec<Event>,
+    f64,
+    Vec<DecisionTrace>,
+    Arc<Metrics>,
+    Vec<InvariantReport>,
+)> {
+    let ctx = build_ctx(scenario, seed, true, scratch)?;
+    let ops = build_ops(scenario, quick);
+    let handle = ctx.coordinator.handle();
+    let runner = StampedeRunner::new(workers);
+
+    let mut timeline: Vec<Event> = Vec::new();
+    let mut responses: Vec<TransferResponse> = Vec::new();
+    let mut keys: Vec<ShardKey> = Vec::new();
+    let mut window = StampedeWindow { entries: Vec::new() };
+    let mut refresh_paused = false;
+    let mut next_id = 1u64;
+    for op in ops {
+        match op.kind {
+            OpKind::Fault(event) => {
+                // Faults land between windows: the pre-fault crowd
+                // fully drains, then the fault applies, exactly like
+                // the sequential schedule's fault-before-serve rank.
+                window.flush(&ctx, &runner, &handle, &mut timeline, &mut responses, refresh_paused)?;
+                let board = ctx.board.as_ref().expect("stampede replay has a board");
+                let targets = FaultTargets {
+                    board,
+                    plane: &ctx.plane,
+                    router: &ctx.router,
+                    links: &ctx.links,
+                };
+                match inject::apply(&event.fault, &targets, &mut refresh_paused) {
+                    inject::Applied::Done => {
+                        timeline.push(Event::Fault { t_s: event.at_s, fault: event.fault });
+                    }
+                    inject::Applied::Refreshed { key, generation } => {
+                        timeline.push(Event::Fault { t_s: event.at_s, fault: event.fault });
+                        timeline.push(Event::Refresh {
+                            t_s: event.at_s,
+                            key,
+                            generation,
+                            cause: "forced".to_string(),
+                        });
+                    }
+                    inject::Applied::EvictionNoop => {}
+                }
+            }
+            OpKind::Arrive { key, files, avg_mb } => {
+                if window.t_s().is_some_and(|t| t != op.t_s) {
+                    window.flush(&ctx, &runner, &handle, &mut timeline, &mut responses, refresh_paused)?;
+                }
+                let id = next_id;
+                next_id += 1;
+                keys.push(key);
+                window.entries.push((op.t_s, id, key, files, avg_mb));
+            }
+            OpKind::Burst(burst) => {
+                if window.t_s().is_some_and(|t| t != burst.at_s) {
+                    window.flush(&ctx, &runner, &handle, &mut timeline, &mut responses, refresh_paused)?;
+                }
+                for _ in 0..burst.count {
+                    let id = next_id;
+                    next_id += 1;
+                    keys.push(burst.key);
+                    window.entries.push((burst.at_s, id, burst.key, burst.files, burst.avg_mb));
+                }
+            }
+        }
+    }
+    window.flush(&ctx, &runner, &handle, &mut timeline, &mut responses, refresh_paused)?;
+
+    let mean = mean_goodput(&timeline);
+    // Live end-of-run conformance audits, before the stack tears down.
+    let audits = vec![
+        conformance::audit_links(&ctx.links),
+        conformance::audit_probe(&ctx.plane, &responses),
+        conformance::audit_budgets(&ctx.plane, &keys),
+    ];
+    let metrics = ctx.coordinator.metrics.clone();
+    ctx.coordinator.shutdown();
+    let _ = ctx.router.flush_all(Duration::from_secs(30));
+    ctx.router.shutdown();
+    let mut traces = ctx.traces.drain();
+    traces.sort_by_key(|t| t.request_id);
+    Ok((timeline, mean, traces, metrics, audits))
 }
 
 // ---------------------------------------------------------------------------

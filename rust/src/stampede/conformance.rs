@@ -1,0 +1,723 @@
+//! Legal-interleaving conformance: the sequential oracle's contract,
+//! checked over genuinely concurrent stampede runs.
+//!
+//! A concurrent timeline is **legal** when it could have been produced
+//! by *some* sequential interleaving of the same requests:
+//!
+//! * **generation-causality** — per shard, KB generations are observed
+//!   in monotone order within one shard incarnation (an eviction
+//!   starts a new incarnation), and every response cites a generation
+//!   that was actually published.
+//! * **one-leader-per-cohort** — every single-flight cohort has
+//!   exactly one leader, whose flight precedes all piggyback
+//!   settlements in that cohort.
+//! * **occupancy-balance** — link occupancy never goes negative and
+//!   drains to zero once every lease is released.
+//! * **budget-conservation** — probe-budget spends never exceed
+//!   earns + the initial grant (and never exceed bucket capacity).
+//!
+//! Two forms ship here. [`check_events`] judges an explicit
+//! [`StampedeEvent`] timeline — the synthetic model the property tests
+//! mutate to prove the checker itself catches each violation class.
+//! The `audit_*` functions judge a *live* run end-state (the planes
+//! don't journal per-event under concurrency — that would reintroduce
+//! the very serialization the stampede removes), and
+//! [`sequential_match`] replays each request through a fresh
+//! sequential oracle and demands the concurrent response agree.
+//! Reports reuse the scenario engine's [`InvariantReport`] shape so
+//! verdict rendering and CI conformance gates are shared.
+
+use crate::coordinator::{ServeHandle, TransferRequest, TransferResponse};
+use crate::fabric::ShardKey;
+use crate::netplane::LinkPlane;
+use crate::probe::{ProbeMode, ProbePlane};
+use crate::scenario::invariant::{InvariantReport, Violation};
+use crate::sim::testbed::TestbedId;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::Ordering;
+
+const EPS: f64 = 1e-9;
+
+/// One event in a synthetic stampede timeline. The live planes never
+/// emit these (see the module docs); they model the ordering facts the
+/// conformance checks reason about, in a form property tests can
+/// mutate one event at a time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StampedeEvent {
+    /// A KB snapshot publish on `shard` with the new generation.
+    Publish { shard: String, generation: u64 },
+    /// Shard eviction: its next materialization is a new incarnation
+    /// whose generation counter restarts.
+    Evict { shard: String },
+    /// A single-flight leader started cohort `cohort` on `shard`.
+    Lead { shard: String, cohort: u64 },
+    /// A follower settled from cohort `cohort`'s leader result.
+    PiggybackSettle { shard: String, cohort: u64 },
+    /// A transfer joined `network`'s link.
+    LinkJoin { network: String, id: u64 },
+    /// A transfer left `network`'s link.
+    LinkLeave { network: String, id: u64 },
+    /// `mb` taken from `shard`'s probe budget.
+    Spend { shard: String, mb: f64 },
+    /// `mb` credited back to `shard`'s probe budget.
+    Earn { shard: String, mb: f64 },
+    /// A response served from `shard` citing `generation`.
+    Response { shard: String, generation: u64 },
+}
+
+/// Budget parameters the synthetic timeline is judged against.
+#[derive(Debug, Clone, Copy)]
+pub struct StampedeSpec {
+    /// Initial grant per shard budget.
+    pub initial_mb: f64,
+    /// Bucket capacity per shard budget (earns clamp here).
+    pub capacity_mb: f64,
+}
+
+impl Default for StampedeSpec {
+    fn default() -> Self {
+        StampedeSpec { initial_mb: 256.0, capacity_mb: 256.0 }
+    }
+}
+
+fn violation(at: usize, detail: String) -> Violation {
+    Violation { at_s: at as f64, detail }
+}
+
+/// Judge a synthetic timeline against all four interleaving laws.
+/// `at_s` in each violation is the offending event's index.
+pub fn check_events(events: &[StampedeEvent], spec: &StampedeSpec) -> Vec<InvariantReport> {
+    vec![
+        check_generation_causality(events),
+        check_one_leader_per_cohort(events),
+        check_occupancy_balance(events),
+        check_budget_conservation(events, spec),
+    ]
+}
+
+/// Per-shard: publishes strictly monotone within an incarnation,
+/// responses cite only published generations of the current
+/// incarnation. Generation 0 (the boot KB) is implicitly published
+/// when each incarnation starts.
+fn check_generation_causality(events: &[StampedeEvent]) -> InvariantReport {
+    let mut published: BTreeMap<&str, BTreeSet<u64>> = BTreeMap::new();
+    let mut checked = 0usize;
+    let mut violations = Vec::new();
+    for (at, event) in events.iter().enumerate() {
+        match event {
+            StampedeEvent::Publish { shard, generation } => {
+                checked += 1;
+                let set = published.entry(shard).or_insert_with(|| BTreeSet::from([0]));
+                let last = *set.iter().next_back().unwrap();
+                if *generation <= last {
+                    violations.push(violation(
+                        at,
+                        format!(
+                            "shard {shard}: publish generation {generation} not above last {last}"
+                        ),
+                    ));
+                }
+                set.insert(*generation);
+            }
+            StampedeEvent::Evict { shard } => {
+                checked += 1;
+                published.insert(shard, BTreeSet::from([0]));
+            }
+            StampedeEvent::Response { shard, generation } => {
+                checked += 1;
+                let set = published.entry(shard).or_insert_with(|| BTreeSet::from([0]));
+                if !set.contains(generation) {
+                    violations.push(violation(
+                        at,
+                        format!(
+                            "shard {shard}: response cites unpublished generation {generation}"
+                        ),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    InvariantReport { name: "generation-causality", checked, violations }
+}
+
+/// Per (shard, cohort): exactly one Lead, and it precedes every
+/// PiggybackSettle of that cohort.
+fn check_one_leader_per_cohort(events: &[StampedeEvent]) -> InvariantReport {
+    let mut leaders: BTreeMap<(&str, u64), usize> = BTreeMap::new();
+    let mut checked = 0usize;
+    let mut violations = Vec::new();
+    for (at, event) in events.iter().enumerate() {
+        match event {
+            StampedeEvent::Lead { shard, cohort } => {
+                checked += 1;
+                if leaders.insert((shard, *cohort), at).is_some() {
+                    violations.push(violation(
+                        at,
+                        format!("shard {shard} cohort {cohort}: second leader"),
+                    ));
+                }
+            }
+            StampedeEvent::PiggybackSettle { shard, cohort } => {
+                checked += 1;
+                if !leaders.contains_key(&(shard.as_str(), *cohort)) {
+                    violations.push(violation(
+                        at,
+                        format!(
+                            "shard {shard} cohort {cohort}: piggyback settled before any leader"
+                        ),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    InvariantReport { name: "one-leader-per-cohort", checked, violations }
+}
+
+/// Per network: the join/leave counter never dips below zero and ends
+/// at zero.
+fn check_occupancy_balance(events: &[StampedeEvent]) -> InvariantReport {
+    let mut occupancy: BTreeMap<&str, i64> = BTreeMap::new();
+    let mut checked = 0usize;
+    let mut violations = Vec::new();
+    for (at, event) in events.iter().enumerate() {
+        match event {
+            StampedeEvent::LinkJoin { network, .. } => {
+                checked += 1;
+                *occupancy.entry(network).or_insert(0) += 1;
+            }
+            StampedeEvent::LinkLeave { network, id } => {
+                checked += 1;
+                let count = occupancy.entry(network).or_insert(0);
+                *count -= 1;
+                if *count < 0 {
+                    violations.push(violation(
+                        at,
+                        format!("network {network}: transfer {id} left an empty link"),
+                    ));
+                    *count = 0;
+                }
+            }
+            _ => {}
+        }
+    }
+    for (network, count) in occupancy {
+        if count != 0 {
+            violations.push(violation(
+                events.len(),
+                format!("network {network}: {count} transfers never left"),
+            ));
+        }
+    }
+    InvariantReport { name: "occupancy-balance", checked, violations }
+}
+
+/// Per shard: running balance = initial + earns (clamped at capacity)
+/// − spends never goes negative.
+fn check_budget_conservation(events: &[StampedeEvent], spec: &StampedeSpec) -> InvariantReport {
+    let mut balances: BTreeMap<&str, f64> = BTreeMap::new();
+    let mut checked = 0usize;
+    let mut violations = Vec::new();
+    for (at, event) in events.iter().enumerate() {
+        match event {
+            StampedeEvent::Spend { shard, mb } => {
+                checked += 1;
+                let balance = balances.entry(shard).or_insert(spec.initial_mb);
+                *balance -= mb;
+                if *balance < -EPS {
+                    violations.push(violation(
+                        at,
+                        format!(
+                            "shard {shard}: spend of {mb:.3} MB overdraws budget to {balance:.3}"
+                        ),
+                    ));
+                }
+            }
+            StampedeEvent::Earn { shard, mb } => {
+                checked += 1;
+                let balance = balances.entry(shard).or_insert(spec.initial_mb);
+                *balance = (*balance + mb).min(spec.capacity_mb);
+            }
+            _ => {}
+        }
+    }
+    InvariantReport { name: "budget-conservation", checked, violations }
+}
+
+/// End-of-run link audit: every network's occupancy drained to zero —
+/// no leaked leases, no negative drain artifacts.
+pub fn audit_links(links: &LinkPlane) -> InvariantReport {
+    let mut checked = 0usize;
+    let mut violations = Vec::new();
+    for network in TestbedId::all() {
+        checked += 1;
+        let occ = links.occupancy(network);
+        if occ.transfers != 0 || occ.streams != 0 || occ.offered_mbps.abs() > EPS {
+            violations.push(violation(
+                0,
+                format!(
+                    "network {}: {} transfers / {} streams / {:.3} Mbps still on the link",
+                    network.name(),
+                    occ.transfers,
+                    occ.streams,
+                    occ.offered_mbps
+                ),
+            ));
+        }
+    }
+    checked += 1;
+    let residual = links.active_total();
+    if residual != 0 {
+        violations.push(violation(0, format!("{residual} active transfers never released")));
+    }
+    InvariantReport { name: "occupancy-balance", checked, violations }
+}
+
+/// End-of-run probe audit over the plane's counters and the response
+/// set: no in-flight ladders left behind, any piggybacked response
+/// implies at least one leader flew, mode tallies agree with the
+/// plane's own counters, and non-led responses did zero sampling.
+pub fn audit_probe(plane: &ProbePlane, responses: &[TransferResponse]) -> InvariantReport {
+    let mut checked = 0usize;
+    let mut violations = Vec::new();
+
+    checked += 1;
+    let in_flight = plane.in_flight();
+    if in_flight != 0 {
+        violations.push(violation(0, format!("{in_flight} sampling flights never finished")));
+    }
+
+    let mut led = 0u64;
+    let mut piggybacked = 0u64;
+    let mut estimate_served = 0u64;
+    for response in responses {
+        match response.probe_mode {
+            Some(ProbeMode::Led) => led += 1,
+            Some(ProbeMode::Piggybacked) => piggybacked += 1,
+            Some(ProbeMode::EstimateServed) => estimate_served += 1,
+            None => {}
+        }
+        if !matches!(response.probe_mode, Some(ProbeMode::Led) | None) {
+            checked += 1;
+            let samples = response.report.sample_transfers();
+            if samples != 0 {
+                violations.push(violation(
+                    0,
+                    format!(
+                        "request {}: {} mode ran {samples} sample transfers",
+                        response.id,
+                        response.probe_mode.map_or("none", |m| m.name()),
+                    ),
+                ));
+            }
+        }
+    }
+
+    let stats_led = plane.stats.led.load(Ordering::Relaxed);
+    let stats_piggybacked = plane.stats.piggybacked.load(Ordering::Relaxed);
+    let stats_estimate = plane.stats.estimate_served.load(Ordering::Relaxed);
+    checked += 1;
+    if piggybacked > 0 && stats_led == 0 {
+        violations.push(violation(
+            0,
+            format!("{piggybacked} piggybacked responses but the plane never led a ladder"),
+        ));
+    }
+    // The plane may have served other clients (warm-up, other runs on a
+    // shared plane), so its counters bound ours from above.
+    for (label, ours, plane_count) in [
+        ("led", led, stats_led),
+        ("piggybacked", piggybacked, stats_piggybacked),
+        ("estimate-served", estimate_served, stats_estimate),
+    ] {
+        checked += 1;
+        if ours > plane_count {
+            violations.push(violation(
+                0,
+                format!("{ours} {label} responses exceed the plane's own count {plane_count}"),
+            ));
+        }
+    }
+    checked += 1;
+    let admitted = plane.stats.admissions();
+    let modal = (led + piggybacked + estimate_served) as usize;
+    if (admitted as usize) < modal {
+        violations.push(violation(
+            0,
+            format!("{modal} probe-served responses exceed {admitted} recorded admissions"),
+        ));
+    }
+    InvariantReport { name: "one-leader-per-cohort", checked, violations }
+}
+
+/// End-of-run budget audit: every shard's bucket holds a sane balance
+/// (conservation is enforced inside [`crate::probe::TokenBucket`];
+/// with no cumulative spend counters the live check is the invariant's
+/// consequence, 0 ≤ available ≤ capacity).
+pub fn audit_budgets(plane: &ProbePlane, keys: &[ShardKey]) -> InvariantReport {
+    let mut seen = BTreeSet::new();
+    let mut checked = 0usize;
+    let mut violations = Vec::new();
+    for key in keys {
+        if !seen.insert(key.name()) {
+            continue;
+        }
+        checked += 1;
+        let bucket = plane.budget(*key);
+        let available = bucket.available_mb();
+        let capacity = bucket.capacity_mb();
+        if available < -EPS {
+            violations.push(violation(
+                0,
+                format!("shard {}: budget overdrawn to {available:.3} MB", key.name()),
+            ));
+        }
+        if available > capacity + EPS {
+            violations.push(violation(
+                0,
+                format!(
+                    "shard {}: budget {available:.3} MB above capacity {capacity:.3}",
+                    key.name()
+                ),
+            ));
+        }
+    }
+    InvariantReport { name: "budget-conservation", checked, violations }
+}
+
+/// Response-set generation audit: no response cites a generation above
+/// `ceiling` (0 for a frozen-KB run — concurrency must not manufacture
+/// phantom publishes).
+pub fn audit_generations(responses: &[TransferResponse], ceiling: u64) -> InvariantReport {
+    let mut checked = 0usize;
+    let mut violations = Vec::new();
+    for response in responses {
+        checked += 1;
+        if response.kb_generation > ceiling {
+            violations.push(violation(
+                0,
+                format!(
+                    "request {}: generation {} above published ceiling {ceiling}",
+                    response.id, response.kb_generation
+                ),
+            ));
+        }
+    }
+    InvariantReport { name: "generation-causality", checked, violations }
+}
+
+/// Replay each request through a fresh *sequential* oracle and demand
+/// the concurrent response agree on everything that is a pure function
+/// of (request, pinned generation): shard key, generation, and the
+/// ground-truth optimum.
+///
+/// With `strict_theta` (the concurrent run had no probe plane and no
+/// link plane, so θ cannot depend on neighbors) the final parameters
+/// and achieved throughput must also match exactly — restricted to
+/// responses that report zero contended time, since any carried
+/// contention is schedule-dependent by construction.
+pub fn sequential_match(
+    oracle: &ServeHandle,
+    requests: &[TransferRequest],
+    responses: &[TransferResponse],
+    strict_theta: bool,
+) -> InvariantReport {
+    let by_id: BTreeMap<u64, &TransferRequest> = requests.iter().map(|r| (r.id, r)).collect();
+    let mut checked = 0usize;
+    let mut violations = Vec::new();
+    for response in responses {
+        let Some(request) = by_id.get(&response.id) else {
+            violations.push(violation(
+                0,
+                format!("request {}: response for a request never submitted", response.id),
+            ));
+            continue;
+        };
+        checked += 1;
+        let want = oracle.serve(request);
+        if response.shard_key != want.shard_key {
+            violations.push(violation(
+                0,
+                format!(
+                    "request {}: shard {:?} differs from oracle {:?}",
+                    response.id, response.shard_key, want.shard_key
+                ),
+            ));
+        }
+        if response.kb_generation != want.kb_generation {
+            violations.push(violation(
+                0,
+                format!(
+                    "request {}: generation {} differs from oracle {}",
+                    response.id, response.kb_generation, want.kb_generation
+                ),
+            ));
+        }
+        if (response.optimal_mbps - want.optimal_mbps).abs() > EPS {
+            violations.push(violation(
+                0,
+                format!(
+                    "request {}: optimal {:.6} differs from oracle {:.6}",
+                    response.id, response.optimal_mbps, want.optimal_mbps
+                ),
+            ));
+        }
+        let uncontended =
+            response.contention.as_ref().map_or(true, |exposure| exposure.contended_s == 0.0);
+        if strict_theta && uncontended {
+            if response.report.final_params != want.report.final_params {
+                violations.push(violation(
+                    0,
+                    format!(
+                        "request {}: θ {:?} differs from oracle {:?}",
+                        response.id, response.report.final_params, want.report.final_params
+                    ),
+                ));
+            }
+            let got = response.report.achieved_mbps();
+            let oracle_mbps = want.report.achieved_mbps();
+            if (got - oracle_mbps).abs() > EPS {
+                violations.push(violation(
+                    0,
+                    format!(
+                        "request {}: achieved {got:.6} differs from oracle {oracle_mbps:.6}",
+                        response.id
+                    ),
+                ));
+            }
+        }
+    }
+    InvariantReport { name: "sequential-match", checked, violations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall, Config};
+    use crate::util::rng::Rng;
+
+    fn report<'a>(reports: &'a [InvariantReport], name: &str) -> &'a InvariantReport {
+        reports.iter().find(|r| r.name == name).unwrap_or_else(|| panic!("no report {name}"))
+    }
+
+    /// Build a known-legal timeline from seeded randomness: monotone
+    /// publishes per shard, one leader before any piggybacks per
+    /// cohort, balanced join/leave, spends covered by the balance.
+    fn legal_timeline(rng: &mut Rng) -> Vec<StampedeEvent> {
+        let shards = ["xsede/small", "didclab/large"];
+        let networks = ["xsede", "didclab"];
+        let spec = StampedeSpec::default();
+        let mut events = Vec::new();
+        let mut next_gen: BTreeMap<&str, u64> = BTreeMap::new();
+        let mut balance: BTreeMap<&str, f64> = BTreeMap::new();
+        let mut open_links: Vec<(&str, u64)> = Vec::new();
+        let mut cohort = 0u64;
+        let rounds = 4 + (rng.next_u64() % 12) as usize;
+        for i in 0..rounds {
+            let shard = shards[(rng.next_u64() % 2) as usize];
+            let network = networks[(rng.next_u64() % 2) as usize];
+            match rng.next_u64() % 6 {
+                0 => {
+                    let gen = next_gen.entry(shard).or_insert(0);
+                    *gen += 1;
+                    events.push(StampedeEvent::Publish { shard: shard.into(), generation: *gen });
+                }
+                1 => {
+                    cohort += 1;
+                    events.push(StampedeEvent::Lead { shard: shard.into(), cohort });
+                    for _ in 0..(rng.next_u64() % 3) {
+                        events
+                            .push(StampedeEvent::PiggybackSettle { shard: shard.into(), cohort });
+                    }
+                }
+                2 => {
+                    let id = i as u64;
+                    events.push(StampedeEvent::LinkJoin { network: network.into(), id });
+                    open_links.push((network, id));
+                }
+                3 => {
+                    let avail = balance.entry(shard).or_insert(spec.initial_mb);
+                    let mb = (rng.next_u64() % 32) as f64;
+                    if *avail >= mb {
+                        *avail -= mb;
+                        events.push(StampedeEvent::Spend { shard: shard.into(), mb });
+                    }
+                    let earn = (rng.next_u64() % 16) as f64;
+                    *avail = (*avail + earn).min(spec.capacity_mb);
+                    events.push(StampedeEvent::Earn { shard: shard.into(), mb: earn });
+                }
+                4 => {
+                    events.push(StampedeEvent::Evict { shard: shard.into() });
+                    next_gen.insert(shard, 0);
+                }
+                _ => {
+                    let gen = *next_gen.get(shard).unwrap_or(&0);
+                    // Cite the latest published generation (0 is always
+                    // implicitly published).
+                    let cite = if gen > 0 && rng.next_u64() % 2 == 0 { gen } else { 0 };
+                    events
+                        .push(StampedeEvent::Response { shard: shard.into(), generation: cite });
+                }
+            }
+        }
+        // Drain every open lease so the timeline is legal end-to-end.
+        for (network, id) in open_links.drain(..) {
+            events.push(StampedeEvent::LinkLeave { network: network.into(), id });
+        }
+        events
+    }
+
+    #[test]
+    fn legal_timelines_always_pass_every_check() {
+        forall(
+            Config { cases: 96, ..Config::default() },
+            legal_timeline,
+            |events| {
+                let reports = check_events(events, &StampedeSpec::default());
+                for r in &reports {
+                    if !r.ok() {
+                        return Err(format!("{} flagged a legal timeline: {:?}", r.name, r.violations));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn unpublished_generation_fails_generation_causality() {
+        forall(
+            Config { cases: 64, ..Config::default() },
+            legal_timeline,
+            |events| {
+                let mut mutated = events.clone();
+                mutated.push(StampedeEvent::Response {
+                    shard: "xsede/small".into(),
+                    generation: 999,
+                });
+                let reports = check_events(&mutated, &StampedeSpec::default());
+                if report(&reports, "generation-causality").ok() {
+                    return Err("unpublished-generation mutation slipped through".into());
+                }
+                for name in ["one-leader-per-cohort", "occupancy-balance", "budget-conservation"]
+                {
+                    if !report(&reports, name).ok() {
+                        return Err(format!("{name} misfired on a generation mutation"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn regressed_publish_fails_generation_causality() {
+        let events = vec![
+            StampedeEvent::Publish { shard: "s".into(), generation: 3 },
+            StampedeEvent::Publish { shard: "s".into(), generation: 2 },
+        ];
+        let reports = check_events(&events, &StampedeSpec::default());
+        assert!(!report(&reports, "generation-causality").ok());
+    }
+
+    #[test]
+    fn eviction_resets_the_incarnation() {
+        // After an evict, re-publishing from 1 is legal and citing the
+        // pre-evict generation 5 is not.
+        let events = vec![
+            StampedeEvent::Publish { shard: "s".into(), generation: 5 },
+            StampedeEvent::Evict { shard: "s".into() },
+            StampedeEvent::Publish { shard: "s".into(), generation: 1 },
+            StampedeEvent::Response { shard: "s".into(), generation: 5 },
+        ];
+        let reports = check_events(&events, &StampedeSpec::default());
+        let gen = report(&reports, "generation-causality");
+        assert_eq!(gen.violations.len(), 1);
+        assert!(gen.violations[0].detail.contains("unpublished generation 5"));
+    }
+
+    #[test]
+    fn double_leader_fails_one_leader_per_cohort() {
+        forall(
+            Config { cases: 64, ..Config::default() },
+            legal_timeline,
+            |events| {
+                let mut mutated = events.clone();
+                mutated.push(StampedeEvent::Lead { shard: "dup".into(), cohort: 7 });
+                mutated.push(StampedeEvent::Lead { shard: "dup".into(), cohort: 7 });
+                let reports = check_events(&mutated, &StampedeSpec::default());
+                if report(&reports, "one-leader-per-cohort").ok() {
+                    return Err("double-leader mutation slipped through".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn orphan_piggyback_fails_one_leader_per_cohort() {
+        let events =
+            vec![StampedeEvent::PiggybackSettle { shard: "s".into(), cohort: 1 }];
+        let reports = check_events(&events, &StampedeSpec::default());
+        let r = report(&reports, "one-leader-per-cohort");
+        assert!(!r.ok());
+        assert!(r.violations[0].detail.contains("before any leader"));
+    }
+
+    #[test]
+    fn negative_occupancy_fails_occupancy_balance() {
+        forall(
+            Config { cases: 64, ..Config::default() },
+            legal_timeline,
+            |events| {
+                let mut mutated = events.clone();
+                mutated.push(StampedeEvent::LinkLeave { network: "phantom".into(), id: 404 });
+                let reports = check_events(&mutated, &StampedeSpec::default());
+                if report(&reports, "occupancy-balance").ok() {
+                    return Err("negative-occupancy mutation slipped through".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn leaked_lease_fails_occupancy_balance() {
+        let events = vec![StampedeEvent::LinkJoin { network: "xsede".into(), id: 1 }];
+        let reports = check_events(&events, &StampedeSpec::default());
+        let r = report(&reports, "occupancy-balance");
+        assert!(!r.ok());
+        assert!(r.violations[0].detail.contains("never left"));
+    }
+
+    #[test]
+    fn overdraw_fails_budget_conservation() {
+        let spec = StampedeSpec { initial_mb: 10.0, capacity_mb: 10.0 };
+        let events = vec![
+            StampedeEvent::Spend { shard: "s".into(), mb: 8.0 },
+            StampedeEvent::Earn { shard: "s".into(), mb: 100.0 }, // clamps at capacity
+            StampedeEvent::Spend { shard: "s".into(), mb: 10.0 },
+            StampedeEvent::Spend { shard: "s".into(), mb: 1.0 },
+        ];
+        let reports = check_events(&events, &spec);
+        let r = report(&reports, "budget-conservation");
+        assert_eq!(r.violations.len(), 1, "only the overdrawing spend is flagged: {r:?}");
+    }
+
+    #[test]
+    fn checked_counts_are_populated() {
+        let mut rng = Rng::new(0xC0FFEE);
+        let events = legal_timeline(&mut rng);
+        for r in check_events(&events, &StampedeSpec::default()) {
+            // Vacuous reports are allowed but the suite overall must
+            // have judged something.
+            assert!(r.ok());
+        }
+        let total: usize = check_events(&events, &StampedeSpec::default())
+            .iter()
+            .map(|r| r.checked)
+            .sum();
+        assert!(total > 0);
+    }
+}

@@ -1,0 +1,52 @@
+//! The stampede plane: genuinely concurrent N-worker execution with a
+//! sequential conformance oracle.
+//!
+//! Every other execution mode in this crate is deterministic — one
+//! thread (the scenario engine's virtual clock) or a bounded pool fed
+//! one request at a time — which is what makes byte-identical replays
+//! and the invariant suite possible. But the paper's coordinator is a
+//! *service*: requests arrive together, and admissions, ladder
+//! leads/piggybacks, link-lease join/leave epochs, and KB snapshot
+//! swaps race for real. The stampede plane is that mode:
+//!
+//! ```text
+//!   requests ──▶ shared cursor (one fetch_add per claim)
+//!                  │        │        │
+//!              worker 0  worker 1 … worker N−1   (OS threads, each a
+//!                  │        │        │            cloned ServeHandle)
+//!                  └────────┴────────┴──▶ Coordinator::serve path
+//!                            │            (snapshot pin → probe admit
+//!                            │             → link lease → ASM)
+//!                            ▼
+//!                   StampedeOutcome ──▶ conformance audits +
+//!                                       sequential-match oracle
+//! ```
+//!
+//! * [`runner`] — [`StampedeRunner`] spawns the worker pool (1→32) and
+//!   collects a [`StampedeOutcome`] (responses sorted by id, wall
+//!   clock, per-decision latency histogram).
+//! * [`conformance`] — the *legal interleaving* contract: generation
+//!   causality, one leader per single-flight cohort, link occupancy
+//!   balance, probe-budget conservation — as a synthetic-timeline
+//!   checker ([`check_events`], property-tested against seeded
+//!   mutations), live end-of-run audits over the planes, and a
+//!   per-request [`sequential_match`] against a fresh sequential
+//!   oracle.
+//!
+//! Concurrent wall-clock runs are exempt from the byte-determinism
+//! contract (interleavings differ run to run); conformance instead
+//! asserts every observed timeline is one the sequential oracle could
+//! have produced. `dtopt experiment stampede` sweeps workers 1→32 and
+//! gates p99 decision latency at 32 workers to ≤2× the single-worker
+//! baseline; `tests/stampede_races.rs` holds the seeded race suite.
+//! See DESIGN.md § "Stampede plane" for the lock-sharding work that
+//! makes the serve path safe to race.
+
+pub mod conformance;
+pub mod runner;
+
+pub use conformance::{
+    audit_budgets, audit_generations, audit_links, audit_probe, check_events, sequential_match,
+    StampedeEvent, StampedeSpec,
+};
+pub use runner::{StampedeOutcome, StampedeRunner};

@@ -1,0 +1,205 @@
+//! N-worker stampede runner: genuinely concurrent request execution
+//! over the coordinator's serve path.
+//!
+//! The deterministic planes run everything on one thread (the scenario
+//! engine) or on the coordinator's own bounded pool fed one request at
+//! a time. The stampede runner is the other extreme: it spawns its own
+//! OS-thread pool (1→32 workers), every worker clones one
+//! [`ServeHandle`] and pulls requests off a shared cursor, and
+//! admissions, ladder leads/piggybacks, lease join/leave epochs, and
+//! snapshot swaps race on real wall-clock interleavings. The
+//! sequential runner stays the conformance oracle — see
+//! [`crate::stampede::conformance`] for what "legal interleaving"
+//! means and DESIGN.md § "Stampede plane" for the byte-determinism
+//! exemption.
+
+use crate::coordinator::{ServeHandle, TransferRequest, TransferResponse};
+use crate::telemetry::LogHistogram;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Result of one concurrent run: every response (sorted by request id,
+/// so downstream comparisons are schedule-independent) plus the
+/// wall-clock envelope.
+#[derive(Debug)]
+pub struct StampedeOutcome {
+    /// One response per submitted request, sorted by request id.
+    pub responses: Vec<TransferResponse>,
+    /// Wall-clock time from first spawn to last join.
+    pub wall: Duration,
+    /// Worker threads that actually ran.
+    pub workers: usize,
+}
+
+impl StampedeOutcome {
+    /// Requests served per wall-clock second.
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.responses.len() as f64 / secs
+    }
+
+    /// Per-request decision latency (`decision_wall_ns`) in
+    /// microseconds, as a mergeable log-bucketed histogram.
+    pub fn decision_latency(&self) -> LogHistogram {
+        let mut hist = LogHistogram::new();
+        for response in &self.responses {
+            hist.record(response.decision_wall_ns as f64 / 1_000.0);
+        }
+        hist
+    }
+}
+
+/// Spawns `workers` OS threads that drain a shared request queue
+/// through cloned [`ServeHandle`]s.
+///
+/// The queue is an `Arc<Vec<_>>` plus an atomic cursor: claiming a
+/// request is one `fetch_add`, so the queue itself adds no lock that
+/// could serialize the serve paths under test. Worker panics propagate
+/// at join (a stampede that loses a worker is a failed run, not a
+/// short count).
+#[derive(Debug, Clone, Copy)]
+pub struct StampedeRunner {
+    workers: usize,
+}
+
+impl StampedeRunner {
+    pub fn new(workers: usize) -> StampedeRunner {
+        StampedeRunner { workers: workers.max(1) }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Serve every request concurrently; blocks until all workers
+    /// drain the queue and join.
+    pub fn run(&self, handle: &ServeHandle, requests: Vec<TransferRequest>) -> StampedeOutcome {
+        let queue: Arc<Vec<TransferRequest>> = Arc::new(requests);
+        let cursor = Arc::new(AtomicUsize::new(0));
+        let started = Instant::now();
+        let threads: Vec<_> = (0..self.workers)
+            .map(|_| {
+                let queue = queue.clone();
+                let cursor = cursor.clone();
+                let handle = handle.clone();
+                std::thread::spawn(move || {
+                    let mut served = Vec::new();
+                    loop {
+                        let idx = cursor.fetch_add(1, Ordering::Relaxed);
+                        let Some(request) = queue.get(idx) else { break };
+                        served.push(handle.serve(request));
+                    }
+                    served
+                })
+            })
+            .collect();
+        let mut responses = Vec::with_capacity(queue.len());
+        for thread in threads {
+            responses.extend(thread.join().expect("stampede worker panicked"));
+        }
+        responses.sort_by_key(|response| response.id);
+        StampedeOutcome { responses, wall: started.elapsed(), workers: self.workers }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Coordinator, CoordinatorConfig, OptimizerKind};
+    use crate::logs::generate::{generate, GenConfig};
+    use crate::offline::kmeans::NativeAssign;
+    use crate::offline::pipeline::{build, OfflineConfig};
+    use crate::sim::testbed::{Testbed, TestbedId};
+    use crate::sim::dataset::Dataset;
+
+    fn frozen_coordinator() -> Coordinator {
+        let rows = generate(
+            &Testbed::xsede(),
+            &GenConfig { days: 3, arrivals_per_hour: 20.0, start_day: 0, seed: 0x57A },
+        );
+        let kb = Arc::new(build(&rows, &OfflineConfig::default(), &mut NativeAssign).unwrap());
+        Coordinator::new(
+            kb,
+            Arc::new(rows),
+            CoordinatorConfig {
+                workers: 1,
+                default_optimizer: OptimizerKind::Asm,
+                seed: 0x57A,
+                ..CoordinatorConfig::default()
+            },
+        )
+    }
+
+    fn request(coord: &Coordinator, i: u64) -> TransferRequest {
+        TransferRequest {
+            id: coord.fresh_id(),
+            testbed: TestbedId::Xsede,
+            dataset: Dataset::new(120, 60.0),
+            t_submit: 4.0 * 86_400.0 + 9.0 * 3_600.0 + i as f64,
+            state_override: None,
+            seed: 0x57A0 + i,
+            optimizer: None,
+        }
+    }
+
+    #[test]
+    fn four_workers_serve_every_request_exactly_once() {
+        let coord = frozen_coordinator();
+        let handle = coord.handle();
+        let requests: Vec<_> = (0..32).map(|i| request(&coord, i)).collect();
+        let ids: Vec<u64> = requests.iter().map(|r| r.id).collect();
+        let outcome = StampedeRunner::new(4).run(&handle, requests);
+        assert_eq!(outcome.workers, 4);
+        assert_eq!(outcome.responses.len(), 32);
+        let mut served: Vec<u64> = outcome.responses.iter().map(|r| r.id).collect();
+        // Sorted by id, and exactly the submitted set: nothing dropped,
+        // nothing double-served.
+        assert!(served.windows(2).all(|w| w[0] < w[1]));
+        served.sort_unstable();
+        let mut expected = ids;
+        expected.sort_unstable();
+        assert_eq!(served, expected);
+        assert_eq!(outcome.decision_latency().count(), 32);
+        assert!(outcome.throughput_rps() > 0.0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn concurrent_responses_match_a_sequential_oracle() {
+        // With no probe plane and no link plane, θ is a pure function
+        // of (request, generation): a racing run must agree with a
+        // fresh sequential serve of the same request, field for field.
+        let coord = frozen_coordinator();
+        let handle = coord.handle();
+        let requests: Vec<_> = (0..16).map(|i| request(&coord, i)).collect();
+        let outcome = StampedeRunner::new(8).run(&handle, requests.clone());
+        let oracle = frozen_coordinator();
+        let oracle_handle = oracle.handle();
+        for (req, got) in requests.iter().zip(&outcome.responses) {
+            let want = oracle_handle.serve(req);
+            assert_eq!(got.id, req.id);
+            assert_eq!(got.kb_generation, 0);
+            assert_eq!(got.shard_key, want.shard_key);
+            assert!((got.optimal_mbps - want.optimal_mbps).abs() < 1e-9);
+            assert_eq!(got.report.final_params, want.report.final_params);
+            assert!((got.report.achieved_mbps() - want.report.achieved_mbps()).abs() < 1e-9);
+        }
+        oracle.shutdown();
+        coord.shutdown();
+    }
+
+    #[test]
+    fn one_worker_degenerates_to_sequential() {
+        let coord = frozen_coordinator();
+        let handle = coord.handle();
+        let requests: Vec<_> = (0..6).map(|i| request(&coord, i)).collect();
+        let outcome = StampedeRunner::new(1).run(&handle, requests);
+        assert_eq!(outcome.workers, 1);
+        assert_eq!(outcome.responses.len(), 6);
+        coord.shutdown();
+    }
+}

@@ -8,8 +8,17 @@
 use dtopt::probe::ProbeMode;
 use dtopt::scenario::invariant::Event;
 use dtopt::scenario::script::{bundled, bundled_names, Scenario};
-use dtopt::scenario::{render_timeline, render_verdict, run, Fault, RunOptions, ScenarioOutcome};
+use dtopt::scenario::{
+    render_timeline, render_verdict, run, run_stampede, Fault, RunOptions, ScenarioOutcome,
+};
 use dtopt::telemetry::{alerts_to_json, traces_to_json};
+
+fn run_bundled_stampede(name: &str, workers: usize) -> ScenarioOutcome {
+    let scenario = Scenario::parse(bundled(name).expect("bundled scenario exists"))
+        .unwrap_or_else(|e| panic!("parsing bundled '{name}': {e:#}"));
+    run_stampede(&scenario, &RunOptions::default(), workers)
+        .unwrap_or_else(|e| panic!("stampeding bundled '{name}': {e:#}"))
+}
 
 fn run_bundled(name: &str) -> ScenarioOutcome {
     let scenario = Scenario::parse(bundled(name).expect("bundled scenario exists"))
@@ -482,5 +491,82 @@ fn every_response_carries_a_complete_decision_trace() {
                 trace.render_text()
             );
         }
+    }
+}
+
+#[test]
+fn every_bundled_scenario_survives_a_four_worker_stampede() {
+    // The stampede bar: every bundled script replayed with four racing
+    // OS threads per same-instant window still produces a legal run —
+    // links drained, budgets within bounds, the accuracy floor held,
+    // one complete trace per response, and the stampede plane's live
+    // audits clean. Order-sensitive checkers are exempt by design (the
+    // sequential `run` stays their oracle), so assert they are absent
+    // rather than silently vacuous.
+    for name in bundled_names() {
+        let outcome = run_bundled_stampede(name, 4);
+        assert_passed(&outcome);
+        for check in
+            ["occupancy-drained", "budget-non-negative", "accuracy-floor", "trace-complete"]
+        {
+            let report = outcome
+                .report(check)
+                .unwrap_or_else(|| panic!("'{name}': stampede verdict lost '{check}'"));
+            assert!(report.checked >= 1, "'{name}': '{check}' never exercised");
+            assert!(
+                report.violations.is_empty(),
+                "'{name}' stampede violated '{check}': {:?}\n{}",
+                report.violations,
+                render_timeline(&outcome.timeline)
+            );
+        }
+        for audit in ["occupancy-balance", "one-leader-per-cohort", "budget-conservation"] {
+            let report = outcome
+                .report(audit)
+                .unwrap_or_else(|| panic!("'{name}': stampede verdict lost audit '{audit}'"));
+            assert!(report.checked >= 1, "'{name}': audit '{audit}' never exercised");
+            assert!(
+                report.violations.is_empty(),
+                "'{name}' stampede failed audit '{audit}': {:?}",
+                report.violations
+            );
+        }
+        for absent in
+            ["monotone-generations", "estimate-generation-guard", "piggyback-leader-match"]
+        {
+            assert!(
+                outcome.report(absent).is_none(),
+                "'{name}': order-sensitive '{absent}' must not judge a concurrent run"
+            );
+        }
+        let responses = outcome.responses().count();
+        assert!(responses >= 1, "'{name}': stampede served nothing");
+        assert_eq!(
+            outcome.traces.len(),
+            responses,
+            "'{name}': {} traces for {responses} stampeded responses",
+            outcome.traces.len()
+        );
+    }
+}
+
+#[test]
+fn stampede_keeps_declared_alert_conformance() {
+    // Alert conformance is order-insensitive (raise-after-fault,
+    // control pinned quiet), so it survives the concurrency exemption:
+    // every declaring scenario's stampede verdict carries the report,
+    // exercised and clean.
+    for name in ["convoy", "probe-famine", "stale-kb", "shard-churn", "flash-crowd"] {
+        let outcome = run_bundled_stampede(name, 4);
+        let report = outcome
+            .report("alert-conformance")
+            .unwrap_or_else(|| panic!("'{name}': stampede verdict lost alert conformance"));
+        assert!(report.checked >= 1, "'{name}': alert conformance never exercised");
+        assert!(
+            report.violations.is_empty(),
+            "'{name}' stampede alert conformance: {:?}\n{}",
+            report.violations,
+            dtopt::telemetry::render_alerts(&outcome.alerts)
+        );
     }
 }

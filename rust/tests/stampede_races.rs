@@ -1,0 +1,239 @@
+//! Seeded-schedule stress suite for the stampede plane's lock-sharding
+//! work: the races the N-worker runner makes real, each pinned down in
+//! isolation. Companion to `scenario_conformance.rs` (which races whole
+//! scenario replays) and `crate::stampede::conformance` (which defines
+//! what a legal interleaving is).
+
+use dtopt::fabric::{FabricConfig, ShardKey, ShardRouter};
+use dtopt::feedback::SnapshotSlot;
+use dtopt::logs::generate::{generate, GenConfig};
+use dtopt::netplane::LinkPlane;
+use dtopt::offline::kmeans::NativeAssign;
+use dtopt::offline::knowledge::KnowledgeBase;
+use dtopt::offline::pipeline::{build, OfflineConfig};
+use dtopt::probe::{FollowOutcome, Role, SingleFlight};
+use dtopt::sim::dataset::SizeClass;
+use dtopt::sim::testbed::{Testbed, TestbedId};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+fn tiny_kb(seed: u64) -> Arc<KnowledgeBase> {
+    let rows = generate(
+        &Testbed::xsede(),
+        &GenConfig { days: 2, arrivals_per_hour: 15.0, start_day: 0, seed },
+    );
+    Arc::new(build(&rows, &OfflineConfig::default(), &mut NativeAssign).unwrap())
+}
+
+/// Concurrent snapshot swaps vs pinned readers: a reader crowd hammers
+/// `resolve` through 300 publishes and must never observe a torn
+/// snapshot (a generation that was never published, an empty KB body)
+/// or a regressing generation sequence.
+#[test]
+fn snapshot_swap_under_pinned_readers_never_tears() {
+    let kb = tiny_kb(0x5EED_01);
+    let slot = Arc::new(SnapshotSlot::new(kb.clone()));
+    let publishes = 300u64;
+    let start = Arc::new(Barrier::new(7));
+    let readers: Vec<_> = (0..6)
+        .map(|_| {
+            let slot = slot.clone();
+            let start = start.clone();
+            std::thread::spawn(move || {
+                start.wait();
+                let mut last = 0u64;
+                let mut pinned = Vec::new();
+                loop {
+                    let snap = slot.resolve();
+                    assert!(snap.generation >= last, "generation regressed");
+                    assert!(snap.generation <= publishes, "torn: unpublished generation");
+                    assert!(!snap.kb.clusters.is_empty(), "torn: empty snapshot body");
+                    last = snap.generation;
+                    // Keep every 32nd snapshot pinned across later
+                    // publishes — pinned handles must stay intact.
+                    if last % 32 == 0 {
+                        pinned.push(snap);
+                    }
+                    if last == publishes {
+                        break;
+                    }
+                    std::hint::spin_loop();
+                }
+                for snap in &pinned {
+                    assert!(!snap.kb.clusters.is_empty(), "pinned snapshot body freed");
+                }
+            })
+        })
+        .collect();
+    start.wait();
+    for _ in 0..publishes {
+        slot.publish(kb.clone());
+    }
+    for reader in readers {
+        reader.join().expect("reader panicked");
+    }
+    assert_eq!(slot.generation(), publishes);
+}
+
+/// Two threads racing a cold key through the router must materialize
+/// exactly one shard: both land on the same `Arc`, and the map holds
+/// one live shard (the per-key guard's double-check, at the
+/// integration boundary).
+#[test]
+fn racing_routes_materialize_one_shard() {
+    let dir = std::env::temp_dir()
+        .join(format!("dtopt_stampede_race_route_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let router = Arc::new(
+        ShardRouter::open(&dir, tiny_kb(0x5EED_02), FabricConfig::default()).unwrap(),
+    );
+    let key = ShardKey::new(TestbedId::Xsede, SizeClass::Medium);
+    let start = Arc::new(Barrier::new(4));
+    let racers: Vec<_> = (0..4)
+        .map(|_| {
+            let router = router.clone();
+            let start = start.clone();
+            std::thread::spawn(move || {
+                start.wait();
+                router.route(key).shard.expect("route must yield a shard")
+            })
+        })
+        .collect();
+    let shards: Vec<_> = racers
+        .into_iter()
+        .map(|racer| racer.join().expect("racer panicked"))
+        .collect();
+    for other in &shards[1..] {
+        assert!(
+            Arc::ptr_eq(&shards[0], other),
+            "two racers received different shard instances for one key"
+        );
+    }
+    assert_eq!(router.live_shards().len(), 1, "the race built more than one shard");
+    router.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A worker that panics mid-transfer still drains its link occupancy:
+/// the `LinkLease` releases on unwind (Drop), so the link never leaks
+/// a phantom transfer. This is what makes `StampedeRunner`'s
+/// panic-propagation safe for the shared planes.
+#[test]
+fn link_lease_drop_on_panic_drains_occupancy() {
+    let links = Arc::new(LinkPlane::shared());
+    let survivor = links.clone().admit(TestbedId::Xsede, 1);
+    let panicker = {
+        let links = links.clone();
+        std::thread::spawn(move || {
+            let _lease = links.admit(TestbedId::Xsede, 2);
+            assert_eq!(2, 3, "worker dies mid-transfer, lease still held");
+        })
+    };
+    assert!(panicker.join().is_err(), "worker must have panicked");
+    // The panicker's lease unwound; only the survivor remains.
+    assert_eq!(links.active_total(), 1);
+    assert_eq!(links.occupancy(TestbedId::Xsede).transfers, 1);
+    drop(survivor);
+    assert_eq!(links.active_total(), 0, "occupancy must drain to zero");
+    assert_eq!(links.occupancy(TestbedId::Xsede).transfers, 0);
+}
+
+/// A single-flight cohort whose leader aborts wakes every follower:
+/// no deadlock, no bounded-wait expiry — every waiter sees `Aborted`
+/// well inside its timeout, and the key is immediately leadable again.
+#[test]
+fn leader_abort_wakes_all_followers() {
+    let flights = SingleFlight::new();
+    let key = ShardKey::new(TestbedId::Didclab, SizeClass::Large);
+    let guard = match flights.lead_or_join(key) {
+        Role::Leader(guard) => guard,
+        Role::Follower(_) => panic!("first contact must lead"),
+    };
+    let followers: Vec<_> = (0..8)
+        .map(|_| {
+            let flights = flights.clone();
+            std::thread::spawn(move || match flights.lead_or_join(key) {
+                Role::Leader(_) => panic!("flight is open; nobody else may lead"),
+                Role::Follower(flight) => flight.wait(Duration::from_secs(30)),
+            })
+        })
+        .collect();
+    // Hold the leader until the whole cohort is parked on the flight.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while flights.waiters(key) < 8 {
+        assert!(Instant::now() < deadline, "followers never reached the flight");
+        std::thread::yield_now();
+    }
+    let woke_by = Instant::now() + Duration::from_secs(10);
+    guard.abort();
+    for follower in followers {
+        let outcome = follower.join().expect("follower panicked");
+        assert_eq!(outcome, FollowOutcome::Aborted, "abort must wake, not time out");
+    }
+    assert!(
+        Instant::now() < woke_by,
+        "followers woke, but nowhere near the abort — bounded wait violated"
+    );
+    // The aborted flight is gone: the next contact leads again.
+    match flights.lead_or_join(key) {
+        Role::Leader(guard) => {
+            assert_eq!(flights.in_flight(), 1);
+            drop(guard);
+        }
+        Role::Follower(_) => panic!("aborted flight must not linger"),
+    }
+    assert_eq!(flights.in_flight(), 0, "dropping the guard clears the flight");
+}
+
+/// Dropping the leader's guard (a panicking leader) is an abort too —
+/// the unwind path a stampede worker takes when its ladder dies.
+#[test]
+fn leader_panic_unwind_aborts_the_flight() {
+    let flights = SingleFlight::new();
+    let key = ShardKey::new(TestbedId::DidclabToXsede, SizeClass::Small);
+    let parked = Arc::new(AtomicBool::new(false));
+    let follower = {
+        let flights = flights.clone();
+        let parked = parked.clone();
+        std::thread::spawn(move || {
+            let flight = loop {
+                match flights.lead_or_join(key) {
+                    Role::Follower(flight) => break flight,
+                    // The leader thread hasn't led yet; retry — the
+                    // guard from this accidental lead aborts on drop,
+                    // so the retry can lead or follow cleanly.
+                    Role::Leader(guard) => {
+                        drop(guard);
+                        std::thread::yield_now();
+                    }
+                }
+            };
+            parked.store(true, Ordering::Release);
+            flight.wait(Duration::from_secs(30))
+        })
+    };
+    let leader = {
+        let flights = flights.clone();
+        let parked = parked.clone();
+        std::thread::spawn(move || {
+            let _guard = loop {
+                match flights.lead_or_join(key) {
+                    Role::Leader(guard) => break guard,
+                    Role::Follower(_) => std::thread::yield_now(),
+                }
+            };
+            // Wait for the follower to park, then die with the guard
+            // held: the unwind must abort the flight.
+            let deadline = Instant::now() + Duration::from_secs(10);
+            while !parked.load(Ordering::Acquire) || flights.waiters(key) == 0 {
+                assert!(Instant::now() < deadline, "follower never parked");
+                std::thread::yield_now();
+            }
+            panic!("leader dies mid-ladder");
+        })
+    };
+    assert!(leader.join().is_err(), "leader must have panicked");
+    let outcome = follower.join().expect("follower panicked");
+    assert_eq!(outcome, FollowOutcome::Aborted, "unwound leader must wake followers");
+}
