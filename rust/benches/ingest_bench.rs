@@ -1,0 +1,29 @@
+//! Bench/regenerator for the zero-copy ingest bake-off: lazy JSONL
+//! field scanning and columnar `.dtc` partitions vs the tree-parsing
+//! baseline they replaced, plus the hard cross-format equivalence gate
+//! (scanned suff rows and the additively refreshed KB must be
+//! byte-identical across JSONL, columnar, and in-memory paths).
+//!
+//! Quick mode by default (CI smoke runs this; the equivalence gate is
+//! the pass/fail signal — timing ratios are advisory, machine load
+//! moves them). Set `DTOPT_FULL=1` or pass `--full` for the full-size
+//! history.
+
+use dtopt::experiments::ingest;
+
+fn main() {
+    let full = std::env::var("DTOPT_FULL").is_ok()
+        || std::env::args().any(|a| a == "--full");
+    let dir = std::env::temp_dir().join(format!("dtopt_ingest_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let start = std::time::Instant::now();
+    let result = ingest::run(!full, &dir).expect("ingest bake-off");
+    let elapsed = start.elapsed();
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("== Zero-copy ingest: scan/columnar vs tree parsing ==");
+    print!("{}", ingest::render(&result));
+    for (desc, ok) in ingest::headline_checks(&result) {
+        println!("[{}] {desc}", if ok { "ok" } else { "MISS" });
+    }
+    println!("\ntiming: bake-off {elapsed:.2?}");
+}

@@ -25,6 +25,7 @@
 
 use crate::fabric::ShardRouter;
 use crate::feedback::FeedbackStats;
+use crate::logs::store::IngestStats;
 use crate::netplane::{LinkPlane, PlaneMode};
 use crate::probe::ProbePlane;
 use crate::telemetry::{
@@ -137,6 +138,23 @@ impl Metrics {
         self.feedback.lock().unwrap().clone()
     }
 
+    /// Publish a log store's ingest counters as the `logs.ingest.*`
+    /// families (rows/bytes written, rows/bytes scanned, rows fully
+    /// parsed). Registry-only — the human `render` table is unchanged,
+    /// so the committed golden fixture stays byte-identical. All five
+    /// counters are totals over deterministic row/byte volumes (never
+    /// batch cadence or wall clock), so same-seed runs export the same
+    /// values.
+    pub fn attach_ingest(&self, stats: Arc<IngestStats>) {
+        self.registry.collect(move |s| {
+            s.counter("logs.ingest.rows_written", load(&stats.rows_written));
+            s.counter("logs.ingest.bytes_written", load(&stats.bytes_written));
+            s.counter("logs.ingest.rows_scanned", load(&stats.rows_scanned));
+            s.counter("logs.ingest.bytes_read", load(&stats.bytes_read));
+            s.counter("logs.ingest.rows_parsed", load(&stats.rows_parsed));
+        });
+    }
+
     /// Attach the knowledge fabric so `render` includes its per-shard
     /// table (generation, rows, queue depth, borrow status) and the
     /// registry publishes the `fabric.*` families.
@@ -153,6 +171,12 @@ impl Metrics {
             s.counter("fabric.tick_errors", load(&st.tick_errors));
             let shards = fabric.live_shards();
             s.gauge("fabric.live_shards", shards.len() as f64);
+            // Fabric-mode ingest totals: each shard owns a private log
+            // store, so the fleet-wide `logs.ingest.*` families are the
+            // sum over live shards (an evicted shard's contribution
+            // drops with it — its store counters restart on the next
+            // materialization anyway).
+            let mut ingest = [0u64; 5];
             for shard in shards {
                 let base = format!("fabric.shard.{}", shard.key.name());
                 s.gauge(&format!("{base}.native_rows"), shard.native_rows() as f64);
@@ -161,7 +185,18 @@ impl Metrics {
                     &format!("{base}.borrowed"),
                     if shard.is_borrowed() { 1.0 } else { 0.0 },
                 );
+                let st = shard.ingest_stats();
+                ingest[0] += load(&st.rows_written);
+                ingest[1] += load(&st.bytes_written);
+                ingest[2] += load(&st.rows_scanned);
+                ingest[3] += load(&st.bytes_read);
+                ingest[4] += load(&st.rows_parsed);
             }
+            s.counter("logs.ingest.rows_written", ingest[0]);
+            s.counter("logs.ingest.bytes_written", ingest[1]);
+            s.counter("logs.ingest.rows_scanned", ingest[2]);
+            s.counter("logs.ingest.bytes_read", ingest[3]);
+            s.counter("logs.ingest.rows_parsed", ingest[4]);
         });
     }
 
@@ -635,6 +670,26 @@ mod tests {
         let table = m.render();
         assert!(table.contains("knowledge service: generation 3"));
         assert!(table.contains("7 dropped at offer"));
+    }
+
+    #[test]
+    fn attach_ingest_exports_counters_without_touching_render() {
+        use crate::telemetry::registry::Value;
+
+        let m = Metrics::new();
+        m.record("ASM", 1000.0, 500.0, 4.0, 2, 10_000);
+        let before = m.render();
+        let stats = Arc::new(IngestStats::default());
+        stats.rows_written.store(12, Ordering::Relaxed);
+        stats.bytes_read.store(4096, Ordering::Relaxed);
+        m.attach_ingest(stats);
+        let snap = m.export_snapshot();
+        assert_eq!(snap.get("logs.ingest.rows_written"), Some(&Value::Counter(12)));
+        assert_eq!(snap.get("logs.ingest.bytes_read"), Some(&Value::Counter(4096)));
+        assert_eq!(snap.get("logs.ingest.rows_parsed"), Some(&Value::Counter(0)));
+        // Registry-only: the human table (and its golden fixture) is
+        // byte-identical with or without the attachment.
+        assert_eq!(m.render(), before);
     }
 
     #[test]

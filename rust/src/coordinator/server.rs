@@ -152,6 +152,9 @@ impl ResponseTap {
 struct FeedbackHandles {
     queue: IngestQueue,
     stats: Arc<FeedbackStats>,
+    /// The service's log-store ingest counters, attached to the
+    /// metrics registry as the `logs.ingest.*` families.
+    ingest: Arc<crate::logs::store::IngestStats>,
 }
 
 /// Where a worker's knowledge comes from.
@@ -257,7 +260,11 @@ impl Coordinator {
         history: Arc<Vec<TransferLog>>,
         config: CoordinatorConfig,
     ) -> Coordinator {
-        let handles = FeedbackHandles { queue: service.queue(), stats: service.stats.clone() };
+        let handles = FeedbackHandles {
+            queue: service.queue(),
+            stats: service.stats.clone(),
+            ingest: service.ingest_stats(),
+        };
         let knowledge =
             Knowledge::Global { slot: service.slot.clone(), feedback: Some(handles) };
         Coordinator::build(knowledge, history, config)
@@ -288,6 +295,7 @@ impl Coordinator {
         match &knowledge {
             Knowledge::Global { feedback: Some(fb), .. } => {
                 metrics.attach_feedback(fb.stats.clone());
+                metrics.attach_ingest(fb.ingest.clone());
             }
             Knowledge::Global { .. } => {}
             Knowledge::Fabric(router) => metrics.attach_fabric(router.clone()),

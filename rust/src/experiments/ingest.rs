@@ -1,0 +1,317 @@
+//! Ingest bake-off: the zero-copy scanning/columnar paths vs the
+//! tree-parsing baseline they replaced (DESIGN.md §Zero-copy ingest).
+//!
+//! Three measurements over one generated history:
+//!
+//! * **refresh read** — sufficient statistics per second pulled out of
+//!   the partitions: lazy field scanning ([`LogStore::scan_day`],
+//!   JSONL and columnar) vs the old path (parse every line into a
+//!   `Json` tree, build a `TransferLog`, project).
+//! * **flush write** — rows per second appended: the streaming
+//!   `write_jsonl` path (one reused buffer through a `BufWriter`) vs
+//!   the old per-day-batch tree serialization.
+//! * **format equivalence** — the part that is a hard error, not an
+//!   advisory check: the `SuffRow`s scanned back from JSONL and from
+//!   columnar partitions must be identical, and a knowledge base
+//!   additively refreshed from either must serialize to the *same
+//!   bytes* as one refreshed from the in-memory rows directly.
+//!
+//! Timing ratios are advisory headline checks (machine load moves
+//! them); CI's ingest-conformance job runs this in `--quick` mode for
+//! the equivalence gate only.
+
+use crate::logs::generate::{generate, GenConfig};
+use crate::logs::record::{SuffRow, TransferLog};
+use crate::logs::store::{LogStore, StoreFormat};
+use crate::offline::kmeans::NativeAssign;
+use crate::offline::pipeline::{build, update, update_suff, OfflineConfig};
+use crate::sim::testbed::Testbed;
+use crate::sim::traffic::DAY_S;
+use crate::util::json::Json;
+use anyhow::{ensure, Context, Result};
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+/// One bake-off run's measurements.
+#[derive(Debug, Clone)]
+pub struct IngestResult {
+    pub rows: usize,
+    pub partitions: usize,
+    /// Suff-stat rows per second, lazy scan over JSONL partitions.
+    pub scan_jsonl_rows_per_s: f64,
+    /// Suff-stat rows per second, scan over columnar partitions.
+    pub scan_columnar_rows_per_s: f64,
+    /// Suff-stat rows per second, tree-parsing baseline.
+    pub parse_rows_per_s: f64,
+    /// Rows per second through the streaming append path.
+    pub stream_write_rows_per_s: f64,
+    /// Rows per second through the old tree-serializing append.
+    pub tree_write_rows_per_s: f64,
+    pub jsonl_bytes: u64,
+    pub columnar_bytes: u64,
+    /// Set only after the hard equivalence gate passed.
+    pub formats_equivalent: bool,
+}
+
+impl IngestResult {
+    pub fn read_speedup(&self) -> f64 {
+        self.scan_jsonl_rows_per_s / self.parse_rows_per_s
+    }
+
+    pub fn columnar_speedup(&self) -> f64 {
+        self.scan_columnar_rows_per_s / self.parse_rows_per_s
+    }
+
+    pub fn write_speedup(&self) -> f64 {
+        self.stream_write_rows_per_s / self.tree_write_rows_per_s
+    }
+}
+
+/// Best-of-`reps` wall time for `work`, which must return a finite
+/// checksum (consumed so the measured loop cannot be optimized away).
+fn best_of(reps: usize, mut work: impl FnMut() -> Result<f64>) -> Result<f64> {
+    let mut best = f64::INFINITY;
+    let mut checksum = 0.0;
+    for _ in 0..reps.max(1) {
+        let start = Instant::now();
+        checksum = work()?;
+        best = best.min(start.elapsed().as_secs_f64());
+    }
+    ensure!(checksum.is_finite(), "benchmark checksum diverged");
+    Ok(best.max(1e-9))
+}
+
+/// The old read path, reconstructed as the baseline: every line becomes
+/// a `Json` tree and an owned `TransferLog` before projection.
+fn parse_baseline(store: &LogStore) -> Result<f64> {
+    let mut sum = 0.0;
+    for day in store.days()? {
+        let path = store.dir.join(format!("day_{day:05}.jsonl"));
+        let text = fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let v = Json::parse(line).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+            let row = TransferLog::from_json(&v).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+            sum += row.suff().throughput_mbps;
+        }
+    }
+    Ok(sum)
+}
+
+/// The scanning read path under test: borrowed views, suff-stat fields
+/// only, no tree, no per-row allocation.
+fn scan_suff_sum(store: &LogStore) -> Result<f64> {
+    let mut sum = 0.0;
+    for day in store.days()? {
+        let scan = store.scan_day(day)?;
+        for view in scan.rows() {
+            sum += view?.throughput_mbps;
+        }
+    }
+    Ok(sum)
+}
+
+/// The old write path, reconstructed as the baseline: one `Json` tree
+/// per row, serialized into a per-day-batch `String`, appended whole.
+fn tree_write_baseline(dir: &Path, rows: &[TransferLog]) -> Result<f64> {
+    fs::create_dir_all(dir)?;
+    let mut by_day: std::collections::BTreeMap<u64, Vec<&TransferLog>> = Default::default();
+    for row in rows {
+        by_day.entry((row.t_start / DAY_S).floor() as u64).or_default().push(row);
+    }
+    let mut bytes = 0usize;
+    for (day, day_rows) in by_day {
+        let mut batch = String::new();
+        for row in day_rows {
+            batch.push_str(&row.to_json().to_string_compact());
+            batch.push('\n');
+        }
+        bytes += batch.len();
+        let mut file = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(dir.join(format!("day_{day:05}.jsonl")))?;
+        file.write_all(batch.as_bytes())?;
+    }
+    Ok(bytes as f64)
+}
+
+fn dir_bytes(dir: &Path, ext: &str) -> Result<u64> {
+    let mut total = 0;
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        if entry.path().extension().and_then(|e| e.to_str()) == Some(ext) {
+            total += entry.metadata()?.len();
+        }
+    }
+    Ok(total)
+}
+
+/// Run the bake-off in `dir` (created; caller removes). `quick` keeps
+/// the history small enough for CI smoke.
+pub fn run(quick: bool, dir: &Path) -> Result<IngestResult> {
+    let (days, rate, reps) = if quick { (2, 60.0, 3) } else { (6, 150.0, 5) };
+    let rows = generate(
+        &Testbed::xsede(),
+        &GenConfig { days, arrivals_per_hour: rate, start_day: 0, seed: 0x1A6E57 },
+    );
+    ensure!(rows.len() > 100, "generator produced too few rows ({})", rows.len());
+
+    // Reference stores, one per format, each holding the full history.
+    let jsonl = LogStore::open(dir.join("jsonl"))?;
+    jsonl.append(&rows)?;
+    let columnar = LogStore::open_with_format(dir.join("columnar"), StoreFormat::Columnar)?;
+    columnar.append(&rows)?;
+    let partitions = jsonl.days()?.len();
+
+    // --- Reads: identical work (sum one suff field over every row).
+    let parse_s = best_of(reps, || parse_baseline(&jsonl))?;
+    let scan_jsonl_s = best_of(reps, || scan_suff_sum(&jsonl))?;
+    let scan_columnar_s = best_of(reps, || scan_suff_sum(&columnar))?;
+
+    // --- Writes: fresh directory per repetition, same rows.
+    let mut wi = 0usize;
+    let stream_s = best_of(reps, || {
+        wi += 1;
+        let d = dir.join(format!("w_stream_{wi}"));
+        let _ = fs::remove_dir_all(&d);
+        let store = LogStore::open(&d)?;
+        store.append(&rows)?;
+        Ok(rows.len() as f64)
+    })?;
+    let mut ti = 0usize;
+    let tree_s = best_of(reps, || {
+        ti += 1;
+        let d = dir.join(format!("w_tree_{ti}"));
+        let _ = fs::remove_dir_all(&d);
+        tree_write_baseline(&d, &rows)
+    })?;
+
+    // --- Equivalence gate (hard): scanned suff rows agree across
+    // formats, and a KB refreshed from either matches — byte for byte —
+    // one refreshed from the in-memory rows.
+    let split = rows.len() * 3 / 5;
+    let (history, tail) = rows.split_at(split);
+    let base = build(history, &OfflineConfig::default(), &mut NativeAssign)?;
+    let first_tail_day = (tail[0].t_start / DAY_S).floor() as u64;
+    let last_day = *jsonl.days()?.last().unwrap();
+    let collect_tail = |store: &LogStore| -> Result<Vec<SuffRow>> {
+        let mut out = Vec::new();
+        for (day, scan) in store.scan_range(first_tail_day, last_day + 1)? {
+            // The split day holds both history and tail rows; skip the
+            // history prefix so every path folds in the same tail.
+            let skip = if day == first_tail_day {
+                store.row_count(day)? - tail.iter().filter(|r| (r.t_start / DAY_S).floor() as u64 == day).count()
+            } else {
+                0
+            };
+            for view in scan.rows_from(skip) {
+                out.push(view?.suff());
+            }
+        }
+        Ok(out)
+    };
+    let suff_jsonl = collect_tail(&jsonl)?;
+    let suff_columnar = collect_tail(&columnar)?;
+    ensure!(suff_jsonl.len() == tail.len(), "tail row count mismatch over JSONL");
+    ensure!(suff_jsonl == suff_columnar, "scanned suff rows differ between formats");
+    let mut kb_mem = base.clone();
+    update(&mut kb_mem, tail)?;
+    let mut kb_jsonl = base.clone();
+    update_suff(&mut kb_jsonl, &suff_jsonl)?;
+    let mut kb_columnar = base.clone();
+    update_suff(&mut kb_columnar, &suff_columnar)?;
+    let mem_bytes = kb_mem.to_json().to_string_compact();
+    ensure!(
+        mem_bytes == kb_jsonl.to_json().to_string_compact(),
+        "KB refreshed from scanned JSONL diverged from the in-memory refresh"
+    );
+    ensure!(
+        mem_bytes == kb_columnar.to_json().to_string_compact(),
+        "KB refreshed from columnar partitions diverged from the in-memory refresh"
+    );
+
+    let n = rows.len() as f64;
+    Ok(IngestResult {
+        rows: rows.len(),
+        partitions,
+        scan_jsonl_rows_per_s: n / scan_jsonl_s,
+        scan_columnar_rows_per_s: n / scan_columnar_s,
+        parse_rows_per_s: n / parse_s,
+        stream_write_rows_per_s: n / stream_s,
+        tree_write_rows_per_s: n / tree_s,
+        jsonl_bytes: dir_bytes(&jsonl.dir, "jsonl")?,
+        columnar_bytes: dir_bytes(&columnar.dir, "dtc")?,
+        formats_equivalent: true,
+    })
+}
+
+pub fn render(r: &IngestResult) -> String {
+    format!(
+        "ingest bake-off: {} rows across {} day partitions\n\
+         read (suff stats/s):  parse {:>12.0}   scan/jsonl {:>12.0} ({:.1}x)   scan/columnar {:>12.0} ({:.1}x)\n\
+         write (rows/s):       tree  {:>12.0}   stream     {:>12.0} ({:.1}x)\n\
+         bytes on disk:        jsonl {:>12}   columnar   {:>12} ({:.2}x smaller)\n\
+         format equivalence:   suff rows and refreshed KB byte-identical across jsonl/columnar/in-memory\n",
+        r.rows,
+        r.partitions,
+        r.parse_rows_per_s,
+        r.scan_jsonl_rows_per_s,
+        r.read_speedup(),
+        r.scan_columnar_rows_per_s,
+        r.columnar_speedup(),
+        r.tree_write_rows_per_s,
+        r.stream_write_rows_per_s,
+        r.write_speedup(),
+        r.jsonl_bytes,
+        r.columnar_bytes,
+        r.jsonl_bytes as f64 / r.columnar_bytes.max(1) as f64,
+    )
+}
+
+pub fn headline_checks(r: &IngestResult) -> Vec<(String, bool)> {
+    vec![
+        (
+            format!("lazy JSONL scan ≥10x the tree-parsing read (got {:.1}x)", r.read_speedup()),
+            r.read_speedup() >= 10.0,
+        ),
+        (
+            format!("columnar scan ≥10x the tree-parsing read (got {:.1}x)", r.columnar_speedup()),
+            r.columnar_speedup() >= 10.0,
+        ),
+        (
+            format!("streaming append ≥3x the tree-serializing write (got {:.1}x)", r.write_speedup()),
+            r.write_speedup() >= 3.0,
+        ),
+        (
+            "suff rows and refreshed KB byte-identical across formats".to_string(),
+            r.formats_equivalent,
+        ),
+        (
+            format!(
+                "columnar partitions smaller than JSONL ({} vs {} bytes)",
+                r.columnar_bytes, r.jsonl_bytes
+            ),
+            r.columnar_bytes < r.jsonl_bytes,
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_passes_the_equivalence_gate() {
+        let dir = std::env::temp_dir().join(format!("dtopt_ingest_exp_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let r = run(true, &dir).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(r.formats_equivalent);
+        assert!(r.rows > 100);
+        assert_eq!(headline_checks(&r).len(), 5);
+        let text = render(&r);
+        assert!(text.contains("format equivalence"), "{text}");
+    }
+}

@@ -14,7 +14,9 @@
 //! identical mutual contention, and the stampede bake-off
 //! (`stampede`): the concurrent N-worker runner swept 1→32 with the
 //! legal-interleaving conformance audits and a strict sequential-match
-//! pass against the deterministic oracle.
+//! pass against the deterministic oracle, and the ingest bake-off
+//! (`ingest`): the zero-copy scanning/columnar log paths vs the
+//! tree-parsing baseline, with a hard cross-format equivalence gate.
 //! Table 1 is `sim::testbed::Testbed::table1()`.
 
 pub mod common;
@@ -25,6 +27,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fleet;
+pub mod ingest;
 pub mod live;
 pub mod rush;
 pub mod stampede;

@@ -184,6 +184,13 @@ impl Shard {
         self.initial_rows + self.stats.rows_flushed.load(Ordering::Acquire)
     }
 
+    /// The shard store's ingest counters (rows/bytes written, scanned,
+    /// parsed) since materialization — the fabric metrics collector
+    /// sums these over live shards into the `logs.ingest.*` families.
+    pub fn ingest_stats(&self) -> Arc<crate::logs::store::IngestStats> {
+        self.store.stats()
+    }
+
     /// Offer one completed-transfer row to the shard's ingest queue.
     /// Non-blocking; after shutdown (eviction) the row is dropped and
     /// counted, same as a full queue.

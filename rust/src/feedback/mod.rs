@@ -40,7 +40,7 @@ pub use policy::{RefreshPolicy, RefreshReason};
 pub use refresher::Refresher;
 pub use snapshot::{KbSnapshot, SnapshotSlot};
 
-use crate::logs::store::LogStore;
+use crate::logs::store::{IngestStats, LogStore};
 use crate::offline::knowledge::KnowledgeBase;
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -161,6 +161,7 @@ pub struct FeedbackService {
     ingest_worker: ingest::IngestWorker,
     refresher: Option<Refresher>,
     closing: Arc<AtomicBool>,
+    ingest_stats: Arc<IngestStats>,
 }
 
 impl FeedbackService {
@@ -176,6 +177,7 @@ impl FeedbackService {
         let stats = Arc::new(FeedbackStats::default());
         let closing = Arc::new(AtomicBool::new(false));
         let store = Arc::new(store);
+        let ingest_stats = store.stats();
         let (queue, ingest_worker) =
             ingest::spawn(store.clone(), stats.clone(), closing.clone(), config.ingest);
         let engine = Arc::new(refresher::RefreshEngine::new(
@@ -189,12 +191,27 @@ impl FeedbackService {
         } else {
             None
         };
-        Ok(FeedbackService { slot, stats, queue, engine, ingest_worker, refresher, closing })
+        Ok(FeedbackService {
+            slot,
+            stats,
+            queue,
+            engine,
+            ingest_worker,
+            refresher,
+            closing,
+            ingest_stats,
+        })
     }
 
     /// A producer handle for the coordinator's workers.
     pub fn queue(&self) -> IngestQueue {
         self.queue.clone()
+    }
+
+    /// The backing store's ingest counters (`logs.ingest.*` families) —
+    /// the coordinator wires these into its telemetry registry.
+    pub fn ingest_stats(&self) -> Arc<IngestStats> {
+        self.ingest_stats.clone()
     }
 
     /// Current knowledge-base generation.

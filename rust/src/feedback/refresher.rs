@@ -9,9 +9,9 @@
 use super::policy::{RefreshPolicy, RefreshReason};
 use super::snapshot::SnapshotSlot;
 use super::FeedbackStats;
-use crate::logs::record::TransferLog;
+use crate::logs::record::SuffRow;
 use crate::logs::store::LogStore;
-use crate::offline::pipeline::update;
+use crate::offline::pipeline::update_suff;
 use anyhow::Result;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -116,19 +116,28 @@ impl RefreshEngine {
 
     fn refresh_locked(&self, state: &mut EngineState) -> Result<Option<u64>> {
         // Gather every row past the cursor, partition by partition —
-        // old partitions whose length is unchanged are never re-read
-        // into the analysis (additivity). Nothing is committed to the
-        // cursor or the signal baselines until the update succeeds, so
-        // a failed refresh leaves every row pending for the next tick
-        // instead of silently skipping it.
-        let mut fresh: Vec<TransferLog> = Vec::new();
+        // old partitions whose length is unchanged are never re-fed
+        // into the analysis (additivity). Each partition is walked once
+        // by the lazy scanner: rows before the cursor are skipped
+        // without field extraction, rows after it become `Copy`
+        // sufficient-statistics projections — no `Json` tree, no
+        // per-row allocation (this sweep used to tree-parse every row
+        // of every partition on every refresh). Nothing is committed to
+        // the cursor or the signal baselines until the update succeeds,
+        // so a failed refresh leaves every row pending for the next
+        // tick instead of silently skipping it.
+        let mut fresh: Vec<SuffRow> = Vec::new();
         let mut advanced: Vec<(u64, usize)> = Vec::new();
         for day in self.store.days()? {
             let seen = state.cursor.get(&day).copied().unwrap_or(0);
-            let rows = self.store.read_day(day)?;
-            if rows.len() > seen {
-                fresh.extend_from_slice(&rows[seen..]);
-                advanced.push((day, rows.len()));
+            let scan = self.store.scan_day(day)?;
+            let before = fresh.len();
+            for view in scan.rows_from(seen) {
+                fresh.push(view?.suff());
+            }
+            let consumed = fresh.len() - before;
+            if consumed > 0 {
+                advanced.push((day, seen + consumed));
             }
         }
         if fresh.is_empty() {
@@ -143,7 +152,7 @@ impl RefreshEngine {
         let started = Instant::now();
         let pinned = self.slot.resolve();
         let mut kb = (*pinned.kb).clone();
-        update(&mut kb, &fresh)?;
+        update_suff(&mut kb, &fresh)?;
         let generation = self.slot.publish(Arc::new(kb));
         for (day, consumed) in advanced {
             state.cursor.insert(day, consumed);
@@ -210,6 +219,7 @@ impl Drop for Refresher {
 mod tests {
     use super::*;
     use crate::logs::generate::{generate, GenConfig};
+    use crate::logs::record::TransferLog;
     use crate::offline::kmeans::NativeAssign;
     use crate::offline::pipeline::{build, OfflineConfig};
     use crate::sim::testbed::Testbed;

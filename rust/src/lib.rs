@@ -40,6 +40,27 @@
 //!   wall-clock period, and the drift-rate signal from the online
 //!   monitor's mid-transfer re-tunes.
 //!
+//! ## Zero-copy ingest (`crate::logs`)
+//!
+//! Every loop above bottoms out in [`logs::LogStore`] day partitions,
+//! so their parse cost bounds the whole service. The ingest layer
+//! keeps that cost off the hot paths: [`logs::scan`] is a lazy JSONL
+//! scanner yielding borrowed [`logs::LogRowView`]s — one pass over the
+//! partition bytes, sufficient-statistics fields only, no `Json` tree,
+//! no per-row allocation, in exact (property-tested) agreement with
+//! the tree parser on both values and errors — and [`logs::columnar`]
+//! is a compact little-endian columnar partition format
+//! (`day_<n>.dtc`, selected via [`logs::StoreFormat`]) that stores f64
+//! bit patterns verbatim. Mixed-format directories dispatch per
+//! partition by extension; `dtopt logs compact <dir>` migrates in
+//! place (idempotent, verified before originals are removed). The
+//! refresher and fabric consume partitions through
+//! `offline::pipeline::update_suff`, whose result is byte-identical to
+//! the owned-row `update` path — `tests/ingest_conformance.rs`, the
+//! `ingest` experiment, and CI's ingest-conformance job enforce the
+//! equivalence; the store's `IngestStats` export as the
+//! `logs.ingest.*` registry families.
+//!
 //! ## The sharded knowledge fabric (`crate::fabric`)
 //!
 //! One global knowledge base cannot scale the loop to many endpoint

@@ -1,0 +1,497 @@
+//! Compact columnar log partitions (`day_<n>.dtc`) — the write-side half
+//! of the zero-copy ingest layer.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! file   := "DTC1" group*
+//! group  := rows:u32  payload_len:u32  payload
+//! payload:= dict  col(id,u64) col(t,f64) col(rtt_ms,f64) col(bw_mbps,f64)
+//!           col(buf_mb,f64) col(disk_mbps,f64) col(avg_file_mb,f64)
+//!           col(num_files,u64) col(cc,u32) col(p,u32) col(pp,u32)
+//!           col(th_mbps,f64) col(dur_s,f64) col(contend[0..5],f64)×5
+//!           col(contend_streams,u32) col(pair_idx,u16)
+//! dict   := count:u16 { len:u16 bytes }*count      (sorted, deduped pairs)
+//! col    := value*rows, contiguous                  (per-column slices)
+//! ```
+//!
+//! Each `append` batch becomes one self-contained row group, so the
+//! format keeps `LogStore::append`'s O(batch) additive property — the
+//! paper's "we do not need to combine it with previous logs" — while a
+//! reader decodes fields with pure offset arithmetic over per-column
+//! slices. `f64` bit patterns are preserved exactly (the JSONL writer
+//! also guarantees f64 text round-trip), which is what makes
+//! "byte-identical sufficient statistics across formats" a theorem
+//! rather than a hope. Row count queries read only the 8-byte group
+//! headers.
+
+use super::record::TransferLog;
+use super::scan::LogRowView;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+/// File magic for columnar partitions, version 1.
+pub const MAGIC: &[u8; 4] = b"DTC1";
+
+/// Partition filename extension (the store dispatches readers on it).
+pub const EXT: &str = "dtc";
+
+/// Column widths in payload order (id .. pair_idx). `num_files` is a
+/// u64 column; `pair_idx` indexes the group dictionary.
+const COL_WIDTHS: [usize; 20] = [8, 8, 8, 8, 8, 8, 8, 8, 4, 4, 4, 8, 8, 8, 8, 8, 8, 8, 4, 2];
+const COL_ID: usize = 0;
+const COL_T: usize = 1;
+const COL_RTT: usize = 2;
+const COL_BW: usize = 3;
+const COL_BUF: usize = 4;
+const COL_DISK: usize = 5;
+const COL_AVG_FILE: usize = 6;
+const COL_NUM_FILES: usize = 7;
+const COL_CC: usize = 8;
+const COL_P: usize = 9;
+const COL_PP: usize = 10;
+const COL_TH: usize = 11;
+const COL_DUR: usize = 12;
+const COL_CONTEND0: usize = 13;
+const COL_STREAMS: usize = 18;
+const COL_PAIR_IDX: usize = 19;
+
+fn row_bytes() -> usize {
+    COL_WIDTHS.iter().sum()
+}
+
+// ----------------------------------------------------------------------
+// Writer
+// ----------------------------------------------------------------------
+
+/// Buffered appender for one columnar partition file: encodes each batch
+/// into a reused scratch buffer and writes it as one row group.
+pub struct PartitionWriter {
+    file: BufWriter<fs::File>,
+    scratch: Vec<u8>,
+}
+
+impl PartitionWriter {
+    /// Open (creating if absent) in append mode; a new or empty file
+    /// gets the magic first.
+    pub fn open_append(path: &Path) -> Result<PartitionWriter> {
+        let file = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening {path:?}"))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat {path:?}"))?
+            .len();
+        let mut w = PartitionWriter { file: BufWriter::new(file), scratch: Vec::new() };
+        if len == 0 {
+            w.file
+                .write_all(MAGIC)
+                .with_context(|| format!("writing magic to {path:?}"))?;
+        }
+        Ok(w)
+    }
+
+    /// Append one batch as a row group. Returns the bytes written.
+    pub fn write_group(&mut self, rows: &[&TransferLog]) -> Result<u64> {
+        if rows.is_empty() {
+            return Ok(0);
+        }
+        ensure!(rows.len() <= u32::MAX as usize, "row group too large");
+        self.scratch.clear();
+        encode_group(rows, &mut self.scratch)?;
+        let header_rows = (rows.len() as u32).to_le_bytes();
+        let header_len = (self.scratch.len() as u32).to_le_bytes();
+        self.file.write_all(&header_rows).context("writing columnar group header")?;
+        self.file.write_all(&header_len).context("writing columnar group header")?;
+        self.file.write_all(&self.scratch).context("writing columnar group payload")?;
+        Ok(8 + self.scratch.len() as u64)
+    }
+
+    /// Flush the underlying buffer (dropping without finishing loses
+    /// nothing on success paths but swallows flush errors).
+    pub fn finish(mut self) -> Result<()> {
+        self.file.flush().context("flushing columnar partition")?;
+        Ok(())
+    }
+}
+
+/// Encode one row group payload (dict + columns) into `out`.
+fn encode_group(rows: &[&TransferLog], out: &mut Vec<u8>) -> Result<()> {
+    // Dictionary: sorted deduped pair strings, u16-indexed.
+    let mut dict: BTreeMap<&str, u16> = BTreeMap::new();
+    for row in rows {
+        let next = dict.len();
+        dict.entry(row.pair.as_str()).or_insert_with(|| next as u16);
+    }
+    ensure!(dict.len() <= u16::MAX as usize, "too many distinct pairs in one batch");
+    // BTreeMap iteration is sorted; renumber in that order for a
+    // deterministic file regardless of row order within the batch.
+    let mut idx = 0u16;
+    for v in dict.values_mut() {
+        *v = idx;
+        idx += 1;
+    }
+    for entry in dict.keys() {
+        ensure!(entry.len() <= u16::MAX as usize, "pair string too long");
+    }
+    out.extend_from_slice(&(dict.len() as u16).to_le_bytes());
+    for entry in dict.keys() {
+        out.extend_from_slice(&(entry.len() as u16).to_le_bytes());
+        out.extend_from_slice(entry.as_bytes());
+    }
+    // Columns, each contiguous.
+    for row in rows {
+        out.extend_from_slice(&row.id.to_le_bytes());
+    }
+    for col in [COL_T, COL_RTT, COL_BW, COL_BUF, COL_DISK, COL_AVG_FILE] {
+        for row in rows {
+            out.extend_from_slice(&f64_field(row, col).to_le_bytes());
+        }
+    }
+    for row in rows {
+        out.extend_from_slice(&row.num_files.to_le_bytes());
+    }
+    for row in rows {
+        out.extend_from_slice(&row.cc.to_le_bytes());
+    }
+    for row in rows {
+        out.extend_from_slice(&row.p.to_le_bytes());
+    }
+    for row in rows {
+        out.extend_from_slice(&row.pp.to_le_bytes());
+    }
+    for col in [COL_TH, COL_DUR] {
+        for row in rows {
+            out.extend_from_slice(&f64_field(row, col).to_le_bytes());
+        }
+    }
+    for c in 0..5 {
+        for row in rows {
+            out.extend_from_slice(&row.contending_mbps[c].to_le_bytes());
+        }
+    }
+    for row in rows {
+        out.extend_from_slice(&row.contending_streams.to_le_bytes());
+    }
+    for row in rows {
+        out.extend_from_slice(&dict[row.pair.as_str()].to_le_bytes());
+    }
+    Ok(())
+}
+
+fn f64_field(row: &TransferLog, col: usize) -> f64 {
+    match col {
+        COL_T => row.t_start,
+        COL_RTT => row.rtt_ms,
+        COL_BW => row.bandwidth_mbps,
+        COL_BUF => row.tcp_buffer_mb,
+        COL_DISK => row.disk_mbps,
+        COL_AVG_FILE => row.avg_file_mb,
+        COL_TH => row.throughput_mbps,
+        COL_DUR => row.duration_s,
+        _ => unreachable!("non-f64 column {col}"),
+    }
+}
+
+// ----------------------------------------------------------------------
+// Reader
+// ----------------------------------------------------------------------
+
+/// One decoded row group: absolute column base offsets into the
+/// partition buffer plus the validated dictionary spans.
+struct Group {
+    rows: usize,
+    /// Absolute byte spans of the dictionary strings (validated UTF-8).
+    dict: Vec<(usize, usize)>,
+    /// Absolute base offset of each column, payload order.
+    col_off: [usize; 20],
+}
+
+/// A fully validated columnar partition held in memory: row access is
+/// offset arithmetic over per-column slices, no per-row allocation.
+pub struct ColumnarPartition {
+    bytes: Vec<u8>,
+    groups: Vec<Group>,
+    total_rows: usize,
+}
+
+impl ColumnarPartition {
+    /// Parse and validate a partition buffer: magic, group framing,
+    /// payload sizes, dictionary UTF-8, and pair indexes. Everything
+    /// after this is infallible slice reads.
+    pub fn parse(bytes: Vec<u8>) -> Result<ColumnarPartition> {
+        ensure!(bytes.len() >= 4 && &bytes[..4] == MAGIC, "bad columnar magic");
+        let mut groups = Vec::new();
+        let mut total_rows = 0usize;
+        let mut pos = 4usize;
+        while pos < bytes.len() {
+            ensure!(pos + 8 <= bytes.len(), "truncated group header at byte {pos}");
+            let rows = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+            let payload_len =
+                u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap()) as usize;
+            pos += 8;
+            ensure!(pos + payload_len <= bytes.len(), "truncated group payload at byte {pos}");
+            let payload_end = pos + payload_len;
+            // Dictionary.
+            ensure!(payload_len >= 2, "truncated dictionary at byte {pos}");
+            let dict_count = u16::from_le_bytes(bytes[pos..pos + 2].try_into().unwrap()) as usize;
+            let mut dpos = pos + 2;
+            let mut dict = Vec::with_capacity(dict_count);
+            for _ in 0..dict_count {
+                ensure!(dpos + 2 <= payload_end, "truncated dictionary entry");
+                let len =
+                    u16::from_le_bytes(bytes[dpos..dpos + 2].try_into().unwrap()) as usize;
+                dpos += 2;
+                ensure!(dpos + len <= payload_end, "truncated dictionary entry");
+                std::str::from_utf8(&bytes[dpos..dpos + len])
+                    .context("invalid utf8 in pair dictionary")?;
+                dict.push((dpos, len));
+                dpos += len;
+            }
+            // Columns.
+            ensure!(
+                payload_end - dpos == rows * row_bytes(),
+                "group payload size mismatch: {} column bytes for {rows} rows",
+                payload_end - dpos
+            );
+            let mut col_off = [0usize; 20];
+            let mut off = dpos;
+            for (i, w) in COL_WIDTHS.iter().enumerate() {
+                col_off[i] = off;
+                off += w * rows;
+            }
+            let group = Group { rows, dict, col_off };
+            // Validate pair indexes once so row access can't fail.
+            for r in 0..rows {
+                let pi = read_u16(&bytes, group.col_off[COL_PAIR_IDX] + 2 * r) as usize;
+                ensure!(pi < dict_count, "pair index {pi} out of range (dict {dict_count})");
+            }
+            total_rows += rows;
+            groups.push(group);
+            pos = payload_end;
+        }
+        Ok(ColumnarPartition { bytes, groups, total_rows })
+    }
+
+    pub fn row_count(&self) -> usize {
+        self.total_rows
+    }
+
+    /// Borrow row `i` (0-based over the whole partition, groups in file
+    /// order).
+    pub fn view(&self, mut i: usize) -> Option<LogRowView<'_>> {
+        for g in &self.groups {
+            if i < g.rows {
+                return Some(self.view_in(g, i));
+            }
+            i -= g.rows;
+        }
+        None
+    }
+
+    fn view_in(&self, g: &Group, r: usize) -> LogRowView<'_> {
+        let b = &self.bytes;
+        let f = |col: usize| read_f64(b, g.col_off[col] + 8 * r);
+        let pi = read_u16(b, g.col_off[COL_PAIR_IDX] + 2 * r) as usize;
+        let (doff, dlen) = g.dict[pi];
+        let pair = std::str::from_utf8(&b[doff..doff + dlen]).expect("dict validated at parse");
+        LogRowView::from_columns(
+            read_u64(b, g.col_off[COL_ID] + 8 * r),
+            f(COL_T),
+            f(COL_RTT),
+            f(COL_BW),
+            f(COL_BUF),
+            f(COL_DISK),
+            f(COL_AVG_FILE),
+            read_u64(b, g.col_off[COL_NUM_FILES] + 8 * r),
+            read_u32(b, g.col_off[COL_CC] + 4 * r),
+            read_u32(b, g.col_off[COL_P] + 4 * r),
+            read_u32(b, g.col_off[COL_PP] + 4 * r),
+            f(COL_TH),
+            f(COL_DUR),
+            [
+                read_f64(b, g.col_off[COL_CONTEND0] + 8 * r),
+                read_f64(b, g.col_off[COL_CONTEND0 + 1] + 8 * r),
+                read_f64(b, g.col_off[COL_CONTEND0 + 2] + 8 * r),
+                read_f64(b, g.col_off[COL_CONTEND0 + 3] + 8 * r),
+                read_f64(b, g.col_off[COL_CONTEND0 + 4] + 8 * r),
+            ],
+            read_u32(b, g.col_off[COL_STREAMS] + 4 * r),
+            pair,
+        )
+    }
+
+    /// Iterate `(group_index, row_in_group)` pairs starting at global
+    /// row `skip` — the store's cursor-skip path.
+    pub(crate) fn cursor_at(&self, skip: usize) -> (usize, usize) {
+        let mut remaining = skip;
+        for (gi, g) in self.groups.iter().enumerate() {
+            if remaining < g.rows {
+                return (gi, remaining);
+            }
+            remaining -= g.rows;
+        }
+        (self.groups.len(), 0)
+    }
+
+    pub(crate) fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub(crate) fn group_rows(&self, gi: usize) -> usize {
+        self.groups[gi].rows
+    }
+
+    pub(crate) fn view_at(&self, gi: usize, r: usize) -> LogRowView<'_> {
+        self.view_in(&self.groups[gi], r)
+    }
+}
+
+fn read_u16(b: &[u8], off: usize) -> u16 {
+    u16::from_le_bytes(b[off..off + 2].try_into().unwrap())
+}
+
+fn read_u32(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(b[off..off + 4].try_into().unwrap())
+}
+
+fn read_u64(b: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(b[off..off + 8].try_into().unwrap())
+}
+
+fn read_f64(b: &[u8], off: usize) -> f64 {
+    f64::from_le_bytes(b[off..off + 8].try_into().unwrap())
+}
+
+/// Row count from group headers only — no payload is read.
+pub fn row_count_file(path: &Path) -> Result<usize> {
+    let mut file = fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut magic = [0u8; 4];
+    file.read_exact(&mut magic)
+        .with_context(|| format!("reading magic of {path:?}"))?;
+    ensure!(&magic == MAGIC, "bad columnar magic in {path:?}");
+    let mut count = 0usize;
+    let mut header = [0u8; 8];
+    loop {
+        match file.read_exact(&mut header) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => bail!("reading group header of {path:?}: {e}"),
+        }
+        count += u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
+        let payload_len = u32::from_le_bytes(header[4..].try_into().unwrap());
+        file.seek(SeekFrom::Current(payload_len as i64))
+            .with_context(|| format!("seeking past group in {path:?}"))?;
+    }
+    Ok(count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logs::record::tests::sample_log;
+    use std::path::PathBuf;
+
+    fn tmpfile(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir();
+        dir.join(format!("dtopt_dtc_{tag}_{}.dtc", std::process::id()))
+    }
+
+    fn variant(i: u64) -> TransferLog {
+        let mut row = sample_log();
+        row.id = i;
+        row.t_start = 100.0 + i as f64 * 0.125;
+        row.throughput_mbps = 1000.0 + i as f64;
+        row.pair = if i % 3 == 0 { "xsede".into() } else { format!("pair_{}", i % 7) };
+        row
+    }
+
+    #[test]
+    fn group_roundtrip_exact_bits() {
+        let path = tmpfile("rt");
+        let _ = fs::remove_file(&path);
+        let rows: Vec<TransferLog> = (0..37).map(variant).collect();
+        let mut w = PartitionWriter::open_append(&path).unwrap();
+        let refs: Vec<&TransferLog> = rows[..20].iter().collect();
+        w.write_group(&refs).unwrap();
+        let refs: Vec<&TransferLog> = rows[20..].iter().collect();
+        w.write_group(&refs).unwrap();
+        w.finish().unwrap();
+
+        assert_eq!(row_count_file(&path).unwrap(), 37);
+        let part = ColumnarPartition::parse(fs::read(&path).unwrap()).unwrap();
+        assert_eq!(part.row_count(), 37);
+        for (i, expect) in rows.iter().enumerate() {
+            let got = part.view(i).unwrap().to_log();
+            assert_eq!(&got, expect, "row {i}");
+        }
+        assert!(part.view(37).is_none());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn appends_accumulate_groups() {
+        let path = tmpfile("acc");
+        let _ = fs::remove_file(&path);
+        for batch in 0..3u64 {
+            let rows: Vec<TransferLog> = (batch * 5..batch * 5 + 5).map(variant).collect();
+            let mut w = PartitionWriter::open_append(&path).unwrap();
+            let refs: Vec<&TransferLog> = rows.iter().collect();
+            w.write_group(&refs).unwrap();
+            w.finish().unwrap();
+        }
+        let part = ColumnarPartition::parse(fs::read(&path).unwrap()).unwrap();
+        assert_eq!(part.group_count(), 3);
+        assert_eq!(part.row_count(), 15);
+        assert_eq!(part.view(14).unwrap().id, 14);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cursor_at_crosses_groups() {
+        let path = tmpfile("cur");
+        let _ = fs::remove_file(&path);
+        let rows: Vec<TransferLog> = (0..10).map(variant).collect();
+        let mut w = PartitionWriter::open_append(&path).unwrap();
+        let refs: Vec<&TransferLog> = rows[..4].iter().collect();
+        w.write_group(&refs).unwrap();
+        let refs: Vec<&TransferLog> = rows[4..].iter().collect();
+        w.write_group(&refs).unwrap();
+        w.finish().unwrap();
+        let part = ColumnarPartition::parse(fs::read(&path).unwrap()).unwrap();
+        assert_eq!(part.cursor_at(0), (0, 0));
+        assert_eq!(part.cursor_at(3), (0, 3));
+        assert_eq!(part.cursor_at(4), (1, 0));
+        assert_eq!(part.cursor_at(9), (1, 5));
+        assert_eq!(part.cursor_at(10), (2, 0));
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncated_and_corrupt_files_error() {
+        assert!(ColumnarPartition::parse(b"DTC".to_vec()).is_err());
+        assert!(ColumnarPartition::parse(b"NOPE".to_vec()).is_err());
+        // Header claims more payload than exists.
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&5u32.to_le_bytes());
+        bytes.extend_from_slice(&999u32.to_le_bytes());
+        assert!(ColumnarPartition::parse(bytes).is_err());
+        // Valid file truncated mid-payload.
+        let path = tmpfile("trunc");
+        let _ = fs::remove_file(&path);
+        let rows: Vec<TransferLog> = (0..8).map(variant).collect();
+        let mut w = PartitionWriter::open_append(&path).unwrap();
+        let refs: Vec<&TransferLog> = rows.iter().collect();
+        w.write_group(&refs).unwrap();
+        w.finish().unwrap();
+        let full = fs::read(&path).unwrap();
+        let cut = full[..full.len() - 10].to_vec();
+        assert!(ColumnarPartition::parse(cut).is_err());
+        let _ = fs::remove_file(&path);
+    }
+}

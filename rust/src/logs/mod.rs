@@ -1,10 +1,14 @@
-//! Transfer-log layer: record schema, partitioned JSONL store, and the
-//! synthetic production-log generator.
+//! Transfer-log layer: record schema, partitioned store (JSONL +
+//! columnar `.dtc` behind one API), the zero-copy ingest scanner, and
+//! the synthetic production-log generator.
 
+pub mod columnar;
 pub mod generate;
 pub mod record;
+pub mod scan;
 pub mod store;
 
 pub use generate::{generate, GenConfig, PARAM_KNOTS};
-pub use record::TransferLog;
-pub use store::LogStore;
+pub use record::{SuffRow, TransferLog};
+pub use scan::LogRowView;
+pub use store::{LogStore, StoreFormat};

@@ -7,7 +7,7 @@
 
 use crate::sim::params::Params;
 use crate::sim::traffic::Contention;
-use crate::util::json::{Json, JsonError};
+use crate::util::json::{write_number, write_string, Json, JsonError};
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct TransferLog {
@@ -51,6 +51,73 @@ impl TransferLog {
     pub fn load_intensity(&self) -> f64 {
         let th_out = self.throughput_mbps + self.contention().total_path_mbps();
         ((self.bandwidth_mbps - th_out) / self.bandwidth_mbps).clamp(0.0, 1.0)
+    }
+
+    /// The sufficient-statistics projection of this row — everything the
+    /// additive offline update consumes, nothing it doesn't.
+    pub fn suff(&self) -> SuffRow {
+        SuffRow {
+            t_start: self.t_start,
+            rtt_ms: self.rtt_ms,
+            bandwidth_mbps: self.bandwidth_mbps,
+            tcp_buffer_mb: self.tcp_buffer_mb,
+            disk_mbps: self.disk_mbps,
+            avg_file_mb: self.avg_file_mb,
+            num_files: self.num_files,
+            cc: self.cc,
+            p: self.p,
+            pp: self.pp,
+            throughput_mbps: self.throughput_mbps,
+            contending_mbps: self.contending_mbps,
+            contending_streams: self.contending_streams,
+        }
+    }
+
+    /// Serialize one JSONL line into a caller-owned buffer, byte-identical
+    /// to `to_json().to_string_compact()` but with zero heap allocation
+    /// per row. Keys are emitted in the `BTreeMap` (lexicographic) order
+    /// the tree writer produces, so golden JSONL fixtures are unaffected
+    /// by which writer produced them.
+    pub fn write_jsonl(&self, out: &mut String) {
+        out.push('{');
+        out.push_str("\"avg_file_mb\":");
+        write_number(self.avg_file_mb, out);
+        out.push_str(",\"buf_mb\":");
+        write_number(self.tcp_buffer_mb, out);
+        out.push_str(",\"bw_mbps\":");
+        write_number(self.bandwidth_mbps, out);
+        out.push_str(",\"cc\":");
+        write_number(self.cc as f64, out);
+        out.push_str(",\"contend_mbps\":[");
+        for (i, x) in self.contending_mbps.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            write_number(*x, out);
+        }
+        out.push_str("],\"contend_streams\":");
+        write_number(self.contending_streams as f64, out);
+        out.push_str(",\"disk_mbps\":");
+        write_number(self.disk_mbps, out);
+        out.push_str(",\"dur_s\":");
+        write_number(self.duration_s, out);
+        out.push_str(",\"id\":");
+        write_number(self.id as f64, out);
+        out.push_str(",\"num_files\":");
+        write_number(self.num_files as f64, out);
+        out.push_str(",\"p\":");
+        write_number(self.p as f64, out);
+        out.push_str(",\"pair\":");
+        write_string(&self.pair, out);
+        out.push_str(",\"pp\":");
+        write_number(self.pp as f64, out);
+        out.push_str(",\"rtt_ms\":");
+        write_number(self.rtt_ms, out);
+        out.push_str(",\"t\":");
+        write_number(self.t_start, out);
+        out.push_str(",\"th_mbps\":");
+        write_number(self.throughput_mbps, out);
+        out.push('}');
     }
 
     pub fn to_json(&self) -> Json {
@@ -101,6 +168,59 @@ impl TransferLog {
     }
 }
 
+/// The fields of a [`TransferLog`] the additive offline analysis actually
+/// consumes — the sufficient-statistics contract of `pipeline::update`:
+/// clustering features (network + dataset shape), the parameter triple,
+/// achieved throughput, contention (for the Eq. 20 intensity fallback),
+/// and `t_start` (for `built_through_day`). Deliberately excludes `id`,
+/// `pair`, and `duration_s`, which the update never reads — so the lazy
+/// JSONL scanner can hand the refresher `Copy` rows with no per-row heap
+/// allocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SuffRow {
+    pub t_start: f64,
+    pub rtt_ms: f64,
+    pub bandwidth_mbps: f64,
+    pub tcp_buffer_mb: f64,
+    pub disk_mbps: f64,
+    pub avg_file_mb: f64,
+    pub num_files: u64,
+    pub cc: u32,
+    pub p: u32,
+    pub pp: u32,
+    pub throughput_mbps: f64,
+    pub contending_mbps: [f64; 5],
+    pub contending_streams: u32,
+}
+
+impl SuffRow {
+    /// Expand back into a `TransferLog` proxy with the non-sufficient
+    /// fields zeroed. `String::new()` does not allocate, so this is
+    /// heap-free — it lets the suff path reuse the exact `update` code
+    /// (identical Welford push order ⇒ bit-identical statistics) instead
+    /// of maintaining a parallel copy of the feature/intensity math.
+    pub fn to_log(&self) -> TransferLog {
+        TransferLog {
+            id: 0,
+            t_start: self.t_start,
+            pair: String::new(),
+            rtt_ms: self.rtt_ms,
+            bandwidth_mbps: self.bandwidth_mbps,
+            tcp_buffer_mb: self.tcp_buffer_mb,
+            disk_mbps: self.disk_mbps,
+            avg_file_mb: self.avg_file_mb,
+            num_files: self.num_files,
+            cc: self.cc,
+            p: self.p,
+            pp: self.pp,
+            throughput_mbps: self.throughput_mbps,
+            duration_s: 0.0,
+            contending_mbps: self.contending_mbps,
+            contending_streams: self.contending_streams,
+        }
+    }
+}
+
 #[cfg(test)]
 pub mod tests {
     use super::*;
@@ -145,6 +265,35 @@ pub mod tests {
         // Saturated link from our own transfer ⇒ intensity ~0.
         log.throughput_mbps = 10_000.0;
         assert_eq!(log.load_intensity(), 0.0);
+    }
+
+    #[test]
+    fn write_jsonl_matches_tree_writer() {
+        let mut log = sample_log();
+        // Exercise escaping and the scientific/plain number split.
+        log.pair = "a\"b\\c\nd\té".into();
+        log.t_start = 0.1234567890123456789;
+        log.throughput_mbps = -2.5e30;
+        log.disk_mbps = 1e-12;
+        let mut buf = String::new();
+        log.write_jsonl(&mut buf);
+        assert_eq!(buf, log.to_json().to_string_compact());
+        // And the streamed line parses back to the same row.
+        let back = TransferLog::from_json(&Json::parse(&buf).unwrap()).unwrap();
+        assert_eq!(back, log);
+    }
+
+    #[test]
+    fn suff_projection_roundtrip() {
+        let log = sample_log();
+        let suff = log.suff();
+        let proxy = suff.to_log();
+        assert_eq!(proxy.suff(), suff);
+        // The proxy carries everything the additive update consumes.
+        assert_eq!(proxy.params(), log.params());
+        assert_eq!(proxy.contention(), log.contention());
+        assert_eq!(proxy.load_intensity(), log.load_intensity());
+        assert_eq!(proxy.t_start, log.t_start);
     }
 
     #[test]

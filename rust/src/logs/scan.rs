@@ -1,0 +1,817 @@
+//! Lazy JSONL field scanner — the zero-copy half of the ingest layer.
+//!
+//! The refresher and offline pipeline consume only the
+//! sufficient-statistics fields of each row (see
+//! [`crate::logs::record::SuffRow`]), yet `read_day` historically paid
+//! for a full `Json` tree (a `BTreeMap` + `String` key per field) plus an
+//! owned `TransferLog` per row. This module walks the partition bytes
+//! once, extracting fields directly into a borrowed [`LogRowView`] with
+//! no tree and no per-row heap allocation (the `pair` string stays a raw
+//! byte span until someone asks for it).
+//!
+//! The scanner is a strict drop-in for the tree path: on any line the
+//! `Json::parse` + `TransferLog::from_json` pipeline accepts, it produces
+//! field-for-field identical values (same greedy number tokenization,
+//! same `str::parse::<f64>`, same `as u32`/`as u64` casts, duplicate keys
+//! last-wins, unknown keys skipped); on any line that pipeline rejects —
+//! malformed syntax, truncation, missing or wrong-typed fields — it
+//! errors rather than skewing statistics. The property tests at the
+//! bottom pin that contract.
+
+use super::record::{SuffRow, TransferLog};
+use std::borrow::Cow;
+use std::fmt;
+
+/// Scanner failure: malformed syntax, truncation, or a missing/invalid
+/// required field. Carries the byte offset within the line.
+#[derive(Debug, Clone)]
+pub struct ScanError {
+    pub message: String,
+}
+
+impl ScanError {
+    fn new(message: String) -> ScanError {
+        ScanError { message }
+    }
+}
+
+impl fmt::Display for ScanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "scan error: {}", self.message)
+    }
+}
+
+impl std::error::Error for ScanError {}
+
+/// One log row viewed in place: numeric fields are extracted (they are
+/// `Copy`), the endpoint-pair string stays a borrowed raw span and is
+/// only decoded on demand.
+#[derive(Debug, Clone, Copy)]
+pub struct LogRowView<'a> {
+    pub id: u64,
+    pub t_start: f64,
+    pub rtt_ms: f64,
+    pub bandwidth_mbps: f64,
+    pub tcp_buffer_mb: f64,
+    pub disk_mbps: f64,
+    pub avg_file_mb: f64,
+    pub num_files: u64,
+    pub cc: u32,
+    pub p: u32,
+    pub pp: u32,
+    pub throughput_mbps: f64,
+    pub duration_s: f64,
+    pub contending_mbps: [f64; 5],
+    pub contending_streams: u32,
+    /// Raw bytes between the quotes of the `pair` value — escapes (if
+    /// any) not yet decoded, but validated at scan time.
+    pair_raw: &'a [u8],
+    pair_escaped: bool,
+}
+
+impl<'a> LogRowView<'a> {
+    /// Build a view over already-decoded columnar data (the `.dtc`
+    /// reader): `pair` carries no JSON escapes and must be valid UTF-8.
+    pub(crate) fn from_columns(
+        id: u64,
+        t_start: f64,
+        rtt_ms: f64,
+        bandwidth_mbps: f64,
+        tcp_buffer_mb: f64,
+        disk_mbps: f64,
+        avg_file_mb: f64,
+        num_files: u64,
+        cc: u32,
+        p: u32,
+        pp: u32,
+        throughput_mbps: f64,
+        duration_s: f64,
+        contending_mbps: [f64; 5],
+        contending_streams: u32,
+        pair: &'a str,
+    ) -> LogRowView<'a> {
+        LogRowView {
+            id,
+            t_start,
+            rtt_ms,
+            bandwidth_mbps,
+            tcp_buffer_mb,
+            disk_mbps,
+            avg_file_mb,
+            num_files,
+            cc,
+            p,
+            pp,
+            throughput_mbps,
+            duration_s,
+            contending_mbps,
+            contending_streams,
+            pair_raw: pair.as_bytes(),
+            pair_escaped: false,
+        }
+    }
+
+    /// The endpoint pair, decoded lazily: borrowed straight from the
+    /// partition bytes when the value carries no escapes (the common
+    /// case — generator pairs are plain identifiers), owned otherwise.
+    pub fn pair(&self) -> Cow<'a, str> {
+        if self.pair_escaped {
+            let mut out = String::new();
+            decode_string(self.pair_raw, Some(&mut out))
+                .expect("pair span validated at scan time");
+            Cow::Owned(out)
+        } else {
+            Cow::Borrowed(
+                std::str::from_utf8(self.pair_raw).expect("pair span validated at scan time"),
+            )
+        }
+    }
+
+    /// The sufficient-statistics projection — `Copy`, no allocation, and
+    /// never touches the pair span. This is what the refresher feeds to
+    /// `pipeline::update_suff`.
+    pub fn suff(&self) -> SuffRow {
+        SuffRow {
+            t_start: self.t_start,
+            rtt_ms: self.rtt_ms,
+            bandwidth_mbps: self.bandwidth_mbps,
+            tcp_buffer_mb: self.tcp_buffer_mb,
+            disk_mbps: self.disk_mbps,
+            avg_file_mb: self.avg_file_mb,
+            num_files: self.num_files,
+            cc: self.cc,
+            p: self.p,
+            pp: self.pp,
+            throughput_mbps: self.throughput_mbps,
+            contending_mbps: self.contending_mbps,
+            contending_streams: self.contending_streams,
+        }
+    }
+
+    /// Materialize the full owned record (allocates the pair string) —
+    /// the interop path `read_day` is built on.
+    pub fn to_log(&self) -> TransferLog {
+        TransferLog {
+            id: self.id,
+            t_start: self.t_start,
+            pair: self.pair().into_owned(),
+            rtt_ms: self.rtt_ms,
+            bandwidth_mbps: self.bandwidth_mbps,
+            tcp_buffer_mb: self.tcp_buffer_mb,
+            disk_mbps: self.disk_mbps,
+            avg_file_mb: self.avg_file_mb,
+            num_files: self.num_files,
+            cc: self.cc,
+            p: self.p,
+            pp: self.pp,
+            throughput_mbps: self.throughput_mbps,
+            duration_s: self.duration_s,
+            contending_mbps: self.contending_mbps,
+            contending_streams: self.contending_streams,
+        }
+    }
+}
+
+/// Scan one JSONL line into a borrowed view. The line must be exactly
+/// one JSON object (surrounding whitespace allowed, like `Json::parse`).
+pub fn scan_line(bytes: &[u8]) -> Result<LogRowView<'_>, ScanError> {
+    let mut s = Scanner { bytes, pos: 0 };
+    s.skip_ws();
+    s.expect(b'{')?;
+
+    // Each required field starts "missing"; a valid-typed occurrence
+    // sets it, a wrong-typed later duplicate poisons it back to None —
+    // exactly the `BTreeMap` last-wins + extraction-time check of the
+    // tree path.
+    let mut id = None;
+    let mut t_start = None;
+    let mut rtt_ms = None;
+    let mut bw_mbps = None;
+    let mut buf_mb = None;
+    let mut disk_mbps = None;
+    let mut avg_file_mb = None;
+    let mut num_files = None;
+    let mut cc = None;
+    let mut p = None;
+    let mut pp = None;
+    let mut th_mbps = None;
+    let mut dur_s = None;
+    let mut contend_streams = None;
+    let mut contend: Option<[f64; 5]> = None;
+    let mut pair: Option<(&[u8], bool)> = None;
+
+    s.skip_ws();
+    if s.peek() == Some(b'}') {
+        s.pos += 1;
+    } else {
+        loop {
+            s.skip_ws();
+            let (key_raw, key_escaped) = s.string_span()?;
+            s.skip_ws();
+            s.expect(b':')?;
+            s.skip_ws();
+            // Keys with escapes are pathological; decode them so e.g.
+            // "pp" still matches "pp" like the tree parser would.
+            let mut decoded_key = String::new();
+            let key: &[u8] = if key_escaped {
+                decode_string(key_raw, Some(&mut decoded_key))?;
+                decoded_key.as_bytes()
+            } else {
+                key_raw
+            };
+            match key {
+                b"id" => id = s.number_or_skip()?,
+                b"t" => t_start = s.number_or_skip()?,
+                b"rtt_ms" => rtt_ms = s.number_or_skip()?,
+                b"bw_mbps" => bw_mbps = s.number_or_skip()?,
+                b"buf_mb" => buf_mb = s.number_or_skip()?,
+                b"disk_mbps" => disk_mbps = s.number_or_skip()?,
+                b"avg_file_mb" => avg_file_mb = s.number_or_skip()?,
+                b"num_files" => num_files = s.number_or_skip()?,
+                b"cc" => cc = s.number_or_skip()?,
+                b"p" => p = s.number_or_skip()?,
+                b"pp" => pp = s.number_or_skip()?,
+                b"th_mbps" => th_mbps = s.number_or_skip()?,
+                b"dur_s" => dur_s = s.number_or_skip()?,
+                b"contend_streams" => contend_streams = s.number_or_skip()?,
+                b"contend_mbps" => contend = s.f64_array_or_skip()?,
+                b"pair" => {
+                    pair = if s.peek() == Some(b'"') {
+                        let (span, escaped) = s.string_span()?;
+                        // Validate now so downstream accessors can't
+                        // silently accept what `from_json` rejects.
+                        decode_string(span, None)?;
+                        Some((span, escaped))
+                    } else {
+                        s.skip_value()?;
+                        None
+                    };
+                }
+                _ => s.skip_value()?,
+            }
+            s.skip_ws();
+            match s.peek() {
+                Some(b',') => s.pos += 1,
+                Some(b'}') => {
+                    s.pos += 1;
+                    break;
+                }
+                _ => return Err(s.err("expected ',' or '}'")),
+            }
+        }
+    }
+    s.skip_ws();
+    if s.pos != s.bytes.len() {
+        return Err(s.err("trailing characters after JSON value"));
+    }
+
+    let req = |name: &str, v: Option<f64>| {
+        v.ok_or_else(|| ScanError::new(format!("missing/invalid number field '{name}'")))
+    };
+    let (pair_raw, pair_escaped) = pair
+        .ok_or_else(|| ScanError::new("missing/invalid string field 'pair'".to_string()))?;
+    let contending_mbps = contend
+        .ok_or_else(|| ScanError::new("missing/invalid array field 'contend_mbps'".to_string()))?;
+    Ok(LogRowView {
+        id: req("id", id)? as u64,
+        t_start: req("t", t_start)?,
+        rtt_ms: req("rtt_ms", rtt_ms)?,
+        bandwidth_mbps: req("bw_mbps", bw_mbps)?,
+        tcp_buffer_mb: req("buf_mb", buf_mb)?,
+        disk_mbps: req("disk_mbps", disk_mbps)?,
+        avg_file_mb: req("avg_file_mb", avg_file_mb)?,
+        num_files: req("num_files", num_files)? as u64,
+        cc: req("cc", cc)? as u32,
+        p: req("p", p)? as u32,
+        pp: req("pp", pp)? as u32,
+        throughput_mbps: req("th_mbps", th_mbps)?,
+        duration_s: req("dur_s", dur_s)?,
+        contending_mbps,
+        contending_streams: req("contend_streams", contend_streams)? as u32,
+        pair_raw,
+        pair_escaped,
+    })
+}
+
+/// Iterator over the non-empty lines of a JSONL partition buffer,
+/// yielding `(lineno, line_bytes)` — shared by the scanning reader and
+/// the allocation-free skip/count paths in the store.
+pub(crate) struct Lines<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    lineno: usize,
+}
+
+impl<'a> Lines<'a> {
+    pub(crate) fn new(bytes: &'a [u8]) -> Lines<'a> {
+        Lines { bytes, pos: 0, lineno: 0 }
+    }
+}
+
+impl<'a> Iterator for Lines<'a> {
+    type Item = (usize, &'a [u8]);
+
+    fn next(&mut self) -> Option<(usize, &'a [u8])> {
+        while self.pos < self.bytes.len() {
+            let start = self.pos;
+            let end = memchr_nl(&self.bytes[start..])
+                .map(|i| start + i)
+                .unwrap_or(self.bytes.len());
+            self.pos = end + 1; // Past the '\n' (or past EOF — loop exits).
+            self.lineno += 1;
+            let line = &self.bytes[start..end];
+            if line.iter().any(|b| !matches!(b, b' ' | b'\t' | b'\r')) {
+                return Some((self.lineno, line));
+            }
+        }
+        None
+    }
+}
+
+fn memchr_nl(haystack: &[u8]) -> Option<usize> {
+    haystack.iter().position(|&b| b == b'\n')
+}
+
+// ----------------------------------------------------------------------
+// The byte walker. Token-level semantics mirror `util::json::Parser`
+// exactly — same whitespace set, same greedy number span, same escape
+// grammar — so scan/parse agreement is structural, not coincidental.
+// ----------------------------------------------------------------------
+
+struct Scanner<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Scanner<'a> {
+    fn err(&self, msg: &str) -> ScanError {
+        ScanError::new(format!("{msg} at byte {}", self.pos))
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), ScanError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    /// Raw span of a string literal (between the quotes, escapes left
+    /// in place but structurally validated later) plus whether any
+    /// escape is present.
+    fn string_span(&mut self) -> Result<(&'a [u8], bool), ScanError> {
+        self.expect(b'"')?;
+        let start = self.pos;
+        let mut escaped = false;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    let span = &self.bytes[start..self.pos];
+                    self.pos += 1;
+                    return Ok((span, escaped));
+                }
+                Some(b'\\') => {
+                    escaped = true;
+                    self.pos += 1;
+                    if self.pos >= self.bytes.len() {
+                        return Err(self.err("unterminated string"));
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => self.pos += 1,
+            }
+        }
+    }
+
+    /// Greedy number token, identical to the tree parser: optional '-',
+    /// then every digit/`.`/`e`/`E`/`+`/`-` byte, then `str::parse`.
+    fn number(&mut self) -> Result<f64, ScanError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while self
+            .peek()
+            .map(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+            .unwrap_or(false)
+        {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("invalid utf8 in number"))?;
+        text.parse::<f64>().map_err(|_| self.err("invalid number"))
+    }
+
+    /// A field value expected to be a number: `Some(x)` when it is,
+    /// `None` when it's valid JSON of another type (the tree path only
+    /// fails such rows at extraction time, and a later duplicate key can
+    /// still repair them), hard error on malformed syntax.
+    fn number_or_skip(&mut self) -> Result<Option<f64>, ScanError> {
+        match self.peek() {
+            Some(c) if c == b'-' || c.is_ascii_digit() => Ok(Some(self.number()?)),
+            _ => {
+                self.skip_value()?;
+                Ok(None)
+            }
+        }
+    }
+
+    /// A field value expected to be an all-numbers array (the
+    /// `contend_mbps` shape): first five elements fill the fixed array
+    /// (missing tail stays zero, like `from_json`'s `.take(5)`), every
+    /// element must be a number or the field poisons to `None`.
+    fn f64_array_or_skip(&mut self) -> Result<Option<[f64; 5]>, ScanError> {
+        if self.peek() != Some(b'[') {
+            self.skip_value()?;
+            return Ok(None);
+        }
+        self.pos += 1;
+        let mut out = [0.0; 5];
+        let mut n = 0usize;
+        let mut all_numbers = true;
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Some(out));
+        }
+        loop {
+            self.skip_ws();
+            match self.peek() {
+                Some(c) if c == b'-' || c.is_ascii_digit() => {
+                    let x = self.number()?;
+                    if n < 5 {
+                        out[n] = x;
+                    }
+                    n += 1;
+                }
+                _ => {
+                    self.skip_value()?;
+                    all_numbers = false;
+                }
+            }
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(if all_numbers { Some(out) } else { None });
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    /// Skip one complete JSON value of any type, validating structure
+    /// (unknown keys must not let malformed bytes through).
+    fn skip_value(&mut self) -> Result<(), ScanError> {
+        match self.peek() {
+            Some(b'"') => {
+                let (span, _) = self.string_span()?;
+                decode_string(span, None)
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_ws();
+                    let (span, _) = self.string_span()?;
+                    decode_string(span, None)?;
+                    self.skip_ws();
+                    self.expect(b':')?;
+                    self.skip_ws();
+                    self.skip_value()?;
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b'}') => {
+                            self.pos += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.err("expected ',' or '}'")),
+                    }
+                }
+            }
+            Some(b'[') => {
+                self.pos += 1;
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_ws();
+                    self.skip_value()?;
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(());
+                        }
+                        _ => return Err(self.err("expected ',' or ']'")),
+                    }
+                }
+            }
+            Some(b't') => self.literal(b"true"),
+            Some(b'f') => self.literal(b"false"),
+            Some(b'n') => self.literal(b"null"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number().map(|_| ()),
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+
+    fn literal(&mut self, word: &[u8]) -> Result<(), ScanError> {
+        if self.bytes[self.pos..].starts_with(word) {
+            self.pos += word.len();
+            Ok(())
+        } else {
+            Err(self.err("invalid literal"))
+        }
+    }
+}
+
+/// Validate (and optionally decode into `out`) the raw span of a string
+/// literal, with the same escape grammar as the tree parser: the short
+/// escapes, `\uXXXX` with surrogate pairs, UTF-8 validity of raw runs.
+fn decode_string(raw: &[u8], mut out: Option<&mut String>) -> Result<(), ScanError> {
+    let mut pos = 0usize;
+    let fail = |msg: &str| ScanError::new(format!("{msg} in string"));
+    while pos < raw.len() {
+        if raw[pos] == b'\\' {
+            pos += 1;
+            let c = match raw.get(pos) {
+                Some(b'"') => '"',
+                Some(b'\\') => '\\',
+                Some(b'/') => '/',
+                Some(b'b') => '\u{8}',
+                Some(b'f') => '\u{c}',
+                Some(b'n') => '\n',
+                Some(b'r') => '\r',
+                Some(b't') => '\t',
+                Some(b'u') => {
+                    pos += 1;
+                    let cp = hex4(raw, pos).ok_or_else(|| fail("invalid \\u escape"))?;
+                    pos += 4;
+                    let ch = if (0xD800..0xDC00).contains(&cp) {
+                        if raw.get(pos) != Some(&b'\\') || raw.get(pos + 1) != Some(&b'u') {
+                            return Err(fail("missing low surrogate"));
+                        }
+                        pos += 2;
+                        let low = hex4(raw, pos).ok_or_else(|| fail("invalid \\u escape"))?;
+                        pos += 4;
+                        if !(0xDC00..0xE000).contains(&low) {
+                            return Err(fail("invalid low surrogate"));
+                        }
+                        let combined = 0x10000 + ((cp - 0xD800) << 10) + (low - 0xDC00);
+                        char::from_u32(combined).ok_or_else(|| fail("invalid surrogate pair"))?
+                    } else {
+                        char::from_u32(cp).ok_or_else(|| fail("invalid \\u escape"))?
+                    };
+                    if let Some(out) = out.as_deref_mut() {
+                        out.push(ch);
+                    }
+                    continue;
+                }
+                _ => return Err(fail("invalid escape")),
+            };
+            pos += 1;
+            if let Some(out) = out.as_deref_mut() {
+                out.push(c);
+            }
+        } else {
+            // Raw UTF-8 run up to the next backslash.
+            let end = raw[pos..]
+                .iter()
+                .position(|&b| b == b'\\')
+                .map(|i| pos + i)
+                .unwrap_or(raw.len());
+            let run =
+                std::str::from_utf8(&raw[pos..end]).map_err(|_| fail("invalid utf8"))?;
+            if let Some(out) = out.as_deref_mut() {
+                out.push_str(run);
+            }
+            pos = end;
+        }
+    }
+    Ok(())
+}
+
+fn hex4(raw: &[u8], pos: usize) -> Option<u32> {
+    if pos + 4 > raw.len() {
+        return None;
+    }
+    let hex = std::str::from_utf8(&raw[pos..pos + 4]).ok()?;
+    u32::from_str_radix(hex, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logs::record::tests::sample_log;
+    use crate::util::json::Json;
+    use crate::util::proptest::{forall, Config};
+    use crate::util::rng::Rng;
+
+    fn random_log(rng: &mut Rng) -> TransferLog {
+        let pairs = ["xsede", "did clab", "a\"b", "p\\q", "é😀", "", "tab\there"];
+        TransferLog {
+            id: rng.below(1 << 40),
+            t_start: rng.range_f64(0.0, 1e7),
+            pair: pairs[rng.index(pairs.len())].to_string(),
+            rtt_ms: rng.range_f64(0.05, 300.0),
+            bandwidth_mbps: rng.range_f64(10.0, 100_000.0),
+            tcp_buffer_mb: rng.range_f64(0.1, 512.0),
+            disk_mbps: rng.range_f64(10.0, 10_000.0),
+            avg_file_mb: rng.range_f64(1e-3, 4096.0),
+            num_files: rng.below(1 << 20),
+            cc: rng.below(64) as u32,
+            p: rng.below(64) as u32,
+            pp: rng.below(64) as u32,
+            throughput_mbps: rng.range_f64(0.0, 100_000.0),
+            duration_s: rng.range_f64(0.0, 1e5),
+            contending_mbps: [
+                rng.range_f64(0.0, 5_000.0),
+                rng.range_f64(0.0, 5_000.0),
+                rng.range_f64(0.0, 5_000.0),
+                rng.range_f64(0.0, 5_000.0),
+                rng.range_f64(0.0, 5_000.0),
+            ],
+            contending_streams: rng.below(256) as u32,
+        }
+    }
+
+    fn assert_view_matches(view: &LogRowView, log: &TransferLog) -> Result<(), String> {
+        let owned = view.to_log();
+        if &owned != log {
+            return Err(format!("scan mismatch: {owned:?} != {log:?}"));
+        }
+        if view.suff() != log.suff() {
+            return Err("suff projection mismatch".to_string());
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn scan_agrees_with_tree_parse_on_writer_output() {
+        forall(
+            Config { cases: 256, seed: 0x5CA_1 },
+            random_log,
+            |log| {
+                let line = log.to_json().to_string_compact();
+                let view = scan_line(line.as_bytes()).map_err(|e| e.to_string())?;
+                let tree = TransferLog::from_json(&Json::parse(&line).unwrap()).unwrap();
+                assert_view_matches(&view, &tree)
+            },
+        );
+    }
+
+    #[test]
+    fn scan_agrees_on_shuffled_keys_and_whitespace() {
+        forall(
+            Config { cases: 256, seed: 0x5CA_2 },
+            |rng| {
+                let log = random_log(rng);
+                // Hand-build the line with randomized key order, random
+                // whitespace, and an occasional unknown key with a
+                // nested value — everything the tree parser tolerates.
+                let tree = log.to_json();
+                let mut keys: Vec<String> = match &tree {
+                    Json::Obj(m) => m.keys().cloned().collect(),
+                    _ => unreachable!(),
+                };
+                rng.shuffle(&mut keys);
+                let ws = |rng: &mut Rng| {
+                    [" ", "", "\t", "  "][rng.index(4)].to_string()
+                };
+                let mut line = String::from("{");
+                for (i, k) in keys.iter().enumerate() {
+                    if i > 0 {
+                        line.push(',');
+                    }
+                    line.push_str(&ws(rng));
+                    line.push_str(&format!("\"{k}\""));
+                    line.push_str(&ws(rng));
+                    line.push(':');
+                    line.push_str(&ws(rng));
+                    line.push_str(&tree.get(k).unwrap().to_string_compact());
+                }
+                if rng.chance(0.5) {
+                    line.push_str(",\"extra\":{\"nested\":[1,\"two\",null,{}]}");
+                }
+                line.push_str(&ws(rng));
+                line.push('}');
+                (log, line)
+            },
+            |(log, line)| {
+                let view = scan_line(line.as_bytes()).map_err(|e| e.to_string())?;
+                let tree = TransferLog::from_json(&Json::parse(line).unwrap()).unwrap();
+                if &tree != log {
+                    return Err("tree parse disagrees with source log".to_string());
+                }
+                assert_view_matches(&view, log)
+            },
+        );
+    }
+
+    #[test]
+    fn malformed_and_truncated_lines_error() {
+        let good = sample_log().to_json().to_string_compact();
+        // Truncations at every prefix length must error, never yield a row.
+        for cut in 0..good.len() {
+            let prefix = &good.as_bytes()[..cut];
+            if prefix.iter().all(|b| matches!(b, b' ' | b'\t' | b'\r')) {
+                continue; // Whitespace-only lines are skipped upstream.
+            }
+            assert!(
+                scan_line(prefix).is_err(),
+                "truncated line must error at cut={cut}"
+            );
+        }
+        for bad in [
+            "{",
+            "[1,2]",
+            "{\"id\":}",
+            "{\"id\":1,}",
+            "{\"id\":1} extra",
+            "{\"id\":nope}",
+            "{\"pair\":\"unterminated}",
+            "{\"contend_mbps\":[1,2}",
+        ] {
+            assert!(scan_line(bad.as_bytes()).is_err(), "must reject {bad:?}");
+            assert!(Json::parse(bad)
+                .map(|v| TransferLog::from_json(&v))
+                .is_err());
+        }
+    }
+
+    #[test]
+    fn wrong_typed_or_missing_fields_error_like_from_json() {
+        for bad in [
+            // Missing a required field.
+            "{\"id\":1}",
+            // pair not a string.
+            "{\"avg_file_mb\":1,\"buf_mb\":1,\"bw_mbps\":1,\"cc\":1,\"contend_mbps\":[0,0,0,0,0],\"contend_streams\":0,\"disk_mbps\":1,\"dur_s\":1,\"id\":1,\"num_files\":1,\"p\":1,\"pair\":7,\"pp\":1,\"rtt_ms\":1,\"t\":1,\"th_mbps\":1}",
+            // contend_mbps holds a non-number.
+            "{\"avg_file_mb\":1,\"buf_mb\":1,\"bw_mbps\":1,\"cc\":1,\"contend_mbps\":[0,\"x\",0],\"contend_streams\":0,\"disk_mbps\":1,\"dur_s\":1,\"id\":1,\"num_files\":1,\"p\":1,\"pair\":\"a\",\"pp\":1,\"rtt_ms\":1,\"t\":1,\"th_mbps\":1}",
+            // Numeric field is null (the writer's non-finite encoding).
+            "{\"avg_file_mb\":1,\"buf_mb\":1,\"bw_mbps\":1,\"cc\":1,\"contend_mbps\":[0,0,0,0,0],\"contend_streams\":0,\"disk_mbps\":1,\"dur_s\":1,\"id\":null,\"num_files\":1,\"p\":1,\"pair\":\"a\",\"pp\":1,\"rtt_ms\":1,\"t\":1,\"th_mbps\":1}",
+        ] {
+            assert!(scan_line(bad.as_bytes()).is_err(), "must reject {bad:?}");
+            let tree = Json::parse(bad).unwrap();
+            assert!(TransferLog::from_json(&tree).is_err(), "tree path must also reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn duplicate_keys_last_wins_like_tree_parser() {
+        let base = sample_log().to_json().to_string_compact();
+        // Append a duplicate that overrides id — BTreeMap keeps the last.
+        let line = format!("{},\"id\":777}}", &base[..base.len() - 1]);
+        let view = scan_line(line.as_bytes()).unwrap();
+        let tree = TransferLog::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(view.id, 777);
+        assert_eq!(view.to_log(), tree);
+    }
+
+    #[test]
+    fn pair_decoding_borrows_when_unescaped() {
+        let mut log = sample_log();
+        log.pair = "plain".into();
+        let line = log.to_json().to_string_compact();
+        let view = scan_line(line.as_bytes()).unwrap();
+        assert!(matches!(view.pair(), Cow::Borrowed("plain")));
+        log.pair = "needs\"escape".into();
+        let line = log.to_json().to_string_compact();
+        let view = scan_line(line.as_bytes()).unwrap();
+        assert_eq!(view.pair(), "needs\"escape");
+        assert!(matches!(view.pair(), Cow::Owned(_)));
+    }
+
+    #[test]
+    fn lines_iterator_skips_blanks_and_counts_linenos() {
+        let buf = b"a\n\n  \nb\nc";
+        let got: Vec<(usize, &[u8])> = Lines::new(buf).collect();
+        assert_eq!(
+            got,
+            vec![(1, b"a".as_slice()), (4, b"b".as_slice()), (5, b"c".as_slice())]
+        );
+    }
+}

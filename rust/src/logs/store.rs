@@ -1,107 +1,257 @@
-//! JSONL log store with per-day partitions.
+//! Partitioned log store with per-day partitions in two on-disk formats.
 //!
 //! The paper's offline analysis is *additive*: "when new logs are
 //! generated for a certain period of time, we do not need to combine it
 //! with previous logs". The store mirrors that by partitioning rows into
-//! `day_<n>.jsonl` files so the pipeline can consume exactly the
-//! partitions that are new since the last analysis.
+//! per-day files so the pipeline can consume exactly the partitions that
+//! are new since the last analysis.
+//!
+//! Two partition formats live behind one API (see DESIGN.md §Zero-copy
+//! ingest):
+//!
+//! * `day_<n>.jsonl` — one JSON object per line. The interop and
+//!   golden-fixture default: human-greppable, diffable, and the format
+//!   external log producers write.
+//! * `day_<n>.dtc` — columnar row groups (`columnar` module). The hot
+//!   path for high-volume stores: O(1) row counts, per-column slice
+//!   reads, ~2× smaller rows.
+//!
+//! Directories may mix formats; readers dispatch per partition by
+//! extension (preferring `.dtc` when both exist — the `compact`
+//! migration's crash window leaves both, and the `.dtc` is the complete,
+//! verified one). The scanning read path (`scan_day`/`scan_range`)
+//! yields borrowed [`LogRowView`]s with no `Json` tree and no per-row
+//! allocation; `read_day` is built on top of it for callers that want
+//! owned rows.
 
+use super::columnar::{self, ColumnarPartition, PartitionWriter};
 use super::record::TransferLog;
+use super::scan::{scan_line, Lines, LogRowView};
 use crate::sim::traffic::DAY_S;
-use crate::util::json::Json;
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::fs;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// On-disk partition format for *new* partitions. Existing partitions
+/// always keep their format on append (a day never straddles formats).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreFormat {
+    /// One JSON object per line — interop + golden-fixture default.
+    Jsonl,
+    /// Columnar row groups (`day_<n>.dtc`).
+    Columnar,
+}
+
+impl StoreFormat {
+    fn ext(self) -> &'static str {
+        match self {
+            StoreFormat::Jsonl => "jsonl",
+            StoreFormat::Columnar => columnar::EXT,
+        }
+    }
+}
+
+/// Ingest-side telemetry, shared by every reader/writer on this store
+/// (and its clones). Exported as the `logs.ingest.*` counter families —
+/// all monotonic row/byte counts, no wall-clock anywhere, so they are
+/// safe for the byte-deterministic metrics exports.
+#[derive(Debug, Default)]
+pub struct IngestStats {
+    /// Rows appended (either format).
+    pub rows_written: AtomicU64,
+    /// Bytes appended (either format).
+    pub bytes_written: AtomicU64,
+    /// Rows yielded by the lazy scanning path (`scan_day`/`scan_range`).
+    pub rows_scanned: AtomicU64,
+    /// Partition bytes loaded for scanning.
+    pub bytes_read: AtomicU64,
+    /// Rows materialized into owned `TransferLog`s (`read_day` etc.) —
+    /// the scan-vs-parse split is `rows_scanned` vs `rows_parsed`.
+    pub rows_parsed: AtomicU64,
+}
+
+impl IngestStats {
+    fn add(&self, counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+}
 
 /// Directory-backed partitioned log store.
 pub struct LogStore {
     pub dir: PathBuf,
+    format: StoreFormat,
+    stats: Arc<IngestStats>,
 }
 
 impl LogStore {
+    /// Open with the JSONL default for new partitions (interop-safe; the
+    /// closed loop's own stores upgrade via [`Self::open_with_format`]).
     pub fn open(dir: impl AsRef<Path>) -> Result<LogStore> {
+        Self::open_with_format(dir, StoreFormat::Jsonl)
+    }
+
+    /// Open, selecting the format newly created partitions use.
+    pub fn open_with_format(dir: impl AsRef<Path>, format: StoreFormat) -> Result<LogStore> {
         fs::create_dir_all(dir.as_ref())
             .with_context(|| format!("creating log dir {:?}", dir.as_ref()))?;
-        Ok(LogStore { dir: dir.as_ref().to_path_buf() })
+        Ok(LogStore {
+            dir: dir.as_ref().to_path_buf(),
+            format,
+            stats: Arc::new(IngestStats::default()),
+        })
     }
 
-    fn partition_path(&self, day: u64) -> PathBuf {
-        self.dir.join(format!("day_{day:05}.jsonl"))
+    /// The format used for new partitions.
+    pub fn format(&self) -> StoreFormat {
+        self.format
     }
 
-    /// Append rows, routing each to its day partition.
+    /// Shared ingest counters (clone to wire into a telemetry registry).
+    pub fn stats(&self) -> Arc<IngestStats> {
+        self.stats.clone()
+    }
+
+    fn partition_path(&self, day: u64, format: StoreFormat) -> PathBuf {
+        self.dir.join(format!("day_{day:05}.{}", format.ext()))
+    }
+
+    /// The on-disk partition for `day`, dispatching by extension.
+    /// Prefers `.dtc` when both exist (see module docs).
+    fn existing_partition(&self, day: u64) -> Option<(PathBuf, StoreFormat)> {
+        for format in [StoreFormat::Columnar, StoreFormat::Jsonl] {
+            let path = self.partition_path(day, format);
+            if path.exists() {
+                return Some((path, format));
+            }
+        }
+        None
+    }
+
+    /// Append rows, routing each to its day partition. Each call writes
+    /// one streamed batch per touched day: JSONL partitions stream
+    /// through a `BufWriter` with one reused per-row buffer, columnar
+    /// partitions append one row group.
     pub fn append(&self, rows: &[TransferLog]) -> Result<()> {
         let mut by_day: BTreeMap<u64, Vec<&TransferLog>> = BTreeMap::new();
         for row in rows {
             by_day.entry((row.t_start / DAY_S).floor() as u64).or_default().push(row);
         }
+        let mut buf = String::new();
         for (day, day_rows) in by_day {
-            let path = self.partition_path(day);
-            let mut file = fs::OpenOptions::new()
-                .create(true)
-                .append(true)
-                .open(&path)
-                .with_context(|| format!("opening {path:?}"))?;
-            let mut buf = String::new();
-            for row in day_rows {
-                buf.push_str(&row.to_json().to_string_compact());
-                buf.push('\n');
-            }
-            file.write_all(buf.as_bytes())?;
+            // A day partition keeps its existing format; only brand-new
+            // days take the store's configured format.
+            let format = self.existing_partition(day).map(|(_, f)| f).unwrap_or(self.format);
+            let path = self.partition_path(day, format);
+            let written = match format {
+                StoreFormat::Jsonl => {
+                    let file = fs::OpenOptions::new()
+                        .create(true)
+                        .append(true)
+                        .open(&path)
+                        .with_context(|| format!("opening {path:?}"))?;
+                    let mut out = BufWriter::new(file);
+                    let mut written = 0u64;
+                    for row in &day_rows {
+                        buf.clear();
+                        row.write_jsonl(&mut buf);
+                        buf.push('\n');
+                        out.write_all(buf.as_bytes())
+                            .with_context(|| format!("appending row to {path:?}"))?;
+                        written += buf.len() as u64;
+                    }
+                    out.flush().with_context(|| format!("flushing {path:?}"))?;
+                    written
+                }
+                StoreFormat::Columnar => {
+                    let mut w = PartitionWriter::open_append(&path)?;
+                    let written = w.write_group(&day_rows)?;
+                    w.finish()?;
+                    written
+                }
+            };
+            self.stats.add(&self.stats.rows_written, day_rows.len() as u64);
+            self.stats.add(&self.stats.bytes_written, written);
         }
         Ok(())
     }
 
-    /// Day indices present in the store.
+    /// Day indices present in the store (either format, deduped).
     pub fn days(&self) -> Result<Vec<u64>> {
         let mut days = Vec::new();
         for entry in fs::read_dir(&self.dir)? {
             let name = entry?.file_name();
             let name = name.to_string_lossy();
-            if let Some(rest) = name.strip_prefix("day_").and_then(|r| r.strip_suffix(".jsonl")) {
+            let rest = name.strip_prefix("day_").and_then(|r| {
+                r.strip_suffix(".jsonl")
+                    .or_else(|| r.strip_suffix(&format!(".{}", columnar::EXT)))
+            });
+            if let Some(rest) = rest {
                 if let Ok(d) = rest.parse::<u64>() {
                     days.push(d);
                 }
             }
         }
         days.sort_unstable();
+        days.dedup();
         Ok(days)
     }
 
-    /// Number of rows in one partition, without parsing them (one
-    /// non-empty JSONL line per row). Cursor bookkeeping uses this so
-    /// it never pays the deserialization cost of `read_day`.
+    /// Number of rows in one partition, without parsing them. JSONL
+    /// partitions count non-empty lines over a reused byte buffer (no
+    /// per-line `String`); columnar partitions read only the group
+    /// headers. Cursor bookkeeping uses this so it never pays a
+    /// deserialization cost.
     pub fn row_count(&self, day: u64) -> Result<usize> {
-        let path = self.partition_path(day);
-        let file = fs::File::open(&path).with_context(|| format!("opening {path:?}"))?;
-        let mut count = 0usize;
-        for line in BufReader::new(file).lines() {
-            if !line?.trim().is_empty() {
-                count += 1;
-            }
+        let (path, format) = self
+            .existing_partition(day)
+            .with_context(|| format!("no partition for day {day} in {:?}", self.dir))?;
+        match format {
+            StoreFormat::Jsonl => count_jsonl_rows(&path),
+            StoreFormat::Columnar => columnar::row_count_file(&path),
         }
-        Ok(count)
     }
 
-    /// Read one partition.
-    pub fn read_day(&self, day: u64) -> Result<Vec<TransferLog>> {
-        let path = self.partition_path(day);
-        let file = fs::File::open(&path).with_context(|| format!("opening {path:?}"))?;
-        let mut rows = Vec::new();
-        for (lineno, line) in BufReader::new(file).lines().enumerate() {
-            let line = line?;
-            if line.trim().is_empty() {
-                continue;
+    /// Load one partition for lazy scanning. The returned [`DayScan`]
+    /// owns the partition bytes; its iterators yield borrowed
+    /// [`LogRowView`]s — no `Json` tree, no per-row allocation.
+    pub fn scan_day(&self, day: u64) -> Result<DayScan> {
+        let (path, format) = self
+            .existing_partition(day)
+            .with_context(|| format!("no partition for day {day} in {:?}", self.dir))?;
+        let bytes = fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        self.stats.add(&self.stats.bytes_read, bytes.len() as u64);
+        let inner = match format {
+            StoreFormat::Jsonl => DayScanInner::Jsonl(bytes),
+            StoreFormat::Columnar => DayScanInner::Columnar(
+                ColumnarPartition::parse(bytes).with_context(|| format!("parsing {path:?}"))?,
+            ),
+        };
+        Ok(DayScan { path, stats: self.stats.clone(), inner })
+    }
+
+    /// Scans for every partition in `[from_day, to_day)`, in day order.
+    pub fn scan_range(&self, from_day: u64, to_day: u64) -> Result<Vec<(u64, DayScan)>> {
+        let mut scans = Vec::new();
+        for day in self.days()? {
+            if day >= from_day && day < to_day {
+                scans.push((day, self.scan_day(day)?));
             }
-            let v = Json::parse(&line)
-                .map_err(|e| anyhow::anyhow!("{path:?}:{}: {e}", lineno + 1))?;
-            rows.push(
-                TransferLog::from_json(&v)
-                    .map_err(|e| anyhow::anyhow!("{path:?}:{}: {e}", lineno + 1))?,
-            );
         }
+        Ok(scans)
+    }
+
+    /// Read one partition into owned rows (scan + materialize).
+    pub fn read_day(&self, day: u64) -> Result<Vec<TransferLog>> {
+        let scan = self.scan_day(day)?;
+        let mut rows = Vec::new();
+        for view in scan.rows() {
+            rows.push(view?.to_log());
+        }
+        self.stats.add(&self.stats.rows_parsed, rows.len() as u64);
         Ok(rows)
     }
 
@@ -120,6 +270,197 @@ impl LogStore {
     pub fn read_all(&self) -> Result<Vec<TransferLog>> {
         self.read_range(0, u64::MAX)
     }
+
+    /// Migrate every JSONL partition to columnar, in place. Idempotent;
+    /// each original is removed only after the freshly written `.dtc`
+    /// has been re-read and verified row-for-row. A day already carrying
+    /// both formats (the crash window of a previous run) keeps the
+    /// `.dtc` if it holds at least the JSONL's rows, else errors.
+    pub fn compact(&self) -> Result<CompactReport> {
+        let mut report = CompactReport::default();
+        for day in self.days()? {
+            let jsonl = self.partition_path(day, StoreFormat::Jsonl);
+            let dtc = self.partition_path(day, StoreFormat::Columnar);
+            if !jsonl.exists() {
+                report.already_columnar.push(day);
+                continue;
+            }
+            if dtc.exists() {
+                // Crash window: verify the columnar copy subsumes the
+                // JSONL before dropping the original.
+                let dtc_rows = columnar::row_count_file(&dtc)?;
+                let jsonl_rows = count_jsonl_rows(&jsonl)?;
+                ensure!(
+                    dtc_rows >= jsonl_rows,
+                    "day {day}: {dtc:?} has {dtc_rows} rows but {jsonl:?} has {jsonl_rows}; \
+                     refusing to drop the larger original"
+                );
+                ColumnarPartition::parse(fs::read(&dtc)?)
+                    .with_context(|| format!("verifying {dtc:?}"))?;
+                fs::remove_file(&jsonl)
+                    .with_context(|| format!("removing migrated {jsonl:?}"))?;
+                report.migrated.push(day);
+                continue;
+            }
+            let rows = self.read_day(day)?;
+            let tmp = self.dir.join(format!("day_{day:05}.{}.tmp", columnar::EXT));
+            let _ = fs::remove_file(&tmp);
+            {
+                let mut w = PartitionWriter::open_append(&tmp)?;
+                let refs: Vec<&TransferLog> = rows.iter().collect();
+                w.write_group(&refs)?;
+                w.finish()?;
+            }
+            // Verified re-read before the original goes away.
+            let part = ColumnarPartition::parse(
+                fs::read(&tmp).with_context(|| format!("re-reading {tmp:?}"))?,
+            )
+            .with_context(|| format!("verifying {tmp:?}"))?;
+            ensure!(
+                part.row_count() == rows.len(),
+                "day {day}: verification found {} rows, expected {}",
+                part.row_count(),
+                rows.len()
+            );
+            for (i, expect) in rows.iter().enumerate() {
+                let got = part.view(i).expect("row count verified").to_log();
+                ensure!(&got == expect, "day {day}: row {i} did not survive migration");
+            }
+            fs::rename(&tmp, &dtc)
+                .with_context(|| format!("installing {dtc:?}"))?;
+            fs::remove_file(&jsonl)
+                .with_context(|| format!("removing migrated {jsonl:?}"))?;
+            report.migrated.push(day);
+        }
+        Ok(report)
+    }
+}
+
+/// What [`LogStore::compact`] did, per day.
+#[derive(Debug, Default)]
+pub struct CompactReport {
+    pub migrated: Vec<u64>,
+    pub already_columnar: Vec<u64>,
+}
+
+/// Count non-empty JSONL lines with one reused 64 KiB buffer — no
+/// per-line `String`, no parsing. A final unterminated line counts.
+fn count_jsonl_rows(path: &Path) -> Result<usize> {
+    let mut file = fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut buf = [0u8; 64 * 1024];
+    let mut count = 0usize;
+    let mut line_has_content = false;
+    loop {
+        let n = file.read(&mut buf).with_context(|| format!("reading {path:?}"))?;
+        if n == 0 {
+            break;
+        }
+        for &b in &buf[..n] {
+            if b == b'\n' {
+                if line_has_content {
+                    count += 1;
+                }
+                line_has_content = false;
+            } else if !matches!(b, b' ' | b'\t' | b'\r') {
+                line_has_content = true;
+            }
+        }
+    }
+    if line_has_content {
+        count += 1;
+    }
+    Ok(count)
+}
+
+/// One loaded partition, ready for zero-copy scanning.
+pub struct DayScan {
+    path: PathBuf,
+    stats: Arc<IngestStats>,
+    inner: DayScanInner,
+}
+
+enum DayScanInner {
+    Jsonl(Vec<u8>),
+    Columnar(ColumnarPartition),
+}
+
+impl DayScan {
+    /// Iterate every row.
+    pub fn rows(&self) -> ScanRows<'_> {
+        self.rows_from(0)
+    }
+
+    /// Iterate rows starting after the first `skip` — the refresher's
+    /// cursor path. Skipping is cheap: JSONL skips lines without field
+    /// extraction, columnar starts mid-group by offset arithmetic.
+    pub fn rows_from(&self, skip: usize) -> ScanRows<'_> {
+        let inner = match &self.inner {
+            DayScanInner::Jsonl(bytes) => RowsInner::Jsonl { lines: Lines::new(bytes), skip },
+            DayScanInner::Columnar(part) => {
+                let (gi, ri) = part.cursor_at(skip);
+                RowsInner::Columnar { part, gi, ri }
+            }
+        };
+        ScanRows { day: self, inner, scanned: 0 }
+    }
+}
+
+enum RowsInner<'a> {
+    Jsonl { lines: Lines<'a>, skip: usize },
+    Columnar { part: &'a ColumnarPartition, gi: usize, ri: usize },
+}
+
+/// Iterator of borrowed row views over one partition. Folds its yield
+/// count into the store's `rows_scanned` counter on drop.
+pub struct ScanRows<'a> {
+    day: &'a DayScan,
+    inner: RowsInner<'a>,
+    scanned: u64,
+}
+
+impl<'a> Iterator for ScanRows<'a> {
+    type Item = Result<LogRowView<'a>>;
+
+    fn next(&mut self) -> Option<Result<LogRowView<'a>>> {
+        let item = match &mut self.inner {
+            RowsInner::Jsonl { lines, skip } => loop {
+                let (lineno, line) = lines.next()?;
+                if *skip > 0 {
+                    *skip -= 1;
+                    continue;
+                }
+                break match scan_line(line) {
+                    Ok(view) => Some(Ok(view)),
+                    Err(e) => Some(Err(anyhow::anyhow!("{:?}:{lineno}: {e}", self.day.path))),
+                };
+            },
+            RowsInner::Columnar { part, gi, ri } => loop {
+                if *gi >= part.group_count() {
+                    return None;
+                }
+                if *ri >= part.group_rows(*gi) {
+                    *gi += 1;
+                    *ri = 0;
+                    continue;
+                }
+                let view = part.view_at(*gi, *ri);
+                *ri += 1;
+                break Some(Ok(view));
+            },
+        };
+        if matches!(item, Some(Ok(_))) {
+            self.scanned += 1;
+        }
+        item
+    }
+}
+
+impl Drop for ScanRows<'_> {
+    fn drop(&mut self) {
+        if self.scanned > 0 {
+            self.day.stats.add(&self.day.stats.rows_scanned, self.scanned);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -133,10 +474,9 @@ mod tests {
         dir
     }
 
-    #[test]
-    fn roundtrip_across_partitions() {
-        let dir = tmpdir("rt");
-        let store = LogStore::open(&dir).unwrap();
+    fn roundtrip_for(format: StoreFormat, tag: &str) {
+        let dir = tmpdir(tag);
+        let store = LogStore::open_with_format(&dir, format).unwrap();
         let mut a = sample_log();
         a.id = 1;
         a.t_start = 10.0; // day 0
@@ -155,15 +495,28 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_across_partitions() {
+        roundtrip_for(StoreFormat::Jsonl, "rt");
+    }
+
+    #[test]
+    fn roundtrip_across_partitions_columnar() {
+        roundtrip_for(StoreFormat::Columnar, "rtc");
+    }
+
+    #[test]
     fn append_is_additive() {
-        let dir = tmpdir("add");
-        let store = LogStore::open(&dir).unwrap();
-        let mut row = sample_log();
-        row.t_start = 100.0;
-        store.append(&[row.clone()]).unwrap();
-        store.append(&[row.clone()]).unwrap();
-        assert_eq!(store.read_day(0).unwrap().len(), 2);
-        let _ = fs::remove_dir_all(&dir);
+        for (format, tag) in [(StoreFormat::Jsonl, "add"), (StoreFormat::Columnar, "addc")] {
+            let dir = tmpdir(tag);
+            let store = LogStore::open_with_format(&dir, format).unwrap();
+            let mut row = sample_log();
+            row.t_start = 100.0;
+            store.append(&[row.clone()]).unwrap();
+            store.append(&[row.clone()]).unwrap();
+            assert_eq!(store.read_day(0).unwrap().len(), 2);
+            assert_eq!(store.row_count(0).unwrap(), 2);
+            let _ = fs::remove_dir_all(&dir);
+        }
     }
 
     #[test]
@@ -171,7 +524,149 @@ mod tests {
         let dir = tmpdir("missing");
         let store = LogStore::open(&dir).unwrap();
         assert!(store.read_day(99).is_err());
+        assert!(store.row_count(99).is_err());
+        assert!(store.scan_day(99).is_err());
         assert!(store.days().unwrap().is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn append_respects_existing_partition_format() {
+        let dir = tmpdir("fmt");
+        let mut row = sample_log();
+        row.t_start = 50.0;
+        // Day 0 is born JSONL...
+        LogStore::open(&dir).unwrap().append(&[row.clone()]).unwrap();
+        // ...and a columnar-configured store must keep appending to it
+        // as JSONL (a day never straddles formats).
+        let store = LogStore::open_with_format(&dir, StoreFormat::Columnar).unwrap();
+        store.append(&[row.clone()]).unwrap();
+        assert!(dir.join("day_00000.jsonl").exists());
+        assert!(!dir.join("day_00000.dtc").exists());
+        // A new day takes the configured format.
+        row.t_start = DAY_S * 2.0 + 1.0;
+        store.append(&[row.clone()]).unwrap();
+        assert!(dir.join("day_00002.dtc").exists());
+        assert_eq!(store.days().unwrap(), vec![0, 2]);
+        assert_eq!(store.read_all().unwrap().len(), 3);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scan_skip_matches_slice() {
+        for (format, tag) in [(StoreFormat::Jsonl, "skip"), (StoreFormat::Columnar, "skipc")] {
+            let dir = tmpdir(tag);
+            let store = LogStore::open_with_format(&dir, format).unwrap();
+            let rows: Vec<TransferLog> = (0..20)
+                .map(|i| {
+                    let mut r = sample_log();
+                    r.id = i;
+                    r.t_start = 10.0 + i as f64;
+                    r
+                })
+                .collect();
+            // Two appends → two row groups in the columnar case, so the
+            // skip crosses a group boundary.
+            store.append(&rows[..8]).unwrap();
+            store.append(&rows[8..]).unwrap();
+            let scan = store.scan_day(0).unwrap();
+            let fresh: Vec<TransferLog> =
+                scan.rows_from(5).map(|v| v.unwrap().to_log()).collect();
+            assert_eq!(fresh, rows[5..].to_vec());
+            assert!(scan.rows_from(20).next().is_none());
+            let _ = fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn ingest_stats_count_reads_and_writes() {
+        let dir = tmpdir("stats");
+        let store = LogStore::open(&dir).unwrap();
+        let mut row = sample_log();
+        row.t_start = 5.0;
+        store.append(&[row.clone(), row.clone()]).unwrap();
+        let stats = store.stats();
+        assert_eq!(stats.rows_written.load(Ordering::Relaxed), 2);
+        assert!(stats.bytes_written.load(Ordering::Relaxed) > 0);
+        let _ = store.read_day(0).unwrap();
+        assert_eq!(stats.rows_scanned.load(Ordering::Relaxed), 2);
+        assert_eq!(stats.rows_parsed.load(Ordering::Relaxed), 2);
+        assert!(stats.bytes_read.load(Ordering::Relaxed) > 0);
+        // A cursor-skipped scan counts only the rows it yields.
+        let scan = store.scan_day(0).unwrap();
+        let n = scan.rows_from(1).count();
+        assert_eq!(n, 1);
+        drop(scan);
+        assert_eq!(stats.rows_scanned.load(Ordering::Relaxed), 3);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_jsonl_line_errors_with_location() {
+        let dir = tmpdir("badline");
+        let store = LogStore::open(&dir).unwrap();
+        let mut row = sample_log();
+        row.t_start = 5.0;
+        store.append(&[row]).unwrap();
+        // Corrupt the partition with a truncated second line.
+        let path = dir.join("day_00000.jsonl");
+        let mut text = fs::read_to_string(&path).unwrap();
+        text.push_str("{\"id\":1,");
+        fs::write(&path, text).unwrap();
+        let err = store.read_day(0).unwrap_err().to_string();
+        assert!(err.contains(":2:"), "error should carry line number: {err}");
+        assert_eq!(store.row_count(0).unwrap(), 2, "count is lexical, not parsed");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_migrates_and_is_idempotent() {
+        let dir = tmpdir("compact");
+        let store = LogStore::open(&dir).unwrap();
+        let rows: Vec<TransferLog> = (0..12)
+            .map(|i| {
+                let mut r = sample_log();
+                r.id = i;
+                r.t_start = if i < 7 { 10.0 } else { DAY_S + 10.0 };
+                r
+            })
+            .collect();
+        store.append(&rows).unwrap();
+        let before = store.read_all().unwrap();
+        let report = store.compact().unwrap();
+        assert_eq!(report.migrated, vec![0, 1]);
+        assert!(!dir.join("day_00000.jsonl").exists());
+        assert!(dir.join("day_00000.dtc").exists());
+        assert_eq!(store.read_all().unwrap(), before);
+        // Second run: nothing left to do.
+        let report = store.compact().unwrap();
+        assert!(report.migrated.is_empty());
+        assert_eq!(report.already_columnar, vec![0, 1]);
+        assert_eq!(store.read_all().unwrap(), before);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mixed_format_directory_reads_both() {
+        let dir = tmpdir("mixed");
+        let store = LogStore::open(&dir).unwrap();
+        let mut a = sample_log();
+        a.id = 1;
+        a.t_start = 10.0;
+        store.append(&[a.clone()]).unwrap();
+        let colstore = LogStore::open_with_format(&dir, StoreFormat::Columnar).unwrap();
+        let mut b = sample_log();
+        b.id = 2;
+        b.t_start = DAY_S + 10.0;
+        colstore.append(&[b.clone()]).unwrap();
+        assert!(dir.join("day_00000.jsonl").exists());
+        assert!(dir.join("day_00001.dtc").exists());
+        for store in [&store, &colstore] {
+            assert_eq!(store.days().unwrap(), vec![0, 1]);
+            assert_eq!(store.read_range(0, 2).unwrap(), vec![a.clone(), b.clone()]);
+            assert_eq!(store.row_count(0).unwrap(), 1);
+            assert_eq!(store.row_count(1).unwrap(), 1);
+        }
         let _ = fs::remove_dir_all(&dir);
     }
 }

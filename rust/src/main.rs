@@ -8,8 +8,11 @@
 //!              [--kb KB.json] [--load L] [--seed S]
 //!   serve      [--requests N] [--workers W] [--optimizer O] [--fabric]
 //!              [--metrics-out F]
-//!   experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|convoy|stampede|all
+//!   experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|convoy|stampede|ingest|all
 //!              [--quick|--full] [--metrics-out F]
+//!   logs       compact DIR        rewrite JSONL partitions as columnar
+//!              `.dtc` (idempotent; originals removed only after a
+//!              verified re-read)
 //!   scenario   <name|file> [--seed S] [--full] [--timeline] [--alerts] [--json]
 //!              [--list] [--metrics-out F]
 //!              deterministic fault-injecting replay + invariant verdict
@@ -29,10 +32,10 @@
 use anyhow::{bail, Context, Result};
 use dtopt::coordinator::{Coordinator, CoordinatorConfig, OptimizerKind, TransferRequest};
 use dtopt::experiments::common::{default_backend, ExpConfig, World};
-use dtopt::experiments::{convoy, fig12, fig3, fig5, fig6, fig7, fleet, live, rush, stampede};
+use dtopt::experiments::{convoy, fig12, fig3, fig5, fig6, fig7, fleet, ingest, live, rush, stampede};
 use dtopt::probe::ProbePlane;
 use dtopt::logs::generate::{generate, GenConfig};
-use dtopt::logs::store::LogStore;
+use dtopt::logs::store::{LogStore, StoreFormat};
 use dtopt::offline::pipeline::{build, OfflineConfig};
 use dtopt::sim::dataset::Dataset;
 use dtopt::sim::testbed::{Testbed, TestbedId};
@@ -120,6 +123,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "transfer" => cmd_transfer(&opts),
         "serve" => cmd_serve(&opts),
         "experiment" => cmd_experiment(&opts),
+        "logs" => cmd_logs(&opts),
         "scenario" => cmd_scenario(&opts),
         "trace" => cmd_trace(&opts),
         "obs" => cmd_obs(&opts),
@@ -142,7 +146,8 @@ fn print_help() {
          offline --logs DIR --out KB.json [--backend native|pjrt|auto]\n  \
          transfer --testbed T --files N --avg-mb M [--optimizer O] [--kb F] [--load L]\n  \
          serve [--requests N] [--workers W] [--optimizer O] [--fabric] [--metrics-out F]\n  \
-         experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|convoy|stampede|all [--quick|--full] [--metrics-out F]\n  \
+         experiment fig1|fig2|fig3a|fig3b|fig5|fig6|fig7|live|fleet|rush|convoy|stampede|ingest|all [--quick|--full] [--metrics-out F]\n  \
+         logs compact <dir>                   rewrite JSONL partitions as columnar .dtc (idempotent)\n  \
          scenario <name|file> [--seed S] [--full] [--timeline] [--alerts] [--json] [--metrics-out F] (--list prints bundled names)\n  \
          trace <name|file> [--request N] [--json] [--seed S] [--full] [--metrics-out F]\n  \
          obs [--scenario NAME|FILE] [--seed S] [--prom|--json|--alerts|--recent N]\n  \
@@ -426,9 +431,9 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
 }
 
 /// Every experiment the CLI can regenerate (`all` runs them in order).
-const EXPERIMENT_NAMES: [&str; 12] = [
+const EXPERIMENT_NAMES: [&str; 13] = [
     "fig1", "fig2", "fig3a", "fig3b", "fig5", "fig6", "fig7", "live", "fleet", "rush", "convoy",
-    "stampede",
+    "stampede", "ingest",
 ];
 
 fn cmd_experiment(opts: &Opts) -> Result<()> {
@@ -524,6 +529,15 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
                 print!("{}", stampede::render(&r));
                 tally("stampede", stampede::headline_checks(&r))?;
             }
+            "ingest" => {
+                let dir = std::env::temp_dir()
+                    .join(format!("dtopt_ingest_exp_{}", std::process::id()));
+                let _ = std::fs::remove_dir_all(&dir);
+                let r = ingest::run(!opts.has("full"), &dir)?;
+                let _ = std::fs::remove_dir_all(&dir);
+                print!("{}", ingest::render(&r));
+                tally("ingest", ingest::headline_checks(&r))?;
+            }
             "fleet" => {
                 let eval_days = if opts.has("full") { 8 } else { 3 };
                 let dir = std::env::temp_dir()
@@ -552,6 +566,44 @@ fn cmd_experiment(opts: &Opts) -> Result<()> {
     if let Some(path) = opts.get("metrics-out") {
         write_metrics_out(path, &registry.snapshot())?;
     }
+    Ok(())
+}
+
+/// Log-store maintenance. `logs compact <dir>` rewrites every JSONL
+/// partition as a columnar `.dtc` twin and removes the original only
+/// after a verified row-for-row re-read (`LogStore::compact`); a
+/// directory already fully columnar is a no-op, so the command is
+/// idempotent and crash-safe to re-run. Bad paths and unknown actions
+/// exit non-zero via the error path.
+fn cmd_logs(opts: &Opts) -> Result<()> {
+    const USAGE: &str = "usage: dtopt logs compact <dir>";
+    let Some(action) = opts.positional.first().map(|s| s.as_str()) else {
+        bail!("logs action required; {USAGE}");
+    };
+    anyhow::ensure!(action == "compact", "unknown logs action '{action}'; {USAGE}");
+    let Some(dir) = opts.positional.get(1).map(|s| s.as_str()) else {
+        bail!("logs compact needs a log directory; {USAGE}");
+    };
+    anyhow::ensure!(opts.positional.len() == 2, "logs compact takes one directory; {USAGE}");
+    let path = std::path::Path::new(dir);
+    // Validate before open: LogStore::open would create a missing
+    // directory, silently "compacting" a typo to an empty store.
+    anyhow::ensure!(path.is_dir(), "no such log directory: {dir}");
+    let store = LogStore::open_with_format(path, StoreFormat::Columnar)?;
+    let report = store.compact()?;
+    let rows: usize = store
+        .days()?
+        .iter()
+        .map(|&d| store.row_count(d))
+        .collect::<Result<Vec<_>>>()?
+        .iter()
+        .sum();
+    println!(
+        "compacted {dir}: {} partition(s) migrated to columnar, {} already columnar, {} row(s) total",
+        report.migrated.len(),
+        report.already_columnar.len(),
+        rows
+    );
     Ok(())
 }
 

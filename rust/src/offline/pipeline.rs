@@ -8,7 +8,7 @@ use super::features::{Normalizer, FEATURE_DIM};
 use super::kmeans::AssignBackend;
 use super::knowledge::{ClusterKnowledge, KnowledgeBase};
 use super::regions::RegionConfig;
-use crate::logs::record::TransferLog;
+use crate::logs::record::{SuffRow, TransferLog};
 use crate::sim::traffic::DAY_S;
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -135,6 +135,19 @@ pub fn update(kb: &mut KnowledgeBase, new_rows: &[TransferLog]) -> Result<()> {
             .unwrap_or(0),
     );
     Ok(())
+}
+
+/// Additive refresh from sufficient-statistics rows — the zero-copy
+/// ingest path. Each `SuffRow` expands to a heap-free `TransferLog`
+/// proxy (see [`SuffRow::to_log`]) and flows through the exact same
+/// [`update`] code, in the same order, so the resulting statistics are
+/// bit-identical to a refresh from the full rows: Welford accumulation
+/// is order-sensitive, and sharing the code path (rather than
+/// maintaining a parallel one) is what makes the formats' equivalence
+/// structural.
+pub fn update_suff(kb: &mut KnowledgeBase, new_rows: &[SuffRow]) -> Result<()> {
+    let proxies: Vec<TransferLog> = new_rows.iter().map(SuffRow::to_log).collect();
+    update(kb, &proxies)
 }
 
 #[cfg(test)]
@@ -277,6 +290,24 @@ mod tests {
         assert_eq!(total_inc, all.len() as u64);
         assert_eq!(total_inc, total_ref);
         assert_eq!(kb_inc.built_through_day, 5);
+    }
+
+    #[test]
+    fn update_suff_bit_identical_to_update() {
+        let all = history(6, 0, 31);
+        let (old, new): (Vec<_>, Vec<_>) =
+            all.iter().cloned().partition(|r| r.t_start < 4.0 * DAY_S);
+        let cfg = OfflineConfig::default();
+        let mut kb_full = build(&old, &cfg, &mut NativeAssign).unwrap();
+        let mut kb_suff = kb_full.clone();
+        update(&mut kb_full, &new).unwrap();
+        let suff: Vec<SuffRow> = new.iter().map(TransferLog::suff).collect();
+        update_suff(&mut kb_suff, &suff).unwrap();
+        // Byte-identical serialized KBs — not approximately equal.
+        assert_eq!(
+            kb_full.to_json().to_string_compact(),
+            kb_suff.to_json().to_string_compact()
+        );
     }
 
     #[test]

@@ -134,6 +134,13 @@ impl Json {
         out
     }
 
+    /// Serialize compactly into a caller-owned buffer (no intermediate
+    /// allocation — the log store's streaming append reuses one buffer
+    /// across rows).
+    pub fn write_compact(&self, out: &mut String) {
+        write_value(self, out);
+    }
+
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             bytes: text.as_bytes(),
@@ -174,7 +181,7 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
-fn write_value(v: &Json, out: &mut String) {
+pub(crate) fn write_value(v: &Json, out: &mut String) {
     match v {
         Json::Null => out.push_str("null"),
         Json::Bool(true) => out.push_str("true"),
@@ -206,7 +213,10 @@ fn write_value(v: &Json, out: &mut String) {
     }
 }
 
-fn write_number(x: f64, out: &mut String) {
+/// Write one number with the same formatting `Json::to_string_compact`
+/// uses — callers hand-rolling JSONL lines (see `TransferLog::write_jsonl`)
+/// must stay byte-identical to the tree writer.
+pub fn write_number(x: f64, out: &mut String) {
     if !x.is_finite() {
         // JSON has no NaN/Inf; encode as null (decoders treat as missing).
         out.push_str("null");
@@ -228,7 +238,8 @@ fn write_number(x: f64, out: &mut String) {
     }
 }
 
-fn write_string(s: &str, out: &mut String) {
+/// Write one escaped string literal, byte-identical to the tree writer.
+pub fn write_string(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
         match c {

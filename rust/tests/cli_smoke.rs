@@ -20,6 +20,63 @@ fn help_exits_zero_and_lists_scenario() {
     assert!(stdout.contains("scenario"), "{stdout}");
     assert!(stdout.contains("trace"), "{stdout}");
     assert!(stdout.contains("obs"), "{stdout}");
+    assert!(stdout.contains("logs compact"), "{stdout}");
+    assert!(stdout.contains("ingest"), "help lists the ingest experiment: {stdout}");
+}
+
+#[test]
+fn logs_compact_rejects_bad_input_nonzero() {
+    // Missing action, unknown action, missing directory, and a
+    // nonexistent directory all exit non-zero — the last one *before*
+    // opening the store, which would otherwise create the typo'd path.
+    let missing_action = dtopt(&["logs"]);
+    assert!(!missing_action.status.success(), "missing logs action must exit non-zero");
+    let stderr = String::from_utf8_lossy(&missing_action.stderr);
+    assert!(stderr.contains("logs compact"), "usage on stderr: {stderr}");
+
+    let unknown = dtopt(&["logs", "defrag"]);
+    assert!(!unknown.status.success(), "unknown logs action must exit non-zero");
+    let stderr = String::from_utf8_lossy(&unknown.stderr);
+    assert!(stderr.contains("defrag"), "{stderr}");
+
+    let missing_dir = dtopt(&["logs", "compact"]);
+    assert!(!missing_dir.status.success(), "missing directory must exit non-zero");
+
+    let bad = dtopt(&["logs", "compact", "/no/such/dtopt/log/dir"]);
+    assert!(!bad.status.success(), "nonexistent directory must exit non-zero");
+    let stderr = String::from_utf8_lossy(&bad.stderr);
+    assert!(stderr.contains("no such log directory"), "{stderr}");
+    assert!(
+        !std::path::Path::new("/no/such/dtopt/log/dir").exists(),
+        "a failed compact must not create the directory"
+    );
+}
+
+#[test]
+fn logs_compact_migrates_and_is_idempotent() {
+    let dir = std::env::temp_dir().join(format!("dtopt_cli_compact_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let seeded = dtopt(&["gen-logs", "--testbed", "xsede", "--days", "2", "--out",
+        dir.to_str().unwrap(), "--rate", "5", "--seed", "9"]);
+    assert!(seeded.status.success(), "{}", String::from_utf8_lossy(&seeded.stderr));
+
+    let first = dtopt(&["logs", "compact", dir.to_str().unwrap()]);
+    assert!(first.status.success(), "{}", String::from_utf8_lossy(&first.stderr));
+    let stdout = String::from_utf8_lossy(&first.stdout);
+    assert!(stdout.contains("2 partition(s) migrated"), "{stdout}");
+    let names: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    assert!(names.iter().all(|n| n.ends_with(".dtc")), "originals removed: {names:?}");
+
+    // Re-running is a no-op reporting everything already columnar.
+    let second = dtopt(&["logs", "compact", dir.to_str().unwrap()]);
+    assert!(second.status.success(), "{}", String::from_utf8_lossy(&second.stderr));
+    let stdout = String::from_utf8_lossy(&second.stdout);
+    assert!(stdout.contains("0 partition(s) migrated"), "{stdout}");
+    assert!(stdout.contains("2 already columnar"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

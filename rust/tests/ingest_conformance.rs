@@ -1,0 +1,175 @@
+//! Cross-format ingest conformance: the columnar `.dtc` partition
+//! format and the lazy scanning path must be observationally identical
+//! to the JSONL + tree-parsing paths they optimize — same rows back,
+//! same days, and (the load-bearing check) a knowledge base refreshed
+//! through the feedback service over columnar partitions serializes to
+//! the same bytes as one refreshed over JSONL partitions holding the
+//! same rows.
+
+use dtopt::feedback::{FeedbackConfig, FeedbackService, IngestConfig, RefreshPolicy};
+use dtopt::logs::generate::{generate, GenConfig};
+use dtopt::logs::record::TransferLog;
+use dtopt::logs::store::{LogStore, StoreFormat};
+use dtopt::offline::kmeans::NativeAssign;
+use dtopt::offline::knowledge::KnowledgeBase;
+use dtopt::offline::pipeline::{build, update, OfflineConfig};
+use dtopt::sim::testbed::Testbed;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dtopt_ingconf_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn history(days: u64, seed: u64) -> Vec<TransferLog> {
+    generate(
+        &Testbed::xsede(),
+        &GenConfig { days, arrivals_per_hour: 15.0, start_day: 0, seed },
+    )
+}
+
+fn kb_bytes(kb: &KnowledgeBase) -> String {
+    kb.to_json().to_string_compact()
+}
+
+#[test]
+fn columnar_roundtrip_across_partitions() {
+    let dir = tmpdir("roundtrip");
+    let rows = history(3, 71);
+    let store = LogStore::open_with_format(&dir, StoreFormat::Columnar).unwrap();
+    store.append(&rows).unwrap();
+    assert_eq!(store.days().unwrap().len(), 3);
+    // Only .dtc partitions on disk.
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let name = entry.unwrap().file_name().to_string_lossy().into_owned();
+        assert!(name.ends_with(".dtc"), "unexpected partition {name}");
+    }
+    // Every field of every row survives the round trip, in order.
+    let back = store.read_all().unwrap();
+    assert_eq!(back, rows);
+    // Appending more rows to an existing partition keeps earlier groups.
+    let mut extra = rows[0].clone();
+    extra.id = 999_999;
+    store.append(std::slice::from_ref(&extra)).unwrap();
+    let day0 = (rows[0].t_start / 86_400.0).floor() as u64;
+    let again = store.read_day(day0).unwrap();
+    assert_eq!(*again.last().unwrap(), extra);
+    assert_eq!(store.row_count(day0).unwrap(), again.len());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mixed_format_directory_reads_both() {
+    let dir = tmpdir("mixed");
+    let rows = history(4, 72);
+    let day_of = |r: &TransferLog| (r.t_start / 86_400.0).floor() as u64;
+    let first_half: Vec<TransferLog> =
+        rows.iter().filter(|r| day_of(r) < 2).cloned().collect();
+    let second_half: Vec<TransferLog> =
+        rows.iter().filter(|r| day_of(r) >= 2).cloned().collect();
+    // Days 0–1 as JSONL, days 2–3 as columnar, one directory.
+    LogStore::open(&dir).unwrap().append(&first_half).unwrap();
+    LogStore::open_with_format(&dir, StoreFormat::Columnar)
+        .unwrap()
+        .append(&second_half)
+        .unwrap();
+    let store = LogStore::open(&dir).unwrap();
+    assert_eq!(store.days().unwrap(), vec![0, 1, 2, 3]);
+    assert_eq!(store.read_all().unwrap(), rows);
+    // read_range is half-open: [1, 3) spans the JSONL/columnar seam.
+    assert_eq!(store.read_range(1, 3).unwrap().len(), {
+        rows.iter().filter(|r| (1..=2).contains(&day_of(r))).count()
+    });
+    // The scanning path agrees row-for-row regardless of which format
+    // backs each partition.
+    let mut scanned = 0usize;
+    for day in store.days().unwrap() {
+        let scan = store.scan_day(day).unwrap();
+        for view in scan.rows() {
+            let view = view.unwrap();
+            assert_eq!(view.to_log(), rows[scanned]);
+            scanned += 1;
+        }
+    }
+    assert_eq!(scanned, rows.len());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The refresher regression the tentpole hinges on: drive the public
+/// feedback service over a JSONL store and a columnar store, feed both
+/// the same completed transfers, and require the refreshed knowledge
+/// bases — and a direct in-memory `update` — to be byte-identical.
+#[test]
+fn service_refresh_is_byte_identical_across_formats() {
+    let base_rows = history(3, 73);
+    let kb = Arc::new(build(&base_rows, &OfflineConfig::default(), &mut NativeAssign).unwrap());
+    let mut fresh = history(1, 74);
+    for row in &mut fresh {
+        row.t_start += 4.0 * 86_400.0; // land in a new partition
+    }
+
+    let config = FeedbackConfig {
+        ingest: IngestConfig {
+            capacity: 4096,
+            flush_batch: 16,
+            flush_interval: Duration::from_millis(2),
+        },
+        policy: RefreshPolicy { min_new_rows: 1, min_interval: Duration::ZERO, ..Default::default() },
+        poll_interval: Duration::from_millis(100),
+        background: false,
+    };
+
+    let mut refreshed = Vec::new();
+    for (tag, format) in [("jsonl", StoreFormat::Jsonl), ("dtc", StoreFormat::Columnar)] {
+        let dir = tmpdir(tag);
+        let store = LogStore::open_with_format(&dir, format).unwrap();
+        let service = FeedbackService::start(kb.clone(), store, config.clone()).unwrap();
+        let queue = service.queue();
+        for row in fresh.iter().cloned() {
+            assert!(queue.offer(row), "bounded queue overflowed in test");
+        }
+        drop(queue);
+        assert!(service.flush_barrier(Duration::from_secs(30)), "flush timed out");
+        let generation = service.refresh_now().unwrap();
+        assert_eq!(generation, Some(1), "{tag}: one refresh folds in the new partition");
+        refreshed.push(kb_bytes(&service.slot.resolve().kb));
+        service.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    let mut direct = (*kb).clone();
+    update(&mut direct, &fresh).unwrap();
+    assert_eq!(refreshed[0], refreshed[1], "JSONL vs columnar refresh diverged");
+    assert_eq!(refreshed[0], kb_bytes(&direct), "scanned refresh diverged from in-memory update");
+}
+
+#[test]
+fn compact_preserves_rows_and_is_idempotent() {
+    let dir = tmpdir("compact");
+    let rows = history(3, 75);
+    let store = LogStore::open(&dir).unwrap();
+    store.append(&rows).unwrap();
+    let before = store.read_all().unwrap();
+
+    let compacting = LogStore::open_with_format(&dir, StoreFormat::Columnar).unwrap();
+    let report = compacting.compact().unwrap();
+    assert_eq!(report.migrated, vec![0, 1, 2]);
+    assert!(report.already_columnar.is_empty());
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let name = entry.unwrap().file_name().to_string_lossy().into_owned();
+        assert!(name.ends_with(".dtc"), "original left behind: {name}");
+    }
+    assert_eq!(compacting.read_all().unwrap(), before);
+    // A plain (JSONL-default) handle on the same directory reads the
+    // columnar partitions transparently.
+    assert_eq!(LogStore::open(&dir).unwrap().read_all().unwrap(), before);
+
+    let second = compacting.compact().unwrap();
+    assert!(second.migrated.is_empty());
+    assert_eq!(second.already_columnar, vec![0, 1, 2]);
+    assert_eq!(compacting.read_all().unwrap(), before);
+    let _ = std::fs::remove_dir_all(&dir);
+}
